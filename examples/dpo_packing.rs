@@ -1,0 +1,72 @@
+//! DPO shared-question packing — the alignment-training workload the
+//! paper's intro motivates (paper Fig. 1a-5, §2.1).
+//!
+//! Shows how a DPO sample (one question, two answers) maps onto the
+//! shared-question FlashMask: the question is causally visible to both
+//! answers, answers are mutually invisible, and the redundant question
+//! compute that unpacked DPO would duplicate is shared.
+//!
+//! ```bash
+//! cargo run --release --example dpo_packing
+//! ```
+
+use flashmask::attention::{flash, AttnConfig};
+use flashmask::mask::{builders, BlockTable};
+use flashmask::util::rng::Rng;
+use flashmask::util::table::Table;
+use flashmask::workload::docgen::{self, Task};
+
+fn main() {
+    let n = 1024;
+
+    // 1. Sample DPO documents per the paper's appendix A.2.1
+    let mut rng = Rng::new(7);
+    let sample = docgen::gen_sample(n, Task::Dpo, &mut rng);
+    let mut t = Table::new(vec!["doc", "question", "answers", "padding"])
+        .title("DPO packed sample (question + 2 answers each)");
+    for (i, d) in sample.docs.iter().enumerate() {
+        t.row(vec![
+            i.to_string(),
+            d.question_len.to_string(),
+            format!("{:?}", d.answer_lens),
+            d.is_padding.to_string(),
+        ]);
+    }
+    t.print();
+    println!("block sparsity rho = {:.2}\n", sample.sparsity);
+
+    // 2. Verify the mask semantics on a hand-built case:
+    //    q=[0,8), a1=[8,12), a2=[12,16)
+    let m = builders::share_question(
+        16,
+        &[builders::SharedQuestionDoc { question_len: 8, answer_lens: vec![4, 4] }],
+    );
+    assert!(m.allowed(10, 3), "answer 1 must see the question");
+    assert!(m.allowed(14, 3), "answer 2 must see the question");
+    assert!(m.allowed(10, 9), "answer 1 is causal within itself");
+    assert!(!m.allowed(13, 9), "answer 2 must NOT see answer 1");
+    assert!(!m.allowed(9, 13), "answer 1 must NOT see answer 2");
+    println!("shared-question visibility semantics verified");
+
+    // 3. The shared question saves real compute: compare FLASHMASK on
+    //    the packed layout vs dense-mask attention on the same layout.
+    let d = 64;
+    let mut mk = || (0..n * d).map(|_| rng.normal_f32() * 0.5).collect::<Vec<f32>>();
+    let (q, k, v) = (mk(), mk(), mk());
+    let cfg = AttnConfig::new(64, 64, d);
+    let table = BlockTable::build(&sample.mask, cfg.bc);
+    let t0 = std::time::Instant::now();
+    let (o1, s1) = flash::flashmask_forward(&q, &k, &v, n, d, &sample.mask, &table, cfg, true);
+    let dt1 = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let (o2, s2) = flash::flashmask_forward(&q, &k, &v, n, d, &sample.mask, &table, cfg, false);
+    let dt2 = t0.elapsed();
+    assert_eq!(o1.o, o2.o);
+    println!(
+        "packed DPO attention: {:.2?} (skip) vs {:.2?} (dense mask), {:.1}% tiles skipped, bitwise equal",
+        dt1,
+        dt2,
+        100.0 * s1.tiles_skipped as f64 / s1.tiles_total as f64
+    );
+    assert!(s1.macs < s2.macs);
+}

@@ -1,0 +1,72 @@
+//! Kernel sweep: every mask family × engine, measured on the CPU
+//! simulator with tile censuses — a compact interactive version of the
+//! paper's kernel evaluation (§5.4).
+//!
+//! ```bash
+//! cargo run --release --example kernel_sweep -- --n 1024 --d 64
+//! ```
+
+use anyhow::{anyhow, Result};
+use flashmask::attention::{flash, flex, AttnConfig};
+use flashmask::mask::{builders, BlockTable};
+use flashmask::util::bench::{bench, BenchOpts};
+use flashmask::util::cli::Args;
+use flashmask::util::rng::Rng;
+use flashmask::util::table::Table;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env().map_err(|e| anyhow!(e))?;
+    let n = args.get_usize("n", 1024).map_err(|e| anyhow!(e))?;
+    let d = args.get_usize("d", 64).map_err(|e| anyhow!(e))?;
+    let opts = BenchOpts { warmup: 1, iters: 5, max_seconds: 8.0 };
+
+    let mut rng = Rng::new(3);
+    let mut mk = || (0..n * d).map(|_| rng.normal_f32() * 0.5).collect::<Vec<f32>>();
+    let (q, k, v) = (mk(), mk(), mk());
+    let cfg = AttnConfig::new(64.min(n), 64.min(n), d);
+
+    let mut t = Table::new(vec![
+        "mask", "rho", "skip", "partial", "FM fw ms", "FM fw+bw ms", "Flex fw ms", "dense-mask fw ms",
+    ])
+    .title(format!("kernel sweep N={n} d={d} tiles {}x{}", cfg.br, cfg.bc));
+
+    for (kind, mask) in builders::benchmark_suite(n, 11) {
+        let table = BlockTable::build(&mask, cfg.bc);
+        let (fully, partial, _) = table.census(&mask, cfg.br);
+        let rho = mask.block_sparsity(cfg.br, cfg.bc);
+
+        let fw = bench("fm", opts, || {
+            let _ = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+        });
+        let (out, _) = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+        let fwbw = bench("fmbw", opts, || {
+            let (f, _) = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+            let _ = flash::flashmask_backward(
+                &q, &k, &v, &f.o, &q, &f.lse, n, d, &mask, &table, cfg, true,
+            );
+        });
+        let pred = |i: usize, j: usize| mask.allowed(i, j);
+        let bm = flex::BlockMask::build(&pred, n, cfg.br, cfg.bc);
+        let fx = bench("flex", opts, || {
+            let _ = flex::flex_forward(&q, &k, &v, n, d, &pred, &bm, cfg);
+        });
+        let dm = bench("dm", opts, || {
+            let _ = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, false);
+        });
+        let _ = out;
+        t.row(vec![
+            kind.to_string(),
+            format!("{rho:.2}"),
+            fully.to_string(),
+            partial.to_string(),
+            format!("{:.2}", fw.median_ms),
+            format!("{:.2}", fwbw.median_ms),
+            format!("{:.2}", fx.median_ms),
+            format!("{:.2}", dm.median_ms),
+        ]);
+    }
+    t.print();
+    println!("\nNote: FLASHMASK <= Flex <= dense-mask is the expected ordering;");
+    println!("paper-scale TFLOPs/s projections: `flashmask kernel-bench`.");
+    Ok(())
+}

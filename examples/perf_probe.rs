@@ -1,0 +1,33 @@
+// perf probe: forward breakdown at N=2048 d=64 causal
+use flashmask::attention::{flash, AttnConfig};
+use flashmask::mask::{builders, BlockTable};
+use flashmask::util::rng::Rng;
+use std::time::Instant;
+fn main() {
+    let (n, d) = (2048usize, 64usize);
+    let mut rng = Rng::new(1);
+    let mut mk = || (0..n*d).map(|_| rng.normal_f32()*0.5).collect::<Vec<f32>>();
+    let (q,k,v) = (mk(), mk(), mk());
+    let mask = builders::causal(n);
+    let cfg = AttnConfig::new(64, 64, d);
+    let table = BlockTable::build(&mask, cfg.bc);
+    for _ in 0..2 { let _ = flash::flashmask_forward(&q,&k,&v,n,d,&mask,&table,cfg,true); }
+    let mut best = f64::MAX;
+    for _ in 0..7 {
+        let t0 = Instant::now();
+        let _ = std::hint::black_box(flash::flashmask_forward(&q,&k,&v,n,d,&mask,&table,cfg,true));
+        best = best.min(t0.elapsed().as_secs_f64()*1e3);
+    }
+    let (_, st) = flash::flashmask_forward(&q,&k,&v,n,d,&mask,&table,cfg,true);
+    let gflops = st.flops() as f64 / (best/1e3) / 1e9;
+    println!("fwd causal N={n} d={d}: {best:.2} ms  {gflops:.1} GFLOP/s");
+    // bwd
+    let (f, _) = flash::flashmask_forward(&q,&k,&v,n,d,&mask,&table,cfg,true);
+    let mut bestb = f64::MAX;
+    for _ in 0..5 {
+        let t0 = Instant::now();
+        let _ = std::hint::black_box(flash::flashmask_backward(&q,&k,&v,&f.o,&q,&f.lse,n,d,&mask,&table,cfg,true));
+        bestb = bestb.min(t0.elapsed().as_secs_f64()*1e3);
+    }
+    println!("bwd: {bestb:.2} ms");
+}

@@ -1,0 +1,30 @@
+// perf probe: train-step breakdown — host literal conversion vs PJRT
+// execute vs output decomposition (L3/L2 boundary costs).
+use flashmask::coordinator::{Batcher, Trainer, TrainerOptions};
+use flashmask::runtime::Runtime;
+use flashmask::workload::docgen::Task;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open(std::path::Path::new("artifacts"))?;
+    let mut trainer = Trainer::new(&rt, TrainerOptions { quiet: true, ..Default::default() })?;
+    let mut batcher = Batcher::new(rt.manifest.model.max_seq, rt.manifest.batch, Task::Sft, 1);
+    // warm-up (compile happened at load; execute twice)
+    for _ in 0..2 { trainer.step(&batcher.next_batch())?; }
+    let batch = batcher.next_batch();
+    let t0 = Instant::now();
+    let n = 5;
+    for _ in 0..n { trainer.step(&batch)?; }
+    let per_step = t0.elapsed().as_secs_f64() / n as f64;
+    println!("train step total: {:.0} ms", per_step * 1e3);
+    // isolate host->literal conversion cost for the same tensor volume
+    let tensors = batch.to_tensors();
+    let t0 = Instant::now();
+    for _ in 0..n {
+        for t in &tensors { let _ = std::hint::black_box(t.to_literal()?); }
+    }
+    println!("batch->literal: {:.1} ms", t0.elapsed().as_secs_f64() / n as f64 * 1e3);
+    println!("params: {} x f32 ~ {:.0} MB per direction",
+        trainer.n_params(), trainer.n_params() as f64 * 4.0 / 1e6);
+    Ok(())
+}

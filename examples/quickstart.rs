@@ -1,0 +1,67 @@
+//! Quickstart: build a FlashMask, run attention with and without block
+//! skipping, verify bit-exactness, and see the work savings.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use flashmask::attention::{flash, AttnConfig};
+use flashmask::mask::{builders, BlockClass, BlockTable};
+use flashmask::util::rng::Rng;
+
+fn main() {
+    // 1. A packed-document mask: three documents, causal within each.
+    //    This is what SFT sequence-packing produces (paper Fig. 1a-3).
+    let n = 512;
+    let mask = builders::causal_document(n, &[200, 180, 132]);
+    println!("mask: N={n}, causal={}, O(N) storage = {} bytes", mask.causal, mask.repr_bytes());
+    println!("      a dense bf16 mask would need {} bytes", mask.dense_bytes());
+
+    // 2. The column-wise representation is four i32 vectors.  Column 0
+    //    belongs to document [0,200): rows >= 200 can never see it.
+    println!("      LTS[0]={} LTE[0]={} (rows [{},{}) masked)",
+        mask.lts[0], mask.lte[0], mask.lts[0], mask.lte[0]);
+
+    // 3. Block classification (paper Eq. 4): the kernel skips
+    //    fully-masked tiles without reading Q/K/V.
+    let cfg = AttnConfig::new(64, 64, 64);
+    let table = BlockTable::build(&mask, cfg.bc);
+    let (fully, partial, unmasked) = table.census(&mask, cfg.br);
+    println!("tiles: {fully} skipped, {partial} partially masked, {unmasked} clean");
+    println!("block sparsity rho = {:.2}", mask.block_sparsity(cfg.br, cfg.bc));
+    assert_eq!(table.classify(&mask, 7, 64, 0, 64), BlockClass::FullyMasked);
+
+    // 4. Run attention both ways; FLASHMASK must be bit-identical to the
+    //    dense-mask FlashAttention baseline (paper §4.4).
+    let d = 64;
+    let mut rng = Rng::new(0);
+    let mut mk = || (0..n * d).map(|_| rng.normal_f32() * 0.5).collect::<Vec<f32>>();
+    let (q, k, v) = (mk(), mk(), mk());
+    let t0 = std::time::Instant::now();
+    let (out_skip, stats_skip) = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+    let t_skip = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let (out_dense, stats_dense) =
+        flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, false);
+    let t_dense = t0.elapsed();
+
+    assert_eq!(out_skip.o, out_dense.o, "bit-exactness violated!");
+    println!(
+        "forward: FLASHMASK {:.2?} ({} MFLOPs) vs dense-mask {:.2?} ({} MFLOPs) — bitwise equal",
+        t_skip,
+        stats_skip.flops() / 1_000_000,
+        t_dense,
+        stats_dense.flops() / 1_000_000,
+    );
+    println!(
+        "speedup {:.2}x from skipping {:.0}% of tiles",
+        t_dense.as_secs_f64() / t_skip.as_secs_f64(),
+        100.0 * stats_skip.tiles_skipped as f64 / stats_skip.tiles_total as f64
+    );
+
+    // 5. Reconstruct the mask from a dense matrix (representability check)
+    let dense = mask.dense_allowed();
+    let back = flashmask::mask::FlashMask::from_dense(&dense, n, true).unwrap();
+    assert_eq!(back.dense_allowed(), dense);
+    println!("dense -> column-wise reconstruction roundtrips OK");
+}

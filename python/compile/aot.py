@@ -1,0 +1,161 @@
+"""AOT export: lower L2 functions to HLO *text* + a JSON manifest.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the rust ``xla`` crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written to ``--out`` (default ../artifacts):
+
+    train_step_<variant>.hlo.txt   fwd+bwd+AdamW update, flat ABI
+    eval_step.hlo.txt              loss only
+    init.hlo.txt                   seed -> initial params (python stays
+                                   off the runtime path even for init)
+    attn_fwd.hlo.txt / attn_fwd_bidir.hlo.txt
+                                   standalone attention (inference demo)
+    manifest.json                  shapes/dtypes/ordering ABI for rust
+
+Run via ``make artifacts`` (no-op if inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape: Sequence[int], dtype: str) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def _spec_json(name: str, s: jax.ShapeDtypeStruct) -> dict:
+    return {"name": name, "shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def export_fn(fn, arg_specs: List[Tuple[str, jax.ShapeDtypeStruct]], path: str) -> dict:
+    lowered = jax.jit(fn).lower(*[s for _, s in arg_specs])
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return {
+        "file": os.path.basename(path),
+        "inputs": [_spec_json(n, s) for n, s in arg_specs],
+        "bytes": len(text),
+    }
+
+
+def batch_specs(cfg: M.ModelConfig, batch: int) -> List[Tuple[str, jax.ShapeDtypeStruct]]:
+    n = cfg.max_seq
+    return [
+        ("tokens", _spec((batch, n), "int32")),
+        ("targets", _spec((batch, n), "int32")),
+        ("loss_mask", _spec((batch, n), "float32")),
+        ("lts", _spec((batch, n), "int32")),
+        ("lte", _spec((batch, n), "int32")),
+        ("uts", _spec((batch, n), "int32")),
+        ("ute", _spec((batch, n), "int32")),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--preset", default="tiny", choices=sorted(M.PRESETS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--attn-seq", type=int, default=1024,
+                    help="sequence length of the standalone attention artifact")
+    ap.add_argument("--variants", default="flashmask,densemask",
+                    help="comma-separated train-step attention variants")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = M.PRESETS[args.preset]
+    opt = M.OptConfig()
+    pspecs = M.param_specs(cfg)
+    leaf_specs = [(n, _spec(s, "float32")) for n, s in pspecs]
+    manifest = {
+        "preset": args.preset,
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_head": cfg.d_head, "d_ff": cfg.d_ff, "max_seq": cfg.max_seq,
+            "br": cfg.br, "bc": cfg.bc, "n_params": cfg.n_params,
+        },
+        "optimizer": {"lr": opt.lr, "beta1": opt.beta1, "beta2": opt.beta2,
+                      "eps": opt.eps, "weight_decay": opt.weight_decay},
+        "batch": args.batch,
+        "params": [_spec_json(n, s) for n, s in leaf_specs],
+        "artifacts": {},
+    }
+
+    # --- init: seed -> params ---
+    init = M.make_init(cfg)
+    manifest["artifacts"]["init"] = export_fn(
+        init, [("seed", _spec((1,), "int32"))],
+        os.path.join(args.out, "init.hlo.txt"))
+    print(f"init.hlo.txt          ok ({cfg.n_params/1e6:.1f}M params)")
+
+    # --- train steps (one per attention variant) ---
+    for variant in args.variants.split(","):
+        vcfg = M.ModelConfig(**{**cfg.__dict__, "attention": variant})
+        step = M.make_train_step(vcfg, opt)
+        specs = (
+            leaf_specs
+            + [(f"m.{n}", s) for n, s in leaf_specs]
+            + [(f"v.{n}", s) for n, s in leaf_specs]
+            + [("step_no", _spec((), "int32"))]
+            + batch_specs(cfg, args.batch)
+        )
+        name = f"train_step_{variant}"
+        manifest["artifacts"][name] = export_fn(
+            step, specs, os.path.join(args.out, f"{name}.hlo.txt"))
+        print(f"{name}.hlo.txt ok")
+
+    # --- eval step ---
+    ev = M.make_eval_step(cfg)
+    manifest["artifacts"]["eval_step"] = export_fn(
+        ev, leaf_specs + batch_specs(cfg, args.batch),
+        os.path.join(args.out, "eval_step.hlo.txt"))
+    print("eval_step.hlo.txt     ok")
+
+    # --- standalone attention (inference path) ---
+    n, h, dh = args.attn_seq, cfg.n_heads, cfg.d_head
+    qkv = _spec((1, h, n, dh), "float32")
+    vec = _spec((1, n), "int32")
+    attn_specs = [("q", qkv), ("k", qkv), ("v", qkv),
+                  ("lts", vec), ("lte", vec), ("uts", vec), ("ute", vec)]
+    manifest["artifacts"]["attn_fwd"] = export_fn(
+        M.make_attn_fwd(causal=True, br=cfg.br, bc=cfg.bc), attn_specs,
+        os.path.join(args.out, "attn_fwd.hlo.txt"))
+    manifest["artifacts"]["attn_fwd"]["attn"] = {
+        "seq": n, "heads": h, "d_head": dh, "causal": True}
+    manifest["artifacts"]["attn_fwd_bidir"] = export_fn(
+        M.make_attn_fwd(causal=False, br=cfg.br, bc=cfg.bc), attn_specs,
+        os.path.join(args.out, "attn_fwd_bidir.hlo.txt"))
+    manifest["artifacts"]["attn_fwd_bidir"]["attn"] = {
+        "seq": n, "heads": h, "d_head": dh, "causal": False}
+    print("attn_fwd[.bidir].hlo.txt ok")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest.json         ok -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,463 @@
+"""FlashMask Pallas kernel — paper Algorithm 1 (forward) and 2 (backward).
+
+Layer-1 of the stack.  The kernel consumes the column-wise sparse mask
+(LTS/LTE/UTS/UTE, each ``int32[N]``) plus the eight per-block min/max
+vectors precomputed by :func:`block_minmax` (paper "Preprocessing" step),
+classifies every ``Br x Bc`` score tile as fully-masked / partially
+masked / unmasked (paper Eq. 4) and skips fully-masked tiles.
+
+TPU-adaptation notes (see DESIGN.md §Hardware-Adaptation): the CUDA
+original assigns tiles to thread blocks; here the HBM→VMEM schedule is a
+Pallas grid over query tiles with an inner ``fori_loop`` over key tiles
+(the canonical Pallas flash-attention shape), tiles feed the MXU as
+``Br x d @ d x Bc`` matmuls, and the skip is a ``lax.cond`` whose
+predicate derives from the min/max vectors — XLA executes only the taken
+branch, so skipped tiles cost no FLOPs at runtime.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO which both pytest and
+the rust runtime execute.  Correctness contract: **bitwise** equality
+with ``ref.blocked_attention`` (no-skip FA2) and ``allclose`` with
+``ref.dense_attention``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+DEFAULT_BR = 128
+DEFAULT_BC = 128
+
+
+def block_minmax(vec: jax.Array, bc: int) -> Tuple[jax.Array, jax.Array]:
+    """Per-key-block min/max of a column vector (paper Alg. 1 line 4).
+
+    ``vec`` is int32[N] with N % bc == 0; returns (min[Tc], max[Tc]).
+    """
+    n = vec.shape[-1]
+    assert n % bc == 0, f"N={n} not divisible by Bc={bc}"
+    r = vec.reshape(-1, bc)
+    return r.min(axis=-1), r.max(axis=-1)
+
+
+def _classify(i, br, j, bc, smax, smin, emax, emin):
+    """Tile classification for one triangle (paper Eq. 4).
+
+    Returns (fully_masked, maybe_partial) predicates for tile (i, j).
+    """
+    row_lo = i * br           # first row of the tile
+    row_hi = (i + 1) * br     # one past the last row
+    fully = (row_lo >= smax) & (row_hi <= emin)
+    partial = (row_hi > smin) & (row_lo < emax)
+    return fully, partial
+
+
+# ---------------------------------------------------------------------------
+# Forward kernel (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(
+    q_ref, k_ref, v_ref,
+    lts_ref, lte_ref, uts_ref, ute_ref,
+    ltsmin_ref, ltsmax_ref, ltemin_ref, ltemax_ref,
+    utsmin_ref, utsmax_ref, utemin_ref, utemax_ref,
+    o_ref, lse_ref,
+    *, br: int, bc: int, tc: int, scale: float, causal: bool, skip: bool,
+):
+    i = pl.program_id(0)
+    d = q_ref.shape[-1]
+    qi = q_ref[...]  # [br, d]
+
+    row_ids = i * br + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 0)
+
+    def body(j, carry):
+        o, l, m = carry
+
+        def compute(carry):
+            o, l, m = carry
+            kj = pl.load(k_ref, (pl.ds(j * bc, bc), slice(None)))
+            vj = pl.load(v_ref, (pl.ds(j * bc, bc), slice(None)))
+            s = jnp.dot(qi, kj.T) * scale  # [br, bc] on the MXU
+
+            col_ids = j * bc + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 1)
+            masked = jnp.zeros((br, bc), jnp.bool_)
+            if causal:
+                masked = masked | (row_ids < col_ids)
+
+            # partially-masked tiles: apply the element-wise interval test
+            lts_j = pl.load(lts_ref, (pl.ds(j * bc, bc),))
+            lte_j = pl.load(lte_ref, (pl.ds(j * bc, bc),))
+            masked = masked | (
+                (row_ids >= lts_j[None, :]) & (row_ids < lte_j[None, :])
+            )
+            if not causal:
+                uts_j = pl.load(uts_ref, (pl.ds(j * bc, bc),))
+                ute_j = pl.load(ute_ref, (pl.ds(j * bc, bc),))
+                masked = masked | (
+                    (row_ids >= uts_j[None, :]) & (row_ids < ute_j[None, :])
+                )
+            s = jnp.where(masked, NEG_INF, s)
+
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[:, None])
+            alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = alpha * l + jnp.sum(p, axis=-1)
+            o_new = alpha[:, None] * o + jnp.dot(p.astype(vj.dtype), vj)
+            return o_new, l_new, m_new
+
+        if not skip:
+            return compute(carry)
+
+        # --- block-skip classification (paper Alg. 1 lines 9-13) ---
+        lt_full, _ = _classify(
+            i, br, j, bc, ltsmax_ref[j], ltsmin_ref[j], ltemax_ref[j], ltemin_ref[j]
+        )
+        skip_tile = lt_full
+        if causal:
+            # tile entirely above the diagonal
+            skip_tile = skip_tile | ((i + 1) * br <= j * bc)
+        else:
+            ut_full, _ = _classify(
+                i, br, j, bc, utsmax_ref[j], utsmin_ref[j], utemax_ref[j], utemin_ref[j]
+            )
+            skip_tile = skip_tile | ut_full
+        return jax.lax.cond(skip_tile, lambda c: c, compute, carry)
+
+    o0 = jnp.zeros((br, d), jnp.float32)
+    l0 = jnp.zeros((br,), jnp.float32)
+    m0 = jnp.full((br,), NEG_INF, jnp.float32)
+    o, l, m = jax.lax.fori_loop(0, tc, body, (o0, l0, m0))
+
+    l_safe = jnp.where(l > 0, l, 1.0)
+    o_ref[...] = jnp.where(l[:, None] > 0, o / l_safe[:, None], 0.0).astype(o_ref.dtype)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    lse_ref[...] = jnp.where(l > 0, m_safe + jnp.log(l_safe), NEG_INF)
+
+
+def _fwd_single(q, k, v, lts, lte, uts, ute, mm, *, br, bc, scale, causal, skip):
+    """Forward for a single head: q,k,v [N, d]; mask vectors [N]."""
+    n, d = q.shape
+    tr, tc = n // br, n // bc
+    kernel = functools.partial(
+        _fwd_kernel, br=br, bc=bc, tc=tc, scale=scale, causal=causal, skip=skip
+    )
+    vec_spec = pl.BlockSpec((n,), lambda i: (0,))
+    mm_spec = pl.BlockSpec((tc,), lambda i: (0,))
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=(tr,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            vec_spec, vec_spec, vec_spec, vec_spec,
+            mm_spec, mm_spec, mm_spec, mm_spec,
+            mm_spec, mm_spec, mm_spec, mm_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), q.dtype),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, lts, lte, uts, ute, *mm)
+    return o, lse
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels (Algorithm 2, split into a dK/dV kernel — column
+# parallel, like the paper — and a dQ kernel — row parallel; splitting
+# avoids the cross-block dQ accumulation of Alg. 2 line 31 without
+# changing any arithmetic)
+# ---------------------------------------------------------------------------
+
+def _bwd_dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, dvec_ref,
+    lts_ref, lte_ref, uts_ref, ute_ref,
+    ltsmin_ref, ltsmax_ref, ltemin_ref, ltemax_ref,
+    utsmin_ref, utsmax_ref, utemin_ref, utemax_ref,
+    dk_ref, dv_ref,
+    *, br: int, bc: int, tr: int, scale: float, causal: bool, skip: bool,
+):
+    j = pl.program_id(0)
+    d = q_ref.shape[-1]
+    kj = k_ref[...]  # [bc, d] — resident across the whole row loop
+    vj = v_ref[...]
+    lts_j = lts_ref[...]
+    lte_j = lte_ref[...]
+    uts_j = uts_ref[...]
+    ute_j = ute_ref[...]
+    col_ids = j * bc + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 1)
+
+    def body(i, carry):
+        dk, dv = carry
+
+        def compute(carry):
+            dk, dv = carry
+            qi = pl.load(q_ref, (pl.ds(i * br, br), slice(None)))
+            doi = pl.load(do_ref, (pl.ds(i * br, br), slice(None)))
+            lse_i = pl.load(lse_ref, (pl.ds(i * br, br),))
+            dvec_i = pl.load(dvec_ref, (pl.ds(i * br, br),))
+
+            row_ids = i * br + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 0)
+            s = jnp.dot(qi, kj.T) * scale
+            masked = (row_ids >= lts_j[None, :]) & (row_ids < lte_j[None, :])
+            if causal:
+                masked = masked | (row_ids < col_ids)
+            else:
+                masked = masked | (
+                    (row_ids >= uts_j[None, :]) & (row_ids < ute_j[None, :])
+                )
+            s = jnp.where(masked, NEG_INF, s)
+            lse_safe = jnp.where(jnp.isfinite(lse_i), lse_i, 0.0)
+            p = jnp.where(
+                jnp.isfinite(lse_i)[:, None], jnp.exp(s - lse_safe[:, None]), 0.0
+            )
+            dv_new = dv + jnp.dot(p.T.astype(doi.dtype), doi)
+            dp = jnp.dot(doi, vj.T)
+            ds = p * (dp - dvec_i[:, None]) * scale
+            dk_new = dk + jnp.dot(ds.T.astype(qi.dtype), qi)
+            return dk_new, dv_new
+
+        if not skip:
+            return compute(carry)
+        lt_full, _ = _classify(
+            i, br, j, bc, ltsmax_ref[j], ltsmin_ref[j], ltemax_ref[j], ltemin_ref[j]
+        )
+        skip_tile = lt_full
+        if causal:
+            skip_tile = skip_tile | ((i + 1) * br <= j * bc)
+        else:
+            ut_full, _ = _classify(
+                i, br, j, bc, utsmax_ref[j], utsmin_ref[j], utemax_ref[j], utemin_ref[j]
+            )
+            skip_tile = skip_tile | ut_full
+        return jax.lax.cond(skip_tile, lambda c: c, compute, carry)
+
+    dk0 = jnp.zeros((bc, d), jnp.float32)
+    dv0 = jnp.zeros((bc, d), jnp.float32)
+    dk, dv = jax.lax.fori_loop(0, tr, body, (dk0, dv0))
+    dk_ref[...] = dk.astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+
+
+def _bwd_dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, dvec_ref,
+    lts_ref, lte_ref, uts_ref, ute_ref,
+    ltsmin_ref, ltsmax_ref, ltemin_ref, ltemax_ref,
+    utsmin_ref, utsmax_ref, utemin_ref, utemax_ref,
+    dq_ref,
+    *, br: int, bc: int, tc: int, scale: float, causal: bool, skip: bool,
+):
+    i = pl.program_id(0)
+    d = q_ref.shape[-1]
+    qi = q_ref[...]
+    doi = do_ref[...]
+    lse_i = lse_ref[...]
+    dvec_i = dvec_ref[...]
+    row_ids = i * br + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 0)
+    lse_safe = jnp.where(jnp.isfinite(lse_i), lse_i, 0.0)
+
+    def body(j, dq):
+        def compute(dq):
+            kj = pl.load(k_ref, (pl.ds(j * bc, bc), slice(None)))
+            vj = pl.load(v_ref, (pl.ds(j * bc, bc), slice(None)))
+            col_ids = j * bc + jax.lax.broadcasted_iota(jnp.int32, (br, bc), 1)
+            s = jnp.dot(qi, kj.T) * scale
+            lts_j = pl.load(lts_ref, (pl.ds(j * bc, bc),))
+            lte_j = pl.load(lte_ref, (pl.ds(j * bc, bc),))
+            masked = (row_ids >= lts_j[None, :]) & (row_ids < lte_j[None, :])
+            if causal:
+                masked = masked | (row_ids < col_ids)
+            else:
+                uts_j = pl.load(uts_ref, (pl.ds(j * bc, bc),))
+                ute_j = pl.load(ute_ref, (pl.ds(j * bc, bc),))
+                masked = masked | (
+                    (row_ids >= uts_j[None, :]) & (row_ids < ute_j[None, :])
+                )
+            s = jnp.where(masked, NEG_INF, s)
+            p = jnp.where(
+                jnp.isfinite(lse_i)[:, None], jnp.exp(s - lse_safe[:, None]), 0.0
+            )
+            dp = jnp.dot(doi, vj.T)
+            ds = p * (dp - dvec_i[:, None]) * scale
+            return dq + jnp.dot(ds.astype(kj.dtype), kj)
+
+        if not skip:
+            return compute(dq)
+        lt_full, _ = _classify(
+            i, br, j, bc, ltsmax_ref[j], ltsmin_ref[j], ltemax_ref[j], ltemin_ref[j]
+        )
+        skip_tile = lt_full
+        if causal:
+            skip_tile = skip_tile | ((i + 1) * br <= j * bc)
+        else:
+            ut_full, _ = _classify(
+                i, br, j, bc, utsmax_ref[j], utsmin_ref[j], utemax_ref[j], utemin_ref[j]
+            )
+            skip_tile = skip_tile | ut_full
+        return jax.lax.cond(skip_tile, lambda d_: d_, compute, dq)
+
+    dq = jax.lax.fori_loop(0, tc, body, jnp.zeros((br, d), jnp.float32))
+    dq_ref[...] = dq.astype(dq_ref.dtype)
+
+
+def _bwd_single(q, k, v, o, do, lse, lts, lte, uts, ute, mm,
+                *, br, bc, scale, causal, skip):
+    n, d = q.shape
+    tr, tc = n // br, n // bc
+    dvec = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)  # D = rowsum(dO∘O)
+
+    vec_spec_n = pl.BlockSpec((n,), lambda g: (0,))
+    mm_spec = pl.BlockSpec((tc,), lambda g: (0,))
+    full_mat = pl.BlockSpec((n, d), lambda g: (0, 0))
+
+    dkv_kernel = functools.partial(
+        _bwd_dkv_kernel, br=br, bc=bc, tr=tr, scale=scale, causal=causal, skip=skip
+    )
+    dk, dv = pl.pallas_call(
+        dkv_kernel,
+        grid=(tc,),
+        in_specs=[
+            full_mat,                                # q (full, sliced inside)
+            pl.BlockSpec((bc, d), lambda j: (j, 0)),  # k block
+            pl.BlockSpec((bc, d), lambda j: (j, 0)),  # v block
+            full_mat,                                # do
+            vec_spec_n,                              # lse
+            vec_spec_n,                              # dvec
+            pl.BlockSpec((bc,), lambda j: (j,)),      # lts block
+            pl.BlockSpec((bc,), lambda j: (j,)),      # lte block
+            pl.BlockSpec((bc,), lambda j: (j,)),      # uts block
+            pl.BlockSpec((bc,), lambda j: (j,)),      # ute block
+            mm_spec, mm_spec, mm_spec, mm_spec,
+            mm_spec, mm_spec, mm_spec, mm_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((bc, d), lambda j: (j, 0)),
+            pl.BlockSpec((bc, d), lambda j: (j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), q.dtype),
+            jax.ShapeDtypeStruct((n, d), q.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, do, lse, dvec, lts, lte, uts, ute, *mm)
+
+    dq_kernel = functools.partial(
+        _bwd_dq_kernel, br=br, bc=bc, tc=tc, scale=scale, causal=causal, skip=skip
+    )
+    dq = pl.pallas_call(
+        dq_kernel,
+        grid=(tr,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),  # q block
+            full_mat,                                 # k
+            full_mat,                                 # v
+            pl.BlockSpec((br, d), lambda i: (i, 0)),  # do block
+            pl.BlockSpec((br,), lambda i: (i,)),      # lse block
+            pl.BlockSpec((br,), lambda i: (i,)),      # dvec block
+            vec_spec_n, vec_spec_n, vec_spec_n, vec_spec_n,
+            mm_spec, mm_spec, mm_spec, mm_spec,
+            mm_spec, mm_spec, mm_spec, mm_spec,
+        ],
+        out_specs=[pl.BlockSpec((br, d), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, d), q.dtype)],
+        interpret=True,
+    )(q, k, v, do, lse, dvec, lts, lte, uts, ute, *mm)[0]
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# Public API: batched attention with custom VJP
+# ---------------------------------------------------------------------------
+
+def _minmax8(lts, lte, uts, ute, bc):
+    ltsmin, ltsmax = block_minmax(lts, bc)
+    ltemin, ltemax = block_minmax(lte, bc)
+    utsmin, utsmax = block_minmax(uts, bc)
+    utemin, utemax = block_minmax(ute, bc)
+    return (ltsmin, ltsmax, ltemin, ltemax, utsmin, utsmax, utemin, utemax)
+
+
+def flashmask_attention(
+    q, k, v, lts, lte, uts, ute,
+    *, causal: bool = True, br: int = DEFAULT_BR, bc: int = DEFAULT_BC,
+    softmax_scale=None, skip: bool = True,
+):
+    """Batched FlashMask attention.
+
+    Args:
+      q, k, v: ``[B, H, N, d]``.
+      lts/lte/uts/ute: ``int32[B, N]`` column-wise mask intervals (shared
+        across heads, like the paper's per-sample masks).
+      causal: upper triangle implicitly masked (uts/ute ignored).
+      br, bc: tile sizes (``N % br == N % bc == 0``).
+      skip: disable to get the dense-mask FA2 baseline (bitwise-identical
+        output; used for the paper's convergence comparison and tests).
+
+    Returns ``o`` with the same shape/dtype as ``q``.
+    """
+    d = q.shape[-1]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / (d ** 0.5)
+    o, _ = _flashmask_vjp(q, k, v, lts, lte, uts, ute, causal, br, bc, scale, skip)
+    return o
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7, 8, 9, 10, 11))
+def _flashmask_vjp(q, k, v, lts, lte, uts, ute, causal, br, bc, scale, skip):
+    return _fwd_batched(q, k, v, lts, lte, uts, ute, causal, br, bc, scale, skip)
+
+
+def _fwd_batched(q, k, v, lts, lte, uts, ute, causal, br, bc, scale, skip):
+    def per_batch(qb, kb, vb, ltsb, lteb, utsb, uteb):
+        mm = _minmax8(ltsb, lteb, utsb, uteb, bc)
+        fn = functools.partial(
+            _fwd_single, br=br, bc=bc, scale=scale, causal=causal, skip=skip
+        )
+        return jax.vmap(
+            lambda qh, kh, vh: fn(qh, kh, vh, ltsb, lteb, utsb, uteb, mm)
+        )(qb, kb, vb)
+
+    o, lse = jax.vmap(per_batch)(q, k, v, lts, lte, uts, ute)
+    return o, lse
+
+
+def _vjp_fwd(q, k, v, lts, lte, uts, ute, causal, br, bc, scale, skip):
+    o, lse = _fwd_batched(q, k, v, lts, lte, uts, ute, causal, br, bc, scale, skip)
+    return (o, lse), (q, k, v, o, lse, lts, lte, uts, ute)
+
+
+def _vjp_bwd(causal, br, bc, scale, skip, res, cts):
+    q, k, v, o, lse, lts, lte, uts, ute = res
+    do, _ = cts
+
+    def per_batch(qb, kb, vb, ob, dob, lseb, ltsb, lteb, utsb, uteb):
+        mm = _minmax8(ltsb, lteb, utsb, uteb, bc)
+        fn = functools.partial(
+            _bwd_single, br=br, bc=bc, scale=scale, causal=causal, skip=skip
+        )
+        return jax.vmap(
+            lambda qh, kh, vh, oh, doh, lseh: fn(
+                qh, kh, vh, oh, doh, lseh, ltsb, lteb, utsb, uteb, mm
+            )
+        )(qb, kb, vb, ob, dob, lseb)
+
+    dq, dk, dv = jax.vmap(per_batch)(q, k, v, o, do, lse, lts, lte, uts, ute)
+    # integer operands take float0 cotangents
+    import numpy as np
+    zero = lambda x: np.zeros(x.shape, dtype=jax.dtypes.float0)
+    return dq, dk, dv, zero(lts), zero(lte), zero(uts), zero(ute)
+
+
+_flashmask_vjp.defvjp(_vjp_fwd, _vjp_bwd)

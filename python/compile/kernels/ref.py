@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for the FlashMask kernel.
+
+Two references:
+
+* :func:`dense_attention` — textbook softmax attention with an additive
+  dense mask (paper Eq. 2).  The *semantic* oracle.
+* :func:`blocked_attention` — FlashAttention-2 tiling + online softmax
+  with the dense mask applied per tile but **no block skipping**.  The
+  *bitwise* oracle: FlashMask must match this one bit-for-bit because
+  skipping a fully-masked tile is an exact no-op (paper §4.4).
+
+Both handle fully-masked rows by emitting zeros (FlashAttention's
+convention: l_i = 0 => O_i = 0, LSE_i = -inf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+
+
+def mask_bias_from_vectors(lts, lte, uts, ute, causal: bool, n: int):
+    """Dense additive bias (0 / -inf) from FlashMask column vectors."""
+    rows = jnp.arange(n, dtype=jnp.int32)[:, None]
+    lower = (rows >= lts[None, :]) & (rows < lte[None, :])
+    upper = (rows >= uts[None, :]) & (rows < ute[None, :])
+    masked = lower | upper
+    if causal:
+        cols = jnp.arange(n, dtype=jnp.int32)[None, :]
+        masked = masked | (rows < cols)
+    return jnp.where(masked, NEG_INF, 0.0)
+
+
+def dense_attention(q, k, v, bias, softmax_scale=None):
+    """O = softmax(QK^T * scale + bias) V  for a single head [N, d].
+
+    Returns ``(o, lse)`` where ``lse`` is the per-row logsumexp that the
+    backward pass consumes.
+    """
+    n, d = q.shape
+    scale = softmax_scale if softmax_scale is not None else 1.0 / (d ** 0.5)
+    s = (q @ k.T) * scale + bias
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)  # fully-masked rows
+    p = jnp.exp(s - m_safe)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    l_safe = jnp.where(l > 0, l, 1.0)
+    o = jnp.where(l > 0, (p @ v) / l_safe, 0.0)
+    lse = jnp.where(l[:, 0] > 0, m_safe[:, 0] + jnp.log(l_safe[:, 0]), NEG_INF)
+    return o, lse
+
+
+def dense_attention_batched(q, k, v, bias, softmax_scale=None):
+    """[B, H, N, d] batched wrapper around :func:`dense_attention`.
+
+    ``bias`` is [B, N, N] (shared across heads, like FlashMask vectors).
+    """
+    fn = functools.partial(dense_attention, softmax_scale=softmax_scale)
+    per_head = jax.vmap(fn, in_axes=(0, 0, 0, None))       # over H
+    per_batch = jax.vmap(per_head, in_axes=(0, 0, 0, 0))   # over B
+    return per_batch(q, k, v, bias)
+
+
+def blocked_attention(q, k, v, bias, br: int, bc: int, softmax_scale=None):
+    """FA2 forward tiling with online softmax, no skipping — bitwise oracle.
+
+    Single head [N, d]; ``bias`` is the dense [N, N] additive mask.
+    Processes tiles in the same (i outer, j inner) order as the FlashMask
+    kernel so the floating-point accumulation order is identical.
+    """
+    n, d = q.shape
+    scale = softmax_scale if softmax_scale is not None else 1.0 / (d ** 0.5)
+    assert n % br == 0 and n % bc == 0, "oracle requires divisible tiles"
+    tr, tc = n // br, n // bc
+
+    def row_block(i):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * br, br)
+
+        def inner(j, carry):
+            o, l, m = carry
+            kj = jax.lax.dynamic_slice_in_dim(k, j * bc, bc)
+            vj = jax.lax.dynamic_slice_in_dim(v, j * bc, bc)
+            bij = jax.lax.dynamic_slice(bias, (i * br, j * bc), (br, bc))
+            s = qi @ kj.T * scale + bij
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[:, None])
+            alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = alpha * l + jnp.sum(p, axis=-1)
+            o_new = alpha[:, None] * o + p @ vj
+            return o_new, l_new, m_new
+
+        o0 = jnp.zeros((br, d), q.dtype)
+        l0 = jnp.zeros((br,), q.dtype)
+        m0 = jnp.full((br,), NEG_INF, q.dtype)
+        o, l, m = jax.lax.fori_loop(0, tc, inner, (o0, l0, m0))
+        l_safe = jnp.where(l > 0, l, 1.0)
+        o = jnp.where(l[:, None] > 0, o / l_safe[:, None], 0.0)
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        lse = jnp.where(l > 0, m_safe + jnp.log(l_safe), NEG_INF)
+        return o, lse
+
+    outs, lses = jax.vmap(row_block)(jnp.arange(tr))
+    return outs.reshape(n, d), lses.reshape(n)

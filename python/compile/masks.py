@@ -1,0 +1,370 @@
+"""FlashMask column-wise sparse mask representation and builders.
+
+This is the python mirror of ``rust/src/mask/`` (the rust side is the
+production implementation; this side exists so the Pallas kernel tests can
+construct the same masks the coordinator will feed at runtime).
+
+Representation (paper §4.1): for key column ``j`` the masked query rows are
+
+    [LTS_j, LTE_j)  ∪  [UTS_j, UTE_j)
+
+with the first interval living in the lower-left triangle (rows at or
+below the diagonal) and the second in the upper-right triangle.  A mask is
+*causal* when the whole upper triangle is implicitly masked; then only
+LTS/LTE carry information and UTS/UTE are empty.
+
+Empty interval convention: ``start == end == N`` (matches the rust side).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+__all__ = [
+    "FlashMask",
+    "full",
+    "causal",
+    "sliding_window",
+    "causal_document",
+    "document",
+    "share_question",
+    "global_sliding_window",
+    "causal_blockwise",
+    "prefix_lm_causal",
+    "prefix_lm_document",
+    "qk_sparse",
+    "hash_sparse",
+    "random_eviction",
+    "MASK_BUILDERS",
+    "sample_doc_lens",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashMask:
+    """Column-wise sparse attention mask over an ``N x N`` score matrix."""
+
+    lts: np.ndarray  # int32[N]  lower-triangle masked-interval start (row)
+    lte: np.ndarray  # int32[N]  lower-triangle masked-interval end (row, excl)
+    uts: np.ndarray  # int32[N]  upper-triangle masked-interval start
+    ute: np.ndarray  # int32[N]  upper-triangle masked-interval end (excl)
+    causal: bool     # True => upper triangle implicitly fully masked
+
+    @property
+    def n(self) -> int:
+        return int(self.lts.shape[0])
+
+    def validate(self) -> None:
+        n = self.n
+        for name in ("lts", "lte", "uts", "ute"):
+            v = getattr(self, name)
+            assert v.shape == (n,), f"{name}: bad shape {v.shape}"
+            assert v.dtype == np.int32, f"{name}: bad dtype {v.dtype}"
+            assert (v >= 0).all() and (v <= n).all(), f"{name}: out of range"
+        assert (self.lts <= self.lte).all(), "lower interval inverted"
+        assert (self.uts <= self.ute).all(), "upper interval inverted"
+        if self.causal:
+            assert (self.uts == n).all() and (self.ute == n).all(), (
+                "causal masks must leave UTS/UTE empty"
+            )
+
+    def dense_allowed(self) -> np.ndarray:
+        """Materialize the dense boolean visibility matrix.
+
+        ``allowed[i, j]`` is True when query row ``i`` may attend to key
+        column ``j``.  This is the O(N^2) oracle the kernels are tested
+        against — never used on any hot path.
+        """
+        n = self.n
+        rows = np.arange(n, dtype=np.int32)[:, None]  # i
+        lower_masked = (rows >= self.lts[None, :]) & (rows < self.lte[None, :])
+        upper_masked = (rows >= self.uts[None, :]) & (rows < self.ute[None, :])
+        allowed = ~(lower_masked | upper_masked)
+        if self.causal:
+            cols = np.arange(n, dtype=np.int32)[None, :]
+            allowed &= rows >= cols
+        return allowed
+
+    def dense_bias(self, dtype=np.float32) -> np.ndarray:
+        """Additive mask M (0 where allowed, -inf where masked)."""
+        allowed = self.dense_allowed()
+        bias = np.zeros_like(allowed, dtype=dtype)
+        bias[~allowed] = -np.inf
+        return bias
+
+    def block_sparsity(self, br: int, bc: int) -> float:
+        """Fraction of (Br x Bc) score tiles that are fully masked (ρ)."""
+        allowed = self.dense_allowed()
+        n = self.n
+        tr = (n + br - 1) // br
+        tc = (n + bc - 1) // bc
+        fully = 0
+        for bi in range(tr):
+            for bj in range(tc):
+                tile = allowed[bi * br : (bi + 1) * br, bj * bc : (bj + 1) * bc]
+                if not tile.any():
+                    fully += 1
+        return fully / float(tr * tc)
+
+
+def _empty(n: int) -> np.ndarray:
+    return np.full(n, n, dtype=np.int32)
+
+
+def _mk(n, lts=None, lte=None, uts=None, ute=None, causal=True) -> FlashMask:
+    m = FlashMask(
+        lts=_empty(n) if lts is None else np.asarray(lts, np.int32),
+        lte=_empty(n) if lte is None else np.asarray(lte, np.int32),
+        uts=_empty(n) if uts is None else np.asarray(uts, np.int32),
+        ute=_empty(n) if ute is None else np.asarray(ute, np.int32),
+        causal=causal,
+    )
+    m.validate()
+    return m
+
+
+def _doc_bounds(doc_lens: Sequence[int]) -> List[Tuple[int, int]]:
+    bounds, s = [], 0
+    for length in doc_lens:
+        assert length > 0, "document lengths must be positive"
+        bounds.append((s, s + length))
+        s += length
+    return bounds
+
+
+# ---------------------------------------------------------------------------
+# Builders — one per mask family in paper Fig. 1(a)
+# ---------------------------------------------------------------------------
+
+def full(n: int) -> FlashMask:
+    """(0) No masking at all — bidirectional full attention."""
+    return _mk(n, causal=False)
+
+
+def causal(n: int) -> FlashMask:
+    """(1) GPT-style causal mask: row i attends to columns j <= i."""
+    return _mk(n, causal=True)
+
+
+def sliding_window(n: int, window: int) -> FlashMask:
+    """(2) Causal sliding window: row i attends to j in (i-window, i]."""
+    assert window >= 1
+    j = np.arange(n, dtype=np.int64)
+    lts = np.minimum(j + window, n).astype(np.int32)
+    return _mk(n, lts=lts, lte=np.full(n, n, np.int32))
+
+
+def causal_document(n: int, doc_lens: Sequence[int]) -> FlashMask:
+    """(3) Packed documents, causal within each document (SFT packing)."""
+    assert sum(doc_lens) == n
+    # rows at/after the doc end cannot see columns of this doc
+    # (rows before the doc start are upper-triangle => causal handles it)
+    lts = np.empty(n, np.int32)
+    for (ds, de) in _doc_bounds(doc_lens):
+        lts[ds:de] = de
+    lte = np.full(n, n, np.int32)
+    # a doc ending at N yields an empty interval [N, N)
+    return _mk(n, lts=lts, lte=lte)
+
+
+def document(n: int, doc_lens: Sequence[int]) -> FlashMask:
+    """(4) Bidirectional document mask (BERT/NaViT packing)."""
+    assert sum(doc_lens) == n
+    lts = np.empty(n, np.int32)
+    uts = np.zeros(n, np.int32)
+    ute = np.empty(n, np.int32)
+    for (ds, de) in _doc_bounds(doc_lens):
+        lts[ds:de] = de      # rows below the doc cannot see it
+        ute[ds:de] = ds      # rows above the doc cannot see it
+    lte = np.full(n, n, np.int32)
+    # normalize empty intervals ([0,0) -> [n,n)) for the first doc
+    empty_u = uts >= ute
+    uts = np.where(empty_u, n, uts).astype(np.int32)
+    ute = np.where(empty_u, n, ute).astype(np.int32)
+    empty_l = lts >= lte
+    lts2 = np.where(empty_l, n, lts).astype(np.int32)
+    lte2 = np.where(empty_l, n, lte).astype(np.int32)
+    return _mk(n, lts=lts2, lte=lte2, uts=uts, ute=ute, causal=False)
+
+
+def share_question(
+    n: int, docs: Sequence[Tuple[int, Sequence[int]]]
+) -> FlashMask:
+    """(5) Shared-question mask for DPO/RM.
+
+    ``docs`` is a sequence of ``(question_len, [answer_len, ...])``.  Within
+    a document the question is causal-visible to every answer; each answer
+    is causal within itself and blind to sibling answers.
+    """
+    lts = np.empty(n, np.int32)
+    pos = 0
+    for q_len, a_lens in docs:
+        ds = pos
+        de = ds + q_len + int(sum(a_lens))
+        assert de <= n
+        # question columns: visible (causally) to the whole document
+        lts[ds : ds + q_len] = de
+        a_start = ds + q_len
+        for al in a_lens:
+            # answer columns: visible only within the answer itself
+            lts[a_start : a_start + al] = a_start + al
+            a_start += al
+        pos = de
+    assert pos == n, f"docs cover {pos} of {n} tokens"
+    lte = np.full(n, n, np.int32)
+    empty = lts >= lte
+    lts = np.where(empty, n, lts).astype(np.int32)
+    return _mk(n, lts=lts, lte=lte)
+
+
+def global_sliding_window(n: int, n_global: int, window: int) -> FlashMask:
+    """(6) BigBird-style: global prefix columns + causal sliding window."""
+    assert 0 <= n_global <= n and window >= 1
+    j = np.arange(n, dtype=np.int64)
+    lts = np.minimum(j + window, n)
+    lts[:n_global] = n  # global columns: never masked below the diagonal
+    return _mk(n, lts=lts.astype(np.int32), lte=np.full(n, n, np.int32))
+
+
+def causal_blockwise(n: int, block_lens: Sequence[int]) -> FlashMask:
+    """(7) In-context-learning blockwise mask (Bertsch et al.).
+
+    Demonstration blocks attend causally within their own block; the final
+    block (the test example) attends to everything before it.
+    """
+    assert sum(block_lens) == n and len(block_lens) >= 1
+    bounds = _doc_bounds(block_lens)
+    test_start = bounds[-1][0]
+    lts = np.full(n, n, np.int32)
+    lte = np.full(n, n, np.int32)
+    for (ds, de) in bounds[:-1]:
+        # columns of a demo block are hidden from later demo blocks but
+        # visible again to the test block: masked rows = [de, test_start)
+        if de < test_start:
+            lts[ds:de] = de
+            lte[ds:de] = test_start
+    return _mk(n, lts=lts, lte=lte)
+
+
+def prefix_lm_causal(n: int, prefix_len: int) -> FlashMask:
+    """(8) T5 prefix-LM: bidirectional inside the prefix, causal after."""
+    return prefix_lm_document(n, [n], [prefix_len])
+
+
+def prefix_lm_document(
+    n: int, doc_lens: Sequence[int], prefix_lens: Sequence[int]
+) -> FlashMask:
+    """(9)(10) Per-document prefix-LM: bidirectional within each doc's
+    prefix, causal elsewhere, no cross-document attention."""
+    assert sum(doc_lens) == n and len(prefix_lens) == len(doc_lens)
+    lts = np.empty(n, np.int32)
+    uts = np.full(n, n, np.int32)
+    ute = np.full(n, n, np.int32)
+    rows = np.arange(n, dtype=np.int32)
+    for (ds, de), p in zip(_doc_bounds(doc_lens), prefix_lens):
+        assert 0 <= p <= de - ds
+        lts[ds:de] = de
+        pe = ds + p
+        for j in range(ds, de):
+            if j < pe:
+                # prefix column: upper rows outside this doc are masked
+                if ds > 0 and j > 0:
+                    uts[j], ute[j] = 0, min(ds, j)
+                    if uts[j] >= ute[j]:
+                        uts[j], ute[j] = n, n
+            else:
+                # suffix column: all upper rows up to j are masked
+                if j > 0:
+                    uts[j], ute[j] = 0, j
+    lte = np.full(n, n, np.int32)
+    empty_l = lts >= lte
+    lts = np.where(empty_l, n, lts).astype(np.int32)
+    return _mk(n, lts=lts, lte=lte, uts=uts, ute=ute, causal=False)
+
+
+def qk_sparse(
+    n: int, q_drop: Tuple[int, int], k_drop_cols: Sequence[int]
+) -> FlashMask:
+    """(11) SCFA-style QK sparsity: one contiguous dropped-query range
+    plus an arbitrary set of dropped key columns, over a causal base."""
+    qs, qe = q_drop
+    assert 0 <= qs <= qe <= n
+    j = np.arange(n, dtype=np.int64)
+    lts = np.maximum(np.int64(qs), j)
+    lts = np.where(lts >= qe, n, lts)
+    lte = np.where(lts >= n, n, qe).astype(np.int32)
+    lts = lts.astype(np.int32)
+    for c in k_drop_cols:
+        lts[c], lte[c] = c, n  # dropped key: whole lower column masked
+    return _mk(n, lts=lts, lte=lte)
+
+
+def hash_sparse(n: int, chunk_lens: Sequence[int]) -> FlashMask:
+    """(12) Reformer hash-sparse after bucket sort: contiguous hash chunks,
+    causal within each chunk — structurally a causal document mask."""
+    return causal_document(n, chunk_lens)
+
+
+def random_eviction(n: int, seed: int = 0) -> FlashMask:
+    """(13) Random KV-cache eviction: column j becomes invisible from a
+    random row e_j in (j, N]."""
+    rng = np.random.default_rng(seed)
+    j = np.arange(n, dtype=np.int64)
+    evict = rng.integers(j + 1, n + 1)  # e_j in (j, n]
+    lts = np.where(evict >= n, n, evict).astype(np.int32)
+    lte = np.where(evict >= n, n, n).astype(np.int32)
+    return _mk(n, lts=lts, lte=lte)
+
+
+def sample_doc_lens(
+    n: int, n_docs: int, rng: np.random.Generator, min_len: int = 1
+) -> List[int]:
+    """Sample ``n_docs`` positive lengths summing to ``n`` (appendix A.2.1)."""
+    assert n_docs * min_len <= n
+    cuts = np.sort(rng.choice(n - n_docs * min_len + 1, size=n_docs - 1, replace=True))
+    lens = np.diff(np.concatenate([[0], cuts, [n - n_docs * min_len]])) + min_len
+    assert lens.sum() == n
+    return [int(x) for x in lens]
+
+
+def _default_docs(n: int, rng: np.random.Generator):
+    k = int(rng.integers(2, 6))
+    return sample_doc_lens(n, k, rng, min_len=max(1, n // 16))
+
+
+def MASK_BUILDERS(n: int, seed: int = 0):
+    """The paper's 12 benchmark mask cases, instantiated at length ``n``.
+
+    Returns ``{name: FlashMask}`` in the order of Tables 4–9.
+    """
+    rng = np.random.default_rng(seed)
+    docs = _default_docs(n, rng)
+    sq_docs = []
+    pos = 0
+    for dl in docs:
+        n_ans = int(rng.integers(2, 4))
+        a_total = max(n_ans, dl // 3)
+        a_lens = sample_doc_lens(a_total, n_ans, rng)
+        sq_docs.append((dl - a_total, a_lens))
+        pos += dl
+    blocks = _default_docs(n, rng)
+    prefixes = [int(rng.integers(1, max(2, dl // 2))) for dl in docs]
+    qd = sorted(rng.integers(0, n, size=2).tolist())
+    k_drop = sorted(rng.choice(n, size=max(1, n // 8), replace=False).tolist())
+    return {
+        "full": full(n),
+        "causal": causal(n),
+        "sliding_window": sliding_window(n, max(1, n // 8)),
+        "causal_document": causal_document(n, docs),
+        "document": document(n, docs),
+        "share_question": share_question(n, sq_docs),
+        "global_sliding_window": global_sliding_window(n, max(1, n // 16), max(1, n // 8)),
+        "causal_blockwise": causal_blockwise(n, blocks),
+        "prefix_lm_causal": prefix_lm_causal(n, max(1, n // 4)),
+        "prefix_lm_document": prefix_lm_document(n, docs, prefixes),
+        "qk_sparse": qk_sparse(n, (qd[0], qd[1]), k_drop),
+        "random_eviction": random_eviction(n, seed),
+    }

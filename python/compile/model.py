@@ -1,0 +1,268 @@
+"""Layer-2: decoder-only transformer LM in JAX, attention = FlashMask kernel.
+
+Build-time only.  ``aot.py`` lowers :func:`make_train_step` /
+:func:`make_init` / :func:`make_attn_fwd` to HLO text; the rust
+coordinator executes them via PJRT and never imports python.
+
+The attention variant is selectable so the paper's convergence experiment
+(Fig. 3) can be reproduced exactly:
+
+* ``"flashmask"``  — Pallas kernel with block skipping (the contribution)
+* ``"densemask"``  — same Pallas kernel, skipping disabled (the paper's
+  "FlashAttention dense mask" baseline; bitwise-comparable)
+* ``"dense"``      — textbook O(N^2) attention with a materialized mask
+  (the paper's "vanilla attention" baseline)
+
+Everything is float32: the CPU PJRT backend emulates bf16 slowly and the
+paper's bit-exactness claim is dtype-agnostic (see DESIGN.md
+§Substitutions).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flashmask as fm
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 256          # byte-level
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 8
+    d_head: int = 32
+    d_ff: int = 688
+    max_seq: int = 512
+    # FlashMask tile sizes.  128x128 matches the paper's CUDA tiling and
+    # measured 1.39x faster than 64x64 under interpret-mode XLA-CPU
+    # (fewer while-loop iterations) — see EXPERIMENTS.md §Perf.
+    br: int = 128
+    bc: int = 128
+    rope_theta: float = 10000.0
+    attention: str = "flashmask"  # flashmask | densemask | dense
+
+    @property
+    def n_params(self) -> int:
+        per_layer = 4 * self.d_model * self.n_heads * self.d_head \
+            + 3 * self.d_model * self.d_ff + 2 * self.d_model
+        return self.vocab * self.d_model + per_layer * self.n_layers + self.d_model
+
+
+# Presets mirroring the paper's scale sweep, shrunk to CPU reality.
+PRESETS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig(),
+    "small": ModelConfig(d_model=512, n_layers=8, n_heads=8, d_head=64, d_ff=1376),
+    # ~85M transformer params — the "100M-class" end-to-end model
+    "base": ModelConfig(d_model=768, n_layers=12, n_heads=12, d_head=64, d_ff=2048),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Flat, ordered parameter inventory.
+
+    The order here is the ABI between python and rust: aot.py writes it
+    into the manifest, the rust runtime feeds literals in this order.
+    """
+    d, h, dh, ff = cfg.d_model, cfg.n_heads, cfg.d_head, cfg.d_ff
+    specs: List[Tuple[str, Tuple[int, ...]]] = [("embed", (cfg.vocab, d))]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        specs += [
+            (p + "norm_attn", (d,)),
+            (p + "wq", (d, h * dh)),
+            (p + "wk", (d, h * dh)),
+            (p + "wv", (d, h * dh)),
+            (p + "wo", (h * dh, d)),
+            (p + "norm_mlp", (d,)),
+            (p + "w_gate", (d, ff)),
+            (p + "w_up", (d, ff)),
+            (p + "w_down", (ff, d)),
+        ]
+    specs.append(("norm_final", (cfg.d_model,)))
+    return specs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> List[jax.Array]:
+    """He-style init, returned in ``param_specs`` order."""
+    specs = param_specs(cfg)
+    keys = jax.random.split(key, len(specs))
+    out = []
+    for (name, shape), k in zip(specs, keys):
+        if "norm" in name:
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name == "embed":
+            out.append(jax.random.normal(k, shape, jnp.float32) * 0.02)
+        else:
+            fan_in = shape[0]
+            out.append(jax.random.normal(k, shape, jnp.float32) * (fan_in ** -0.5))
+    return out
+
+
+def _unflatten(cfg: ModelConfig, leaves: List[jax.Array]) -> Dict[str, Any]:
+    it = iter(leaves)
+    params: Dict[str, Any] = {"embed": next(it), "layers": []}
+    for _ in range(cfg.n_layers):
+        params["layers"].append({
+            "norm_attn": next(it), "wq": next(it), "wk": next(it),
+            "wv": next(it), "wo": next(it), "norm_mlp": next(it),
+            "w_gate": next(it), "w_up": next(it), "w_down": next(it),
+        })
+    params["norm_final"] = next(it)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Model forward
+# ---------------------------------------------------------------------------
+
+def _rmsnorm(x, w, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _rope(x, theta: float):
+    """Rotary embedding over [B, H, N, dh]."""
+    b, h, n, dh = x.shape
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    pos = jnp.arange(n, dtype=jnp.float32)
+    ang = pos[:, None] * freqs[None, :]          # [N, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1
+    )
+
+
+def _attention(cfg: ModelConfig, layer, x, mask_vecs, causal: bool):
+    b, n, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    q = (x @ layer["wq"]).reshape(b, n, h, dh).transpose(0, 2, 1, 3)
+    k = (x @ layer["wk"]).reshape(b, n, h, dh).transpose(0, 2, 1, 3)
+    v = (x @ layer["wv"]).reshape(b, n, h, dh).transpose(0, 2, 1, 3)
+    q, k = _rope(q, cfg.rope_theta), _rope(k, cfg.rope_theta)
+    lts, lte, uts, ute = mask_vecs
+    if cfg.attention in ("flashmask", "densemask"):
+        o = fm.flashmask_attention(
+            q, k, v, lts, lte, uts, ute,
+            causal=causal, br=cfg.br, bc=cfg.bc,
+            skip=(cfg.attention == "flashmask"),
+        )
+    elif cfg.attention == "dense":
+        bias = jax.vmap(
+            lambda a, bb, c, dd: kref.mask_bias_from_vectors(a, bb, c, dd, causal, n)
+        )(lts, lte, uts, ute)
+        o, _ = kref.dense_attention_batched(q, k, v, bias)
+    else:
+        raise ValueError(f"unknown attention variant {cfg.attention!r}")
+    o = o.transpose(0, 2, 1, 3).reshape(b, n, h * dh)
+    return o @ layer["wo"]
+
+
+def _mlp(layer, x):
+    return (jax.nn.silu(x @ layer["w_gate"]) * (x @ layer["w_up"])) @ layer["w_down"]
+
+
+def forward(cfg: ModelConfig, leaves, tokens, mask_vecs, causal: bool = True):
+    """Logits [B, N, V] for token ids [B, N]."""
+    params = _unflatten(cfg, leaves)
+    x = params["embed"][tokens]
+    for layer in params["layers"]:
+        x = x + _attention(cfg, layer, _rmsnorm(x, layer["norm_attn"]), mask_vecs, causal)
+        x = x + _mlp(layer, _rmsnorm(x, layer["norm_mlp"]))
+    x = _rmsnorm(x, params["norm_final"])
+    return x @ params["embed"].T  # tied LM head
+
+
+def loss_fn(cfg: ModelConfig, leaves, tokens, targets, loss_mask, mask_vecs,
+            causal: bool = True):
+    """Mean masked cross-entropy."""
+    logits = forward(cfg, leaves, tokens, mask_vecs, causal)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    w = loss_mask.astype(jnp.float32)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# AdamW train step
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+
+
+def make_train_step(cfg: ModelConfig, opt: OptConfig):
+    """Returns ``step(leaves…, m…, v…, step_no, tokens, targets, loss_mask,
+    lts, lte, uts, ute) -> (loss, leaves'…, m'…, v'…)`` — flat in/out, the
+    shape the AOT export needs."""
+    n_leaves = len(param_specs(cfg))
+
+    def train_step(*args):
+        leaves = list(args[:n_leaves])
+        m = list(args[n_leaves : 2 * n_leaves])
+        v = list(args[2 * n_leaves : 3 * n_leaves])
+        step_no = args[3 * n_leaves]
+        tokens, targets, loss_mask, lts, lte, uts, ute = args[3 * n_leaves + 1 :]
+        mask_vecs = (lts, lte, uts, ute)
+
+        loss, grads = jax.value_and_grad(
+            lambda lv: loss_fn(cfg, lv, tokens, targets, loss_mask, mask_vecs)
+        )(leaves)
+
+        t = step_no.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - opt.beta1 ** t
+        bc2 = 1.0 - opt.beta2 ** t
+        new_leaves, new_m, new_v = [], [], []
+        for p, g, mi, vi in zip(leaves, grads, m, v):
+            mi = opt.beta1 * mi + (1 - opt.beta1) * g
+            vi = opt.beta2 * vi + (1 - opt.beta2) * jnp.square(g)
+            update = (mi / bc1) / (jnp.sqrt(vi / bc2) + opt.eps)
+            p = p - opt.lr * (update + opt.weight_decay * p)
+            new_leaves.append(p); new_m.append(mi); new_v.append(vi)
+        return tuple([loss] + new_leaves + new_m + new_v)
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    n_leaves = len(param_specs(cfg))
+
+    def eval_step(*args):
+        leaves = list(args[:n_leaves])
+        tokens, targets, loss_mask, lts, lte, uts, ute = args[n_leaves:]
+        return (loss_fn(cfg, leaves, tokens, targets, loss_mask,
+                        (lts, lte, uts, ute)),)
+
+    return eval_step
+
+
+def make_init(cfg: ModelConfig):
+    def init(seed):
+        key = jax.random.PRNGKey(seed[0])
+        return tuple(init_params(cfg, key))
+    return init
+
+
+def make_attn_fwd(causal: bool, br: int, bc: int):
+    """Standalone FlashMask attention forward (the inference artifact)."""
+    def attn(q, k, v, lts, lte, uts, ute):
+        return (fm.flashmask_attention(
+            q, k, v, lts, lte, uts, ute, causal=causal, br=br, bc=bc),)
+    return attn

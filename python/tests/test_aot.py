@@ -1,0 +1,48 @@
+"""AOT export smoke: HLO text artifacts + manifest ABI."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.fixture(scope="module")
+def artifacts(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    env = dict(os.environ)
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out),
+         "--preset", "tiny", "--batch", "2", "--attn-seq", "256",
+         "--variants", "flashmask"],
+        cwd=os.path.join(os.path.dirname(__file__), ".."),
+        check=True, env=env,
+    )
+    return out
+
+
+def test_manifest_structure(artifacts):
+    man = json.loads((artifacts / "manifest.json").read_text())
+    assert man["model"]["n_params"] > 0
+    assert set(man["artifacts"]) >= {
+        "init", "train_step_flashmask", "eval_step", "attn_fwd", "attn_fwd_bidir"}
+    n_leaves = len(man["params"])
+    ts = man["artifacts"]["train_step_flashmask"]
+    # flat ABI: 3 * params + step_no + 7 batch tensors
+    assert len(ts["inputs"]) == 3 * n_leaves + 1 + 7
+
+
+def test_hlo_text_parses(artifacts):
+    for name in ("init", "train_step_flashmask", "eval_step", "attn_fwd"):
+        man = json.loads((artifacts / "manifest.json").read_text())
+        text = (artifacts / man["artifacts"][name]["file"]).read_text()
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_param_order_is_stable(artifacts):
+    man = json.loads((artifacts / "manifest.json").read_text())
+    names = [p["name"] for p in man["params"]]
+    assert names[0] == "embed" and names[-1] == "norm_final"
+    assert names[1] == "layer0.norm_attn"

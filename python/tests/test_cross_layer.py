@@ -1,0 +1,48 @@
+"""Cross-layer ABI fixtures: the python builders must emit exactly the
+vectors the rust builders emit (rust/tests/cross_layer.rs holds the same
+constants).  The coordinator builds masks in rust and feeds them to the
+kernel compiled from the python side, so any drift breaks training."""
+
+import numpy as np
+
+from compile import masks
+
+
+def test_causal_document_vectors_fixture():
+    m = masks.causal_document(12, [5, 4, 3])
+    assert m.lts.tolist() == [5, 5, 5, 5, 5, 9, 9, 9, 9, 12, 12, 12]
+    assert m.lte.tolist() == [12] * 12
+    assert m.causal
+
+
+def test_document_vectors_fixture():
+    m = masks.document(12, [5, 7])
+    assert m.lts[:5].tolist() == [5, 5, 5, 5, 5]
+    assert m.uts[5:].tolist() == [0] * 7
+    assert m.ute[5:].tolist() == [5] * 7
+    assert (m.uts[:5] == 12).all()
+
+
+def test_share_question_vectors_fixture():
+    m = masks.share_question(12, [(3, [2, 3]), (2, [2])])
+    assert m.lts.tolist() == [8, 8, 8, 5, 5, 8, 8, 8, 12, 12, 12, 12]
+
+
+def test_sliding_window_vectors_fixture():
+    m = masks.sliding_window(8, 3)
+    assert m.lts.tolist() == [3, 4, 5, 6, 7, 8, 8, 8]
+
+
+def test_prefix_lm_causal_vectors_fixture():
+    m = masks.prefix_lm_causal(8, 3)
+    assert not m.causal
+    assert (m.uts[:3] == 8).all()
+    assert m.uts[3:].tolist() == [0, 0, 0, 0, 0]
+    assert m.ute[3:].tolist() == [3, 4, 5, 6, 7]
+
+
+def test_empty_interval_convention_is_n():
+    # rust normalizes empty intervals to [n, n); python must match
+    for m in [masks.causal(16), masks.full(16), masks.sliding_window(16, 20)]:
+        empty = m.lts >= m.lte
+        assert (m.lts[empty] == 16).all() and (m.lte[empty] == 16).all()

@@ -1,0 +1,206 @@
+"""Pallas FlashMask kernel vs pure-jnp oracles — the core L1 signal.
+
+Three-way contract for every mask type:
+  1. allclose  vs dense softmax attention (semantic correctness)
+  2. bitwise   vs the same kernel with skipping disabled (paper §4.4:
+     skipping a fully-masked tile is an exact no-op)
+  3. bitwise   vs ref.blocked_attention (no-skip FA2 oracle)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import masks
+from compile.kernels import flashmask as fm
+from compile.kernels import ref
+
+MASK_NAMES = list(masks.MASK_BUILDERS(64).keys())
+
+
+def rand_qkv(rng, shape):
+    return (
+        jnp.asarray(rng.standard_normal(shape), jnp.float32),
+        jnp.asarray(rng.standard_normal(shape), jnp.float32),
+        jnp.asarray(rng.standard_normal(shape), jnp.float32),
+    )
+
+
+def run_kernel(m, q, k, v, br, bc, skip=True):
+    vec = lambda a: jnp.asarray(a)[None]
+    return fm.flashmask_attention(
+        q[None, None], k[None, None], v[None, None],
+        vec(m.lts), vec(m.lte), vec(m.uts), vec(m.ute),
+        causal=m.causal, br=br, bc=bc, skip=skip,
+    )[0, 0]
+
+
+@pytest.mark.parametrize("name", MASK_NAMES)
+def test_forward_allclose_dense(name):
+    n, d, br, bc = 128, 32, 32, 32
+    m = masks.MASK_BUILDERS(n, seed=7)[name]
+    rng = np.random.default_rng(0)
+    q, k, v = rand_qkv(rng, (n, d))
+    o = run_kernel(m, q, k, v, br, bc)
+    o_ref, _ = ref.dense_attention(q, k, v, jnp.asarray(m.dense_bias()))
+    np.testing.assert_allclose(o, o_ref, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("name", MASK_NAMES)
+def test_skip_is_bitwise_noop(name):
+    n, d, br, bc = 128, 32, 32, 32
+    m = masks.MASK_BUILDERS(n, seed=8)[name]
+    rng = np.random.default_rng(1)
+    q, k, v = rand_qkv(rng, (n, d))
+    o_skip = run_kernel(m, q, k, v, br, bc, skip=True)
+    o_noskip = run_kernel(m, q, k, v, br, bc, skip=False)
+    assert (np.asarray(o_skip) == np.asarray(o_noskip)).all()
+
+
+@pytest.mark.parametrize("name", MASK_NAMES)
+def test_noskip_matches_blocked_oracle(name):
+    """Tight (1-ULP-scale) agreement with the independent FA2 oracle.
+
+    Not bitwise: the oracle is a *separately compiled* XLA program, so
+    matmul reduction order may differ by scheduling.  The paper's
+    bit-exactness claim (skip == no-skip within one kernel) is covered
+    by ``test_skip_is_bitwise_noop``.
+    """
+    n, d, br, bc = 128, 32, 32, 32
+    m = masks.MASK_BUILDERS(n, seed=9)[name]
+    rng = np.random.default_rng(2)
+    q, k, v = rand_qkv(rng, (n, d))
+    o = run_kernel(m, q, k, v, br, bc, skip=False)
+    o_blk, _ = ref.blocked_attention(q, k, v, jnp.asarray(m.dense_bias()), br, bc)
+    np.testing.assert_allclose(o, o_blk, atol=1e-6, rtol=1e-6)
+
+
+def test_batched_heads_and_per_sample_masks():
+    n, d, b, h, br, bc = 64, 16, 3, 2, 16, 16
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.standard_normal((b, h, n, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, h, n, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, h, n, d)), jnp.float32)
+    ms = [masks.causal_document(n, [n // 2, n // 2]),
+          masks.causal(n),
+          masks.sliding_window(n, 8)]
+    stack = lambda f: jnp.stack([jnp.asarray(f(m)) for m in ms])
+    o = fm.flashmask_attention(
+        q, k, v, stack(lambda m: m.lts), stack(lambda m: m.lte),
+        stack(lambda m: m.uts), stack(lambda m: m.ute),
+        causal=True, br=br, bc=bc)
+    for bi, m in enumerate(ms):
+        bias = jnp.asarray(m.dense_bias())
+        for hi in range(h):
+            o_ref, _ = ref.dense_attention(q[bi, hi], k[bi, hi], v[bi, hi], bias)
+            np.testing.assert_allclose(o[bi, hi], o_ref, atol=2e-5, rtol=2e-5)
+
+
+def test_fully_masked_rows_zero():
+    # dropped queries attend to nothing -> output rows must be exactly 0
+    n, d = 64, 16
+    m = masks.qk_sparse(n, (16, 32), [])
+    rng = np.random.default_rng(4)
+    q, k, v = rand_qkv(rng, (n, d))
+    o = run_kernel(m, q, k, v, 16, 16)
+    assert (np.asarray(o)[16:32] == 0.0).all()
+
+
+def test_softmax_scale_override():
+    n, d = 64, 16
+    m = masks.causal(n)
+    rng = np.random.default_rng(5)
+    q, k, v = rand_qkv(rng, (n, d))
+    vec = lambda a: jnp.asarray(a)[None]
+    o = fm.flashmask_attention(
+        q[None, None], k[None, None], v[None, None],
+        vec(m.lts), vec(m.lte), vec(m.uts), vec(m.ute),
+        causal=True, br=16, bc=16, softmax_scale=0.5)[0, 0]
+    o_ref, _ = ref.dense_attention(q, k, v, jnp.asarray(m.dense_bias()),
+                                   softmax_scale=0.5)
+    np.testing.assert_allclose(o, o_ref, atol=2e-5, rtol=2e-5)
+
+
+def test_block_minmax():
+    v = jnp.asarray(np.array([3, 1, 4, 1, 5, 9, 2, 6], np.int32))
+    mn, mx = fm.block_minmax(v, 4)
+    assert mn.tolist() == [1, 2] and mx.tolist() == [4, 9]
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n_exp=st.sampled_from([64, 128]),
+    d=st.sampled_from([8, 16, 32]),
+    blk=st.sampled_from([16, 32]),
+    name=st.sampled_from(MASK_NAMES),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_shape_mask_sweep(n_exp, d, blk, name, seed):
+    n = n_exp
+    if blk > n:
+        blk = n
+    m = masks.MASK_BUILDERS(n, seed=seed)[name]
+    rng = np.random.default_rng(seed)
+    q, k, v = rand_qkv(rng, (n, d))
+    o = run_kernel(m, q, k, v, blk, blk)
+    o_ref, _ = ref.dense_attention(q, k, v, jnp.asarray(m.dense_bias()))
+    np.testing.assert_allclose(o, o_ref, atol=3e-5, rtol=3e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    br=st.sampled_from([16, 32, 64]),
+    bc=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_rectangular_tiles(br, bc, seed):
+    n, d = 128, 16
+    m = masks.MASK_BUILDERS(n, seed=seed)["causal_document"]
+    rng = np.random.default_rng(seed)
+    q, k, v = rand_qkv(rng, (n, d))
+    o = run_kernel(m, q, k, v, br, bc)
+    o_ref, _ = ref.dense_attention(q, k, v, jnp.asarray(m.dense_bias()))
+    np.testing.assert_allclose(o, o_ref, atol=3e-5, rtol=3e-5)
+
+
+def test_bf16_inputs():
+    """The paper benchmarks BF16; interpret mode must handle it too."""
+    n, d = 128, 32
+    m = masks.MASK_BUILDERS(n, seed=13)["causal_document"]
+    rng = np.random.default_rng(6)
+    q, k, v = (jnp.asarray(rng.standard_normal((n, d)), jnp.bfloat16) for _ in range(3))
+    o = run_kernel(m, q, k, v, 32, 32)
+    assert o.dtype == jnp.bfloat16
+    o_ref, _ = ref.dense_attention(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        jnp.asarray(m.dense_bias()))
+    np.testing.assert_allclose(
+        o.astype(jnp.float32), o_ref, atol=3e-2, rtol=3e-2)
+
+
+def test_paper_tile_shape_smoke():
+    """One case at the paper's 128x128 tiling and a longer sequence."""
+    n, d = 512, 64
+    m = masks.MASK_BUILDERS(n, seed=14)["share_question"]
+    rng = np.random.default_rng(7)
+    q, k, v = rand_qkv(rng, (n, d))
+    o = run_kernel(m, q, k, v, 128, 128)
+    o_ref, _ = ref.dense_attention(q, k, v, jnp.asarray(m.dense_bias()))
+    np.testing.assert_allclose(o, o_ref, atol=5e-5, rtol=5e-5)
+
+
+def test_stats_independent_of_values():
+    """Mask classification must not depend on Q/K/V values: two runs
+    with different inputs produce outputs differing everywhere except
+    fully-masked rows, never NaN."""
+    n, d = 128, 16
+    m = masks.MASK_BUILDERS(n, seed=15)["qk_sparse"]
+    rng = np.random.default_rng(8)
+    q1, k1, v1 = rand_qkv(rng, (n, d))
+    q2, k2, v2 = rand_qkv(rng, (n, d))
+    o1 = run_kernel(m, q1, k1, v1, 32, 32)
+    o2 = run_kernel(m, q2, k2, v2, 32, 32)
+    assert np.isfinite(np.asarray(o1)).all()
+    assert np.isfinite(np.asarray(o2)).all()

@@ -1,0 +1,169 @@
+"""Mask-builder semantics vs hand-written dense oracles."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import masks
+
+
+def brute_allowed(n, pred):
+    return np.array([[bool(pred(i, j)) for j in range(n)] for i in range(n)])
+
+
+def test_full():
+    m = masks.full(8)
+    assert m.dense_allowed().all()
+
+
+def test_causal():
+    m = masks.causal(8)
+    want = brute_allowed(8, lambda i, j: i >= j)
+    assert (m.dense_allowed() == want).all()
+
+
+def test_sliding_window():
+    n, w = 16, 4
+    m = masks.sliding_window(n, w)
+    want = brute_allowed(n, lambda i, j: j <= i < j + w)
+    assert (m.dense_allowed() == want).all()
+
+
+def test_causal_document():
+    n, lens = 12, [5, 4, 3]
+    m = masks.causal_document(n, lens)
+    doc = np.repeat(np.arange(3), lens)
+    want = brute_allowed(n, lambda i, j: i >= j and doc[i] == doc[j])
+    assert (m.dense_allowed() == want).all()
+
+
+def test_document_bidirectional():
+    n, lens = 12, [5, 4, 3]
+    m = masks.document(n, lens)
+    doc = np.repeat(np.arange(3), lens)
+    want = brute_allowed(n, lambda i, j: doc[i] == doc[j])
+    assert (m.dense_allowed() == want).all()
+
+
+def test_share_question():
+    # doc0: q=3, answers [2, 3]; doc1: q=2, answers [2]
+    n = 12
+    m = masks.share_question(n, [(3, [2, 3]), (2, [2])])
+    seg = {}  # token -> (doc, part) where part 0=question else answer id
+    lay = [(0, 0)] * 3 + [(0, 1)] * 2 + [(0, 2)] * 3 + [(1, 0)] * 2 + [(1, 1)] * 2
+
+    def pred(i, j):
+        di, pi = lay[i]
+        dj, pj = lay[j]
+        if i < j or di != dj:
+            return False
+        return pj == 0 or pi == pj
+
+    want = brute_allowed(n, pred)
+    assert (m.dense_allowed() == want).all()
+
+
+def test_global_sliding_window():
+    n, g, w = 16, 3, 4
+    m = masks.global_sliding_window(n, g, w)
+    want = brute_allowed(n, lambda i, j: i >= j and (j < g or i < j + w))
+    assert (m.dense_allowed() == want).all()
+
+
+def test_causal_blockwise():
+    n, lens = 12, [4, 4, 4]  # last block is the test example
+    m = masks.causal_blockwise(n, lens)
+    blk = np.repeat(np.arange(3), lens)
+
+    def pred(i, j):
+        if i < j:
+            return False
+        # test block sees everything; demo blocks see only themselves
+        return blk[i] == 2 or blk[i] == blk[j]
+
+    want = brute_allowed(n, pred)
+    assert (m.dense_allowed() == want).all()
+
+
+def test_prefix_lm_causal():
+    n, p = 12, 5
+    m = masks.prefix_lm_causal(n, p)
+    want = brute_allowed(n, lambda i, j: j <= i or (i < p and j < p))
+    assert (m.dense_allowed() == want).all()
+
+
+def test_prefix_lm_document():
+    n, lens, pres = 12, [7, 5], [3, 2]
+    m = masks.prefix_lm_document(n, lens, pres)
+    doc = np.repeat(np.arange(2), lens)
+    starts = [0, 7]
+
+    def pred(i, j):
+        if doc[i] != doc[j]:
+            return False
+        ds = starts[doc[i]]
+        pe = ds + pres[doc[i]]
+        return j <= i or (i < pe and j < pe)
+
+    want = brute_allowed(n, pred)
+    assert (m.dense_allowed() == want).all()
+
+
+def test_qk_sparse():
+    n = 16
+    m = masks.qk_sparse(n, (5, 8), [2, 11])
+
+    def pred(i, j):
+        if i < j or 5 <= i < 8 or j in (2, 11):
+            return False
+        return True
+
+    want = brute_allowed(n, pred)
+    assert (m.dense_allowed() == want).all()
+
+
+def test_hash_sparse_is_chunked_causal():
+    m = masks.hash_sparse(12, [6, 6])
+    m2 = masks.causal_document(12, [6, 6])
+    assert (m.dense_allowed() == m2.dense_allowed()).all()
+
+
+def test_random_eviction():
+    n = 32
+    m = masks.random_eviction(n, seed=3)
+    allowed = m.dense_allowed()
+    # causal + once a column goes invisible it stays invisible
+    for j in range(n):
+        col = allowed[:, j]
+        assert not col[:j].any()
+        vis = np.where(col)[0]
+        if len(vis):
+            assert vis[0] == j  # diagonal always visible
+            assert (np.diff(vis) == 1).all()  # contiguous visibility
+
+
+def test_validate_rejects_bad():
+    import dataclasses
+    m = masks.causal(8)
+    bad = dataclasses.replace(m, lts=np.full(8, 9, np.int32))
+    with pytest.raises(AssertionError):
+        bad.validate()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 10_000))
+def test_sample_doc_lens_property(k, seed):
+    rng = np.random.default_rng(seed)
+    lens = masks.sample_doc_lens(64, k, rng, min_len=2)
+    assert len(lens) == k and sum(lens) == 64 and min(lens) >= 2
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_all_builders_validate_and_sparsity_bounded(seed):
+    for name, m in masks.MASK_BUILDERS(64, seed=seed).items():
+        m.validate()
+        rho = m.block_sparsity(16, 16)
+        assert 0.0 <= rho <= 1.0, name
+        if name == "full":
+            assert rho == 0.0

@@ -1,0 +1,112 @@
+"""L2 model: shapes, loss behaviour, attention-variant equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import masks
+from compile import model as M
+
+CFG = M.ModelConfig(d_model=64, n_layers=2, n_heads=2, d_head=32,
+                    d_ff=128, max_seq=128, br=32, bc=32)
+
+
+def make_batch(b=2, seed=0):
+    n = CFG.max_seq
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(0, CFG.vocab, (b, n)), jnp.int32)
+    targets = jnp.asarray(rng.integers(0, CFG.vocab, (b, n)), jnp.int32)
+    loss_mask = jnp.ones((b, n), jnp.float32)
+    m = masks.causal_document(n, [40, 60, 28])
+    vec = lambda a: jnp.tile(jnp.asarray(a)[None], (b, 1))
+    return tokens, targets, loss_mask, (vec(m.lts), vec(m.lte), vec(m.uts), vec(m.ute))
+
+
+def test_param_specs_count_matches_n_params():
+    total = sum(int(np.prod(s)) for _, s in M.param_specs(CFG))
+    assert total == CFG.n_params
+
+
+def test_forward_shape_and_finite():
+    leaves = M.init_params(CFG, jax.random.PRNGKey(0))
+    tokens, _, _, mv = make_batch()
+    logits = M.forward(CFG, leaves, tokens, mv)
+    assert logits.shape == (2, CFG.max_seq, CFG.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_initial_loss_near_uniform():
+    leaves = M.init_params(CFG, jax.random.PRNGKey(0))
+    loss = M.loss_fn(CFG, leaves, *make_batch()[:3], make_batch()[3])
+    assert abs(float(loss) - np.log(CFG.vocab)) < 0.7
+
+
+def test_loss_mask_excludes_tokens():
+    leaves = M.init_params(CFG, jax.random.PRNGKey(0))
+    tokens, targets, lm, mv = make_batch()
+    full = M.loss_fn(CFG, leaves, tokens, targets, lm, mv)
+    half = M.loss_fn(CFG, leaves, tokens, targets,
+                     lm.at[:, : CFG.max_seq // 2].set(0.0), mv)
+    assert float(full) != float(half)
+
+
+def test_train_step_reduces_loss():
+    leaves = M.init_params(CFG, jax.random.PRNGKey(0))
+    step = jax.jit(M.make_train_step(CFG, M.OptConfig(lr=1e-3)))
+    zeros = [jnp.zeros_like(p) for p in leaves]
+    tokens, targets, lm, mv = make_batch()
+    m, v = zeros, [jnp.zeros_like(p) for p in leaves]
+    n = len(leaves)
+    losses = []
+    for t in range(8):
+        out = step(*leaves, *m, *v, jnp.int32(t), tokens, targets, lm, *mv)
+        losses.append(float(out[0]))
+        leaves = list(out[1 : 1 + n])
+        m = list(out[1 + n : 1 + 2 * n])
+        v = list(out[1 + 2 * n :])
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_flashmask_vs_densemask_bitwise():
+    """Paper Fig. 3 (deterministic): skip on/off must match exactly."""
+    tokens, targets, lm, mv = make_batch()
+    cfg_fm = M.ModelConfig(**{**CFG.__dict__, "attention": "flashmask"})
+    cfg_dm = M.ModelConfig(**{**CFG.__dict__, "attention": "densemask"})
+    leaves = M.init_params(CFG, jax.random.PRNGKey(1))
+    l1 = M.loss_fn(cfg_fm, leaves, tokens, targets, lm, mv)
+    l2 = M.loss_fn(cfg_dm, leaves, tokens, targets, lm, mv)
+    assert np.asarray(l1).tobytes() == np.asarray(l2).tobytes()
+
+
+def test_flashmask_vs_dense_allclose():
+    tokens, targets, lm, mv = make_batch()
+    cfg_d = M.ModelConfig(**{**CFG.__dict__, "attention": "dense"})
+    leaves = M.init_params(CFG, jax.random.PRNGKey(1))
+    l1 = M.loss_fn(CFG, leaves, tokens, targets, lm, mv)
+    l2 = M.loss_fn(cfg_d, leaves, tokens, targets, lm, mv)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_eval_step_matches_loss_fn():
+    leaves = M.init_params(CFG, jax.random.PRNGKey(0))
+    tokens, targets, lm, mv = make_batch()
+    ev = jax.jit(M.make_eval_step(CFG))
+    out = ev(*leaves, tokens, targets, lm, *mv)
+    want = M.loss_fn(CFG, leaves, tokens, targets, lm, mv)
+    np.testing.assert_allclose(float(out[0]), float(want), rtol=1e-6)
+
+
+def test_init_deterministic():
+    a = M.make_init(CFG)(jnp.asarray([7], jnp.int32))
+    b = M.make_init(CFG)(jnp.asarray([7], jnp.int32))
+    for x, y in zip(a, b):
+        assert (np.asarray(x) == np.asarray(y)).all()
+
+
+@pytest.mark.parametrize("preset", sorted(M.PRESETS))
+def test_presets_wellformed(preset):
+    cfg = M.PRESETS[preset]
+    assert cfg.d_model == cfg.n_heads * cfg.d_head or cfg.n_heads * cfg.d_head > 0
+    assert cfg.max_seq % cfg.br == 0 and cfg.max_seq % cfg.bc == 0
+    assert cfg.n_params > 0

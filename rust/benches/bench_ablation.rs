@@ -1,0 +1,121 @@
+//! `cargo bench --bench bench_ablation`
+//!
+//! Ablations of FLASHMASK's design choices (DESIGN.md §8):
+//!
+//! 1. tile-size sweep — Br/Bc trade partial-tile overhead against skip
+//!    granularity (the paper fixes 128×128 on A100);
+//! 2. min/max precompute on/off — classify tiles from the precomputed
+//!    8 vectors vs re-scanning the raw interval vectors per tile
+//!    (the paper's "Preprocessing" step is exactly this saving);
+//! 3. skip on/off — the headline mechanism, isolated.
+
+use flashmask::attention::{flash, AttnConfig};
+use flashmask::mask::{builders, BlockTable};
+use flashmask::util::bench::{bench, BenchOpts};
+use flashmask::util::rng::Rng;
+use flashmask::util::table::Table;
+use std::time::Instant;
+
+fn main() {
+    let n = std::env::var("FM_BENCH_N").ok().and_then(|v| v.parse().ok()).unwrap_or(1024usize);
+    let d = 64;
+    let opts = BenchOpts { warmup: 1, iters: 5, max_seconds: 10.0 };
+    let mut rng = Rng::new(5);
+    let mut mk = || (0..n * d).map(|_| rng.normal_f32() * 0.5).collect::<Vec<f32>>();
+    let (q, k, v) = (mk(), mk(), mk());
+    let mask = builders::causal_document(n, &[n / 4; 4]);
+
+    // 1. tile-size sweep
+    let mut t = Table::new(vec!["Br", "Bc", "rho(block)", "fw ms", "fw+bw ms"])
+        .title(format!("ablation: tile size sweep (causal-document, N={n}, d={d})"));
+    for &(br, bc) in &[(16usize, 16usize), (32, 32), (64, 64), (128, 128), (32, 128), (128, 32)] {
+        if br > n || bc > n {
+            continue;
+        }
+        let cfg = AttnConfig::new(br, bc, d);
+        let table = BlockTable::build(&mask, bc);
+        let fw = bench("fw", opts, || {
+            let _ = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+        });
+        let fwbw = bench("fwbw", opts, || {
+            let (f, _) = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+            let _ = flash::flashmask_backward(
+                &q, &k, &v, &f.o, &q, &f.lse, n, d, &mask, &table, cfg, true,
+            );
+        });
+        t.row(vec![
+            br.to_string(),
+            bc.to_string(),
+            format!("{:.2}", mask.block_sparsity(br, bc)),
+            format!("{:.2}", fw.median_ms),
+            format!("{:.2}", fwbw.median_ms),
+        ]);
+    }
+    t.print();
+
+    // 2. min/max precompute: build cost vs per-call classification saving
+    let mut t = Table::new(vec!["what", "time"])
+        .title("ablation: min/max preprocessing (paper Alg. 1 line 4)");
+    let t0 = Instant::now();
+    for _ in 0..1000 {
+        let _ = std::hint::black_box(BlockTable::build(&mask, 64));
+    }
+    t.row(vec!["BlockTable::build x1000".into(), format!("{:.2} ms", t0.elapsed().as_secs_f64() * 1e3)]);
+    let table = BlockTable::build(&mask, 64);
+    let t0 = Instant::now();
+    let mut acc = 0usize;
+    for _ in 0..1000 {
+        let (f, p, u) = table.census(&mask, 64);
+        acc += f + p + u;
+    }
+    t.row(vec![
+        format!("classify all tiles x1000 (census {acc})"),
+        format!("{:.2} ms", t0.elapsed().as_secs_f64() * 1e3),
+    ]);
+    // naive: re-scan raw vectors per tile (what skipping the
+    // preprocessing step would cost inside the kernel)
+    let t0 = Instant::now();
+    let mut naive = 0usize;
+    for _ in 0..1000 {
+        for bi in 0..n / 64 {
+            for bj in 0..n / 64 {
+                let cols = bj * 64..(bj + 1) * 64;
+                let lts_max = cols.clone().map(|j| mask.lts[j]).max().unwrap();
+                let lte_min = cols.clone().map(|j| mask.lte[j]).min().unwrap();
+                let fully = (bi * 64) as i32 >= lts_max && ((bi + 1) * 64) as i32 <= lte_min;
+                naive += usize::from(fully);
+            }
+        }
+    }
+    t.row(vec![
+        format!("naive per-tile rescan x1000 ({naive} skips)"),
+        format!("{:.2} ms", t0.elapsed().as_secs_f64() * 1e3),
+    ]);
+    t.print();
+
+    // 3. skip on/off isolated, across sparsity levels
+    let mut t = Table::new(vec!["docs", "rho", "skip fw ms", "no-skip fw ms", "speedup"])
+        .title("ablation: block skipping isolated (the paper's mechanism)");
+    for docs in [1usize, 2, 4, 8, 16] {
+        if n / docs < 1 {
+            continue;
+        }
+        let mask = builders::causal_document(n, &vec![n / docs; docs]);
+        let cfg = AttnConfig::new(64, 64, d);
+        let table = BlockTable::build(&mask, 64);
+        let on = bench("on", opts, || {
+            let _ = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+        });
+        let off = bench("off", opts, || {
+            let _ = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, false);
+        });
+        t.row(vec![
+            docs.to_string(),
+            format!("{:.2}", mask.block_sparsity(64, 64)),
+            format!("{:.2}", on.median_ms),
+            format!("{:.2}", off.median_ms),
+            format!("{:.2}x", off.median_ms / on.median_ms),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,51 @@
+//! `cargo bench --bench bench_e2e_throughput`
+//!
+//! Regenerates paper Fig. 2 (end-to-end training throughput across
+//! sequence lengths and tasks, FLASHMASK vs dense baselines — analytic
+//! A800-scale model with OOM cutoffs) and Fig. 6 (sparsity histogram of
+//! the synthetic training data).
+//!
+//! A *measured* end-to-end run on this machine's PJRT CPU backend is
+//! also performed when artifacts are present (a short train for each
+//! attention variant), demonstrating the real stack.
+
+use flashmask::coordinator::{Batcher, Trainer, TrainerOptions};
+use flashmask::reports;
+use flashmask::runtime::Runtime;
+use flashmask::workload::docgen::Task;
+use std::path::Path;
+
+fn main() {
+    reports::e2e_report(11);
+
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("\n(artifacts/ missing — skipping measured PJRT section; run `make artifacts`)");
+        return;
+    }
+    println!("\n== measured PJRT CPU end-to-end (this machine) ==");
+    let rt = match Runtime::open(dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("runtime unavailable: {e:#}");
+            return;
+        }
+    };
+    let steps = std::env::var("FM_E2E_STEPS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4usize);
+    for variant in ["flashmask", "densemask"] {
+        let mut trainer = Trainer::new(
+            &rt,
+            TrainerOptions { variant: variant.into(), quiet: true, ..Default::default() },
+        )
+        .expect("trainer");
+        let mut batcher = Batcher::new(rt.manifest.model.max_seq, rt.manifest.batch, Task::Sft, 5);
+        let log = trainer.train(&mut batcher, steps).expect("train");
+        println!(
+            "{variant:>10}: {} steps, {:>7.0} tok/s, final loss {:.4}",
+            log.steps, log.tokens_per_s, log.losses.last().unwrap()
+        );
+    }
+}

@@ -1,0 +1,18 @@
+//! `cargo bench --bench bench_inference`
+//!
+//! Regenerates paper Tables 10–14 (appendix B): inference forward pass,
+//! FLASHMASK vs FlashInfer-like sparse BSR (varying mask block size R/C)
+//! and FlashInfer-like dense-mask baselines.  The R/C sweep reproduces
+//! the paper's finding that BSR only becomes competitive at R=C >= 16,
+//! while FLASHMASK needs no block-aligned masks at all.
+
+use flashmask::reports;
+use flashmask::util::bench::BenchOpts;
+
+fn main() {
+    let opts = BenchOpts { warmup: 1, iters: 5, max_seconds: 12.0 };
+    for n in [512usize, 1024, 2048] {
+        println!("\n######## sequence length {n} ########");
+        reports::inference_report(n, 64, opts, 7);
+    }
+}

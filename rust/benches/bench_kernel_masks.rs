@@ -1,0 +1,25 @@
+//! `cargo bench --bench bench_kernel_masks`
+//!
+//! Regenerates paper Fig. 5 / Fig. 8 and Tables 4–9: kernel speed across
+//! the 12 mask cases, FLASHMASK vs FlexAttention-like vs dense-mask.
+//! Measured CPU-engine section at a CPU-feasible N, then the calibrated
+//! A100-model projection at the paper's 8K/32K/128K with paper anchors.
+//!
+//! Env knobs: FM_BENCH_N (default 1024), FM_BENCH_ITERS (default 5).
+
+use flashmask::reports;
+use flashmask::util::bench::BenchOpts;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let n = env_usize("FM_BENCH_N", 1024);
+    let iters = env_usize("FM_BENCH_ITERS", 5);
+    let opts = BenchOpts { warmup: 1, iters, max_seconds: 15.0 };
+    for head_dim in [128usize, 64] {
+        println!("\n################ head dim {head_dim} ################");
+        reports::kernel_mask_report(n, &[8192, 32768, 131072], head_dim, opts);
+    }
+}

@@ -1,0 +1,52 @@
+//! `cargo bench --bench bench_memory`
+//!
+//! Regenerates paper Table 2, Fig. 4(b) and Fig. 7: training memory
+//! breakdown per sequence length (model), the O(N) vs O(N²) mask
+//! storage curve (exact arithmetic), and *measured* host-side bytes of
+//! both representations on this machine as a sanity check.
+
+use flashmask::mask::builders;
+use flashmask::perf::memory_model::{dense_mask_bytes, flashmask_bytes};
+use flashmask::reports;
+use flashmask::util::table::Table;
+
+fn main() {
+    reports::memory_report();
+
+    // Fig 4(b): mask memory vs sequence length (log-scale in the paper)
+    let mut t = Table::new(vec!["seq", "dense bf16", "flashmask", "ratio"])
+        .title("attention-mask memory (paper Fig 4b)");
+    let mut n = 4096usize;
+    while n <= 1024 * 1024 {
+        let d = dense_mask_bytes(n);
+        let f = flashmask_bytes(n, 128);
+        t.row(vec![
+            format!("{}K", n / 1024),
+            human(d),
+            human(f),
+            format!("{:.0}x", d / f),
+        ]);
+        n *= 4;
+    }
+    t.print();
+
+    // measured: actual allocation sizes of the rust representations
+    let n = 65536;
+    let m = builders::causal_document(n, &[n / 2, n / 4, n / 4]);
+    println!(
+        "\nmeasured at N={n}: FlashMask repr {} bytes, dense bool oracle would be {} bytes",
+        m.repr_bytes(),
+        n * n
+    );
+    assert!(m.repr_bytes() < 2 * 1024 * 1024);
+}
+
+fn human(b: f64) -> String {
+    if b >= 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.2} MB", b / 1e6)
+    } else {
+        format!("{:.1} KB", b / 1e3)
+    }
+}

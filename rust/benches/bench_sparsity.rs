@@ -1,0 +1,18 @@
+//! `cargo bench --bench bench_sparsity`
+//!
+//! Regenerates paper Fig. 4(a): kernel latency (fwd+bwd) vs block
+//! sparsity for Causal Document / Share Question / Document masks —
+//! measured on the CPU engine (latency must fall linearly as ρ rises)
+//! plus the A100-model projection at paper scale.
+
+use flashmask::reports;
+use flashmask::util::bench::BenchOpts;
+
+fn main() {
+    let n = std::env::var("FM_BENCH_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1024usize);
+    let opts = BenchOpts { warmup: 1, iters: 5, max_seconds: 12.0 };
+    reports::sparsity_report(n, 32, opts, 7);
+}

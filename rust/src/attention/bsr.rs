@@ -1,0 +1,239 @@
+//! FlashInfer-like block-sparse-row (BSR) attention baseline
+//! (paper appendix B, Tables 10–14).
+//!
+//! FlashInfer's `BlockSparseAttentionWrapper` takes a mask at block
+//! granularity `R x C`: a block is either entirely visible or entirely
+//! masked (the paper adapts its datasets so document boundaries land on
+//! multiples of 64).  Small `R/C` fragments the work into many tiny
+//! blocks — the padded-batch / tiny-gemm inefficiency the paper's
+//! Tables 12–14 show — which this CPU engine reproduces naturally: the
+//! per-block loop overhead and degenerate gemm shapes dominate at
+//! `R = C = 1` and amortize away by `R = C = 64`.
+
+use super::gemm;
+use super::{AttnOutput, TileStats};
+use anyhow::{ensure, Result};
+
+/// CSR-of-blocks mask at granularity `rc x rc`.
+pub struct BsrMask {
+    pub rc: usize,
+    pub n_blocks: usize, // per side
+    /// CSR: for row-block `bi`, visible column blocks are
+    /// `cols[row_ptr[bi]..row_ptr[bi+1]]`.
+    pub row_ptr: Vec<usize>,
+    pub cols: Vec<usize>,
+}
+
+impl BsrMask {
+    /// Build from a predicate, requiring block alignment: every
+    /// `rc x rc` block must be uniformly visible or uniformly masked.
+    pub fn build(
+        pred: &(dyn Fn(usize, usize) -> bool + Sync),
+        n: usize,
+        rc: usize,
+    ) -> Result<BsrMask> {
+        ensure!(n % rc == 0, "sequence {n} not divisible by block size {rc}");
+        let nb = n / rc;
+        let mut row_ptr = Vec::with_capacity(nb + 1);
+        let mut cols = Vec::new();
+        row_ptr.push(0);
+        for bi in 0..nb {
+            for bj in 0..nb {
+                let first = pred(bi * rc, bj * rc);
+                for i in bi * rc..(bi + 1) * rc {
+                    for j in bj * rc..(bj + 1) * rc {
+                        ensure!(
+                            pred(i, j) == first,
+                            "mask not aligned to {rc}-blocks at ({i},{j})"
+                        );
+                    }
+                }
+                if first {
+                    cols.push(bj);
+                }
+            }
+            row_ptr.push(cols.len());
+        }
+        Ok(BsrMask { rc, n_blocks: nb, row_ptr, cols })
+    }
+
+    pub fn nnz_blocks(&self) -> usize {
+        self.cols.len()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz_blocks() as f64 / (self.n_blocks * self.n_blocks) as f64
+    }
+
+    /// Index storage bytes (row_ptr + cols as i32 — FlashInfer's BSR ABI).
+    pub fn bytes(&self) -> usize {
+        4 * (self.row_ptr.len() + self.cols.len())
+    }
+}
+
+/// BSR sparse attention forward: iterate only visible blocks, online
+/// softmax per row-block of `rc` rows.  No element masking is ever
+/// needed (block-aligned contract).
+pub fn bsr_forward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    bsr: &BsrMask,
+    scale: f32,
+) -> (AttnOutput, TileStats) {
+    let rc = bsr.rc;
+    let nb = bsr.n_blocks;
+    let mut out = vec![0f32; n * d];
+    let mut lse = vec![f32::NEG_INFINITY; n];
+    let mut stats = TileStats { tiles_total: nb * nb, ..Default::default() };
+
+    let mut s = vec![0f32; rc * rc];
+    let mut o_acc = vec![0f32; rc * d];
+    let mut m_run = vec![f32::NEG_INFINITY; rc];
+    let mut l_run = vec![0f32; rc];
+    let mut alpha = vec![0f32; rc];
+
+    for bi in 0..nb {
+        let row0 = bi * rc;
+        o_acc.fill(0.0);
+        m_run.fill(f32::NEG_INFINITY);
+        l_run.fill(0.0);
+        let blocks = &bsr.cols[bsr.row_ptr[bi]..bsr.row_ptr[bi + 1]];
+        stats.tiles_skipped += nb - blocks.len();
+        for &bj in blocks {
+            let col0 = bj * rc;
+            s.fill(0.0);
+            gemm::matmul_nt_acc(
+                &q[row0 * d..(row0 + rc) * d],
+                &k[col0 * d..(col0 + rc) * d],
+                rc,
+                d,
+                rc,
+                &mut s,
+            );
+            stats.macs += (rc * rc * d) as u64;
+            for sv in s.iter_mut() {
+                *sv *= scale;
+            }
+            for x in 0..rc {
+                let srow = &mut s[x * rc..(x + 1) * rc];
+                let mut row_max = f32::NEG_INFINITY;
+                for &sv in srow.iter() {
+                    row_max = row_max.max(sv);
+                }
+                let m_new = m_run[x].max(row_max);
+                let a = if m_run[x].is_finite() { (m_run[x] - m_new).exp() } else { 0.0 };
+                let mut row_sum = 0f32;
+                for sv in srow.iter_mut() {
+                    let p = (*sv - m_new).exp();
+                    *sv = p;
+                    row_sum += p;
+                }
+                l_run[x] = a * l_run[x] + row_sum;
+                m_run[x] = m_new;
+                alpha[x] = a;
+            }
+            gemm::scale_rows(&mut o_acc, &alpha, rc, d);
+            gemm::matmul_nn_acc(&s, &v[col0 * d..(col0 + rc) * d], rc, rc, d, &mut o_acc);
+            stats.macs += (rc * rc * d) as u64;
+            stats.tiles_unmasked += 1;
+        }
+        for x in 0..rc {
+            let i = row0 + x;
+            if l_run[x] > 0.0 {
+                let inv = 1.0 / l_run[x];
+                for dd in 0..d {
+                    out[i * d + dd] = o_acc[x * d + dd] * inv;
+                }
+                lse[i] = m_run[x] + l_run[x].ln();
+            }
+        }
+    }
+    (AttnOutput { o: out, lse }, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::rand_vec;
+    use crate::attention::dense;
+    use crate::mask::builders;
+    use crate::util::rng::Rng;
+
+    fn aligned_doc_mask(n: usize, rc: usize) -> crate::mask::FlashMask {
+        // two docs with lengths divisible by rc
+        let half = (n / 2 / rc) * rc;
+        builders::document(n, &[half, n - half])
+    }
+
+    #[test]
+    fn bsr_matches_dense_on_aligned_doc_mask() {
+        let (n, d, rc) = (128, 8, 16);
+        let mask = aligned_doc_mask(n, rc);
+        let pred = |i: usize, j: usize| mask.allowed(i, j);
+        let bsr = BsrMask::build(&pred, n, rc).unwrap();
+        let mut rng = Rng::new(1);
+        let q = rand_vec(n * d, &mut rng);
+        let k = rand_vec(n * d, &mut rng);
+        let v = rand_vec(n * d, &mut rng);
+        let (got, _) = bsr_forward(&q, &k, &v, n, d, &bsr, 0.35);
+        let want = dense::dense_forward(&q, &k, &v, n, d, &mask.dense_bias(), 0.35);
+        for (a, b) in got.o.iter().zip(&want.o) {
+            assert!((a - b).abs() < 2e-5);
+        }
+    }
+
+    #[test]
+    fn rejects_unaligned_mask() {
+        let n = 64;
+        let mask = builders::causal(n); // diagonal never block-aligned
+        let pred = |i: usize, j: usize| mask.allowed(i, j);
+        assert!(BsrMask::build(&pred, n, 16).is_err());
+    }
+
+    #[test]
+    fn sparsity_accounting() {
+        let n = 64;
+        let mask = aligned_doc_mask(n, 8);
+        let pred = |i: usize, j: usize| mask.allowed(i, j);
+        let bsr = BsrMask::build(&pred, n, 8).unwrap();
+        assert!((bsr.sparsity() - 0.5).abs() < 1e-12);
+        assert_eq!(bsr.nnz_blocks(), 32);
+    }
+
+    #[test]
+    fn same_result_across_block_sizes() {
+        let (n, d) = (128, 8);
+        let mask = aligned_doc_mask(n, 32);
+        let pred = |i: usize, j: usize| mask.allowed(i, j);
+        let mut rng = Rng::new(2);
+        let q = rand_vec(n * d, &mut rng);
+        let k = rand_vec(n * d, &mut rng);
+        let v = rand_vec(n * d, &mut rng);
+        let mut reference: Option<Vec<f32>> = None;
+        for rc in [1usize, 2, 4, 8, 16, 32] {
+            let bsr = BsrMask::build(&pred, n, rc).unwrap();
+            let (got, _) = bsr_forward(&q, &k, &v, n, d, &bsr, 0.3);
+            if let Some(r) = &reference {
+                for (a, b) in got.o.iter().zip(r) {
+                    assert!((a - b).abs() < 2e-5, "rc={rc}");
+                }
+            } else {
+                reference = Some(got.o);
+            }
+        }
+    }
+
+    #[test]
+    fn smaller_blocks_same_flops_more_blocks() {
+        let n = 128;
+        let mask = aligned_doc_mask(n, 32);
+        let pred = |i: usize, j: usize| mask.allowed(i, j);
+        let small = BsrMask::build(&pred, n, 4).unwrap();
+        let large = BsrMask::build(&pred, n, 32).unwrap();
+        // identical covered area, very different block counts
+        assert_eq!(small.nnz_blocks() * 16, large.nnz_blocks() * 1024);
+    }
+}

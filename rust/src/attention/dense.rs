@@ -1,0 +1,186 @@
+//! Vanilla O(N²) attention with a dense additive mask (paper Eq. 2) —
+//! the "vanilla attention" baseline of Fig. 2 and the semantic oracle
+//! for the blocked engines.
+
+use super::{AttnGrads, AttnOutput};
+
+/// Softmax attention with dense bias; row-major `[n, d]` inputs,
+/// `bias[n*n]` additive mask (0 / -inf).
+pub fn dense_forward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    bias: &[f32],
+    scale: f32,
+) -> AttnOutput {
+    assert_eq!(bias.len(), n * n);
+    let mut o = vec![0f32; n * d];
+    let mut lse = vec![f32::NEG_INFINITY; n];
+    let mut srow = vec![0f32; n];
+    for i in 0..n {
+        // S_i = q_i K^T * scale + bias_i
+        for j in 0..n {
+            let mut acc = 0f32;
+            for dd in 0..d {
+                acc += q[i * d + dd] * k[j * d + dd];
+            }
+            srow[j] = acc * scale + bias[i * n + j];
+        }
+        let m = srow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let m_safe = if m.is_finite() { m } else { 0.0 };
+        let mut l = 0f32;
+        for sv in srow.iter_mut() {
+            *sv = (*sv - m_safe).exp();
+            l += *sv;
+        }
+        if l > 0.0 {
+            let inv = 1.0 / l;
+            for j in 0..n {
+                let p = srow[j] * inv;
+                if p != 0.0 {
+                    for dd in 0..d {
+                        o[i * d + dd] += p * v[j * d + dd];
+                    }
+                }
+            }
+            lse[i] = m_safe + l.ln();
+        }
+    }
+    AttnOutput { o, lse }
+}
+
+/// Backward of [`dense_forward`] (textbook softmax-attention gradient).
+#[allow(clippy::too_many_arguments)]
+pub fn dense_backward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    o: &[f32],
+    do_: &[f32],
+    lse: &[f32],
+    n: usize,
+    d: usize,
+    bias: &[f32],
+    scale: f32,
+) -> AttnGrads {
+    let mut dq = vec![0f32; n * d];
+    let mut dk = vec![0f32; n * d];
+    let mut dv = vec![0f32; n * d];
+    let mut prow = vec![0f32; n];
+    for i in 0..n {
+        let l = lse[i];
+        if !l.is_finite() {
+            continue; // fully-masked row contributes nothing
+        }
+        // recompute P_i from lse (same trick as the kernels)
+        for j in 0..n {
+            let mut acc = 0f32;
+            for dd in 0..d {
+                acc += q[i * d + dd] * k[j * d + dd];
+            }
+            let s = acc * scale + bias[i * n + j];
+            prow[j] = (s - l).exp();
+        }
+        // D_i = dO_i . O_i
+        let mut dvec = 0f32;
+        for dd in 0..d {
+            dvec += do_[i * d + dd] * o[i * d + dd];
+        }
+        for j in 0..n {
+            let p = prow[j];
+            if p == 0.0 {
+                continue;
+            }
+            // dV_j += p * dO_i
+            // dP_ij = dO_i . V_j ; dS_ij = p (dP - D) scale
+            let mut dp = 0f32;
+            for dd in 0..d {
+                dv[j * d + dd] += p * do_[i * d + dd];
+                dp += do_[i * d + dd] * v[j * d + dd];
+            }
+            let ds = p * (dp - dvec) * scale;
+            for dd in 0..d {
+                dq[i * d + dd] += ds * k[j * d + dd];
+                dk[j * d + dd] += ds * q[i * d + dd];
+            }
+        }
+    }
+    AttnGrads { dq, dk, dv }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::rand_vec;
+    use crate::mask::builders;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn softmax_rows_sum_to_one_via_identity_v() {
+        // with V = all-ones, output rows must be exactly rows of ones
+        let n = 16;
+        let d = 4;
+        let mut rng = Rng::new(1);
+        let q = rand_vec(n * d, &mut rng);
+        let k = rand_vec(n * d, &mut rng);
+        let v = vec![1f32; n * d];
+        let mask = builders::causal(n);
+        let out = dense_forward(&q, &k, &v, n, d, &mask.dense_bias(), 0.5);
+        for i in 0..n {
+            for dd in 0..d {
+                assert!((out.o[i * d + dd] - 1.0).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn fully_masked_row_is_zero() {
+        let n = 8;
+        let d = 2;
+        let mut rng = Rng::new(2);
+        let q = rand_vec(n * d, &mut rng);
+        let k = rand_vec(n * d, &mut rng);
+        let v = rand_vec(n * d, &mut rng);
+        let mut bias = vec![0f32; n * n];
+        for j in 0..n {
+            bias[3 * n + j] = f32::NEG_INFINITY; // row 3 fully masked
+        }
+        let out = dense_forward(&q, &k, &v, n, d, &bias, 1.0);
+        assert!(out.o[3 * d..4 * d].iter().all(|&x| x == 0.0));
+        assert_eq!(out.lse[3], f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        let n = 12;
+        let d = 4;
+        let mut rng = Rng::new(3);
+        let q = rand_vec(n * d, &mut rng);
+        let k = rand_vec(n * d, &mut rng);
+        let v = rand_vec(n * d, &mut rng);
+        let mask = builders::causal_document(n, &[7, 5]);
+        let bias = mask.dense_bias();
+        let scale = 0.5f32;
+        let w = rand_vec(n * d, &mut rng);
+        let fwd = dense_forward(&q, &k, &v, n, d, &bias, scale);
+        let grads = dense_backward(&q, &k, &v, &fwd.o, &w, &fwd.lse, n, d, &bias, scale);
+        let loss = |q_: &[f32], k_: &[f32], v_: &[f32]| -> f32 {
+            dense_forward(q_, k_, v_, n, d, &bias, scale)
+                .o
+                .iter()
+                .zip(&w)
+                .map(|(a, b)| a * b)
+                .sum()
+        };
+        let fd_q = crate::attention::finite_diff_loss(|x| loss(x, &k, &v), &q, 1e-2);
+        for i in 0..n * d {
+            assert!((grads.dq[i] - fd_q[i]).abs() < 5e-3, "dq[{i}]");
+        }
+        let fd_v = crate::attention::finite_diff_loss(|x| loss(&q, &k, x), &v, 1e-2);
+        for i in 0..n * d {
+            assert!((grads.dv[i] - fd_v[i]).abs() < 5e-3, "dv[{i}]");
+        }
+    }
+}

@@ -1,0 +1,464 @@
+//! FLASHMASK blocked attention — paper Algorithm 1 (forward) and
+//! Algorithm 2 (backward), executed tile-for-tile on the CPU.
+//!
+//! `skip = true` enables the Eq. 4 classification (the contribution);
+//! `skip = false` is the "FlashAttention dense mask" baseline: identical
+//! arithmetic over *all* tiles, so the two are bitwise-equal — the
+//! paper's §4.4 exactness claim, asserted in the tests below.
+
+use super::gemm;
+use super::{AttnConfig, AttnGrads, AttnOutput, TileStats};
+use crate::mask::{BlockClass, BlockTable, FlashMask};
+
+const NEG_INF: f32 = f32::NEG_INFINITY;
+
+/// Apply the element-wise interval mask to a score tile
+/// (paper Alg. 1 lines 19/23 + implicit-causal diagonal test).
+#[inline]
+fn apply_tile_mask(
+    s: &mut [f32],
+    mask: &FlashMask,
+    row0: usize,
+    rows: usize,
+    col0: usize,
+    cols: usize,
+    stats: &mut TileStats,
+) {
+    for x in 0..rows {
+        let i = (row0 + x) as i32;
+        let srow = &mut s[x * cols..(x + 1) * cols];
+        for (y, sv) in srow.iter_mut().enumerate() {
+            let j = col0 + y;
+            let mut masked = mask.causal && i < j as i32;
+            masked |= i >= mask.lts[j] && i < mask.lte[j];
+            if !mask.causal {
+                masked |= i >= mask.uts[j] && i < mask.ute[j];
+            }
+            if masked {
+                *sv = NEG_INF;
+            }
+        }
+    }
+    stats.mask_evals += (rows * cols) as u64;
+}
+
+/// Tile decision shared by forward and backward.
+#[inline]
+pub(crate) fn tile_class(
+    mask: &FlashMask,
+    table: &BlockTable,
+    bi: usize,
+    br: usize,
+    bj: usize,
+    bc: usize,
+    skip: bool,
+) -> BlockClass {
+    if skip {
+        table.classify(mask, bi, br, bj, bc)
+    } else {
+        // dense-mask baseline: every tile computes + element-masks
+        BlockClass::PartiallyMasked
+    }
+}
+
+/// Algorithm 1 — forward pass for a single head.
+///
+/// `q,k,v`: row-major `[n, d]`.  Returns output, per-row logsumexp, and
+/// tile/work counters.
+pub fn flashmask_forward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    mask: &FlashMask,
+    table: &BlockTable,
+    cfg: AttnConfig,
+    skip: bool,
+) -> (AttnOutput, TileStats) {
+    let (br, bc) = (cfg.br, cfg.bc);
+    assert_eq!(q.len(), n * d);
+    assert_eq!(mask.n(), n);
+    let tr = n.div_ceil(br);
+    let tc = n.div_ceil(bc);
+    let mut out = vec![0f32; n * d];
+    let mut lse = vec![NEG_INF; n];
+    let mut stats = TileStats { tiles_total: tr * tc, ..Default::default() };
+
+    // per-row-block scratch, reused across iterations
+    let mut s = vec![0f32; br * bc];
+    let mut o_acc = vec![0f32; br * d];
+    let mut m_run = vec![NEG_INF; br];
+    let mut l_run = vec![0f32; br];
+    let mut alpha = vec![0f32; br];
+
+    for bi in 0..tr {
+        let row0 = bi * br;
+        let rows = br.min(n - row0);
+        o_acc[..rows * d].fill(0.0);
+        m_run[..rows].fill(NEG_INF);
+        l_run[..rows].fill(0.0);
+
+        for bj in 0..tc {
+            let class = tile_class(mask, table, bi, br, bj, bc, skip);
+            if class == BlockClass::FullyMasked {
+                stats.tiles_skipped += 1;
+                continue;
+            }
+            let col0 = bj * bc;
+            let cols = bc.min(n - col0);
+
+            // S = Q_i K_j^T * scale
+            let s_tile = &mut s[..rows * cols];
+            s_tile.fill(0.0);
+            gemm::matmul_nt_acc(
+                &q[row0 * d..(row0 + rows) * d],
+                &k[col0 * d..(col0 + cols) * d],
+                rows,
+                d,
+                cols,
+                s_tile,
+            );
+            stats.macs += (rows * cols * d) as u64;
+            for sv in s_tile.iter_mut() {
+                *sv *= cfg.scale;
+            }
+
+            if class == BlockClass::PartiallyMasked {
+                apply_tile_mask(s_tile, mask, row0, rows, col0, cols, &mut stats);
+                stats.tiles_partial += 1;
+            } else {
+                stats.tiles_unmasked += 1;
+            }
+
+            // online softmax update (Alg. 1 lines 25-26)
+            for x in 0..rows {
+                let srow = &mut s_tile[x * cols..(x + 1) * cols];
+                let mut row_max = NEG_INF;
+                for &sv in srow.iter() {
+                    row_max = row_max.max(sv);
+                }
+                let m_new = m_run[x].max(row_max);
+                let m_safe = if m_new.is_finite() { m_new } else { 0.0 };
+                let a = if m_run[x].is_finite() { (m_run[x] - m_safe).exp() } else { 0.0 };
+                let mut row_sum = 0f32;
+                for sv in srow.iter_mut() {
+                    let p = (*sv - m_safe).exp(); // exp(-inf) == 0 for masked
+                    *sv = p;
+                    row_sum += p;
+                }
+                l_run[x] = a * l_run[x] + row_sum;
+                m_run[x] = m_new;
+                alpha[x] = a;
+            }
+            gemm::scale_rows(&mut o_acc[..rows * d], &alpha[..rows], rows, d);
+            // O += P V_j
+            gemm::matmul_nn_acc(
+                s_tile,
+                &v[col0 * d..(col0 + cols) * d],
+                rows,
+                cols,
+                d,
+                &mut o_acc[..rows * d],
+            );
+            stats.macs += (rows * cols * d) as u64;
+        }
+
+        // finalize (Alg. 1 lines 28-29)
+        for x in 0..rows {
+            let i = row0 + x;
+            if l_run[x] > 0.0 {
+                let inv = 1.0 / l_run[x];
+                for dd in 0..d {
+                    out[i * d + dd] = o_acc[x * d + dd] * inv;
+                }
+                let m_safe = if m_run[x].is_finite() { m_run[x] } else { 0.0 };
+                lse[i] = m_safe + l_run[x].ln();
+            } // fully-masked row: output stays 0, lse stays -inf
+        }
+    }
+    (AttnOutput { o: out, lse }, stats)
+}
+
+/// Algorithm 2 — backward pass for a single head.
+///
+/// Column-parallel over key blocks exactly like the paper: `K_j`/`V_j`
+/// and the interval vectors stay resident across the inner row loop, and
+/// `dQ_i` is accumulated in the output buffer (Alg. 2 line 31).
+#[allow(clippy::too_many_arguments)]
+pub fn flashmask_backward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    o: &[f32],
+    do_: &[f32],
+    lse: &[f32],
+    n: usize,
+    d: usize,
+    mask: &FlashMask,
+    table: &BlockTable,
+    cfg: AttnConfig,
+    skip: bool,
+) -> (AttnGrads, TileStats) {
+    let (br, bc) = (cfg.br, cfg.bc);
+    let tr = n.div_ceil(br);
+    let tc = n.div_ceil(bc);
+    let mut dq = vec![0f32; n * d];
+    let mut dk = vec![0f32; n * d];
+    let mut dv = vec![0f32; n * d];
+    let mut stats = TileStats { tiles_total: tr * tc, ..Default::default() };
+
+    // D = rowsum(dO ∘ O)  (Alg. 2 line 4)
+    let mut dvec = vec![0f32; n];
+    for i in 0..n {
+        let mut acc = 0f32;
+        for dd in 0..d {
+            acc += do_[i * d + dd] * o[i * d + dd];
+        }
+        dvec[i] = acc;
+    }
+
+    let mut s = vec![0f32; br * bc];
+    let mut dp = vec![0f32; br * bc];
+
+    for bj in 0..tc {
+        let col0 = bj * bc;
+        let cols = bc.min(n - col0);
+        let kj = &k[col0 * d..(col0 + cols) * d];
+        let vj = &v[col0 * d..(col0 + cols) * d];
+
+        for bi in 0..tr {
+            let class = tile_class(mask, table, bi, br, bj, bc, skip);
+            if class == BlockClass::FullyMasked {
+                stats.tiles_skipped += 1;
+                continue;
+            }
+            let row0 = bi * br;
+            let rows = br.min(n - row0);
+            let qi = &q[row0 * d..(row0 + rows) * d];
+            let doi = &do_[row0 * d..(row0 + rows) * d];
+
+            // S = Q_i K_j^T * scale (Alg. 2 line 20)
+            let s_tile = &mut s[..rows * cols];
+            s_tile.fill(0.0);
+            gemm::matmul_nt_acc(qi, kj, rows, d, cols, s_tile);
+            stats.macs += (rows * cols * d) as u64;
+            for sv in s_tile.iter_mut() {
+                *sv *= cfg.scale;
+            }
+            if class == BlockClass::PartiallyMasked {
+                apply_tile_mask(s_tile, mask, row0, rows, col0, cols, &mut stats);
+                stats.tiles_partial += 1;
+            } else {
+                stats.tiles_unmasked += 1;
+            }
+
+            // P = exp(S - L_i) (Alg. 2 line 27); masked rows have
+            // lse = -inf => P = 0
+            for x in 0..rows {
+                let l = lse[row0 + x];
+                let srow = &mut s_tile[x * cols..(x + 1) * cols];
+                if l.is_finite() {
+                    for sv in srow.iter_mut() {
+                        *sv = (*sv - l).exp();
+                    }
+                } else {
+                    srow.fill(0.0);
+                }
+            }
+
+            // dV_j += P^T dO_i (line 28)
+            gemm::matmul_tn_acc(s_tile, doi, rows, cols, d, &mut dv[col0 * d..(col0 + cols) * d]);
+            stats.macs += (rows * cols * d) as u64;
+
+            // dP = dO_i V_j^T (line 29)
+            let dp_tile = &mut dp[..rows * cols];
+            dp_tile.fill(0.0);
+            gemm::matmul_nt_acc(doi, vj, rows, d, cols, dp_tile);
+            stats.macs += (rows * cols * d) as u64;
+
+            // dS = P ∘ (dP - D_i) * scale (line 30)
+            for x in 0..rows {
+                let dv_i = dvec[row0 + x];
+                for y in 0..cols {
+                    let idx = x * cols + y;
+                    dp_tile[idx] = s_tile[idx] * (dp_tile[idx] - dv_i) * cfg.scale;
+                }
+            }
+
+            // dQ_i += dS K_j (line 31)
+            gemm::matmul_nn_acc(dp_tile, kj, rows, cols, d, &mut dq[row0 * d..(row0 + rows) * d]);
+            stats.macs += (rows * cols * d) as u64;
+            // dK_j += dS^T Q_i (line 32)
+            gemm::matmul_tn_acc(dp_tile, qi, rows, cols, d, &mut dk[col0 * d..(col0 + cols) * d]);
+            stats.macs += (rows * cols * d) as u64;
+        }
+    }
+    (AttnGrads { dq, dk, dv }, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::dense;
+    use crate::attention::testutil::rand_vec;
+    use crate::mask::builders;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        (rand_vec(n * d, &mut rng), rand_vec(n * d, &mut rng), rand_vec(n * d, &mut rng))
+    }
+
+    #[test]
+    fn forward_matches_dense_all_masks() {
+        let (n, d) = (128, 16);
+        let (q, k, v) = setup(n, d, 1);
+        let cfg = AttnConfig::new(32, 32, d);
+        for (kind, mask) in builders::benchmark_suite(n, 3) {
+            let table = BlockTable::build(&mask, cfg.bc);
+            let (got, _) = flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+            let want = dense::dense_forward(&q, &k, &v, n, d, &mask.dense_bias(), cfg.scale);
+            for (i, (a, b)) in got.o.iter().zip(&want.o).enumerate() {
+                assert!((a - b).abs() < 2e-5, "{kind} o[{i}]: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn skip_is_bitwise_noop() {
+        // the paper's §4.4 exactness claim, on this engine
+        let (n, d) = (128, 16);
+        let (q, k, v) = setup(n, d, 2);
+        let cfg = AttnConfig::new(32, 32, d);
+        for (kind, mask) in builders::benchmark_suite(n, 5) {
+            let table = BlockTable::build(&mask, cfg.bc);
+            let (a, sa) = flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+            let (b, sb) = flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, false);
+            assert_eq!(a.o, b.o, "{kind}: forward outputs differ");
+            assert_eq!(a.lse, b.lse, "{kind}: lse differ");
+            assert!(sa.macs <= sb.macs, "{kind}: skip did not reduce work");
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        let (n, d) = (32, 8);
+        let (q, k, v) = setup(n, d, 3);
+        let mask = builders::causal_document(n, &[14, 10, 8]);
+        let cfg = AttnConfig::new(8, 8, d);
+        let table = BlockTable::build(&mask, cfg.bc);
+        let (fwd, _) = flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+        // loss = sum(O * W) with fixed random W
+        let mut rng = Rng::new(9);
+        let w = rand_vec(n * d, &mut rng);
+        let do_: Vec<f32> = w.clone();
+        let (grads, _) = flashmask_backward(
+            &q, &k, &v, &fwd.o, &do_, &fwd.lse, n, d, &mask, &table, cfg, true,
+        );
+        let loss = |q_: &[f32], k_: &[f32], v_: &[f32]| -> f32 {
+            let (f, _) = flashmask_forward(q_, k_, v_, n, d, &mask, &table, cfg, true);
+            f.o.iter().zip(&w).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-2;
+        let fd_q = crate::attention::finite_diff_loss(|x| loss(x, &k, &v), &q, eps);
+        let fd_k = crate::attention::finite_diff_loss(|x| loss(&q, x, &v), &k, eps);
+        let fd_v = crate::attention::finite_diff_loss(|x| loss(&q, &k, x), &v, eps);
+        for (name, got, want) in
+            [("dq", &grads.dq, &fd_q), ("dk", &grads.dk, &fd_k), ("dv", &grads.dv, &fd_v)]
+        {
+            for i in 0..n * d {
+                assert!(
+                    (got[i] - want[i]).abs() < 5e-3,
+                    "{name}[{i}]: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backward_skip_bitwise_noop() {
+        let (n, d) = (64, 8);
+        let (q, k, v) = setup(n, d, 4);
+        for (kind, mask) in builders::benchmark_suite(n, 6) {
+            let cfg = AttnConfig::new(16, 16, d);
+            let table = BlockTable::build(&mask, cfg.bc);
+            let (fwd, _) = flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+            let mut rng = Rng::new(10);
+            let do_ = rand_vec(n * d, &mut rng);
+            let (g1, _) = flashmask_backward(
+                &q, &k, &v, &fwd.o, &do_, &fwd.lse, n, d, &mask, &table, cfg, true,
+            );
+            let (g2, _) = flashmask_backward(
+                &q, &k, &v, &fwd.o, &do_, &fwd.lse, n, d, &mask, &table, cfg, false,
+            );
+            assert_eq!(g1.dq, g2.dq, "{kind} dq");
+            assert_eq!(g1.dk, g2.dk, "{kind} dk");
+            assert_eq!(g1.dv, g2.dv, "{kind} dv");
+        }
+    }
+
+    #[test]
+    fn stats_reflect_sparsity() {
+        let n = 256;
+        let mask = builders::causal(n);
+        let cfg = AttnConfig::new(32, 32, 16);
+        let table = BlockTable::build(&mask, cfg.bc);
+        let (q, k, v) = setup(n, 16, 5);
+        let (_, st) = flashmask_forward(&q, &k, &v, n, 16, &mask, &table, cfg, true);
+        assert_eq!(st.tiles_total, 64);
+        assert_eq!(st.tiles_skipped, 28); // strictly-above-diagonal tiles
+        assert_eq!(st.tiles_partial, 8); // diagonal tiles
+        assert_eq!(st.tiles_unmasked, 28);
+    }
+
+    #[test]
+    fn ragged_tail_tiles() {
+        // n not divisible by tile sizes
+        let (n, d) = (100, 8);
+        let (q, k, v) = setup(n, d, 6);
+        let mask = builders::causal_document(n, &[37, 63]);
+        let cfg = AttnConfig::new(32, 16, d);
+        let table = BlockTable::build(&mask, cfg.bc);
+        let (got, _) = flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+        let want = dense::dense_forward(&q, &k, &v, n, d, &mask.dense_bias(), cfg.scale);
+        for (a, b) in got.o.iter().zip(&want.o) {
+            assert!((a - b).abs() < 2e-5);
+        }
+    }
+
+    #[test]
+    fn prop_forward_matches_dense_random_docs() {
+        prop::check(
+            "flash-vs-dense",
+            crate::util::prop::PropConfig { cases: 16, base_seed: 77 },
+            |rng| {
+                let n = 64;
+                let d = *rng.choose(&[4usize, 8, 16]);
+                let k_docs = rng.range(1, 5) as usize;
+                let lens = crate::workload::docgen::sample_doc_lens(n, k_docs, 1, rng);
+                let mask = if rng.f64() < 0.5 {
+                    builders::causal_document(n, &lens)
+                } else {
+                    builders::document(n, &lens)
+                };
+                let q = rand_vec(n * d, rng);
+                let k = rand_vec(n * d, rng);
+                let v = rand_vec(n * d, rng);
+                let cfg = AttnConfig::new(*rng.choose(&[16usize, 32]), *rng.choose(&[16usize, 32]), d);
+                let table = BlockTable::build(&mask, cfg.bc);
+                let (got, _) = flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+                let want = dense::dense_forward(&q, &k, &v, n, d, &mask.dense_bias(), cfg.scale);
+                for (a, b) in got.o.iter().zip(&want.o) {
+                    if (a - b).abs() > 3e-5 {
+                        return Err(format!("mismatch {a} vs {b}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,362 @@
+//! FlexAttention-like baseline (He et al., 2024).
+//!
+//! Execution model mirrors the published design: a *BlockMask* of
+//! per-tile classes is precomputed by evaluating a `mask_mod(i, j)`
+//! predicate over the whole score matrix (`O(N²/BrBc)` memory, O(N²)
+//! setup work), then the kernel skips fully-masked tiles and re-invokes
+//! the predicate *per element* on partial tiles.  The per-element
+//! dynamic call is the structural reason FlexAttention trails FLASHMASK
+//! on partial-tile-heavy masks (paper §5.4) — here it shows up as a
+//! `dyn Fn` indirection instead of compiled-graph overhead.
+
+use super::gemm;
+use super::{AttnConfig, AttnGrads, AttnOutput, TileStats};
+use crate::mask::BlockClass;
+
+/// The FlexAttention mask predicate: `true` = position visible.
+pub type MaskMod<'a> = dyn Fn(usize, usize) -> bool + Sync + 'a;
+
+/// Precomputed block mask (FlexAttention's `BlockMask`).
+pub struct BlockMask {
+    pub br: usize,
+    pub bc: usize,
+    pub tr: usize,
+    pub tc: usize,
+    pub classes: Vec<BlockClass>,
+}
+
+impl BlockMask {
+    /// Build by scanning the predicate — O(N²) evaluations, like
+    /// `create_block_mask` in FlexAttention.  Counted as setup, not
+    /// kernel time (the paper's kernel benches exclude it too).
+    pub fn build(mask_mod: &MaskMod, n: usize, br: usize, bc: usize) -> BlockMask {
+        let tr = n.div_ceil(br);
+        let tc = n.div_ceil(bc);
+        let mut classes = Vec::with_capacity(tr * tc);
+        for bi in 0..tr {
+            for bj in 0..tc {
+                let mut any_vis = false;
+                let mut any_masked = false;
+                'scan: for i in bi * br..((bi + 1) * br).min(n) {
+                    for j in bj * bc..((bj + 1) * bc).min(n) {
+                        if mask_mod(i, j) {
+                            any_vis = true;
+                        } else {
+                            any_masked = true;
+                        }
+                        if any_vis && any_masked {
+                            break 'scan;
+                        }
+                    }
+                }
+                classes.push(match (any_vis, any_masked) {
+                    (false, _) => BlockClass::FullyMasked,
+                    (true, true) => BlockClass::PartiallyMasked,
+                    (true, false) => BlockClass::Unmasked,
+                });
+            }
+        }
+        BlockMask { br, bc, tr, tc, classes }
+    }
+
+    #[inline]
+    pub fn class(&self, bi: usize, bj: usize) -> BlockClass {
+        self.classes[bi * self.tc + bj]
+    }
+
+    /// BlockMask storage in bytes — the paper's O(N²/BrBc) memory term.
+    pub fn bytes(&self) -> usize {
+        self.classes.len()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        let f = self.classes.iter().filter(|c| **c == BlockClass::FullyMasked).count();
+        f as f64 / self.classes.len() as f64
+    }
+}
+
+/// FlexAttention-like forward: block-mask skip + per-element predicate
+/// on partial tiles.
+pub fn flex_forward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    mask_mod: &MaskMod,
+    bm: &BlockMask,
+    cfg: AttnConfig,
+) -> (AttnOutput, TileStats) {
+    let (br, bc) = (cfg.br, cfg.bc);
+    assert_eq!((bm.br, bm.bc), (br, bc), "BlockMask tile mismatch");
+    let (tr, tc) = (bm.tr, bm.tc);
+    let mut out = vec![0f32; n * d];
+    let mut lse = vec![f32::NEG_INFINITY; n];
+    let mut stats = TileStats { tiles_total: tr * tc, ..Default::default() };
+
+    let mut s = vec![0f32; br * bc];
+    let mut o_acc = vec![0f32; br * d];
+    let mut m_run = vec![f32::NEG_INFINITY; br];
+    let mut l_run = vec![0f32; br];
+    let mut alpha = vec![0f32; br];
+
+    for bi in 0..tr {
+        let row0 = bi * br;
+        let rows = br.min(n - row0);
+        o_acc[..rows * d].fill(0.0);
+        m_run[..rows].fill(f32::NEG_INFINITY);
+        l_run[..rows].fill(0.0);
+
+        for bj in 0..tc {
+            let class = bm.class(bi, bj);
+            if class == BlockClass::FullyMasked {
+                stats.tiles_skipped += 1;
+                continue;
+            }
+            let col0 = bj * bc;
+            let cols = bc.min(n - col0);
+            let s_tile = &mut s[..rows * cols];
+            s_tile.fill(0.0);
+            gemm::matmul_nt_acc(
+                &q[row0 * d..(row0 + rows) * d],
+                &k[col0 * d..(col0 + cols) * d],
+                rows,
+                d,
+                cols,
+                s_tile,
+            );
+            stats.macs += (rows * cols * d) as u64;
+            for sv in s_tile.iter_mut() {
+                *sv *= cfg.scale;
+            }
+            if class == BlockClass::PartiallyMasked {
+                // per-element mask_mod — Flex's expression-based masking
+                for x in 0..rows {
+                    for y in 0..cols {
+                        if !mask_mod(row0 + x, col0 + y) {
+                            s_tile[x * cols + y] = f32::NEG_INFINITY;
+                        }
+                    }
+                }
+                stats.mask_evals += (rows * cols) as u64;
+                stats.tiles_partial += 1;
+            } else {
+                stats.tiles_unmasked += 1;
+            }
+
+            for x in 0..rows {
+                let srow = &mut s_tile[x * cols..(x + 1) * cols];
+                let mut row_max = f32::NEG_INFINITY;
+                for &sv in srow.iter() {
+                    row_max = row_max.max(sv);
+                }
+                let m_new = m_run[x].max(row_max);
+                let m_safe = if m_new.is_finite() { m_new } else { 0.0 };
+                let a = if m_run[x].is_finite() { (m_run[x] - m_safe).exp() } else { 0.0 };
+                let mut row_sum = 0f32;
+                for sv in srow.iter_mut() {
+                    let p = (*sv - m_safe).exp();
+                    *sv = p;
+                    row_sum += p;
+                }
+                l_run[x] = a * l_run[x] + row_sum;
+                m_run[x] = m_new;
+                alpha[x] = a;
+            }
+            gemm::scale_rows(&mut o_acc[..rows * d], &alpha[..rows], rows, d);
+            gemm::matmul_nn_acc(
+                s_tile,
+                &v[col0 * d..(col0 + cols) * d],
+                rows,
+                cols,
+                d,
+                &mut o_acc[..rows * d],
+            );
+            stats.macs += (rows * cols * d) as u64;
+        }
+        for x in 0..rows {
+            let i = row0 + x;
+            if l_run[x] > 0.0 {
+                let inv = 1.0 / l_run[x];
+                for dd in 0..d {
+                    out[i * d + dd] = o_acc[x * d + dd] * inv;
+                }
+                let m_safe = if m_run[x].is_finite() { m_run[x] } else { 0.0 };
+                lse[i] = m_safe + l_run[x].ln();
+            }
+        }
+    }
+    (AttnOutput { o: out, lse }, stats)
+}
+
+/// FlexAttention-like backward (same block-mask skip + per-element
+/// predicate structure as the forward).
+#[allow(clippy::too_many_arguments)]
+pub fn flex_backward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    o: &[f32],
+    do_: &[f32],
+    lse: &[f32],
+    n: usize,
+    d: usize,
+    mask_mod: &MaskMod,
+    bm: &BlockMask,
+    cfg: AttnConfig,
+) -> (AttnGrads, TileStats) {
+    let (br, bc) = (cfg.br, cfg.bc);
+    let (tr, tc) = (bm.tr, bm.tc);
+    let mut dq = vec![0f32; n * d];
+    let mut dk = vec![0f32; n * d];
+    let mut dv = vec![0f32; n * d];
+    let mut stats = TileStats { tiles_total: tr * tc, ..Default::default() };
+
+    let mut dvec = vec![0f32; n];
+    for i in 0..n {
+        let mut acc = 0f32;
+        for dd in 0..d {
+            acc += do_[i * d + dd] * o[i * d + dd];
+        }
+        dvec[i] = acc;
+    }
+
+    let mut s = vec![0f32; br * bc];
+    let mut dp = vec![0f32; br * bc];
+    for bj in 0..tc {
+        let col0 = bj * bc;
+        let cols = bc.min(n - col0);
+        let kj = &k[col0 * d..(col0 + cols) * d];
+        let vj = &v[col0 * d..(col0 + cols) * d];
+        for bi in 0..tr {
+            let class = bm.class(bi, bj);
+            if class == BlockClass::FullyMasked {
+                stats.tiles_skipped += 1;
+                continue;
+            }
+            let row0 = bi * br;
+            let rows = br.min(n - row0);
+            let qi = &q[row0 * d..(row0 + rows) * d];
+            let doi = &do_[row0 * d..(row0 + rows) * d];
+            let s_tile = &mut s[..rows * cols];
+            s_tile.fill(0.0);
+            gemm::matmul_nt_acc(qi, kj, rows, d, cols, s_tile);
+            stats.macs += (rows * cols * d) as u64;
+            for sv in s_tile.iter_mut() {
+                *sv *= cfg.scale;
+            }
+            if class == BlockClass::PartiallyMasked {
+                for x in 0..rows {
+                    for y in 0..cols {
+                        if !mask_mod(row0 + x, col0 + y) {
+                            s_tile[x * cols + y] = f32::NEG_INFINITY;
+                        }
+                    }
+                }
+                stats.mask_evals += (rows * cols) as u64;
+                stats.tiles_partial += 1;
+            } else {
+                stats.tiles_unmasked += 1;
+            }
+            for x in 0..rows {
+                let l = lse[row0 + x];
+                let srow = &mut s_tile[x * cols..(x + 1) * cols];
+                if l.is_finite() {
+                    for sv in srow.iter_mut() {
+                        *sv = (*sv - l).exp();
+                    }
+                } else {
+                    srow.fill(0.0);
+                }
+            }
+            gemm::matmul_tn_acc(s_tile, doi, rows, cols, d, &mut dv[col0 * d..(col0 + cols) * d]);
+            let dp_tile = &mut dp[..rows * cols];
+            dp_tile.fill(0.0);
+            gemm::matmul_nt_acc(doi, vj, rows, d, cols, dp_tile);
+            for x in 0..rows {
+                let dv_i = dvec[row0 + x];
+                for y in 0..cols {
+                    let idx = x * cols + y;
+                    dp_tile[idx] = s_tile[idx] * (dp_tile[idx] - dv_i) * cfg.scale;
+                }
+            }
+            gemm::matmul_nn_acc(dp_tile, kj, rows, cols, d, &mut dq[row0 * d..(row0 + rows) * d]);
+            gemm::matmul_tn_acc(dp_tile, qi, rows, cols, d, &mut dk[col0 * d..(col0 + cols) * d]);
+            stats.macs += 4 * (rows * cols * d) as u64;
+        }
+    }
+    (AttnGrads { dq, dk, dv }, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::rand_vec;
+    use crate::attention::{dense, flash};
+    use crate::mask::{builders, BlockTable};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_dense_and_flashmask() {
+        let (n, d) = (128, 16);
+        let mut rng = Rng::new(1);
+        let q = rand_vec(n * d, &mut rng);
+        let k = rand_vec(n * d, &mut rng);
+        let v = rand_vec(n * d, &mut rng);
+        let cfg = AttnConfig::new(32, 32, d);
+        for (kind, mask) in builders::benchmark_suite(n, 4) {
+            let pred = |i: usize, j: usize| mask.allowed(i, j);
+            let bm = BlockMask::build(&pred, n, cfg.br, cfg.bc);
+            let (got, _) = flex_forward(&q, &k, &v, n, d, &pred, &bm, cfg);
+            let want = dense::dense_forward(&q, &k, &v, n, d, &mask.dense_bias(), cfg.scale);
+            for (a, b) in got.o.iter().zip(&want.o) {
+                assert!((a - b).abs() < 2e-5, "{kind}");
+            }
+            // and bitwise vs flashmask when block classes agree
+            let table = BlockTable::build(&mask, cfg.bc);
+            let (fm, _) = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+            for (a, b) in got.o.iter().zip(&fm.o) {
+                assert!((a - b).abs() < 2e-5, "{kind} flex vs flashmask");
+            }
+        }
+    }
+
+    #[test]
+    fn block_mask_sparsity_matches_flashmask_table() {
+        let n = 256;
+        let mask = builders::causal(n);
+        let pred = |i: usize, j: usize| mask.allowed(i, j);
+        let bm = BlockMask::build(&pred, n, 32, 32);
+        assert!((bm.sparsity() - mask.block_sparsity(32, 32)).abs() < 1e-12);
+        assert_eq!(bm.bytes(), 64);
+    }
+
+    #[test]
+    fn backward_matches_flashmask_backward() {
+        let (n, d) = (64, 8);
+        let mut rng = Rng::new(2);
+        let q = rand_vec(n * d, &mut rng);
+        let k = rand_vec(n * d, &mut rng);
+        let v = rand_vec(n * d, &mut rng);
+        let do_ = rand_vec(n * d, &mut rng);
+        let mask = builders::share_question(
+            n,
+            &[builders::SharedQuestionDoc { question_len: 40, answer_lens: vec![12, 12] }],
+        );
+        let cfg = AttnConfig::new(16, 16, d);
+        let pred = |i: usize, j: usize| mask.allowed(i, j);
+        let bm = BlockMask::build(&pred, n, cfg.br, cfg.bc);
+        let table = BlockTable::build(&mask, cfg.bc);
+        let (fwd, _) = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+        let (g1, _) = flex_backward(&q, &k, &v, &fwd.o, &do_, &fwd.lse, n, d, &pred, &bm, cfg);
+        let (g2, _) = flash::flashmask_backward(
+            &q, &k, &v, &fwd.o, &do_, &fwd.lse, n, d, &mask, &table, cfg, true,
+        );
+        for (a, b) in g1.dq.iter().zip(&g2.dq) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        for (a, b) in g1.dk.iter().zip(&g2.dk) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

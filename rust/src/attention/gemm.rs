@@ -1,0 +1,205 @@
+//! Small dense matmul microkernels for the blocked attention engine.
+//!
+//! Row-major f32.  These are the hot inner loops of the simulator; they
+//! use 8-lane dot reductions and 2-row-unrolled axpy so LLVM vectorizes
+//! (see EXPERIMENTS.md §Perf for the measured iteration history).
+
+const LANES: usize = 8;
+
+/// 8-lane dot product: independent partial sums let LLVM vectorize the
+/// reduction (plain `s += a*b` is a serial dependency chain).
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / LANES;
+    let mut acc = [0f32; LANES];
+    for c in 0..chunks {
+        let ac = &a[c * LANES..(c + 1) * LANES];
+        let bc = &b[c * LANES..(c + 1) * LANES];
+        for l in 0..LANES {
+            acc[l] += ac[l] * bc[l];
+        }
+    }
+    let mut s = acc.iter().sum::<f32>();
+    for kk in chunks * LANES..a.len() {
+        s += a[kk] * b[kk];
+    }
+    s
+}
+
+/// `out[m,n] += a[m,k] @ b[n,k]^T` — the S = Q K^T shape.
+pub fn matmul_nt_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let ai = &a[i * k..(i + 1) * k];
+        let oi = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            oi[j] += dot(ai, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+/// `out[m,n] += a[m,k] @ b[k,n]` — the O = P V shape.
+pub fn matmul_nn_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let ai = &a[i * k..(i + 1) * k];
+        let oi = &mut out[i * n..(i + 1) * n];
+        // 2-row unrolled axpy: halves the number of passes over `oi`
+        let mut kk = 0;
+        while kk + 2 <= k {
+            let (a0, a1) = (ai[kk], ai[kk + 1]);
+            if a0 == 0.0 && a1 == 0.0 {
+                kk += 2; // masked probabilities are exactly zero
+                continue;
+            }
+            let b0 = &b[kk * n..(kk + 1) * n];
+            let b1 = &b[(kk + 1) * n..(kk + 2) * n];
+            for j in 0..n {
+                oi[j] += a0 * b0[j] + a1 * b1[j];
+            }
+            kk += 2;
+        }
+        if kk < k {
+            let av = ai[kk];
+            if av != 0.0 {
+                let bk = &b[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    oi[j] += av * bk[j];
+                }
+            }
+        }
+    }
+}
+
+/// `out[k,n] += a[m,k]^T @ b[m,n]` — the dV = P^T dO / dK = dS^T Q shape.
+pub fn matmul_tn_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), k * n);
+    // process two source rows per pass so each out-row sees fused updates
+    let mut i = 0;
+    while i < m {
+        let pair = (i + 1 < m) as usize;
+        let a0 = &a[i * k..(i + 1) * k];
+        let b0 = &b[i * n..(i + 1) * n];
+        let (a1, b1) = if pair == 1 {
+            (&a[(i + 1) * k..(i + 2) * k], &b[(i + 1) * n..(i + 2) * n])
+        } else {
+            (a0, b0)
+        };
+        for kk in 0..k {
+            let (x0, x1) = (a0[kk], if pair == 1 { a1[kk] } else { 0.0 });
+            if x0 == 0.0 && x1 == 0.0 {
+                continue; // masked probabilities are exactly zero
+            }
+            let ok = &mut out[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                ok[j] += x0 * b0[j] + x1 * b1[j];
+            }
+        }
+        i += 1 + pair;
+    }
+}
+
+/// Scale rows of `x[m,n]` by `alpha[m]` in place.
+pub fn scale_rows(x: &mut [f32], alpha: &[f32], m: usize, n: usize) {
+    for i in 0..m {
+        let a = alpha[i];
+        if a == 1.0 {
+            continue;
+        }
+        for v in &mut x[i * n..(i + 1) * n] {
+            *v *= a;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for kk in 0..k {
+                    out[i * n + j] += a[i * k + kk] * b[j * k + kk];
+                }
+            }
+        }
+        out
+    }
+
+    fn rand(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    #[test]
+    fn nt_matches_naive() {
+        let mut rng = Rng::new(1);
+        for (m, k, n) in [(3, 5, 7), (8, 16, 8), (1, 1, 1), (5, 4, 6)] {
+            let a = rand(m * k, &mut rng);
+            let b = rand(n * k, &mut rng);
+            let mut out = vec![0.0; m * n];
+            matmul_nt_acc(&a, &b, m, k, n, &mut out);
+            let want = naive_nt(&a, &b, m, k, n);
+            for (x, y) in out.iter().zip(&want) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn nn_matches_naive() {
+        let mut rng = Rng::new(2);
+        let (m, k, n) = (4, 6, 5);
+        let a = rand(m * k, &mut rng);
+        let b = rand(k * n, &mut rng);
+        let mut out = vec![0.0; m * n];
+        matmul_nn_acc(&a, &b, m, k, n, &mut out);
+        for i in 0..m {
+            for j in 0..n {
+                let want: f32 = (0..k).map(|kk| a[i * k + kk] * b[kk * n + j]).sum();
+                assert!((out[i * n + j] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn tn_matches_naive() {
+        let mut rng = Rng::new(3);
+        let (m, k, n) = (6, 4, 5);
+        let a = rand(m * k, &mut rng);
+        let b = rand(m * n, &mut rng);
+        let mut out = vec![0.0; k * n];
+        matmul_tn_acc(&a, &b, m, k, n, &mut out);
+        for kk in 0..k {
+            for j in 0..n {
+                let want: f32 = (0..m).map(|i| a[i * k + kk] * b[i * n + j]).sum();
+                assert!((out[kk * n + j] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn acc_accumulates() {
+        let a = vec![1.0, 2.0];
+        let b = vec![3.0, 4.0];
+        let mut out = vec![10.0];
+        matmul_nt_acc(&a, &b, 1, 2, 1, &mut out);
+        assert_eq!(out[0], 10.0 + 11.0);
+    }
+
+    #[test]
+    fn scale_rows_works() {
+        let mut x = vec![1.0, 2.0, 3.0, 4.0];
+        scale_rows(&mut x, &[2.0, 0.5], 2, 2);
+        assert_eq!(x, vec![2.0, 4.0, 1.5, 2.0]);
+    }
+}

@@ -1,0 +1,161 @@
+//! CPU blocked-attention engine — the "GPU simulator" substrate.
+//!
+//! Executes the paper's Algorithm 1/2 tile-for-tile in f32 on the CPU,
+//! with per-tile skip decisions driven by the same [`BlockTable`]
+//! classification the Pallas kernel uses.  Because block skipping is an
+//! algorithmic property (not a hardware one), measured CPU wall-clock
+//! scales with executed tiles exactly as GPU time scales with executed
+//! tiles, so speedup *shapes* transfer (DESIGN.md §Substitutions).
+//!
+//! Engines:
+//! * [`dense`] — vanilla O(N²) attention + dense additive mask
+//!   (the paper's "vanilla attention" baseline).
+//! * [`flash`] — FA2 tiling + online softmax; `skip=false` is the
+//!   "FlashAttention dense mask" baseline, `skip=true` is FLASHMASK.
+//! * [`flex`] — FlexAttention-like baseline: precomputed
+//!   O(N²/BrBc) block mask + per-element `mask_mod` closure on
+//!   partial tiles.
+//! * [`bsr`] — FlashInfer-like block-sparse-row baseline with mask
+//!   block size R/C (Tables 10–14).
+
+pub mod bsr;
+pub mod dense;
+pub mod flash;
+pub mod flex;
+pub mod gemm;
+
+use crate::mask::FlashMask;
+
+/// Tile sizes + softmax scale for blocked engines.
+#[derive(Clone, Copy, Debug)]
+pub struct AttnConfig {
+    pub br: usize,
+    pub bc: usize,
+    pub scale: f32,
+}
+
+impl AttnConfig {
+    pub fn new(br: usize, bc: usize, d: usize) -> AttnConfig {
+        AttnConfig { br, bc, scale: 1.0 / (d as f32).sqrt() }
+    }
+}
+
+/// Forward output: attention result + per-row logsumexp (consumed by the
+/// backward pass, exactly like the kernel's residuals).
+#[derive(Clone, Debug)]
+pub struct AttnOutput {
+    pub o: Vec<f32>,
+    pub lse: Vec<f32>,
+}
+
+/// Work counters, used by the perf model and the benches to report the
+/// paper's tile-census-based FLOPs.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TileStats {
+    pub tiles_total: usize,
+    pub tiles_skipped: usize,
+    pub tiles_partial: usize,
+    pub tiles_unmasked: usize,
+    /// Multiply-accumulate count of executed matmuls (2 per MAC = FLOPs).
+    pub macs: u64,
+    /// Element-wise mask evaluations (the Flex `mask_mod` cost proxy).
+    pub mask_evals: u64,
+}
+
+impl TileStats {
+    pub fn flops(&self) -> u64 {
+        2 * self.macs
+    }
+
+    pub fn merge(&mut self, other: &TileStats) {
+        self.tiles_total += other.tiles_total;
+        self.tiles_skipped += other.tiles_skipped;
+        self.tiles_partial += other.tiles_partial;
+        self.tiles_unmasked += other.tiles_unmasked;
+        self.macs += other.macs;
+        self.mask_evals += other.mask_evals;
+    }
+}
+
+/// Gradients from a backward pass.
+#[derive(Clone, Debug)]
+pub struct AttnGrads {
+    pub dq: Vec<f32>,
+    pub dk: Vec<f32>,
+    pub dv: Vec<f32>,
+}
+
+/// Run `heads` independent single-head problems across OS threads
+/// (the coordinator's head-parallel hot path).
+pub fn parallel_heads<F, R>(heads: usize, max_threads: usize, f: F) -> Vec<R>
+where
+    F: Fn(usize) -> R + Sync,
+    R: Send,
+{
+    assert!(max_threads >= 1);
+    let mut results: Vec<Option<R>> = (0..heads).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let chunks: Vec<&mut [Option<R>]> = {
+            let per = heads.div_ceil(max_threads.min(heads).max(1));
+            results.chunks_mut(per).collect()
+        };
+        for (ci, chunk) in chunks.into_iter().enumerate() {
+            let f = &f;
+            let per = heads.div_ceil(max_threads.min(heads).max(1));
+            scope.spawn(move || {
+                for (off, slot) in chunk.iter_mut().enumerate() {
+                    *slot = Some(f(ci * per + off));
+                }
+            });
+        }
+    });
+    results.into_iter().map(|r| r.unwrap()).collect()
+}
+
+/// Reference finite-difference gradient check helper (tests only).
+#[cfg(test)]
+pub(crate) fn finite_diff_loss<F: Fn(&[f32]) -> f32>(
+    f: F,
+    x: &[f32],
+    eps: f32,
+) -> Vec<f32> {
+    let mut g = vec![0.0; x.len()];
+    let mut xp = x.to_vec();
+    for i in 0..x.len() {
+        let orig = xp[i];
+        xp[i] = orig + eps;
+        let fp = f(&xp);
+        xp[i] = orig - eps;
+        let fm = f(&xp);
+        xp[i] = orig;
+        g[i] = (fp - fm) / (2.0 * eps);
+    }
+    g
+}
+
+/// Shared test fixtures.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::util::rng::Rng;
+
+    pub fn rand_vec(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32() * 0.5).collect()
+    }
+}
+
+pub use flash::{flashmask_backward, flashmask_forward};
+
+/// Convenience: FLASHMASK forward for one head with stats.
+pub fn forward_single_head(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    mask: &FlashMask,
+    cfg: AttnConfig,
+    skip: bool,
+) -> (AttnOutput, TileStats) {
+    let table = crate::mask::BlockTable::build(mask, cfg.bc);
+    flash::flashmask_forward(q, k, v, n, d, mask, &table, cfg, skip)
+}

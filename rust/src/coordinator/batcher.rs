@@ -1,0 +1,217 @@
+//! Batch construction: packed documents → token tensors + FlashMask
+//! vectors (the L3 half of the paper's data pipeline, appendix A.2.1).
+//!
+//! Byte-level tokenization over the synthetic corpus: each document is a
+//! question plus task-dependent answers; loss is taken on answer bytes
+//! (the SFT/DPO/RM convention), with the final padding document excluded.
+
+use crate::mask::FlashMask;
+use crate::runtime::HostTensor;
+use crate::util::rng::Rng;
+use crate::workload::corpus;
+use crate::workload::docgen::{self, Task, TrainSample};
+
+/// One training batch in the train-step ABI layout.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub batch: usize,
+    pub n: usize,
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub loss_mask: Vec<f32>,
+    pub lts: Vec<i32>,
+    pub lte: Vec<i32>,
+    pub uts: Vec<i32>,
+    pub ute: Vec<i32>,
+    /// Mean block sparsity of the samples (for throughput reporting).
+    pub sparsity: f64,
+    /// Number of loss-bearing tokens.
+    pub loss_tokens: usize,
+}
+
+impl Batch {
+    /// The 7 batch tensors in ABI order (tokens, targets, loss_mask,
+    /// lts, lte, uts, ute).
+    pub fn to_tensors(&self) -> Vec<HostTensor> {
+        let shape = vec![self.batch, self.n];
+        vec![
+            HostTensor::I32 { shape: shape.clone(), data: self.tokens.clone() },
+            HostTensor::I32 { shape: shape.clone(), data: self.targets.clone() },
+            HostTensor::F32 { shape: shape.clone(), data: self.loss_mask.clone() },
+            HostTensor::I32 { shape: shape.clone(), data: self.lts.clone() },
+            HostTensor::I32 { shape: shape.clone(), data: self.lte.clone() },
+            HostTensor::I32 { shape: shape.clone(), data: self.uts.clone() },
+            HostTensor::I32 { shape, data: self.ute.clone() },
+        ]
+    }
+}
+
+/// Streams batches of packed samples.
+pub struct Batcher {
+    pub n: usize,
+    pub batch: usize,
+    pub task: Task,
+    rng: Rng,
+}
+
+impl Batcher {
+    pub fn new(n: usize, batch: usize, task: Task, seed: u64) -> Batcher {
+        Batcher { n, batch, task, rng: Rng::new(seed) }
+    }
+
+    /// Fill one sample's tokens/targets/loss-mask from the corpus.
+    fn fill_sample(&mut self, s: &TrainSample, tokens: &mut [i32], targets: &mut [i32], lm: &mut [f32]) {
+        let n = self.n;
+        for doc in &s.docs {
+            let mut rng = self.rng.fork(doc.start as u64);
+            let (q, answers) = corpus::qa_doc_bytes(doc.question_len, &doc.answer_lens, &mut rng);
+            let mut pos = doc.start;
+            for &b in &q {
+                tokens[pos] = b as i32;
+                pos += 1;
+            }
+            for a in &answers {
+                for &b in a {
+                    tokens[pos] = b as i32;
+                    pos += 1;
+                }
+            }
+            let end = doc.start + doc.len();
+            // next-byte targets within the document; final byte wraps to
+            // a space (never weighted)
+            for i in doc.start..end {
+                targets[i] = if i + 1 < end { tokens[i + 1] } else { b' ' as i32 };
+            }
+            if !doc.is_padding {
+                // loss on answer bytes only (minus each answer's last)
+                let mut a_start = doc.start + doc.question_len;
+                for &al in &doc.answer_lens {
+                    for i in a_start..(a_start + al).saturating_sub(1).min(n) {
+                        lm[i] = 1.0;
+                    }
+                    a_start += al;
+                }
+            }
+        }
+    }
+
+    pub fn next_batch(&mut self) -> Batch {
+        let (b, n) = (self.batch, self.n);
+        let mut out = Batch {
+            batch: b,
+            n,
+            tokens: vec![b' ' as i32; b * n],
+            targets: vec![b' ' as i32; b * n],
+            loss_mask: vec![0.0; b * n],
+            lts: vec![0; b * n],
+            lte: vec![0; b * n],
+            uts: vec![0; b * n],
+            ute: vec![0; b * n],
+            sparsity: 0.0,
+            loss_tokens: 0,
+        };
+        for bi in 0..b {
+            let mut rng = self.rng.fork(0xBA7C + bi as u64);
+            let sample = docgen::gen_sample(n, self.task, &mut rng);
+            let r = bi * n..(bi + 1) * n;
+            self.fill_sample(
+                &sample,
+                &mut out.tokens[r.clone()],
+                &mut out.targets[r.clone()],
+                &mut out.loss_mask[r.clone()],
+            );
+            copy_mask(&sample.mask, bi, n, &mut out);
+            out.sparsity += sample.sparsity / b as f64;
+        }
+        out.loss_tokens = out.loss_mask.iter().filter(|&&x| x > 0.0).count();
+        // ensure at least some signal (degenerate layouts can zero out)
+        if out.loss_tokens == 0 {
+            for bi in 0..b {
+                out.loss_mask[bi * n + n / 2] = 1.0;
+            }
+            out.loss_tokens = b;
+        }
+        out
+    }
+}
+
+fn copy_mask(m: &FlashMask, bi: usize, n: usize, out: &mut Batch) {
+    let r = bi * n..(bi + 1) * n;
+    out.lts[r.clone()].copy_from_slice(&m.lts);
+    out.lte[r.clone()].copy_from_slice(&m.lte);
+    out.uts[r.clone()].copy_from_slice(&m.uts);
+    out.ute[r].copy_from_slice(&m.ute);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shapes_and_ranges() {
+        let mut b = Batcher::new(512, 3, Task::Sft, 1);
+        let batch = b.next_batch();
+        assert_eq!(batch.tokens.len(), 3 * 512);
+        assert!(batch.tokens.iter().all(|&t| (0..256).contains(&t)));
+        assert!(batch.targets.iter().all(|&t| (0..256).contains(&t)));
+        assert!(batch.loss_tokens > 0);
+        assert!(batch.loss_mask.iter().all(|&x| x == 0.0 || x == 1.0));
+    }
+
+    #[test]
+    fn mask_vectors_valid_per_sample() {
+        let mut b = Batcher::new(256, 2, Task::Dpo, 2);
+        let batch = b.next_batch();
+        for bi in 0..2 {
+            let r = bi * 256..(bi + 1) * 256;
+            let m = FlashMask {
+                lts: batch.lts[r.clone()].to_vec(),
+                lte: batch.lte[r.clone()].to_vec(),
+                uts: batch.uts[r.clone()].to_vec(),
+                ute: batch.ute[r].to_vec(),
+                causal: true,
+            };
+            m.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = Batcher::new(256, 2, Task::Sft, 7).next_batch();
+        let b = Batcher::new(256, 2, Task::Sft, 7).next_batch();
+        assert_eq!(a.tokens, b.tokens);
+        assert_eq!(a.lts, b.lts);
+        assert_eq!(a.loss_mask, b.loss_mask);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = Batcher::new(256, 2, Task::Sft, 7).next_batch();
+        let b = Batcher::new(256, 2, Task::Sft, 8).next_batch();
+        assert_ne!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn targets_are_next_token_inside_docs() {
+        let mut b = Batcher::new(256, 1, Task::Sft, 3);
+        let batch = b.next_batch();
+        // at least 90% of positions should satisfy target[i] == token[i+1]
+        let mut hits = 0;
+        for i in 0..255 {
+            if batch.targets[i] == batch.tokens[i + 1] {
+                hits += 1;
+            }
+        }
+        assert!(hits > 230, "hits={hits}");
+    }
+
+    #[test]
+    fn tensor_conversion_order() {
+        let mut b = Batcher::new(128, 1, Task::Rm, 4);
+        let batch = b.next_batch();
+        let t = batch.to_tensors();
+        assert_eq!(t.len(), 7);
+        assert_eq!(t[0].shape(), &[1, 128]);
+        assert!(matches!(t[2], HostTensor::F32 { .. }));
+    }
+}

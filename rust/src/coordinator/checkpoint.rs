@@ -1,0 +1,164 @@
+//! Checkpointing: save/restore trainer state (params + AdamW moments)
+//! to a simple self-describing binary format, so long runs survive
+//! restarts without any python involvement.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "FMCK" | version u32 | step u32 | n_leaves u32
+//! per leaf: ndim u32 | dims u32* | len u32 | f32 data*
+//! repeated 3x (params, m, v)
+//! ```
+
+use crate::runtime::HostTensor;
+use anyhow::{bail, ensure, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"FMCK";
+const VERSION: u32 = 1;
+
+pub struct Checkpoint {
+    pub step: u32,
+    pub params: Vec<HostTensor>,
+    pub opt_m: Vec<HostTensor>,
+    pub opt_v: Vec<HostTensor>,
+}
+
+fn write_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn write_tensor(w: &mut impl Write, t: &HostTensor) -> Result<()> {
+    let (shape, data) = match t {
+        HostTensor::F32 { shape, data } => (shape, data),
+        _ => bail!("checkpoint supports f32 tensors only"),
+    };
+    write_u32(w, shape.len() as u32)?;
+    for &d in shape {
+        write_u32(w, d as u32)?;
+    }
+    write_u32(w, data.len() as u32)?;
+    // safe: f32 slices are plain old data
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    w.write_all(bytes)?;
+    Ok(())
+}
+
+fn read_tensor(r: &mut impl Read) -> Result<HostTensor> {
+    let ndim = read_u32(r)? as usize;
+    ensure!(ndim <= 8, "implausible ndim {ndim}");
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        shape.push(read_u32(r)? as usize);
+    }
+    let len = read_u32(r)? as usize;
+    ensure!(len == shape.iter().product::<usize>().max(1) || shape.is_empty(), "len/shape mismatch");
+    let mut bytes = vec![0u8; len * 4];
+    r.read_exact(&mut bytes)?;
+    let data: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(HostTensor::F32 { shape, data })
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+        w.write_all(MAGIC)?;
+        write_u32(&mut w, VERSION)?;
+        write_u32(&mut w, self.step)?;
+        write_u32(&mut w, self.params.len() as u32)?;
+        for group in [&self.params, &self.opt_m, &self.opt_v] {
+            ensure!(group.len() == self.params.len(), "group size mismatch");
+            for t in group {
+                write_tensor(&mut w, t)?;
+            }
+        }
+        w.flush()?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut r = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        ensure!(&magic == MAGIC, "bad checkpoint magic");
+        let version = read_u32(&mut r)?;
+        ensure!(version == VERSION, "unsupported checkpoint version {version}");
+        let step = read_u32(&mut r)?;
+        let n = read_u32(&mut r)? as usize;
+        ensure!(n > 0 && n < 100_000, "implausible leaf count {n}");
+        let mut groups = Vec::with_capacity(3);
+        for _ in 0..3 {
+            let mut g = Vec::with_capacity(n);
+            for _ in 0..n {
+                g.push(read_tensor(&mut r)?);
+            }
+            groups.push(g);
+        }
+        let opt_v = groups.pop().unwrap();
+        let opt_m = groups.pop().unwrap();
+        let params = groups.pop().unwrap();
+        Ok(Checkpoint { step, params, opt_m, opt_v })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensors() -> Vec<HostTensor> {
+        vec![
+            HostTensor::F32 { shape: vec![2, 3], data: vec![1., 2., 3., 4., 5., 6.] },
+            HostTensor::F32 { shape: vec![4], data: vec![-1.5, 0.0, f32::MIN_POSITIVE, 9.9] },
+        ]
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("fm_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.fmck");
+        let ck = Checkpoint { step: 42, params: tensors(), opt_m: tensors(), opt_v: tensors() };
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.step, 42);
+        assert_eq!(back.params.len(), 2);
+        for (a, b) in ck.params.iter().zip(&back.params) {
+            assert_eq!(a.shape(), b.shape());
+            assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap());
+        }
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("fm_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.fmck");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(path).unwrap();
+    }
+
+    #[test]
+    fn rejects_int_tensors() {
+        let ck = Checkpoint {
+            step: 0,
+            params: vec![HostTensor::I32 { shape: vec![1], data: vec![1] }],
+            opt_m: vec![],
+            opt_v: vec![],
+        };
+        let path = std::env::temp_dir().join("fm_ckpt_int.fmck");
+        assert!(ck.save(&path).is_err());
+    }
+}

@@ -1,0 +1,108 @@
+//! Training metrics: loss tracking, throughput, CSV export.
+
+use std::time::Instant;
+
+/// Rolling training metrics.
+pub struct Metrics {
+    start: Instant,
+    pub steps: usize,
+    pub tokens: usize,
+    pub losses: Vec<f32>,
+    ema: Option<f64>,
+    ema_alpha: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            start: Instant::now(),
+            steps: 0,
+            tokens: 0,
+            losses: Vec::new(),
+            ema: None,
+            ema_alpha: 0.1,
+        }
+    }
+
+    pub fn record(&mut self, loss: f32, tokens: usize) {
+        self.steps += 1;
+        self.tokens += tokens;
+        self.losses.push(loss);
+        let l = loss as f64;
+        self.ema = Some(match self.ema {
+            None => l,
+            Some(e) => e + self.ema_alpha * (l - e),
+        });
+    }
+
+    pub fn ema_loss(&self) -> f64 {
+        self.ema.unwrap_or(f64::NAN)
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn tokens_per_s(&self) -> f64 {
+        self.tokens as f64 / self.elapsed_s().max(1e-9)
+    }
+
+    pub fn last_loss(&self) -> Option<f32> {
+        self.losses.last().copied()
+    }
+
+    /// CSV: `step,loss` per line, with header.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("step,loss\n");
+        for (i, l) in self.losses.iter().enumerate() {
+            out.push_str(&format!("{},{}\n", i + 1, l));
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_csv())
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_ema() {
+        let mut m = Metrics::new();
+        m.record(4.0, 100);
+        m.record(2.0, 100);
+        assert_eq!(m.steps, 2);
+        assert_eq!(m.tokens, 200);
+        let ema = m.ema_loss();
+        assert!(ema < 4.0 && ema > 2.0);
+        assert_eq!(m.last_loss(), Some(2.0));
+    }
+
+    #[test]
+    fn csv_format() {
+        let mut m = Metrics::new();
+        m.record(1.5, 10);
+        m.record(1.25, 10);
+        let csv = m.to_csv();
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "step,loss");
+        assert_eq!(lines[1], "1,1.5");
+        assert_eq!(lines.len(), 3);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let mut m = Metrics::new();
+        m.record(1.0, 1000);
+        assert!(m.tokens_per_s() > 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Layer-3 coordinator: the training driver.
+//!
+//! FlashMask's contribution lives at L1/L2, so (per DESIGN.md) L3 is a
+//! lean driver with real substance in its substrates: the [`batcher`]
+//! packs sampled documents into fixed-length sequences and derives the
+//! per-sample FlashMask vectors; the [`trainer`] owns optimizer state
+//! and drives the AOT train-step executable; [`metrics`] tracks loss and
+//! throughput.  Python is never invoked here.
+
+pub mod batcher;
+pub mod checkpoint;
+pub mod metrics;
+pub mod trainer;
+
+pub use batcher::{Batch, Batcher};
+pub use checkpoint::Checkpoint;
+pub use trainer::{TrainLog, Trainer, TrainerOptions};

@@ -1,0 +1,158 @@
+//! The training loop: AOT train-step executable + AdamW state, driven
+//! entirely from rust.
+//!
+//! State layout follows the manifest ABI: `params..., m..., v...,
+//! step_no, tokens, targets, loss_mask, lts, lte, uts, ute` in, and
+//! `loss, params'..., m'..., v'...` out.  Parameters round-trip through
+//! host literals each step (the crate's execute API returns one tuple
+//! buffer); at the e2e model scales this transfer is a few percent of
+//! step time — measured in EXPERIMENTS.md §Perf.
+
+use super::batcher::Batch;
+use super::metrics::Metrics;
+use crate::runtime::{Executable, HostTensor, Runtime};
+use anyhow::{ensure, Context, Result};
+
+#[derive(Clone, Debug)]
+pub struct TrainerOptions {
+    /// `flashmask` or `densemask` (the paper's convergence A/B).
+    pub variant: String,
+    pub seed: i32,
+    pub log_every: usize,
+    pub quiet: bool,
+}
+
+impl Default for TrainerOptions {
+    fn default() -> Self {
+        TrainerOptions { variant: "flashmask".into(), seed: 0, log_every: 10, quiet: false }
+    }
+}
+
+/// Result of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainLog {
+    pub losses: Vec<f32>,
+    pub tokens_per_s: f64,
+    pub steps: usize,
+    pub elapsed_s: f64,
+}
+
+pub struct Trainer {
+    step_exe: Executable,
+    n_leaves: usize,
+    params: Vec<HostTensor>,
+    opt_m: Vec<HostTensor>,
+    opt_v: Vec<HostTensor>,
+    step_no: i32,
+    opts: TrainerOptions,
+    pub metrics: Metrics,
+}
+
+impl Trainer {
+    /// Initialize from artifacts: runs the `init` executable (so even
+    /// parameter initialization happens without python).
+    pub fn new(rt: &Runtime, opts: TrainerOptions) -> Result<Trainer> {
+        let artifact = format!("train_step_{}", opts.variant);
+        let step_exe = rt
+            .load(&artifact)
+            .with_context(|| format!("loading train-step artifact '{artifact}'"))?;
+        let init = rt.load("init")?;
+        let seed = HostTensor::I32 { shape: vec![1], data: vec![opts.seed] };
+        let params = init.run(&[seed])?;
+        let n_leaves = rt.manifest.n_leaves();
+        ensure!(params.len() == n_leaves, "init returned {} leaves, want {n_leaves}", params.len());
+        let zeros: Vec<HostTensor> = params
+            .iter()
+            .map(|p| HostTensor::F32 { shape: p.shape().to_vec(), data: vec![0.0; p.numel()] })
+            .collect();
+        Ok(Trainer {
+            step_exe,
+            n_leaves,
+            params,
+            opt_m: zeros.clone(),
+            opt_v: zeros,
+            step_no: 0,
+            opts,
+            metrics: Metrics::new(),
+        })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.iter().map(HostTensor::numel).sum()
+    }
+
+    /// Execute one optimizer step on a batch; returns the loss.
+    pub fn step(&mut self, batch: &Batch) -> Result<f32> {
+        let mut inputs: Vec<HostTensor> =
+            Vec::with_capacity(3 * self.n_leaves + 1 + 7);
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.opt_m.iter().cloned());
+        inputs.extend(self.opt_v.iter().cloned());
+        inputs.push(HostTensor::I32 { shape: vec![], data: vec![self.step_no] });
+        inputs.extend(batch.to_tensors());
+
+        let mut out = self.step_exe.run(&inputs)?;
+        ensure!(
+            out.len() == 1 + 3 * self.n_leaves,
+            "train step returned {} outputs, want {}",
+            out.len(),
+            1 + 3 * self.n_leaves
+        );
+        let loss = out[0].scalar_f32()?;
+        let rest = out.split_off(1);
+        let mut it = rest.into_iter();
+        self.params = (&mut it).take(self.n_leaves).collect();
+        self.opt_m = (&mut it).take(self.n_leaves).collect();
+        self.opt_v = (&mut it).take(self.n_leaves).collect();
+        self.step_no += 1;
+        self.metrics.record(loss, batch.loss_tokens.max(batch.batch * batch.n));
+        Ok(loss)
+    }
+
+    /// Snapshot the full optimizer state.
+    pub fn checkpoint(&self) -> super::Checkpoint {
+        super::Checkpoint {
+            step: self.step_no as u32,
+            params: self.params.clone(),
+            opt_m: self.opt_m.clone(),
+            opt_v: self.opt_v.clone(),
+        }
+    }
+
+    /// Restore from a snapshot (shapes must match the manifest ABI).
+    pub fn restore(&mut self, ck: super::Checkpoint) -> Result<()> {
+        ensure!(ck.params.len() == self.n_leaves, "checkpoint leaf count mismatch");
+        for (a, b) in ck.params.iter().zip(&self.params) {
+            ensure!(a.shape() == b.shape(), "checkpoint shape mismatch");
+        }
+        self.params = ck.params;
+        self.opt_m = ck.opt_m;
+        self.opt_v = ck.opt_v;
+        self.step_no = ck.step as i32;
+        Ok(())
+    }
+
+    /// Run `steps` optimizer steps pulling batches from `batcher`.
+    pub fn train(&mut self, batcher: &mut super::Batcher, steps: usize) -> Result<TrainLog> {
+        for s in 0..steps {
+            let batch = batcher.next_batch();
+            let loss = self.step(&batch)?;
+            if !self.opts.quiet && (s + 1) % self.opts.log_every.max(1) == 0 {
+                println!(
+                    "step {:>5}  loss {:>8.4}  ema {:>8.4}  {:>9.0} tok/s  rho={:.2}",
+                    s + 1,
+                    loss,
+                    self.metrics.ema_loss(),
+                    self.metrics.tokens_per_s(),
+                    batch.sparsity,
+                );
+            }
+        }
+        Ok(TrainLog {
+            losses: self.metrics.losses.clone(),
+            tokens_per_s: self.metrics.tokens_per_s(),
+            steps: self.metrics.steps,
+            elapsed_s: self.metrics.elapsed_s(),
+        })
+    }
+}

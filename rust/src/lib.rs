@@ -1,0 +1,31 @@
+//! FlashMask — rust reproduction of *"FlashMask: Efficient and Rich Mask
+//! Extension of FlashAttention"* (ICLR 2025).
+//!
+//! Layer-3 of the three-layer stack (see DESIGN.md):
+//!
+//! * [`mask`] — the paper's column-wise sparse mask representation
+//!   (LTS/LTE/UTS/UTE), builders for every mask family in Fig. 1(a) and
+//!   the per-tile min/max classifier of Eq. 4.
+//! * [`attention`] — a CPU blocked-attention engine executing Alg. 1/2
+//!   tile-for-tile (the "GPU simulator"), plus FlexAttention-like and
+//!   FlashInfer-BSR-like baselines.
+//! * [`workload`] — synthetic dataset generators from appendix
+//!   A.2.1 / A.4.1 / A.5.2.
+//! * [`perf`] — FLOPs accounting, the calibrated A100 timing model and
+//!   the training memory model used to regenerate the paper's tables.
+//! * [`runtime`] — PJRT CPU client executing the AOT artifacts emitted
+//!   by `python/compile/aot.py` (python never runs at request time).
+//! * [`coordinator`] — the training driver: document packing → FlashMask
+//!   vectors → PJRT train step → metrics.
+//! * [`util`] — std-only substitutes for crates unavailable in this
+//!   offline image (CLI, JSON, PRNG, bench harness, mini-proptest).
+
+pub mod attention;
+pub mod coordinator;
+pub mod reports;
+pub mod mask;
+pub mod perf;
+pub mod runtime;
+pub mod server;
+pub mod util;
+pub mod workload;

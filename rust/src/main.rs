@@ -1,0 +1,212 @@
+//! `flashmask` CLI — the L3 leader binary.
+//!
+//! Subcommands map 1:1 onto the paper's experiments (DESIGN.md §5):
+//!
+//! ```text
+//! flashmask info                          # artifacts + platform
+//! flashmask train --steps 200 --task sft  # e2e training via PJRT
+//! flashmask convergence --steps 30        # Fig 3: flashmask vs densemask
+//! flashmask kernel-bench                  # Fig 5/8, Tables 4-9
+//! flashmask sparsity-bench                # Fig 4(a)
+//! flashmask inference-bench               # Tables 10-14
+//! flashmask memory-model                  # Table 2, Fig 4(b), Fig 7
+//! flashmask e2e-model                     # Fig 2 curves + Fig 6 histogram
+//! flashmask gen-data --task dpo           # inspect synthetic samples
+//! ```
+
+use anyhow::{anyhow, Result};
+use flashmask::coordinator::{Batcher, Trainer, TrainerOptions};
+use flashmask::reports;
+use flashmask::runtime::Runtime;
+use flashmask::util::bench::BenchOpts;
+use flashmask::util::cli::Args;
+use flashmask::util::table::Table;
+use flashmask::workload::docgen::{self, Task};
+use std::path::PathBuf;
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn bench_opts(args: &Args) -> Result<BenchOpts> {
+    Ok(BenchOpts {
+        warmup: args.get_usize("warmup", 1).map_err(|e| anyhow!(e))?,
+        iters: args.get_usize("iters", 5).map_err(|e| anyhow!(e))?,
+        max_seconds: args.get_f64("max-seconds", 20.0).map_err(|e| anyhow!(e))?,
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_env().map_err(|e| anyhow!(e))?;
+    let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
+    match sub.as_str() {
+        "info" => cmd_info(&args)?,
+        "train" => cmd_train(&args)?,
+        "convergence" => cmd_convergence(&args)?,
+        "kernel-bench" => {
+            let n = args.get_usize("measure-n", 1024).map_err(|e| anyhow!(e))?;
+            let hd = args.get_usize("head-dim", 128).map_err(|e| anyhow!(e))?;
+            reports::kernel_mask_report(n, &[8192, 32768, 131072], hd, bench_opts(&args)?);
+        }
+        "sparsity-bench" => {
+            let n = args.get_usize("n", 1024).map_err(|e| anyhow!(e))?;
+            reports::sparsity_report(n, 32, bench_opts(&args)?, 7);
+        }
+        "inference-bench" => {
+            let n = args.get_usize("n", 1024).map_err(|e| anyhow!(e))?;
+            reports::inference_report(n, 64, bench_opts(&args)?, 7);
+        }
+        "memory-model" => reports::memory_report(),
+        "e2e-model" => reports::e2e_report(11),
+        "gen-data" => cmd_gen_data(&args)?,
+        "help" | _ => {
+            println!("{}", HELP);
+            return Ok(());
+        }
+    }
+    args.finish().map_err(|e| anyhow!(e))?;
+    Ok(())
+}
+
+const HELP: &str = "flashmask — FlashMask (ICLR 2025) reproduction CLI
+subcommands:
+  info             artifact manifest + PJRT platform
+  train            end-to-end training (--steps N --task sft|lora|dpo|rm
+                   --variant flashmask|densemask --seed S --loss-csv path)
+  convergence      paper Fig 3: train flashmask vs densemask, compare losses
+  kernel-bench     paper Fig 5/8 + Tables 4-9 (--measure-n N --head-dim D)
+  sparsity-bench   paper Fig 4a (--n N)
+  inference-bench  paper Tables 10-14 (--n N)
+  memory-model     paper Table 2, Fig 4b, Fig 7
+  e2e-model        paper Fig 2 curves + Fig 6 histogram
+  gen-data         sample synthetic training data (--task T --n N)
+common: --artifacts DIR (default ./artifacts)";
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let rt = Runtime::open(&artifacts_dir(args))?;
+    println!("platform : {}", rt.platform());
+    println!("preset   : {} ({} params)", rt.manifest.preset, rt.manifest.model.n_params);
+    println!(
+        "model    : d={} L={} H={} dh={} seq={} tiles {}x{}",
+        rt.manifest.model.d_model,
+        rt.manifest.model.n_layers,
+        rt.manifest.model.n_heads,
+        rt.manifest.model.d_head,
+        rt.manifest.model.max_seq,
+        rt.manifest.model.br,
+        rt.manifest.model.bc
+    );
+    let mut t = Table::new(vec!["artifact", "file", "inputs"]);
+    for (name, a) in &rt.manifest.artifacts {
+        t.row(vec![name.clone(), a.file.clone(), a.inputs.len().to_string()]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rt = Runtime::open(&artifacts_dir(args))?;
+    let steps = args.get_usize("steps", 100).map_err(|e| anyhow!(e))?;
+    let task = Task::parse(&args.get_or("task", "sft")).map_err(|e| anyhow!(e))?;
+    let opts = TrainerOptions {
+        variant: args.get_or("variant", "flashmask"),
+        seed: args.get_u64("seed", 0).map_err(|e| anyhow!(e))? as i32,
+        log_every: args.get_usize("log-every", 10).map_err(|e| anyhow!(e))?,
+        quiet: args.flag("quiet"),
+    };
+    let mut trainer = Trainer::new(&rt, opts)?;
+    println!(
+        "training {} ({} params) on synthetic {task} packing, {} steps",
+        rt.manifest.preset,
+        trainer.n_params(),
+        steps
+    );
+    let mut batcher = Batcher::new(
+        rt.manifest.model.max_seq,
+        rt.manifest.batch,
+        task,
+        args.get_u64("data-seed", 1).map_err(|e| anyhow!(e))?,
+    );
+    let log = trainer.train(&mut batcher, steps)?;
+    println!(
+        "done: {} steps in {:.1}s ({:.0} tok/s), loss {:.4} -> {:.4}",
+        log.steps,
+        log.elapsed_s,
+        log.tokens_per_s,
+        log.losses.first().unwrap_or(&f32::NAN),
+        log.losses.last().unwrap_or(&f32::NAN)
+    );
+    if let Some(path) = args.get("loss-csv") {
+        trainer.metrics.write_csv(std::path::Path::new(path))?;
+        println!("loss curve written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_convergence(args: &Args) -> Result<()> {
+    let rt = Runtime::open(&artifacts_dir(args))?;
+    let steps = args.get_usize("steps", 20).map_err(|e| anyhow!(e))?;
+    let task = Task::parse(&args.get_or("task", "sft")).map_err(|e| anyhow!(e))?;
+    let mut losses = Vec::new();
+    for variant in ["flashmask", "densemask"] {
+        let mut trainer = Trainer::new(
+            &rt,
+            TrainerOptions { variant: variant.into(), quiet: true, ..Default::default() },
+        )?;
+        let mut batcher = Batcher::new(rt.manifest.model.max_seq, rt.manifest.batch, task, 1);
+        let log = trainer.train(&mut batcher, steps)?;
+        losses.push(log.losses);
+    }
+    let mut t = Table::new(vec!["step", "flashmask", "densemask", "bit-identical"])
+        .title("paper Fig 3 (deterministic): loss curves must match exactly");
+    let mut all_equal = true;
+    for i in 0..steps {
+        let eq = losses[0][i].to_bits() == losses[1][i].to_bits();
+        all_equal &= eq;
+        t.row(vec![
+            (i + 1).to_string(),
+            format!("{:.6}", losses[0][i]),
+            format!("{:.6}", losses[1][i]),
+            eq.to_string(),
+        ]);
+    }
+    t.print();
+    println!("bit-level convergence equality: {}", if all_equal { "PASS" } else { "FAIL" });
+    if !all_equal {
+        anyhow::bail!("convergence curves diverged");
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let task = Task::parse(&args.get_or("task", "sft")).map_err(|e| anyhow!(e))?;
+    let n = args.get_usize("n", 4096).map_err(|e| anyhow!(e))?;
+    let count = args.get_usize("count", 5).map_err(|e| anyhow!(e))?;
+    let mut rng = flashmask::util::rng::Rng::new(args.get_u64("seed", 0).map_err(|e| anyhow!(e))?);
+    let mut t = Table::new(vec!["sample", "docs", "rho", "layout (q+answers)"])
+        .title(format!("synthetic {task} samples at N={n} (paper A.2.1)"));
+    for i in 0..count {
+        let s = docgen::gen_sample(n, task, &mut rng);
+        let layout: Vec<String> = s
+            .docs
+            .iter()
+            .map(|d| format!("{}+{:?}{}", d.question_len, d.answer_lens, if d.is_padding { "(pad)" } else { "" }))
+            .collect();
+        t.row(vec![
+            i.to_string(),
+            s.docs.len().to_string(),
+            format!("{:.3}", s.sparsity),
+            layout.join(" | "),
+        ]);
+    }
+    t.print();
+    if args.flag("histogram") {
+        let h = docgen::sparsity_histogram(n, task, 60, 3);
+        let mut t = Table::new(vec!["rho bin", "count"]).title("sparsity histogram (paper Fig 6)");
+        for (c, cnt) in h {
+            t.row(vec![format!("{c:.2}"), cnt.to_string()]);
+        }
+        t.print();
+    }
+    Ok(())
+}

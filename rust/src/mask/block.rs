@@ -1,0 +1,243 @@
+//! Per-tile min/max precompute and tile classification (paper Alg. 1
+//! line 4 and Eq. 4).
+//!
+//! The eight `⌈N/Bc⌉`-sized vectors are the paper's "Preprocessing" step;
+//! [`BlockTable::classify`] is the real-time decision the kernel makes
+//! for every `(i, j)` tile: skip it entirely, run it with element-wise
+//! masking, or run it mask-free.
+
+use super::flashmask::FlashMask;
+
+/// Three-way tile type of paper Eq. 4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlockClass {
+    /// Every element masked — the kernel skips the tile (zero FLOPs).
+    FullyMasked,
+    /// Some elements masked — compute + apply element-wise interval test.
+    PartiallyMasked,
+    /// No element masked — compute without any mask work.
+    Unmasked,
+}
+
+/// Block min/max table for one mask at key-block size `bc`.
+#[derive(Clone, Debug)]
+pub struct BlockTable {
+    pub bc: usize,
+    pub lts_min: Vec<i32>,
+    pub lts_max: Vec<i32>,
+    pub lte_min: Vec<i32>,
+    pub lte_max: Vec<i32>,
+    pub uts_min: Vec<i32>,
+    pub uts_max: Vec<i32>,
+    pub ute_min: Vec<i32>,
+    pub ute_max: Vec<i32>,
+}
+
+fn minmax(v: &[i32], bc: usize) -> (Vec<i32>, Vec<i32>) {
+    let tc = v.len().div_ceil(bc);
+    let mut mins = Vec::with_capacity(tc);
+    let mut maxs = Vec::with_capacity(tc);
+    for b in 0..tc {
+        let chunk = &v[b * bc..((b + 1) * bc).min(v.len())];
+        mins.push(*chunk.iter().min().unwrap());
+        maxs.push(*chunk.iter().max().unwrap());
+    }
+    (mins, maxs)
+}
+
+impl BlockTable {
+    pub fn build(m: &FlashMask, bc: usize) -> BlockTable {
+        let (lts_min, lts_max) = minmax(&m.lts, bc);
+        let (lte_min, lte_max) = minmax(&m.lte, bc);
+        let (uts_min, uts_max) = minmax(&m.uts, bc);
+        let (ute_min, ute_max) = minmax(&m.ute, bc);
+        BlockTable { bc, lts_min, lts_max, lte_min, lte_max, uts_min, uts_max, ute_min, ute_max }
+    }
+
+    pub fn tc(&self) -> usize {
+        self.lts_min.len()
+    }
+
+    /// Classify tile `(bi, bj)` with query-block size `br`.
+    ///
+    /// Follows paper Eq. 4 per triangle, plus the implicit-causal test
+    /// for tiles entirely above the diagonal.
+    pub fn classify(
+        &self,
+        m: &FlashMask,
+        bi: usize,
+        br: usize,
+        bj: usize,
+        bc: usize,
+    ) -> BlockClass {
+        debug_assert_eq!(bc, self.bc);
+        let row_lo = (bi * br) as i32; // first row in tile
+        let row_hi = ((bi + 1) * br) as i32; // one past last row
+        let col_lo = (bj * bc) as i32;
+        let col_hi = ((bj + 1) * bc) as i32;
+
+        if m.causal && row_hi <= col_lo {
+            return BlockClass::FullyMasked; // entirely above the diagonal
+        }
+
+        // fully masked by the lower-triangle interval (Eq. 4 case 1)
+        if row_lo >= self.lts_max[bj] && row_hi <= self.lte_min[bj] {
+            return BlockClass::FullyMasked;
+        }
+        // fully masked by the upper-triangle interval
+        if !m.causal && row_lo >= self.uts_max[bj] && row_hi <= self.ute_min[bj] {
+            return BlockClass::FullyMasked;
+        }
+
+        let mut partial = false;
+        // diagonal-crossing tile under implicit causality
+        if m.causal && row_lo < col_hi - 1 {
+            partial = true;
+        }
+        // lower interval intersects the tile (Eq. 4 case 2)
+        if row_hi > self.lts_min[bj] && row_lo < self.lte_max[bj] {
+            partial = true;
+        }
+        if !m.causal && row_hi > self.uts_min[bj] && row_lo < self.ute_max[bj] {
+            partial = true;
+        }
+        if partial {
+            BlockClass::PartiallyMasked
+        } else {
+            BlockClass::Unmasked
+        }
+    }
+
+    /// Tile census over the whole score matrix: (fully, partial, unmasked).
+    pub fn census(&self, m: &FlashMask, br: usize) -> (usize, usize, usize) {
+        let n = m.n();
+        let (tr, tc) = (n.div_ceil(br), self.tc());
+        let (mut f, mut p, mut u) = (0, 0, 0);
+        for bi in 0..tr {
+            for bj in 0..tc {
+                match self.classify(m, bi, br, bj, self.bc) {
+                    BlockClass::FullyMasked => f += 1,
+                    BlockClass::PartiallyMasked => p += 1,
+                    BlockClass::Unmasked => u += 1,
+                }
+            }
+        }
+        (f, p, u)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mask::builders;
+    use crate::util::prop;
+
+    /// Dense-oracle classification of a tile.
+    fn oracle_class(m: &FlashMask, bi: usize, br: usize, bj: usize, bc: usize) -> BlockClass {
+        let n = m.n();
+        let mut any_masked = false;
+        let mut any_allowed = false;
+        for i in bi * br..((bi + 1) * br).min(n) {
+            for j in bj * bc..((bj + 1) * bc).min(n) {
+                if m.allowed(i, j) {
+                    any_allowed = true;
+                } else {
+                    any_masked = true;
+                }
+            }
+        }
+        match (any_allowed, any_masked) {
+            (false, _) => BlockClass::FullyMasked,
+            (true, true) => BlockClass::PartiallyMasked,
+            (true, false) => BlockClass::Unmasked,
+        }
+    }
+
+    /// Soundness contract: classification may be conservative (call a
+    /// clean tile Partial) but must never skip a tile with visible
+    /// elements nor declare a masked element mask-free.
+    fn check_sound(m: &FlashMask, br: usize, bc: usize) -> Result<(), String> {
+        let table = BlockTable::build(m, bc);
+        let n = m.n();
+        for bi in 0..n.div_ceil(br) {
+            for bj in 0..n.div_ceil(bc) {
+                let got = table.classify(m, bi, br, bj, bc);
+                let want = oracle_class(m, bi, br, bj, bc);
+                let ok = match (got, want) {
+                    (BlockClass::FullyMasked, BlockClass::FullyMasked) => true,
+                    (BlockClass::FullyMasked, _) => false, // would drop data!
+                    (BlockClass::Unmasked, BlockClass::Unmasked) => true,
+                    (BlockClass::Unmasked, _) => false, // would miss a mask!
+                    (BlockClass::PartiallyMasked, _) => true, // conservative ok
+                };
+                if !ok {
+                    return Err(format!("tile ({bi},{bj}): got {got:?}, want {want:?}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn causal_tiles_classified() {
+        let m = FlashMask::empty(128, true);
+        let t = BlockTable::build(&m, 32);
+        // above diagonal => fully masked
+        assert_eq!(t.classify(&m, 0, 32, 3, 32), BlockClass::FullyMasked);
+        // diagonal tile => partial
+        assert_eq!(t.classify(&m, 1, 32, 1, 32), BlockClass::PartiallyMasked);
+        // below diagonal => unmasked
+        assert_eq!(t.classify(&m, 3, 32, 0, 32), BlockClass::Unmasked);
+    }
+
+    #[test]
+    fn census_adds_up() {
+        let m = builders::causal_document(256, &[100, 80, 76]);
+        let t = BlockTable::build(&m, 32);
+        let (f, p, u) = t.census(&m, 32);
+        assert_eq!(f + p + u, 64);
+        assert!(f > 0 && p > 0);
+    }
+
+    #[test]
+    fn classification_sound_all_builders() {
+        for (name, m) in builders::benchmark_suite(128, 5) {
+            check_sound(&m, 32, 32).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn prop_classification_sound_random_docs() {
+        prop::check_default("block-classify-sound", |rng| {
+            let n = 128;
+            let k = rng.range(1, 8) as usize;
+            let lens = crate::workload::docgen::sample_doc_lens(n, k, 1, rng);
+            let m = if rng.f64() < 0.5 {
+                builders::causal_document(n, &lens)
+            } else {
+                builders::document(n, &lens)
+            };
+            let br = *rng.choose(&[16usize, 32, 64]);
+            let bc = *rng.choose(&[16usize, 32, 64]);
+            check_sound(&m, br, bc)
+        });
+    }
+
+    #[test]
+    fn prop_block_sparsity_matches_census() {
+        prop::check_default("sparsity-census-consistent", |rng| {
+            let n = 128;
+            let k = rng.range(2, 6) as usize;
+            let lens = crate::workload::docgen::sample_doc_lens(n, k, 1, rng);
+            let m = builders::causal_document(n, &lens);
+            let t = BlockTable::build(&m, 32);
+            let (f, _, _) = t.census(&m, 32);
+            let rho = m.block_sparsity(32, 32);
+            let want = f as f64 / 16.0;
+            if (rho - want).abs() > 1e-12 {
+                return Err(format!("rho {rho} != census {want}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,266 @@
+//! The FlashMask column-wise sparse representation (paper §4.1).
+//!
+//! For key column `j` the masked query rows are
+//! `[lts[j], lte[j]) ∪ [uts[j], ute[j])` — one interval in the lower-left
+//! triangle, one in the upper-right.  `causal` masks leave the UT pair
+//! empty (`== n`) because the whole upper triangle is implicit.
+//!
+//! Memory is `O(N)` (four `i32` vectors) versus the dense mask's
+//! `O(N^2)` — the property behind the paper's Fig. 4(b) and Table 2.
+
+use anyhow::{bail, ensure, Result};
+
+/// Column-wise sparse attention mask over an `n x n` score matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlashMask {
+    pub lts: Vec<i32>,
+    pub lte: Vec<i32>,
+    pub uts: Vec<i32>,
+    pub ute: Vec<i32>,
+    pub causal: bool,
+}
+
+impl FlashMask {
+    /// A mask with no masked intervals (causal => plain causal mask).
+    pub fn empty(n: usize, causal: bool) -> FlashMask {
+        let e = vec![n as i32; n];
+        FlashMask { lts: e.clone(), lte: e.clone(), uts: e.clone(), ute: e, causal }
+    }
+
+    pub fn n(&self) -> usize {
+        self.lts.len()
+    }
+
+    /// Structural validation (interval ordering, bounds, causal
+    /// convention).  All builders return validated masks; call this when
+    /// ingesting masks from outside (e.g. a request payload).
+    pub fn validate(&self) -> Result<()> {
+        let n = self.n() as i32;
+        ensure!(
+            self.lte.len() == self.n()
+                && self.uts.len() == self.n()
+                && self.ute.len() == self.n(),
+            "vector length mismatch"
+        );
+        for j in 0..self.n() {
+            for (name, v) in
+                [("lts", self.lts[j]), ("lte", self.lte[j]), ("uts", self.uts[j]), ("ute", self.ute[j])]
+            {
+                ensure!((0..=n).contains(&v), "{name}[{j}] = {v} out of [0, {n}]");
+            }
+            ensure!(self.lts[j] <= self.lte[j], "lower interval inverted at {j}");
+            ensure!(self.uts[j] <= self.ute[j], "upper interval inverted at {j}");
+            if self.causal {
+                ensure!(
+                    self.uts[j] == n && self.ute[j] == n,
+                    "causal mask with non-empty UT interval at {j}"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Is query row `i` allowed to attend to key column `j`?
+    #[inline]
+    pub fn allowed(&self, i: usize, j: usize) -> bool {
+        if self.causal && i < j {
+            return false;
+        }
+        let i = i as i32;
+        let lower = i >= self.lts[j] && i < self.lte[j];
+        let upper = i >= self.uts[j] && i < self.ute[j];
+        !(lower || upper)
+    }
+
+    /// Dense boolean visibility matrix (row-major `n*n`).  O(N^2) — test
+    /// oracle and baseline input only, never on a hot path.
+    pub fn dense_allowed(&self) -> Vec<bool> {
+        let n = self.n();
+        let mut out = vec![false; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                out[i * n + j] = self.allowed(i, j);
+            }
+        }
+        out
+    }
+
+    /// Dense additive bias: `0.0` where allowed, `-inf` where masked.
+    pub fn dense_bias(&self) -> Vec<f32> {
+        self.dense_allowed()
+            .into_iter()
+            .map(|a| if a { 0.0 } else { f32::NEG_INFINITY })
+            .collect()
+    }
+
+    /// Reconstruct a FlashMask from a dense visibility matrix.
+    ///
+    /// Fails when any column's masked rows do not form one contiguous
+    /// interval per triangle — exactly the representability limit the
+    /// paper's §6 discusses (e.g. fully random masks).
+    pub fn from_dense(allowed: &[bool], n: usize, causal: bool) -> Result<FlashMask> {
+        ensure!(allowed.len() == n * n, "dense mask size mismatch");
+        let mut m = FlashMask::empty(n, causal);
+        for j in 0..n {
+            // lower triangle: rows j..n (row >= col)
+            let lower: Vec<usize> =
+                (j..n).filter(|&i| !allowed[i * n + j]).collect();
+            if let Some((s, e)) = contiguous(&lower)? {
+                m.lts[j] = s as i32;
+                m.lte[j] = e as i32;
+            }
+            // upper triangle: rows 0..j (row < col)
+            let upper: Vec<usize> =
+                (0..j).filter(|&i| !allowed[i * n + j]).collect();
+            if causal {
+                // implicit; any visible upper element is unrepresentable
+                if upper.len() != j {
+                    bail!("column {j}: upper triangle visible under causal=true");
+                }
+            } else if let Some((s, e)) = contiguous(&upper)? {
+                m.uts[j] = s as i32;
+                m.ute[j] = e as i32;
+            }
+        }
+        m.validate()?;
+        // verify roundtrip (catches diag corner cases)
+        let back = m.dense_allowed();
+        ensure!(back == allowed, "reconstruction mismatch (mask not column-interval representable)");
+        Ok(m)
+    }
+
+    /// Fraction of fully-masked `br x bc` tiles (paper §4.3's ρ),
+    /// computed from the interval representation in `O(N)` per tile row —
+    /// no dense materialization.
+    pub fn block_sparsity(&self, br: usize, bc: usize) -> f64 {
+        let table = super::block::BlockTable::build(self, bc);
+        let n = self.n();
+        let tr = n.div_ceil(br);
+        let tc = n.div_ceil(bc);
+        let mut fully = 0usize;
+        for bi in 0..tr {
+            for bj in 0..tc {
+                if table.classify(self, bi, br, bj, bc) == super::block::BlockClass::FullyMasked {
+                    fully += 1;
+                }
+            }
+        }
+        fully as f64 / (tr * tc) as f64
+    }
+
+    /// Memory footprint of this representation in bytes (4 i32 vectors).
+    pub fn repr_bytes(&self) -> usize {
+        4 * self.n() * std::mem::size_of::<i32>()
+    }
+
+    /// Memory a dense bf16 mask of the same shape would need.
+    pub fn dense_bytes(&self) -> usize {
+        self.n() * self.n() * 2
+    }
+}
+
+fn contiguous(rows: &[usize]) -> Result<Option<(usize, usize)>> {
+    if rows.is_empty() {
+        return Ok(None);
+    }
+    let (first, last) = (rows[0], rows[rows.len() - 1]);
+    ensure!(
+        last - first + 1 == rows.len(),
+        "masked rows not contiguous (start {first}, end {last}, count {})",
+        rows.len()
+    );
+    Ok(Some((first, last + 1)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_causal_is_triangular() {
+        let m = FlashMask::empty(4, true);
+        m.validate().unwrap();
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(m.allowed(i, j), i >= j);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_bidirectional_allows_all() {
+        let m = FlashMask::empty(4, false);
+        assert!(m.dense_allowed().iter().all(|&a| a));
+    }
+
+    #[test]
+    fn intervals_mask_rows() {
+        let mut m = FlashMask::empty(6, true);
+        m.lts[1] = 3;
+        m.lte[1] = 5; // rows 3,4 cannot see column 1
+        m.validate().unwrap();
+        assert!(m.allowed(2, 1));
+        assert!(!m.allowed(3, 1));
+        assert!(!m.allowed(4, 1));
+        assert!(m.allowed(5, 1));
+    }
+
+    #[test]
+    fn validate_rejects_inverted() {
+        let mut m = FlashMask::empty(4, true);
+        m.lts[0] = 3;
+        m.lte[0] = 1;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_causal_with_ut() {
+        let mut m = FlashMask::empty(4, true);
+        m.uts[2] = 0;
+        m.ute[2] = 1;
+        assert!(m.validate().is_err());
+    }
+
+    #[test]
+    fn from_dense_roundtrip_causal_doc() {
+        let m = super::super::builders::causal_document(12, &[5, 4, 3]);
+        let dense = m.dense_allowed();
+        let back = FlashMask::from_dense(&dense, 12, true).unwrap();
+        assert_eq!(back.dense_allowed(), dense);
+    }
+
+    #[test]
+    fn from_dense_roundtrip_bidirectional() {
+        let m = super::super::builders::document(12, &[7, 5]);
+        let dense = m.dense_allowed();
+        let back = FlashMask::from_dense(&dense, 12, false).unwrap();
+        assert_eq!(back.dense_allowed(), dense);
+    }
+
+    #[test]
+    fn from_dense_rejects_random_mask() {
+        // checkerboard column — not one interval per triangle
+        let n = 8;
+        let mut allowed = vec![true; n * n];
+        for i in (0..n).step_by(2) {
+            allowed[i * n + 3] = false;
+        }
+        assert!(FlashMask::from_dense(&allowed, n, false).is_err());
+    }
+
+    #[test]
+    fn memory_footprint_linear_vs_quadratic() {
+        let m = FlashMask::empty(4096, true);
+        assert_eq!(m.repr_bytes(), 4 * 4096 * 4);
+        assert_eq!(m.dense_bytes(), 4096 * 4096 * 2);
+        assert!(m.repr_bytes() * 100 < m.dense_bytes());
+    }
+
+    #[test]
+    fn block_sparsity_causal_half() {
+        let m = FlashMask::empty(256, true);
+        let rho = m.block_sparsity(32, 32);
+        // strictly-above-diagonal tiles: (t*(t-1)/2) / t^2 with t=8
+        assert!((rho - 28.0 / 64.0).abs() < 1e-9, "rho={rho}");
+    }
+}

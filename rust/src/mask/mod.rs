@@ -1,0 +1,19 @@
+//! The paper's core contribution: column-wise sparse attention masks.
+//!
+//! * [`flashmask`] — the `(LTS, LTE, UTS, UTE)` representation (paper
+//!   §4.1), dense-oracle materialization, and reconstruction from dense
+//!   masks (with representability checking).
+//! * [`builders`] — one constructor per mask family in paper Fig. 1(a).
+//! * [`block`] — per-tile min/max precompute (Alg. 1 line 4) and the
+//!   three-way tile classification of Eq. 4.
+//! * [`types`] — mask-kind enumeration shared by workloads and benches.
+
+pub mod block;
+pub mod builders;
+pub mod flashmask;
+pub mod ops;
+pub mod types;
+
+pub use block::{BlockClass, BlockTable};
+pub use flashmask::FlashMask;
+pub use types::MaskKind;

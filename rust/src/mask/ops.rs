@@ -1,0 +1,150 @@
+//! Operations on FlashMask representations.
+//!
+//! The paper's §3 notes the column-wise interval idea generalizes under
+//! transposition (row-wise intervals) and composition; these ops make
+//! that concrete and are used by the serving layer to manipulate masks
+//! without ever materializing O(N²) state:
+//!
+//! * [`transpose`] — swap query/key roles (the backward pass of a
+//!   causal mask is an "anti-causal" mask).
+//! * [`intersect`] — visibility AND (compose two mask constraints);
+//!   exact when representable, conservative-error otherwise.
+//! * [`shift_append`] — extend a mask for `extra` freshly appended
+//!   tokens under causal semantics (incremental prefill).
+
+use super::flashmask::FlashMask;
+use anyhow::Result;
+
+/// Transpose the visibility relation: `allowedᵀ[i, j] = allowed[j, i]`.
+///
+/// Column intervals become row intervals; re-derived via `from_dense`
+/// on the transposed oracle (O(N²) — build-time tool, not hot path).
+pub fn transpose(m: &FlashMask) -> Result<FlashMask> {
+    let n = m.n();
+    let src = m.dense_allowed();
+    let mut t = vec![false; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            t[j * n + i] = src[i * n + j];
+        }
+    }
+    FlashMask::from_dense(&t, n, false)
+}
+
+/// Intersect visibility: a token pair is visible only if visible under
+/// both masks.  Fails if the result is not column-interval representable.
+pub fn intersect(a: &FlashMask, b: &FlashMask) -> Result<FlashMask> {
+    assert_eq!(a.n(), b.n());
+    let n = a.n();
+    let da = a.dense_allowed();
+    let db = b.dense_allowed();
+    let both: Vec<bool> = da.iter().zip(&db).map(|(x, y)| *x && *y).collect();
+    FlashMask::from_dense(&both, n, a.causal && b.causal)
+}
+
+/// Extend a causal mask by `extra` appended tokens: new columns are
+/// causal-plain (visible to all later rows), existing columns' lower
+/// intervals that previously ended at old `n` now end at the new `n`.
+pub fn shift_append(m: &FlashMask, extra: usize) -> FlashMask {
+    assert!(m.causal, "shift_append requires a causal mask");
+    let old_n = m.n() as i32;
+    let new_n = old_n + extra as i32;
+    let grow = |v: &[i32], fill: i32| -> Vec<i32> {
+        let mut out: Vec<i32> =
+            v.iter().map(|&x| if x == old_n { new_n } else { x }).collect();
+        out.extend(std::iter::repeat(fill).take(extra));
+        out
+    };
+    let out = FlashMask {
+        lts: grow(&m.lts, new_n),
+        lte: grow(&m.lte, new_n),
+        uts: grow(&m.uts, new_n),
+        ute: grow(&m.ute, new_n),
+        causal: true,
+    };
+    // an old interval [s, old_n) means "masked forever": keep new_n end.
+    // an old empty interval [old_n, old_n) became [new_n, new_n): still
+    // empty.  nothing else changes.
+    debug_assert!(out.validate().is_ok());
+    out.validate().expect("shift_append produced invalid mask");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mask::builders;
+
+    #[test]
+    fn transpose_involution() {
+        let m = builders::causal_document(24, &[10, 8, 6]);
+        let t = transpose(&m).unwrap();
+        let tt = transpose(&t).unwrap();
+        assert_eq!(tt.dense_allowed(), m.dense_allowed());
+    }
+
+    #[test]
+    fn transpose_semantics() {
+        let m = builders::causal(8);
+        let t = transpose(&m).unwrap();
+        for i in 0..8 {
+            for j in 0..8 {
+                assert_eq!(t.allowed(i, j), m.allowed(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn intersect_document_with_sliding_window() {
+        // packed docs AND a local window: the "document sliding window"
+        // pattern long-context training uses
+        let n = 32;
+        let a = builders::causal_document(n, &[16, 16]);
+        let b = builders::sliding_window(n, 4);
+        let c = intersect(&a, &b).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(c.allowed(i, j), a.allowed(i, j) && b.allowed(i, j));
+            }
+        }
+        assert!(c.block_sparsity(8, 8) >= a.block_sparsity(8, 8));
+    }
+
+    #[test]
+    fn intersect_unrepresentable_fails_loudly() {
+        // window AND "not-window" leaves two disjoint intervals per column
+        let n = 32;
+        let a = builders::sliding_window(n, 4);
+        // eviction mask cutting holes mid-window can produce two lower
+        // intervals; construct one directly
+        let mut b = builders::causal(n);
+        b.lts[0] = 2;
+        b.lte[0] = 3; // hole at rows [2,3) of column 0
+        b.validate().unwrap();
+        let c = intersect(&a, &b);
+        // column 0 masked rows: [2,3) ∪ [4,n) — two intervals => error
+        assert!(c.is_err());
+    }
+
+    #[test]
+    fn shift_append_grows_causal_doc() {
+        let m = builders::causal_document(16, &[8, 8]);
+        let g = shift_append(&m, 8);
+        assert_eq!(g.n(), 24);
+        g.validate().unwrap();
+        // old cross-doc invisibility preserved
+        assert!(!g.allowed(12, 3));
+        // old doc columns stay masked for the new rows too
+        assert!(!g.allowed(20, 3));
+        // new columns behave causally
+        assert!(g.allowed(20, 18));
+        assert!(!g.allowed(18, 20));
+    }
+
+    #[test]
+    fn shift_append_zero_is_identity() {
+        let m = builders::causal_document(16, &[10, 6]);
+        let g = shift_append(&m, 0);
+        assert_eq!(g.dense_allowed(), m.dense_allowed());
+    }
+}

@@ -1,0 +1,132 @@
+//! Mask-kind enumeration — the paper's 12 benchmark cases (Tables 4–9)
+//! plus hash-sparse from Fig. 1(a).
+
+use std::fmt;
+use std::str::FromStr;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MaskKind {
+    Full,
+    Causal,
+    SlidingWindow,
+    CausalDocument,
+    Document,
+    ShareQuestion,
+    GlobalSlidingWindow,
+    CausalBlockwise,
+    PrefixLmCausal,
+    PrefixLmDocument,
+    QkSparse,
+    HashSparse,
+    RandomEviction,
+}
+
+impl MaskKind {
+    /// The 12 cases of the paper's kernel benchmark, in table order.
+    pub const BENCHMARK: [MaskKind; 12] = [
+        MaskKind::Full,
+        MaskKind::Causal,
+        MaskKind::SlidingWindow,
+        MaskKind::CausalDocument,
+        MaskKind::Document,
+        MaskKind::ShareQuestion,
+        MaskKind::GlobalSlidingWindow,
+        MaskKind::CausalBlockwise,
+        MaskKind::PrefixLmDocument,
+        MaskKind::PrefixLmCausal,
+        MaskKind::QkSparse,
+        MaskKind::RandomEviction,
+    ];
+
+    pub fn all() -> Vec<MaskKind> {
+        let mut v = Self::BENCHMARK.to_vec();
+        v.push(MaskKind::HashSparse);
+        v
+    }
+
+    /// Paper display name (as used in Tables 4–9).
+    pub fn paper_name(&self) -> &'static str {
+        match self {
+            MaskKind::Full => "Full",
+            MaskKind::Causal => "Causal",
+            MaskKind::SlidingWindow => "Sliding Window",
+            MaskKind::CausalDocument => "Causal Document Mask",
+            MaskKind::Document => "Document Mask",
+            MaskKind::ShareQuestion => "Share Question Mask",
+            MaskKind::GlobalSlidingWindow => "Global Sliding Window",
+            MaskKind::CausalBlockwise => "Causal Blockwise Mask",
+            MaskKind::PrefixLmDocument => "Prefix LM Document Mask",
+            MaskKind::PrefixLmCausal => "Prefix LM Causal Mask",
+            MaskKind::QkSparse => "QK-sparse Mask",
+            MaskKind::HashSparse => "Hash-Sparse Mask",
+            MaskKind::RandomEviction => "Random Eviction Mask",
+        }
+    }
+
+    pub fn is_causal(&self) -> bool {
+        !matches!(
+            self,
+            MaskKind::Full
+                | MaskKind::Document
+                | MaskKind::PrefixLmCausal
+                | MaskKind::PrefixLmDocument
+        )
+    }
+}
+
+impl fmt::Display for MaskKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            MaskKind::Full => "full",
+            MaskKind::Causal => "causal",
+            MaskKind::SlidingWindow => "sliding_window",
+            MaskKind::CausalDocument => "causal_document",
+            MaskKind::Document => "document",
+            MaskKind::ShareQuestion => "share_question",
+            MaskKind::GlobalSlidingWindow => "global_sliding_window",
+            MaskKind::CausalBlockwise => "causal_blockwise",
+            MaskKind::PrefixLmCausal => "prefix_lm_causal",
+            MaskKind::PrefixLmDocument => "prefix_lm_document",
+            MaskKind::QkSparse => "qk_sparse",
+            MaskKind::HashSparse => "hash_sparse",
+            MaskKind::RandomEviction => "random_eviction",
+        };
+        f.write_str(s)
+    }
+}
+
+impl FromStr for MaskKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        MaskKind::all()
+            .into_iter()
+            .find(|k| k.to_string() == s)
+            .ok_or_else(|| format!("unknown mask kind '{s}'"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_names() {
+        for k in MaskKind::all() {
+            assert_eq!(k.to_string().parse::<MaskKind>().unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn benchmark_has_twelve() {
+        assert_eq!(MaskKind::BENCHMARK.len(), 12);
+    }
+
+    #[test]
+    fn causality_flags() {
+        assert!(MaskKind::Causal.is_causal());
+        assert!(!MaskKind::Document.is_causal());
+        assert!(!MaskKind::PrefixLmCausal.is_causal());
+        assert!(MaskKind::ShareQuestion.is_causal());
+    }
+}

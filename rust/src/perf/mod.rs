@@ -1,0 +1,16 @@
+//! Performance accounting and analytic models.
+//!
+//! * [`flops`] — the paper's sparsity-aware FLOPs accounting (appendix
+//!   A.5.1): reported FLOPs count only non-fully-masked tiles.
+//! * [`a100_model`] — an analytic A100 timing model calibrated to the
+//!   paper's own per-tile throughputs (Tables 4–6 anchors); regenerates
+//!   the TFLOPs/s columns of Tables 4–9 at the paper's scales, which the
+//!   CPU engine cannot reach in wall-clock.
+//! * [`memory_model`] — training memory model reproducing Table 2 and
+//!   Figs. 4(b)/7, including the Llama-2 7B/13B/70B configurations and
+//!   the Table 1 parallelism layout.
+
+pub mod a100_model;
+pub mod flops;
+pub mod memory_model;
+pub mod roofline;

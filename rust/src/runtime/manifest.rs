@@ -1,0 +1,187 @@
+//! `artifacts/manifest.json` — the python↔rust ABI contract.
+
+use crate::util::json::{self, Json};
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// One tensor in an artifact signature.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    fn parse(j: &Json) -> Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("spec missing name"))?
+                .to_string(),
+            shape: j
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("spec missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<_>>()?,
+            dtype: j
+                .get("dtype")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("spec missing dtype"))?
+                .to_string(),
+        })
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+}
+
+/// Model geometry (mirrors `ModelConfig` on the python side).
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub br: usize,
+    pub bc: usize,
+    pub n_params: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub preset: String,
+    pub batch: usize,
+    pub model: ModelInfo,
+    pub params: Vec<TensorSpec>,
+    pub artifacts: BTreeMap<String, ArtifactInfo>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let model = j.get("model").ok_or_else(|| anyhow!("missing model"))?;
+        let get = |k: &str| -> Result<usize> {
+            model
+                .get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("model missing '{k}'"))
+        };
+        let params = j
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing params"))?
+            .iter()
+            .map(TensorSpec::parse)
+            .collect::<Result<Vec<_>>>()?;
+        let mut artifacts = BTreeMap::new();
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("missing artifacts"))?;
+        for (name, a) in arts {
+            let file = a
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?
+                .to_string();
+            let inputs = a
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact {name} missing inputs"))?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(name.clone(), ArtifactInfo { file, inputs });
+        }
+        if params.is_empty() {
+            bail!("manifest has no parameters");
+        }
+        Ok(Manifest {
+            preset: j
+                .get("preset")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string(),
+            batch: j.get("batch").and_then(Json::as_usize).unwrap_or(1),
+            model: ModelInfo {
+                vocab: get("vocab")?,
+                d_model: get("d_model")?,
+                n_layers: get("n_layers")?,
+                n_heads: get("n_heads")?,
+                d_head: get("d_head")?,
+                d_ff: get("d_ff")?,
+                max_seq: get("max_seq")?,
+                br: get("br")?,
+                bc: get("bc")?,
+                n_params: get("n_params")?,
+            },
+            params,
+            artifacts,
+        })
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.params.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "preset": "tiny", "batch": 4,
+        "model": {"vocab": 256, "d_model": 256, "n_layers": 4, "n_heads": 8,
+                  "d_head": 32, "d_ff": 688, "max_seq": 512, "br": 64,
+                  "bc": 64, "n_params": 3300000},
+        "params": [{"name": "embed", "shape": [256, 256], "dtype": "float32"}],
+        "artifacts": {
+            "init": {"file": "init.hlo.txt",
+                     "inputs": [{"name": "seed", "shape": [1], "dtype": "int32"}]}
+        }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.preset, "tiny");
+        assert_eq!(m.model.n_params, 3_300_000);
+        assert_eq!(m.params[0].numel(), 256 * 256);
+        assert_eq!(m.artifacts["init"].inputs[0].dtype, "int32");
+    }
+
+    #[test]
+    fn rejects_empty_params() {
+        let bad = SAMPLE.replace(
+            r#""params": [{"name": "embed", "shape": [256, 256], "dtype": "float32"}]"#,
+            r#""params": []"#,
+        );
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if let Ok(text) = std::fs::read_to_string(p) {
+            let m = Manifest::parse(&text).unwrap();
+            assert!(m.artifacts.contains_key("train_step_flashmask"));
+            let ts = &m.artifacts["train_step_flashmask"];
+            assert_eq!(ts.inputs.len(), 3 * m.n_leaves() + 1 + 7);
+        }
+    }
+}

@@ -1,0 +1,198 @@
+//! PJRT runtime: loads `artifacts/*.hlo.txt` (AOT-lowered by
+//! `python/compile/aot.py`) and executes them on the CPU PJRT client.
+//!
+//! Interchange is HLO *text* — xla_extension 0.5.1 rejects jax>=0.5's
+//! 64-bit-id serialized protos, but the text parser reassigns ids (see
+//! /opt/xla-example/README.md).  Python never runs at request time: the
+//! manifest carries the full ABI (argument order, shapes, dtypes).
+
+pub mod manifest;
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+pub use manifest::{ArtifactInfo, Manifest, TensorSpec};
+
+/// Host-side tensor: shape + f32/i32 storage, the runtime's ABI type.
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        match self {
+            HostTensor::F32 { data, .. } if data.len() == 1 => Ok(data[0]),
+            _ => bail!("not an f32 scalar"),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("not an f32 tensor"),
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, .. } => xla::Literal::vec1(data),
+            HostTensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        if dims.len() == 1 {
+            return Ok(lit);
+        }
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                Ok(HostTensor::F32 { shape: dims, data: lit.to_vec::<f32>()? })
+            }
+            xla::ElementType::S32 => {
+                Ok(HostTensor::I32 { shape: dims, data: lit.to_vec::<i32>()? })
+            }
+            other => bail!("unsupported element type {other:?}"),
+        }
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub name: String,
+    pub info: ArtifactInfo,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns the decomposed output tuple.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if inputs.len() != self.info.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.name,
+                self.info.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (t, spec) in inputs.iter().zip(&self.info.inputs) {
+            if t.shape() != spec.shape.as_slice() {
+                bail!(
+                    "{}: input '{}' shape {:?} != expected {:?}",
+                    self.name,
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                );
+            }
+        }
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        self.run_literals(&lits)
+    }
+
+    /// Execute with prebuilt literals (hot path: callers may cache
+    /// literals for constant operands).
+    pub fn run_literals(&self, lits: &[xla::Literal]) -> Result<Vec<HostTensor>> {
+        let result = self.exe.execute::<xla::Literal>(lits)?;
+        let tuple = result
+            .first()
+            .and_then(|r| r.first())
+            .ok_or_else(|| anyhow!("{}: empty execution result", self.name))?
+            .to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+}
+
+/// The PJRT runtime: client + artifact directory + manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Open an artifacts directory produced by `make artifacts`.
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`?)"))?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir: dir.to_path_buf(), manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        format!(
+            "{} ({} devices)",
+            self.client.platform_name(),
+            self.client.device_count()
+        )
+    }
+
+    /// Compile one artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        let info = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        let path = self.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { name: name.to_string(), info, exe })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_roundtrip_f32() {
+        let t = HostTensor::F32 { shape: vec![2, 3], data: vec![1., 2., 3., 4., 5., 6.] };
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.shape(), &[2, 3]);
+        assert_eq!(back.as_f32().unwrap(), &[1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn host_tensor_roundtrip_i32() {
+        let t = HostTensor::I32 { shape: vec![4], data: vec![7, -1, 0, 3] };
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        match back {
+            HostTensor::I32 { data, .. } => assert_eq!(data, vec![7, -1, 0, 3]),
+            _ => panic!("wrong type"),
+        }
+    }
+
+    #[test]
+    fn scalar_helpers() {
+        let t = HostTensor::F32 { shape: vec![], data: vec![2.5] };
+        assert_eq!(t.scalar_f32().unwrap(), 2.5);
+        let t2 = HostTensor::F32 { shape: vec![2], data: vec![1.0, 2.0] };
+        assert!(t2.scalar_f32().is_err());
+    }
+}

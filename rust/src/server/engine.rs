@@ -1,0 +1,194 @@
+//! Serving engine: executes batch plans on the CPU blocked engine or on
+//! the AOT `attn_fwd` PJRT artifact, with per-request latency tracking.
+
+use super::queue::{Request, Response};
+use super::scheduler::BatchPlan;
+use crate::attention::{flash, parallel_heads, AttnConfig};
+use crate::mask::BlockTable;
+use crate::runtime::{Executable, HostTensor};
+use anyhow::Result;
+use std::time::Instant;
+
+/// Which backend executes the attention.
+pub enum EngineKind {
+    /// The rust CPU blocked engine (always available).
+    Cpu { threads: usize },
+    /// The AOT-compiled Pallas kernel via PJRT (requires artifacts and a
+    /// matching `(heads, n, d)` signature).
+    Pjrt(Box<Executable>),
+}
+
+pub struct ServeEngine {
+    kind: EngineKind,
+    pub tile: (usize, usize),
+    pub completed: Vec<Response>,
+    started: Instant,
+    tokens: usize,
+}
+
+/// Aggregate serving statistics (the numbers a deployment dashboards).
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub requests: usize,
+    pub throughput_tok_s: f64,
+    pub mean_queue_ms: f64,
+    pub p50_compute_ms: f64,
+    pub p99_compute_ms: f64,
+    pub mean_sparsity: f64,
+}
+
+impl ServeEngine {
+    pub fn new(kind: EngineKind, tile: (usize, usize)) -> ServeEngine {
+        ServeEngine { kind, tile, completed: Vec::new(), started: Instant::now(), tokens: 0 }
+    }
+
+    /// Execute one batch plan; responses are appended to `completed`.
+    pub fn execute(&mut self, plan: BatchPlan) -> Result<()> {
+        let now = Instant::now();
+        match &self.kind {
+            EngineKind::Cpu { threads } => {
+                let threads = *threads;
+                for req in plan.requests {
+                    let t0 = Instant::now();
+                    let o = cpu_attention(&req, self.tile, threads);
+                    let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    self.tokens += req.n;
+                    self.completed.push(Response {
+                        id: req.id,
+                        o,
+                        queue_ms: now.duration_since(req.arrived).as_secs_f64() * 1e3,
+                        compute_ms,
+                        sparsity: req.mask.block_sparsity(self.tile.0, self.tile.1),
+                    });
+                }
+            }
+            EngineKind::Pjrt(exe) => {
+                for req in plan.requests {
+                    let t0 = Instant::now();
+                    let shape4 = vec![1, req.heads, req.n, req.d];
+                    let vec_t = |v: &Vec<i32>| HostTensor::I32 { shape: vec![1, req.n], data: v.clone() };
+                    let out = exe.run(&[
+                        HostTensor::F32 { shape: shape4.clone(), data: req.q.clone() },
+                        HostTensor::F32 { shape: shape4.clone(), data: req.k.clone() },
+                        HostTensor::F32 { shape: shape4, data: req.v.clone() },
+                        vec_t(&req.mask.lts),
+                        vec_t(&req.mask.lte),
+                        vec_t(&req.mask.uts),
+                        vec_t(&req.mask.ute),
+                    ])?;
+                    let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    self.tokens += req.n;
+                    self.completed.push(Response {
+                        id: req.id,
+                        o: out[0].as_f32()?.to_vec(),
+                        queue_ms: now.duration_since(req.arrived).as_secs_f64() * 1e3,
+                        compute_ms,
+                        sparsity: req.mask.block_sparsity(self.tile.0, self.tile.1),
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn report(&self) -> ServeReport {
+        let n = self.completed.len().max(1);
+        let mut compute: Vec<f64> = self.completed.iter().map(|r| r.compute_ms).collect();
+        compute.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| compute.get(((compute.len() as f64 - 1.0) * p) as usize).copied().unwrap_or(0.0);
+        ServeReport {
+            requests: self.completed.len(),
+            throughput_tok_s: self.tokens as f64 / self.started.elapsed().as_secs_f64().max(1e-9),
+            mean_queue_ms: self.completed.iter().map(|r| r.queue_ms).sum::<f64>() / n as f64,
+            p50_compute_ms: pct(0.5),
+            p99_compute_ms: pct(0.99),
+            mean_sparsity: self.completed.iter().map(|r| r.sparsity).sum::<f64>() / n as f64,
+        }
+    }
+}
+
+fn cpu_attention(req: &Request, tile: (usize, usize), threads: usize) -> Vec<f32> {
+    let cfg = AttnConfig::new(tile.0.min(req.n), tile.1.min(req.n), req.d);
+    let table = BlockTable::build(&req.mask, cfg.bc);
+    let per_head = req.n * req.d;
+    let outs = parallel_heads(req.heads, threads.max(1), |h| {
+        let r = h * per_head..(h + 1) * per_head;
+        flash::flashmask_forward(
+            &req.q[r.clone()],
+            &req.k[r.clone()],
+            &req.v[r],
+            req.n,
+            req.d,
+            &req.mask,
+            &table,
+            cfg,
+            true,
+        )
+        .0
+        .o
+    });
+    let mut o = Vec::with_capacity(req.heads * per_head);
+    for part in outs {
+        o.extend(part);
+    }
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::dense;
+    use crate::mask::builders;
+    use crate::server::queue::RequestQueue;
+    use crate::server::scheduler::{Scheduler, SchedulerConfig};
+    use crate::util::rng::Rng;
+
+    fn rand_req(n: usize, heads: usize, d: usize, seed: u64) -> Request {
+        let mut rng = Rng::new(seed);
+        let mut mk = || (0..heads * n * d).map(|_| rng.normal_f32() * 0.5).collect::<Vec<f32>>();
+        Request::new(0, heads, n, d, mk(), mk(), mk(), builders::causal_document(n, &[n / 2, n / 2]))
+    }
+
+    #[test]
+    fn cpu_engine_matches_dense_per_head() {
+        let (n, heads, d) = (64, 2, 8);
+        let req = rand_req(n, heads, d, 1);
+        let mut q = RequestQueue::new();
+        q.push(req.clone()).unwrap();
+        let s = Scheduler::new(SchedulerConfig { max_batch: 1, max_wait_ms: 0.0 });
+        let mut eng = ServeEngine::new(EngineKind::Cpu { threads: 2 }, (16, 16));
+        let plan = s.next_batch(&mut q, std::time::Instant::now()).unwrap();
+        eng.execute(plan).unwrap();
+        let resp = &eng.completed[0];
+        let bias = req.mask.dense_bias();
+        for h in 0..heads {
+            let r = h * n * d..(h + 1) * n * d;
+            let want = dense::dense_forward(
+                &req.q[r.clone()], &req.k[r.clone()], &req.v[r.clone()],
+                n, d, &bias, 1.0 / (d as f32).sqrt(),
+            );
+            for (a, b) in resp.o[r].iter().zip(&want.o) {
+                assert!((a - b).abs() < 3e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn serve_loop_processes_all_and_reports() {
+        let mut q = RequestQueue::new();
+        for i in 0..6 {
+            q.push(rand_req(32, 1, 8, i)).unwrap();
+        }
+        let s = Scheduler::new(SchedulerConfig { max_batch: 4, max_wait_ms: 0.0 });
+        let mut eng = ServeEngine::new(EngineKind::Cpu { threads: 1 }, (16, 16));
+        while let Some(plan) = s.next_batch(&mut q, std::time::Instant::now()) {
+            eng.execute(plan).unwrap();
+        }
+        assert_eq!(eng.completed.len(), 6);
+        let rep = eng.report();
+        assert_eq!(rep.requests, 6);
+        assert!(rep.throughput_tok_s > 0.0);
+        assert!(rep.p99_compute_ms >= rep.p50_compute_ms);
+        assert!((0.0..=1.0).contains(&rep.mean_sparsity));
+    }
+}

@@ -1,0 +1,17 @@
+//! Inference serving substrate (paper appendix B).
+//!
+//! FlashMask is "equally effective during the inference stage": the
+//! paper benchmarks prefill attention against FlashInfer.  This module
+//! provides the L3 serving pieces a deployment would need around that
+//! kernel: a [`queue`] of masked-attention requests, a [`scheduler`]
+//! that forms batches with compatible shapes/masks, and an [`engine`]
+//! that executes them (CPU engine or the AOT `attn_fwd` artifact via
+//! PJRT) and reports per-request latency plus aggregate throughput.
+
+pub mod engine;
+pub mod queue;
+pub mod scheduler;
+
+pub use engine::{EngineKind, ServeEngine, ServeReport};
+pub use queue::{Request, RequestQueue, Response};
+pub use scheduler::{BatchPlan, Scheduler, SchedulerConfig};

@@ -1,0 +1,132 @@
+//! Request queue for masked-attention inference.
+
+use crate::mask::FlashMask;
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// One prefill attention request: Q/K/V for `heads` heads of `[n, d]`
+/// plus its FlashMask.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub n: usize,
+    pub d: usize,
+    pub heads: usize,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub mask: FlashMask,
+    pub arrived: Instant,
+}
+
+impl Request {
+    pub fn new(id: u64, heads: usize, n: usize, d: usize, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>, mask: FlashMask) -> Request {
+        assert_eq!(q.len(), heads * n * d);
+        assert_eq!(k.len(), heads * n * d);
+        assert_eq!(v.len(), heads * n * d);
+        assert_eq!(mask.n(), n);
+        Request { id, n, d, heads, q, k, v, mask, arrived: Instant::now() }
+    }
+
+    pub fn head(&self, slice: &[f32], h: usize) -> std::ops::Range<usize> {
+        let _ = slice;
+        h * self.n * self.d..(h + 1) * self.n * self.d
+    }
+}
+
+/// Completed request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub o: Vec<f32>,
+    pub queue_ms: f64,
+    pub compute_ms: f64,
+    pub sparsity: f64,
+}
+
+/// FIFO request queue with admission checks.
+#[derive(Default)]
+pub struct RequestQueue {
+    items: VecDeque<Request>,
+    next_id: u64,
+}
+
+impl RequestQueue {
+    pub fn new() -> RequestQueue {
+        RequestQueue::default()
+    }
+
+    /// Admit a request; validates the mask before queueing.
+    pub fn push(&mut self, mut req: Request) -> anyhow::Result<u64> {
+        req.mask.validate()?;
+        req.id = self.next_id;
+        self.next_id += 1;
+        let id = req.id;
+        self.items.push_back(req);
+        Ok(id)
+    }
+
+    pub fn pop(&mut self) -> Option<Request> {
+        self.items.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Peek at the shape key of the front request (for batch grouping).
+    pub fn front_shape(&self) -> Option<(usize, usize, usize)> {
+        self.items.front().map(|r| (r.heads, r.n, r.d))
+    }
+
+    pub fn peek_front(&self) -> Option<&Request> {
+        self.items.front()
+    }
+
+    /// Re-insert at the back preserving id/arrival (scheduler internal).
+    pub(crate) fn push_back_internal(&mut self, r: Request) {
+        self.items.push_back(r);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mask::builders;
+
+    fn req(n: usize) -> Request {
+        let d = 4;
+        Request::new(0, 1, n, d, vec![0.0; n * d], vec![0.0; n * d], vec![0.0; n * d], builders::causal(n))
+    }
+
+    #[test]
+    fn fifo_order_and_ids() {
+        let mut q = RequestQueue::new();
+        let a = q.push(req(16)).unwrap();
+        let b = q.push(req(16)).unwrap();
+        assert!(a < b);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop().unwrap().id, a);
+        assert_eq!(q.pop().unwrap().id, b);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn rejects_invalid_mask() {
+        let mut q = RequestQueue::new();
+        let mut r = req(16);
+        r.mask.lts[0] = 99; // out of range
+        assert!(q.push(r).is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_wrong_qkv_len() {
+        let n = 16;
+        Request::new(0, 1, n, 4, vec![0.0; 3], vec![0.0; n * 4], vec![0.0; n * 4], builders::causal(n));
+    }
+}

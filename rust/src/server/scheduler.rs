@@ -1,0 +1,195 @@
+//! Dynamic batch scheduler for masked-attention serving.
+//!
+//! Groups queued requests that share a `(heads, n, d)` shape into one
+//! execution batch (bounded by `max_batch` and `max_wait_ms`), so the
+//! engine amortizes per-call overhead — the same consideration that
+//! drives the paper's FlashInfer padded-batch discussion (appendix B.2).
+
+use super::queue::{Request, RequestQueue};
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SchedulerConfig {
+    pub max_batch: usize,
+    /// Form a partial batch anyway once the oldest request has waited
+    /// this long.
+    pub max_wait_ms: f64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { max_batch: 8, max_wait_ms: 5.0 }
+    }
+}
+
+/// One batch the engine should execute together.
+#[derive(Debug)]
+pub struct BatchPlan {
+    pub requests: Vec<Request>,
+    pub heads: usize,
+    pub n: usize,
+    pub d: usize,
+}
+
+impl BatchPlan {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
+
+pub struct Scheduler {
+    pub cfg: SchedulerConfig,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Scheduler {
+        Scheduler { cfg }
+    }
+
+    /// Pull the next batch: the longest shape-homogeneous prefix of the
+    /// queue, capped at `max_batch`.  Returns `None` when the queue is
+    /// empty or the front batch should keep waiting for more arrivals.
+    pub fn next_batch(&self, queue: &mut RequestQueue, now: Instant) -> Option<BatchPlan> {
+        let (heads, n, d) = queue.front_shape()?;
+        // count the homogeneous prefix without draining yet
+        let mut count = 0;
+        {
+            let mut probe: Vec<Request> = Vec::new();
+            while let Some(r) = queue.pop() {
+                if (r.heads, r.n, r.d) == (heads, n, d) && count < self.cfg.max_batch {
+                    count += 1;
+                    probe.push(r);
+                } else {
+                    // push back the non-matching request and stop
+                    let mut rest = vec![r];
+                    while let Some(x) = queue.pop() {
+                        rest.push(x);
+                    }
+                    for p in probe.drain(..) {
+                        // keep original order: matching prefix first
+                        queue.push_raw(p);
+                    }
+                    for x in rest {
+                        queue.push_raw(x);
+                    }
+                    break;
+                }
+            }
+            if !probe.is_empty() {
+                // queue fully drained into probe
+                for p in probe {
+                    queue.push_raw(p);
+                }
+            }
+        }
+        if count == 0 {
+            return None;
+        }
+        // batching policy: wait for a full batch unless the oldest
+        // request is past its deadline
+        let oldest_wait = {
+            let front = queue.peek_front().unwrap();
+            now.duration_since(front.arrived).as_secs_f64() * 1e3
+        };
+        if count < self.cfg.max_batch && oldest_wait < self.cfg.max_wait_ms {
+            return None;
+        }
+        let mut requests = Vec::with_capacity(count);
+        for _ in 0..count {
+            requests.push(queue.pop().unwrap());
+        }
+        Some(BatchPlan { requests, heads, n, d })
+    }
+}
+
+impl RequestQueue {
+    /// Re-insert preserving arrival metadata (scheduler internal).
+    pub(crate) fn push_raw(&mut self, r: Request) {
+        // bypass validation: the request was validated on admission
+        self.push_back_internal(r);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mask::builders;
+    use std::time::Duration;
+
+    fn req(n: usize, heads: usize) -> Request {
+        let d = 4;
+        Request::new(
+            0,
+            heads,
+            n,
+            d,
+            vec![0.0; heads * n * d],
+            vec![0.0; heads * n * d],
+            vec![0.0; heads * n * d],
+            builders::causal(n),
+        )
+    }
+
+    #[test]
+    fn batches_homogeneous_prefix() {
+        let mut q = RequestQueue::new();
+        for _ in 0..3 {
+            q.push(req(16, 1)).unwrap();
+        }
+        q.push(req(32, 1)).unwrap();
+        let s = Scheduler::new(SchedulerConfig { max_batch: 8, max_wait_ms: 0.0 });
+        let b = s.next_batch(&mut q, Instant::now()).unwrap();
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.n, 16);
+        assert_eq!(q.len(), 1); // the 32-length request remains
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let mut q = RequestQueue::new();
+        for _ in 0..10 {
+            q.push(req(16, 1)).unwrap();
+        }
+        let s = Scheduler::new(SchedulerConfig { max_batch: 4, max_wait_ms: 0.0 });
+        let b = s.next_batch(&mut q, Instant::now()).unwrap();
+        assert_eq!(b.len(), 4);
+        assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn waits_for_full_batch_until_deadline() {
+        let mut q = RequestQueue::new();
+        q.push(req(16, 1)).unwrap();
+        let s = Scheduler::new(SchedulerConfig { max_batch: 4, max_wait_ms: 50.0 });
+        // fresh request: hold
+        assert!(s.next_batch(&mut q, Instant::now()).is_none());
+        assert_eq!(q.len(), 1);
+        // past deadline: flush partial batch
+        let later = Instant::now() + Duration::from_millis(60);
+        let b = s.next_batch(&mut q, later).unwrap();
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn empty_queue_yields_none() {
+        let mut q = RequestQueue::new();
+        let s = Scheduler::new(SchedulerConfig::default());
+        assert!(s.next_batch(&mut q, Instant::now()).is_none());
+    }
+
+    #[test]
+    fn preserves_order_after_probe() {
+        let mut q = RequestQueue::new();
+        let a = q.push(req(16, 1)).unwrap();
+        let b = q.push(req(16, 1)).unwrap();
+        q.push(req(32, 1)).unwrap();
+        let s = Scheduler::new(SchedulerConfig { max_batch: 8, max_wait_ms: 0.0 });
+        let batch = s.next_batch(&mut q, Instant::now()).unwrap();
+        assert_eq!(batch.requests[0].id, a);
+        assert_eq!(batch.requests[1].id, b);
+    }
+}

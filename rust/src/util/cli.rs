@@ -1,0 +1,142 @@
+//! Tiny CLI argument parser (clap is not vendored in this image).
+//!
+//! Grammar: `prog <subcommand> [--key value]... [--flag]...`
+//! Unrecognised keys are an error at `finish()` so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    used: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                out.subcommand = it.next();
+            }
+        }
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| format!("expected --flag, got '{a}'"))?
+                .to_string();
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    let v = it.next().unwrap();
+                    out.kv.insert(key, v);
+                }
+                _ => out.flags.push(key),
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.used.borrow_mut().push(key.to_string());
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad float '{v}'")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.used.borrow_mut().push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Error on any provided-but-never-queried option (typo guard).
+    pub fn finish(&self) -> Result<(), String> {
+        let used = self.used.borrow();
+        let unknown: Vec<&str> = self
+            .kv
+            .keys()
+            .map(|s| s.as_str())
+            .chain(self.flags.iter().map(|s| s.as_str()))
+            .filter(|k| !used.iter().any(|u| u == k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!("unknown option(s): --{}", unknown.join(", --")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_kv() {
+        let a = args("train --steps 100 --preset tiny --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 100);
+        assert_eq!(a.get_or("preset", "x"), "tiny");
+        assert!(a.flag("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args("bench");
+        assert_eq!(a.get_usize("iters", 7).unwrap(), 7);
+        assert_eq!(a.get_f64("scale", 1.5).unwrap(), 1.5);
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn unknown_flag_fails_finish() {
+        let a = args("run --oops 1");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_value_type() {
+        let a = args("run --steps abc");
+        assert!(a.get_usize("steps", 0).is_err());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = args("--x 1");
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.get_or("x", ""), "1");
+    }
+}

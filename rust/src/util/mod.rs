@@ -1,0 +1,9 @@
+//! std-only utility substrates (the offline image vendors no general
+//! crates — see DESIGN.md §Substitutions).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;

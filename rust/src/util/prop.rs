@@ -1,0 +1,100 @@
+//! Mini property-testing harness (proptest is not vendored; see
+//! DESIGN.md §Substitutions).
+//!
+//! A property is a closure over a seeded [`Rng`]; the runner executes it
+//! for `cases` seeds and reports the failing seed so a reproduction is
+//! one function call away.  No shrinking — failures print their seed and
+//! properties are written to generate small cases to begin with.
+
+use super::rng::Rng;
+
+pub struct PropConfig {
+    pub cases: u64,
+    pub base_seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, base_seed: 0xF1A5_4A5C }
+    }
+}
+
+/// Run `prop` for `cfg.cases` derived seeds; panic with the seed on the
+/// first failure (properties signal failure by returning `Err(msg)`).
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.base_seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed (case {case}, seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Convenience: run with default config.
+pub fn check_default<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    check(name, PropConfig::default(), prop)
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check_default("add-commutes", |rng| {
+            let (a, b) = (rng.range(-100, 100), rng.range(-100, 100));
+            prop_assert!(a + b == b + a, "{a} {b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_reports_seed() {
+        check(
+            "always-fails",
+            PropConfig { cases: 3, base_seed: 1 },
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first: Vec<i64> = vec![];
+        check(
+            "record",
+            PropConfig { cases: 5, base_seed: 9 },
+            |rng| {
+                first.push(rng.range(0, 1000));
+                Ok(())
+            },
+        );
+        let mut second: Vec<i64> = vec![];
+        check(
+            "record2",
+            PropConfig { cases: 5, base_seed: 9 },
+            |rng| {
+                second.push(rng.range(0, 1000));
+                Ok(())
+            },
+        );
+        assert_eq!(first, second);
+    }
+}

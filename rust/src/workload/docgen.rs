@@ -1,0 +1,261 @@
+//! Document/sample construction per paper appendix A.2.1.
+//!
+//! A training sample at max sequence length `N` packs 1..=10 documents
+//! (the last acting as padding), each split into a question plus `k`
+//! answers where `k` depends on the task (SFT/LoRA: 1, DPO: 2, RM: 6)
+//! and every answer is ~10–20% of the query length.
+
+use crate::mask::builders::{self, SharedQuestionDoc};
+use crate::mask::FlashMask;
+use crate::util::rng::Rng;
+
+/// Downstream training task (paper Fig. 2's four columns).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Task {
+    Sft,
+    Lora,
+    Dpo,
+    Rm,
+}
+
+impl Task {
+    pub fn answers_per_doc(&self) -> usize {
+        match self {
+            Task::Sft | Task::Lora => 1,
+            Task::Dpo => 2,
+            Task::Rm => 6,
+        }
+    }
+
+    pub fn min_doc_len(&self) -> usize {
+        match self {
+            Task::Rm => 512,
+            _ => 128,
+        }
+    }
+
+    pub fn max_padding(&self) -> usize {
+        match self {
+            Task::Rm => 512,
+            _ => 128,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Task, String> {
+        match s {
+            "sft" => Ok(Task::Sft),
+            "lora" => Ok(Task::Lora),
+            "dpo" => Ok(Task::Dpo),
+            "rm" => Ok(Task::Rm),
+            _ => Err(format!("unknown task '{s}' (sft|lora|dpo|rm)")),
+        }
+    }
+}
+
+impl std::fmt::Display for Task {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Task::Sft => "sft",
+            Task::Lora => "lora",
+            Task::Dpo => "dpo",
+            Task::Rm => "rm",
+        })
+    }
+}
+
+/// Sample `k` positive lengths summing to `n`, each >= `min_len`.
+pub fn sample_doc_lens(n: usize, k: usize, min_len: usize, rng: &mut Rng) -> Vec<usize> {
+    assert!(k >= 1 && k * min_len <= n, "cannot fit {k} docs of >= {min_len} in {n}");
+    let free = n - k * min_len;
+    // k-1 sorted cut points in [0, free]
+    let mut cuts: Vec<usize> = (0..k - 1).map(|_| rng.gen_range(free as u64 + 1) as usize).collect();
+    cuts.sort_unstable();
+    let mut lens = Vec::with_capacity(k);
+    let mut prev = 0;
+    for c in cuts {
+        lens.push(c - prev + min_len);
+        prev = c;
+    }
+    lens.push(free - prev + min_len);
+    debug_assert_eq!(lens.iter().sum::<usize>(), n);
+    lens
+}
+
+/// One document inside a packed training sample.
+#[derive(Clone, Debug)]
+pub struct DocLayout {
+    pub start: usize,
+    pub question_len: usize,
+    pub answer_lens: Vec<usize>,
+    pub is_padding: bool,
+}
+
+impl DocLayout {
+    pub fn len(&self) -> usize {
+        self.question_len + self.answer_lens.iter().sum::<usize>()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A packed training sample: document layout + the FlashMask it induces.
+#[derive(Clone, Debug)]
+pub struct TrainSample {
+    pub n: usize,
+    pub task: Task,
+    pub docs: Vec<DocLayout>,
+    pub mask: FlashMask,
+    /// Block sparsity at the paper's 128x128 tiling (or n/4 if smaller).
+    pub sparsity: f64,
+}
+
+/// Construct one training sample per appendix A.2.1.
+pub fn gen_sample(n: usize, task: Task, rng: &mut Rng) -> TrainSample {
+    let k_ans = task.answers_per_doc();
+    let min_len = task.min_doc_len().min(n / 2).max(k_ans + 1);
+    // paper: n_docs in [1,10], with task/length-specific caps
+    let max_docs = match (task, n) {
+        (Task::Rm, n) if n <= 4096 => 3,
+        (Task::Rm, n) if n <= 8192 => 4,
+        _ => 10,
+    };
+    let max_fit = (n / min_len).max(1);
+    let n_docs = (rng.range(1, max_docs as i64 + 1) as usize).min(max_fit);
+    let lens = sample_doc_lens(n, n_docs, min_len, rng);
+
+    let mut docs = Vec::with_capacity(lens.len());
+    let mut pos = 0;
+    for (di, &len) in lens.iter().enumerate() {
+        let is_padding = di + 1 == lens.len() && lens.len() > 1;
+        // each answer ≈ 10-20% of the query length (appendix A.2.1)
+        let lo = (len as f64 * 0.1 / (1.0 + 0.1 * k_ans as f64)) as usize;
+        let hi = (len as f64 * 0.2 / (1.0 + 0.2 * k_ans as f64)) as usize;
+        let mut answer_lens = Vec::with_capacity(k_ans);
+        let mut remaining = len;
+        for _ in 0..k_ans {
+            let a = if hi > lo { rng.range(lo as i64, hi as i64 + 1) as usize } else { lo }
+                .clamp(1, remaining.saturating_sub(1).max(1));
+            answer_lens.push(a);
+            remaining = remaining.saturating_sub(a);
+        }
+        let question_len = len - answer_lens.iter().sum::<usize>();
+        docs.push(DocLayout { start: pos, question_len, answer_lens, is_padding });
+        pos += len;
+    }
+
+    let mask = mask_for(n, task, &docs);
+    let tile = (n / 4).clamp(1, 128);
+    let sparsity = mask.block_sparsity(tile, tile);
+    TrainSample { n, task, docs, mask, sparsity }
+}
+
+/// The attention mask induced by a document layout for a task.
+///
+/// SFT/LoRA use causal-document masks; DPO/RM use shared-question masks
+/// (paper §2.1).
+pub fn mask_for(n: usize, task: Task, docs: &[DocLayout]) -> FlashMask {
+    match task {
+        Task::Sft | Task::Lora => {
+            let lens: Vec<usize> = docs.iter().map(|d| d.len()).collect();
+            builders::causal_document(n, &lens)
+        }
+        Task::Dpo | Task::Rm => {
+            let sq: Vec<SharedQuestionDoc> = docs
+                .iter()
+                .map(|d| SharedQuestionDoc {
+                    question_len: d.question_len,
+                    answer_lens: d.answer_lens.clone(),
+                })
+                .collect();
+            builders::share_question(n, &sq)
+        }
+    }
+}
+
+/// Sparsity histogram over sampled data (paper Fig. 6): 10 equal-width
+/// bins over the observed sparsity range of the task's mask family.
+pub fn sparsity_histogram(n: usize, task: Task, samples: usize, seed: u64) -> Vec<(f64, usize)> {
+    let mut rng = Rng::new(seed);
+    let lo = 0.5; // causal families live in [0.5, 1.0] (appendix A.4.1)
+    let hi = 1.0;
+    let mut bins = vec![0usize; 10];
+    for _ in 0..samples {
+        let s = gen_sample(n, task, &mut rng);
+        let b = (((s.sparsity - lo) / (hi - lo) * 10.0) as usize).min(9);
+        bins[b] += 1;
+    }
+    bins.iter()
+        .enumerate()
+        .map(|(i, &c)| (lo + (hi - lo) * (i as f64 + 0.5) / 10.0, c))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn doc_lens_sum_and_min() {
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let lens = sample_doc_lens(1024, 5, 16, &mut rng);
+            assert_eq!(lens.iter().sum::<usize>(), 1024);
+            assert!(lens.iter().all(|&l| l >= 16));
+        }
+    }
+
+    #[test]
+    fn gen_sample_covers_sequence() {
+        let mut rng = Rng::new(2);
+        for task in [Task::Sft, Task::Dpo, Task::Rm] {
+            let s = gen_sample(2048, task, &mut rng);
+            assert_eq!(s.docs.iter().map(|d| d.len()).sum::<usize>(), 2048);
+            assert_eq!(s.mask.n(), 2048);
+            s.mask.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn answers_per_task() {
+        let mut rng = Rng::new(3);
+        let s = gen_sample(4096, Task::Rm, &mut rng);
+        for d in &s.docs {
+            assert_eq!(d.answer_lens.len(), 6);
+        }
+        let s = gen_sample(4096, Task::Dpo, &mut rng);
+        for d in &s.docs {
+            assert_eq!(d.answer_lens.len(), 2);
+        }
+    }
+
+    #[test]
+    fn sft_sparsity_at_least_causal() {
+        // causal-document masks are at least as sparse as plain causal
+        let mut rng = Rng::new(4);
+        let s = gen_sample(1024, Task::Sft, &mut rng);
+        assert!(s.sparsity >= 0.3, "sparsity={}", s.sparsity);
+    }
+
+    #[test]
+    fn histogram_counts_sum() {
+        let h = sparsity_histogram(1024, Task::Sft, 40, 5);
+        assert_eq!(h.iter().map(|(_, c)| c).sum::<usize>(), 40);
+        assert_eq!(h.len(), 10);
+    }
+
+    #[test]
+    fn prop_sample_masks_wellformed() {
+        prop::check_default("train-sample-mask-valid", |rng| {
+            let task = *rng.choose(&[Task::Sft, Task::Lora, Task::Dpo, Task::Rm]);
+            let s = gen_sample(1024, task, rng);
+            s.mask.validate().map_err(|e| e.to_string())?;
+            if !(0.0..=1.0).contains(&s.sparsity) {
+                return Err(format!("sparsity {} out of range", s.sparsity));
+            }
+            Ok(())
+        });
+    }
+}

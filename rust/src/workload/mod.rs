@@ -1,0 +1,9 @@
+//! Synthetic workload generators reproducing the paper's data
+//! construction (appendix A.2.1 for end-to-end training, A.4.1 for the
+//! sparsity sweep, A.5.2 for the kernel benchmark).
+
+pub mod corpus;
+pub mod docgen;
+pub mod sparsity_buckets;
+
+pub use docgen::{sample_doc_lens, Task, TrainSample};

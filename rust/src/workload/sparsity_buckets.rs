@@ -1,0 +1,144 @@
+//! Bucketed sparsity sampling per paper appendix A.4.1 (the Fig. 4(a)
+//! "latency vs sparsity" experiment).
+//!
+//! Causal mask families have block sparsity in `[0.5, 1.0]` (10 buckets
+//! of 0.05); bidirectional families span `[0.0, 1.0]` (20 buckets).  We
+//! sample mask instances until every reachable bucket holds
+//! `min_per_bucket..=max_per_bucket` samples, mirroring the paper's
+//! 10..=20 per-bucket protocol.
+
+use crate::mask::builders::{self, SharedQuestionDoc};
+use crate::mask::{FlashMask, MaskKind};
+use crate::util::rng::Rng;
+use crate::workload::docgen::sample_doc_lens;
+
+#[derive(Clone, Debug)]
+pub struct BucketedSample {
+    pub mask: FlashMask,
+    pub sparsity: f64,
+    pub bucket: usize,
+}
+
+pub struct BucketConfig {
+    pub min_per_bucket: usize,
+    pub max_per_bucket: usize,
+    /// Give up after this many draws per bucket-fill pass (some buckets
+    /// are unreachable for a family, e.g. rho < 0.5 for causal docs).
+    pub max_draws: usize,
+}
+
+impl Default for BucketConfig {
+    fn default() -> Self {
+        BucketConfig { min_per_bucket: 2, max_per_bucket: 4, max_draws: 4000 }
+    }
+}
+
+/// Sparsity range + bucket count for a mask family (appendix A.4.1).
+pub fn bucket_range(kind: MaskKind) -> (f64, f64, usize) {
+    if kind.is_causal() {
+        (0.5, 1.0, 10)
+    } else {
+        (0.0, 1.0, 20)
+    }
+}
+
+fn draw(kind: MaskKind, n: usize, rng: &mut Rng) -> FlashMask {
+    match kind {
+        // doc count ranges from appendix A.4.1
+        MaskKind::CausalDocument => {
+            let k = rng.range(2, 21) as usize;
+            builders::causal_document(n, &sample_doc_lens(n, k.min(n / 2), 1, rng))
+        }
+        MaskKind::Document => {
+            let k = rng.range(2, 11) as usize;
+            builders::document(n, &sample_doc_lens(n, k.min(n / 2), 1, rng))
+        }
+        MaskKind::ShareQuestion => {
+            let k = rng.range(1, 6) as usize;
+            let lens = sample_doc_lens(n, k.min(n / 16).max(1), 12, rng);
+            let docs: Vec<SharedQuestionDoc> = lens
+                .iter()
+                .map(|&dl| {
+                    let n_ans = rng.range(2, 7) as usize;
+                    let a_total = (dl / 2).max(n_ans);
+                    SharedQuestionDoc {
+                        question_len: dl - a_total,
+                        answer_lens: sample_doc_lens(a_total, n_ans, 1, rng),
+                    }
+                })
+                .collect();
+            builders::share_question(n, &docs)
+        }
+        other => builders::build(other, n, rng),
+    }
+}
+
+/// Fill sparsity buckets for `kind` at sequence length `n`, tile `b`.
+pub fn sample_buckets(
+    kind: MaskKind,
+    n: usize,
+    tile: usize,
+    cfg: &BucketConfig,
+    seed: u64,
+) -> Vec<BucketedSample> {
+    let (lo, hi, n_buckets) = bucket_range(kind);
+    let mut rng = Rng::new(seed);
+    let mut counts = vec![0usize; n_buckets];
+    let mut out = Vec::new();
+    for _ in 0..cfg.max_draws {
+        if counts.iter().all(|&c| c >= cfg.min_per_bucket) {
+            break;
+        }
+        let mask = draw(kind, n, &mut rng);
+        let rho = mask.block_sparsity(tile, tile);
+        let b = (((rho - lo) / (hi - lo) * n_buckets as f64) as usize).min(n_buckets - 1);
+        if counts[b] >= cfg.max_per_bucket {
+            continue;
+        }
+        counts[b] += 1;
+        out.push(BucketedSample { mask, sparsity: rho, bucket: b });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn causal_document_buckets_populated() {
+        let cfg = BucketConfig { min_per_bucket: 1, max_per_bucket: 2, max_draws: 400 };
+        let samples = sample_buckets(MaskKind::CausalDocument, 256, 32, &cfg, 1);
+        assert!(!samples.is_empty());
+        for s in &samples {
+            // asymptotically >= 0.5; finite tiling gives Tc(Tc-1)/2Tc^2
+            assert!(s.sparsity >= 0.40, "causal family rho={}", s.sparsity);
+            assert!(s.bucket < 10);
+        }
+        // several distinct buckets reachable
+        let mut buckets: Vec<usize> = samples.iter().map(|s| s.bucket).collect();
+        buckets.sort_unstable();
+        buckets.dedup();
+        assert!(buckets.len() >= 3, "only buckets {buckets:?}");
+    }
+
+    #[test]
+    fn document_buckets_span_wider() {
+        let cfg = BucketConfig { min_per_bucket: 1, max_per_bucket: 2, max_draws: 400 };
+        let samples = sample_buckets(MaskKind::Document, 256, 32, &cfg, 2);
+        let (lo, hi, nb) = bucket_range(MaskKind::Document);
+        assert_eq!((lo, hi, nb), (0.0, 1.0, 20));
+        assert!(samples.iter().any(|s| s.sparsity > 0.5));
+    }
+
+    #[test]
+    fn respects_max_per_bucket() {
+        let cfg = BucketConfig { min_per_bucket: 1, max_per_bucket: 1, max_draws: 300 };
+        let samples = sample_buckets(MaskKind::ShareQuestion, 256, 32, &cfg, 3);
+        let mut counts = std::collections::HashMap::new();
+        for s in &samples {
+            *counts.entry(s.bucket).or_insert(0usize) += 1;
+        }
+        assert!(counts.values().all(|&c| c <= 1));
+    }
+}

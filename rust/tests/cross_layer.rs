@@ -1,0 +1,120 @@
+//! Cross-layer consistency: the rust mask builders must produce exactly
+//! the vectors the python builders produce (the ABI the coordinator
+//! feeds into the Pallas kernel), and the engines must agree on shared
+//! semantics.
+
+use flashmask::attention::{dense, flash, AttnConfig};
+use flashmask::mask::{builders, BlockTable, FlashMask, MaskKind};
+use flashmask::util::prop;
+use flashmask::util::rng::Rng;
+
+/// Hand-checked vector fixtures mirrored in python
+/// (`python/tests/test_masks.py` asserts the same dense semantics).
+#[test]
+fn causal_document_vectors_fixture() {
+    let m = builders::causal_document(12, &[5, 4, 3]);
+    assert_eq!(m.lts, vec![5, 5, 5, 5, 5, 9, 9, 9, 9, 12, 12, 12]);
+    assert_eq!(m.lte, vec![12, 12, 12, 12, 12, 12, 12, 12, 12, 12, 12, 12]);
+    assert!(m.causal);
+}
+
+#[test]
+fn document_vectors_fixture() {
+    let m = builders::document(12, &[5, 7]);
+    assert_eq!(&m.lts[..5], &[5, 5, 5, 5, 5]);
+    assert_eq!(&m.uts[5..], &[0, 0, 0, 0, 0, 0, 0]);
+    assert_eq!(&m.ute[5..], &[5, 5, 5, 5, 5, 5, 5]);
+    // first doc: no upper mask (normalized empty)
+    assert!(m.uts[..5].iter().all(|&x| x == 12));
+}
+
+#[test]
+fn share_question_vectors_fixture() {
+    // q=3, answers [2, 3]; doc covers [0, 8); second doc q=2 a=[2]
+    let m = builders::share_question(
+        12,
+        &[
+            builders::SharedQuestionDoc { question_len: 3, answer_lens: vec![2, 3] },
+            builders::SharedQuestionDoc { question_len: 2, answer_lens: vec![2] },
+        ],
+    );
+    assert_eq!(m.lts, vec![8, 8, 8, 5, 5, 8, 8, 8, 12, 12, 12, 12]);
+}
+
+#[test]
+fn sliding_window_vectors_fixture() {
+    let m = builders::sliding_window(8, 3);
+    assert_eq!(m.lts, vec![3, 4, 5, 6, 7, 8, 8, 8]);
+}
+
+#[test]
+fn prefix_lm_causal_vectors_fixture() {
+    let m = builders::prefix_lm_causal(8, 3);
+    assert!(!m.causal);
+    // prefix columns 0..3: no upper mask; suffix column j: [0, j)
+    assert!(m.uts[..3].iter().all(|&x| x == 8));
+    assert_eq!(&m.uts[3..], &[0, 0, 0, 0, 0]);
+    assert_eq!(&m.ute[3..], &[3, 4, 5, 6, 7]);
+}
+
+#[test]
+fn every_benchmark_mask_roundtrips_from_dense() {
+    // representability: each builder output must reconstruct exactly
+    for (kind, m) in builders::benchmark_suite(96, 13) {
+        let dense = m.dense_allowed();
+        let back = FlashMask::from_dense(&dense, 96, m.causal)
+            .unwrap_or_else(|e| panic!("{kind}: {e}"));
+        assert_eq!(back.dense_allowed(), dense, "{kind}");
+    }
+}
+
+#[test]
+fn engines_agree_across_all_benchmark_masks() {
+    let (n, d) = (96, 8);
+    let mut rng = Rng::new(21);
+    let mut mk = || (0..n * d).map(|_| rng.normal_f32()).collect::<Vec<f32>>();
+    let (q, k, v) = (mk(), mk(), mk());
+    let cfg = AttnConfig::new(32, 16, d);
+    for (kind, mask) in builders::benchmark_suite(n, 17) {
+        let table = BlockTable::build(&mask, cfg.bc);
+        let (a, _) = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+        let b = dense::dense_forward(&q, &k, &v, n, d, &mask.dense_bias(), cfg.scale);
+        for (x, y) in a.o.iter().zip(&b.o) {
+            assert!((x - y).abs() < 3e-5, "{kind}");
+        }
+        // lse agreement (finite rows)
+        for (x, y) in a.lse.iter().zip(&b.lse) {
+            if x.is_finite() || y.is_finite() {
+                assert!((x - y).abs() < 3e-5, "{kind} lse {x} vs {y}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_random_eviction_always_representable() {
+    prop::check_default("eviction-representable", |rng| {
+        let n = 64;
+        let m = builders::random_eviction(n, rng);
+        let back = FlashMask::from_dense(&m.dense_allowed(), n, true)
+            .map_err(|e| e.to_string())?;
+        if back.dense_allowed() != m.dense_allowed() {
+            return Err("roundtrip mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mask_kind_benchmark_covers_paper_tables() {
+    // all 12 rows of Tables 4-9, in order
+    let names: Vec<String> = MaskKind::BENCHMARK.iter().map(|k| k.to_string()).collect();
+    assert_eq!(
+        names,
+        vec![
+            "full", "causal", "sliding_window", "causal_document", "document",
+            "share_question", "global_sliding_window", "causal_blockwise",
+            "prefix_lm_document", "prefix_lm_causal", "qk_sparse", "random_eviction",
+        ]
+    );
+}

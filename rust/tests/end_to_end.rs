@@ -1,0 +1,144 @@
+//! End-to-end behaviour tests that exercise the whole library surface
+//! without PJRT: workload → mask → engines → perf models → reports.
+
+use flashmask::attention::{bsr, flash, flex, parallel_heads, AttnConfig};
+use flashmask::mask::{builders, BlockTable};
+use flashmask::perf::a100_model::{self, Method};
+use flashmask::util::rng::Rng;
+use flashmask::workload::docgen::{self, Task};
+use flashmask::workload::sparsity_buckets::{self, BucketConfig};
+
+#[test]
+fn workload_to_engine_pipeline() {
+    // the coordinator's exact data path, minus PJRT
+    let n = 512;
+    let mut rng = Rng::new(1);
+    for task in [Task::Sft, Task::Dpo, Task::Rm] {
+        let sample = docgen::gen_sample(n, task, &mut rng);
+        let d = 16;
+        let mut mk = || (0..n * d).map(|_| rng.normal_f32()).collect::<Vec<f32>>();
+        let (q, k, v) = (mk(), mk(), mk());
+        let cfg = AttnConfig::new(64, 64, d);
+        let table = BlockTable::build(&sample.mask, cfg.bc);
+        let (skip, s_skip) = flash::flashmask_forward(&q, &k, &v, n, d, &sample.mask, &table, cfg, true);
+        let (noskip, s_noskip) =
+            flash::flashmask_forward(&q, &k, &v, n, d, &sample.mask, &table, cfg, false);
+        assert_eq!(skip.o, noskip.o, "{task:?}: not exact");
+        assert!(s_skip.macs < s_noskip.macs, "{task:?}: nothing skipped");
+        // measured skip fraction tracks the mask's block sparsity
+        let measured = s_skip.tiles_skipped as f64 / s_skip.tiles_total as f64;
+        assert!((measured - sample.sparsity).abs() < 0.35, "{task:?}: {measured} vs {}", sample.sparsity);
+    }
+}
+
+#[test]
+fn latency_decreases_with_sparsity_measured() {
+    // Fig 4(a) on the real engine: more sparsity => fewer macs
+    let n = 512;
+    let cfg = AttnConfig::new(64, 64, 16);
+    let bcfg = BucketConfig { min_per_bucket: 1, max_per_bucket: 1, max_draws: 200 };
+    let samples = sparsity_buckets::sample_buckets(
+        flashmask::mask::MaskKind::CausalDocument,
+        n,
+        cfg.bc,
+        &bcfg,
+        3,
+    );
+    let mut rng = Rng::new(2);
+    let d = 16;
+    let mut mk = || (0..n * d).map(|_| rng.normal_f32()).collect::<Vec<f32>>();
+    let (q, k, v) = (mk(), mk(), mk());
+    let mut pts: Vec<(f64, u64)> = samples
+        .iter()
+        .map(|s| {
+            let table = BlockTable::build(&s.mask, cfg.bc);
+            let (_, st) = flash::flashmask_forward(&q, &k, &v, n, d, &s.mask, &table, cfg, true);
+            (s.sparsity, st.macs)
+        })
+        .collect();
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    // macs must be monotonically non-increasing in sparsity (within noise)
+    for w in pts.windows(2) {
+        assert!(
+            w[1].1 <= w[0].1 + w[0].1 / 5,
+            "work increased with sparsity: {:?}",
+            pts
+        );
+    }
+}
+
+#[test]
+fn flex_and_flashmask_equal_bsr_on_aligned_masks() {
+    let (n, d, rc) = (256, 8, 32);
+    let mask = builders::document(n, &[128, 96, 32]);
+    let pred = |i: usize, j: usize| mask.allowed(i, j);
+    let mut rng = Rng::new(3);
+    let mut mk = || (0..n * d).map(|_| rng.normal_f32()).collect::<Vec<f32>>();
+    let (q, k, v) = (mk(), mk(), mk());
+    let cfg = AttnConfig::new(32, 32, d);
+
+    let table = BlockTable::build(&mask, cfg.bc);
+    let (a, _) = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+    let bm = flex::BlockMask::build(&pred, n, cfg.br, cfg.bc);
+    let (b, _) = flex::flex_forward(&q, &k, &v, n, d, &pred, &bm, cfg);
+    let bsr_mask = bsr::BsrMask::build(&pred, n, rc).unwrap();
+    let (c, _) = bsr::bsr_forward(&q, &k, &v, n, d, &bsr_mask, cfg.scale);
+    for i in 0..n * d {
+        assert!((a.o[i] - b.o[i]).abs() < 3e-5, "flashmask vs flex at {i}");
+        assert!((a.o[i] - c.o[i]).abs() < 3e-5, "flashmask vs bsr at {i}");
+    }
+}
+
+#[test]
+fn parallel_heads_matches_serial() {
+    let (n, d, heads) = (128, 8, 6);
+    let mask = builders::causal(n);
+    let cfg = AttnConfig::new(32, 32, d);
+    let table = BlockTable::build(&mask, cfg.bc);
+    let mut rng = Rng::new(4);
+    let qkv: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..heads)
+        .map(|_| {
+            let mut mk = || (0..n * d).map(|_| rng.normal_f32()).collect::<Vec<f32>>();
+            (mk(), mk(), mk())
+        })
+        .collect();
+    let serial: Vec<Vec<f32>> = qkv
+        .iter()
+        .map(|(q, k, v)| flash::flashmask_forward(q, k, v, n, d, &mask, &table, cfg, true).0.o)
+        .collect();
+    let parallel = parallel_heads(heads, 4, |h| {
+        let (q, k, v) = &qkv[h];
+        flash::flashmask_forward(q, k, v, n, d, &mask, &table, cfg, true).0.o
+    });
+    assert_eq!(serial, parallel);
+}
+
+#[test]
+fn a100_model_speedup_band_matches_paper_headline() {
+    // paper abstract: 1.65x–3.22x end-to-end over dense at long contexts;
+    // kernel-level, FLASHMASK vs FlashDenseMask grows with sparsity
+    let n = 32768;
+    // moderate sparsity (2 docs, rho ~0.75): kernel speedup should sit in
+    // the few-x band that drives the paper's 1.65x-3.22x e2e numbers
+    let mask2 = builders::causal_document(n, &[n / 2; 2]);
+    let fm2 = a100_model::estimate(Method::FlashMask, &mask2, 4, 32, 128);
+    let dm2 = a100_model::estimate(Method::FlashDenseMask, &mask2, 4, 32, 128);
+    let speedup2 = dm2.total_ms() / fm2.total_ms();
+    assert!((1.5..12.0).contains(&speedup2), "speedup {speedup2} out of band");
+
+    // extreme sparsity (8 docs, rho ~0.94): speedup grows, like the
+    // paper's appendix-B dense-mask comparisons (up to ~35x at rho 0.96)
+    let mask8 = builders::causal_document(n, &[n / 8; 8]);
+    let fm8 = a100_model::estimate(Method::FlashMask, &mask8, 4, 32, 128);
+    let dm8 = a100_model::estimate(Method::FlashDenseMask, &mask8, 4, 32, 128);
+    let speedup8 = dm8.total_ms() / fm8.total_ms();
+    assert!(speedup8 > speedup2, "speedup must grow with sparsity");
+    assert!(speedup8 < 50.0, "implausible speedup {speedup8}");
+}
+
+#[test]
+fn reports_smoke() {
+    // reports must not panic (tables printed to stdout)
+    flashmask::reports::memory_report();
+    flashmask::reports::e2e_report(3);
+}

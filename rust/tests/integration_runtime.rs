@@ -1,0 +1,154 @@
+//! Integration: PJRT runtime executes the AOT artifacts and the
+//! coordinator trains over them.  These tests need `artifacts/` (built
+//! by `make artifacts`); they skip gracefully when it is absent so
+//! `cargo test` stays runnable pre-AOT.
+
+use flashmask::coordinator::{Batcher, Trainer, TrainerOptions};
+use flashmask::runtime::{HostTensor, Runtime};
+use flashmask::workload::docgen::Task;
+use std::path::{Path, PathBuf};
+
+fn artifacts() -> Option<PathBuf> {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    p.join("manifest.json").exists().then_some(p)
+}
+
+macro_rules! require_artifacts {
+    () => {
+        match artifacts() {
+            Some(p) => p,
+            None => {
+                eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn manifest_loads_and_platform_reports() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(&dir).unwrap();
+    assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+    assert!(rt.manifest.model.n_params > 100_000);
+    assert!(rt.manifest.artifacts.contains_key("init"));
+    assert!(rt.manifest.artifacts.contains_key("train_step_flashmask"));
+}
+
+#[test]
+fn init_is_deterministic_across_runs() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(&dir).unwrap();
+    let init = rt.load("init").unwrap();
+    let seed = HostTensor::I32 { shape: vec![1], data: vec![7] };
+    let a = init.run(&[seed.clone()]).unwrap();
+    let b = init.run(&[seed]).unwrap();
+    assert_eq!(a.len(), rt.manifest.n_leaves());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.as_f32().unwrap(), y.as_f32().unwrap());
+    }
+}
+
+#[test]
+fn attn_fwd_artifact_matches_cpu_engine() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(&dir).unwrap();
+    let exe = rt.load("attn_fwd").unwrap();
+    // shapes from the manifest ABI
+    let spec = &exe.info.inputs[0];
+    let (h, n, d) = (spec.shape[1], spec.shape[2], spec.shape[3]);
+
+    let mut rng = flashmask::util::rng::Rng::new(5);
+    let mut mk = || {
+        let data: Vec<f32> = (0..h * n * d).map(|_| rng.normal_f32() * 0.5).collect();
+        HostTensor::F32 { shape: vec![1, h, n, d], data }
+    };
+    let (q, k, v) = (mk(), mk(), mk());
+    let mask = flashmask::mask::builders::causal_document(n, &[n / 2, n / 4, n / 4]);
+    let vec_t = |v: &Vec<i32>| HostTensor::I32 { shape: vec![1, n], data: v.clone() };
+    let out = exe
+        .run(&[
+            q.clone(),
+            k.clone(),
+            v.clone(),
+            vec_t(&mask.lts),
+            vec_t(&mask.lte),
+            vec_t(&mask.uts),
+            vec_t(&mask.ute),
+        ])
+        .unwrap();
+    let o = out[0].as_f32().unwrap();
+
+    // compare head 0 against the rust CPU engine
+    let cfg = flashmask::attention::AttnConfig::new(
+        rt.manifest.model.br,
+        rt.manifest.model.bc,
+        d,
+    );
+    let table = flashmask::mask::BlockTable::build(&mask, cfg.bc);
+    let (want, _) = flashmask::attention::flash::flashmask_forward(
+        &q.as_f32().unwrap()[..n * d],
+        &k.as_f32().unwrap()[..n * d],
+        &v.as_f32().unwrap()[..n * d],
+        n,
+        d,
+        &mask,
+        &table,
+        cfg,
+        true,
+    );
+    let mut max_err = 0f32;
+    for i in 0..n * d {
+        max_err = max_err.max((o[i] - want.o[i]).abs());
+    }
+    assert!(max_err < 5e-4, "kernel vs engine max err {max_err}");
+}
+
+#[test]
+fn eval_step_runs_and_is_finite() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(&dir).unwrap();
+    let eval = rt.load("eval_step").unwrap();
+    let init = rt.load("init").unwrap();
+    let params = init.run(&[HostTensor::I32 { shape: vec![1], data: vec![0] }]).unwrap();
+    let mut batcher = Batcher::new(rt.manifest.model.max_seq, rt.manifest.batch, Task::Sft, 3);
+    let batch = batcher.next_batch();
+    let mut inputs = params;
+    inputs.extend(batch.to_tensors());
+    let out = eval.run(&inputs).unwrap();
+    let loss = out[0].scalar_f32().unwrap();
+    assert!(loss.is_finite() && loss > 0.0, "loss={loss}");
+    // untrained byte-level model: loss near ln(256)
+    assert!((loss - (256f32).ln()).abs() < 1.5, "loss={loss}");
+}
+
+#[test]
+fn two_train_steps_reduce_loss_and_are_deterministic() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(&dir).unwrap();
+    let run = || {
+        let mut trainer = Trainer::new(
+            &rt,
+            TrainerOptions { variant: "flashmask".into(), quiet: true, ..Default::default() },
+        )
+        .unwrap();
+        let mut batcher = Batcher::new(rt.manifest.model.max_seq, rt.manifest.batch, Task::Sft, 9);
+        let l1 = trainer.step(&batcher.next_batch()).unwrap();
+        let l2 = trainer.step(&batcher.next_batch()).unwrap();
+        (l1, l2)
+    };
+    let (a1, a2) = run();
+    let (b1, b2) = run();
+    assert_eq!(a1.to_bits(), b1.to_bits(), "run-to-run determinism");
+    assert_eq!(a2.to_bits(), b2.to_bits());
+    assert!(a2 < a1 + 0.5, "loss exploded: {a1} -> {a2}");
+}
+
+#[test]
+fn rejects_wrong_shapes() {
+    let dir = require_artifacts!();
+    let rt = Runtime::open(&dir).unwrap();
+    let init = rt.load("init").unwrap();
+    let bad = HostTensor::I32 { shape: vec![2], data: vec![1, 2] };
+    assert!(init.run(&[bad]).is_err());
+}
