@@ -1,0 +1,88 @@
+//! `cargo bench --bench bench_decode [-- --smoke]`
+//!
+//! Autoregressive decode through the paged KV cache: FLASHMASK page
+//! skipping vs. a dense-cache baseline that visits every page.  For
+//! each mask family the bench reports decode throughput (generated
+//! tokens/s), the fraction of cache pages skipped, and the speedup —
+//! the decode analogue of the paper's Tables 10–14 prefill comparison.
+//!
+//! `--smoke` shrinks the workload to a ~2 s run for scripts/verify.sh.
+
+use flashmask::decode::{BatcherConfig, ContinuousBatcher, DecodeRequest};
+use flashmask::mask::builders;
+use flashmask::util::bench::time_once;
+use flashmask::util::rng::Rng;
+use flashmask::util::table::Table;
+
+fn requests(n: usize, d: usize, heads: usize, count: usize, mask_of: &dyn Fn(usize, &mut Rng) -> flashmask::mask::FlashMask) -> Vec<DecodeRequest> {
+    let mut rng = Rng::new(42);
+    (0..count as u64)
+        .map(|id| {
+            let mask = mask_of(n, &mut rng);
+            let mut mk =
+                || (0..heads * n * d).map(|_| rng.normal_f32() * 0.5).collect::<Vec<f32>>();
+            DecodeRequest::new(id, heads, n, d, n / 4, mk(), mk(), mk(), mask)
+        })
+        .collect()
+}
+
+fn run(reqs: &[DecodeRequest], page_size: usize, d: usize, skip: bool) -> (f64, f64, u64) {
+    let cfg = BatcherConfig { page_size, d, max_pages: 1 << 16, max_active: 8, skip };
+    let mut b = ContinuousBatcher::new(cfg);
+    for r in reqs {
+        b.submit(r.clone()).expect("submit");
+    }
+    let (report, ms) = time_once(|| b.run().expect("decode run"));
+    (ms, report.pages_skip_fraction, report.tokens)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (n, d, heads, count) = if smoke { (256, 16, 1, 2) } else { (1024, 32, 2, 4) };
+    let page_size = 32;
+    assert!(n >= 4 * page_size, "acceptance regime: n >= 4x page size");
+
+    let cases: Vec<(&str, Box<dyn Fn(usize, &mut Rng) -> flashmask::mask::FlashMask>)> = vec![
+        ("causal", Box::new(|n, _| builders::causal(n))),
+        ("sliding_window", Box::new(|n, _| builders::sliding_window(n, (n / 8).max(1)))),
+        (
+            "causal_document",
+            Box::new(|n, rng| {
+                let k = flashmask::workload::docgen::sample_doc_lens(n, 4, 1, rng);
+                builders::causal_document(n, &k)
+            }),
+        ),
+        ("random_eviction", Box::new(|n, rng| builders::random_eviction(n, rng))),
+    ];
+
+    println!(
+        "decode bench: n={n} d={d} heads={heads} seqs={count} page={page_size}{}",
+        if smoke { " (smoke)" } else { "" }
+    );
+    let mut t = Table::new(vec![
+        "mask",
+        "tok/s skip",
+        "tok/s dense",
+        "speedup",
+        "pages skipped",
+    ])
+    .title("paged-KV decode: FLASHMASK page skip vs dense cache");
+    for (name, mask_of) in &cases {
+        let reqs = requests(n, d, heads, count, mask_of.as_ref());
+        let (ms_skip, frac, tokens) = run(&reqs, page_size, d, true);
+        let (ms_dense, _, _) = run(&reqs, page_size, d, false);
+        let tps_skip = tokens as f64 / (ms_skip / 1e3);
+        let tps_dense = tokens as f64 / (ms_dense / 1e3);
+        if *name == "sliding_window" {
+            assert!(frac > 0.0, "sliding-window decode must skip pages at n >= 4x page size");
+        }
+        t.row(vec![
+            name.to_string(),
+            format!("{tps_skip:.0}"),
+            format!("{tps_dense:.0}"),
+            format!("{:.2}x", ms_dense / ms_skip),
+            format!("{:.1}%", frac * 100.0),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,284 @@
+//! Paged KV cache for autoregressive decode.
+//!
+//! K/V rows are stored in fixed-size pages (`page_size` tokens of head
+//! dimension `d`) drawn from a global [`PagePool`].  A sequence owns a
+//! [`PagedKv`] — an ordered list of page ids plus a token count — so
+//! cache memory is allocated in page granules as the sequence grows and
+//! returned to the pool when it retires (or is preempted, which the
+//! pool accounts separately as an eviction).
+//!
+//! The page is also the *skip granule*: `mask::incremental` classifies
+//! whole pages against the FlashMask column intervals, so the decode
+//! step kernel never touches pages whose every column is masked for the
+//! current row (sliding windows, packed documents, evicted KV entries).
+
+/// Index into the pool's page storage.
+pub type PageId = usize;
+
+/// Pool bookkeeping (the numbers a serving dashboard graphs).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PoolStats {
+    /// Pages handed out over the pool's lifetime.
+    pub allocs: u64,
+    /// Pages returned by retiring sequences.
+    pub frees: u64,
+    /// Pages returned by preemption under memory pressure.
+    pub evictions: u64,
+    /// Allocation attempts that found the pool exhausted.
+    pub alloc_failures: u64,
+    /// High-water mark of pages simultaneously in use.
+    pub peak_in_use: usize,
+}
+
+/// Global fixed-capacity page pool shared by every active sequence.
+///
+/// Storage is grown lazily up to `max_pages`; freed pages go on a free
+/// list and are reused before new storage is touched.
+pub struct PagePool {
+    page_size: usize,
+    d: usize,
+    max_pages: usize,
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    free: Vec<PageId>,
+    in_use: usize,
+    pub stats: PoolStats,
+}
+
+impl PagePool {
+    pub fn new(page_size: usize, d: usize, max_pages: usize) -> PagePool {
+        assert!(page_size >= 1 && d >= 1 && max_pages >= 1);
+        PagePool {
+            page_size,
+            d,
+            max_pages,
+            k: Vec::new(),
+            v: Vec::new(),
+            free: Vec::new(),
+            in_use: 0,
+            stats: PoolStats::default(),
+        }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.max_pages
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.in_use
+    }
+
+    /// Pages that an `alloc` could still hand out right now.
+    pub fn available(&self) -> usize {
+        self.max_pages - self.in_use
+    }
+
+    /// Hand out one page, or `None` when the pool is exhausted.
+    pub fn try_alloc(&mut self) -> Option<PageId> {
+        let id = match self.free.pop() {
+            Some(id) => id,
+            None => {
+                if self.k.len() >= self.max_pages {
+                    self.stats.alloc_failures += 1;
+                    return None;
+                }
+                let elems = self.page_size * self.d;
+                self.k.push(vec![0.0; elems]);
+                self.v.push(vec![0.0; elems]);
+                self.k.len() - 1
+            }
+        };
+        self.in_use += 1;
+        self.stats.allocs += 1;
+        self.stats.peak_in_use = self.stats.peak_in_use.max(self.in_use);
+        Some(id)
+    }
+
+    /// Return a page from a retiring sequence.
+    pub fn free_page(&mut self, id: PageId) {
+        self.release(id);
+        self.stats.frees += 1;
+    }
+
+    /// Return a page taken back by preemption (eviction accounting).
+    pub fn evict_page(&mut self, id: PageId) {
+        self.release(id);
+        self.stats.evictions += 1;
+    }
+
+    fn release(&mut self, id: PageId) {
+        debug_assert!(id < self.k.len(), "foreign page id");
+        debug_assert!(!self.free.contains(&id), "double free of page {id}");
+        self.free.push(id);
+        self.in_use -= 1;
+    }
+
+    pub fn page_k(&self, id: PageId) -> &[f32] {
+        &self.k[id]
+    }
+
+    pub fn page_v(&self, id: PageId) -> &[f32] {
+        &self.v[id]
+    }
+
+    fn write_row(&mut self, id: PageId, slot: usize, k_row: &[f32], v_row: &[f32]) {
+        debug_assert!(slot < self.page_size);
+        debug_assert_eq!(k_row.len(), self.d);
+        debug_assert_eq!(v_row.len(), self.d);
+        let off = slot * self.d;
+        self.k[id][off..off + self.d].copy_from_slice(k_row);
+        self.v[id][off..off + self.d].copy_from_slice(v_row);
+    }
+}
+
+/// One sequence's (single-head) cache: ordered pages plus token count.
+#[derive(Clone, Debug, Default)]
+pub struct PagedKv {
+    page_ids: Vec<PageId>,
+    len: usize,
+}
+
+impl PagedKv {
+    pub fn new() -> PagedKv {
+        PagedKv::default()
+    }
+
+    /// Cached tokens.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn n_pages(&self) -> usize {
+        self.page_ids.len()
+    }
+
+    pub fn page_id(&self, p: usize) -> PageId {
+        self.page_ids[p]
+    }
+
+    /// Valid tokens in page `p` (the tail page may be partially filled).
+    pub fn page_cols(&self, p: usize, page_size: usize) -> usize {
+        debug_assert!(p < self.page_ids.len());
+        (self.len - p * page_size).min(page_size)
+    }
+
+    /// Append one K/V row; returns `false` (appending nothing) when a
+    /// fresh page was needed and the pool is exhausted.
+    #[must_use]
+    pub fn append(&mut self, pool: &mut PagePool, k_row: &[f32], v_row: &[f32]) -> bool {
+        let ps = pool.page_size();
+        let slot = self.len % ps;
+        if slot == 0 {
+            match pool.try_alloc() {
+                Some(id) => self.page_ids.push(id),
+                None => return false,
+            }
+        }
+        let id = *self.page_ids.last().unwrap();
+        pool.write_row(id, slot, k_row, v_row);
+        self.len += 1;
+        true
+    }
+
+    /// Return every page to the pool; `evict` selects the accounting
+    /// bucket (preemption vs. normal retirement).
+    pub fn release(&mut self, pool: &mut PagePool, evict: bool) {
+        for id in self.page_ids.drain(..) {
+            if evict {
+                pool.evict_page(id);
+            } else {
+                pool.free_page(id);
+            }
+        }
+        self.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(v: f32, d: usize) -> Vec<f32> {
+        vec![v; d]
+    }
+
+    #[test]
+    fn append_and_lookup_roundtrip() {
+        let d = 4;
+        let mut pool = PagePool::new(3, d, 8);
+        let mut kv = PagedKv::new();
+        for t in 0..7 {
+            assert!(kv.append(&mut pool, &row(t as f32, d), &row(-(t as f32), d)));
+        }
+        assert_eq!(kv.len(), 7);
+        assert_eq!(kv.n_pages(), 3); // ceil(7/3)
+        assert_eq!(kv.page_cols(0, 3), 3);
+        assert_eq!(kv.page_cols(2, 3), 1); // tail page
+        for t in 0..7 {
+            let (p, slot) = (t / 3, t % 3);
+            let k = pool.page_k(kv.page_id(p));
+            let v = pool.page_v(kv.page_id(p));
+            assert_eq!(k[slot * d], t as f32);
+            assert_eq!(v[slot * d], -(t as f32));
+        }
+    }
+
+    #[test]
+    fn pool_exhaustion_fails_cleanly() {
+        let mut pool = PagePool::new(2, 2, 2);
+        let mut kv = PagedKv::new();
+        for t in 0..4 {
+            assert!(kv.append(&mut pool, &row(t as f32, 2), &row(0.0, 2)));
+        }
+        // pool full: the 5th token needs a 3rd page
+        assert!(!kv.append(&mut pool, &row(9.0, 2), &row(9.0, 2)));
+        assert_eq!(kv.len(), 4, "failed append must not grow the cache");
+        assert_eq!(pool.stats.alloc_failures, 1);
+        assert_eq!(pool.available(), 0);
+    }
+
+    #[test]
+    fn release_recycles_pages() {
+        let mut pool = PagePool::new(2, 2, 2);
+        let mut a = PagedKv::new();
+        for _ in 0..4 {
+            assert!(a.append(&mut pool, &row(1.0, 2), &row(1.0, 2)));
+        }
+        a.release(&mut pool, false);
+        assert_eq!(pool.available(), 2);
+        assert_eq!(pool.stats.frees, 2);
+        // freed pages are reusable by another sequence
+        let mut b = PagedKv::new();
+        for _ in 0..4 {
+            assert!(b.append(&mut pool, &row(2.0, 2), &row(2.0, 2)));
+        }
+        assert_eq!(b.n_pages(), 2);
+        assert_eq!(pool.stats.allocs, 4);
+    }
+
+    #[test]
+    fn eviction_accounting_separate_from_frees() {
+        let mut pool = PagePool::new(2, 2, 4);
+        let mut kv = PagedKv::new();
+        for _ in 0..4 {
+            assert!(kv.append(&mut pool, &row(0.0, 2), &row(0.0, 2)));
+        }
+        kv.release(&mut pool, true);
+        assert_eq!(pool.stats.evictions, 2);
+        assert_eq!(pool.stats.frees, 0);
+        assert_eq!(pool.stats.peak_in_use, 2);
+        assert_eq!(pool.in_use(), 0);
+    }
+}

@@ -1,0 +1,37 @@
+//! Autoregressive decode subsystem: paged KV cache + incremental
+//! FlashMask + continuous batching.
+//!
+//! The serving substrate in [`crate::server`] is prefill-only: every
+//! request carries full Q/K/V and batches must share `(heads, n, d)`.
+//! Real LLM serving is dominated by token-by-token *decode* against a
+//! KV cache.  This module provides that path, built on the same paper
+//! machinery as prefill:
+//!
+//! * [`kvcache`] — fixed-size KV pages per sequence drawn from a global
+//!   [`PagePool`] with eviction accounting (the vLLM PagedAttention
+//!   layout, sized to the mask skip granule).
+//! * [`step`] — the single-row flash-decode kernel: online softmax over
+//!   cache pages, skipping pages the Eq. 4 classifier
+//!   ([`crate::mask::IncrementalMaskView`]) proves fully masked for the
+//!   current row — sliding-window, document and eviction masks never
+//!   touch dead pages.
+//! * [`session`] — [`DecodeSession`] (one sequence's caches + cursor)
+//!   and [`ContinuousBatcher`]: admit waiting sequences, step all
+//!   active ones each iteration, retire finished ones; sequences of
+//!   different lengths decode side by side, with preemption (page
+//!   eviction + requeue) under pool pressure.
+//!
+//! Correctness oracle: decode-step outputs equal the full-sequence
+//! `attention::flash` prefill on the same mask, row for row (the
+//! decode analogue of the paper's §4.4 exactness claim).
+
+pub mod kvcache;
+pub mod session;
+pub mod step;
+
+pub use kvcache::{PageId, PagePool, PagedKv, PoolStats};
+pub use session::{
+    BatcherConfig, BatcherReport, ContinuousBatcher, DecodeRequest, DecodeResponse,
+    DecodeSession, StepOutcome,
+};
+pub use step::{decode_step, DecodeStats};

@@ -1,0 +1,624 @@
+//! Decode sessions and the continuous-batching scheduler.
+//!
+//! A [`DecodeSession`] owns one sequence's paged caches (one per head),
+//! its FlashMask and the incremental view over it, and steps one token
+//! at a time.  The [`ContinuousBatcher`] runs many sessions against the
+//! shared [`PagePool`]: each iteration it admits waiting sequences,
+//! steps every active sequence by one token, and retires finished ones
+//! — sequences of *different lengths* decode side by side, removing the
+//! prefill scheduler's same-`n` batching restriction.
+//!
+//! Under page-pool pressure the batcher preempts the most recently
+//! admitted session (its pages are evicted, its request re-queued), so
+//! the oldest admitted session always makes progress and the loop
+//! terminates.  Sequences are teacher-forced — Q/K/V streams for the
+//! whole sequence are given up front — which keeps the decode path
+//! byte-comparable to the full-sequence prefill oracle.
+
+use super::kvcache::{PagePool, PagedKv};
+use super::step::{decode_step, DecodeStats};
+use crate::mask::{FlashMask, IncrementalMaskView};
+use anyhow::{bail, ensure, Result};
+use std::collections::VecDeque;
+use std::time::Instant;
+
+/// One decode request: teacher-forced Q/K/V streams (head-major
+/// `[heads, n, d]`) for the whole sequence, the sequence's FlashMask,
+/// and the prompt/generation split.  Rows `0..prompt_len` are prefill
+/// (their K/V is bulk-loaded into the cache); rows `prompt_len..n` are
+/// decoded token by token.
+#[derive(Clone, Debug)]
+pub struct DecodeRequest {
+    pub id: u64,
+    pub heads: usize,
+    pub n: usize,
+    pub d: usize,
+    pub prompt_len: usize,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub mask: FlashMask,
+    pub arrived: Instant,
+}
+
+impl DecodeRequest {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        id: u64,
+        heads: usize,
+        n: usize,
+        d: usize,
+        prompt_len: usize,
+        q: Vec<f32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        mask: FlashMask,
+    ) -> DecodeRequest {
+        assert_eq!(q.len(), heads * n * d);
+        assert_eq!(k.len(), heads * n * d);
+        assert_eq!(v.len(), heads * n * d);
+        assert_eq!(mask.n(), n);
+        assert!(prompt_len < n, "nothing to decode");
+        assert!(
+            mask.causal,
+            "decode requires a causal mask: a row cannot attend to KV not yet written"
+        );
+        DecodeRequest { id, heads, n, d, prompt_len, q, k, v, mask, arrived: Instant::now() }
+    }
+
+    /// Decode steps this request needs.
+    pub fn gen_len(&self) -> usize {
+        self.n - self.prompt_len
+    }
+
+    /// Worst-case pool pages when fully decoded.
+    pub fn pages_needed(&self, page_size: usize) -> usize {
+        self.heads * self.n.div_ceil(page_size)
+    }
+}
+
+/// Outcome of one [`DecodeSession::try_step`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// A fresh page was needed and the pool is exhausted; nothing
+    /// changed — preempt someone or wait.
+    NoPage,
+    /// One token decoded.
+    Stepped,
+    /// One token decoded and the sequence is complete.
+    Finished,
+}
+
+/// One active sequence: per-head paged caches + decode cursor.
+pub struct DecodeSession {
+    pub req: DecodeRequest,
+    caches: Vec<PagedKv>,
+    view: IncrementalMaskView,
+    scale: f32,
+    /// Rows appended to the cache so far (== next row to decode).
+    pub pos: usize,
+    /// Decoded output rows, one `[gen_len * d]` buffer per head.
+    out: Vec<Vec<f32>>,
+    /// Score scratch reused across steps (no per-token allocation).
+    scratch: Vec<f32>,
+    pub stats: DecodeStats,
+    pub admitted: Instant,
+}
+
+impl DecodeSession {
+    pub fn new(req: DecodeRequest, page_size: usize) -> DecodeSession {
+        let view = IncrementalMaskView::new(&req.mask, page_size);
+        let scale = 1.0 / (req.d as f32).sqrt();
+        let caches = (0..req.heads).map(|_| PagedKv::new()).collect();
+        let out = vec![Vec::with_capacity(req.gen_len() * req.d); req.heads];
+        DecodeSession {
+            req,
+            caches,
+            view,
+            scale,
+            pos: 0,
+            out,
+            scratch: Vec::with_capacity(page_size),
+            stats: DecodeStats::default(),
+            admitted: Instant::now(),
+        }
+    }
+
+    fn kv_row(&self, src: &[f32], h: usize, t: usize) -> std::ops::Range<usize> {
+        debug_assert!(src.len() == self.req.heads * self.req.n * self.req.d);
+        let base = h * self.req.n * self.req.d + t * self.req.d;
+        base..base + self.req.d
+    }
+
+    /// Bulk-load the prompt's K/V into the cache.  Checks page
+    /// availability up front; returns `false` (allocating nothing) when
+    /// the pool cannot hold the prompt.
+    #[must_use]
+    pub fn prefill(&mut self, pool: &mut PagePool) -> bool {
+        debug_assert_eq!(self.pos, 0);
+        let ps = pool.page_size();
+        let needed = self.req.heads * self.req.prompt_len.div_ceil(ps);
+        if pool.available() < needed {
+            return false;
+        }
+        for h in 0..self.req.heads {
+            for t in 0..self.req.prompt_len {
+                let kr = self.kv_row(&self.req.k, h, t);
+                let vr = self.kv_row(&self.req.v, h, t);
+                let ok = self.caches[h].append(pool, &self.req.k[kr], &self.req.v[vr]);
+                debug_assert!(ok, "prefill alloc failed despite availability check");
+            }
+        }
+        self.pos = self.req.prompt_len;
+        self.admitted = Instant::now();
+        true
+    }
+
+    /// Decode one token across all heads.  Page demand is checked up
+    /// front (all heads cross page boundaries together), so a `NoPage`
+    /// return leaves the session untouched.
+    pub fn try_step(&mut self, pool: &mut PagePool, skip: bool) -> StepOutcome {
+        debug_assert!(self.pos < self.req.n);
+        let t = self.pos;
+        let ps = pool.page_size();
+        let new_pages = if t % ps == 0 { self.req.heads } else { 0 };
+        if pool.available() < new_pages {
+            return StepOutcome::NoPage;
+        }
+        for h in 0..self.req.heads {
+            let kr = self.kv_row(&self.req.k, h, t);
+            let vr = self.kv_row(&self.req.v, h, t);
+            let ok = self.caches[h].append(pool, &self.req.k[kr], &self.req.v[vr]);
+            debug_assert!(ok, "step alloc failed despite availability check");
+            let qr = self.kv_row(&self.req.q, h, t);
+            let o = decode_step(
+                &self.req.q[qr],
+                &self.caches[h],
+                pool,
+                &self.req.mask,
+                &self.view,
+                t,
+                self.scale,
+                skip,
+                &mut self.stats,
+                &mut self.scratch,
+            );
+            if t >= self.req.prompt_len {
+                self.out[h].extend(o);
+            }
+        }
+        self.pos += 1;
+        if self.pos == self.req.n {
+            StepOutcome::Finished
+        } else {
+            StepOutcome::Stepped
+        }
+    }
+
+    pub fn finished(&self) -> bool {
+        self.pos == self.req.n
+    }
+
+    pub fn pages_held(&self) -> usize {
+        self.caches.iter().map(|c| c.n_pages()).sum()
+    }
+
+    /// Release all pages and recover the request (preemption path: the
+    /// partial outputs are discarded; decode is deterministic, so the
+    /// retry reproduces them).
+    pub fn preempt(mut self, pool: &mut PagePool) -> DecodeRequest {
+        for c in &mut self.caches {
+            c.release(pool, true);
+        }
+        self.req
+    }
+
+    /// Release all pages and assemble the head-major decoded output.
+    pub fn retire(mut self, pool: &mut PagePool) -> DecodeResponse {
+        debug_assert!(self.finished());
+        for c in &mut self.caches {
+            c.release(pool, false);
+        }
+        let decode_ms = self.admitted.elapsed().as_secs_f64() * 1e3;
+        let queue_ms = (self.admitted - self.req.arrived).as_secs_f64() * 1e3;
+        let mut o = Vec::with_capacity(self.req.heads * self.req.gen_len() * self.req.d);
+        for h in self.out.drain(..) {
+            o.extend(h);
+        }
+        DecodeResponse {
+            id: self.req.id,
+            heads: self.req.heads,
+            n: self.req.n,
+            d: self.req.d,
+            prompt_len: self.req.prompt_len,
+            o,
+            queue_ms,
+            decode_ms,
+            stats: self.stats,
+        }
+    }
+}
+
+/// Completed decode: output rows for the generated span, head-major
+/// `[heads, n - prompt_len, d]`.
+#[derive(Clone, Debug)]
+pub struct DecodeResponse {
+    pub id: u64,
+    pub heads: usize,
+    pub n: usize,
+    pub d: usize,
+    pub prompt_len: usize,
+    pub o: Vec<f32>,
+    /// Arrival → *final* admission.  A preempted sequence's discarded
+    /// runs count as queueing (the work is thrown away and redone), so
+    /// under pool pressure this includes wasted decode time.
+    pub queue_ms: f64,
+    /// Final (successful) admission → retirement.
+    pub decode_ms: f64,
+    pub stats: DecodeStats,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Tokens per KV-cache page (also the mask skip granule).
+    pub page_size: usize,
+    /// Head dimension every request must share (the pool's row width).
+    pub d: usize,
+    /// Global pool capacity in pages.
+    pub max_pages: usize,
+    /// Max sequences decoding concurrently.
+    pub max_active: usize,
+    /// Eq. 4 page skipping; `false` is the dense-cache baseline.
+    pub skip: bool,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { page_size: 16, d: 64, max_pages: 4096, max_active: 8, skip: true }
+    }
+}
+
+/// Aggregate continuous-batching statistics.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherReport {
+    pub sequences: usize,
+    /// Decoded (generated) tokens, prompt excluded.
+    pub tokens: u64,
+    pub tokens_per_s: f64,
+    /// Fraction of cache pages skipped across retired sequences.
+    pub pages_skip_fraction: f64,
+    pub preemptions: u64,
+    pub evicted_pages: u64,
+    pub peak_pages: usize,
+}
+
+/// Continuous-batching decode scheduler over a shared page pool.
+pub struct ContinuousBatcher {
+    pub cfg: BatcherConfig,
+    pool: PagePool,
+    waiting: VecDeque<DecodeRequest>,
+    active: Vec<DecodeSession>,
+    finished: Vec<DecodeResponse>,
+    agg: DecodeStats,
+    preemptions: u64,
+    decoded_tokens: u64,
+    started: Instant,
+}
+
+impl ContinuousBatcher {
+    pub fn new(cfg: BatcherConfig) -> ContinuousBatcher {
+        ContinuousBatcher {
+            cfg,
+            pool: PagePool::new(cfg.page_size, cfg.d, cfg.max_pages),
+            waiting: VecDeque::new(),
+            active: Vec::new(),
+            finished: Vec::new(),
+            agg: DecodeStats::default(),
+            preemptions: 0,
+            decoded_tokens: 0,
+            started: Instant::now(),
+        }
+    }
+
+    pub fn pool(&self) -> &PagePool {
+        &self.pool
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Admit a request into the waiting queue.  Rejects requests that
+    /// could never fit the pool even alone (they would preempt forever).
+    pub fn submit(&mut self, req: DecodeRequest) -> Result<()> {
+        req.mask.validate()?;
+        ensure!(req.d == self.cfg.d, "head dim {} != pool row width {}", req.d, self.cfg.d);
+        let worst = req.pages_needed(self.cfg.page_size);
+        ensure!(
+            worst <= self.cfg.max_pages,
+            "request {} needs up to {worst} pages, pool holds {}",
+            req.id,
+            self.cfg.max_pages
+        );
+        self.waiting.push_back(req);
+        Ok(())
+    }
+
+    /// FIFO admission: move waiting sequences into the active set while
+    /// slots are open and their prompts fit the pool.
+    fn admit(&mut self) {
+        while self.active.len() < self.cfg.max_active {
+            let Some(req) = self.waiting.pop_front() else { break };
+            // fit-check before building the session: constructing the
+            // IncrementalMaskView is O(n), too costly to discard every
+            // scheduler iteration while the head-of-line request waits
+            let prompt_pages = req.heads * req.prompt_len.div_ceil(self.cfg.page_size);
+            if self.pool.available() < prompt_pages {
+                // head-of-line waits for pages; no bypass, keep FIFO
+                self.waiting.push_front(req);
+                break;
+            }
+            let mut session = DecodeSession::new(req, self.cfg.page_size);
+            let ok = session.prefill(&mut self.pool);
+            debug_assert!(ok, "prefill failed after fit check");
+            self.active.push(session);
+        }
+    }
+
+    /// One scheduler iteration: admit, step every active sequence one
+    /// token (preempting the newest session on page exhaustion), retire
+    /// finished sequences.  Returns `false` when all work is done.
+    pub fn step(&mut self) -> Result<bool> {
+        self.admit();
+        if self.active.is_empty() {
+            if let Some(req) = self.waiting.front() {
+                // nothing active frees pages, so this can never succeed
+                bail!(
+                    "request {} prompt needs more pages than the whole pool ({} available)",
+                    req.id,
+                    self.pool.available()
+                );
+            }
+            return Ok(false);
+        }
+        let mut i = 0;
+        while i < self.active.len() {
+            match self.active[i].try_step(&mut self.pool, self.cfg.skip) {
+                StepOutcome::NoPage => {
+                    if self.active.len() == 1 {
+                        // unreachable given the submit() fit check, but
+                        // fail loudly rather than spin
+                        bail!(
+                            "session {} stalled alone on an exhausted pool ({} pages)",
+                            self.active[i].req.id,
+                            self.pool.capacity()
+                        );
+                    }
+                    // evict the most recently admitted session (possibly
+                    // the stalled one itself); index 0 is never a victim,
+                    // so the oldest sequence always progresses and the
+                    // scheduler loop terminates
+                    let victim = self.active.len() - 1;
+                    let s = self.active.remove(victim);
+                    self.preemptions += 1;
+                    // the victim's progress is discarded and re-decoded
+                    // after readmission — uncount it so `tokens` stays
+                    // "useful generated tokens", not work performed
+                    self.decoded_tokens -= (s.pos - s.req.prompt_len) as u64;
+                    self.waiting.push_front(s.preempt(&mut self.pool));
+                    // victim > i: retry session i with the freed pages;
+                    // victim == i: the pass ends and the next step() retries
+                }
+                StepOutcome::Stepped => {
+                    self.decoded_tokens += 1;
+                    i += 1;
+                }
+                StepOutcome::Finished => {
+                    self.decoded_tokens += 1;
+                    let s = self.active.remove(i);
+                    self.agg.merge(&s.stats);
+                    self.finished.push(s.retire(&mut self.pool));
+                    // don't advance: the next session shifted into slot i
+                }
+            }
+        }
+        Ok(true)
+    }
+
+    /// Drive the batcher until every submitted sequence has retired.
+    pub fn run(&mut self) -> Result<BatcherReport> {
+        while self.step()? {}
+        Ok(self.report())
+    }
+
+    /// Completed sequences, in retirement order.
+    pub fn take_finished(&mut self) -> Vec<DecodeResponse> {
+        std::mem::take(&mut self.finished)
+    }
+
+    pub fn report(&self) -> BatcherReport {
+        BatcherReport {
+            sequences: self.finished.len(),
+            tokens: self.decoded_tokens,
+            tokens_per_s: self.decoded_tokens as f64
+                / self.started.elapsed().as_secs_f64().max(1e-9),
+            pages_skip_fraction: self.agg.skip_fraction(),
+            preemptions: self.preemptions,
+            evicted_pages: self.pool.stats.evictions,
+            peak_pages: self.pool.stats.peak_in_use,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{flash, AttnConfig};
+    use crate::mask::{builders, BlockTable};
+    use crate::util::rng::Rng;
+
+    fn rand_vec(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32() * 0.5).collect()
+    }
+
+    fn request(id: u64, heads: usize, n: usize, d: usize, prompt: usize, seed: u64) -> DecodeRequest {
+        let mut rng = Rng::new(seed);
+        let mask = match id % 3 {
+            0 => builders::causal(n),
+            1 => builders::sliding_window(n, (n / 4).max(1)),
+            _ => builders::causal_document(n, &[n / 2, n - n / 2]),
+        };
+        DecodeRequest::new(
+            id,
+            heads,
+            n,
+            d,
+            prompt,
+            rand_vec(heads * n * d, &mut rng),
+            rand_vec(heads * n * d, &mut rng),
+            rand_vec(heads * n * d, &mut rng),
+            mask,
+        )
+    }
+
+    /// Full-sequence prefill oracle for the generated span of one head.
+    fn oracle_rows(req: &DecodeRequest, h: usize) -> Vec<f32> {
+        let (n, d) = (req.n, req.d);
+        let cfg = AttnConfig::new(32.min(n), 32.min(n), d);
+        let table = BlockTable::build(&req.mask, cfg.bc);
+        let r = h * n * d..(h + 1) * n * d;
+        let (out, _) = flash::flashmask_forward(
+            &req.q[r.clone()],
+            &req.k[r.clone()],
+            &req.v[r],
+            n,
+            d,
+            &req.mask,
+            &table,
+            cfg,
+            true,
+        );
+        out.o[req.prompt_len * d..].to_vec()
+    }
+
+    fn assert_matches_oracle(req: &DecodeRequest, resp: &DecodeResponse) {
+        let gen = req.gen_len() * req.d;
+        assert_eq!(resp.o.len(), req.heads * gen);
+        for h in 0..req.heads {
+            let want = oracle_rows(req, h);
+            let got = &resp.o[h * gen..(h + 1) * gen];
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-4,
+                    "req {} head {h} elem {i}: {a} vs {b}",
+                    req.id
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn continuous_batching_mixed_lengths_match_oracle() {
+        // three sequences of different n decode side by side — the
+        // same-n restriction of the prefill scheduler does not apply
+        let d = 8;
+        let reqs: Vec<DecodeRequest> = [(0u64, 40usize, 8usize), (1, 64, 16), (2, 96, 0)]
+            .iter()
+            .map(|&(id, n, p)| request(id, 2, n, d, p, 100 + id))
+            .collect();
+        let mut b = ContinuousBatcher::new(BatcherConfig {
+            page_size: 16,
+            d,
+            max_pages: 64,
+            max_active: 4,
+            skip: true,
+        });
+        for r in &reqs {
+            b.submit(r.clone()).unwrap();
+        }
+        let report = b.run().unwrap();
+        assert_eq!(report.sequences, 3);
+        assert_eq!(report.tokens, (40 - 8) + (64 - 16) + 96);
+        let mut done = b.take_finished();
+        done.sort_by_key(|r| r.id);
+        for (req, resp) in reqs.iter().zip(&done) {
+            assert_eq!(req.id, resp.id);
+            assert_matches_oracle(req, resp);
+        }
+    }
+
+    #[test]
+    fn preemption_under_page_pressure_still_correct() {
+        // pool big enough for any one sequence but not all three at
+        // once: the batcher must preempt (evict + retry) and still
+        // produce oracle-exact outputs
+        let d = 8;
+        let reqs: Vec<DecodeRequest> =
+            (0..3u64).map(|id| request(id, 1, 64, d, 0, 200 + id)).collect();
+        let mut b = ContinuousBatcher::new(BatcherConfig {
+            page_size: 8,
+            d,
+            max_pages: 10, // one sequence needs 8; three need 24
+            max_active: 4,
+            skip: true,
+        });
+        for r in &reqs {
+            b.submit(r.clone()).unwrap();
+        }
+        let report = b.run().unwrap();
+        assert_eq!(report.sequences, 3);
+        assert!(report.preemptions > 0, "pool pressure should have preempted");
+        assert!(report.evicted_pages > 0);
+        // preempted work is uncounted: tokens == useful generated tokens
+        assert_eq!(report.tokens, 3 * 64);
+        let mut done = b.take_finished();
+        done.sort_by_key(|r| r.id);
+        for (req, resp) in reqs.iter().zip(&done) {
+            assert_matches_oracle(req, resp);
+        }
+    }
+
+    #[test]
+    fn oversized_request_rejected_at_submit() {
+        let d = 4;
+        let mut b = ContinuousBatcher::new(BatcherConfig {
+            page_size: 8,
+            d,
+            max_pages: 2,
+            max_active: 2,
+            skip: true,
+        });
+        let r = request(0, 1, 64, d, 0, 1); // needs 8 pages
+        assert!(b.submit(r).is_err());
+    }
+
+    #[test]
+    fn wrong_head_dim_rejected() {
+        let mut b = ContinuousBatcher::new(BatcherConfig { d: 16, ..Default::default() });
+        assert!(b.submit(request(0, 1, 32, 8, 0, 1)).is_err());
+    }
+
+    #[test]
+    fn max_active_bounds_concurrency() {
+        let d = 4;
+        let mut b = ContinuousBatcher::new(BatcherConfig {
+            page_size: 8,
+            d,
+            max_pages: 256,
+            max_active: 2,
+            skip: true,
+        });
+        for id in 0..5u64 {
+            b.submit(request(id, 1, 24, d, 0, 300 + id)).unwrap();
+        }
+        b.step().unwrap();
+        assert_eq!(b.active_len(), 2);
+        assert_eq!(b.waiting_len(), 3);
+        let report = b.run().unwrap();
+        assert_eq!(report.sequences, 5);
+    }
+}

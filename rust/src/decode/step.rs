@@ -1,0 +1,307 @@
+//! Single-row flash-decode kernel.
+//!
+//! Computes attention for one new query row against a paged KV cache
+//! with the same online-softmax recurrence as `attention::flash`
+//! (Alg. 1 lines 25–26), but tiled by cache page instead of by Bc
+//! key block.  Pages the [`IncrementalMaskView`] classifies as fully
+//! masked are skipped before their K/V memory is touched — the decode
+//! analogue of the prefill kernel's Eq. 4 tile skip, so KV-cache reads
+//! (the decode bottleneck) scale with *visible* context, not total
+//! context.
+//!
+//! Exactness mirrors §4.4: skipped pages contribute only `exp(-inf)=0`
+//! terms, so `skip=true` and `skip=false` are bitwise-identical
+//! (asserted in the tests below).
+
+use super::kvcache::{PagePool, PagedKv};
+use crate::mask::{BlockClass, FlashMask, IncrementalMaskView};
+
+const NEG_INF: f32 = f32::NEG_INFINITY;
+
+/// Work counters for the decode path (the per-page census the bench
+/// and serving reports aggregate).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DecodeStats {
+    /// Decode steps executed (one per `(sequence, head, token)`).
+    pub steps: u64,
+    /// Cache pages considered across all steps.
+    pub pages_total: u64,
+    /// Pages skipped without touching their K/V memory.
+    pub pages_skipped: u64,
+    /// Pages computed with the element-wise interval mask applied.
+    pub pages_partial: u64,
+    /// Pages computed mask-free.
+    pub pages_unmasked: u64,
+    /// Multiply-accumulate count (2 per MAC = FLOPs).
+    pub macs: u64,
+    /// Element-wise mask evaluations on partial pages.
+    pub mask_evals: u64,
+}
+
+impl DecodeStats {
+    pub fn merge(&mut self, other: &DecodeStats) {
+        self.steps += other.steps;
+        self.pages_total += other.pages_total;
+        self.pages_skipped += other.pages_skipped;
+        self.pages_partial += other.pages_partial;
+        self.pages_unmasked += other.pages_unmasked;
+        self.macs += other.macs;
+        self.mask_evals += other.mask_evals;
+    }
+
+    /// Fraction of cache pages skipped (0 when nothing ran yet).
+    pub fn skip_fraction(&self) -> f64 {
+        if self.pages_total == 0 {
+            0.0
+        } else {
+            self.pages_skipped as f64 / self.pages_total as f64
+        }
+    }
+}
+
+/// Attention for decode row `t` (already appended: `cache.len() == t+1`)
+/// over one head's paged cache.  Returns the `[d]` output row.
+///
+/// `scratch` is a caller-owned score buffer (grown to `page_size` on
+/// first use) so the per-token hot loop performs no allocation beyond
+/// the returned row.
+///
+/// `skip=false` is the dense-cache baseline: every page is visited and
+/// element-masked, the behaviour of a decoder that keeps no mask
+/// structure — the comparison `bench_decode` measures.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_step(
+    q_row: &[f32],
+    cache: &PagedKv,
+    pool: &PagePool,
+    mask: &FlashMask,
+    view: &IncrementalMaskView,
+    t: usize,
+    scale: f32,
+    skip: bool,
+    stats: &mut DecodeStats,
+    scratch: &mut Vec<f32>,
+) -> Vec<f32> {
+    let d = pool.d();
+    let ps = pool.page_size();
+    debug_assert_eq!(q_row.len(), d);
+    debug_assert_eq!(view.page_size(), ps);
+    debug_assert_eq!(cache.len(), t + 1, "append the row's K/V before stepping");
+
+    let mut o = vec![0f32; d];
+    let mut m_run = NEG_INF;
+    let mut l_run = 0f32;
+    if scratch.len() < ps {
+        scratch.resize(ps, 0.0);
+    }
+    let s = scratch;
+
+    for p in 0..cache.n_pages() {
+        stats.pages_total += 1;
+        let class = if skip {
+            view.classify_page(mask, t, p)
+        } else {
+            BlockClass::PartiallyMasked
+        };
+        if class == BlockClass::FullyMasked {
+            stats.pages_skipped += 1;
+            continue;
+        }
+        let cols = cache.page_cols(p, ps);
+        let col0 = p * ps;
+        let kp = pool.page_k(cache.page_id(p));
+
+        // s = q · K_pᵀ * scale
+        for (c, sv) in s[..cols].iter_mut().enumerate() {
+            let mut acc = 0f32;
+            for dd in 0..d {
+                acc += q_row[dd] * kp[c * d + dd];
+            }
+            *sv = acc * scale;
+        }
+        stats.macs += (cols * d) as u64;
+
+        if class == BlockClass::PartiallyMasked {
+            for (c, sv) in s[..cols].iter_mut().enumerate() {
+                if !view.visible(mask, t, col0 + c) {
+                    *sv = NEG_INF;
+                }
+            }
+            stats.mask_evals += cols as u64;
+            stats.pages_partial += 1;
+        } else {
+            stats.pages_unmasked += 1;
+        }
+
+        // online softmax update (Alg. 1 lines 25-26 with Br = 1)
+        let mut page_max = NEG_INF;
+        for &sv in &s[..cols] {
+            page_max = page_max.max(sv);
+        }
+        let m_new = m_run.max(page_max);
+        let m_safe = if m_new.is_finite() { m_new } else { 0.0 };
+        let a = if m_run.is_finite() { (m_run - m_safe).exp() } else { 0.0 };
+        for ov in o.iter_mut() {
+            *ov *= a;
+        }
+        let vp = pool.page_v(cache.page_id(p));
+        let mut page_sum = 0f32;
+        for c in 0..cols {
+            let pexp = (s[c] - m_safe).exp(); // exp(-inf) == 0 for masked
+            page_sum += pexp;
+            for dd in 0..d {
+                o[dd] += pexp * vp[c * d + dd];
+            }
+        }
+        stats.macs += (cols * d) as u64;
+        l_run = a * l_run + page_sum;
+        m_run = m_new;
+    }
+
+    stats.steps += 1;
+    if l_run > 0.0 {
+        let inv = 1.0 / l_run;
+        for ov in o.iter_mut() {
+            *ov *= inv;
+        }
+    } // fully-masked row: output stays 0, like the prefill kernel
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{flash, AttnConfig};
+    use crate::mask::{builders, BlockTable};
+    use crate::util::rng::Rng;
+
+    fn rand_vec(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32() * 0.5).collect()
+    }
+
+    /// Decode every row of a sequence through the paged cache and
+    /// return the full [n, d] output.
+    fn decode_all(
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        n: usize,
+        d: usize,
+        mask: &crate::mask::FlashMask,
+        ps: usize,
+        skip: bool,
+        stats: &mut DecodeStats,
+    ) -> Vec<f32> {
+        let mut pool = PagePool::new(ps, d, n.div_ceil(ps) + 1);
+        let mut cache = PagedKv::new();
+        let view = IncrementalMaskView::new(mask, ps);
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut out = Vec::with_capacity(n * d);
+        let mut scratch = Vec::new();
+        for t in 0..n {
+            assert!(cache.append(&mut pool, &k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]));
+            let o = decode_step(
+                &q[t * d..(t + 1) * d],
+                &cache,
+                &pool,
+                mask,
+                &view,
+                t,
+                scale,
+                skip,
+                stats,
+                &mut scratch,
+            );
+            out.extend(o);
+        }
+        out
+    }
+
+    #[test]
+    fn decode_matches_prefill_acceptance_masks() {
+        // the ISSUE's correctness oracle: decode-step outputs must match
+        // full-sequence prefill row-for-row (max abs diff < 1e-4) for
+        // causal, sliding-window, causal-document and random-eviction
+        let (n, d, ps) = (96, 8, 16);
+        let mut rng = Rng::new(11);
+        let (q, k, v) = (rand_vec(n * d, &mut rng), rand_vec(n * d, &mut rng), rand_vec(n * d, &mut rng));
+        let masks = [
+            ("causal", builders::causal(n)),
+            ("sliding_window", builders::sliding_window(n, 12)),
+            ("causal_document", builders::causal_document(n, &[40, 31, 25])),
+            ("random_eviction", builders::random_eviction(n, &mut rng)),
+            ("qk_sparse", builders::qk_sparse(n, (30, 38), &[5, 50])),
+        ];
+        for (name, mask) in &masks {
+            let cfg = AttnConfig::new(32, 32, d);
+            let table = BlockTable::build(mask, cfg.bc);
+            let (want, _) = flash::flashmask_forward(&q, &k, &v, n, d, mask, &table, cfg, true);
+            let mut stats = DecodeStats::default();
+            let got = decode_all(&q, &k, &v, n, d, mask, ps, true, &mut stats);
+            for i in 0..n * d {
+                assert!(
+                    (got[i] - want.o[i]).abs() < 1e-4,
+                    "{name} row {} dim {}: {} vs {}",
+                    i / d,
+                    i % d,
+                    got[i],
+                    want.o[i]
+                );
+            }
+            assert_eq!(stats.steps, n as u64, "{name}");
+        }
+    }
+
+    #[test]
+    fn skip_is_bitwise_noop_on_decode_path() {
+        let (n, d, ps) = (64, 8, 8);
+        let mut rng = Rng::new(12);
+        let (q, k, v) = (rand_vec(n * d, &mut rng), rand_vec(n * d, &mut rng), rand_vec(n * d, &mut rng));
+        for mask in [
+            builders::sliding_window(n, 8),
+            builders::causal_document(n, &[20, 24, 20]),
+            builders::random_eviction(n, &mut rng),
+        ] {
+            let mut s_skip = DecodeStats::default();
+            let mut s_dense = DecodeStats::default();
+            let a = decode_all(&q, &k, &v, n, d, &mask, ps, true, &mut s_skip);
+            let b = decode_all(&q, &k, &v, n, d, &mask, ps, false, &mut s_dense);
+            assert_eq!(a, b, "skip changed decode outputs");
+            assert!(s_skip.pages_skipped > 0, "nothing skipped");
+            assert_eq!(s_dense.pages_skipped, 0);
+            assert!(s_skip.macs < s_dense.macs, "skip did not reduce work");
+        }
+    }
+
+    #[test]
+    fn fully_masked_row_outputs_zero() {
+        // qk_sparse drops query rows entirely: decode must produce the
+        // same all-zero rows the prefill kernel produces
+        let (n, d, ps) = (32, 4, 8);
+        let mut rng = Rng::new(13);
+        let (q, k, v) = (rand_vec(n * d, &mut rng), rand_vec(n * d, &mut rng), rand_vec(n * d, &mut rng));
+        let mask = builders::qk_sparse(n, (10, 14), &[]);
+        let mut stats = DecodeStats::default();
+        let out = decode_all(&q, &k, &v, n, d, &mask, ps, true, &mut stats);
+        for t in 10..14 {
+            assert!(out[t * d..(t + 1) * d].iter().all(|&x| x == 0.0), "row {t} not zero");
+        }
+        assert!(out[9 * d..10 * d].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn sliding_window_page_skips_grow_with_context() {
+        // the decode win: skipped pages per step grows as the window
+        // slides past old pages
+        let (n, d, ps) = (128, 4, 16);
+        let mut rng = Rng::new(14);
+        let (q, k, v) = (rand_vec(n * d, &mut rng), rand_vec(n * d, &mut rng), rand_vec(n * d, &mut rng));
+        let mask = builders::sliding_window(n, 16);
+        let mut stats = DecodeStats::default();
+        decode_all(&q, &k, &v, n, d, &mask, ps, true, &mut stats);
+        // per step at most 2 pages are ever live (window 16, page 16)
+        let visited = stats.pages_total - stats.pages_skipped;
+        assert!(visited <= 2 * n as u64, "visited {visited}");
+        assert!(stats.skip_fraction() > 0.5, "skip fraction {}", stats.skip_fraction());
+    }
+}

@@ -9,6 +9,9 @@
 //! * [`attention`] — a CPU blocked-attention engine executing Alg. 1/2
 //!   tile-for-tile (the "GPU simulator"), plus FlexAttention-like and
 //!   FlashInfer-BSR-like baselines.
+//! * [`decode`] — the autoregressive serving path: paged KV cache,
+//!   single-row flash-decode kernel driven by the incremental mask
+//!   view, and a continuous-batching scheduler (DESIGN.md §Decode).
 //! * [`workload`] — synthetic dataset generators from appendix
 //!   A.2.1 / A.4.1 / A.5.2.
 //! * [`perf`] — FLOPs accounting, the calibrated A100 timing model and
@@ -22,6 +25,7 @@
 
 pub mod attention;
 pub mod coordinator;
+pub mod decode;
 pub mod reports;
 pub mod mask;
 pub mod perf;

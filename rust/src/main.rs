@@ -12,6 +12,7 @@
 //! flashmask memory-model                  # Table 2, Fig 4(b), Fig 7
 //! flashmask e2e-model                     # Fig 2 curves + Fig 6 histogram
 //! flashmask gen-data --task dpo           # inspect synthetic samples
+//! flashmask decode --requests 8           # paged-KV continuous batching
 //! ```
 
 use anyhow::{anyhow, Result};
@@ -59,6 +60,7 @@ fn main() -> Result<()> {
         "memory-model" => reports::memory_report(),
         "e2e-model" => reports::e2e_report(11),
         "gen-data" => cmd_gen_data(&args)?,
+        "decode" => cmd_decode(&args)?,
         "help" | _ => {
             println!("{}", HELP);
             return Ok(());
@@ -80,6 +82,9 @@ subcommands:
   memory-model     paper Table 2, Fig 4b, Fig 7
   e2e-model        paper Fig 2 curves + Fig 6 histogram
   gen-data         sample synthetic training data (--task T --n N)
+  decode           autoregressive decode serving: paged KV cache +
+                   continuous batching (--requests R --n N --d D
+                   --heads H --page P --max-pages M --seed S --dense)
 common: --artifacts DIR (default ./artifacts)";
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -175,6 +180,65 @@ fn cmd_convergence(args: &Args) -> Result<()> {
     if !all_equal {
         anyhow::bail!("convergence curves diverged");
     }
+    Ok(())
+}
+
+fn cmd_decode(args: &Args) -> Result<()> {
+    use flashmask::decode::BatcherConfig;
+    use flashmask::mask::builders;
+    use flashmask::server::{EngineKind, Request, RequestQueue, Scheduler, SchedulerConfig, ServeEngine};
+    use flashmask::util::rng::Rng;
+
+    let n_requests = args.get_usize("requests", 8).map_err(|e| anyhow!(e))?;
+    let n = args.get_usize("n", 512).map_err(|e| anyhow!(e))?;
+    let d = args.get_usize("d", 32).map_err(|e| anyhow!(e))?;
+    let heads = args.get_usize("heads", 2).map_err(|e| anyhow!(e))?;
+    let page = args.get_usize("page", 16).map_err(|e| anyhow!(e))?;
+    let max_pages = args.get_usize("max-pages", 4096).map_err(|e| anyhow!(e))?;
+    let skip = !args.flag("dense");
+    anyhow::ensure!(n >= 2, "--n must be >= 2 (got {n})");
+    anyhow::ensure!(page >= 1, "--page must be >= 1");
+    anyhow::ensure!(d >= 1 && heads >= 1, "--d and --heads must be >= 1");
+
+    let mut rng = Rng::new(args.get_u64("seed", 7).map_err(|e| anyhow!(e))?);
+    let mut queue = RequestQueue::new();
+    for i in 0..n_requests {
+        // ragged lengths + realistic decode mask mix
+        let ni = (n / 2 + (rng.range(0, (n / 2) as i64) as usize)).max(2 * page);
+        let mask = match i % 4 {
+            0 => builders::causal(ni),
+            1 => builders::sliding_window(ni, (ni / 8).max(1)),
+            2 => builders::causal_document(ni, &[ni / 2, ni - ni / 2]),
+            _ => builders::random_eviction(ni, &mut rng),
+        };
+        let mut mk = || (0..heads * ni * d).map(|_| rng.normal_f32() * 0.5).collect::<Vec<f32>>();
+        queue.push(Request::new(0, heads, ni, d, mk(), mk(), mk(), mask))?;
+    }
+    println!("queued {n_requests} decode requests (ragged n up to {n}, {heads} heads, d={d})");
+
+    let scheduler = Scheduler::new(SchedulerConfig::default());
+    let reqs = scheduler.drain_for_decode(&mut queue, n_requests);
+    let decode_reqs: Vec<_> = reqs
+        .into_iter()
+        .map(|r| {
+            let prompt = r.n / 4;
+            r.into_decode(prompt)
+        })
+        .collect();
+    let mut engine = ServeEngine::new(EngineKind::Cpu { threads: 1 }, (page, page));
+    let cfg = BatcherConfig { page_size: page, d, max_pages, max_active: 8, skip };
+    let report = engine.execute_decode(decode_reqs, cfg)?;
+
+    println!("\n=== decode report ({}) ===", if skip { "flashmask page skip" } else { "dense cache" });
+    println!("sequences     : {}", report.sequences);
+    println!("decoded tokens: {}", report.tokens);
+    println!("throughput    : {:.0} tokens/s", report.tokens_per_s);
+    println!("pages skipped : {:.1}%", report.pages_skip_fraction * 100.0);
+    println!("preemptions   : {} ({} pages evicted)", report.preemptions, report.evicted_pages);
+    println!("peak pool use : {} pages", report.peak_pages);
+    let rep = engine.report();
+    println!("decode p50    : {:.2} ms", rep.p50_compute_ms);
+    println!("decode p99    : {:.2} ms", rep.p99_compute_ms);
     Ok(())
 }
 

@@ -1,0 +1,198 @@
+//! Incremental (decode-time) view of a FlashMask.
+//!
+//! During autoregressive decode the only live question is: *which
+//! cached KV columns does the current row `t` attend to?*  The
+//! column-wise interval representation (§4.1) answers it in O(1) per
+//! column — `t ∈ [lts[j], lte[j]) ∪ [uts[j], ute[j])` — and the Eq. 4
+//! min/max classifier answers it in O(1) per *page* of columns: a
+//! cache page is a 1×page_size tile of the score matrix, so the same
+//! [`BlockTable`] machinery classifies it as fully-visible /
+//! partially-visible / skipped without materializing anything.
+//!
+//! This is what lets sliding-window, packed-document and KV-eviction
+//! masks skip whole cache pages at decode time (the Binary Block
+//! Masking observation applied to the KV cache, PAPERS.md).
+
+use super::block::{BlockClass, BlockTable};
+use super::flashmask::FlashMask;
+
+/// Page-granular decode view: a [`BlockTable`] built with the cache
+/// page size as the key-block size, queried one query row at a time.
+#[derive(Clone, Debug)]
+pub struct IncrementalMaskView {
+    page_size: usize,
+    table: BlockTable,
+}
+
+impl IncrementalMaskView {
+    pub fn new(mask: &FlashMask, page_size: usize) -> IncrementalMaskView {
+        assert!(page_size >= 1);
+        IncrementalMaskView { page_size, table: BlockTable::build(mask, page_size) }
+    }
+
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Pages covering the full sequence length.
+    pub fn n_pages(&self) -> usize {
+        self.table.tc()
+    }
+
+    /// Classify cache page `page` for decode row `t`: a 1-row tile of
+    /// the score matrix (Eq. 4 with Br = 1).
+    pub fn classify_page(&self, mask: &FlashMask, t: usize, page: usize) -> BlockClass {
+        self.table.classify(mask, t, 1, page, self.page_size)
+    }
+
+    /// Is column `j` visible to decode row `t`?  O(1), same interval
+    /// test the prefill kernel applies element-wise.
+    pub fn visible(&self, mask: &FlashMask, t: usize, j: usize) -> bool {
+        mask.allowed(t, j)
+    }
+
+    /// Page census for row `t` over `n_pages` cached pages:
+    /// `(skipped, partial, unmasked)`.
+    pub fn row_census(&self, mask: &FlashMask, t: usize, n_pages: usize) -> (usize, usize, usize) {
+        let (mut f, mut p, mut u) = (0, 0, 0);
+        for page in 0..n_pages.min(self.n_pages()) {
+            match self.classify_page(mask, t, page) {
+                BlockClass::FullyMasked => f += 1,
+                BlockClass::PartiallyMasked => p += 1,
+                BlockClass::Unmasked => u += 1,
+            }
+        }
+        (f, p, u)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mask::types::MaskKind;
+    use crate::mask::{builders, ops};
+    use crate::util::prop;
+
+    /// Dense-oracle page class for one decode row.
+    fn oracle_class(mask: &FlashMask, t: usize, page: usize, ps: usize) -> BlockClass {
+        let n = mask.n();
+        let dense = mask.dense_allowed();
+        let (mut any_masked, mut any_allowed) = (false, false);
+        for j in page * ps..((page + 1) * ps).min(n) {
+            if dense[t * n + j] {
+                any_allowed = true;
+            } else {
+                any_masked = true;
+            }
+        }
+        match (any_allowed, any_masked) {
+            (false, _) => BlockClass::FullyMasked,
+            (true, true) => BlockClass::PartiallyMasked,
+            (true, false) => BlockClass::Unmasked,
+        }
+    }
+
+    /// Soundness contract (same shape as `block::tests::check_sound`):
+    /// conservative Partial is fine; skipping a visible column or
+    /// declaring a masked column mask-free is not.
+    fn check_sound(mask: &FlashMask, t: usize, ps: usize) -> Result<(), String> {
+        let view = IncrementalMaskView::new(mask, ps);
+        let dense = mask.dense_allowed();
+        let n = mask.n();
+        for page in 0..view.n_pages() {
+            let got = view.classify_page(mask, t, page);
+            let want = oracle_class(mask, t, page, ps);
+            let ok = match (got, want) {
+                (BlockClass::FullyMasked, BlockClass::FullyMasked) => true,
+                (BlockClass::FullyMasked, _) => false, // would skip visible KV!
+                (BlockClass::Unmasked, BlockClass::Unmasked) => true,
+                (BlockClass::Unmasked, _) => false, // would miss a mask!
+                (BlockClass::PartiallyMasked, _) => true,
+            };
+            if !ok {
+                return Err(format!("t={t} page {page} (ps {ps}): got {got:?}, want {want:?}"));
+            }
+        }
+        // the element-wise fallback must agree with the dense oracle
+        for j in 0..n {
+            if view.visible(mask, t, j) != dense[t * n + j] {
+                return Err(format!("t={t} col {j}: visible() disagrees with dense"));
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn sliding_window_skips_old_pages() {
+        let (n, ps, w) = (128, 16, 16);
+        let m = builders::sliding_window(n, w);
+        let view = IncrementalMaskView::new(&m, ps);
+        // at the last row only the window's pages are live
+        let (skipped, _, _) = view.row_census(&m, n - 1, view.n_pages());
+        assert!(skipped >= 6, "expected most of 8 pages skipped, got {skipped}");
+        // at the first row nothing behind us exists to skip... but the
+        // causal future pages are skipped
+        assert_eq!(view.classify_page(&m, 0, 4), BlockClass::FullyMasked);
+    }
+
+    #[test]
+    fn eviction_mask_skips_fully_evicted_pages() {
+        let n = 64;
+        let mut m = builders::causal(n);
+        // evict columns 0..16 from row 32 on (a whole 16-column page)
+        for j in 0..16 {
+            m.lts[j] = 32;
+            m.lte[j] = n as i32;
+        }
+        m.validate().unwrap();
+        let view = IncrementalMaskView::new(&m, 16);
+        assert_eq!(view.classify_page(&m, 31, 0), BlockClass::Unmasked);
+        assert_eq!(view.classify_page(&m, 32, 0), BlockClass::FullyMasked);
+        assert_eq!(view.classify_page(&m, 63, 0), BlockClass::FullyMasked);
+    }
+
+    #[test]
+    fn causal_diagonal_page_is_partial_until_filled() {
+        let n = 64;
+        let m = builders::causal(n);
+        let view = IncrementalMaskView::new(&m, 16);
+        // row 20 sits inside page 1: columns 21..32 are future => partial
+        assert_eq!(view.classify_page(&m, 20, 1), BlockClass::PartiallyMasked);
+        // row 31 is the page's last column: all of page 1 visible
+        assert_eq!(view.classify_page(&m, 31, 1), BlockClass::Unmasked);
+        // fully-past page and fully-future page
+        assert_eq!(view.classify_page(&m, 40, 1), BlockClass::Unmasked);
+        assert_eq!(view.classify_page(&m, 10, 1), BlockClass::FullyMasked);
+    }
+
+    #[test]
+    fn agrees_after_incremental_mask_growth() {
+        // the serving path grows masks with ops::shift_append as tokens
+        // stream in; the view over the grown mask must stay sound
+        let m = builders::causal_document(48, &[24, 24]);
+        let g = ops::shift_append(&m, 16);
+        for t in [0, 23, 24, 47, 48, 63] {
+            check_sound(&g, t, 16).unwrap();
+        }
+    }
+
+    #[test]
+    fn prop_view_sound_all_benchmark_kinds() {
+        // satellite: every benchmark mask kind, random decode positions
+        // and page sizes, against the dense materialization oracle
+        prop::check(
+            "incremental-view-sound",
+            prop::PropConfig { cases: 24, base_seed: 0xDEC0DE },
+            |rng| {
+                let n = 128;
+                let t = rng.range(0, n as i64) as usize;
+                let ps = *rng.choose(&[8usize, 16, 32]);
+                for kind in MaskKind::BENCHMARK {
+                    let mask = builders::build(kind, n, rng);
+                    check_sound(&mask, t, ps).map_err(|e| format!("{kind}: {e}"))?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

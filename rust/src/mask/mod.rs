@@ -6,14 +6,18 @@
 //! * [`builders`] — one constructor per mask family in paper Fig. 1(a).
 //! * [`block`] — per-tile min/max precompute (Alg. 1 line 4) and the
 //!   three-way tile classification of Eq. 4.
+//! * [`incremental`] — decode-time view: the same Eq. 4 classifier at
+//!   KV-cache-page granularity, one query row at a time.
 //! * [`types`] — mask-kind enumeration shared by workloads and benches.
 
 pub mod block;
 pub mod builders;
 pub mod flashmask;
+pub mod incremental;
 pub mod ops;
 pub mod types;
 
 pub use block::{BlockClass, BlockTable};
 pub use flashmask::FlashMask;
+pub use incremental::IncrementalMaskView;
 pub use types::MaskKind;

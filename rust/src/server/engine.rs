@@ -4,6 +4,7 @@
 use super::queue::{Request, Response};
 use super::scheduler::BatchPlan;
 use crate::attention::{flash, parallel_heads, AttnConfig};
+use crate::decode::{BatcherConfig, BatcherReport, ContinuousBatcher, DecodeRequest};
 use crate::mask::BlockTable;
 use crate::runtime::{Executable, HostTensor};
 use anyhow::Result;
@@ -91,6 +92,35 @@ impl ServeEngine {
         Ok(())
     }
 
+    /// Decode entry point — [`EngineKind`]-agnostic: the paged-cache
+    /// step kernel is CPU-resident for now (no AOT decode artifact is
+    /// compiled yet, DESIGN.md §Decode), so both engine kinds route
+    /// decode through the continuous batcher.  Retired sequences land
+    /// in `completed` like prefill responses: `o` holds the generated
+    /// rows and `sparsity` reports the fraction of cache pages skipped.
+    pub fn execute_decode(
+        &mut self,
+        reqs: Vec<DecodeRequest>,
+        cfg: BatcherConfig,
+    ) -> Result<BatcherReport> {
+        let mut batcher = ContinuousBatcher::new(cfg);
+        for r in reqs {
+            batcher.submit(r)?;
+        }
+        let report = batcher.run()?;
+        for resp in batcher.take_finished() {
+            self.tokens += resp.n - resp.prompt_len;
+            self.completed.push(Response {
+                id: resp.id,
+                o: resp.o,
+                queue_ms: resp.queue_ms,
+                compute_ms: resp.decode_ms,
+                sparsity: resp.stats.skip_fraction(),
+            });
+        }
+        Ok(report)
+    }
+
     pub fn report(&self) -> ServeReport {
         let n = self.completed.len().max(1);
         let mut compute: Vec<f64> = self.completed.iter().map(|r| r.compute_ms).collect();
@@ -112,11 +142,10 @@ fn cpu_attention(req: &Request, tile: (usize, usize), threads: usize) -> Vec<f32
     let table = BlockTable::build(&req.mask, cfg.bc);
     let per_head = req.n * req.d;
     let outs = parallel_heads(req.heads, threads.max(1), |h| {
-        let r = h * per_head..(h + 1) * per_head;
         flash::flashmask_forward(
-            &req.q[r.clone()],
-            &req.k[r.clone()],
-            &req.v[r],
+            req.head(&req.q, h),
+            req.head(&req.k, h),
+            req.head(&req.v, h),
             req.n,
             req.d,
             &req.mask,
@@ -169,6 +198,57 @@ mod tests {
             );
             for (a, b) in resp.o[r].iter().zip(&want.o) {
                 assert!((a - b).abs() < 3e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn decode_entry_matches_prefill_through_full_pipeline() {
+        // queue -> drain_for_decode -> into_decode -> execute_decode:
+        // generated rows must equal the prefill engine's rows for the
+        // same requests, despite heterogeneous sequence lengths
+        let (heads, d) = (2, 8);
+        let mut q = RequestQueue::new();
+        let originals: Vec<Request> =
+            [(32usize, 1u64), (64, 2), (48, 3)].iter().map(|&(n, s)| rand_req(n, heads, d, s)).collect();
+        for r in &originals {
+            q.push(r.clone()).unwrap();
+        }
+        let s = Scheduler::new(SchedulerConfig::default());
+        let drained = s.drain_for_decode(&mut q, 8);
+        assert_eq!(drained.len(), 3);
+        let prompt = 8;
+        let mut eng = ServeEngine::new(EngineKind::Cpu { threads: 1 }, (16, 16));
+        let report = eng
+            .execute_decode(
+                drained.into_iter().map(|r| r.into_decode(prompt)).collect(),
+                crate::decode::BatcherConfig { page_size: 16, d, max_pages: 256, max_active: 4, skip: true },
+            )
+            .unwrap();
+        assert_eq!(report.sequences, 3);
+        assert_eq!(report.tokens, (32 - 8) + (64 - 8) + (48 - 8));
+        assert!(report.pages_skip_fraction > 0.0, "doc masks should skip pages");
+        assert_eq!(eng.completed.len(), 3);
+        // completed is in retirement order (shortest first) — match by id
+        for resp in &eng.completed {
+            let req = &originals[resp.id as usize];
+            let n = req.n;
+            let bias = req.mask.dense_bias();
+            let gen = (n - prompt) * d;
+            for h in 0..heads {
+                let want = dense::dense_forward(
+                    req.head(&req.q, h),
+                    req.head(&req.k, h),
+                    req.head(&req.v, h),
+                    n,
+                    d,
+                    &bias,
+                    1.0 / (d as f32).sqrt(),
+                );
+                let got = &resp.o[h * gen..(h + 1) * gen];
+                for (a, b) in got.iter().zip(&want.o[prompt * d..]) {
+                    assert!((a - b).abs() < 1e-4, "n={n} h={h}: {a} vs {b}");
+                }
             }
         }
     }

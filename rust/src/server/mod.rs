@@ -4,9 +4,11 @@
 //! paper benchmarks prefill attention against FlashInfer.  This module
 //! provides the L3 serving pieces a deployment would need around that
 //! kernel: a [`queue`] of masked-attention requests, a [`scheduler`]
-//! that forms batches with compatible shapes/masks, and an [`engine`]
-//! that executes them (CPU engine or the AOT `attn_fwd` artifact via
-//! PJRT) and reports per-request latency plus aggregate throughput.
+//! that forms batches with compatible shapes/masks (prefill) or drains
+//! shape-heterogeneous requests for continuous batching (decode, see
+//! [`crate::decode`]), and an [`engine`] that executes them (CPU engine
+//! or the AOT `attn_fwd` artifact via PJRT) and reports per-request
+//! latency plus aggregate throughput.
 
 pub mod engine;
 pub mod queue;

@@ -28,9 +28,21 @@ impl Request {
         Request { id, n, d, heads, q, k, v, mask, arrived: Instant::now() }
     }
 
-    pub fn head(&self, slice: &[f32], h: usize) -> std::ops::Range<usize> {
-        let _ = slice;
-        h * self.n * self.d..(h + 1) * self.n * self.d
+    /// Head `h`'s `[n, d]` view of one of this request's Q/K/V buffers.
+    pub fn head<'a>(&self, slice: &'a [f32], h: usize) -> &'a [f32] {
+        debug_assert_eq!(slice.len(), self.heads * self.n * self.d);
+        &slice[h * self.n * self.d..(h + 1) * self.n * self.d]
+    }
+
+    /// Reinterpret this prefill request as a decode request: rows
+    /// `0..prompt_len` become the cached prompt, the remainder is
+    /// decoded token by token against the paged KV cache.
+    pub fn into_decode(self, prompt_len: usize) -> crate::decode::DecodeRequest {
+        let mut req = crate::decode::DecodeRequest::new(
+            self.id, self.heads, self.n, self.d, prompt_len, self.q, self.k, self.v, self.mask,
+        );
+        req.arrived = self.arrived; // preserve queueing latency accounting
+        req
     }
 }
 
@@ -128,5 +140,35 @@ mod tests {
     fn rejects_wrong_qkv_len() {
         let n = 16;
         Request::new(0, 1, n, 4, vec![0.0; 3], vec![0.0; n * 4], vec![0.0; n * 4], builders::causal(n));
+    }
+
+    #[test]
+    fn head_slices_the_right_rows() {
+        let (heads, n, d) = (3, 4, 2);
+        let q: Vec<f32> = (0..heads * n * d).map(|x| x as f32).collect();
+        let r = Request::new(
+            0,
+            heads,
+            n,
+            d,
+            q.clone(),
+            vec![0.0; heads * n * d],
+            vec![0.0; heads * n * d],
+            builders::causal(n),
+        );
+        for h in 0..heads {
+            assert_eq!(r.head(&q, h), &q[h * n * d..(h + 1) * n * d]);
+        }
+        assert_eq!(r.head(&q, 1)[0], (n * d) as f32);
+    }
+
+    #[test]
+    fn into_decode_preserves_identity_and_arrival() {
+        let r = req(16);
+        let arrived = r.arrived;
+        let dec = r.into_decode(4);
+        assert_eq!(dec.prompt_len, 4);
+        assert_eq!(dec.gen_len(), 12);
+        assert_eq!(dec.arrived, arrived);
     }
 }

@@ -104,6 +104,23 @@ impl Scheduler {
         }
         Some(BatchPlan { requests, heads, n, d })
     }
+
+    /// Admission for the decode path: pull up to `max_admit` requests in
+    /// FIFO order *regardless of shape*.  Continuous batching steps
+    /// ragged sequences side by side, so the same-`(heads, n, d)`
+    /// restriction of [`Scheduler::next_batch`] does not apply, and
+    /// there is no reason to hold requests back waiting for shape
+    /// twins — the batcher admits as capacity allows.
+    pub fn drain_for_decode(&self, queue: &mut RequestQueue, max_admit: usize) -> Vec<Request> {
+        let mut out = Vec::new();
+        while out.len() < max_admit {
+            match queue.pop() {
+                Some(r) => out.push(r),
+                None => break,
+            }
+        }
+        out
+    }
 }
 
 impl RequestQueue {
@@ -172,6 +189,63 @@ mod tests {
         let later = Instant::now() + Duration::from_millis(60);
         let b = s.next_batch(&mut q, later).unwrap();
         assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn lone_request_flushes_exactly_at_deadline_boundary() {
+        // the max_wait_ms partial-batch path: a lone request must be
+        // held while fresh and dispatched as a batch of one the moment
+        // its wait deadline passes — even though max_batch is never met
+        let mut q = RequestQueue::new();
+        q.push(req(16, 2)).unwrap();
+        let arrived = q.peek_front().unwrap().arrived;
+        let s = Scheduler::new(SchedulerConfig { max_batch: 8, max_wait_ms: 25.0 });
+        // just under the deadline: keep waiting, queue untouched
+        let early = arrived + Duration::from_millis(24);
+        assert!(s.next_batch(&mut q, early).is_none());
+        assert_eq!(q.len(), 1);
+        // past the deadline: the partial batch flushes
+        let late = arrived + Duration::from_millis(26);
+        let b = s.next_batch(&mut q, late).expect("deadline must flush the partial batch");
+        assert_eq!(b.len(), 1);
+        assert_eq!((b.heads, b.n), (2, 16));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn partial_batch_flush_leaves_other_shapes_queued() {
+        // deadline flush dispatches only the homogeneous prefix; the
+        // mismatched tail keeps its place for the next round
+        let mut q = RequestQueue::new();
+        q.push(req(16, 1)).unwrap();
+        q.push(req(16, 1)).unwrap();
+        q.push(req(64, 1)).unwrap();
+        let arrived = q.peek_front().unwrap().arrived;
+        let s = Scheduler::new(SchedulerConfig { max_batch: 8, max_wait_ms: 10.0 });
+        let b = s.next_batch(&mut q, arrived + Duration::from_millis(11)).unwrap();
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.n, 16);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.peek_front().unwrap().n, 64);
+    }
+
+    #[test]
+    fn drain_for_decode_ignores_shape_and_caps() {
+        // the decode path has no same-n restriction: mixed shapes drain
+        // together in FIFO order, capped at max_admit
+        let mut q = RequestQueue::new();
+        let a = q.push(req(16, 1)).unwrap();
+        let b = q.push(req(64, 2)).unwrap();
+        let c = q.push(req(32, 1)).unwrap();
+        let s = Scheduler::new(SchedulerConfig::default());
+        let drained = s.drain_for_decode(&mut q, 2);
+        assert_eq!(drained.iter().map(|r| r.id).collect::<Vec<_>>(), vec![a, b]);
+        assert_eq!(drained[0].n, 16);
+        assert_eq!(drained[1].n, 64);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.peek_front().unwrap().id, c);
+        assert!(s.drain_for_decode(&mut q, 8).len() == 1);
+        assert!(s.drain_for_decode(&mut q, 8).is_empty());
     }
 
     #[test]

@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 verification plus a decode-path smoke run (DESIGN.md §Verification).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: build =="
+cargo build --release
+
+echo "== tier-1: tests =="
+cargo test -q
+
+echo "== decode bench smoke (~2s) =="
+cargo bench --bench bench_decode -- --smoke
+
+echo "verify.sh: OK"
