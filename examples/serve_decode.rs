@@ -12,7 +12,7 @@
 //! ```
 
 use anyhow::{anyhow, Result};
-use flashmask::decode::BatcherConfig;
+use flashmask::decode::{BatcherConfig, SpecPolicy};
 use flashmask::mask::builders;
 use flashmask::server::{EngineKind, Request, RequestQueue, Scheduler, SchedulerConfig, ServeEngine};
 use flashmask::util::cli::Args;
@@ -52,7 +52,14 @@ fn main() -> Result<()> {
     let decode_reqs: Vec<_> = reqs.into_iter().map(|r| { let p = r.n / 4; r.into_decode(p) }).collect();
 
     let mut engine = ServeEngine::new(EngineKind::Cpu { threads: 1 }, (page, page));
-    let cfg = BatcherConfig { page_size: page, d, max_pages, max_active: 4, skip };
+    let cfg = BatcherConfig {
+        page_size: page,
+        d,
+        max_pages,
+        max_active: 4,
+        skip,
+        spec: SpecPolicy::Off, // see examples/spec_decode.rs for the speculative path
+    };
     let report = engine.execute_decode(decode_reqs, cfg)?;
 
     println!("\n=== decode serve report ({}) ===", if skip { "page skip" } else { "dense cache" });

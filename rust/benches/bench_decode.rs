@@ -1,14 +1,23 @@
-//! `cargo bench --bench bench_decode [-- --smoke]`
+//! `cargo bench --bench bench_decode [-- --smoke] [-- --speculate K]`
 //!
-//! Autoregressive decode through the paged KV cache: FLASHMASK page
-//! skipping vs. a dense-cache baseline that visits every page.  For
-//! each mask family the bench reports decode throughput (generated
-//! tokens/s), the fraction of cache pages skipped, and the speedup —
-//! the decode analogue of the paper's Tables 10–14 prefill comparison.
+//! Autoregressive decode through the paged KV cache, two comparisons:
+//!
+//! 1. FLASHMASK page skipping vs. a dense-cache baseline that visits
+//!    every page (the decode analogue of Tables 10–14).
+//! 2. Speculative decoding (tree-mask verify, high-acceptance oracle
+//!    drafter) vs. one-token-at-a-time sequential decode, reporting
+//!    accepted-tokens/s — the FlashAttention-2 multi-row batching win.
+//!
+//! The speculative run double-checks the exactness guarantee: its
+//! outputs are compared row-for-row against the sequential run and the
+//! bench aborts on any divergence, so `scripts/verify.sh` fails loudly
+//! if the kernel and the oracle ever disagree.
 //!
 //! `--smoke` shrinks the workload to a ~2 s run for scripts/verify.sh.
 
-use flashmask::decode::{BatcherConfig, ContinuousBatcher, DecodeRequest};
+use flashmask::decode::{
+    BatcherConfig, ContinuousBatcher, DecodeRequest, DecodeResponse, SpecPolicy,
+};
 use flashmask::mask::builders;
 use flashmask::util::bench::time_once;
 use flashmask::util::rng::Rng;
@@ -26,18 +35,50 @@ fn requests(n: usize, d: usize, heads: usize, count: usize, mask_of: &dyn Fn(usi
         .collect()
 }
 
-fn run(reqs: &[DecodeRequest], page_size: usize, d: usize, skip: bool) -> (f64, f64, u64) {
-    let cfg = BatcherConfig { page_size, d, max_pages: 1 << 16, max_active: 8, skip };
+fn run(
+    reqs: &[DecodeRequest],
+    page_size: usize,
+    d: usize,
+    skip: bool,
+    spec: SpecPolicy,
+) -> (f64, flashmask::decode::BatcherReport, Vec<DecodeResponse>) {
+    let cfg = BatcherConfig { page_size, d, max_pages: 1 << 16, max_active: 8, skip, spec };
     let mut b = ContinuousBatcher::new(cfg);
     for r in reqs {
         b.submit(r.clone()).expect("submit");
     }
     let (report, ms) = time_once(|| b.run().expect("decode run"));
-    (ms, report.pages_skip_fraction, report.tokens)
+    let mut done = b.take_finished();
+    done.sort_by_key(|r| r.id);
+    (ms, report, done)
+}
+
+/// Oracle check: speculative outputs must match sequential row-for-row.
+fn assert_identical(name: &str, seq: &[DecodeResponse], spec: &[DecodeResponse]) {
+    assert_eq!(seq.len(), spec.len(), "{name}: sequence count diverged");
+    for (a, b) in seq.iter().zip(spec) {
+        assert_eq!(a.id, b.id, "{name}: retirement ids diverged");
+        assert_eq!(a.o.len(), b.o.len(), "{name}: output shape diverged");
+        for (i, (x, y)) in a.o.iter().zip(&b.o).enumerate() {
+            assert!(
+                (x - y).abs() < 1e-4,
+                "{name}: speculative decode diverged from sequential at req {} elem {i}: {x} vs {y}",
+                a.id
+            );
+        }
+    }
 }
 
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let spec_k: usize = match args.iter().position(|a| a == "--speculate") {
+        None => 4,
+        Some(i) => args
+            .get(i + 1)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("--speculate needs an integer draft budget")),
+    };
     let (n, d, heads, count) = if smoke { (256, 16, 1, 2) } else { (1024, 32, 2, 4) };
     let page_size = 32;
     assert!(n >= 4 * page_size, "acceptance regime: n >= 4x page size");
@@ -56,7 +97,7 @@ fn main() {
     ];
 
     println!(
-        "decode bench: n={n} d={d} heads={heads} seqs={count} page={page_size}{}",
+        "decode bench: n={n} d={d} heads={heads} seqs={count} page={page_size} speculate={spec_k}{}",
         if smoke { " (smoke)" } else { "" }
     );
     let mut t = Table::new(vec![
@@ -67,12 +108,25 @@ fn main() {
         "pages skipped",
     ])
     .title("paged-KV decode: FLASHMASK page skip vs dense cache");
+    let mut s = Table::new(vec![
+        "mask",
+        "accepted tok/s",
+        "sequential tok/s",
+        "speedup",
+        "accept rate",
+        "pages skipped",
+    ])
+    .title(format!(
+        "speculative decode (oracle draft, k={spec_k}) vs one-token-at-a-time"
+    ));
     for (name, mask_of) in &cases {
         let reqs = requests(n, d, heads, count, mask_of.as_ref());
-        let (ms_skip, frac, tokens) = run(&reqs, page_size, d, true);
-        let (ms_dense, _, _) = run(&reqs, page_size, d, false);
+        let (ms_skip, rep_skip, seq_out) = run(&reqs, page_size, d, true, SpecPolicy::Off);
+        let (ms_dense, _, _) = run(&reqs, page_size, d, false, SpecPolicy::Off);
+        let tokens = rep_skip.tokens;
         let tps_skip = tokens as f64 / (ms_skip / 1e3);
         let tps_dense = tokens as f64 / (ms_dense / 1e3);
+        let frac = rep_skip.pages_skip_fraction;
         if *name == "sliding_window" {
             assert!(frac > 0.0, "sliding-window decode must skip pages at n >= 4x page size");
         }
@@ -83,6 +137,31 @@ fn main() {
             format!("{:.2}x", ms_dense / ms_skip),
             format!("{:.1}%", frac * 100.0),
         ]);
+
+        if spec_k > 1 {
+            let policy =
+                SpecPolicy::Oracle { k: spec_k, accept_rate: 1.0, branch: 1, seed: 99 };
+            let (ms_spec, rep_spec, spec_out) = run(&reqs, page_size, d, true, policy);
+            assert_identical(name, &seq_out, &spec_out);
+            assert_eq!(rep_spec.tokens, tokens, "{name}: speculative run dropped tokens");
+            assert!(
+                rep_spec.accept_rate() > 0.99,
+                "{name}: high-acceptance draft accepted only {:.2}",
+                rep_spec.accept_rate()
+            );
+            let tps_spec = tokens as f64 / (ms_spec / 1e3);
+            s.row(vec![
+                name.to_string(),
+                format!("{tps_spec:.0}"),
+                format!("{tps_skip:.0}"),
+                format!("{:.2}x", ms_skip / ms_spec),
+                format!("{:.1}%", rep_spec.accept_rate() * 100.0),
+                format!("{:.1}%", rep_spec.pages_skip_fraction * 100.0),
+            ]);
+        }
     }
     t.print();
+    if spec_k > 1 {
+        s.print();
+    }
 }

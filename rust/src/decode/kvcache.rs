@@ -192,6 +192,21 @@ impl PagedKv {
         true
     }
 
+    /// Drop rows past `new_len`, returning now-empty tail pages to the
+    /// pool — the speculative-decode rollback: drafted-but-rejected
+    /// rows vanish and their pages are immediately reusable.  Stale
+    /// data left in the kept tail page is unreachable (`page_cols`
+    /// bounds every read by `len`) and is overwritten by the next
+    /// `append`.
+    pub fn truncate(&mut self, pool: &mut PagePool, new_len: usize) {
+        assert!(new_len <= self.len, "truncate {new_len} > len {}", self.len);
+        let keep = new_len.div_ceil(pool.page_size());
+        for id in self.page_ids.drain(keep..) {
+            pool.free_page(id);
+        }
+        self.len = new_len;
+    }
+
     /// Return every page to the pool; `evict` selects the accounting
     /// bucket (preemption vs. normal retirement).
     pub fn release(&mut self, pool: &mut PagePool, evict: bool) {
@@ -266,6 +281,46 @@ mod tests {
         }
         assert_eq!(b.n_pages(), 2);
         assert_eq!(pool.stats.allocs, 4);
+    }
+
+    #[test]
+    fn truncate_frees_tail_pages_and_allows_reappend() {
+        let d = 2;
+        let mut pool = PagePool::new(3, d, 4);
+        let mut kv = PagedKv::new();
+        for t in 0..8 {
+            assert!(kv.append(&mut pool, &row(t as f32, d), &row(t as f32, d)));
+        }
+        assert_eq!(kv.n_pages(), 3); // ceil(8/3)
+        // mid-page truncate: page holding row 4 stays, tail pages freed
+        kv.truncate(&mut pool, 5);
+        assert_eq!(kv.len(), 5);
+        assert_eq!(kv.n_pages(), 2);
+        assert_eq!(pool.in_use(), 2);
+        // surviving rows intact
+        for t in 0..5 {
+            let (p, slot) = (t / 3, t % 3);
+            assert_eq!(pool.page_k(kv.page_id(p))[slot * d], t as f32);
+        }
+        // re-append overwrites the stale slot and can regrow pages
+        assert!(kv.append(&mut pool, &row(50.0, d), &row(50.0, d)));
+        assert_eq!(pool.page_k(kv.page_id(1))[2 * d], 50.0);
+        // boundary truncate: exactly page-aligned length keeps the page
+        kv.truncate(&mut pool, 3);
+        assert_eq!(kv.n_pages(), 1);
+        // truncate to zero returns everything
+        kv.truncate(&mut pool, 0);
+        assert!(kv.is_empty());
+        assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "truncate")]
+    fn truncate_beyond_len_panics() {
+        let mut pool = PagePool::new(2, 2, 2);
+        let mut kv = PagedKv::new();
+        assert!(kv.append(&mut pool, &row(0.0, 2), &row(0.0, 2)));
+        kv.truncate(&mut pool, 2);
     }
 
     #[test]

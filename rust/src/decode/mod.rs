@@ -20,18 +20,32 @@
 //!   active ones each iteration, retire finished ones; sequences of
 //!   different lengths decode side by side, with preemption (page
 //!   eviction + requeue) under pool pressure.
+//! * [`spec`] — speculative decoding: a [`DraftProposer`] proposes a
+//!   token tree, [`spec::verify_rows`] scores every drafted row in one
+//!   pass over the cache pages under a
+//!   [`crate::mask::builders::tree_mask`], and the session commits the
+//!   longest greedily-accepted root path, rolling the cache back past
+//!   the rejected remainder.  Greedy speculative decode is
+//!   token-identical to sequential decode.
 //!
 //! Correctness oracle: decode-step outputs equal the full-sequence
 //! `attention::flash` prefill on the same mask, row for row (the
-//! decode analogue of the paper's §4.4 exactness claim).
+//! decode analogue of the paper's §4.4 exactness claim); sequential
+//! decode, speculative decode and prefill are pinned to each other in
+//! `tests/decode_oracle.rs`.
 
 pub mod kvcache;
 pub mod session;
+pub mod spec;
 pub mod step;
 
 pub use kvcache::{PageId, PagePool, PagedKv, PoolStats};
 pub use session::{
     BatcherConfig, BatcherReport, ContinuousBatcher, DecodeRequest, DecodeResponse,
     DecodeSession, StepOutcome,
+};
+pub use spec::{
+    greedy_accept_path, token_rows, DraftProposer, DraftTree, OracleProposer,
+    SelfDraftProposer, SpecPolicy,
 };
 pub use step::{decode_step, DecodeStats};

@@ -16,8 +16,9 @@
 //! byte-comparable to the full-sequence prefill oracle.
 
 use super::kvcache::{PagePool, PagedKv};
+use super::spec::{self, DraftProposer, SpecPolicy};
 use super::step::{decode_step, DecodeStats};
-use crate::mask::{FlashMask, IncrementalMaskView};
+use crate::mask::{builders, FlashMask, IncrementalMaskView};
 use anyhow::{bail, ensure, Result};
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -101,6 +102,10 @@ pub struct DecodeSession {
     out: Vec<Vec<f32>>,
     /// Score scratch reused across steps (no per-token allocation).
     scratch: Vec<f32>,
+    /// Draft source when this session decodes speculatively.
+    proposer: Option<Box<dyn DraftProposer>>,
+    /// Draft budget (max accepted tokens per verify pass).
+    spec_k: usize,
     pub stats: DecodeStats,
     pub admitted: Instant,
 }
@@ -119,9 +124,23 @@ impl DecodeSession {
             pos: 0,
             out,
             scratch: Vec::with_capacity(page_size),
+            proposer: None,
+            spec_k: 0,
             stats: DecodeStats::default(),
             admitted: Instant::now(),
         }
+    }
+
+    /// Enable speculative decoding: up to `k` tokens are drafted by
+    /// `proposer` and verified per [`try_speculate`](Self::try_speculate)
+    /// call.  `k <= 1` is sequential decode.
+    pub fn set_speculation(&mut self, proposer: Box<dyn DraftProposer>, k: usize) {
+        self.proposer = Some(proposer);
+        self.spec_k = k;
+    }
+
+    pub fn speculative(&self) -> bool {
+        self.proposer.is_some() && self.spec_k > 1
     }
 
     fn kv_row(&self, src: &[f32], h: usize, t: usize) -> std::ops::Range<usize> {
@@ -188,6 +207,133 @@ impl DecodeSession {
             }
         }
         self.pos += 1;
+        if self.pos == self.req.n {
+            StepOutcome::Finished
+        } else {
+            StepOutcome::Stepped
+        }
+    }
+
+    /// One speculative iteration: draft up to `spec_k` tokens, verify
+    /// every drafted row in a single pass over the cache pages
+    /// ([`spec::verify_rows`] under a [`builders::tree_mask`]), commit
+    /// the longest greedily-accepted root path, and roll the cache back
+    /// past the rejected remainder.  Falls back to one sequential
+    /// [`try_step`](Self::try_step) when nothing is accepted, so every
+    /// call advances at least one token or reports `NoPage`.
+    ///
+    /// Page demand for the whole draft is checked up front and rejected
+    /// drafts are truncated away before returning, so a `NoPage` return
+    /// or a later preemption never leaks drafted-but-uncommitted pages.
+    pub fn try_speculate(&mut self, pool: &mut PagePool, skip: bool) -> StepOutcome {
+        debug_assert!(self.pos < self.req.n);
+        let t0 = self.pos;
+        let budget = self.spec_k.min(self.req.n - t0);
+        if self.proposer.is_none() || budget <= 1 {
+            return self.try_step(pool, skip);
+        }
+        let Some(draft) = self.proposer.as_mut().unwrap().propose(&self.req, t0, budget) else {
+            // no credible draft (e.g. n-gram miss): plain sequential
+            // step, no verify pass paid for
+            return self.try_step(pool, skip);
+        };
+        let kd = draft.len();
+        assert!(
+            draft.tree.max_path_len() <= budget,
+            "draft path {} exceeds budget {budget}",
+            draft.tree.max_path_len()
+        );
+        let ps = pool.page_size();
+        let heads = self.req.heads;
+        let d = self.req.d;
+        let new_pages = heads * ((t0 + kd).div_ceil(ps) - t0.div_ceil(ps));
+        if pool.available() < new_pages {
+            // the draft doesn't fit (it may transiently need more pages
+            // than the submit-time worst case covers, e.g. rejected
+            // sibling branches near the sequence end) — try sequential
+            // progress instead; only a genuine single-token NoPage
+            // escalates to the batcher's preemption path
+            return self.try_step(pool, skip);
+        }
+
+        // append every drafted K/V row (checked above, cannot fail)
+        for h in 0..heads {
+            for i in 0..kd {
+                let ok = self.caches[h].append(
+                    pool,
+                    spec::DraftTree::head_row(&draft.k, i, h, d),
+                    spec::DraftTree::head_row(&draft.v, i, h, d),
+                );
+                debug_assert!(ok, "draft alloc failed despite availability check");
+            }
+        }
+
+        // one verify pass per head, all drafted rows at once.  The tree
+        // mask + view are rebuilt per pass — O(t0 + kd) setup against
+        // the pass's O(t0 * kd * d) compute, i.e. ~1/(kd*d) relative —
+        // a draft-region-only view would save it but needs page-offset
+        // handling (t0 is rarely page-aligned)
+        let tm = builders::tree_mask(t0, &draft.tree);
+        let tview = IncrementalMaskView::new(&tm, ps);
+        let mut outs: Vec<Vec<f32>> = Vec::with_capacity(heads);
+        for h in 0..heads {
+            let mut q_rows = Vec::with_capacity(kd * d);
+            for i in 0..kd {
+                q_rows.extend_from_slice(spec::DraftTree::head_row(&draft.q, i, h, d));
+            }
+            outs.push(spec::verify_rows(
+                &q_rows,
+                &self.caches[h],
+                pool,
+                &self.req.mask,
+                &self.view,
+                &draft.tree,
+                &tm,
+                &tview,
+                t0,
+                self.scale,
+                skip,
+                &mut self.stats,
+                &mut self.scratch,
+            ));
+        }
+        self.stats.spec_passes += 1;
+        self.stats.drafted += kd as u64;
+
+        let path = spec::greedy_accept_path(&self.req, &draft, t0);
+
+        // rollback: drop every drafted row (accepted ones are re-applied
+        // below from the truth stream, which acceptance proved bitwise
+        // equal), returning tail pages to the pool
+        for c in &mut self.caches {
+            c.truncate(pool, t0);
+        }
+        if path.is_empty() {
+            let out = self.try_step(pool, skip);
+            // count the fallback only if the sequential step actually
+            // ran — a NoPage here is retried after preemption and would
+            // otherwise double-count this verify pass's fallback
+            if out != StepOutcome::NoPage {
+                self.stats.fallback_steps += 1;
+            }
+            return out;
+        }
+
+        // commit the accepted prefix: cache rows + verified outputs
+        for (j, &node) in path.iter().enumerate() {
+            let t = t0 + j;
+            for h in 0..heads {
+                let kr = self.kv_row(&self.req.k, h, t);
+                let vr = self.kv_row(&self.req.v, h, t);
+                let ok = self.caches[h].append(pool, &self.req.k[kr], &self.req.v[vr]);
+                debug_assert!(ok, "commit alloc failed after rollback");
+                if t >= self.req.prompt_len {
+                    self.out[h].extend_from_slice(&outs[h][node * d..(node + 1) * d]);
+                }
+            }
+        }
+        self.stats.accepted += path.len() as u64;
+        self.pos += path.len();
         if self.pos == self.req.n {
             StepOutcome::Finished
         } else {
@@ -270,11 +416,21 @@ pub struct BatcherConfig {
     pub max_active: usize,
     /// Eq. 4 page skipping; `false` is the dense-cache baseline.
     pub skip: bool,
+    /// Speculative decoding policy (draft source + budget) applied to
+    /// every admitted session; [`SpecPolicy::Off`] is sequential decode.
+    pub spec: SpecPolicy,
 }
 
 impl Default for BatcherConfig {
     fn default() -> Self {
-        BatcherConfig { page_size: 16, d: 64, max_pages: 4096, max_active: 8, skip: true }
+        BatcherConfig {
+            page_size: 16,
+            d: 64,
+            max_pages: 4096,
+            max_active: 8,
+            skip: true,
+            spec: SpecPolicy::Off,
+        }
     }
 }
 
@@ -290,6 +446,24 @@ pub struct BatcherReport {
     pub preemptions: u64,
     pub evicted_pages: u64,
     pub peak_pages: usize,
+    /// Draft tokens run through verify passes (0 when sequential).
+    pub drafted_tokens: u64,
+    /// Draft tokens accepted and committed.
+    pub accepted_tokens: u64,
+    /// Verify passes that accepted nothing and fell back to one
+    /// sequential step.
+    pub spec_fallbacks: u64,
+}
+
+impl BatcherReport {
+    /// Accepted / drafted, 0 when nothing was drafted.
+    pub fn accept_rate(&self) -> f64 {
+        if self.drafted_tokens == 0 {
+            0.0
+        } else {
+            self.accepted_tokens as f64 / self.drafted_tokens as f64
+        }
+    }
 }
 
 /// Continuous-batching decode scheduler over a shared page pool.
@@ -363,6 +537,9 @@ impl ContinuousBatcher {
                 break;
             }
             let mut session = DecodeSession::new(req, self.cfg.page_size);
+            if let Some(proposer) = self.cfg.spec.build(session.req.id) {
+                session.set_speculation(proposer, self.cfg.spec.k());
+            }
             let ok = session.prefill(&mut self.pool);
             debug_assert!(ok, "prefill failed after fit check");
             self.active.push(session);
@@ -387,7 +564,15 @@ impl ContinuousBatcher {
         }
         let mut i = 0;
         while i < self.active.len() {
-            match self.active[i].try_step(&mut self.pool, self.cfg.skip) {
+            // speculative sessions may commit several tokens per
+            // iteration; count committed tokens by cursor delta
+            let before = self.active[i].pos;
+            let outcome = if self.active[i].speculative() {
+                self.active[i].try_speculate(&mut self.pool, self.cfg.skip)
+            } else {
+                self.active[i].try_step(&mut self.pool, self.cfg.skip)
+            };
+            match outcome {
                 StepOutcome::NoPage => {
                     if self.active.len() == 1 {
                         // unreachable given the submit() fit check, but
@@ -414,11 +599,11 @@ impl ContinuousBatcher {
                     // victim == i: the pass ends and the next step() retries
                 }
                 StepOutcome::Stepped => {
-                    self.decoded_tokens += 1;
+                    self.decoded_tokens += (self.active[i].pos - before) as u64;
                     i += 1;
                 }
                 StepOutcome::Finished => {
-                    self.decoded_tokens += 1;
+                    self.decoded_tokens += (self.active[i].pos - before) as u64;
                     let s = self.active.remove(i);
                     self.agg.merge(&s.stats);
                     self.finished.push(s.retire(&mut self.pool));
@@ -450,6 +635,9 @@ impl ContinuousBatcher {
             preemptions: self.preemptions,
             evicted_pages: self.pool.stats.evictions,
             peak_pages: self.pool.stats.peak_in_use,
+            drafted_tokens: self.agg.drafted,
+            accepted_tokens: self.agg.accepted,
+            spec_fallbacks: self.agg.fallback_steps,
         }
     }
 }
@@ -536,6 +724,7 @@ mod tests {
             max_pages: 64,
             max_active: 4,
             skip: true,
+            spec: SpecPolicy::Off,
         });
         for r in &reqs {
             b.submit(r.clone()).unwrap();
@@ -565,6 +754,7 @@ mod tests {
             max_pages: 10, // one sequence needs 8; three need 24
             max_active: 4,
             skip: true,
+            spec: SpecPolicy::Off,
         });
         for r in &reqs {
             b.submit(r.clone()).unwrap();
@@ -591,6 +781,7 @@ mod tests {
             max_pages: 2,
             max_active: 2,
             skip: true,
+            spec: SpecPolicy::Off,
         });
         let r = request(0, 1, 64, d, 0, 1); // needs 8 pages
         assert!(b.submit(r).is_err());
@@ -611,6 +802,7 @@ mod tests {
             max_pages: 256,
             max_active: 2,
             skip: true,
+            spec: SpecPolicy::Off,
         });
         for id in 0..5u64 {
             b.submit(request(id, 1, 24, d, 0, 300 + id)).unwrap();
@@ -620,5 +812,189 @@ mod tests {
         assert_eq!(b.waiting_len(), 3);
         let report = b.run().unwrap();
         assert_eq!(report.sequences, 5);
+    }
+
+    #[test]
+    fn speculative_batching_matches_oracle_and_accepts() {
+        // oracle drafter at full acceptance: every sequence commits k
+        // tokens per verify pass and the outputs still match prefill
+        let d = 8;
+        let reqs: Vec<DecodeRequest> = [(0u64, 40usize, 8usize), (1, 64, 16), (2, 96, 0)]
+            .iter()
+            .map(|&(id, n, p)| request(id, 2, n, d, p, 400 + id))
+            .collect();
+        let mut b = ContinuousBatcher::new(BatcherConfig {
+            page_size: 16,
+            d,
+            max_pages: 64,
+            max_active: 4,
+            skip: true,
+            spec: SpecPolicy::Oracle { k: 4, accept_rate: 1.0, branch: 2, seed: 9 },
+        });
+        for r in &reqs {
+            b.submit(r.clone()).unwrap();
+        }
+        let report = b.run().unwrap();
+        assert_eq!(report.sequences, 3);
+        assert_eq!(report.tokens, (40 - 8) + (64 - 16) + 96);
+        assert!(report.drafted_tokens > 0);
+        assert!(report.accepted_tokens > 0);
+        assert_eq!(report.spec_fallbacks, 0, "rate-1 oracle never falls back");
+        // branch=2 drafts one junk sibling per pass: acceptance < 1 but
+        // the whole truth chain is always committed
+        assert!(report.accept_rate() > 0.5, "accept rate {}", report.accept_rate());
+        let mut done = b.take_finished();
+        done.sort_by_key(|r| r.id);
+        for (req, resp) in reqs.iter().zip(&done) {
+            assert_matches_oracle(req, resp);
+        }
+    }
+
+    #[test]
+    fn speculative_partial_acceptance_still_exact() {
+        // rejections interleave verify passes with sequential fallbacks;
+        // outputs must stay oracle-exact and every token must commit
+        let d = 8;
+        let reqs: Vec<DecodeRequest> =
+            (0..3u64).map(|id| request(id, 1, 48, d, 0, 500 + id)).collect();
+        let mut b = ContinuousBatcher::new(BatcherConfig {
+            page_size: 8,
+            d,
+            max_pages: 256,
+            max_active: 4,
+            skip: true,
+            spec: SpecPolicy::Oracle { k: 4, accept_rate: 0.5, branch: 1, seed: 13 },
+        });
+        for r in &reqs {
+            b.submit(r.clone()).unwrap();
+        }
+        let report = b.run().unwrap();
+        assert_eq!(report.sequences, 3);
+        assert_eq!(report.tokens, 3 * 48);
+        assert!(report.drafted_tokens > report.accepted_tokens, "rate-0.5 must reject some");
+        let mut done = b.take_finished();
+        done.sort_by_key(|r| r.id);
+        for (req, resp) in reqs.iter().zip(&done) {
+            assert_matches_oracle(req, resp);
+        }
+    }
+
+    #[test]
+    fn preemption_mid_speculation_leaks_no_pages() {
+        // satellite: pool pressure fires while sessions are speculating;
+        // drafted-but-uncommitted rows must never leak pages, outputs
+        // must stay exact, and the pool must drain completely
+        let d = 8;
+        let reqs: Vec<DecodeRequest> =
+            (0..3u64).map(|id| request(id, 1, 64, d, 0, 600 + id)).collect();
+        let mut b = ContinuousBatcher::new(BatcherConfig {
+            page_size: 8,
+            d,
+            max_pages: 10, // one sequence alone fits (8 pages), three don't
+            max_active: 4,
+            skip: true,
+            spec: SpecPolicy::Oracle { k: 4, accept_rate: 1.0, branch: 1, seed: 17 },
+        });
+        for r in &reqs {
+            b.submit(r.clone()).unwrap();
+        }
+        let report = b.run().unwrap();
+        assert_eq!(report.sequences, 3);
+        assert!(report.preemptions > 0, "pool pressure should have preempted");
+        assert_eq!(report.tokens, 3 * 64);
+        assert_eq!(b.pool().in_use(), 0, "speculation leaked pages");
+        assert_eq!(b.pool().available(), 10);
+        let mut done = b.take_finished();
+        done.sort_by_key(|r| r.id);
+        for (req, resp) in reqs.iter().zip(&done) {
+            assert_matches_oracle(req, resp);
+        }
+    }
+
+    #[test]
+    fn session_no_page_mid_speculation_leaves_state_untouched() {
+        // direct session-level check: a draft that cannot fit allocates
+        // nothing and changes nothing
+        let d = 4;
+        let req = request(0, 1, 32, d, 0, 700);
+        let mut pool = PagePool::new(8, d, 2); // 16 tokens max
+        let mut s = DecodeSession::new(req, 8);
+        s.set_speculation(Box::new(spec::OracleProposer::new(1.0, 1, 3)), 4);
+        assert!(s.prefill(&mut pool));
+        // decode 14 tokens sequentially-ish via speculation until the
+        // pool frontier: at pos 14 a 4-token draft needs a 3rd page
+        while s.pos < 14 {
+            assert_ne!(s.try_speculate(&mut pool, true), StepOutcome::NoPage);
+        }
+        let held = s.pages_held();
+        let pos = s.pos;
+        assert_eq!(s.try_speculate(&mut pool, true), StepOutcome::NoPage);
+        assert_eq!(s.pages_held(), held, "NoPage draft must not allocate");
+        assert_eq!(s.pos, pos);
+        assert_eq!(pool.in_use(), 2);
+    }
+
+    #[test]
+    fn submit_after_pool_exhaustion_completes() {
+        // satellite: new work arrives while the pool is saturated; the
+        // late request queues, is admitted once pages free up, finishes
+        let d = 4;
+        let mut b = ContinuousBatcher::new(BatcherConfig {
+            page_size: 8,
+            d,
+            max_pages: 8,
+            max_active: 4,
+            skip: true,
+            spec: SpecPolicy::Off,
+        });
+        for id in 0..2u64 {
+            b.submit(request(id, 1, 32, d, 0, 800 + id)).unwrap();
+        }
+        // drive until the pool is fully committed to the first two
+        // (position 28 of 32: 4 pages held each, none released yet)
+        for _ in 0..28 {
+            assert!(b.step().unwrap());
+        }
+        assert_eq!(b.pool().available(), 0);
+        let late = request(2, 1, 32, d, 0, 802);
+        b.submit(late.clone()).unwrap();
+        // an oversized late submit still fails loudly, even mid-run
+        assert!(b.submit(request(3, 1, 128, d, 0, 803)).is_err());
+        let report = b.run().unwrap();
+        assert_eq!(report.sequences, 3);
+        assert_eq!(report.tokens, 3 * 32);
+        let mut done = b.take_finished();
+        done.sort_by_key(|r| r.id);
+        assert_eq!(done.len(), 3);
+        assert_matches_oracle(&late, &done[2]);
+    }
+
+    #[test]
+    fn zero_length_prompt_decodes_from_scratch() {
+        // satellite: prompt_len == 0 — prefill loads nothing, the first
+        // decoded row attends only to itself, speculation works from
+        // position 0 (both with and without acceptance)
+        let d = 8;
+        for spec in [
+            SpecPolicy::Off,
+            SpecPolicy::Oracle { k: 4, accept_rate: 1.0, branch: 2, seed: 23 },
+            SpecPolicy::Oracle { k: 4, accept_rate: 0.0, branch: 1, seed: 23 },
+        ] {
+            let req = request(0, 2, 40, d, 0, 900);
+            let mut b = ContinuousBatcher::new(BatcherConfig {
+                page_size: 8,
+                d,
+                max_pages: 64,
+                max_active: 2,
+                skip: true,
+                spec,
+            });
+            b.submit(req.clone()).unwrap();
+            let report = b.run().unwrap();
+            assert_eq!(report.sequences, 1, "{spec:?}");
+            assert_eq!(report.tokens, 40);
+            let done = b.take_finished();
+            assert_matches_oracle(&req, &done[0]);
+        }
     }
 }

@@ -1,0 +1,718 @@
+//! Speculative decoding: draft → tree-mask verify → commit/rollback.
+//!
+//! Sequential decode pays one full pass over the KV cache per token.
+//! Speculative decoding proposes a *tree* of `k` draft tokens and
+//! scores every drafted row in **one** pass over the cache pages
+//! ([`verify_rows`]), then commits the longest accepted root path and
+//! rolls the cache back past the rejected remainder — the
+//! FlashAttention-2 observation that batching query rows through a
+//! single online-softmax pass is where decode throughput lives,
+//! made exact for arbitrary FlashMask-masked models:
+//!
+//! * Draft columns are masked by [`crate::mask::builders::tree_mask`]
+//!   — ancestor visibility as LTS/LTE column intervals — and whole
+//!   pages the draft cannot see are skipped by the same
+//!   [`IncrementalMaskView`] classifier the sequential step uses.
+//! * Committed columns are masked by the request's *base* mask
+//!   evaluated at each node's **logical** position `t0 + depth(node)`
+//!   (the position the node would hold if its root path were committed
+//!   sequentially), so row-dependent masks — sliding windows, document
+//!   packing, KV eviction — stay exact under speculation.
+//!
+//! **Exactness guarantee** (the decode analogue of the paper's §4.4):
+//! acceptance is greedy — a draft node is accepted iff its proposed
+//! token rows equal the teacher-forced truth rows bitwise — so the
+//! committed cache is always byte-identical to sequential decode's
+//! cache, and accepted output rows match the sequential step kernel to
+//! float-accumulation order.  `tests/decode_oracle.rs` pins sequential,
+//! speculative (k = 1..4) and full prefill to each other for every
+//! causal benchmark mask family.
+
+use super::kvcache::{PagePool, PagedKv};
+use super::session::DecodeRequest;
+use super::step::DecodeStats;
+use crate::mask::{BlockClass, FlashMask, IncrementalMaskView, TokenTree};
+use crate::util::rng::Rng;
+
+const NEG_INF: f32 = f32::NEG_INFINITY;
+
+/// The head-major `[heads * d]` Q/K/V rows of the teacher-forced token
+/// at position `t` — the "truth token" a greedy sampler would emit.
+pub fn token_rows(req: &DecodeRequest, t: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert!(t < req.n);
+    let (n, d) = (req.n, req.d);
+    let mut q = Vec::with_capacity(req.heads * d);
+    let mut k = Vec::with_capacity(req.heads * d);
+    let mut v = Vec::with_capacity(req.heads * d);
+    for h in 0..req.heads {
+        let base = h * n * d + t * d;
+        q.extend_from_slice(&req.q[base..base + d]);
+        k.extend_from_slice(&req.k[base..base + d]);
+        v.extend_from_slice(&req.v[base..base + d]);
+    }
+    (q, k, v)
+}
+
+/// A proposed draft: a preorder [`TokenTree`] plus, per node, the
+/// head-major `[heads * d]` Q/K/V rows of the proposed token.
+#[derive(Clone, Debug)]
+pub struct DraftTree {
+    pub tree: TokenTree,
+    pub q: Vec<Vec<f32>>,
+    pub k: Vec<Vec<f32>>,
+    pub v: Vec<Vec<f32>>,
+}
+
+impl DraftTree {
+    pub fn len(&self) -> usize {
+        self.tree.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tree.is_empty()
+    }
+
+    /// Head `h`'s `[d]` slice of node `node`'s row set.
+    pub fn head_row<'a>(rows: &'a [Vec<f32>], node: usize, h: usize, d: usize) -> &'a [f32] {
+        &rows[node][h * d..(h + 1) * d]
+    }
+}
+
+/// A draft-token source.  `budget` bounds the accepted-path length
+/// (`tree.max_path_len() <= budget`), so a proposal can never commit
+/// past the sequence end.  Returning `None` means "no credible draft":
+/// the session takes one plain sequential step without paying for a
+/// verify pass (a returned tree is never empty).
+pub trait DraftProposer {
+    fn propose(&mut self, req: &DecodeRequest, t0: usize, budget: usize) -> Option<DraftTree>;
+}
+
+/// Deterministic n-gram self-drafting: look the last committed token up
+/// in the committed history (bitwise match of its head-0 K row) and
+/// propose the rows that followed the most recent earlier occurrence as
+/// a chain — the classic "prompt lookup" drafter.  Never reads past
+/// `t0`, so it has no oracle knowledge; on repetitive data (structured
+/// corpora) acceptance is high, and when the history has no match it
+/// returns `None` so the session pays only a plain sequential step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SelfDraftProposer;
+
+impl DraftProposer for SelfDraftProposer {
+    fn propose(&mut self, req: &DecodeRequest, t0: usize, budget: usize) -> Option<DraftTree> {
+        debug_assert!(budget >= 1);
+        let d = req.d;
+        if t0 < 2 {
+            return None; // no history to look anything up in
+        }
+        let last = t0 - 1;
+        let key = &req.k[last * d..(last + 1) * d]; // head-0 K row
+        let p = (0..last).rev().find(|&p| req.k[p * d..(p + 1) * d] == *key)?;
+        let mut qs = Vec::new();
+        let mut ks = Vec::new();
+        let mut vs = Vec::new();
+        for j in 0..budget {
+            let cont = p + 1 + j;
+            if cont >= t0 {
+                break; // history exhausted — never peek at the future
+            }
+            let (q, k, v) = token_rows(req, cont);
+            qs.push(q);
+            ks.push(k);
+            vs.push(v);
+        }
+        debug_assert!(!qs.is_empty(), "p + 1 < t0 by construction");
+        Some(DraftTree { tree: TokenTree::chain(qs.len()), q: qs, k: ks, v: vs })
+    }
+}
+
+/// Benchmark/test drafter with oracle knowledge of the teacher-forced
+/// continuation: each path node is the truth token with probability
+/// `accept_rate`, otherwise a perturbed (guaranteed-rejected) token.
+/// `branch > 1` adds rejected sibling candidates at the root so the
+/// verify pass exercises genuine tree masks.  Deterministic per seed.
+#[derive(Clone, Debug)]
+pub struct OracleProposer {
+    pub accept_rate: f64,
+    pub branch: usize,
+    rng: Rng,
+}
+
+impl OracleProposer {
+    pub fn new(accept_rate: f64, branch: usize, seed: u64) -> OracleProposer {
+        assert!((0.0..=1.0).contains(&accept_rate));
+        assert!(branch >= 1);
+        OracleProposer { accept_rate, branch, rng: Rng::new(seed) }
+    }
+}
+
+fn perturb(mut rows: (Vec<f32>, Vec<f32>, Vec<f32>)) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    for x in rows.0.iter_mut().chain(rows.1.iter_mut()).chain(rows.2.iter_mut()) {
+        *x += 1.0;
+    }
+    rows
+}
+
+impl DraftProposer for OracleProposer {
+    fn propose(&mut self, req: &DecodeRequest, t0: usize, budget: usize) -> Option<DraftTree> {
+        debug_assert!(budget >= 1);
+        // preorder: the real candidate chain first (one whole subtree),
+        // then the rejected sibling roots
+        let chain = budget.min(req.n - t0);
+        let mut parents: Vec<Option<usize>> = Vec::new();
+        let mut qs = Vec::new();
+        let mut ks = Vec::new();
+        let mut vs = Vec::new();
+        for j in 0..chain {
+            parents.push(if j == 0 { None } else { Some(j - 1) });
+            let truth = token_rows(req, t0 + j);
+            let (q, k, v) =
+                if self.rng.f64() < self.accept_rate { truth } else { perturb(truth) };
+            qs.push(q);
+            ks.push(k);
+            vs.push(v);
+        }
+        for _ in 1..self.branch {
+            parents.push(None);
+            let (q, k, v) = perturb(token_rows(req, t0));
+            qs.push(q);
+            ks.push(k);
+            vs.push(v);
+        }
+        Some(DraftTree {
+            tree: TokenTree::from_parents(parents).expect("oracle layout is preorder"),
+            q: qs,
+            k: ks,
+            v: vs,
+        })
+    }
+}
+
+/// How a decode session speculates.  `Copy` so it can live in
+/// [`super::session::BatcherConfig`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SpecPolicy {
+    /// Sequential decode, one token per step.
+    Off,
+    /// N-gram self-drafting chains of up to `k` tokens.
+    SelfDraft { k: usize },
+    /// Oracle drafter (bench/test): truth continuation with probability
+    /// `accept_rate`, `branch` root candidates, deterministic per seed.
+    Oracle { k: usize, accept_rate: f64, branch: usize, seed: u64 },
+}
+
+impl Default for SpecPolicy {
+    fn default() -> Self {
+        SpecPolicy::Off
+    }
+}
+
+impl SpecPolicy {
+    /// Draft budget; `<= 1` means speculation is a no-op.
+    pub fn k(&self) -> usize {
+        match self {
+            SpecPolicy::Off => 0,
+            SpecPolicy::SelfDraft { k } => *k,
+            SpecPolicy::Oracle { k, .. } => *k,
+        }
+    }
+
+    /// Instantiate the per-session proposer (`None` when off or the
+    /// budget is degenerate).  The session id decorrelates oracle
+    /// streams across sequences.
+    pub fn build(&self, session_id: u64) -> Option<Box<dyn DraftProposer>> {
+        if self.k() <= 1 {
+            return None;
+        }
+        match *self {
+            SpecPolicy::Off => None,
+            SpecPolicy::SelfDraft { .. } => Some(Box::new(SelfDraftProposer)),
+            SpecPolicy::Oracle { accept_rate, branch, seed, .. } => {
+                Some(Box::new(OracleProposer::new(
+                    accept_rate,
+                    branch,
+                    seed ^ session_id.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                )))
+            }
+        }
+    }
+}
+
+/// Is cache column `col` visible to draft node `node`?  The element
+/// test the verify kernel applies on partially-visible pages:
+/// committed columns use the base mask at the node's logical row;
+/// drafted columns additionally require tree ancestry, with the base
+/// mask evaluated at *both* logical positions (so e.g. a sliding
+/// window narrower than the draft still masks distant ancestors,
+/// exactly as sequential decode would).
+pub fn spec_visible(
+    base: &FlashMask,
+    tree: &TokenTree,
+    t0: usize,
+    node: usize,
+    col: usize,
+) -> bool {
+    let lr = t0 + tree.depth(node);
+    if col < t0 {
+        return base.allowed(lr, col);
+    }
+    let cnode = col - t0;
+    if cnode >= tree.len() {
+        return false;
+    }
+    tree.is_ancestor_or_self(cnode, node) && base.allowed(lr, t0 + tree.depth(cnode))
+}
+
+/// Score all `k` drafted rows of one head in a single pass over the
+/// cache pages.  `cache` must already hold the `t0` committed rows plus
+/// the `tree.len()` drafted K/V rows.  Returns the node-major
+/// `[tree.len() * d]` output rows.
+///
+/// Page skipping is two-tiered, both through the Eq. 4 classifier:
+/// fully-committed pages classify against the *base* mask at the
+/// node's logical row (so sliding-window/document/eviction skips carry
+/// over from sequential decode unchanged); pages touching the draft
+/// region classify against the *tree* mask (non-ancestor subtrees and
+/// causal-future pages are skipped), degraded to element-wise checking
+/// when visible, because the tree view cannot see the base mask's
+/// row-dependent constraints at drafted columns.  `skip=false` is the
+/// dense baseline that visits and element-masks every page.
+#[allow(clippy::too_many_arguments)]
+pub fn verify_rows(
+    q_rows: &[f32],
+    cache: &PagedKv,
+    pool: &PagePool,
+    base: &FlashMask,
+    base_view: &IncrementalMaskView,
+    tree: &TokenTree,
+    tree_mask: &FlashMask,
+    tree_view: &IncrementalMaskView,
+    t0: usize,
+    scale: f32,
+    skip: bool,
+    stats: &mut DecodeStats,
+    scratch: &mut Vec<f32>,
+) -> Vec<f32> {
+    let d = pool.d();
+    let ps = pool.page_size();
+    let kd = tree.len();
+    debug_assert_eq!(q_rows.len(), kd * d);
+    debug_assert_eq!(cache.len(), t0 + kd, "append draft K/V before verifying");
+    debug_assert_eq!(base_view.page_size(), ps);
+    debug_assert_eq!(tree_view.page_size(), ps);
+    debug_assert_eq!(tree_mask.n(), t0 + kd);
+
+    let mut o = vec![0f32; kd * d];
+    let mut m_run = vec![NEG_INF; kd];
+    let mut l_run = vec![0f32; kd];
+    // per-node score rows for the current page: s[i*ps + c]
+    if scratch.len() < kd * ps {
+        scratch.resize(kd * ps, 0.0);
+    }
+    let s = scratch;
+    let mut class = vec![BlockClass::FullyMasked; kd];
+    let mut active: Vec<usize> = Vec::with_capacity(kd);
+
+    for p in 0..cache.n_pages() {
+        let cols = cache.page_cols(p, ps);
+        let col0 = p * ps;
+        // pages that end at or before t0 hold only committed rows
+        let committed_page = col0 + ps <= t0;
+        active.clear();
+        for (i, ci) in class.iter_mut().enumerate() {
+            stats.pages_total += 1;
+            *ci = if !skip {
+                BlockClass::PartiallyMasked
+            } else if committed_page {
+                // exact: same classifier, same row, as sequential decode
+                base_view.classify_page(base, t0 + tree.depth(i), p)
+            } else {
+                match tree_view.classify_page(tree_mask, t0 + i, p) {
+                    BlockClass::FullyMasked => BlockClass::FullyMasked,
+                    // visible draft columns still need the base mask at
+                    // logical positions — stay element-wise
+                    _ => BlockClass::PartiallyMasked,
+                }
+            };
+            if *ci == BlockClass::FullyMasked {
+                stats.pages_skipped += 1;
+            } else {
+                active.push(i);
+            }
+        }
+        if active.is_empty() {
+            continue; // no surviving row touches this page's K/V memory
+        }
+        let kp = pool.page_k(cache.page_id(p));
+        let vp = pool.page_v(cache.page_id(p));
+
+        // s_i = q_i · K_pᵀ * scale for every surviving row, column-outer
+        // so each loaded K row is reused across all draft rows (the
+        // multi-row batching win: one pass over page memory, k dot
+        // products of independent ILP per K row)
+        for c in 0..cols {
+            let krow = &kp[c * d..(c + 1) * d];
+            for &i in &active {
+                let q_row = &q_rows[i * d..(i + 1) * d];
+                let mut acc = 0f32;
+                for dd in 0..d {
+                    acc += q_row[dd] * krow[dd];
+                }
+                s[i * ps + c] = acc * scale;
+            }
+        }
+        stats.macs += (active.len() * cols * d) as u64;
+
+        // per-node masking + online softmax (Alg. 1 lines 25-26, Br = 1)
+        for &i in &active {
+            let si = &mut s[i * ps..i * ps + cols];
+            if class[i] == BlockClass::PartiallyMasked {
+                for (c, sv) in si.iter_mut().enumerate() {
+                    if !spec_visible(base, tree, t0, i, col0 + c) {
+                        *sv = NEG_INF;
+                    }
+                }
+                stats.mask_evals += cols as u64;
+                stats.pages_partial += 1;
+            } else {
+                stats.pages_unmasked += 1;
+            }
+
+            let mut page_max = NEG_INF;
+            for &sv in si.iter() {
+                page_max = page_max.max(sv);
+            }
+            let m_new = m_run[i].max(page_max);
+            let m_safe = if m_new.is_finite() { m_new } else { 0.0 };
+            let a = if m_run[i].is_finite() { (m_run[i] - m_safe).exp() } else { 0.0 };
+            let o_row = &mut o[i * d..(i + 1) * d];
+            for ov in o_row.iter_mut() {
+                *ov *= a;
+            }
+            let mut page_sum = 0f32;
+            for (c, &sv) in si.iter().enumerate() {
+                let pexp = (sv - m_safe).exp(); // exp(-inf) == 0 for masked
+                page_sum += pexp;
+                for dd in 0..d {
+                    o_row[dd] += pexp * vp[c * d + dd];
+                }
+            }
+            stats.macs += (cols * d) as u64;
+            l_run[i] = a * l_run[i] + page_sum;
+            m_run[i] = m_new;
+        }
+    }
+
+    stats.steps += kd as u64;
+    for i in 0..kd {
+        if l_run[i] > 0.0 {
+            let inv = 1.0 / l_run[i];
+            for ov in o[i * d..(i + 1) * d].iter_mut() {
+                *ov *= inv;
+            }
+        } // fully-masked row stays 0, like the sequential kernel
+    }
+    o
+}
+
+/// Greedy acceptance: walk the draft tree from the roots, at each depth
+/// taking the first candidate whose proposed Q/K/V rows equal the
+/// teacher-forced truth rows bitwise (the greedy sampler's argmax under
+/// teacher forcing *is* the truth token).  Returns the accepted node
+/// path, possibly empty.
+pub fn greedy_accept_path(req: &DecodeRequest, draft: &DraftTree, t0: usize) -> Vec<usize> {
+    let mut path = Vec::new();
+    let mut candidates = draft.tree.roots();
+    let mut depth = 0;
+    while t0 + depth < req.n {
+        let (tq, tk, tv) = token_rows(req, t0 + depth);
+        let Some(&c) = candidates
+            .iter()
+            .find(|&&c| draft.q[c] == tq && draft.k[c] == tk && draft.v[c] == tv)
+        else {
+            break;
+        };
+        path.push(c);
+        depth += 1;
+        candidates = draft.tree.children(c);
+    }
+    path
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decode::decode_step;
+    use crate::mask::builders;
+
+    fn rand_vec(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32() * 0.5).collect()
+    }
+
+    fn single_head_req(n: usize, d: usize, mask: FlashMask, seed: u64) -> DecodeRequest {
+        let mut rng = Rng::new(seed);
+        DecodeRequest::new(
+            7,
+            1,
+            n,
+            d,
+            1,
+            rand_vec(n * d, &mut rng),
+            rand_vec(n * d, &mut rng),
+            rand_vec(n * d, &mut rng),
+            mask,
+        )
+    }
+
+    /// Verify a truth chain and compare each row against the sequential
+    /// step kernel at the same position.
+    fn assert_chain_matches_sequential(mask: FlashMask, n: usize, d: usize, t0: usize, kd: usize) {
+        let ps = 8;
+        let req = single_head_req(n, d, mask, 21);
+        let scale = 1.0 / (d as f32).sqrt();
+        let view = IncrementalMaskView::new(&req.mask, ps);
+
+        // sequential: decode rows 0..t0+kd one at a time
+        let mut pool = PagePool::new(ps, d, 64);
+        let mut cache = PagedKv::new();
+        let mut stats = DecodeStats::default();
+        let mut scratch = Vec::new();
+        let mut seq_rows = Vec::new();
+        for t in 0..t0 + kd {
+            assert!(cache.append(&mut pool, &req.k[t * d..(t + 1) * d], &req.v[t * d..(t + 1) * d]));
+            let o = decode_step(
+                &req.q[t * d..(t + 1) * d],
+                &cache,
+                &pool,
+                &req.mask,
+                &view,
+                t,
+                scale,
+                true,
+                &mut stats,
+                &mut scratch,
+            );
+            seq_rows.push(o);
+        }
+
+        // speculative: cache holds t0 rows, verify a kd-token truth chain
+        let mut pool = PagePool::new(ps, d, 64);
+        let mut cache = PagedKv::new();
+        for t in 0..t0 {
+            assert!(cache.append(&mut pool, &req.k[t * d..(t + 1) * d], &req.v[t * d..(t + 1) * d]));
+        }
+        let tree = TokenTree::chain(kd);
+        let mut q_rows = Vec::new();
+        for j in 0..kd {
+            let t = t0 + j;
+            assert!(cache.append(&mut pool, &req.k[t * d..(t + 1) * d], &req.v[t * d..(t + 1) * d]));
+            q_rows.extend_from_slice(&req.q[t * d..(t + 1) * d]);
+        }
+        let tm = builders::tree_mask(t0, &tree);
+        let tview = IncrementalMaskView::new(&tm, ps);
+        let mut vstats = DecodeStats::default();
+        let out = verify_rows(
+            &q_rows, &cache, &pool, &req.mask, &view, &tree, &tm, &tview, t0, scale, true,
+            &mut vstats, &mut scratch,
+        );
+        for j in 0..kd {
+            let want = &seq_rows[t0 + j];
+            let got = &out[j * d..(j + 1) * d];
+            for dd in 0..d {
+                assert!(
+                    (got[dd] - want[dd]).abs() < 1e-5,
+                    "t0={t0} node {j} dim {dd}: {} vs {}",
+                    got[dd],
+                    want[dd]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chain_verify_matches_sequential_step() {
+        let (n, d) = (48, 4);
+        for t0 in [1usize, 7, 16, 30] {
+            assert_chain_matches_sequential(builders::causal(n), n, d, t0, 4);
+            assert_chain_matches_sequential(builders::sliding_window(n, 6), n, d, t0, 4);
+            assert_chain_matches_sequential(
+                builders::causal_document(n, &[20, 16, 12]),
+                n,
+                d,
+                t0,
+                4,
+            );
+        }
+    }
+
+    #[test]
+    fn tree_verify_scores_each_branch_at_its_logical_position() {
+        // two root candidates: node 0 continues into a chain, node 3 is
+        // an alternative first token.  Both sit at logical position t0,
+        // so both must score exactly like a sequential step at t0 with
+        // their own K/V appended.
+        let (n, d, ps, t0) = (40usize, 4usize, 8usize, 13usize);
+        let req = single_head_req(n, d, builders::sliding_window(n, 5), 33);
+        let scale = 1.0 / (d as f32).sqrt();
+        let view = IncrementalMaskView::new(&req.mask, ps);
+        let mut rng = Rng::new(99);
+        let alt_k = rand_vec(d, &mut rng);
+        let alt_v = rand_vec(d, &mut rng);
+        let alt_q = rand_vec(d, &mut rng);
+
+        // oracle for the alternative branch: sequential decode where
+        // position t0 holds the alternative token
+        let mut pool = PagePool::new(ps, d, 64);
+        let mut cache = PagedKv::new();
+        let mut stats = DecodeStats::default();
+        let mut scratch = Vec::new();
+        for t in 0..t0 {
+            assert!(cache.append(&mut pool, &req.k[t * d..(t + 1) * d], &req.v[t * d..(t + 1) * d]));
+        }
+        assert!(cache.append(&mut pool, &alt_k, &alt_v));
+        let want_alt = decode_step(
+            &alt_q, &cache, &pool, &req.mask, &view, t0, scale, true, &mut stats, &mut scratch,
+        );
+
+        // speculative cache: truth chain (nodes 0..3) then the branch
+        let mut pool = PagePool::new(ps, d, 64);
+        let mut cache = PagedKv::new();
+        for t in 0..t0 {
+            assert!(cache.append(&mut pool, &req.k[t * d..(t + 1) * d], &req.v[t * d..(t + 1) * d]));
+        }
+        let tree =
+            TokenTree::from_parents(vec![None, Some(0), Some(1), None]).unwrap();
+        let mut q_rows = Vec::new();
+        for j in 0..3 {
+            let t = t0 + j;
+            assert!(cache.append(&mut pool, &req.k[t * d..(t + 1) * d], &req.v[t * d..(t + 1) * d]));
+            q_rows.extend_from_slice(&req.q[t * d..(t + 1) * d]);
+        }
+        assert!(cache.append(&mut pool, &alt_k, &alt_v));
+        q_rows.extend_from_slice(&alt_q);
+        let tm = builders::tree_mask(t0, &tree);
+        let tview = IncrementalMaskView::new(&tm, ps);
+        let mut vstats = DecodeStats::default();
+        let out = verify_rows(
+            &q_rows, &cache, &pool, &req.mask, &view, &tree, &tm, &tview, t0, scale, true,
+            &mut vstats, &mut scratch,
+        );
+        // the alternative root (node 3, logical position t0) matches its
+        // own sequential oracle even though the truth chain occupies the
+        // intervening cache slots
+        for dd in 0..d {
+            assert!(
+                (out[3 * d + dd] - want_alt[dd]).abs() < 1e-5,
+                "alt branch dim {dd}: {} vs {}",
+                out[3 * d + dd],
+                want_alt[dd]
+            );
+        }
+    }
+
+    #[test]
+    fn verify_skip_is_noop_and_skips_pages_on_window_masks() {
+        let (n, d, ps, t0, kd) = (64usize, 4usize, 8usize, 40usize, 4usize);
+        let req = single_head_req(n, d, builders::sliding_window(n, 8), 55);
+        let scale = 1.0 / (d as f32).sqrt();
+        let view = IncrementalMaskView::new(&req.mask, ps);
+        let tree = TokenTree::chain(kd);
+        let mut run = |skip: bool| {
+            let mut pool = PagePool::new(ps, d, 64);
+            let mut cache = PagedKv::new();
+            for t in 0..t0 {
+                assert!(cache.append(&mut pool, &req.k[t * d..(t + 1) * d], &req.v[t * d..(t + 1) * d]));
+            }
+            let mut q_rows = Vec::new();
+            for j in 0..kd {
+                let t = t0 + j;
+                assert!(cache.append(&mut pool, &req.k[t * d..(t + 1) * d], &req.v[t * d..(t + 1) * d]));
+                q_rows.extend_from_slice(&req.q[t * d..(t + 1) * d]);
+            }
+            let tm = builders::tree_mask(t0, &tree);
+            let tview = IncrementalMaskView::new(&tm, ps);
+            let mut stats = DecodeStats::default();
+            let mut scratch = Vec::new();
+            let out = verify_rows(
+                &q_rows, &cache, &pool, &req.mask, &view, &tree, &tm, &tview, t0, scale, skip,
+                &mut stats, &mut scratch,
+            );
+            (out, stats)
+        };
+        let (a, s_skip) = run(true);
+        let (b, s_dense) = run(false);
+        assert_eq!(a, b, "page skipping changed verify outputs");
+        assert!(s_skip.pages_skipped > 0, "window mask should skip old pages");
+        assert_eq!(s_dense.pages_skipped, 0);
+        assert!(s_skip.macs < s_dense.macs);
+    }
+
+    #[test]
+    fn self_draft_proposes_from_history_deterministically() {
+        // periodic "tokens": position t repeats t % 4, so the n-gram
+        // drafter finds the earlier occurrence and proposes the truth
+        let (n, d, period) = (32usize, 4usize, 4usize);
+        let mut rng = Rng::new(3);
+        let vocab: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = (0..period)
+            .map(|_| (rand_vec(d, &mut rng), rand_vec(d, &mut rng), rand_vec(d, &mut rng)))
+            .collect();
+        let mut q = Vec::new();
+        let mut k = Vec::new();
+        let mut v = Vec::new();
+        for t in 0..n {
+            q.extend_from_slice(&vocab[t % period].0);
+            k.extend_from_slice(&vocab[t % period].1);
+            v.extend_from_slice(&vocab[t % period].2);
+        }
+        let req = DecodeRequest::new(0, 1, n, d, 1, q, k, v, builders::causal(n));
+        let mut p1 = SelfDraftProposer;
+        let mut p2 = SelfDraftProposer;
+        let t0 = 9;
+        let a = p1.propose(&req, t0, 4).expect("periodic history must hit");
+        let b = p2.propose(&req, t0, 4).expect("periodic history must hit");
+        assert_eq!(a.tree, b.tree, "proposer must be deterministic");
+        assert_eq!(a.q, b.q);
+        assert_eq!(a.len(), 4);
+        // proposals equal the truth continuation => full acceptance
+        let path = greedy_accept_path(&req, &a, t0);
+        assert_eq!(path.len(), 4);
+        // and the proposer never saw positions >= t0: its rows come from
+        // history, which happens to equal the truth on periodic data
+        for (j, &node) in path.iter().enumerate() {
+            let (tq, _, _) = token_rows(&req, t0 + j);
+            assert_eq!(a.q[node], tq);
+        }
+    }
+
+    #[test]
+    fn self_draft_declines_without_a_match() {
+        // white-noise history: no earlier occurrence of the last token,
+        // so the drafter declines instead of forcing a wasted verify
+        let req = single_head_req(24, 4, builders::causal(24), 77);
+        let mut p = SelfDraftProposer;
+        assert!(p.propose(&req, 10, 4).is_none());
+        // and with no history at all
+        assert!(p.propose(&req, 0, 4).is_none());
+        assert!(p.propose(&req, 1, 4).is_none());
+    }
+
+    #[test]
+    fn oracle_proposer_accept_rates() {
+        let (n, d) = (24usize, 4usize);
+        let req = single_head_req(n, d, builders::causal(n), 8);
+        let t0 = 5;
+        // rate 1: whole chain accepted
+        let mut p = OracleProposer::new(1.0, 2, 11);
+        let draft = p.propose(&req, t0, 4).unwrap();
+        assert_eq!(draft.len(), 4 + 1); // chain + 1 junk sibling
+        assert_eq!(draft.tree.roots().len(), 2);
+        assert_eq!(greedy_accept_path(&req, &draft, t0).len(), 4);
+        // rate 0: nothing accepted
+        let mut p = OracleProposer::new(0.0, 1, 11);
+        let draft = p.propose(&req, t0, 4).unwrap();
+        assert!(greedy_accept_path(&req, &draft, t0).is_empty());
+        // budget respected near the end of the sequence
+        let mut p = OracleProposer::new(1.0, 1, 11);
+        let draft = p.propose(&req, n - 2, 4).unwrap();
+        assert!(draft.tree.max_path_len() <= 2);
+    }
+}

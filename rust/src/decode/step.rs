@@ -22,7 +22,11 @@ const NEG_INF: f32 = f32::NEG_INFINITY;
 /// and serving reports aggregate).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct DecodeStats {
-    /// Decode steps executed (one per `(sequence, head, token)`).
+    /// Kernel rows evaluated.  Sequential decode: one per
+    /// `(sequence, head, token)`.  Speculative decode: every drafted
+    /// row of every verify pass counts (rejected rows and fallback
+    /// steps included), so this measures work performed, not tokens
+    /// committed — compare `accepted` for useful speculative output.
     pub steps: u64,
     /// Cache pages considered across all steps.
     pub pages_total: u64,
@@ -36,9 +40,22 @@ pub struct DecodeStats {
     pub macs: u64,
     /// Element-wise mask evaluations on partial pages.
     pub mask_evals: u64,
+    /// Speculative verify passes executed (one per draft tree).
+    pub spec_passes: u64,
+    /// Draft tokens proposed and run through a verify pass.
+    pub drafted: u64,
+    /// Draft tokens accepted and committed to the cache.
+    pub accepted: u64,
+    /// Verify passes that accepted nothing and fell back to one
+    /// sequential decode step.
+    pub fallback_steps: u64,
 }
 
 impl DecodeStats {
+    /// Element-wise sum.  Every field is an additive counter (no
+    /// maxima, no ratios), so `merge` is commutative and associative:
+    /// per-head, per-session and per-batch aggregates can be folded in
+    /// any order and agree — asserted in the tests below.
     pub fn merge(&mut self, other: &DecodeStats) {
         self.steps += other.steps;
         self.pages_total += other.pages_total;
@@ -47,14 +64,29 @@ impl DecodeStats {
         self.pages_unmasked += other.pages_unmasked;
         self.macs += other.macs;
         self.mask_evals += other.mask_evals;
+        self.spec_passes += other.spec_passes;
+        self.drafted += other.drafted;
+        self.accepted += other.accepted;
+        self.fallback_steps += other.fallback_steps;
     }
 
-    /// Fraction of cache pages skipped (0 when nothing ran yet).
+    /// Fraction of cache pages skipped; 0 when no pages were visited
+    /// (empty run, or a merge of empty stats), never NaN.
     pub fn skip_fraction(&self) -> f64 {
         if self.pages_total == 0 {
             0.0
         } else {
             self.pages_skipped as f64 / self.pages_total as f64
+        }
+    }
+
+    /// Fraction of drafted tokens accepted; 0 when nothing was drafted
+    /// (sequential decode), never NaN.
+    pub fn accept_rate(&self) -> f64 {
+        if self.drafted == 0 {
+            0.0
+        } else {
+            self.accepted as f64 / self.drafted as f64
         }
     }
 }
@@ -287,6 +319,60 @@ mod tests {
             assert!(out[t * d..(t + 1) * d].iter().all(|&x| x == 0.0), "row {t} not zero");
         }
         assert!(out[9 * d..10 * d].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn stats_skip_fraction_guards_empty_runs() {
+        // no pages visited: 0.0, not NaN — and merging empties keeps it
+        let mut s = DecodeStats::default();
+        assert_eq!(s.skip_fraction(), 0.0);
+        assert_eq!(s.accept_rate(), 0.0);
+        s.merge(&DecodeStats::default());
+        assert_eq!(s.skip_fraction(), 0.0);
+        assert!(!s.skip_fraction().is_nan());
+        // and a real census still divides correctly
+        s.pages_total = 4;
+        s.pages_skipped = 1;
+        assert_eq!(s.skip_fraction(), 0.25);
+    }
+
+    fn arbitrary_stats(seed: u64) -> DecodeStats {
+        let mut rng = Rng::new(seed);
+        let mut r = || rng.range(0, 1000) as u64;
+        DecodeStats {
+            steps: r(),
+            pages_total: r(),
+            pages_skipped: r(),
+            pages_partial: r(),
+            pages_unmasked: r(),
+            macs: r(),
+            mask_evals: r(),
+            spec_passes: r(),
+            drafted: r(),
+            accepted: r(),
+            fallback_steps: r(),
+        }
+    }
+
+    fn merged(parts: &[&DecodeStats]) -> DecodeStats {
+        let mut out = DecodeStats::default();
+        for p in parts {
+            out.merge(p);
+        }
+        out
+    }
+
+    #[test]
+    fn stats_merge_commutative_associative() {
+        let (a, b, c) = (arbitrary_stats(1), arbitrary_stats(2), arbitrary_stats(3));
+        // commutative
+        assert_eq!(merged(&[&a, &b]), merged(&[&b, &a]));
+        // associative: (a+b)+c == a+(b+c)
+        let ab_c = merged(&[&merged(&[&a, &b]), &c]);
+        let a_bc = merged(&[&a, &merged(&[&b, &c])]);
+        assert_eq!(ab_c, a_bc);
+        // identity
+        assert_eq!(merged(&[&a, &DecodeStats::default()]), a);
     }
 
     #[test]

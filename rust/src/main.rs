@@ -13,6 +13,7 @@
 //! flashmask e2e-model                     # Fig 2 curves + Fig 6 histogram
 //! flashmask gen-data --task dpo           # inspect synthetic samples
 //! flashmask decode --requests 8           # paged-KV continuous batching
+//! flashmask decode --speculate 4          # + tree-mask speculative decode
 //! ```
 
 use anyhow::{anyhow, Result};
@@ -85,6 +86,13 @@ subcommands:
   decode           autoregressive decode serving: paged KV cache +
                    continuous batching (--requests R --n N --d D
                    --heads H --page P --max-pages M --seed S --dense)
+                   speculative decoding: --speculate K drafts and
+                   verifies up to K tokens per step through a tree
+                   FlashMask (greedy-exact: identical tokens to
+                   sequential decode); --draft ngram|oracle picks the
+                   proposer (default ngram = n-gram self-drafting;
+                   oracle replays the teacher-forced continuation with
+                   --accept-rate A, default 1.0, for throughput studies)
 common: --artifacts DIR (default ./artifacts)";
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -184,7 +192,7 @@ fn cmd_convergence(args: &Args) -> Result<()> {
 }
 
 fn cmd_decode(args: &Args) -> Result<()> {
-    use flashmask::decode::BatcherConfig;
+    use flashmask::decode::{BatcherConfig, SpecPolicy};
     use flashmask::mask::builders;
     use flashmask::server::{EngineKind, Request, RequestQueue, Scheduler, SchedulerConfig, ServeEngine};
     use flashmask::util::rng::Rng;
@@ -196,11 +204,28 @@ fn cmd_decode(args: &Args) -> Result<()> {
     let page = args.get_usize("page", 16).map_err(|e| anyhow!(e))?;
     let max_pages = args.get_usize("max-pages", 4096).map_err(|e| anyhow!(e))?;
     let skip = !args.flag("dense");
+    let seed = args.get_u64("seed", 7).map_err(|e| anyhow!(e))?;
+    let spec_k = args.get_usize("speculate", 0).map_err(|e| anyhow!(e))?;
+    let draft = args.get_or("draft", "ngram");
+    let accept_rate = args.get_f64("accept-rate", 1.0).map_err(|e| anyhow!(e))?;
     anyhow::ensure!(n >= 2, "--n must be >= 2 (got {n})");
     anyhow::ensure!(page >= 1, "--page must be >= 1");
     anyhow::ensure!(d >= 1 && heads >= 1, "--d and --heads must be >= 1");
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&accept_rate),
+        "--accept-rate must be in [0, 1] (got {accept_rate})"
+    );
+    let spec = if spec_k <= 1 {
+        SpecPolicy::Off
+    } else {
+        match draft.as_str() {
+            "ngram" | "self" => SpecPolicy::SelfDraft { k: spec_k },
+            "oracle" => SpecPolicy::Oracle { k: spec_k, accept_rate, branch: 2, seed },
+            other => anyhow::bail!("--draft must be ngram|oracle (got '{other}')"),
+        }
+    };
 
-    let mut rng = Rng::new(args.get_u64("seed", 7).map_err(|e| anyhow!(e))?);
+    let mut rng = Rng::new(seed);
     let mut queue = RequestQueue::new();
     for i in 0..n_requests {
         // ragged lengths + realistic decode mask mix
@@ -226,7 +251,7 @@ fn cmd_decode(args: &Args) -> Result<()> {
         })
         .collect();
     let mut engine = ServeEngine::new(EngineKind::Cpu { threads: 1 }, (page, page));
-    let cfg = BatcherConfig { page_size: page, d, max_pages, max_active: 8, skip };
+    let cfg = BatcherConfig { page_size: page, d, max_pages, max_active: 8, skip, spec };
     let report = engine.execute_decode(decode_reqs, cfg)?;
 
     println!("\n=== decode report ({}) ===", if skip { "flashmask page skip" } else { "dense cache" });
@@ -236,6 +261,15 @@ fn cmd_decode(args: &Args) -> Result<()> {
     println!("pages skipped : {:.1}%", report.pages_skip_fraction * 100.0);
     println!("preemptions   : {} ({} pages evicted)", report.preemptions, report.evicted_pages);
     println!("peak pool use : {} pages", report.peak_pages);
+    if spec_k > 1 {
+        println!(
+            "speculation   : --draft {draft} k={spec_k}: {} drafted, {} accepted ({:.1}%), {} fallback steps",
+            report.drafted_tokens,
+            report.accepted_tokens,
+            report.accept_rate() * 100.0,
+            report.spec_fallbacks
+        );
+    }
     let rep = engine.report();
     println!("decode p50    : {:.2} ms", rep.p50_compute_ms);
     println!("decode p99    : {:.2} ms", rep.p99_compute_ms);

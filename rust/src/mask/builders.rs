@@ -7,6 +7,7 @@
 //! equality on shared cases).
 
 use super::flashmask::FlashMask;
+use super::tree::TokenTree;
 use super::types::MaskKind;
 use crate::util::rng::Rng;
 use crate::workload::docgen::sample_doc_lens;
@@ -215,6 +216,27 @@ pub fn random_eviction(n: usize, rng: &mut Rng) -> FlashMask {
     normalize(m)
 }
 
+/// (14) Speculative-decode tree mask: `prefix_len` committed tokens
+/// followed by a DFS-preorder draft tree.  Drafted cache column
+/// `prefix_len + i` is visible only to the nodes of `i`'s subtree, so
+/// its masked lower-triangle rows are the single interval
+/// `[prefix_len + subtree_end(i), n)` — token-tree ancestor visibility
+/// expressed as LTS/LTE column intervals (the paper's §3 claim that
+/// FlashMask covers tree attention).  Committed columns stay plain
+/// causal; row-dependent *base*-mask constraints are applied on top by
+/// `decode::spec` at each node's logical position.
+pub fn tree_mask(prefix_len: usize, tree: &TokenTree) -> FlashMask {
+    let n = prefix_len + tree.len();
+    let mut m = FlashMask::empty(n, true);
+    for i in 0..tree.len() {
+        // empty interval when the subtree reaches the end (normalize
+        // keeps it at [n, n))
+        m.lts[prefix_len + i] = (prefix_len + tree.subtree_end(i)) as i32;
+        m.lte[prefix_len + i] = n as i32;
+    }
+    normalize(m)
+}
+
 /// Canonicalize empty intervals to `[n, n)` and validate.
 fn normalize(mut m: FlashMask) -> FlashMask {
     let n = m.n() as i32;
@@ -311,6 +333,7 @@ pub fn benchmark_suite(n: usize, seed: u64) -> Vec<(MaskKind, FlashMask)> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop;
 
     fn brute<F: Fn(usize, usize) -> bool>(n: usize, pred: F) -> Vec<bool> {
         let mut out = vec![false; n * n];
@@ -449,5 +472,110 @@ mod tests {
             build(MaskKind::ShareQuestion, 128, &mut a),
             build(MaskKind::ShareQuestion, 128, &mut b)
         );
+    }
+
+    /// Ancestor-visibility oracle for `tree_mask`: rows below the draft
+    /// region are plain causal; a draft node sees every committed
+    /// column plus exactly its own root path (ancestors-or-self).
+    fn tree_oracle(prefix: usize, tree: &TokenTree, i: usize, j: usize) -> bool {
+        let n = prefix + tree.len();
+        debug_assert!(i < n && j < n);
+        if j > i {
+            return false; // causal
+        }
+        if i < prefix || j < prefix {
+            return true; // committed row or committed column (j <= i)
+        }
+        tree.is_ancestor_or_self(j - prefix, i - prefix)
+    }
+
+    #[test]
+    fn tree_mask_chain_is_plain_causal() {
+        let t = TokenTree::chain(6);
+        let m = tree_mask(10, &t);
+        assert_eq!(m.dense_allowed(), causal(16).dense_allowed());
+    }
+
+    #[test]
+    fn tree_mask_branching_semantics() {
+        // two root candidates; first continues as a chain of two
+        let t = TokenTree::from_parents(vec![None, Some(0), None]).unwrap();
+        let m = tree_mask(2, &t);
+        // node 1 (row 3) sees its ancestor node 0 (col 2)...
+        assert!(m.allowed(3, 2));
+        // ...but node 2 (row 4), a sibling root, does not
+        assert!(!m.allowed(4, 2));
+        assert!(!m.allowed(4, 3));
+        // every draft node sees the committed prefix
+        for row in 2..5 {
+            assert!(m.allowed(row, 0) && m.allowed(row, 1));
+        }
+    }
+
+    #[test]
+    fn prop_tree_mask_matches_ancestor_visibility() {
+        // satellite: random token trees → dense materialization equals
+        // the ancestor-visibility definition, every element
+        prop::check_default("tree-mask-dense", |rng| {
+            let prefix = rng.range(0, 24) as usize;
+            let k = rng.range(1, 13) as usize;
+            let tree = TokenTree::random(k, rng);
+            let m = tree_mask(prefix, &tree);
+            m.validate().map_err(|e| e.to_string())?;
+            let n = prefix + k;
+            let dense = m.dense_allowed();
+            for i in 0..n {
+                for j in 0..n {
+                    let want = tree_oracle(prefix, &tree, i, j);
+                    if dense[i * n + j] != want {
+                        return Err(format!(
+                            "prefix={prefix} k={k} ({i},{j}): mask {} oracle {want}",
+                            dense[i * n + j]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_tree_mask_page_classification_sound() {
+        // satellite: IncrementalMaskView::classify_page over a tree mask
+        // must never call a page with any visible column FullyMasked
+        // (skipping it would drop live draft KV)
+        use crate::mask::{BlockClass, IncrementalMaskView};
+        prop::check_default("tree-mask-page-skip-sound", |rng| {
+            let prefix = rng.range(0, 40) as usize;
+            let k = rng.range(1, 13) as usize;
+            let ps = *rng.choose(&[4usize, 8, 16]);
+            let tree = TokenTree::random(k, rng);
+            let m = tree_mask(prefix, &tree);
+            let view = IncrementalMaskView::new(&m, ps);
+            let n = prefix + k;
+            for node in 0..k {
+                let row = prefix + node;
+                for page in 0..view.n_pages() {
+                    let cols = page * ps..((page + 1) * ps).min(n);
+                    let any_visible =
+                        cols.clone().any(|j| tree_oracle(prefix, &tree, row, j));
+                    let class = view.classify_page(&m, row, page);
+                    if class == BlockClass::FullyMasked && any_visible {
+                        return Err(format!(
+                            "prefix={prefix} k={k} ps={ps} node {node} page {page}: \
+                             skippable but partially visible"
+                        ));
+                    }
+                    if class == BlockClass::Unmasked {
+                        if let Some(j) = cols.clone().find(|&j| !tree_oracle(prefix, &tree, row, j)) {
+                            return Err(format!(
+                                "node {node} page {page}: unmasked but col {j} hidden"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -8,6 +8,8 @@
 //!   three-way tile classification of Eq. 4.
 //! * [`incremental`] — decode-time view: the same Eq. 4 classifier at
 //!   KV-cache-page granularity, one query row at a time.
+//! * [`tree`] — DFS-preorder token trees for speculative decoding;
+//!   [`builders::tree_mask`] turns them into LTS/LTE column intervals.
 //! * [`types`] — mask-kind enumeration shared by workloads and benches.
 
 pub mod block;
@@ -15,9 +17,11 @@ pub mod builders;
 pub mod flashmask;
 pub mod incremental;
 pub mod ops;
+pub mod tree;
 pub mod types;
 
 pub use block::{BlockClass, BlockTable};
 pub use flashmask::FlashMask;
 pub use incremental::IncrementalMaskView;
+pub use tree::TokenTree;
 pub use types::MaskKind;

@@ -1,0 +1,238 @@
+//! Token trees for speculative decoding.
+//!
+//! A draft tree holds `k` speculated tokens laid out in **DFS preorder**
+//! over the KV cache slots that follow the committed prefix: node `i`
+//! occupies cache position `prefix + i`, its parent is an earlier node
+//! (or the committed prefix itself for root children), and every
+//! subtree is a contiguous index range `[i, subtree_end(i))`.
+//!
+//! Preorder is what makes tree attention FlashMask-expressible: the
+//! cache rows allowed to attend to drafted column `i` are exactly the
+//! nodes of `i`'s subtree, so the *masked* lower-triangle rows for that
+//! column are the single interval `[prefix + subtree_end(i), n)` — one
+//! `(LTS, LTE)` pair per column, the paper's §4.1 representation.  An
+//! arbitrary parent array (subtrees interleaved) would need multiple
+//! intervals per column; [`TokenTree::from_parents`] therefore rejects
+//! non-preorder layouts.
+//!
+//! A node's *logical* position is `prefix + depth(i)`: the sequence
+//! position it would occupy if its root-to-node path were committed by
+//! sequential decode.  Row-dependent masks (sliding window, eviction)
+//! must be evaluated at the logical position, not the cache slot —
+//! `decode::spec::spec_visible` does exactly that.
+
+use anyhow::{ensure, Result};
+use crate::util::rng::Rng;
+
+/// A draft-token tree in DFS preorder over cache slots.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TokenTree {
+    parents: Vec<Option<usize>>,
+    depth: Vec<usize>,
+    subtree_end: Vec<usize>,
+}
+
+impl TokenTree {
+    /// Build from a parent array (`None` = child of the committed
+    /// prefix).  Fails unless the array is a DFS preorder: each node's
+    /// parent must be the previous node or one of its ancestors (or a
+    /// fresh root), which guarantees contiguous subtrees.
+    pub fn from_parents(parents: Vec<Option<usize>>) -> Result<TokenTree> {
+        let k = parents.len();
+        ensure!(k >= 1, "empty draft tree");
+        ensure!(parents[0].is_none(), "first preorder node must be a root");
+        let mut depth = vec![0usize; k];
+        for i in 0..k {
+            if let Some(p) = parents[i] {
+                ensure!(p < i, "node {i}: parent {p} does not precede it");
+                depth[i] = depth[p] + 1;
+            }
+            if i > 0 {
+                // preorder: attach to the rightmost path of node i-1
+                let ok = match parents[i] {
+                    None => true, // new root closes every open subtree
+                    Some(p) => {
+                        let mut a = Some(i - 1);
+                        loop {
+                            match a {
+                                Some(x) if x == p => break true,
+                                Some(x) => a = parents[x],
+                                None => break false,
+                            }
+                        }
+                    }
+                };
+                ensure!(ok, "node {i}: parents are not in DFS preorder");
+            }
+        }
+        let mut subtree_end: Vec<usize> = (0..k).map(|i| i + 1).collect();
+        for i in (1..k).rev() {
+            if let Some(p) = parents[i] {
+                subtree_end[p] = subtree_end[p].max(subtree_end[i]);
+            }
+        }
+        Ok(TokenTree { parents, depth, subtree_end })
+    }
+
+    /// Linear chain of `k` nodes — the degenerate (classic, non-tree)
+    /// speculative draft.
+    pub fn chain(k: usize) -> TokenTree {
+        let parents = (0..k).map(|i| if i == 0 { None } else { Some(i - 1) }).collect();
+        TokenTree::from_parents(parents).expect("chain is always preorder")
+    }
+
+    pub fn len(&self) -> usize {
+        self.parents.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parents.is_empty()
+    }
+
+    pub fn parent(&self, i: usize) -> Option<usize> {
+        self.parents[i]
+    }
+
+    /// Ancestor count; a root child has depth 0.  Logical sequence
+    /// position of node `i` = `prefix + depth(i)`.
+    pub fn depth(&self, i: usize) -> usize {
+        self.depth[i]
+    }
+
+    /// One past the last node of `i`'s subtree (preorder-contiguous).
+    pub fn subtree_end(&self, i: usize) -> usize {
+        self.subtree_end[i]
+    }
+
+    /// Is `a` an ancestor of `i`, or `i` itself?  O(1) via the subtree
+    /// interval — the same test the tree-mask column intervals encode.
+    pub fn is_ancestor_or_self(&self, a: usize, i: usize) -> bool {
+        a <= i && i < self.subtree_end[a]
+    }
+
+    /// Longest root-to-leaf path length in nodes (`max depth + 1`).
+    pub fn max_path_len(&self) -> usize {
+        self.depth.iter().max().map_or(0, |d| d + 1)
+    }
+
+    /// Children of the committed prefix (candidate first tokens).
+    pub fn roots(&self) -> Vec<usize> {
+        (0..self.len()).filter(|&i| self.parents[i].is_none()).collect()
+    }
+
+    /// Direct children of node `i`, in preorder.
+    pub fn children(&self, i: usize) -> Vec<usize> {
+        (i + 1..self.subtree_end[i]).filter(|&j| self.parents[j] == Some(i)).collect()
+    }
+
+    /// Random preorder tree with `k` nodes (property-test generator):
+    /// each node attaches uniformly to the rightmost path, so chains,
+    /// bushy trees and multi-root forests all occur.
+    pub fn random(k: usize, rng: &mut Rng) -> TokenTree {
+        assert!(k >= 1);
+        let mut parents: Vec<Option<usize>> = vec![None];
+        for i in 1..k {
+            // candidates: previous node, each of its ancestors, and root
+            let mut cand: Vec<Option<usize>> = vec![Some(i - 1)];
+            let mut a = parents[i - 1];
+            while let Some(x) = a {
+                cand.push(Some(x));
+                a = parents[x];
+            }
+            cand.push(None);
+            parents.push(*rng.choose(&cand));
+        }
+        TokenTree::from_parents(parents).expect("generator emits preorder")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn chain_shape() {
+        let t = TokenTree::chain(4);
+        assert_eq!(t.len(), 4);
+        for i in 0..4 {
+            assert_eq!(t.depth(i), i);
+            assert_eq!(t.subtree_end(i), 4);
+        }
+        assert_eq!(t.roots(), vec![0]);
+        assert_eq!(t.children(1), vec![2]);
+        assert_eq!(t.max_path_len(), 4);
+        assert!(t.is_ancestor_or_self(0, 3));
+        assert!(!t.is_ancestor_or_self(2, 1));
+    }
+
+    #[test]
+    fn branching_tree_intervals() {
+        // 0 ── 1 ── 2
+        //  \     └─ 3
+        //   4 (second root)
+        let t = TokenTree::from_parents(vec![None, Some(0), Some(1), Some(1), None]).unwrap();
+        assert_eq!(t.subtree_end(0), 4);
+        assert_eq!(t.subtree_end(1), 4);
+        assert_eq!(t.subtree_end(2), 3);
+        assert_eq!(t.subtree_end(4), 5);
+        assert_eq!(t.depth(3), 2);
+        assert_eq!(t.roots(), vec![0, 4]);
+        assert_eq!(t.children(1), vec![2, 3]);
+        assert!(t.is_ancestor_or_self(1, 3));
+        assert!(!t.is_ancestor_or_self(2, 3));
+        assert!(!t.is_ancestor_or_self(0, 4));
+        assert_eq!(t.max_path_len(), 3);
+    }
+
+    #[test]
+    fn rejects_non_preorder() {
+        // subtrees of node 0 and node 2 interleaved: 0, 1(→0), 2, 3(→0)
+        assert!(TokenTree::from_parents(vec![None, Some(0), None, Some(0)]).is_err());
+        // parent after child
+        assert!(TokenTree::from_parents(vec![None, Some(2), Some(0)]).is_err());
+        // empty
+        assert!(TokenTree::from_parents(vec![]).is_err());
+        // first node not a root
+        assert!(TokenTree::from_parents(vec![Some(0)]).is_err());
+    }
+
+    #[test]
+    fn prop_random_trees_have_consistent_intervals() {
+        prop::check_default("token-tree-intervals", |rng| {
+            let k = rng.range(1, 17) as usize;
+            let t = TokenTree::random(k, rng);
+            for i in 0..k {
+                // subtree interval == reachability via parent links
+                for j in 0..k {
+                    let mut reach = j == i;
+                    let mut a = t.parent(j);
+                    while let Some(x) = a {
+                        if x == i {
+                            reach = true;
+                            break;
+                        }
+                        a = t.parent(x);
+                    }
+                    if reach != t.is_ancestor_or_self(i, j) {
+                        return Err(format!("k={k} i={i} j={j}: interval vs parent-walk"));
+                    }
+                }
+                // depth consistent with parent
+                match t.parent(i) {
+                    None => {
+                        if t.depth(i) != 0 {
+                            return Err(format!("root {i} has depth {}", t.depth(i)));
+                        }
+                    }
+                    Some(p) => {
+                        if t.depth(i) != t.depth(p) + 1 {
+                            return Err(format!("depth chain broken at {i}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -98,6 +98,12 @@ impl ServeEngine {
     /// decode through the continuous batcher.  Retired sequences land
     /// in `completed` like prefill responses: `o` holds the generated
     /// rows and `sparsity` reports the fraction of cache pages skipped.
+    ///
+    /// `cfg.spec` selects speculative decoding (draft → tree-mask
+    /// verify → commit/rollback); outputs are token-identical to
+    /// sequential decode under greedy acceptance, so callers opt in
+    /// purely on throughput grounds.  The returned [`BatcherReport`]
+    /// carries drafted/accepted token counts.
     pub fn execute_decode(
         &mut self,
         reqs: Vec<DecodeRequest>,
@@ -222,7 +228,14 @@ mod tests {
         let report = eng
             .execute_decode(
                 drained.into_iter().map(|r| r.into_decode(prompt)).collect(),
-                crate::decode::BatcherConfig { page_size: 16, d, max_pages: 256, max_active: 4, skip: true },
+                crate::decode::BatcherConfig {
+                    page_size: 16,
+                    d,
+                    max_pages: 256,
+                    max_active: 4,
+                    skip: true,
+                    spec: crate::decode::SpecPolicy::Off,
+                },
             )
             .unwrap();
         assert_eq!(report.sequences, 3);
@@ -249,6 +262,57 @@ mod tests {
                 for (a, b) in got.iter().zip(&want.o[prompt * d..]) {
                     assert!((a - b).abs() < 1e-4, "n={n} h={h}: {a} vs {b}");
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn speculative_decode_through_engine_matches_sequential() {
+        // ServeEngine::execute_decode with a speculative config must
+        // produce byte-for-byte the tokens and (to 1e-4) the rows of a
+        // sequential run, while the report shows real draft activity
+        use crate::decode::{BatcherConfig, SpecPolicy};
+        let (heads, d, prompt) = (2, 8, 8);
+        let originals: Vec<Request> = [(32usize, 11u64), (64, 12), (48, 13)]
+            .iter()
+            .enumerate()
+            .map(|(i, &(n, s))| {
+                let mut r = rand_req(n, heads, d, s);
+                r.id = i as u64;
+                r
+            })
+            .collect();
+        let run = |spec: SpecPolicy| {
+            let mut eng = ServeEngine::new(EngineKind::Cpu { threads: 1 }, (16, 16));
+            let report = eng
+                .execute_decode(
+                    originals.iter().map(|r| r.clone().into_decode(prompt)).collect(),
+                    BatcherConfig {
+                        page_size: 16,
+                        d,
+                        max_pages: 256,
+                        max_active: 4,
+                        skip: true,
+                        spec,
+                    },
+                )
+                .unwrap();
+            let mut done = eng.completed;
+            done.sort_by_key(|r| r.id);
+            (report, done)
+        };
+        let (seq_report, seq) = run(SpecPolicy::Off);
+        let (spec_report, spec) =
+            run(SpecPolicy::Oracle { k: 4, accept_rate: 1.0, branch: 2, seed: 5 });
+        assert_eq!(seq_report.tokens, spec_report.tokens);
+        assert_eq!(seq_report.drafted_tokens, 0);
+        assert!(spec_report.drafted_tokens > 0);
+        assert!(spec_report.accept_rate() > 0.5);
+        for (a, b) in seq.iter().zip(&spec) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.o.len(), b.o.len());
+            for (x, y) in a.o.iter().zip(&b.o) {
+                assert!((x - y).abs() < 1e-4, "req {}: {x} vs {y}", a.id);
             }
         }
     }

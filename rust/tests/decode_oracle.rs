@@ -1,0 +1,199 @@
+//! Differential oracle suite for the whole decode stack.
+//!
+//! Three independent implementations must agree on every causal
+//! benchmark mask family:
+//!
+//! 1. full-sequence FLASHMASK prefill (`attention::flash`),
+//! 2. sequential paged-cache decode (`decode::step` via the batcher),
+//! 3. speculative decode at k = 1..4 (`decode::spec` verify kernel,
+//!    oracle drafter at several acceptance rates, with and without
+//!    rejected sibling branches).
+//!
+//! Agreement is row-for-row (< 1e-4) on every generated output row,
+//! and token-identical under greedy acceptance: the committed token
+//! stream equals the teacher-forced truth stream exactly, whatever the
+//! drafter proposed.  Any divergence here means the verify kernel, the
+//! tree mask, or the accept/rollback path broke the paper's exactness
+//! guarantee on the decode side.
+
+use flashmask::attention::{flash, AttnConfig};
+use flashmask::decode::{BatcherConfig, ContinuousBatcher, DecodeRequest, SpecPolicy};
+use flashmask::mask::{builders, BlockTable, MaskKind};
+use flashmask::util::rng::Rng;
+
+const N: usize = 96;
+const D: usize = 8;
+const HEADS: usize = 2;
+const PROMPT: usize = 8;
+const PAGE: usize = 16;
+
+fn rand_vec(n: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32() * 0.5).collect()
+}
+
+/// One teacher-forced request per causal benchmark mask kind.
+fn causal_benchmark_requests(seed: u64) -> Vec<(MaskKind, DecodeRequest)> {
+    let mut rng = Rng::new(seed);
+    MaskKind::BENCHMARK
+        .iter()
+        .filter(|k| k.is_causal())
+        .enumerate()
+        .map(|(i, &kind)| {
+            let mask = builders::build(kind, N, &mut rng);
+            let mut mk =
+                || (0..HEADS * N * D).map(|_| rng.normal_f32() * 0.5).collect::<Vec<f32>>();
+            (kind, DecodeRequest::new(i as u64, HEADS, N, D, PROMPT, mk(), mk(), mk(), mask))
+        })
+        .collect()
+}
+
+/// Full-sequence prefill oracle: head `h`'s generated rows.
+fn prefill_rows(req: &DecodeRequest, h: usize) -> Vec<f32> {
+    let cfg = AttnConfig::new(32, 32, D);
+    let table = BlockTable::build(&req.mask, cfg.bc);
+    let r = h * N * D..(h + 1) * N * D;
+    let (out, _) = flash::flashmask_forward(
+        &req.q[r.clone()],
+        &req.k[r.clone()],
+        &req.v[r],
+        N,
+        D,
+        &req.mask,
+        &table,
+        cfg,
+        true,
+    );
+    out.o[PROMPT * D..].to_vec()
+}
+
+/// Run one request through the continuous batcher under `spec` and
+/// return its generated rows (head-major).
+fn decode_rows(req: &DecodeRequest, spec: SpecPolicy) -> Vec<f32> {
+    let mut b = ContinuousBatcher::new(BatcherConfig {
+        page_size: PAGE,
+        d: D,
+        max_pages: 4096,
+        max_active: 4,
+        skip: true,
+        spec,
+    });
+    b.submit(req.clone()).unwrap();
+    let report = b.run().unwrap();
+    assert_eq!(report.sequences, 1);
+    // token identity: every generated position committed exactly once
+    assert_eq!(report.tokens, (N - PROMPT) as u64);
+    let mut done = b.take_finished();
+    done.pop().unwrap().o
+}
+
+fn assert_rows_close(kind: MaskKind, label: &str, got: &[f32], want: &[f32]) {
+    assert_eq!(got.len(), want.len(), "{kind}/{label}: length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-4,
+            "{kind}/{label}: row {} dim {}: {a} vs {b}",
+            i / D,
+            i % D
+        );
+    }
+}
+
+#[test]
+fn sequential_decode_matches_prefill_all_causal_kinds() {
+    for (kind, req) in causal_benchmark_requests(41) {
+        let got = decode_rows(&req, SpecPolicy::Off);
+        let gen = (N - PROMPT) * D;
+        for h in 0..HEADS {
+            let want = prefill_rows(&req, h);
+            assert_rows_close(kind, "sequential", &got[h * gen..(h + 1) * gen], &want);
+        }
+    }
+}
+
+#[test]
+fn speculative_decode_matches_sequential_and_prefill_k1_to_4() {
+    for (kind, req) in causal_benchmark_requests(42) {
+        let sequential = decode_rows(&req, SpecPolicy::Off);
+        let gen = (N - PROMPT) * D;
+        for k in 1..=4usize {
+            let spec = decode_rows(
+                &req,
+                SpecPolicy::Oracle { k, accept_rate: 1.0, branch: 1, seed: 7 },
+            );
+            // speculative vs sequential: same committed tokens, same rows
+            assert_rows_close(kind, &format!("spec k={k} vs sequential"), &spec, &sequential);
+            // and both against the full prefill kernel
+            for h in 0..HEADS {
+                let want = prefill_rows(&req, h);
+                assert_rows_close(
+                    kind,
+                    &format!("spec k={k} vs prefill"),
+                    &spec[h * gen..(h + 1) * gen],
+                    &want,
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn speculative_decode_exact_under_rejections_and_branches() {
+    // partial acceptance forces the accept/rollback path through every
+    // combination of commit lengths; sibling branches force genuine
+    // (non-chain) tree masks through the verify kernel
+    for (kind, req) in causal_benchmark_requests(43) {
+        let sequential = decode_rows(&req, SpecPolicy::Off);
+        for (rate, branch) in [(0.0, 1), (0.5, 1), (0.7, 3), (1.0, 2)] {
+            let spec = decode_rows(
+                &req,
+                SpecPolicy::Oracle { k: 4, accept_rate: rate, branch, seed: 11 },
+            );
+            assert_rows_close(
+                kind,
+                &format!("spec rate={rate} branch={branch}"),
+                &spec,
+                &sequential,
+            );
+        }
+    }
+}
+
+#[test]
+fn self_drafting_is_exact_even_when_wrong() {
+    // the n-gram drafter has no oracle knowledge; on random data most
+    // proposals are rejected — outputs must still match sequential
+    for (kind, req) in causal_benchmark_requests(44) {
+        let sequential = decode_rows(&req, SpecPolicy::Off);
+        let spec = decode_rows(&req, SpecPolicy::SelfDraft { k: 4 });
+        assert_rows_close(kind, "self-draft", &spec, &sequential);
+    }
+}
+
+#[test]
+fn speculative_page_skipping_is_noop_on_outputs() {
+    // skip=true vs skip=false through the speculative path: Eq. 4 page
+    // skipping must not change a single output bit-pattern beyond the
+    // sequential kernel's own guarantee (compared here at 0 tolerance)
+    let mut rng = Rng::new(45);
+    let mask = builders::build(MaskKind::SlidingWindow, N, &mut rng);
+    let mut mk = || (0..HEADS * N * D).map(|_| rng.normal_f32() * 0.5).collect::<Vec<f32>>();
+    let req = DecodeRequest::new(0, HEADS, N, D, PROMPT, mk(), mk(), mk(), mask);
+    let run = |skip: bool| {
+        let mut b = ContinuousBatcher::new(BatcherConfig {
+            page_size: PAGE,
+            d: D,
+            max_pages: 4096,
+            max_active: 4,
+            skip,
+            spec: SpecPolicy::Oracle { k: 4, accept_rate: 1.0, branch: 2, seed: 3 },
+        });
+        b.submit(req.clone()).unwrap();
+        b.run().unwrap();
+        b.take_finished().pop().unwrap()
+    };
+    let a = run(true);
+    let b = run(false);
+    assert_eq!(a.o, b.o, "page skipping changed speculative outputs");
+    assert!(a.stats.pages_skipped > 0, "window mask should skip pages");
+    assert_eq!(b.stats.pages_skipped, 0);
+}

@@ -1,5 +1,5 @@
 #!/usr/bin/env bash
-# Tier-1 verification plus a decode-path smoke run (DESIGN.md §Verification).
+# Tier-1 verification plus decode-path smoke runs (DESIGN.md §Verification).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -9,7 +9,12 @@ cargo build --release
 echo "== tier-1: tests =="
 cargo test -q
 
-echo "== decode bench smoke (~2s) =="
-cargo bench --bench bench_decode -- --smoke
+echo "== decode oracle suite (sequential vs speculative vs prefill) =="
+cargo test -q --test decode_oracle
+
+echo "== decode bench smoke (~2s, includes speculative oracle check) =="
+# the bench asserts speculative outputs match sequential row-for-row,
+# so any kernel/oracle divergence fails this step
+cargo bench --bench bench_decode -- --smoke --speculate 4
 
 echo "verify.sh: OK"
