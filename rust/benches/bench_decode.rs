@@ -1,27 +1,41 @@
-//! `cargo bench --bench bench_decode [-- --smoke] [-- --speculate K]`
+//! `cargo bench --bench bench_decode [-- --smoke] [-- --speculate K] [-- --kv-heads K]`
 //!
-//! Autoregressive decode through the paged KV cache, two comparisons:
+//! Autoregressive decode through the paged KV cache, three comparisons:
 //!
 //! 1. FLASHMASK page skipping vs. a dense-cache baseline that visits
-//!    every page (the decode analogue of Tables 10–14).
+//!    every page (the decode analogue of Tables 10–14), with resident
+//!    KV bytes and allocation churn (pages/token) per mask family.
 //! 2. Speculative decoding (tree-mask verify, high-acceptance oracle
 //!    drafter) vs. one-token-at-a-time sequential decode, reporting
 //!    accepted-tokens/s — the FlashAttention-2 multi-row batching win.
+//! 3. Grouped-query layouts (GQA/MQA) vs. the MHA baseline at equal
+//!    outputs: resident KV pages drop by the group factor because the
+//!    pool holds one page chain per *KV* head, and page-classification
+//!    work (the skip-stat denominator `pages total`) drops by the same
+//!    factor because the Eq. 4 decision is made once per KV head and
+//!    reused across its query group.
 //!
-//! The speculative run double-checks the exactness guarantee: its
-//! outputs are compared row-for-row against the sequential run and the
-//! bench aborts on any divergence, so `scripts/verify.sh` fails loudly
-//! if the kernel and the oracle ever disagree.
+//! The speculative and GQA runs double-check the exactness guarantees:
+//! speculative outputs are compared row-for-row against sequential, and
+//! every GQA layout (KV replicated from one stream, so all layouts
+//! compute the same math) against the MHA run — the bench aborts on any
+//! divergence, so `scripts/verify.sh` fails loudly if a kernel and its
+//! oracle ever disagree.
+//!
+//! A machine-readable `BENCH json` blob with the same numbers is
+//! printed after the tables.
 //!
 //! `--smoke` shrinks the workload to a ~2 s run for scripts/verify.sh.
 
 use flashmask::decode::{
-    BatcherConfig, ContinuousBatcher, DecodeRequest, DecodeResponse, SpecPolicy,
+    BatcherConfig, ContinuousBatcher, DecodeRequest, DecodeResponse, HeadLayout, SpecPolicy,
 };
 use flashmask::mask::builders;
 use flashmask::util::bench::time_once;
+use flashmask::util::json::Json;
 use flashmask::util::rng::Rng;
 use flashmask::util::table::Table;
+use std::collections::BTreeMap;
 
 fn requests(n: usize, d: usize, heads: usize, count: usize, mask_of: &dyn Fn(usize, &mut Rng) -> flashmask::mask::FlashMask) -> Vec<DecodeRequest> {
     let mut rng = Rng::new(42);
@@ -31,6 +45,41 @@ fn requests(n: usize, d: usize, heads: usize, count: usize, mask_of: &dyn Fn(usi
             let mut mk =
                 || (0..heads * n * d).map(|_| rng.normal_f32() * 0.5).collect::<Vec<f32>>();
             DecodeRequest::new(id, heads, n, d, n / 4, mk(), mk(), mk(), mask)
+        })
+        .collect()
+}
+
+/// GQA-table requests: Q is `[q_heads, n, d]`, K/V are generated once
+/// per sequence as a *single* head and replicated to `kv_heads`, so
+/// every layout computes the same math and outputs are comparable
+/// row-for-row across the whole table (the rng stream is independent of
+/// `kv_heads`).
+fn gqa_requests(n: usize, d: usize, q_heads: usize, kv_heads: usize, count: usize) -> Vec<DecodeRequest> {
+    let mut rng = Rng::new(77);
+    (0..count as u64)
+        .map(|id| {
+            let mask = builders::causal_document(n, &[n / 2, n - n / 2]);
+            let q: Vec<f32> = (0..q_heads * n * d).map(|_| rng.normal_f32() * 0.5).collect();
+            let k1: Vec<f32> = (0..n * d).map(|_| rng.normal_f32() * 0.5).collect();
+            let v1: Vec<f32> = (0..n * d).map(|_| rng.normal_f32() * 0.5).collect();
+            let rep = |src: &[f32]| {
+                let mut out = Vec::with_capacity(kv_heads * src.len());
+                for _ in 0..kv_heads {
+                    out.extend_from_slice(src);
+                }
+                out
+            };
+            DecodeRequest::with_layout(
+                id,
+                HeadLayout::new(q_heads, kv_heads),
+                n,
+                d,
+                n / 4,
+                q,
+                rep(&k1),
+                rep(&v1),
+                mask,
+            )
         })
         .collect()
 }
@@ -53,7 +102,7 @@ fn run(
     (ms, report, done)
 }
 
-/// Oracle check: speculative outputs must match sequential row-for-row.
+/// Oracle check: two run variants must match row-for-row.
 fn assert_identical(name: &str, seq: &[DecodeResponse], spec: &[DecodeResponse]) {
     assert_eq!(seq.len(), spec.len(), "{name}: sequence count diverged");
     for (a, b) in seq.iter().zip(spec) {
@@ -62,23 +111,34 @@ fn assert_identical(name: &str, seq: &[DecodeResponse], spec: &[DecodeResponse])
         for (i, (x, y)) in a.o.iter().zip(&b.o).enumerate() {
             assert!(
                 (x - y).abs() < 1e-4,
-                "{name}: speculative decode diverged from sequential at req {} elem {i}: {x} vs {y}",
+                "{name}: decode variants diverged at req {} elem {i}: {x} vs {y}",
                 a.id
             );
         }
     }
 }
 
+fn kib(bytes: usize) -> String {
+    format!("{:.0} KiB", bytes as f64 / 1024.0)
+}
+
+fn obj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let smoke = args.iter().any(|a| a == "--smoke");
-    let spec_k: usize = match args.iter().position(|a| a == "--speculate") {
-        None => 4,
-        Some(i) => args
-            .get(i + 1)
-            .and_then(|v| v.parse().ok())
-            .unwrap_or_else(|| panic!("--speculate needs an integer draft budget")),
+    let arg_usize = |key: &str| -> Option<usize> {
+        args.iter().position(|a| a == key).map(|i| {
+            args.get(i + 1)
+                .and_then(|v| v.parse().ok())
+                .unwrap_or_else(|| panic!("{key} needs an integer"))
+        })
     };
+    let spec_k: usize = arg_usize("--speculate").unwrap_or(4);
+    // GQA table KV-head selection; the table's MHA baseline is implicit
+    let kv_heads_arg: Option<usize> = arg_usize("--kv-heads");
     let (n, d, heads, count) = if smoke { (256, 16, 1, 2) } else { (1024, 32, 2, 4) };
     let page_size = 32;
     assert!(n >= 4 * page_size, "acceptance regime: n >= 4x page size");
@@ -106,6 +166,8 @@ fn main() {
         "tok/s dense",
         "speedup",
         "pages skipped",
+        "resident KV",
+        "pages/tok",
     ])
     .title("paged-KV decode: FLASHMASK page skip vs dense cache");
     let mut s = Table::new(vec![
@@ -119,6 +181,7 @@ fn main() {
     .title(format!(
         "speculative decode (oracle draft, k={spec_k}) vs one-token-at-a-time"
     ));
+    let mut json_masks: Vec<Json> = Vec::new();
     for (name, mask_of) in &cases {
         let reqs = requests(n, d, heads, count, mask_of.as_ref());
         let (ms_skip, rep_skip, seq_out) = run(&reqs, page_size, d, true, SpecPolicy::Off);
@@ -136,7 +199,17 @@ fn main() {
             format!("{tps_dense:.0}"),
             format!("{:.2}x", ms_dense / ms_skip),
             format!("{:.1}%", frac * 100.0),
+            kib(rep_skip.resident_kv_bytes),
+            format!("{:.2}", rep_skip.pages_per_token),
         ]);
+        json_masks.push(obj(vec![
+            ("mask", Json::Str(name.to_string())),
+            ("tokens_per_s_skip", Json::Num(tps_skip)),
+            ("tokens_per_s_dense", Json::Num(tps_dense)),
+            ("pages_skip_fraction", Json::Num(frac)),
+            ("resident_kv_bytes", Json::Num(rep_skip.resident_kv_bytes as f64)),
+            ("pages_per_token", Json::Num(rep_skip.pages_per_token)),
+        ]));
 
         if spec_k > 1 {
             let policy =
@@ -164,4 +237,113 @@ fn main() {
     if spec_k > 1 {
         s.print();
     }
+
+    // === GQA table: shared KV pages across query-head groups ===
+    let q_heads = 8;
+    let (n_gqa, count_gqa) = (n / 2, 2);
+    let kv_list: Vec<usize> = match kv_heads_arg {
+        Some(k) => {
+            assert!(k >= 1 && q_heads % k == 0, "--kv-heads must divide {q_heads}");
+            vec![k]
+        }
+        None => vec![4, 2, 1],
+    };
+    let mut g = Table::new(vec![
+        "layout",
+        "group",
+        "tok/s",
+        "resident KV",
+        "peak pages",
+        "pages/tok",
+        "pages total",
+        "KV vs MHA",
+    ])
+    .title(format!(
+        "GQA decode at equal outputs (q_heads={q_heads}, n={n_gqa}, causal_document)"
+    ));
+    let mha_reqs = gqa_requests(n_gqa, d, q_heads, q_heads, count_gqa);
+    let (mha_ms, mha_rep, mha_out) = run(&mha_reqs, page_size, d, true, SpecPolicy::Off);
+    let mha_tps = mha_rep.tokens as f64 / (mha_ms / 1e3);
+    g.row(vec![
+        format!("{}", HeadLayout::mha(q_heads)),
+        "1".to_string(),
+        format!("{mha_tps:.0}"),
+        kib(mha_rep.resident_kv_bytes),
+        mha_rep.peak_pages.to_string(),
+        format!("{:.2}", mha_rep.pages_per_token),
+        mha_rep.pages_total.to_string(),
+        "1.00x".to_string(),
+    ]);
+    let mut json_gqa: Vec<Json> = vec![obj(vec![
+        ("layout", Json::Str(format!("{}", HeadLayout::mha(q_heads)))),
+        ("group", Json::Num(1.0)),
+        ("tokens_per_s", Json::Num(mha_tps)),
+        ("resident_kv_bytes", Json::Num(mha_rep.resident_kv_bytes as f64)),
+        ("peak_pages", Json::Num(mha_rep.peak_pages as f64)),
+        ("pages_per_token", Json::Num(mha_rep.pages_per_token)),
+        ("pages_total", Json::Num(mha_rep.pages_total as f64)),
+    ])];
+    for kv in kv_list {
+        let layout = HeadLayout::new(q_heads, kv);
+        let group = layout.group();
+        let reqs = gqa_requests(n_gqa, d, q_heads, kv, count_gqa);
+        let (ms, rep, out) = run(&reqs, page_size, d, true, SpecPolicy::Off);
+        // exactness: replicated-KV layouts all compute the same rows
+        assert_identical(&format!("gqa {layout}"), &mha_out, &out);
+        // the GQA memory win: one page chain per KV head
+        assert_eq!(
+            mha_rep.peak_pages,
+            group * rep.peak_pages,
+            "{layout}: resident pages must drop by the group factor"
+        );
+        // classification reuse: skip-stat denominators shrink by group
+        assert_eq!(
+            mha_rep.pages_total,
+            group as u64 * rep.pages_total,
+            "{layout}: page-classification work must be counted once per KV head"
+        );
+        let tps = rep.tokens as f64 / (ms / 1e3);
+        g.row(vec![
+            format!("{layout}"),
+            group.to_string(),
+            format!("{tps:.0}"),
+            kib(rep.resident_kv_bytes),
+            rep.peak_pages.to_string(),
+            format!("{:.2}", rep.pages_per_token),
+            rep.pages_total.to_string(),
+            format!(
+                "{:.2}x",
+                rep.resident_kv_bytes as f64 / mha_rep.resident_kv_bytes as f64
+            ),
+        ]);
+        json_gqa.push(obj(vec![
+            ("layout", Json::Str(format!("{layout}"))),
+            ("group", Json::Num(group as f64)),
+            ("tokens_per_s", Json::Num(tps)),
+            ("resident_kv_bytes", Json::Num(rep.resident_kv_bytes as f64)),
+            ("peak_pages", Json::Num(rep.peak_pages as f64)),
+            ("pages_per_token", Json::Num(rep.pages_per_token)),
+            ("pages_total", Json::Num(rep.pages_total as f64)),
+        ]));
+    }
+    g.print();
+
+    println!("== BENCH json ==");
+    let blob = obj(vec![
+        (
+            "config",
+            obj(vec![
+                ("n", Json::Num(n as f64)),
+                ("d", Json::Num(d as f64)),
+                ("heads", Json::Num(heads as f64)),
+                ("seqs", Json::Num(count as f64)),
+                ("page_size", Json::Num(page_size as f64)),
+                ("speculate", Json::Num(spec_k as f64)),
+                ("smoke", Json::Bool(smoke)),
+            ]),
+        ),
+        ("masks", Json::Arr(json_masks)),
+        ("gqa", Json::Arr(json_gqa)),
+    ]);
+    println!("{}", blob.to_string_pretty());
 }

@@ -2,7 +2,7 @@
 //! the "vanilla attention" baseline of Fig. 2 and the semantic oracle
 //! for the blocked engines.
 
-use super::{AttnGrads, AttnOutput};
+use super::{AttnGrads, AttnOutput, HeadLayout};
 
 /// Softmax attention with dense bias; row-major `[n, d]` inputs,
 /// `bias[n*n]` additive mask (0 / -inf).
@@ -49,6 +49,39 @@ pub fn dense_forward(
         }
     }
     AttnOutput { o, lse }
+}
+
+/// [`dense_forward`] over a grouped head layout: Q `[q_heads, n, d]`
+/// against shared K/V `[kv_heads, n, d]`, each query head scored
+/// against its group's KV head.  Returns one output per query head —
+/// the GQA semantic oracle the grouped blocked kernels are pinned to.
+pub fn dense_forward_grouped(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    layout: HeadLayout,
+    bias: &[f32],
+    scale: f32,
+) -> Vec<AttnOutput> {
+    assert_eq!(q.len(), layout.q_heads * n * d, "q must be [q_heads, n, d]");
+    assert_eq!(k.len(), layout.kv_heads * n * d, "k must be [kv_heads, n, d]");
+    assert_eq!(v.len(), layout.kv_heads * n * d, "v must be [kv_heads, n, d]");
+    (0..layout.q_heads)
+        .map(|h| {
+            let kh = layout.kv_head_of(h);
+            dense_forward(
+                &q[h * n * d..(h + 1) * n * d],
+                &k[kh * n * d..(kh + 1) * n * d],
+                &v[kh * n * d..(kh + 1) * n * d],
+                n,
+                d,
+                bias,
+                scale,
+            )
+        })
+        .collect()
 }
 
 /// Backward of [`dense_forward`] (textbook softmax-attention gradient).
@@ -150,6 +183,33 @@ mod tests {
         let out = dense_forward(&q, &k, &v, n, d, &bias, 1.0);
         assert!(out.o[3 * d..4 * d].iter().all(|&x| x == 0.0));
         assert_eq!(out.lse[3], f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn grouped_dense_matches_kv_replication() {
+        // GQA oracle sanity: sharing a KV head is the same as replicating
+        // it per query head and running MHA
+        let (n, d) = (24, 4);
+        let layout = HeadLayout::new(4, 2);
+        let mut rng = Rng::new(9);
+        let q = rand_vec(layout.q_heads * n * d, &mut rng);
+        let k = rand_vec(layout.kv_heads * n * d, &mut rng);
+        let v = rand_vec(layout.kv_heads * n * d, &mut rng);
+        let mask = builders::causal(n);
+        let outs = dense_forward_grouped(&q, &k, &v, n, d, layout, &mask.dense_bias(), 0.5);
+        for h in 0..layout.q_heads {
+            let kh = layout.kv_head_of(h);
+            let want = dense_forward(
+                &q[h * n * d..(h + 1) * n * d],
+                &k[kh * n * d..(kh + 1) * n * d],
+                &v[kh * n * d..(kh + 1) * n * d],
+                n,
+                d,
+                &mask.dense_bias(),
+                0.5,
+            );
+            assert_eq!(outs[h].o, want.o, "head {h}");
+        }
     }
 
     #[test]

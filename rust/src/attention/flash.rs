@@ -7,7 +7,7 @@
 //! paper's §4.4 exactness claim, asserted in the tests below.
 
 use super::gemm;
-use super::{AttnConfig, AttnGrads, AttnOutput, TileStats};
+use super::{AttnConfig, AttnGrads, AttnOutput, HeadLayout, TileStats};
 use crate::mask::{BlockClass, BlockTable, FlashMask};
 
 const NEG_INF: f32 = f32::NEG_INFINITY;
@@ -61,29 +61,68 @@ pub(crate) fn tile_class(
     }
 }
 
-/// Algorithm 1 — forward pass for a single head.
-///
-/// `q,k,v`: row-major `[n, d]`.  Returns output, per-row logsumexp, and
-/// tile/work counters.
-pub fn flashmask_forward(
+/// Classify every `(bi, bj)` tile of one mask (paper Eq. 4), row-major
+/// `[tr, tc]`.  The decision is a property of the mask alone — no head
+/// data enters it — which is what lets the grouped kernel classify
+/// once per KV head and reuse the table across its whole query group
+/// (and the serving engine share one table across all heads of a
+/// request).
+pub(crate) fn classify_tiles(
+    mask: &FlashMask,
+    table: &BlockTable,
+    tr: usize,
+    tc: usize,
+    br: usize,
+    bc: usize,
+    skip: bool,
+) -> Vec<BlockClass> {
+    let mut classes = Vec::with_capacity(tr * tc);
+    for bi in 0..tr {
+        for bj in 0..tc {
+            classes.push(tile_class(mask, table, bi, br, bj, bc, skip));
+        }
+    }
+    classes
+}
+
+/// Charge one classification pass's tile census to `stats`.  Every
+/// non-skipped tile is executed, so the census equals the per-tile
+/// counters the execution loop would have accumulated.
+fn add_census(stats: &mut TileStats, classes: &[BlockClass]) {
+    stats.tiles_total += classes.len();
+    for c in classes {
+        match c {
+            BlockClass::FullyMasked => stats.tiles_skipped += 1,
+            BlockClass::PartiallyMasked => stats.tiles_partial += 1,
+            BlockClass::Unmasked => stats.tiles_unmasked += 1,
+        }
+    }
+}
+
+/// Algorithm 1 compute loop for one query head against one KV head,
+/// driven by a precomputed tile-class table.  Accumulates only the
+/// compute-side counters (`macs`, `mask_evals`) into `stats`; the tile
+/// census is the caller's (it decides how many heads share one
+/// classification pass).  Unlike the decode-side grouped kernels, the
+/// element-wise interval tests on partial tiles still run per query
+/// head here (sharing them needs a per-tile mask cache — follow-up).
+pub(crate) fn forward_tiles(
     q: &[f32],
     k: &[f32],
     v: &[f32],
     n: usize,
     d: usize,
     mask: &FlashMask,
-    table: &BlockTable,
     cfg: AttnConfig,
-    skip: bool,
-) -> (AttnOutput, TileStats) {
+    classes: &[BlockClass],
+    stats: &mut TileStats,
+) -> AttnOutput {
     let (br, bc) = (cfg.br, cfg.bc);
-    assert_eq!(q.len(), n * d);
-    assert_eq!(mask.n(), n);
     let tr = n.div_ceil(br);
     let tc = n.div_ceil(bc);
+    debug_assert_eq!(classes.len(), tr * tc);
     let mut out = vec![0f32; n * d];
     let mut lse = vec![NEG_INF; n];
-    let mut stats = TileStats { tiles_total: tr * tc, ..Default::default() };
 
     // per-row-block scratch, reused across iterations
     let mut s = vec![0f32; br * bc];
@@ -100,9 +139,8 @@ pub fn flashmask_forward(
         l_run[..rows].fill(0.0);
 
         for bj in 0..tc {
-            let class = tile_class(mask, table, bi, br, bj, bc, skip);
+            let class = classes[bi * tc + bj];
             if class == BlockClass::FullyMasked {
-                stats.tiles_skipped += 1;
                 continue;
             }
             let col0 = bj * bc;
@@ -125,10 +163,7 @@ pub fn flashmask_forward(
             }
 
             if class == BlockClass::PartiallyMasked {
-                apply_tile_mask(s_tile, mask, row0, rows, col0, cols, &mut stats);
-                stats.tiles_partial += 1;
-            } else {
-                stats.tiles_unmasked += 1;
+                apply_tile_mask(s_tile, mask, row0, rows, col0, cols, stats);
             }
 
             // online softmax update (Alg. 1 lines 25-26)
@@ -177,7 +212,81 @@ pub fn flashmask_forward(
             } // fully-masked row: output stays 0, lse stays -inf
         }
     }
-    (AttnOutput { o: out, lse }, stats)
+    AttnOutput { o: out, lse }
+}
+
+/// Algorithm 1 — forward pass for a single head.
+///
+/// `q,k,v`: row-major `[n, d]`.  Returns output, per-row logsumexp, and
+/// tile/work counters.
+pub fn flashmask_forward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    mask: &FlashMask,
+    table: &BlockTable,
+    cfg: AttnConfig,
+    skip: bool,
+) -> (AttnOutput, TileStats) {
+    let (br, bc) = (cfg.br, cfg.bc);
+    assert_eq!(q.len(), n * d);
+    assert_eq!(mask.n(), n);
+    let classes = classify_tiles(mask, table, n.div_ceil(br), n.div_ceil(bc), br, bc, skip);
+    let mut stats = TileStats::default();
+    add_census(&mut stats, &classes);
+    let out = forward_tiles(q, k, v, n, d, mask, cfg, &classes, &mut stats);
+    (out, stats)
+}
+
+/// Algorithm 1 forward over a grouped head layout: Q `[q_heads, n, d]`
+/// against shared K/V `[kv_heads, n, d]`.
+///
+/// The Eq. 4 tile classification is computed **once per KV head** and
+/// reused by that head's whole query group — the skip decision is a
+/// property of the key columns alone (§4.1), so sharing KV heads also
+/// shares the classification.  `TileStats` tile denominators therefore
+/// count `kv_heads · tiles`, not `q_heads · tiles`: at group size `g`
+/// the classification cost and the skip-accounting denominators drop
+/// by `g` while per-query-head MACs are unchanged.
+///
+/// Returns one [`AttnOutput`] per query head, in query-head order.
+/// With an MHA layout this is bitwise-identical to calling
+/// [`flashmask_forward`] once per head.
+#[allow(clippy::too_many_arguments)]
+pub fn flashmask_forward_grouped(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    layout: HeadLayout,
+    mask: &FlashMask,
+    table: &BlockTable,
+    cfg: AttnConfig,
+    skip: bool,
+) -> (Vec<AttnOutput>, TileStats) {
+    assert_eq!(q.len(), layout.q_heads * n * d, "q must be [q_heads, n, d]");
+    assert_eq!(k.len(), layout.kv_heads * n * d, "k must be [kv_heads, n, d]");
+    assert_eq!(v.len(), layout.kv_heads * n * d, "v must be [kv_heads, n, d]");
+    assert_eq!(mask.n(), n);
+    let (br, bc) = (cfg.br, cfg.bc);
+    let classes = classify_tiles(mask, table, n.div_ceil(br), n.div_ceil(bc), br, bc, skip);
+    let g = layout.group();
+    let mut stats = TileStats::default();
+    let mut outs = Vec::with_capacity(layout.q_heads);
+    for kh in 0..layout.kv_heads {
+        // one classification pass per KV head; the group reuses it
+        add_census(&mut stats, &classes);
+        let kk = &k[kh * n * d..(kh + 1) * n * d];
+        let vv = &v[kh * n * d..(kh + 1) * n * d];
+        for qh in kh * g..(kh + 1) * g {
+            let qq = &q[qh * n * d..(qh + 1) * n * d];
+            outs.push(forward_tiles(qq, kk, vv, n, d, mask, cfg, &classes, &mut stats));
+        }
+    }
+    (outs, stats)
 }
 
 /// Algorithm 2 — backward pass for a single head.
@@ -398,6 +507,73 @@ mod tests {
             assert_eq!(g1.dq, g2.dq, "{kind} dq");
             assert_eq!(g1.dk, g2.dk, "{kind} dk");
             assert_eq!(g1.dv, g2.dv, "{kind} dv");
+        }
+    }
+
+    #[test]
+    fn grouped_forward_matches_per_head_bitwise() {
+        // GQA: each query head scored against its group's shared KV head
+        // must equal the single-head kernel on that (q, kv) pair bitwise,
+        // and the tile census must count KV heads, not query heads
+        let (n, d) = (96, 8);
+        let layout = HeadLayout::new(4, 2);
+        let mut rng = Rng::new(21);
+        let q = rand_vec(layout.q_heads * n * d, &mut rng);
+        let k = rand_vec(layout.kv_heads * n * d, &mut rng);
+        let v = rand_vec(layout.kv_heads * n * d, &mut rng);
+        let cfg = AttnConfig::new(32, 32, d);
+        for (kind, mask) in builders::benchmark_suite(n, 7) {
+            let table = BlockTable::build(&mask, cfg.bc);
+            let (outs, gs) =
+                flashmask_forward_grouped(&q, &k, &v, n, d, layout, &mask, &table, cfg, true);
+            assert_eq!(outs.len(), layout.q_heads);
+            let mut per_head = TileStats::default();
+            for h in 0..layout.q_heads {
+                let kh = layout.kv_head_of(h);
+                let (want, st) = flashmask_forward(
+                    &q[h * n * d..(h + 1) * n * d],
+                    &k[kh * n * d..(kh + 1) * n * d],
+                    &v[kh * n * d..(kh + 1) * n * d],
+                    n,
+                    d,
+                    &mask,
+                    &table,
+                    cfg,
+                    true,
+                );
+                per_head.merge(&st);
+                assert_eq!(outs[h].o, want.o, "{kind} head {h}: outputs differ");
+                assert_eq!(outs[h].lse, want.lse, "{kind} head {h}: lse differ");
+            }
+            // classification reuse: tile denominators shrink by the group
+            // factor while per-query-head MACs are unchanged
+            assert_eq!(gs.tiles_total * layout.group(), per_head.tiles_total, "{kind}");
+            assert_eq!(gs.tiles_skipped * layout.group(), per_head.tiles_skipped, "{kind}");
+            assert_eq!(gs.macs, per_head.macs, "{kind}: MACs must not change");
+        }
+    }
+
+    #[test]
+    fn grouped_forward_mha_layout_matches_single_head_kernel() {
+        // kv_heads == q_heads must reproduce the ungrouped path bitwise
+        let (n, d) = (64, 8);
+        let heads = 3;
+        let mut rng = Rng::new(22);
+        let q = rand_vec(heads * n * d, &mut rng);
+        let k = rand_vec(heads * n * d, &mut rng);
+        let v = rand_vec(heads * n * d, &mut rng);
+        let mask = builders::causal_document(n, &[30, 20, 14]);
+        let cfg = AttnConfig::new(16, 16, d);
+        let table = BlockTable::build(&mask, cfg.bc);
+        let (outs, _) = flashmask_forward_grouped(
+            &q, &k, &v, n, d, HeadLayout::mha(heads), &mask, &table, cfg, true,
+        );
+        for h in 0..heads {
+            let r = h * n * d..(h + 1) * n * d;
+            let (want, _) = flashmask_forward(
+                &q[r.clone()], &k[r.clone()], &v[r], n, d, &mask, &table, cfg, true,
+            );
+            assert_eq!(outs[h].o, want.o, "head {h}");
         }
     }
 

@@ -26,6 +26,64 @@ pub mod gemm;
 
 use crate::mask::FlashMask;
 
+/// Query/KV head counts of an attention layout.
+///
+/// Grouped-query attention (GQA) shares each KV head across a *group*
+/// of `q_heads / kv_heads` query heads; multi-head attention (MHA,
+/// `q_heads == kv_heads`) and multi-query attention (MQA,
+/// `kv_heads == 1`) are the two ends of the spectrum.  The layout is
+/// the unit every layer batches and accounts on: kernels classify
+/// tiles/pages once per KV head, the paged KV cache holds one page
+/// chain per KV head, and the serving scheduler groups requests by
+/// `(layout, n, d)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct HeadLayout {
+    pub q_heads: usize,
+    pub kv_heads: usize,
+}
+
+impl HeadLayout {
+    pub fn new(q_heads: usize, kv_heads: usize) -> HeadLayout {
+        assert!(q_heads >= 1 && kv_heads >= 1, "layout needs at least one head of each kind");
+        assert!(
+            q_heads % kv_heads == 0,
+            "q_heads {q_heads} must be a multiple of kv_heads {kv_heads}"
+        );
+        HeadLayout { q_heads, kv_heads }
+    }
+
+    /// Multi-head attention: every query head owns its KV head.
+    pub fn mha(heads: usize) -> HeadLayout {
+        HeadLayout::new(heads, heads)
+    }
+
+    /// Multi-query attention: one KV head shared by every query head.
+    pub fn mqa(q_heads: usize) -> HeadLayout {
+        HeadLayout::new(q_heads, 1)
+    }
+
+    /// Query heads per KV head.
+    pub fn group(&self) -> usize {
+        self.q_heads / self.kv_heads
+    }
+
+    /// The KV head query head `q_head` reads from.
+    pub fn kv_head_of(&self, q_head: usize) -> usize {
+        debug_assert!(q_head < self.q_heads);
+        q_head / self.group()
+    }
+
+    pub fn is_mha(&self) -> bool {
+        self.q_heads == self.kv_heads
+    }
+}
+
+impl std::fmt::Display for HeadLayout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}q/{}kv", self.q_heads, self.kv_heads)
+    }
+}
+
 /// Tile sizes + softmax scale for blocked engines.
 #[derive(Clone, Copy, Debug)]
 pub struct AttnConfig {
@@ -93,15 +151,16 @@ where
     R: Send,
 {
     assert!(max_threads >= 1);
+    if heads == 0 {
+        return Vec::new();
+    }
     let mut results: Vec<Option<R>> = (0..heads).map(|_| None).collect();
+    // one chunk size shared by the chunking and the spawned-closure
+    // index math, so the two can never drift apart
+    let per = heads.div_ceil(max_threads.min(heads));
     std::thread::scope(|scope| {
-        let chunks: Vec<&mut [Option<R>]> = {
-            let per = heads.div_ceil(max_threads.min(heads).max(1));
-            results.chunks_mut(per).collect()
-        };
-        for (ci, chunk) in chunks.into_iter().enumerate() {
+        for (ci, chunk) in results.chunks_mut(per).enumerate() {
             let f = &f;
-            let per = heads.div_ceil(max_threads.min(heads).max(1));
             scope.spawn(move || {
                 for (off, slot) in chunk.iter_mut().enumerate() {
                     *slot = Some(f(ci * per + off));
@@ -143,7 +202,7 @@ pub(crate) mod testutil {
     }
 }
 
-pub use flash::{flashmask_backward, flashmask_forward};
+pub use flash::{flashmask_backward, flashmask_forward, flashmask_forward_grouped};
 
 /// Convenience: FLASHMASK forward for one head with stats.
 pub fn forward_single_head(
@@ -158,4 +217,48 @@ pub fn forward_single_head(
 ) -> (AttnOutput, TileStats) {
     let table = crate::mask::BlockTable::build(mask, cfg.bc);
     flash::flashmask_forward(q, k, v, n, d, mask, &table, cfg, skip)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn head_layout_groups_and_mapping() {
+        let gqa = HeadLayout::new(8, 2);
+        assert_eq!(gqa.group(), 4);
+        assert_eq!(gqa.kv_head_of(0), 0);
+        assert_eq!(gqa.kv_head_of(3), 0);
+        assert_eq!(gqa.kv_head_of(4), 1);
+        assert_eq!(gqa.kv_head_of(7), 1);
+        assert!(!gqa.is_mha());
+        assert!(HeadLayout::mha(4).is_mha());
+        assert_eq!(HeadLayout::mha(4).group(), 1);
+        assert_eq!(HeadLayout::mqa(6).kv_heads, 1);
+        assert_eq!(HeadLayout::mqa(6).group(), 6);
+        assert_eq!(format!("{}", gqa), "8q/2kv");
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple")]
+    fn head_layout_rejects_indivisible() {
+        HeadLayout::new(6, 4);
+    }
+
+    #[test]
+    fn parallel_heads_more_threads_than_heads() {
+        // satellite: max_threads > heads must not spawn empty chunks or
+        // scramble the head -> result mapping
+        for (heads, threads) in [(1usize, 4usize), (3, 8), (5, 16), (4, 4)] {
+            let got = parallel_heads(heads, threads, |h| h * 10);
+            let want: Vec<usize> = (0..heads).map(|h| h * 10).collect();
+            assert_eq!(got, want, "heads={heads} threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_heads_zero_heads_is_empty() {
+        let got: Vec<usize> = parallel_heads(0, 4, |h| h);
+        assert!(got.is_empty());
+    }
 }

@@ -81,6 +81,16 @@ impl PagePool {
         self.max_pages - self.in_use
     }
 
+    /// Conservation invariant: every page ever handed out is either
+    /// still in use or was returned through exactly one of free/evict.
+    /// The leak detector for per-KV-head page chains — any admit /
+    /// step / speculate / preempt / retire interleaving must preserve
+    /// it (asserted by the property tests here and in
+    /// [`super::session`]).
+    pub fn conserved(&self) -> bool {
+        self.stats.allocs == self.stats.frees + self.stats.evictions + self.in_use as u64
+    }
+
     /// Hand out one page, or `None` when the pool is exhausted.
     pub fn try_alloc(&mut self) -> Option<PageId> {
         let id = match self.free.pop() {
@@ -312,6 +322,65 @@ mod tests {
         kv.truncate(&mut pool, 0);
         assert!(kv.is_empty());
         assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    fn prop_pool_conservation_random_chain_interleavings() {
+        // satellite: allocs == frees + evictions + in_use after any
+        // interleaving of append / truncate / release(free) /
+        // release(evict) across multiple chains sharing one pool —
+        // the chain-level half of the leak detector (the batcher-level
+        // admit/step/speculate/preempt/retire half lives in session.rs)
+        crate::util::prop::check(
+            "pool-conservation-chains",
+            crate::util::prop::PropConfig { cases: 24, base_seed: 0xC0DE },
+            |rng| {
+                let d = 2;
+                let ps = 1 + rng.range(1, 4) as usize;
+                let max_pages = 4 + rng.range(0, 12) as usize;
+                let mut pool = PagePool::new(ps, d, max_pages);
+                let mut chains: Vec<PagedKv> = (0..4).map(|_| PagedKv::new()).collect();
+                for _ in 0..200 {
+                    let c = rng.range(0, chains.len() as i64) as usize;
+                    match rng.range(0, 4) {
+                        0 | 1 => {
+                            // append (may fail on exhaustion — that must
+                            // not break conservation either)
+                            let _ = chains[c].append(&mut pool, &[1.0; 2], &[2.0; 2]);
+                        }
+                        2 => {
+                            let new_len =
+                                rng.range(0, chains[c].len() as i64 + 1) as usize;
+                            chains[c].truncate(&mut pool, new_len);
+                        }
+                        _ => {
+                            let evict = rng.f64() < 0.5;
+                            chains[c].release(&mut pool, evict);
+                        }
+                    }
+                    if !pool.conserved() {
+                        return Err(format!(
+                            "conservation broken: allocs {} != frees {} + evictions {} + in_use {}",
+                            pool.stats.allocs,
+                            pool.stats.frees,
+                            pool.stats.evictions,
+                            pool.in_use()
+                        ));
+                    }
+                    let held: usize = chains.iter().map(|ch| ch.n_pages()).sum();
+                    if held != pool.in_use() {
+                        return Err(format!("held {held} != pool in_use {}", pool.in_use()));
+                    }
+                }
+                for ch in &mut chains {
+                    ch.release(&mut pool, false);
+                }
+                if pool.in_use() != 0 || !pool.conserved() {
+                    return Err("final drain leaked pages".into());
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -34,18 +34,27 @@
 //! decode, speculative decode and prefill are pinned to each other in
 //! `tests/decode_oracle.rs`.
 
+//!
+//! Head layouts: every piece above is layout-aware (GQA/MQA).  A
+//! [`DecodeRequest`] carries a [`HeadLayout`]; the session holds one
+//! page chain per *KV* head (cache residency scales with `kv_heads`,
+//! not `q_heads`), and the step/verify kernels score a KV head's whole
+//! query group in one pass, classifying pages once per KV head
+//! (DESIGN.md §Head layouts).
+
 pub mod kvcache;
 pub mod session;
 pub mod spec;
 pub mod step;
 
+pub use crate::attention::HeadLayout;
 pub use kvcache::{PageId, PagePool, PagedKv, PoolStats};
 pub use session::{
     BatcherConfig, BatcherReport, ContinuousBatcher, DecodeRequest, DecodeResponse,
     DecodeSession, StepOutcome,
 };
 pub use spec::{
-    greedy_accept_path, token_rows, DraftProposer, DraftTree, OracleProposer,
-    SelfDraftProposer, SpecPolicy,
+    greedy_accept_path, token_rows, verify_rows, verify_rows_group, DraftKind, DraftProposer,
+    DraftTree, OracleProposer, SelfDraftProposer, SpecBudget, SpecPolicy,
 };
-pub use step::{decode_step, DecodeStats};
+pub use step::{decode_step, decode_step_group, DecodeStats};

@@ -1,8 +1,9 @@
 //! Decode sessions and the continuous-batching scheduler.
 //!
-//! A [`DecodeSession`] owns one sequence's paged caches (one per head),
-//! its FlashMask and the incremental view over it, and steps one token
-//! at a time.  The [`ContinuousBatcher`] runs many sessions against the
+//! A [`DecodeSession`] owns one sequence's paged caches (one per *KV*
+//! head — under GQA a chain is shared by its whole query group), its
+//! FlashMask and the incremental view over it, and steps one token at a
+//! time.  The [`ContinuousBatcher`] runs many sessions against the
 //! shared [`PagePool`]: each iteration it admits waiting sequences,
 //! steps every active sequence by one token, and retires finished ones
 //! — sequences of *different lengths* decode side by side, removing the
@@ -16,22 +17,26 @@
 //! byte-comparable to the full-sequence prefill oracle.
 
 use super::kvcache::{PagePool, PagedKv};
-use super::spec::{self, DraftProposer, SpecPolicy};
-use super::step::{decode_step, DecodeStats};
+use super::spec::{self, DraftProposer, SpecBudget, SpecPolicy};
+use super::step::{decode_step_group, DecodeStats};
+use crate::attention::HeadLayout;
 use crate::mask::{builders, FlashMask, IncrementalMaskView};
 use anyhow::{bail, ensure, Result};
 use std::collections::VecDeque;
 use std::time::Instant;
 
-/// One decode request: teacher-forced Q/K/V streams (head-major
-/// `[heads, n, d]`) for the whole sequence, the sequence's FlashMask,
-/// and the prompt/generation split.  Rows `0..prompt_len` are prefill
-/// (their K/V is bulk-loaded into the cache); rows `prompt_len..n` are
-/// decoded token by token.
+/// One decode request: teacher-forced Q/K/V streams for the whole
+/// sequence, the sequence's FlashMask, and the prompt/generation
+/// split.  Q is head-major `[q_heads, n, d]`; K/V are head-major
+/// `[kv_heads, n, d]` — under GQA each KV head is shared by a group of
+/// `layout.group()` query heads, so cache residency scales with
+/// `kv_heads`.  Rows `0..prompt_len` are prefill (their K/V is
+/// bulk-loaded into the cache); rows `prompt_len..n` are decoded token
+/// by token.
 #[derive(Clone, Debug)]
 pub struct DecodeRequest {
     pub id: u64,
-    pub heads: usize,
+    pub layout: HeadLayout,
     pub n: usize,
     pub d: usize,
     pub prompt_len: usize,
@@ -43,6 +48,8 @@ pub struct DecodeRequest {
 }
 
 impl DecodeRequest {
+    /// MHA convenience: `heads` query heads, each owning its KV head
+    /// (`q`, `k`, `v` all `[heads, n, d]`).
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         id: u64,
@@ -55,16 +62,33 @@ impl DecodeRequest {
         v: Vec<f32>,
         mask: FlashMask,
     ) -> DecodeRequest {
-        assert_eq!(q.len(), heads * n * d);
-        assert_eq!(k.len(), heads * n * d);
-        assert_eq!(v.len(), heads * n * d);
+        DecodeRequest::with_layout(id, HeadLayout::mha(heads), n, d, prompt_len, q, k, v, mask)
+    }
+
+    /// Grouped layout: `q` is `[layout.q_heads, n, d]`, `k`/`v` are
+    /// `[layout.kv_heads, n, d]`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_layout(
+        id: u64,
+        layout: HeadLayout,
+        n: usize,
+        d: usize,
+        prompt_len: usize,
+        q: Vec<f32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        mask: FlashMask,
+    ) -> DecodeRequest {
+        assert_eq!(q.len(), layout.q_heads * n * d, "q must be [q_heads, n, d]");
+        assert_eq!(k.len(), layout.kv_heads * n * d, "k must be [kv_heads, n, d]");
+        assert_eq!(v.len(), layout.kv_heads * n * d, "v must be [kv_heads, n, d]");
         assert_eq!(mask.n(), n);
         assert!(prompt_len < n, "nothing to decode");
         assert!(
             mask.causal,
             "decode requires a causal mask: a row cannot attend to KV not yet written"
         );
-        DecodeRequest { id, heads, n, d, prompt_len, q, k, v, mask, arrived: Instant::now() }
+        DecodeRequest { id, layout, n, d, prompt_len, q, k, v, mask, arrived: Instant::now() }
     }
 
     /// Decode steps this request needs.
@@ -72,9 +96,11 @@ impl DecodeRequest {
         self.n - self.prompt_len
     }
 
-    /// Worst-case pool pages when fully decoded.
+    /// Worst-case pool pages when fully decoded — one page chain per
+    /// *KV* head, the GQA residency win: at group size `g` a sequence
+    /// holds `g`× fewer pages than its MHA twin.
     pub fn pages_needed(&self, page_size: usize) -> usize {
-        self.heads * self.n.div_ceil(page_size)
+        self.layout.kv_heads * self.n.div_ceil(page_size)
     }
 }
 
@@ -90,22 +116,29 @@ pub enum StepOutcome {
     Finished,
 }
 
-/// One active sequence: per-head paged caches + decode cursor.
+/// One active sequence: per-*KV*-head paged caches + decode cursor.
+/// Under GQA the session holds `kv_heads` page chains (not `q_heads`),
+/// so pool pressure, preemption and rollback all operate on the shared
+/// chains — a group-8 session holds 8× fewer pages than its MHA twin.
 pub struct DecodeSession {
     pub req: DecodeRequest,
+    /// One page chain per KV head.
     caches: Vec<PagedKv>,
     view: IncrementalMaskView,
     scale: f32,
     /// Rows appended to the cache so far (== next row to decode).
     pub pos: usize,
-    /// Decoded output rows, one `[gen_len * d]` buffer per head.
+    /// Decoded output rows, one `[gen_len * d]` buffer per *query* head.
     out: Vec<Vec<f32>>,
     /// Score scratch reused across steps (no per-token allocation).
     scratch: Vec<f32>,
+    /// Query-group gather buffer reused across steps, same contract.
+    q_scratch: Vec<f32>,
     /// Draft source when this session decodes speculatively.
     proposer: Option<Box<dyn DraftProposer>>,
-    /// Draft budget (max accepted tokens per verify pass).
-    spec_k: usize,
+    /// Draft budget (max accepted tokens per verify pass), fixed or
+    /// acceptance-adaptive.
+    budget: SpecBudget,
     pub stats: DecodeStats,
     pub admitted: Instant,
 }
@@ -114,8 +147,8 @@ impl DecodeSession {
     pub fn new(req: DecodeRequest, page_size: usize) -> DecodeSession {
         let view = IncrementalMaskView::new(&req.mask, page_size);
         let scale = 1.0 / (req.d as f32).sqrt();
-        let caches = (0..req.heads).map(|_| PagedKv::new()).collect();
-        let out = vec![Vec::with_capacity(req.gen_len() * req.d); req.heads];
+        let caches = (0..req.layout.kv_heads).map(|_| PagedKv::new()).collect();
+        let out = vec![Vec::with_capacity(req.gen_len() * req.d); req.layout.q_heads];
         DecodeSession {
             req,
             caches,
@@ -124,8 +157,9 @@ impl DecodeSession {
             pos: 0,
             out,
             scratch: Vec::with_capacity(page_size),
+            q_scratch: Vec::new(),
             proposer: None,
-            spec_k: 0,
+            budget: SpecBudget::fixed(0),
             stats: DecodeStats::default(),
             admitted: Instant::now(),
         }
@@ -133,38 +167,51 @@ impl DecodeSession {
 
     /// Enable speculative decoding: up to `k` tokens are drafted by
     /// `proposer` and verified per [`try_speculate`](Self::try_speculate)
-    /// call.  `k <= 1` is sequential decode.
-    pub fn set_speculation(&mut self, proposer: Box<dyn DraftProposer>, k: usize) {
+    /// call.  `k <= 1` is sequential decode.  With `adaptive` the
+    /// per-pass budget follows a rolling acceptance window
+    /// ([`SpecBudget`]), collapsing to 1 when drafts keep missing.
+    pub fn set_speculation(&mut self, proposer: Box<dyn DraftProposer>, k: usize, adaptive: bool) {
         self.proposer = Some(proposer);
-        self.spec_k = k;
+        self.budget = if adaptive { SpecBudget::adaptive(k) } else { SpecBudget::fixed(k) };
     }
 
     pub fn speculative(&self) -> bool {
-        self.proposer.is_some() && self.spec_k > 1
+        self.proposer.is_some() && self.budget.k_max() > 1
     }
 
-    fn kv_row(&self, src: &[f32], h: usize, t: usize) -> std::ops::Range<usize> {
-        debug_assert!(src.len() == self.req.heads * self.req.n * self.req.d);
+    /// Current draft budget (== `k` for fixed policies).
+    pub fn spec_budget(&self) -> usize {
+        self.budget.current()
+    }
+
+    fn q_row(&self, h: usize, t: usize) -> std::ops::Range<usize> {
+        debug_assert!(h < self.req.layout.q_heads);
         let base = h * self.req.n * self.req.d + t * self.req.d;
         base..base + self.req.d
     }
 
-    /// Bulk-load the prompt's K/V into the cache.  Checks page
-    /// availability up front; returns `false` (allocating nothing) when
-    /// the pool cannot hold the prompt.
+    fn kv_row(&self, src: &[f32], kh: usize, t: usize) -> std::ops::Range<usize> {
+        debug_assert!(src.len() == self.req.layout.kv_heads * self.req.n * self.req.d);
+        let base = kh * self.req.n * self.req.d + t * self.req.d;
+        base..base + self.req.d
+    }
+
+    /// Bulk-load the prompt's K/V into the cache (one chain per KV
+    /// head).  Checks page availability up front; returns `false`
+    /// (allocating nothing) when the pool cannot hold the prompt.
     #[must_use]
     pub fn prefill(&mut self, pool: &mut PagePool) -> bool {
         debug_assert_eq!(self.pos, 0);
         let ps = pool.page_size();
-        let needed = self.req.heads * self.req.prompt_len.div_ceil(ps);
+        let needed = self.req.layout.kv_heads * self.req.prompt_len.div_ceil(ps);
         if pool.available() < needed {
             return false;
         }
-        for h in 0..self.req.heads {
+        for kh in 0..self.req.layout.kv_heads {
             for t in 0..self.req.prompt_len {
-                let kr = self.kv_row(&self.req.k, h, t);
-                let vr = self.kv_row(&self.req.v, h, t);
-                let ok = self.caches[h].append(pool, &self.req.k[kr], &self.req.v[vr]);
+                let kr = self.kv_row(&self.req.k, kh, t);
+                let vr = self.kv_row(&self.req.v, kh, t);
+                let ok = self.caches[kh].append(pool, &self.req.k[kr], &self.req.v[vr]);
                 debug_assert!(ok, "prefill alloc failed despite availability check");
             }
         }
@@ -173,26 +220,37 @@ impl DecodeSession {
         true
     }
 
-    /// Decode one token across all heads.  Page demand is checked up
-    /// front (all heads cross page boundaries together), so a `NoPage`
-    /// return leaves the session untouched.
+    /// Decode one token across all heads: one grouped kernel call per
+    /// KV head, scoring that head's whole query group in a single pass
+    /// over its pages (classification once per KV head).  Page demand
+    /// is checked up front (all KV heads cross page boundaries
+    /// together), so a `NoPage` return leaves the session untouched.
     pub fn try_step(&mut self, pool: &mut PagePool, skip: bool) -> StepOutcome {
         debug_assert!(self.pos < self.req.n);
         let t = self.pos;
         let ps = pool.page_size();
-        let new_pages = if t % ps == 0 { self.req.heads } else { 0 };
+        let layout = self.req.layout;
+        let d = self.req.d;
+        let g = layout.group();
+        let new_pages = if t % ps == 0 { layout.kv_heads } else { 0 };
         if pool.available() < new_pages {
             return StepOutcome::NoPage;
         }
-        for h in 0..self.req.heads {
-            let kr = self.kv_row(&self.req.k, h, t);
-            let vr = self.kv_row(&self.req.v, h, t);
-            let ok = self.caches[h].append(pool, &self.req.k[kr], &self.req.v[vr]);
+        for kh in 0..layout.kv_heads {
+            let kr = self.kv_row(&self.req.k, kh, t);
+            let vr = self.kv_row(&self.req.v, kh, t);
+            let ok = self.caches[kh].append(pool, &self.req.k[kr], &self.req.v[vr]);
             debug_assert!(ok, "step alloc failed despite availability check");
-            let qr = self.kv_row(&self.req.q, h, t);
-            let o = decode_step(
-                &self.req.q[qr],
-                &self.caches[h],
+            self.q_scratch.clear();
+            for qh in kh * g..(kh + 1) * g {
+                let qr = self.q_row(qh, t);
+                let row = &self.req.q[qr];
+                self.q_scratch.extend_from_slice(row);
+            }
+            let o = decode_step_group(
+                &self.q_scratch,
+                g,
+                &self.caches[kh],
                 pool,
                 &self.req.mask,
                 &self.view,
@@ -203,7 +261,9 @@ impl DecodeSession {
                 &mut self.scratch,
             );
             if t >= self.req.prompt_len {
-                self.out[h].extend(o);
+                for (j, qh) in (kh * g..(kh + 1) * g).enumerate() {
+                    self.out[qh].extend_from_slice(&o[j * d..(j + 1) * d]);
+                }
             }
         }
         self.pos += 1;
@@ -214,9 +274,10 @@ impl DecodeSession {
         }
     }
 
-    /// One speculative iteration: draft up to `spec_k` tokens, verify
-    /// every drafted row in a single pass over the cache pages
-    /// ([`spec::verify_rows`] under a [`builders::tree_mask`]), commit
+    /// One speculative iteration: draft up to the current budget's
+    /// tokens, verify every drafted row in a single pass over the cache
+    /// pages per KV head ([`spec::verify_rows_group`] under a
+    /// [`builders::tree_mask`], the whole query group at once), commit
     /// the longest greedily-accepted root path, and roll the cache back
     /// past the rejected remainder.  Falls back to one sequential
     /// [`try_step`](Self::try_step) when nothing is accepted, so every
@@ -228,8 +289,11 @@ impl DecodeSession {
     pub fn try_speculate(&mut self, pool: &mut PagePool, skip: bool) -> StepOutcome {
         debug_assert!(self.pos < self.req.n);
         let t0 = self.pos;
-        let budget = self.spec_k.min(self.req.n - t0);
+        let budget = self.budget.current().min(self.req.n - t0);
         if self.proposer.is_none() || budget <= 1 {
+            // sequential progress; once an adaptive budget has collapsed
+            // to 1 these steps drive its periodic re-probe
+            self.budget.note_sequential();
             return self.try_step(pool, skip);
         }
         let Some(draft) = self.proposer.as_mut().unwrap().propose(&self.req, t0, budget) else {
@@ -244,9 +308,10 @@ impl DecodeSession {
             draft.tree.max_path_len()
         );
         let ps = pool.page_size();
-        let heads = self.req.heads;
+        let layout = self.req.layout;
+        let g = layout.group();
         let d = self.req.d;
-        let new_pages = heads * ((t0 + kd).div_ceil(ps) - t0.div_ceil(ps));
+        let new_pages = layout.kv_heads * ((t0 + kd).div_ceil(ps) - t0.div_ceil(ps));
         if pool.available() < new_pages {
             // the draft doesn't fit (it may transiently need more pages
             // than the submit-time worst case covers, e.g. rejected
@@ -256,34 +321,41 @@ impl DecodeSession {
             return self.try_step(pool, skip);
         }
 
-        // append every drafted K/V row (checked above, cannot fail)
-        for h in 0..heads {
+        // append every drafted K/V row to every KV-head chain (checked
+        // above, cannot fail)
+        for kh in 0..layout.kv_heads {
             for i in 0..kd {
-                let ok = self.caches[h].append(
+                let ok = self.caches[kh].append(
                     pool,
-                    spec::DraftTree::head_row(&draft.k, i, h, d),
-                    spec::DraftTree::head_row(&draft.v, i, h, d),
+                    spec::DraftTree::head_row(&draft.k, i, kh, d),
+                    spec::DraftTree::head_row(&draft.v, i, kh, d),
                 );
                 debug_assert!(ok, "draft alloc failed despite availability check");
             }
         }
 
-        // one verify pass per head, all drafted rows at once.  The tree
-        // mask + view are rebuilt per pass — O(t0 + kd) setup against
-        // the pass's O(t0 * kd * d) compute, i.e. ~1/(kd*d) relative —
-        // a draft-region-only view would save it but needs page-offset
+        // one verify pass per KV head, all drafted rows of the whole
+        // query group at once (page classification and the per-column
+        // visibility tests run once per KV head).  The tree mask + view
+        // are rebuilt per pass — O(t0 + kd) setup against the pass's
+        // O(t0 * kd * d) compute, i.e. ~1/(kd*d) relative — a
+        // draft-region-only view would save it but needs page-offset
         // handling (t0 is rarely page-aligned)
         let tm = builders::tree_mask(t0, &draft.tree);
         let tview = IncrementalMaskView::new(&tm, ps);
-        let mut outs: Vec<Vec<f32>> = Vec::with_capacity(heads);
-        for h in 0..heads {
-            let mut q_rows = Vec::with_capacity(kd * d);
-            for i in 0..kd {
-                q_rows.extend_from_slice(spec::DraftTree::head_row(&draft.q, i, h, d));
+        // outs[kh] is [group, kd, d], query-head-major within the group
+        let mut outs: Vec<Vec<f32>> = Vec::with_capacity(layout.kv_heads);
+        for kh in 0..layout.kv_heads {
+            let mut q_rows = Vec::with_capacity(g * kd * d);
+            for qh in kh * g..(kh + 1) * g {
+                for i in 0..kd {
+                    q_rows.extend_from_slice(spec::DraftTree::head_row(&draft.q, i, qh, d));
+                }
             }
-            outs.push(spec::verify_rows(
+            outs.push(spec::verify_rows_group(
                 &q_rows,
-                &self.caches[h],
+                g,
+                &self.caches[kh],
                 pool,
                 &self.req.mask,
                 &self.view,
@@ -301,10 +373,11 @@ impl DecodeSession {
         self.stats.drafted += kd as u64;
 
         let path = spec::greedy_accept_path(&self.req, &draft, t0);
+        self.budget.record(path.len(), budget);
 
         // rollback: drop every drafted row (accepted ones are re-applied
         // below from the truth stream, which acceptance proved bitwise
-        // equal), returning tail pages to the pool
+        // equal), returning tail pages of every KV-head chain to the pool
         for c in &mut self.caches {
             c.truncate(pool, t0);
         }
@@ -322,13 +395,17 @@ impl DecodeSession {
         // commit the accepted prefix: cache rows + verified outputs
         for (j, &node) in path.iter().enumerate() {
             let t = t0 + j;
-            for h in 0..heads {
-                let kr = self.kv_row(&self.req.k, h, t);
-                let vr = self.kv_row(&self.req.v, h, t);
-                let ok = self.caches[h].append(pool, &self.req.k[kr], &self.req.v[vr]);
+            for kh in 0..layout.kv_heads {
+                let kr = self.kv_row(&self.req.k, kh, t);
+                let vr = self.kv_row(&self.req.v, kh, t);
+                let ok = self.caches[kh].append(pool, &self.req.k[kr], &self.req.v[vr]);
                 debug_assert!(ok, "commit alloc failed after rollback");
-                if t >= self.req.prompt_len {
-                    self.out[h].extend_from_slice(&outs[h][node * d..(node + 1) * d]);
+            }
+            if t >= self.req.prompt_len {
+                for qh in 0..layout.q_heads {
+                    let kh = layout.kv_head_of(qh);
+                    let row = (qh - kh * g) * kd + node;
+                    self.out[qh].extend_from_slice(&outs[kh][row * d..(row + 1) * d]);
                 }
             }
         }
@@ -367,13 +444,13 @@ impl DecodeSession {
         }
         let decode_ms = self.admitted.elapsed().as_secs_f64() * 1e3;
         let queue_ms = (self.admitted - self.req.arrived).as_secs_f64() * 1e3;
-        let mut o = Vec::with_capacity(self.req.heads * self.req.gen_len() * self.req.d);
+        let mut o = Vec::with_capacity(self.req.layout.q_heads * self.req.gen_len() * self.req.d);
         for h in self.out.drain(..) {
             o.extend(h);
         }
         DecodeResponse {
             id: self.req.id,
-            heads: self.req.heads,
+            layout: self.req.layout,
             n: self.req.n,
             d: self.req.d,
             prompt_len: self.req.prompt_len,
@@ -386,11 +463,11 @@ impl DecodeSession {
 }
 
 /// Completed decode: output rows for the generated span, head-major
-/// `[heads, n - prompt_len, d]`.
+/// `[layout.q_heads, n - prompt_len, d]`.
 #[derive(Clone, Debug)]
 pub struct DecodeResponse {
     pub id: u64,
-    pub heads: usize,
+    pub layout: HeadLayout,
     pub n: usize,
     pub d: usize,
     pub prompt_len: usize,
@@ -443,9 +520,19 @@ pub struct BatcherReport {
     pub tokens_per_s: f64,
     /// Fraction of cache pages skipped across retired sequences.
     pub pages_skip_fraction: f64,
+    /// Pages considered across all kernel calls — the skip-stat
+    /// denominator.  Counted per *KV* head, so at group size `g` it
+    /// shrinks by `g` vs. the MHA twin (classification reuse).
+    pub pages_total: u64,
     pub preemptions: u64,
     pub evicted_pages: u64,
     pub peak_pages: usize,
+    /// Peak KV-cache residency in bytes (`peak_pages` × page bytes,
+    /// K and V planes) — the GQA memory win: scales with `kv_heads`.
+    pub resident_kv_bytes: usize,
+    /// Pages allocated per useful generated token (allocation churn,
+    /// re-decodes after preemption included).
+    pub pages_per_token: f64,
     /// Draft tokens run through verify passes (0 when sequential).
     pub drafted_tokens: u64,
     /// Draft tokens accepted and committed.
@@ -530,7 +617,7 @@ impl ContinuousBatcher {
             // fit-check before building the session: constructing the
             // IncrementalMaskView is O(n), too costly to discard every
             // scheduler iteration while the head-of-line request waits
-            let prompt_pages = req.heads * req.prompt_len.div_ceil(self.cfg.page_size);
+            let prompt_pages = req.layout.kv_heads * req.prompt_len.div_ceil(self.cfg.page_size);
             if self.pool.available() < prompt_pages {
                 // head-of-line waits for pages; no bypass, keep FIFO
                 self.waiting.push_front(req);
@@ -538,7 +625,7 @@ impl ContinuousBatcher {
             }
             let mut session = DecodeSession::new(req, self.cfg.page_size);
             if let Some(proposer) = self.cfg.spec.build(session.req.id) {
-                session.set_speculation(proposer, self.cfg.spec.k());
+                session.set_speculation(proposer, self.cfg.spec.k(), self.cfg.spec.adaptive());
             }
             let ok = session.prefill(&mut self.pool);
             debug_assert!(ok, "prefill failed after fit check");
@@ -626,15 +713,24 @@ impl ContinuousBatcher {
     }
 
     pub fn report(&self) -> BatcherReport {
+        // K and V planes, f32 — what the pool's peak residency cost
+        let page_bytes = 2 * self.cfg.page_size * self.cfg.d * std::mem::size_of::<f32>();
         BatcherReport {
             sequences: self.finished.len(),
             tokens: self.decoded_tokens,
             tokens_per_s: self.decoded_tokens as f64
                 / self.started.elapsed().as_secs_f64().max(1e-9),
             pages_skip_fraction: self.agg.skip_fraction(),
+            pages_total: self.agg.pages_total,
             preemptions: self.preemptions,
             evicted_pages: self.pool.stats.evictions,
             peak_pages: self.pool.stats.peak_in_use,
+            resident_kv_bytes: self.pool.stats.peak_in_use * page_bytes,
+            pages_per_token: if self.decoded_tokens == 0 {
+                0.0
+            } else {
+                self.pool.stats.allocs as f64 / self.decoded_tokens as f64
+            },
             drafted_tokens: self.agg.drafted,
             accepted_tokens: self.agg.accepted,
             spec_fallbacks: self.agg.fallback_steps,
@@ -695,8 +791,8 @@ mod tests {
 
     fn assert_matches_oracle(req: &DecodeRequest, resp: &DecodeResponse) {
         let gen = req.gen_len() * req.d;
-        assert_eq!(resp.o.len(), req.heads * gen);
-        for h in 0..req.heads {
+        assert_eq!(resp.o.len(), req.layout.q_heads * gen);
+        for h in 0..req.layout.q_heads {
             let want = oracle_rows(req, h);
             let got = &resp.o[h * gen..(h + 1) * gen];
             for (i, (a, b)) in got.iter().zip(&want).enumerate() {
@@ -919,7 +1015,7 @@ mod tests {
         let req = request(0, 1, 32, d, 0, 700);
         let mut pool = PagePool::new(8, d, 2); // 16 tokens max
         let mut s = DecodeSession::new(req, 8);
-        s.set_speculation(Box::new(spec::OracleProposer::new(1.0, 1, 3)), 4);
+        s.set_speculation(Box::new(spec::OracleProposer::new(1.0, 1, 3)), 4, false);
         assert!(s.prefill(&mut pool));
         // decode 14 tokens sequentially-ish via speculation until the
         // pool frontier: at pos 14 a 4-token draft needs a 3rd page
@@ -967,6 +1063,217 @@ mod tests {
         done.sort_by_key(|r| r.id);
         assert_eq!(done.len(), 3);
         assert_matches_oracle(&late, &done[2]);
+    }
+
+    /// A GQA request and its MHA twin (same Q, KV heads replicated per
+    /// query head): the two must decode to the same rows.
+    fn gqa_pair(
+        id: u64,
+        layout: HeadLayout,
+        n: usize,
+        d: usize,
+        prompt: usize,
+        seed: u64,
+    ) -> (DecodeRequest, DecodeRequest) {
+        let mut rng = Rng::new(seed);
+        let mask = match id % 3 {
+            0 => builders::causal(n),
+            1 => builders::sliding_window(n, (n / 4).max(1)),
+            _ => builders::causal_document(n, &[n / 2, n - n / 2]),
+        };
+        let q = rand_vec(layout.q_heads * n * d, &mut rng);
+        let k = rand_vec(layout.kv_heads * n * d, &mut rng);
+        let v = rand_vec(layout.kv_heads * n * d, &mut rng);
+        let mut k_rep = Vec::with_capacity(layout.q_heads * n * d);
+        let mut v_rep = Vec::with_capacity(layout.q_heads * n * d);
+        for qh in 0..layout.q_heads {
+            let kh = layout.kv_head_of(qh);
+            k_rep.extend_from_slice(&k[kh * n * d..(kh + 1) * n * d]);
+            v_rep.extend_from_slice(&v[kh * n * d..(kh + 1) * n * d]);
+        }
+        let gqa =
+            DecodeRequest::with_layout(id, layout, n, d, prompt, q.clone(), k, v, mask.clone());
+        let mha = DecodeRequest::new(id, layout.q_heads, n, d, prompt, q, k_rep, v_rep, mask);
+        (gqa, mha)
+    }
+
+    fn run_one(req: DecodeRequest, max_pages: usize, spec: SpecPolicy) -> (BatcherReport, DecodeResponse) {
+        let mut b = ContinuousBatcher::new(BatcherConfig {
+            page_size: 8,
+            d: req.d,
+            max_pages,
+            max_active: 4,
+            skip: true,
+            spec,
+        });
+        b.submit(req).unwrap();
+        let report = b.run().unwrap();
+        (report, b.take_finished().pop().unwrap())
+    }
+
+    #[test]
+    fn gqa_matches_replicated_mha_and_holds_group_fewer_pages() {
+        // the tentpole's core claim: a grouped layout is semantically a
+        // KV-replicated MHA run (bitwise here: identical float ops in
+        // identical order) at 1/group the cache residency and 1/group
+        // the page-classification work
+        let (n, d) = (64, 8);
+        for (id, layout) in
+            [(0u64, HeadLayout::new(4, 2)), (1, HeadLayout::new(8, 2)), (2, HeadLayout::mqa(4))]
+        {
+            let g = layout.group();
+            let (gqa, mha) = gqa_pair(id, layout, n, d, 8, 1000 + id);
+            let (gqa_rep, gqa_resp) = run_one(gqa, 4096, SpecPolicy::Off);
+            let (mha_rep, mha_resp) = run_one(mha, 4096, SpecPolicy::Off);
+            assert_eq!(gqa_resp.o, mha_resp.o, "{layout}: outputs diverged from MHA twin");
+            assert_eq!(gqa_resp.layout, layout);
+            // residency: one page chain per KV head
+            assert_eq!(mha_rep.peak_pages, g * gqa_rep.peak_pages, "{layout}");
+            assert_eq!(mha_rep.resident_kv_bytes, g * gqa_rep.resident_kv_bytes, "{layout}");
+            // classification: skip-stat denominators shrink by the group
+            // factor, the skip *fraction* is unchanged
+            assert_eq!(mha_rep.pages_total, g * gqa_rep.pages_total, "{layout}");
+            assert!(
+                (mha_rep.pages_skip_fraction - gqa_rep.pages_skip_fraction).abs() < 1e-12,
+                "{layout}"
+            );
+        }
+    }
+
+    #[test]
+    fn gqa_exact_under_preemption_and_speculative_rollback() {
+        // pool pressure preempts mid-flight and speculation rolls the
+        // shared KV chains back; outputs must still match the MHA twin
+        let (n, d) = (48, 8);
+        let layout = HeadLayout::new(4, 1);
+        let (gqa, mha) = gqa_pair(1, layout, n, d, 0, 2000);
+        let (mha_rep, mha_resp) = run_one(mha, 4096, SpecPolicy::Off);
+        assert_eq!(mha_rep.preemptions, 0);
+        // 6-page pool vs 6 pages needed per GQA sequence: admit two
+        // clones so pressure forces preemption
+        let spec = SpecPolicy::Oracle { k: 4, accept_rate: 1.0, branch: 2, seed: 31 };
+        let mut b = ContinuousBatcher::new(BatcherConfig {
+            page_size: 8,
+            d,
+            max_pages: 8,
+            max_active: 4,
+            skip: true,
+            spec,
+        });
+        let mut clone = gqa.clone();
+        clone.id = 2;
+        b.submit(gqa).unwrap();
+        b.submit(clone).unwrap();
+        let report = b.run().unwrap();
+        assert!(report.preemptions > 0, "pool pressure should have preempted");
+        assert!(report.drafted_tokens > 0);
+        assert_eq!(b.pool().in_use(), 0, "GQA chains leaked pages");
+        for resp in b.take_finished() {
+            assert_eq!(resp.o.len(), mha_resp.o.len());
+            for (i, (a, b)) in resp.o.iter().zip(&mha_resp.o).enumerate() {
+                assert!((a - b).abs() < 1e-4, "req {} elem {i}: {a} vs {b}", resp.id);
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_budget_collapses_under_rejection() {
+        // satellite: a session whose drafts always miss must converge
+        // its budget to k=1 and stop paying for large verify passes
+        let d = 4;
+        let req = request(0, 1, 64, d, 0, 950);
+        let mut pool = PagePool::new(8, d, 64);
+        let mut s = DecodeSession::new(req, 8);
+        s.set_speculation(Box::new(spec::OracleProposer::new(0.0, 1, 5)), 4, true);
+        while !s.finished() {
+            assert_ne!(s.try_speculate(&mut pool, true), StepOutcome::NoPage);
+        }
+        assert_eq!(s.spec_budget(), 1, "rate-0 drafts must collapse the budget");
+        // a fixed k=4 policy would draft ~4 per generated token; the
+        // collapsed budget pays only the opening passes plus rare probes
+        assert!(s.stats.drafted < 64, "drafted {}", s.stats.drafted);
+    }
+
+    #[test]
+    fn prop_pool_conservation_under_batcher_interleavings() {
+        // satellite: allocs == frees + evictions + in_use after any
+        // interleaving of admit / step / speculate / preempt / retire,
+        // across mixed MHA/GQA/MQA layouts sharing one pool
+        crate::util::prop::check(
+            "pool-conservation-batcher",
+            crate::util::prop::PropConfig { cases: 8, base_seed: 0xBA7C4 },
+            |rng| {
+                let d = 4;
+                let page_size = 4;
+                let max_pages = 12 + rng.range(0, 20) as usize;
+                let spec = if rng.f64() < 0.5 {
+                    SpecPolicy::Oracle {
+                        k: 3,
+                        accept_rate: 0.7,
+                        branch: 2,
+                        seed: rng.next_u64(),
+                    }
+                } else {
+                    SpecPolicy::Off
+                };
+                let mut b = ContinuousBatcher::new(BatcherConfig {
+                    page_size,
+                    d,
+                    max_pages,
+                    max_active: 3,
+                    skip: true,
+                    spec,
+                });
+                let mut next_id = 0u64;
+                let mut submit_random = |b: &mut ContinuousBatcher, rng: &mut Rng| {
+                    let layout = *rng.choose(&[
+                        HeadLayout::mha(2),
+                        HeadLayout::new(4, 2),
+                        HeadLayout::mqa(4),
+                    ]);
+                    let n = 8 + rng.range(0, 24) as usize;
+                    let prompt = rng.range(0, (n / 2) as i64) as usize;
+                    let mask = builders::causal(n);
+                    let q = rand_vec(layout.q_heads * n * d, rng);
+                    let k = rand_vec(layout.kv_heads * n * d, rng);
+                    let v = rand_vec(layout.kv_heads * n * d, rng);
+                    let req = DecodeRequest::with_layout(
+                        next_id, layout, n, d, prompt, q, k, v, mask,
+                    );
+                    next_id += 1;
+                    // oversized requests are rejected at submit — also a
+                    // legal interleaving, the pool must stay conserved
+                    let _ = b.submit(req);
+                };
+                for _ in 0..3 {
+                    submit_random(&mut b, rng);
+                }
+                let mut steps = 0;
+                loop {
+                    let more = b.step().map_err(|e| e.to_string())?;
+                    if !b.pool().conserved() {
+                        return Err("conservation broken mid-run".into());
+                    }
+                    if steps < 20 && rng.f64() < 0.3 {
+                        submit_random(&mut b, rng);
+                    }
+                    steps += 1;
+                    if !more && b.waiting_len() == 0 {
+                        break;
+                    }
+                    if steps > 10_000 {
+                        return Err("batcher failed to terminate".into());
+                    }
+                }
+                if b.pool().in_use() != 0 {
+                    return Err(format!("leaked {} pages", b.pool().in_use()));
+                }
+                if !b.pool().conserved() {
+                    return Err("conservation broken after drain".into());
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

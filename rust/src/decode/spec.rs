@@ -36,17 +36,22 @@ use crate::util::rng::Rng;
 
 const NEG_INF: f32 = f32::NEG_INFINITY;
 
-/// The head-major `[heads * d]` Q/K/V rows of the teacher-forced token
-/// at position `t` — the "truth token" a greedy sampler would emit.
+/// The head-major Q/K/V rows of the teacher-forced token at position
+/// `t` — the "truth token" a greedy sampler would emit.  Q rows are
+/// `[q_heads * d]`, K/V rows are `[kv_heads * d]` (the grouped layout's
+/// shared KV heads).
 pub fn token_rows(req: &DecodeRequest, t: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     debug_assert!(t < req.n);
     let (n, d) = (req.n, req.d);
-    let mut q = Vec::with_capacity(req.heads * d);
-    let mut k = Vec::with_capacity(req.heads * d);
-    let mut v = Vec::with_capacity(req.heads * d);
-    for h in 0..req.heads {
+    let mut q = Vec::with_capacity(req.layout.q_heads * d);
+    let mut k = Vec::with_capacity(req.layout.kv_heads * d);
+    let mut v = Vec::with_capacity(req.layout.kv_heads * d);
+    for h in 0..req.layout.q_heads {
         let base = h * n * d + t * d;
         q.extend_from_slice(&req.q[base..base + d]);
+    }
+    for h in 0..req.layout.kv_heads {
+        let base = h * n * d + t * d;
         k.extend_from_slice(&req.k[base..base + d]);
         v.extend_from_slice(&req.v[base..base + d]);
     }
@@ -54,7 +59,8 @@ pub fn token_rows(req: &DecodeRequest, t: usize) -> (Vec<f32>, Vec<f32>, Vec<f32
 }
 
 /// A proposed draft: a preorder [`TokenTree`] plus, per node, the
-/// head-major `[heads * d]` Q/K/V rows of the proposed token.
+/// head-major Q (`[q_heads * d]`) and K/V (`[kv_heads * d]`) rows of
+/// the proposed token.
 #[derive(Clone, Debug)]
 pub struct DraftTree {
     pub tree: TokenTree,
@@ -187,6 +193,28 @@ impl DraftProposer for OracleProposer {
     }
 }
 
+/// Draft source selector for the adaptive [`SpecPolicy`] variant.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DraftKind {
+    /// N-gram self-drafting (no oracle knowledge).
+    Ngram,
+    /// Teacher-forced oracle drafter (bench/test).
+    Oracle { accept_rate: f64, branch: usize, seed: u64 },
+}
+
+impl DraftKind {
+    fn build(&self, session_id: u64) -> Box<dyn DraftProposer> {
+        match *self {
+            DraftKind::Ngram => Box::new(SelfDraftProposer),
+            DraftKind::Oracle { accept_rate, branch, seed } => Box::new(OracleProposer::new(
+                accept_rate,
+                branch,
+                seed ^ session_id.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            )),
+        }
+    }
+}
+
 /// How a decode session speculates.  `Copy` so it can live in
 /// [`super::session::BatcherConfig`].
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -198,6 +226,11 @@ pub enum SpecPolicy {
     /// Oracle drafter (bench/test): truth continuation with probability
     /// `accept_rate`, `branch` root candidates, deterministic per seed.
     Oracle { k: usize, accept_rate: f64, branch: usize, seed: u64 },
+    /// Dynamic draft budget (ROADMAP "dynamic k"): drafts come from
+    /// `draft`, but the per-pass budget follows a rolling window of
+    /// acceptance ([`SpecBudget`]), shrinking toward 1 when drafts keep
+    /// missing and growing back toward `k_max` when they land.
+    Adaptive { k_max: usize, draft: DraftKind },
 }
 
 impl Default for SpecPolicy {
@@ -207,13 +240,19 @@ impl Default for SpecPolicy {
 }
 
 impl SpecPolicy {
-    /// Draft budget; `<= 1` means speculation is a no-op.
+    /// Draft budget ceiling; `<= 1` means speculation is a no-op.
     pub fn k(&self) -> usize {
         match self {
             SpecPolicy::Off => 0,
             SpecPolicy::SelfDraft { k } => *k,
             SpecPolicy::Oracle { k, .. } => *k,
+            SpecPolicy::Adaptive { k_max, .. } => *k_max,
         }
+    }
+
+    /// Does the budget adapt to observed acceptance?
+    pub fn adaptive(&self) -> bool {
+        matches!(self, SpecPolicy::Adaptive { .. })
     }
 
     /// Instantiate the per-session proposer (`None` when off or the
@@ -225,14 +264,98 @@ impl SpecPolicy {
         }
         match *self {
             SpecPolicy::Off => None,
-            SpecPolicy::SelfDraft { .. } => Some(Box::new(SelfDraftProposer)),
+            SpecPolicy::SelfDraft { .. } => Some(DraftKind::Ngram.build(session_id)),
             SpecPolicy::Oracle { accept_rate, branch, seed, .. } => {
-                Some(Box::new(OracleProposer::new(
-                    accept_rate,
-                    branch,
-                    seed ^ session_id.wrapping_mul(0x9E37_79B9_7F4A_7C15),
-                )))
+                Some(DraftKind::Oracle { accept_rate, branch, seed }.build(session_id))
             }
+            SpecPolicy::Adaptive { draft, .. } => Some(draft.build(session_id)),
+        }
+    }
+}
+
+/// Rolling-window controller for the speculative draft budget — the
+/// ROADMAP "dynamic k" follow-up.  Each verify pass reports how much of
+/// its budget the greedy acceptor committed; the next pass's budget
+/// tracks the windowed acceptance rate, shrinking toward 1 (sequential
+/// decode, no verify passes paid for) when drafts keep missing and
+/// growing back toward `k_max` when they land.  Once collapsed to 1 the
+/// controller re-probes with a 2-token draft every
+/// [`SpecBudget::PROBE_EVERY`] sequential steps, so a burst of misses
+/// cannot disable speculation forever.
+#[derive(Clone, Debug)]
+pub struct SpecBudget {
+    k_max: usize,
+    adaptive: bool,
+    /// Per-pass accepted/budget rates, most recent last.
+    window: std::collections::VecDeque<f64>,
+    k: usize,
+    dry_steps: u32,
+}
+
+impl SpecBudget {
+    /// Verify passes remembered by the rolling acceptance window.
+    pub const WINDOW: usize = 8;
+    /// Sequential steps between 2-token probes once collapsed to k=1.
+    pub const PROBE_EVERY: u32 = 32;
+
+    /// Fixed budget: `record`/`note_sequential` are no-ops.
+    pub fn fixed(k: usize) -> SpecBudget {
+        SpecBudget {
+            k_max: k,
+            adaptive: false,
+            window: std::collections::VecDeque::new(),
+            k,
+            dry_steps: 0,
+        }
+    }
+
+    /// Adaptive budget starting (optimistically) at `k_max`.
+    pub fn adaptive(k_max: usize) -> SpecBudget {
+        SpecBudget { adaptive: true, ..SpecBudget::fixed(k_max) }
+    }
+
+    /// Draft budget for the next verify pass.
+    pub fn current(&self) -> usize {
+        self.k
+    }
+
+    pub fn k_max(&self) -> usize {
+        self.k_max
+    }
+
+    /// Record one verify pass: `accepted` of `budget` drafted-path
+    /// tokens committed.  The budget moves one step per pass toward the
+    /// window's target, so a single outlier pass cannot swing it end to
+    /// end.
+    pub fn record(&mut self, accepted: usize, budget: usize) {
+        self.dry_steps = 0;
+        if !self.adaptive || budget == 0 {
+            return;
+        }
+        let rate = accepted.min(budget) as f64 / budget as f64;
+        self.window.push_back(rate);
+        if self.window.len() > Self::WINDOW {
+            self.window.pop_front();
+        }
+        let mean = self.window.iter().sum::<f64>() / self.window.len() as f64;
+        let target = (1 + ((self.k_max - 1) as f64 * mean).round() as usize).clamp(1, self.k_max);
+        self.k = match self.k.cmp(&target) {
+            std::cmp::Ordering::Less => self.k + 1,
+            std::cmp::Ordering::Greater => self.k - 1,
+            std::cmp::Ordering::Equal => self.k,
+        };
+    }
+
+    /// Record one sequential (non-speculative) step; once the budget has
+    /// collapsed to 1 this drives the periodic re-probe.
+    pub fn note_sequential(&mut self) {
+        if !self.adaptive || self.k > 1 {
+            return;
+        }
+        self.dry_steps += 1;
+        if self.dry_steps >= Self::PROBE_EVERY {
+            self.dry_steps = 0;
+            self.k = 2.min(self.k_max);
         }
     }
 }
@@ -263,19 +386,8 @@ pub fn spec_visible(
 }
 
 /// Score all `k` drafted rows of one head in a single pass over the
-/// cache pages.  `cache` must already hold the `t0` committed rows plus
-/// the `tree.len()` drafted K/V rows.  Returns the node-major
-/// `[tree.len() * d]` output rows.
-///
-/// Page skipping is two-tiered, both through the Eq. 4 classifier:
-/// fully-committed pages classify against the *base* mask at the
-/// node's logical row (so sliding-window/document/eviction skips carry
-/// over from sequential decode unchanged); pages touching the draft
-/// region classify against the *tree* mask (non-ancestor subtrees and
-/// causal-future pages are skipped), degraded to element-wise checking
-/// when visible, because the tree view cannot see the base mask's
-/// row-dependent constraints at drafted columns.  `skip=false` is the
-/// dense baseline that visits and element-masks every page.
+/// cache pages.  Single-query-head convenience over
+/// [`verify_rows_group`] — the MHA case.
 #[allow(clippy::too_many_arguments)]
 pub fn verify_rows(
     q_rows: &[f32],
@@ -292,21 +404,66 @@ pub fn verify_rows(
     stats: &mut DecodeStats,
     scratch: &mut Vec<f32>,
 ) -> Vec<f32> {
+    verify_rows_group(
+        q_rows, 1, cache, pool, base, base_view, tree, tree_mask, tree_view, t0, scale, skip,
+        stats, scratch,
+    )
+}
+
+/// Score all drafted rows of a whole query *group* sharing one KV
+/// head's cache (GQA) in a single pass over the cache pages.  `q_rows`
+/// is `[group, tree.len(), d]` (query-head-major); `cache` must already
+/// hold the `t0` committed rows plus the `tree.len()` drafted K/V rows.
+/// Returns the `[group, tree.len(), d]` output rows in the same order.
+///
+/// Page skipping is two-tiered, both through the Eq. 4 classifier:
+/// fully-committed pages classify against the *base* mask at the
+/// node's logical row (so sliding-window/document/eviction skips carry
+/// over from sequential decode unchanged); pages touching the draft
+/// region classify against the *tree* mask (non-ancestor subtrees and
+/// causal-future pages are skipped), degraded to element-wise checking
+/// when visible, because the tree view cannot see the base mask's
+/// row-dependent constraints at drafted columns.  Classification *and*
+/// the element-wise visibility tests are per-KV-column decisions, so
+/// they run once per node and are reused by every query head in the
+/// group — `pages_total` / `pages_skipped` / `mask_evals` count KV-head
+/// work and shrink by the group factor, while per-query-row MACs are
+/// unchanged.  `skip=false` is the dense baseline that visits and
+/// element-masks every page.
+#[allow(clippy::too_many_arguments)]
+pub fn verify_rows_group(
+    q_rows: &[f32],
+    group: usize,
+    cache: &PagedKv,
+    pool: &PagePool,
+    base: &FlashMask,
+    base_view: &IncrementalMaskView,
+    tree: &TokenTree,
+    tree_mask: &FlashMask,
+    tree_view: &IncrementalMaskView,
+    t0: usize,
+    scale: f32,
+    skip: bool,
+    stats: &mut DecodeStats,
+    scratch: &mut Vec<f32>,
+) -> Vec<f32> {
     let d = pool.d();
     let ps = pool.page_size();
     let kd = tree.len();
-    debug_assert_eq!(q_rows.len(), kd * d);
+    debug_assert!(group >= 1);
+    debug_assert_eq!(q_rows.len(), group * kd * d);
     debug_assert_eq!(cache.len(), t0 + kd, "append draft K/V before verifying");
     debug_assert_eq!(base_view.page_size(), ps);
     debug_assert_eq!(tree_view.page_size(), ps);
     debug_assert_eq!(tree_mask.n(), t0 + kd);
 
-    let mut o = vec![0f32; kd * d];
-    let mut m_run = vec![NEG_INF; kd];
-    let mut l_run = vec![0f32; kd];
-    // per-node score rows for the current page: s[i*ps + c]
-    if scratch.len() < kd * ps {
-        scratch.resize(kd * ps, 0.0);
+    let mut o = vec![0f32; group * kd * d];
+    let mut m_run = vec![NEG_INF; group * kd];
+    let mut l_run = vec![0f32; group * kd];
+    // per-(head, node) score rows for the current page:
+    // s[(g*kd + i)*ps + c]
+    if scratch.len() < group * kd * ps {
+        scratch.resize(group * kd * ps, 0.0);
     }
     let s = scratch;
     let mut class = vec![BlockClass::FullyMasked; kd];
@@ -319,7 +476,7 @@ pub fn verify_rows(
         let committed_page = col0 + ps <= t0;
         active.clear();
         for (i, ci) in class.iter_mut().enumerate() {
-            stats.pages_total += 1;
+            stats.pages_total += 1; // once per KV head, not per query head
             *ci = if !skip {
                 BlockClass::PartiallyMasked
             } else if committed_page {
@@ -345,30 +502,37 @@ pub fn verify_rows(
         let kp = pool.page_k(cache.page_id(p));
         let vp = pool.page_v(cache.page_id(p));
 
-        // s_i = q_i · K_pᵀ * scale for every surviving row, column-outer
-        // so each loaded K row is reused across all draft rows (the
-        // multi-row batching win: one pass over page memory, k dot
-        // products of independent ILP per K row)
+        // s_{g,i} = q_{g,i} · K_pᵀ * scale for every surviving node,
+        // column-outer so each loaded K row is reused across all draft
+        // rows of all query heads in the group (the multi-row batching
+        // win: one pass over page memory, group*k dot products of
+        // independent ILP per K row)
         for c in 0..cols {
             let krow = &kp[c * d..(c + 1) * d];
             for &i in &active {
-                let q_row = &q_rows[i * d..(i + 1) * d];
-                let mut acc = 0f32;
-                for dd in 0..d {
-                    acc += q_row[dd] * krow[dd];
+                for g in 0..group {
+                    let row = g * kd + i;
+                    let q_row = &q_rows[row * d..(row + 1) * d];
+                    let mut acc = 0f32;
+                    for dd in 0..d {
+                        acc += q_row[dd] * krow[dd];
+                    }
+                    s[row * ps + c] = acc * scale;
                 }
-                s[i * ps + c] = acc * scale;
             }
         }
-        stats.macs += (active.len() * cols * d) as u64;
+        stats.macs += (group * active.len() * cols * d) as u64;
 
-        // per-node masking + online softmax (Alg. 1 lines 25-26, Br = 1)
+        // per-node masking + online softmax (Alg. 1 lines 25-26, Br = 1);
+        // visibility is a per-column property, evaluated once per node
+        // and applied to every query head in the group
         for &i in &active {
-            let si = &mut s[i * ps..i * ps + cols];
             if class[i] == BlockClass::PartiallyMasked {
-                for (c, sv) in si.iter_mut().enumerate() {
+                for c in 0..cols {
                     if !spec_visible(base, tree, t0, i, col0 + c) {
-                        *sv = NEG_INF;
+                        for g in 0..group {
+                            s[(g * kd + i) * ps + c] = NEG_INF;
+                        }
                     }
                 }
                 stats.mask_evals += cols as u64;
@@ -377,36 +541,40 @@ pub fn verify_rows(
                 stats.pages_unmasked += 1;
             }
 
-            let mut page_max = NEG_INF;
-            for &sv in si.iter() {
-                page_max = page_max.max(sv);
-            }
-            let m_new = m_run[i].max(page_max);
-            let m_safe = if m_new.is_finite() { m_new } else { 0.0 };
-            let a = if m_run[i].is_finite() { (m_run[i] - m_safe).exp() } else { 0.0 };
-            let o_row = &mut o[i * d..(i + 1) * d];
-            for ov in o_row.iter_mut() {
-                *ov *= a;
-            }
-            let mut page_sum = 0f32;
-            for (c, &sv) in si.iter().enumerate() {
-                let pexp = (sv - m_safe).exp(); // exp(-inf) == 0 for masked
-                page_sum += pexp;
-                for dd in 0..d {
-                    o_row[dd] += pexp * vp[c * d + dd];
+            for g in 0..group {
+                let row = g * kd + i;
+                let si = &s[row * ps..row * ps + cols];
+                let mut page_max = NEG_INF;
+                for &sv in si.iter() {
+                    page_max = page_max.max(sv);
                 }
+                let m_new = m_run[row].max(page_max);
+                let m_safe = if m_new.is_finite() { m_new } else { 0.0 };
+                let a = if m_run[row].is_finite() { (m_run[row] - m_safe).exp() } else { 0.0 };
+                let o_row = &mut o[row * d..(row + 1) * d];
+                for ov in o_row.iter_mut() {
+                    *ov *= a;
+                }
+                let mut page_sum = 0f32;
+                for (c, &sv) in si.iter().enumerate() {
+                    let pexp = (sv - m_safe).exp(); // exp(-inf) == 0 for masked
+                    page_sum += pexp;
+                    for dd in 0..d {
+                        o_row[dd] += pexp * vp[c * d + dd];
+                    }
+                }
+                stats.macs += (cols * d) as u64;
+                l_run[row] = a * l_run[row] + page_sum;
+                m_run[row] = m_new;
             }
-            stats.macs += (cols * d) as u64;
-            l_run[i] = a * l_run[i] + page_sum;
-            m_run[i] = m_new;
         }
     }
 
-    stats.steps += kd as u64;
-    for i in 0..kd {
-        if l_run[i] > 0.0 {
-            let inv = 1.0 / l_run[i];
-            for ov in o[i * d..(i + 1) * d].iter_mut() {
+    stats.steps += (group * kd) as u64; // kernel rows evaluated
+    for row in 0..group * kd {
+        if l_run[row] > 0.0 {
+            let inv = 1.0 / l_run[row];
+            for ov in o[row * d..(row + 1) * d].iter_mut() {
                 *ov *= inv;
             }
         } // fully-masked row stays 0, like the sequential kernel
@@ -693,6 +861,50 @@ mod tests {
         // and with no history at all
         assert!(p.propose(&req, 0, 4).is_none());
         assert!(p.propose(&req, 1, 4).is_none());
+    }
+
+    #[test]
+    fn adaptive_budget_converges_to_one_on_rejection() {
+        // satellite: low acceptance must converge the draft budget to 1
+        let mut b = SpecBudget::adaptive(4);
+        assert_eq!(b.current(), 4);
+        for _ in 0..16 {
+            let k = b.current();
+            b.record(0, k);
+        }
+        assert_eq!(b.current(), 1, "rejected drafts must collapse the budget");
+        // collapsed budget re-probes after PROBE_EVERY sequential steps
+        for _ in 0..SpecBudget::PROBE_EVERY {
+            b.note_sequential();
+        }
+        assert_eq!(b.current(), 2, "probe must reopen a 2-token draft");
+        // and sustained acceptance grows it back to k_max
+        for _ in 0..32 {
+            let k = b.current();
+            b.record(k, k);
+        }
+        assert_eq!(b.current(), 4, "full acceptance must restore k_max");
+    }
+
+    #[test]
+    fn fixed_budget_ignores_the_window() {
+        let mut f = SpecBudget::fixed(4);
+        for _ in 0..8 {
+            f.record(0, 4);
+            f.note_sequential();
+        }
+        assert_eq!(f.current(), 4);
+    }
+
+    #[test]
+    fn adaptive_policy_surfaces_k_and_flag() {
+        let p = SpecPolicy::Adaptive { k_max: 4, draft: DraftKind::Ngram };
+        assert_eq!(p.k(), 4);
+        assert!(p.adaptive());
+        assert!(p.build(7).is_some());
+        assert!(!SpecPolicy::SelfDraft { k: 4 }.adaptive());
+        // degenerate ceiling: speculation is a no-op
+        assert!(SpecPolicy::Adaptive { k_max: 1, draft: DraftKind::Ngram }.build(7).is_none());
     }
 
     #[test]

@@ -94,13 +94,8 @@ impl DecodeStats {
 /// Attention for decode row `t` (already appended: `cache.len() == t+1`)
 /// over one head's paged cache.  Returns the `[d]` output row.
 ///
-/// `scratch` is a caller-owned score buffer (grown to `page_size` on
-/// first use) so the per-token hot loop performs no allocation beyond
-/// the returned row.
-///
-/// `skip=false` is the dense-cache baseline: every page is visited and
-/// element-masked, the behaviour of a decoder that keeps no mask
-/// structure — the comparison `bench_decode` measures.
+/// Single-query-head convenience over [`decode_step_group`] — the MHA
+/// case, where every query head owns its KV head.
 #[allow(clippy::too_many_arguments)]
 pub fn decode_step(
     q_row: &[f32],
@@ -114,22 +109,64 @@ pub fn decode_step(
     stats: &mut DecodeStats,
     scratch: &mut Vec<f32>,
 ) -> Vec<f32> {
+    decode_step_group(q_row, 1, cache, pool, mask, view, t, scale, skip, stats, scratch)
+}
+
+/// Attention for decode row `t` for a whole query *group* sharing one
+/// KV head's paged cache (GQA).  `q_rows` is `[group, d]`; returns the
+/// `[group, d]` output rows in query-head order.
+///
+/// The Eq. 4 page classification and the per-column interval test run
+/// **once per page** and are reused by every query row in the group —
+/// the skip decision is a property of the KV columns alone (§4.1), so
+/// `pages_total` / `pages_skipped` / `mask_evals` count KV-head work:
+/// at group size `g` the classification cost and the skip-stat
+/// denominators drop by `g` while per-query-row MACs are unchanged.
+/// Each loaded K/V row also serves all `g` dot products, so cache
+/// memory traffic (the decode bottleneck) drops by `g` too.
+///
+/// `scratch` is a caller-owned buffer holding the score rows and the
+/// per-row softmax state (grown to `group * (page_size + 2)` on first
+/// use) so the per-token hot loop performs no allocation beyond the
+/// returned rows.
+///
+/// `skip=false` is the dense-cache baseline: every page is visited and
+/// element-masked, the behaviour of a decoder that keeps no mask
+/// structure — the comparison `bench_decode` measures.
+#[allow(clippy::too_many_arguments)]
+pub fn decode_step_group(
+    q_rows: &[f32],
+    group: usize,
+    cache: &PagedKv,
+    pool: &PagePool,
+    mask: &FlashMask,
+    view: &IncrementalMaskView,
+    t: usize,
+    scale: f32,
+    skip: bool,
+    stats: &mut DecodeStats,
+    scratch: &mut Vec<f32>,
+) -> Vec<f32> {
     let d = pool.d();
     let ps = pool.page_size();
-    debug_assert_eq!(q_row.len(), d);
+    debug_assert!(group >= 1);
+    debug_assert_eq!(q_rows.len(), group * d);
     debug_assert_eq!(view.page_size(), ps);
     debug_assert_eq!(cache.len(), t + 1, "append the row's K/V before stepping");
 
-    let mut o = vec![0f32; d];
-    let mut m_run = NEG_INF;
-    let mut l_run = 0f32;
-    if scratch.len() < ps {
-        scratch.resize(ps, 0.0);
+    let mut o = vec![0f32; group * d];
+    // scratch carries the score rows plus the per-row softmax state, so
+    // the only per-token allocation is the returned rows
+    if scratch.len() < group * (ps + 2) {
+        scratch.resize(group * (ps + 2), 0.0);
     }
-    let s = scratch;
+    let (s, run) = scratch.split_at_mut(group * ps);
+    let (m_run, l_run) = run.split_at_mut(group);
+    m_run[..group].fill(NEG_INF);
+    l_run[..group].fill(0.0);
 
     for p in 0..cache.n_pages() {
-        stats.pages_total += 1;
+        stats.pages_total += 1; // once per KV head, not per query head
         let class = if skip {
             view.classify_page(mask, t, p)
         } else {
@@ -143,20 +180,28 @@ pub fn decode_step(
         let col0 = p * ps;
         let kp = pool.page_k(cache.page_id(p));
 
-        // s = q · K_pᵀ * scale
-        for (c, sv) in s[..cols].iter_mut().enumerate() {
-            let mut acc = 0f32;
-            for dd in 0..d {
-                acc += q_row[dd] * kp[c * d + dd];
+        // s_g = q_g · K_pᵀ * scale, column-outer so each loaded K row
+        // serves the whole query group
+        for c in 0..cols {
+            let krow = &kp[c * d..(c + 1) * d];
+            for g in 0..group {
+                let q_row = &q_rows[g * d..(g + 1) * d];
+                let mut acc = 0f32;
+                for dd in 0..d {
+                    acc += q_row[dd] * krow[dd];
+                }
+                s[g * ps + c] = acc * scale;
             }
-            *sv = acc * scale;
         }
-        stats.macs += (cols * d) as u64;
+        stats.macs += (group * cols * d) as u64;
 
         if class == BlockClass::PartiallyMasked {
-            for (c, sv) in s[..cols].iter_mut().enumerate() {
+            // one interval test per column, applied to every group row
+            for c in 0..cols {
                 if !view.visible(mask, t, col0 + c) {
-                    *sv = NEG_INF;
+                    for g in 0..group {
+                        s[g * ps + c] = NEG_INF;
+                    }
                 }
             }
             stats.mask_evals += cols as u64;
@@ -165,38 +210,45 @@ pub fn decode_step(
             stats.pages_unmasked += 1;
         }
 
-        // online softmax update (Alg. 1 lines 25-26 with Br = 1)
-        let mut page_max = NEG_INF;
-        for &sv in &s[..cols] {
-            page_max = page_max.max(sv);
-        }
-        let m_new = m_run.max(page_max);
-        let m_safe = if m_new.is_finite() { m_new } else { 0.0 };
-        let a = if m_run.is_finite() { (m_run - m_safe).exp() } else { 0.0 };
-        for ov in o.iter_mut() {
-            *ov *= a;
-        }
+        // online softmax update (Alg. 1 lines 25-26 with Br = 1),
+        // independently per query row
         let vp = pool.page_v(cache.page_id(p));
-        let mut page_sum = 0f32;
-        for c in 0..cols {
-            let pexp = (s[c] - m_safe).exp(); // exp(-inf) == 0 for masked
-            page_sum += pexp;
-            for dd in 0..d {
-                o[dd] += pexp * vp[c * d + dd];
+        for g in 0..group {
+            let sg = &s[g * ps..g * ps + cols];
+            let mut page_max = NEG_INF;
+            for &sv in sg {
+                page_max = page_max.max(sv);
             }
+            let m_new = m_run[g].max(page_max);
+            let m_safe = if m_new.is_finite() { m_new } else { 0.0 };
+            let a = if m_run[g].is_finite() { (m_run[g] - m_safe).exp() } else { 0.0 };
+            let o_row = &mut o[g * d..(g + 1) * d];
+            for ov in o_row.iter_mut() {
+                *ov *= a;
+            }
+            let mut page_sum = 0f32;
+            for (c, &sv) in sg.iter().enumerate() {
+                let pexp = (sv - m_safe).exp(); // exp(-inf) == 0 for masked
+                page_sum += pexp;
+                for dd in 0..d {
+                    o_row[dd] += pexp * vp[c * d + dd];
+                }
+            }
+            l_run[g] = a * l_run[g] + page_sum;
+            m_run[g] = m_new;
         }
-        stats.macs += (cols * d) as u64;
-        l_run = a * l_run + page_sum;
-        m_run = m_new;
+        stats.macs += (group * cols * d) as u64;
     }
 
-    stats.steps += 1;
-    if l_run > 0.0 {
-        let inv = 1.0 / l_run;
-        for ov in o.iter_mut() {
-            *ov *= inv;
-        }
-    } // fully-masked row: output stays 0, like the prefill kernel
+    stats.steps += group as u64; // kernel rows evaluated
+    for g in 0..group {
+        if l_run[g] > 0.0 {
+            let inv = 1.0 / l_run[g];
+            for ov in o[g * d..(g + 1) * d].iter_mut() {
+                *ov *= inv;
+            }
+        } // fully-masked row: output stays 0, like the prefill kernel
+    }
     o
 }
 
@@ -319,6 +371,61 @@ mod tests {
             assert!(out[t * d..(t + 1) * d].iter().all(|&x| x == 0.0), "row {t} not zero");
         }
         assert!(out[9 * d..10 * d].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn grouped_step_matches_per_row_bitwise() {
+        // a query group over one shared KV cache must equal `group`
+        // separate single-row steps bitwise, while the page census is
+        // charged once (per KV head) instead of once per query row
+        let (n, d, ps, group) = (48, 4, 8, 3);
+        let mut rng = Rng::new(15);
+        let q = rand_vec(group * n * d, &mut rng); // [group, n, d]
+        let k = rand_vec(n * d, &mut rng);
+        let v = rand_vec(n * d, &mut rng);
+        let mask = builders::sliding_window(n, 10);
+        let view = IncrementalMaskView::new(&mask, ps);
+        let mut pool = PagePool::new(ps, d, n.div_ceil(ps) + 1);
+        let mut cache = PagedKv::new();
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut g_stats = DecodeStats::default();
+        let mut r_stats = DecodeStats::default();
+        let mut scratch = Vec::new();
+        for t in 0..n {
+            assert!(cache.append(&mut pool, &k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]));
+            let mut q_rows = Vec::with_capacity(group * d);
+            for g in 0..group {
+                let base = g * n * d + t * d;
+                q_rows.extend_from_slice(&q[base..base + d]);
+            }
+            let got = decode_step_group(
+                &q_rows, group, &cache, &pool, &mask, &view, t, scale, true, &mut g_stats,
+                &mut scratch,
+            );
+            for g in 0..group {
+                let want = decode_step(
+                    &q_rows[g * d..(g + 1) * d],
+                    &cache,
+                    &pool,
+                    &mask,
+                    &view,
+                    t,
+                    scale,
+                    true,
+                    &mut r_stats,
+                    &mut scratch,
+                );
+                assert_eq!(&got[g * d..(g + 1) * d], &want[..], "t={t} g={g}");
+            }
+        }
+        // per-KV-head accounting: the group visits each page once where
+        // the per-row loop visits it `group` times; compute is unchanged
+        assert_eq!(g_stats.pages_total * group as u64, r_stats.pages_total);
+        assert_eq!(g_stats.pages_skipped * group as u64, r_stats.pages_skipped);
+        assert_eq!(g_stats.mask_evals * group as u64, r_stats.mask_evals);
+        assert_eq!(g_stats.macs, r_stats.macs);
+        assert_eq!(g_stats.steps, r_stats.steps); // rows evaluated
+        assert!(g_stats.pages_skipped > 0, "window mask should skip pages");
     }
 
     #[test]

@@ -14,6 +14,7 @@
 //! flashmask gen-data --task dpo           # inspect synthetic samples
 //! flashmask decode --requests 8           # paged-KV continuous batching
 //! flashmask decode --speculate 4          # + tree-mask speculative decode
+//! flashmask decode --heads 8 --kv-heads 2 # GQA: group-shared KV pages
 //! ```
 
 use anyhow::{anyhow, Result};
@@ -86,13 +87,19 @@ subcommands:
   decode           autoregressive decode serving: paged KV cache +
                    continuous batching (--requests R --n N --d D
                    --heads H --page P --max-pages M --seed S --dense)
+                   head layout: --kv-heads K shares each KV head across
+                   a group of H/K query heads (GQA; K=1 is MQA) — KV
+                   pages, pool pressure and page classification all
+                   scale with K instead of H
                    speculative decoding: --speculate K drafts and
                    verifies up to K tokens per step through a tree
                    FlashMask (greedy-exact: identical tokens to
                    sequential decode); --draft ngram|oracle picks the
                    proposer (default ngram = n-gram self-drafting;
                    oracle replays the teacher-forced continuation with
-                   --accept-rate A, default 1.0, for throughput studies)
+                   --accept-rate A, default 1.0, for throughput studies);
+                   --adaptive shrinks/grows the draft budget from a
+                   rolling acceptance window (dynamic k)
 common: --artifacts DIR (default ./artifacts)";
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -192,7 +199,7 @@ fn cmd_convergence(args: &Args) -> Result<()> {
 }
 
 fn cmd_decode(args: &Args) -> Result<()> {
-    use flashmask::decode::{BatcherConfig, SpecPolicy};
+    use flashmask::decode::{BatcherConfig, DraftKind, HeadLayout, SpecPolicy};
     use flashmask::mask::builders;
     use flashmask::server::{EngineKind, Request, RequestQueue, Scheduler, SchedulerConfig, ServeEngine};
     use flashmask::util::rng::Rng;
@@ -201,27 +208,44 @@ fn cmd_decode(args: &Args) -> Result<()> {
     let n = args.get_usize("n", 512).map_err(|e| anyhow!(e))?;
     let d = args.get_usize("d", 32).map_err(|e| anyhow!(e))?;
     let heads = args.get_usize("heads", 2).map_err(|e| anyhow!(e))?;
+    let kv_heads = args.get_usize("kv-heads", heads).map_err(|e| anyhow!(e))?;
     let page = args.get_usize("page", 16).map_err(|e| anyhow!(e))?;
     let max_pages = args.get_usize("max-pages", 4096).map_err(|e| anyhow!(e))?;
     let skip = !args.flag("dense");
     let seed = args.get_u64("seed", 7).map_err(|e| anyhow!(e))?;
     let spec_k = args.get_usize("speculate", 0).map_err(|e| anyhow!(e))?;
+    let adaptive = args.flag("adaptive");
     let draft = args.get_or("draft", "ngram");
     let accept_rate = args.get_f64("accept-rate", 1.0).map_err(|e| anyhow!(e))?;
     anyhow::ensure!(n >= 2, "--n must be >= 2 (got {n})");
     anyhow::ensure!(page >= 1, "--page must be >= 1");
     anyhow::ensure!(d >= 1 && heads >= 1, "--d and --heads must be >= 1");
     anyhow::ensure!(
+        kv_heads >= 1 && heads % kv_heads == 0,
+        "--kv-heads must divide --heads ({heads} % {kv_heads} != 0)"
+    );
+    anyhow::ensure!(
         (0.0..=1.0).contains(&accept_rate),
         "--accept-rate must be in [0, 1] (got {accept_rate})"
     );
+    let layout = HeadLayout::new(heads, kv_heads);
     let spec = if spec_k <= 1 {
         SpecPolicy::Off
     } else {
-        match draft.as_str() {
-            "ngram" | "self" => SpecPolicy::SelfDraft { k: spec_k },
-            "oracle" => SpecPolicy::Oracle { k: spec_k, accept_rate, branch: 2, seed },
+        let kind = match draft.as_str() {
+            "ngram" | "self" => DraftKind::Ngram,
+            "oracle" => DraftKind::Oracle { accept_rate, branch: 2, seed },
             other => anyhow::bail!("--draft must be ngram|oracle (got '{other}')"),
+        };
+        if adaptive {
+            SpecPolicy::Adaptive { k_max: spec_k, draft: kind }
+        } else {
+            match kind {
+                DraftKind::Ngram => SpecPolicy::SelfDraft { k: spec_k },
+                DraftKind::Oracle { .. } => {
+                    SpecPolicy::Oracle { k: spec_k, accept_rate, branch: 2, seed }
+                }
+            }
         }
     };
 
@@ -236,10 +260,17 @@ fn cmd_decode(args: &Args) -> Result<()> {
             2 => builders::causal_document(ni, &[ni / 2, ni - ni / 2]),
             _ => builders::random_eviction(ni, &mut rng),
         };
-        let mut mk = || (0..heads * ni * d).map(|_| rng.normal_f32() * 0.5).collect::<Vec<f32>>();
-        queue.push(Request::new(0, heads, ni, d, mk(), mk(), mk(), mask))?;
+        let mut mk =
+            |hh: usize| (0..hh * ni * d).map(|_| rng.normal_f32() * 0.5).collect::<Vec<f32>>();
+        let q = mk(layout.q_heads);
+        let k = mk(layout.kv_heads);
+        let v = mk(layout.kv_heads);
+        queue.push(Request::with_layout(0, layout, ni, d, q, k, v, mask))?;
     }
-    println!("queued {n_requests} decode requests (ragged n up to {n}, {heads} heads, d={d})");
+    println!(
+        "queued {n_requests} decode requests (ragged n up to {n}, layout {layout}, group {}, d={d})",
+        layout.group()
+    );
 
     let scheduler = Scheduler::new(SchedulerConfig::default());
     let reqs = scheduler.drain_for_decode(&mut queue, n_requests);
@@ -261,9 +292,16 @@ fn cmd_decode(args: &Args) -> Result<()> {
     println!("pages skipped : {:.1}%", report.pages_skip_fraction * 100.0);
     println!("preemptions   : {} ({} pages evicted)", report.preemptions, report.evicted_pages);
     println!("peak pool use : {} pages", report.peak_pages);
+    println!(
+        "resident KV   : {:.1} KiB peak ({:.2} pages/token; {} chains per sequence)",
+        report.resident_kv_bytes as f64 / 1024.0,
+        report.pages_per_token,
+        layout.kv_heads
+    );
     if spec_k > 1 {
         println!(
-            "speculation   : --draft {draft} k={spec_k}: {} drafted, {} accepted ({:.1}%), {} fallback steps",
+            "speculation   : --draft {draft} k={spec_k}{}: {} drafted, {} accepted ({:.1}%), {} fallback steps",
+            if adaptive { " (adaptive)" } else { "" },
             report.drafted_tokens,
             report.accepted_tokens,
             report.accept_rate() * 100.0,

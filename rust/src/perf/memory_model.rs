@@ -12,6 +12,8 @@
 //!   (80 ≈ attention+MLP intermediates of one recomputed layer)
 //! * dense mask: `N² * 2` bytes; FLASHMASK: `16 N` (+ 8 min/max vecs).
 
+use crate::attention::HeadLayout;
+
 const GB: f64 = 1024.0 * 1024.0 * 1024.0;
 
 /// Llama-2 model family geometry.
@@ -54,6 +56,28 @@ pub fn dense_mask_bytes(n: usize) -> f64 {
 
 pub fn flashmask_bytes(n: usize, bc: usize) -> f64 {
     (4 * n * 4) as f64 + (8 * n.div_ceil(bc) * 4) as f64
+}
+
+/// Decode-time KV-cache residency for one sequence, bytes: K and V
+/// planes of `kv_heads · n · d` elements each.  The grouped-layout
+/// lever the serving stack exploits: residency scales with
+/// `layout.kv_heads`, not `layout.q_heads`, so a group-8 GQA model
+/// admits ~8× more concurrent sequences from the same page pool.
+pub fn kv_cache_bytes(layout: HeadLayout, n: usize, d: usize, bytes_per_el: usize) -> f64 {
+    (2 * layout.kv_heads * n * d * bytes_per_el) as f64
+}
+
+/// Paged variant of [`kv_cache_bytes`]: residency rounds up to whole
+/// pages per KV-head chain (the pool allocates in page granules).
+pub fn kv_cache_bytes_paged(
+    layout: HeadLayout,
+    n: usize,
+    d: usize,
+    bytes_per_el: usize,
+    page_size: usize,
+) -> f64 {
+    let pages = layout.kv_heads * n.div_ceil(page_size);
+    (2 * pages * page_size * d * bytes_per_el) as f64
 }
 
 /// Per-GPU memory breakdown, GB.
@@ -185,6 +209,24 @@ mod tests {
         // paper: dense methods stall around 64K on the 7B config
         assert!((32768..=131072).contains(&m_dm), "dense max {m_dm}");
         assert!(m_fm >= 262144, "flashmask max {m_fm}");
+    }
+
+    #[test]
+    fn kv_cache_scales_with_kv_heads_not_q_heads() {
+        let (n, d) = (8192, 128);
+        let mha = kv_cache_bytes(HeadLayout::mha(32), n, d, 2);
+        let gqa = kv_cache_bytes(HeadLayout::new(32, 4), n, d, 2);
+        let mqa = kv_cache_bytes(HeadLayout::mqa(32), n, d, 2);
+        assert!((mha / gqa - 8.0).abs() < 1e-9, "group-8 must cut residency 8x");
+        assert!((mha / mqa - 32.0).abs() < 1e-9, "MQA must cut residency q_heads-x");
+        // anchor: 32 KV heads, 8K tokens, d=128, bf16 => 2*32*8192*128*2 B = 128 MiB
+        assert_eq!(mha, 2.0 * 32.0 * 8192.0 * 128.0 * 2.0);
+        // paged residency never undercounts the exact bytes and agrees
+        // when n is page-aligned
+        let paged = kv_cache_bytes_paged(HeadLayout::new(32, 4), n, d, 2, 16);
+        assert_eq!(paged, gqa, "page-aligned n must match exact bytes");
+        let ragged = kv_cache_bytes_paged(HeadLayout::new(32, 4), n + 1, d, 2, 16);
+        assert!(ragged > gqa && ragged < gqa + (2 * 4 * 16 * d * 2) as f64 + 1.0);
     }
 
     #[test]

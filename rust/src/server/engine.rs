@@ -66,12 +66,30 @@ impl ServeEngine {
             EngineKind::Pjrt(exe) => {
                 for req in plan.requests {
                     let t0 = Instant::now();
-                    let shape4 = vec![1, req.heads, req.n, req.d];
+                    let shape4 = vec![1, req.layout.q_heads, req.n, req.d];
+                    // the AOT artifact is compiled for an MHA signature:
+                    // expand grouped K/V by replicating each KV head
+                    // across its query group (semantically identical —
+                    // the GQA residency win stays host-side until a
+                    // grouped decode artifact exists, DESIGN.md §Head
+                    // layouts)
+                    let expand = |src: &[f32]| -> Vec<f32> {
+                        if req.layout.is_mha() {
+                            return src.to_vec();
+                        }
+                        let per = req.n * req.d;
+                        let mut out = Vec::with_capacity(req.layout.q_heads * per);
+                        for qh in 0..req.layout.q_heads {
+                            let kh = req.layout.kv_head_of(qh);
+                            out.extend_from_slice(&src[kh * per..(kh + 1) * per]);
+                        }
+                        out
+                    };
                     let vec_t = |v: &Vec<i32>| HostTensor::I32 { shape: vec![1, req.n], data: v.clone() };
                     let out = exe.run(&[
                         HostTensor::F32 { shape: shape4.clone(), data: req.q.clone() },
-                        HostTensor::F32 { shape: shape4.clone(), data: req.k.clone() },
-                        HostTensor::F32 { shape: shape4, data: req.v.clone() },
+                        HostTensor::F32 { shape: shape4.clone(), data: expand(&req.k) },
+                        HostTensor::F32 { shape: shape4, data: expand(&req.v) },
                         vec_t(&req.mask.lts),
                         vec_t(&req.mask.lte),
                         vec_t(&req.mask.uts),
@@ -146,23 +164,39 @@ impl ServeEngine {
 fn cpu_attention(req: &Request, tile: (usize, usize), threads: usize) -> Vec<f32> {
     let cfg = AttnConfig::new(tile.0.min(req.n), tile.1.min(req.n), req.d);
     let table = BlockTable::build(&req.mask, cfg.bc);
+    let layout = req.layout;
     let per_head = req.n * req.d;
-    let outs = parallel_heads(req.heads, threads.max(1), |h| {
-        flash::flashmask_forward(
+    // the Eq. 4 classification is a property of the mask alone: compute
+    // the tile-class table once for the whole request, then fan the
+    // query heads out across threads — full q_heads parallelism (an MQA
+    // request still uses every core) with zero per-head classification
+    // work, each head reading its group's shared KV head
+    let classes = flash::classify_tiles(
+        &req.mask,
+        &table,
+        req.n.div_ceil(cfg.br),
+        req.n.div_ceil(cfg.bc),
+        cfg.br,
+        cfg.bc,
+        true,
+    );
+    let outs = parallel_heads(layout.q_heads, threads.max(1), |h| {
+        let kh = layout.kv_head_of(h);
+        let mut stats = crate::attention::TileStats::default();
+        flash::forward_tiles(
             req.head(&req.q, h),
-            req.head(&req.k, h),
-            req.head(&req.v, h),
+            req.head(&req.k, kh),
+            req.head(&req.v, kh),
             req.n,
             req.d,
             &req.mask,
-            &table,
             cfg,
-            true,
+            &classes,
+            &mut stats,
         )
-        .0
         .o
     });
-    let mut o = Vec::with_capacity(req.heads * per_head);
+    let mut o = Vec::with_capacity(layout.q_heads * per_head);
     for part in outs {
         o.extend(part);
     }
@@ -172,7 +206,7 @@ fn cpu_attention(req: &Request, tile: (usize, usize), threads: usize) -> Vec<f32
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::attention::dense;
+    use crate::attention::{dense, HeadLayout};
     use crate::mask::builders;
     use crate::server::queue::RequestQueue;
     use crate::server::scheduler::{Scheduler, SchedulerConfig};
@@ -206,6 +240,76 @@ mod tests {
                 assert!((a - b).abs() < 3e-5);
             }
         }
+    }
+
+    /// GQA request plus its MHA twin (same Q, KV replicated per group).
+    fn rand_gqa_pair(n: usize, d: usize, layout: HeadLayout, seed: u64) -> (Request, Request) {
+        let mut rng = Rng::new(seed);
+        let mut mk = |len: usize| (0..len).map(|_| rng.normal_f32() * 0.5).collect::<Vec<f32>>();
+        let mask = builders::causal_document(n, &[n / 2, n - n / 2]);
+        let q = mk(layout.q_heads * n * d);
+        let k = mk(layout.kv_heads * n * d);
+        let v = mk(layout.kv_heads * n * d);
+        let mut k_rep = Vec::with_capacity(layout.q_heads * n * d);
+        let mut v_rep = Vec::with_capacity(layout.q_heads * n * d);
+        for qh in 0..layout.q_heads {
+            let kh = layout.kv_head_of(qh);
+            k_rep.extend_from_slice(&k[kh * n * d..(kh + 1) * n * d]);
+            v_rep.extend_from_slice(&v[kh * n * d..(kh + 1) * n * d]);
+        }
+        (
+            Request::with_layout(0, layout, n, d, q.clone(), k, v, mask.clone()),
+            Request::new(0, layout.q_heads, n, d, q, k_rep, v_rep, mask),
+        )
+    }
+
+    #[test]
+    fn gqa_prefill_through_engine_matches_replicated_mha() {
+        let (n, d) = (64, 8);
+        let layout = HeadLayout::new(4, 2);
+        let (gqa, mha) = rand_gqa_pair(n, d, layout, 7);
+        let run = |r: Request| {
+            let mut q = RequestQueue::new();
+            q.push(r).unwrap();
+            let s = Scheduler::new(SchedulerConfig { max_batch: 1, max_wait_ms: 0.0 });
+            let mut eng = ServeEngine::new(EngineKind::Cpu { threads: 2 }, (16, 16));
+            let plan = s.next_batch(&mut q, std::time::Instant::now()).unwrap();
+            eng.execute(plan).unwrap();
+            eng.completed.pop().unwrap()
+        };
+        let a = run(gqa);
+        let b = run(mha);
+        assert_eq!(a.o, b.o, "GQA prefill diverged from replicated MHA");
+    }
+
+    #[test]
+    fn gqa_decode_through_engine_matches_replicated_mha() {
+        let (n, d, prompt) = (48, 8, 8);
+        let layout = HeadLayout::new(4, 2);
+        let (gqa, mha) = rand_gqa_pair(n, d, layout, 8);
+        let run = |r: Request| {
+            let mut eng = ServeEngine::new(EngineKind::Cpu { threads: 1 }, (16, 16));
+            let report = eng
+                .execute_decode(
+                    vec![r.into_decode(prompt)],
+                    BatcherConfig {
+                        page_size: 8,
+                        d,
+                        max_pages: 256,
+                        max_active: 2,
+                        skip: true,
+                        spec: crate::decode::SpecPolicy::Off,
+                    },
+                )
+                .unwrap();
+            (report, eng.completed.pop().unwrap())
+        };
+        let (rep_g, a) = run(gqa);
+        let (rep_m, b) = run(mha);
+        assert_eq!(a.o, b.o, "GQA decode diverged from replicated MHA");
+        // shared KV pages: the grouped run holds group× fewer pages
+        assert_eq!(rep_m.peak_pages, layout.group() * rep_g.peak_pages);
+        assert_eq!(rep_m.resident_kv_bytes, layout.group() * rep_g.resident_kv_bytes);
     }
 
     #[test]

@@ -1,17 +1,21 @@
 //! Request queue for masked-attention inference.
 
+use crate::attention::HeadLayout;
 use crate::mask::FlashMask;
 use std::collections::VecDeque;
 use std::time::Instant;
 
-/// One prefill attention request: Q/K/V for `heads` heads of `[n, d]`
-/// plus its FlashMask.
+/// One prefill attention request: Q (`[layout.q_heads, n, d]`) and K/V
+/// (`[layout.kv_heads, n, d]`) plus its FlashMask.  Under GQA each KV
+/// head serves a group of query heads — the request carries the
+/// [`HeadLayout`] end to end so the scheduler can batch on it and the
+/// decode path can share KV pages across the group.
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
     pub n: usize,
     pub d: usize,
-    pub heads: usize,
+    pub layout: HeadLayout,
     pub q: Vec<f32>,
     pub k: Vec<f32>,
     pub v: Vec<f32>,
@@ -20,26 +24,47 @@ pub struct Request {
 }
 
 impl Request {
+    /// MHA convenience: `heads` query heads, each owning its KV head.
+    #[allow(clippy::too_many_arguments)]
     pub fn new(id: u64, heads: usize, n: usize, d: usize, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>, mask: FlashMask) -> Request {
-        assert_eq!(q.len(), heads * n * d);
-        assert_eq!(k.len(), heads * n * d);
-        assert_eq!(v.len(), heads * n * d);
-        assert_eq!(mask.n(), n);
-        Request { id, n, d, heads, q, k, v, mask, arrived: Instant::now() }
+        Request::with_layout(id, HeadLayout::mha(heads), n, d, q, k, v, mask)
     }
 
-    /// Head `h`'s `[n, d]` view of one of this request's Q/K/V buffers.
+    /// Grouped layout: `q` is `[layout.q_heads, n, d]`, `k`/`v` are
+    /// `[layout.kv_heads, n, d]`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_layout(
+        id: u64,
+        layout: HeadLayout,
+        n: usize,
+        d: usize,
+        q: Vec<f32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        mask: FlashMask,
+    ) -> Request {
+        assert_eq!(q.len(), layout.q_heads * n * d, "q must be [q_heads, n, d]");
+        assert_eq!(k.len(), layout.kv_heads * n * d, "k must be [kv_heads, n, d]");
+        assert_eq!(v.len(), layout.kv_heads * n * d, "v must be [kv_heads, n, d]");
+        assert_eq!(mask.n(), n);
+        Request { id, n, d, layout, q, k, v, mask, arrived: Instant::now() }
+    }
+
+    /// Head `h`'s `[n, d]` view of a head-major buffer (query-head index
+    /// for `q`-shaped buffers, KV-head index for `k`/`v`-shaped ones).
     pub fn head<'a>(&self, slice: &'a [f32], h: usize) -> &'a [f32] {
-        debug_assert_eq!(slice.len(), self.heads * self.n * self.d);
+        debug_assert_eq!(slice.len() % (self.n * self.d), 0);
+        debug_assert!((h + 1) * self.n * self.d <= slice.len());
         &slice[h * self.n * self.d..(h + 1) * self.n * self.d]
     }
 
     /// Reinterpret this prefill request as a decode request: rows
     /// `0..prompt_len` become the cached prompt, the remainder is
-    /// decoded token by token against the paged KV cache.
+    /// decoded token by token against the paged KV cache (one page
+    /// chain per KV head).
     pub fn into_decode(self, prompt_len: usize) -> crate::decode::DecodeRequest {
-        let mut req = crate::decode::DecodeRequest::new(
-            self.id, self.heads, self.n, self.d, prompt_len, self.q, self.k, self.v, self.mask,
+        let mut req = crate::decode::DecodeRequest::with_layout(
+            self.id, self.layout, self.n, self.d, prompt_len, self.q, self.k, self.v, self.mask,
         );
         req.arrived = self.arrived; // preserve queueing latency accounting
         req
@@ -90,9 +115,10 @@ impl RequestQueue {
         self.items.is_empty()
     }
 
-    /// Peek at the shape key of the front request (for batch grouping).
-    pub fn front_shape(&self) -> Option<(usize, usize, usize)> {
-        self.items.front().map(|r| (r.heads, r.n, r.d))
+    /// Peek at the shape key of the front request (for batch grouping):
+    /// requests batch together only when layout, n and d all match.
+    pub fn front_shape(&self) -> Option<(HeadLayout, usize, usize)> {
+        self.items.front().map(|r| (r.layout, r.n, r.d))
     }
 
     pub fn peek_front(&self) -> Option<&Request> {
@@ -170,5 +196,43 @@ mod tests {
         assert_eq!(dec.prompt_len, 4);
         assert_eq!(dec.gen_len(), 12);
         assert_eq!(dec.arrived, arrived);
+    }
+
+    #[test]
+    fn grouped_request_carries_layout_through_decode() {
+        let (n, d) = (16, 4);
+        let layout = HeadLayout::new(4, 2);
+        let r = Request::with_layout(
+            0,
+            layout,
+            n,
+            d,
+            vec![0.0; layout.q_heads * n * d],
+            vec![0.0; layout.kv_heads * n * d],
+            vec![0.0; layout.kv_heads * n * d],
+            builders::causal(n),
+        );
+        assert_eq!(r.head(&r.q, 3).len(), n * d);
+        assert_eq!(r.head(&r.k, 1).len(), n * d);
+        let dec = r.into_decode(4);
+        assert_eq!(dec.layout, layout);
+        assert_eq!(dec.k.len(), layout.kv_heads * n * d);
+    }
+
+    #[test]
+    #[should_panic(expected = "kv_heads")]
+    fn grouped_request_rejects_q_shaped_kv() {
+        let (n, d) = (8, 2);
+        let layout = HeadLayout::new(4, 2);
+        Request::with_layout(
+            0,
+            layout,
+            n,
+            d,
+            vec![0.0; layout.q_heads * n * d],
+            vec![0.0; layout.q_heads * n * d], // wrong: q-shaped KV
+            vec![0.0; layout.kv_heads * n * d],
+            builders::causal(n),
+        );
     }
 }

@@ -1,11 +1,15 @@
 //! Dynamic batch scheduler for masked-attention serving.
 //!
-//! Groups queued requests that share a `(heads, n, d)` shape into one
+//! Groups queued requests that share a `(layout, n, d)` shape into one
 //! execution batch (bounded by `max_batch` and `max_wait_ms`), so the
 //! engine amortizes per-call overhead — the same consideration that
-//! drives the paper's FlashInfer padded-batch discussion (appendix B.2).
+//! drives the paper's FlashInfer padded-batch discussion (appendix
+//! B.2).  The head layout is part of the batch key: a GQA request and
+//! its same-`n` MHA twin execute through different kernel groupings, so
+//! they must not share a plan.
 
 use super::queue::{Request, RequestQueue};
+use crate::attention::HeadLayout;
 use std::time::Instant;
 
 #[derive(Clone, Copy, Debug)]
@@ -26,7 +30,7 @@ impl Default for SchedulerConfig {
 #[derive(Debug)]
 pub struct BatchPlan {
     pub requests: Vec<Request>,
-    pub heads: usize,
+    pub layout: HeadLayout,
     pub n: usize,
     pub d: usize,
 }
@@ -54,13 +58,13 @@ impl Scheduler {
     /// queue, capped at `max_batch`.  Returns `None` when the queue is
     /// empty or the front batch should keep waiting for more arrivals.
     pub fn next_batch(&self, queue: &mut RequestQueue, now: Instant) -> Option<BatchPlan> {
-        let (heads, n, d) = queue.front_shape()?;
+        let (layout, n, d) = queue.front_shape()?;
         // count the homogeneous prefix without draining yet
         let mut count = 0;
         {
             let mut probe: Vec<Request> = Vec::new();
             while let Some(r) = queue.pop() {
-                if (r.heads, r.n, r.d) == (heads, n, d) && count < self.cfg.max_batch {
+                if (r.layout, r.n, r.d) == (layout, n, d) && count < self.cfg.max_batch {
                     count += 1;
                     probe.push(r);
                 } else {
@@ -102,7 +106,7 @@ impl Scheduler {
         for _ in 0..count {
             requests.push(queue.pop().unwrap());
         }
-        Some(BatchPlan { requests, heads, n, d })
+        Some(BatchPlan { requests, layout, n, d })
     }
 
     /// Admission for the decode path: pull up to `max_admit` requests in
@@ -208,7 +212,7 @@ mod tests {
         let late = arrived + Duration::from_millis(26);
         let b = s.next_batch(&mut q, late).expect("deadline must flush the partial batch");
         assert_eq!(b.len(), 1);
-        assert_eq!((b.heads, b.n), (2, 16));
+        assert_eq!((b.layout, b.n), (HeadLayout::mha(2), 16));
         assert!(q.is_empty());
     }
 
@@ -246,6 +250,39 @@ mod tests {
         assert_eq!(q.peek_front().unwrap().id, c);
         assert!(s.drain_for_decode(&mut q, 8).len() == 1);
         assert!(s.drain_for_decode(&mut q, 8).is_empty());
+    }
+
+    #[test]
+    fn layout_is_part_of_the_batch_key() {
+        // a GQA request between two same-n MHA twins must split the
+        // batch: grouped and ungrouped layouts execute through different
+        // kernel groupings
+        let (n, d) = (16, 4);
+        let gqa = |id: u64| {
+            let layout = HeadLayout::new(2, 1);
+            Request::with_layout(
+                id,
+                layout,
+                n,
+                d,
+                vec![0.0; layout.q_heads * n * d],
+                vec![0.0; layout.kv_heads * n * d],
+                vec![0.0; layout.kv_heads * n * d],
+                builders::causal(n),
+            )
+        };
+        let mut q = RequestQueue::new();
+        q.push(req(n, 2)).unwrap();
+        q.push(gqa(0)).unwrap();
+        q.push(gqa(0)).unwrap();
+        let s = Scheduler::new(SchedulerConfig { max_batch: 8, max_wait_ms: 0.0 });
+        let first = s.next_batch(&mut q, Instant::now()).unwrap();
+        assert_eq!(first.len(), 1);
+        assert_eq!(first.layout, HeadLayout::mha(2));
+        let second = s.next_batch(&mut q, Instant::now()).unwrap();
+        assert_eq!(second.len(), 2);
+        assert_eq!(second.layout, HeadLayout::new(2, 1));
+        assert!(q.is_empty());
     }
 
     #[test]

@@ -1,0 +1,249 @@
+//! Differential oracle for the grouped head-layout (GQA/MQA) refactor.
+//!
+//! Two pins, applied at every level of the stack — prefill kernel,
+//! decode step, speculative verify, engine/batcher:
+//!
+//! 1. **MHA no-op**: a `kv_heads == q_heads` layout reproduces the
+//!    single-head code path bitwise, so the refactor changes nothing
+//!    for existing callers.
+//! 2. **Replication equivalence**: group sizes {2, 4, 8} match an MHA
+//!    run with KV heads explicitly replicated per query head,
+//!    row-for-row (< 1e-4) — sharing a KV head is semantically
+//!    replication at 1/group the cache residency — including under
+//!    pool-pressure preemption and speculative rollback.
+
+use flashmask::attention::{dense, flash, AttnConfig, HeadLayout};
+use flashmask::decode::{BatcherConfig, ContinuousBatcher, DecodeRequest, DecodeResponse, SpecPolicy};
+use flashmask::mask::{builders, BlockTable, FlashMask, MaskKind};
+use flashmask::util::rng::Rng;
+
+const N: usize = 96;
+const D: usize = 8;
+const Q_HEADS: usize = 8;
+const PROMPT: usize = 8;
+const PAGE: usize = 16;
+
+fn rand_vec(n: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32() * 0.5).collect()
+}
+
+/// Expand `[kv_heads, n, d]` K/V to the `[q_heads, n, d]` MHA twin by
+/// replicating each KV head across its query group.
+fn replicate(kv: &[f32], layout: HeadLayout, n: usize, d: usize) -> Vec<f32> {
+    assert_eq!(kv.len(), layout.kv_heads * n * d);
+    let mut out = Vec::with_capacity(layout.q_heads * n * d);
+    for qh in 0..layout.q_heads {
+        let kh = layout.kv_head_of(qh);
+        out.extend_from_slice(&kv[kh * n * d..(kh + 1) * n * d]);
+    }
+    out
+}
+
+fn assert_rows_close(label: &str, got: &[f32], want: &[f32], tol: f32) {
+    assert_eq!(got.len(), want.len(), "{label}: length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (a - b).abs() < tol,
+            "{label}: row {} dim {}: {a} vs {b}",
+            i / D,
+            i % D
+        );
+    }
+}
+
+#[test]
+fn kernel_grouped_layouts_match_kv_replicated_mha_and_dense_oracle() {
+    let (n, d) = (N, D);
+    let cfg = AttnConfig::new(32, 32, d);
+    let mut rng = Rng::new(61);
+    let masks: Vec<(&str, FlashMask)> = vec![
+        ("causal", builders::causal(n)),
+        ("sliding_window", builders::sliding_window(n, 12)),
+        ("causal_document", builders::causal_document(n, &[40, 31, 25])),
+    ];
+    for kv_heads in [4usize, 2, 1] {
+        let layout = HeadLayout::new(Q_HEADS, kv_heads);
+        let q = rand_vec(layout.q_heads * n * d, &mut rng);
+        let k = rand_vec(layout.kv_heads * n * d, &mut rng);
+        let v = rand_vec(layout.kv_heads * n * d, &mut rng);
+        let k_rep = replicate(&k, layout, n, d);
+        let v_rep = replicate(&v, layout, n, d);
+        for (name, mask) in &masks {
+            let table = BlockTable::build(mask, cfg.bc);
+            let (grouped, gs) =
+                flash::flashmask_forward_grouped(&q, &k, &v, n, d, layout, mask, &table, cfg, true);
+            let (mha, ms) = flash::flashmask_forward_grouped(
+                &q,
+                &k_rep,
+                &v_rep,
+                n,
+                d,
+                HeadLayout::mha(Q_HEADS),
+                mask,
+                &table,
+                cfg,
+                true,
+            );
+            // replication equivalence is bitwise at the kernel level:
+            // identical float ops in identical order
+            for h in 0..Q_HEADS {
+                assert_eq!(grouped[h].o, mha[h].o, "{name} {layout} head {h}");
+                assert_eq!(grouped[h].lse, mha[h].lse, "{name} {layout} head {h} lse");
+            }
+            // and both match the dense semantic oracle
+            let oracle =
+                dense::dense_forward_grouped(&q, &k, &v, n, d, layout, &mask.dense_bias(), cfg.scale);
+            for h in 0..Q_HEADS {
+                assert_rows_close(
+                    &format!("{name} {layout} head {h} vs dense"),
+                    &grouped[h].o,
+                    &oracle[h].o,
+                    3e-5,
+                );
+            }
+            // classification reuse: tile census shrinks by the group factor
+            assert_eq!(ms.tiles_total, layout.group() * gs.tiles_total, "{name} {layout}");
+            assert_eq!(ms.tiles_skipped, layout.group() * gs.tiles_skipped, "{name} {layout}");
+        }
+    }
+}
+
+/// One GQA request per causal benchmark mask kind plus its
+/// KV-replicated MHA twin.
+fn gqa_benchmark_pairs(kv_heads: usize, seed: u64) -> Vec<(MaskKind, DecodeRequest, DecodeRequest)> {
+    let layout = HeadLayout::new(Q_HEADS, kv_heads);
+    let mut rng = Rng::new(seed);
+    MaskKind::BENCHMARK
+        .iter()
+        .filter(|k| k.is_causal())
+        .enumerate()
+        .map(|(i, &kind)| {
+            let mask = builders::build(kind, N, &mut rng);
+            let q = rand_vec(layout.q_heads * N * D, &mut rng);
+            let k = rand_vec(layout.kv_heads * N * D, &mut rng);
+            let v = rand_vec(layout.kv_heads * N * D, &mut rng);
+            let gqa = DecodeRequest::with_layout(
+                i as u64,
+                layout,
+                N,
+                D,
+                PROMPT,
+                q.clone(),
+                k.clone(),
+                v.clone(),
+                mask.clone(),
+            );
+            let mha = DecodeRequest::new(
+                i as u64,
+                Q_HEADS,
+                N,
+                D,
+                PROMPT,
+                q,
+                replicate(&k, layout, N, D),
+                replicate(&v, layout, N, D),
+                mask,
+            );
+            (kind, gqa, mha)
+        })
+        .collect()
+}
+
+fn decode_one(req: DecodeRequest, max_pages: usize, spec: SpecPolicy) -> (flashmask::decode::BatcherReport, DecodeResponse) {
+    let mut b = ContinuousBatcher::new(BatcherConfig {
+        page_size: PAGE,
+        d: D,
+        max_pages,
+        max_active: 4,
+        skip: true,
+        spec,
+    });
+    b.submit(req).unwrap();
+    let report = b.run().unwrap();
+    assert_eq!(report.sequences, 1);
+    (report, b.take_finished().pop().unwrap())
+}
+
+#[test]
+fn decode_gqa_matches_replicated_mha_all_causal_kinds() {
+    for kv_heads in [4usize, 2, 1] {
+        let group = Q_HEADS / kv_heads;
+        for (kind, gqa, mha) in gqa_benchmark_pairs(kv_heads, 71) {
+            let (grep, gout) = decode_one(gqa, 4096, SpecPolicy::Off);
+            let (mrep, mout) = decode_one(mha, 4096, SpecPolicy::Off);
+            assert_rows_close(&format!("{kind} kv={kv_heads} sequential"), &gout.o, &mout.o, 1e-4);
+            // residency and classification work drop by the group factor
+            assert_eq!(mrep.peak_pages, group * grep.peak_pages, "{kind} kv={kv_heads}");
+            assert_eq!(mrep.pages_total, group as u64 * grep.pages_total, "{kind} kv={kv_heads}");
+            assert!(
+                (mrep.pages_skip_fraction - grep.pages_skip_fraction).abs() < 1e-12,
+                "{kind} kv={kv_heads}: skip fraction must be layout-invariant"
+            );
+        }
+    }
+}
+
+#[test]
+fn speculative_gqa_matches_replicated_mha_under_rejections() {
+    // rejections exercise the accept/rollback path on the shared KV
+    // chains; sibling branches exercise genuine tree masks
+    for kv_heads in [2usize, 1] {
+        for (kind, gqa, mha) in gqa_benchmark_pairs(kv_heads, 72) {
+            let spec = SpecPolicy::Oracle { k: 4, accept_rate: 0.6, branch: 2, seed: 19 };
+            let (_, gout) = decode_one(gqa, 4096, spec);
+            let (_, mout) = decode_one(mha, 4096, SpecPolicy::Off);
+            assert_rows_close(&format!("{kind} kv={kv_heads} speculative"), &gout.o, &mout.o, 1e-4);
+        }
+    }
+}
+
+#[test]
+fn gqa_exact_under_preemption_and_leak_free() {
+    // a pool sized so three group-4 sequences cannot coexist: the
+    // batcher must preempt (evicting shared KV chains mid-flight) and
+    // still produce replication-exact outputs with a fully drained pool
+    let layout = HeadLayout::new(Q_HEADS, 2);
+    let mut rng = Rng::new(73);
+    let reqs: Vec<(DecodeRequest, DecodeRequest)> = (0..3u64)
+        .map(|id| {
+            let mask = builders::causal(N);
+            let q = rand_vec(layout.q_heads * N * D, &mut rng);
+            let k = rand_vec(layout.kv_heads * N * D, &mut rng);
+            let v = rand_vec(layout.kv_heads * N * D, &mut rng);
+            let gqa = DecodeRequest::with_layout(
+                id, layout, N, D, 0, q.clone(), k.clone(), v.clone(), mask.clone(),
+            );
+            let mha = DecodeRequest::new(
+                id, Q_HEADS, N, D, 0, q,
+                replicate(&k, layout, N, D),
+                replicate(&v, layout, N, D),
+                mask,
+            );
+            (gqa, mha)
+        })
+        .collect();
+    // one GQA sequence needs kv_heads * ceil(96/16) = 12 pages
+    let max_pages = 16;
+    let spec = SpecPolicy::Oracle { k: 4, accept_rate: 1.0, branch: 1, seed: 5 };
+    let mut b = ContinuousBatcher::new(BatcherConfig {
+        page_size: PAGE,
+        d: D,
+        max_pages,
+        max_active: 4,
+        skip: true,
+        spec,
+    });
+    for (gqa, _) in &reqs {
+        b.submit(gqa.clone()).unwrap();
+    }
+    let report = b.run().unwrap();
+    assert!(report.preemptions > 0, "pool pressure should have preempted");
+    assert!(report.drafted_tokens > 0, "speculation should have run");
+    assert_eq!(b.pool().in_use(), 0, "shared KV chains leaked pages");
+    let mut done = b.take_finished();
+    done.sort_by_key(|r| r.id);
+    for ((_, mha), resp) in reqs.into_iter().zip(&done) {
+        let (_, want) = decode_one(mha, 4096, SpecPolicy::Off);
+        assert_rows_close(&format!("preempted req {}", resp.id), &resp.o, &want.o, 1e-4);
+    }
+}

@@ -9,12 +9,33 @@ cargo build --release
 echo "== tier-1: tests =="
 cargo test -q
 
+echo "== lint: clippy (warnings are errors) =="
+# style lints that fight this codebase's deliberate idiom are allowed
+# centrally here (kernel entry points take the paper's raw argument
+# lists, index loops mirror the algorithm listings, tables/Defaults are
+# written out explicitly); correctness lints stay hard errors
+cargo clippy --all-targets -- -D warnings \
+  -A clippy::too_many_arguments \
+  -A clippy::needless_range_loop \
+  -A clippy::useless_format \
+  -A clippy::derivable_impls \
+  -A clippy::type_complexity
+
 echo "== decode oracle suite (sequential vs speculative vs prefill) =="
 cargo test -q --test decode_oracle
+
+echo "== GQA differential oracle (grouped layouts vs KV-replicated MHA) =="
+cargo test -q --test gqa_oracle
 
 echo "== decode bench smoke (~2s, includes speculative oracle check) =="
 # the bench asserts speculative outputs match sequential row-for-row,
 # so any kernel/oracle divergence fails this step
 cargo bench --bench bench_decode -- --smoke --speculate 4
+
+echo "== decode bench GQA smoke (group-2 layout vs MHA at equal outputs) =="
+# asserts resident pages and page-classification work drop by the group
+# factor while outputs stay row-for-row identical; --speculate 1 skips
+# the speculative table the previous invocation already covered
+cargo bench --bench bench_decode -- --smoke --kv-heads 2 --speculate 1
 
 echo "verify.sh: OK"
