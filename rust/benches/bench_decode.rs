@@ -35,7 +35,6 @@ use flashmask::util::bench::time_once;
 use flashmask::util::json::Json;
 use flashmask::util::rng::Rng;
 use flashmask::util::table::Table;
-use std::collections::BTreeMap;
 
 fn requests(n: usize, d: usize, heads: usize, count: usize, mask_of: &dyn Fn(usize, &mut Rng) -> flashmask::mask::FlashMask) -> Vec<DecodeRequest> {
     let mut rng = Rng::new(42);
@@ -123,7 +122,7 @@ fn kib(bytes: usize) -> String {
 }
 
 fn obj(pairs: Vec<(&str, Json)>) -> Json {
-    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+    Json::obj(pairs)
 }
 
 fn main() {

@@ -1,25 +1,178 @@
-//! `cargo bench --bench bench_kernel_masks`
+//! `cargo bench --bench bench_kernel_masks [-- --smoke]`
 //!
 //! Regenerates paper Fig. 5 / Fig. 8 and Tables 4–9: kernel speed across
 //! the 12 mask cases, FLASHMASK vs FlexAttention-like vs dense-mask.
-//! Measured CPU-engine section at a CPU-feasible N, then the calibrated
-//! A100-model projection at the paper's 8K/32K/128K with paper anchors.
+//! Measured CPU-engine section at a CPU-feasible N (with GFLOP/s and
+//! tiles-visited columns, and a built-in assertion that the interval
+//! schedule visits strictly fewer tiles than `tr*tc` on every non-full
+//! mask), then the calibrated A100-model projection at the paper's
+//! 8K/32K/128K with paper anchors.
 //!
-//! Env knobs: FM_BENCH_N (default 1024), FM_BENCH_ITERS (default 5).
+//! Two additional measured sections track this repo's own perf
+//! trajectory (EXPERIMENTS.md §Perf):
+//!
+//! * **§Perf anchor** — causal, d = 128, single thread: the ISSUE 4
+//!   acceptance workload for the register-blocked/packed/
+//!   interval-scheduled kernel rebuild.
+//! * **parallel_2d scaling** — a 1-head forward at several thread
+//!   counts: head-only parallelism pins this workload to one core;
+//!   (head × row-block) partitioning must scale it.  Outputs are
+//!   asserted bitwise-equal across thread counts.
+//!
+//! A machine-readable `== BENCH json ==` blob with all sections is
+//! printed last; `scripts/bench.sh` persists it into
+//! `BENCH_kernel.json` at the repo root.
+//!
+//! Env knobs: FM_BENCH_N (default 1024; 256 under --smoke),
+//! FM_BENCH_ITERS (default 5; 2 under --smoke), FM_BENCH_PAR_N
+//! (default 4096; 1024 under --smoke).
 
+use flashmask::attention::{flash, AttnConfig, HeadLayout};
+use flashmask::mask::{builders, BlockTable};
 use flashmask::reports;
-use flashmask::util::bench::BenchOpts;
+use flashmask::util::bench::{bench, time_once, BenchOpts};
+use flashmask::util::json::Json;
+use flashmask::util::rng::Rng;
+use flashmask::util::table::Table;
 
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+fn rand_vec(n: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32() * 0.5).collect()
+}
+
+/// §Perf anchor: causal mask, d = 128, one thread — the acceptance
+/// workload for the CPU kernel rebuild (EXPERIMENTS.md §Perf).
+fn perf_anchor(n: usize, opts: BenchOpts) -> Json {
+    let d = 128;
+    let mut rng = Rng::new(7);
+    let q = rand_vec(n * d, &mut rng);
+    let k = rand_vec(n * d, &mut rng);
+    let v = rand_vec(n * d, &mut rng);
+    let mask = builders::causal(n);
+    let cfg = AttnConfig::new(64.min(n), 64.min(n), d);
+    let table = BlockTable::build(&mask, cfg.bc);
+    let st = bench("anchor", opts, || {
+        let _ = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+    });
+    let (_, ts) = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+    let gflops = ts.flops() as f64 / (st.median_ms / 1e3) / 1e9;
+    let mut t = Table::new(vec!["workload", "median ms", "GF/s", "tiles visited", "tiles total"])
+        .title("§Perf anchor: causal forward, d=128, 1 thread");
+    t.row(vec![
+        format!("causal n={n}"),
+        format!("{:.2}", st.median_ms),
+        format!("{gflops:.2}"),
+        ts.tiles_visited.to_string(),
+        ts.tiles_total.to_string(),
+    ]);
+    t.print();
+    Json::obj(vec![
+        ("mask", Json::Str("causal".into())),
+        ("n", Json::Num(n as f64)),
+        ("d", Json::Num(d as f64)),
+        ("threads", Json::Num(1.0)),
+        ("median_ms", Json::Num(st.median_ms)),
+        ("gflops", Json::Num(gflops)),
+        ("tiles_visited", Json::Num(ts.tiles_visited as f64)),
+        ("tiles_total", Json::Num(ts.tiles_total as f64)),
+        ("macs", Json::Num(ts.macs as f64)),
+    ])
+}
+
+/// parallel_2d scaling: 1-head causal forward across thread counts.
+/// Head-only parallelism gives this workload exactly one core; the
+/// (head × row-block) scheduler must spread it over all of them while
+/// staying bitwise identical.
+fn parallel_scaling(n: usize, threads_list: &[usize], opts: BenchOpts) -> Json {
+    let d = 128;
+    let layout = HeadLayout::mha(1);
+    let mut rng = Rng::new(9);
+    let q = rand_vec(n * d, &mut rng);
+    let k = rand_vec(n * d, &mut rng);
+    let v = rand_vec(n * d, &mut rng);
+    let mask = builders::causal(n);
+    let cfg = AttnConfig::new(64.min(n), 64.min(n), d);
+    let table = BlockTable::build(&mask, cfg.bc);
+    let (base, _) = flash::flashmask_forward_grouped_parallel(
+        &q, &k, &v, n, d, layout, &mask, &table, cfg, true, 1,
+    );
+    let mut t = Table::new(vec!["threads", "median ms", "speedup"])
+        .title(format!("parallel_2d row-block scaling: causal, 1 head, n={n}, d=128"));
+    let mut rows: Vec<Json> = Vec::new();
+    let mut ms1 = 0.0;
+    for &threads in threads_list {
+        let st = bench("par", opts, || {
+            let _ = flash::flashmask_forward_grouped_parallel(
+                &q, &k, &v, n, d, layout, &mask, &table, cfg, true, threads,
+            );
+        });
+        // work partitioning must not change a single bit of the result
+        let (out, _) = flash::flashmask_forward_grouped_parallel(
+            &q, &k, &v, n, d, layout, &mask, &table, cfg, true, threads,
+        );
+        assert_eq!(out[0].o, base[0].o, "threads={threads}: outputs diverged");
+        assert_eq!(out[0].lse, base[0].lse, "threads={threads}: lse diverged");
+        if threads == threads_list[0] {
+            ms1 = st.median_ms;
+        }
+        t.row(vec![
+            threads.to_string(),
+            format!("{:.2}", st.median_ms),
+            format!("{:.2}x", ms1 / st.median_ms),
+        ]);
+        rows.push(Json::obj(vec![
+            ("threads", Json::Num(threads as f64)),
+            ("median_ms", Json::Num(st.median_ms)),
+            ("speedup_vs_1", Json::Num(ms1 / st.median_ms)),
+        ]));
+    }
+    t.print();
+    Json::obj(vec![
+        ("mask", Json::Str("causal".into())),
+        ("n", Json::Num(n as f64)),
+        ("d", Json::Num(d as f64)),
+        ("heads", Json::Num(1.0)),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
 fn main() {
-    let n = env_usize("FM_BENCH_N", 1024);
-    let iters = env_usize("FM_BENCH_ITERS", 5);
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let n = env_usize("FM_BENCH_N", if smoke { 256 } else { 1024 });
+    let iters = env_usize("FM_BENCH_ITERS", if smoke { 2 } else { 5 });
+    let par_n = env_usize("FM_BENCH_PAR_N", if smoke { 1024 } else { 4096 });
     let opts = BenchOpts { warmup: 1, iters, max_seconds: 15.0 };
+
+    let mut sections: Vec<Json> = Vec::new();
     for head_dim in [128usize, 64] {
         println!("\n################ head dim {head_dim} ################");
-        reports::kernel_mask_report(n, &[8192, 32768, 131072], head_dim, opts);
+        sections.push(reports::kernel_mask_report(n, &[8192, 32768, 131072], head_dim, opts));
     }
+
+    println!();
+    let anchor = perf_anchor(n, opts);
+    let threads_list: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4, 8] };
+    // scaling runs are long at n=4096 — time each point a few times only
+    let par_opts = BenchOpts { warmup: 1, iters: iters.min(3), max_seconds: 60.0 };
+    let (parallel, _) = time_once(|| parallel_scaling(par_n, threads_list, par_opts));
+
+    println!("== BENCH json ==");
+    let blob = Json::obj(vec![
+        (
+            "config",
+            Json::obj(vec![
+                ("n", Json::Num(n as f64)),
+                ("iters", Json::Num(iters as f64)),
+                ("par_n", Json::Num(par_n as f64)),
+                ("smoke", Json::Bool(smoke)),
+            ]),
+        ),
+        ("sections", Json::Arr(sections)),
+        ("anchor", anchor),
+        ("parallel", parallel),
+    ]);
+    println!("{}", blob.to_string_pretty());
 }

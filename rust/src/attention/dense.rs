@@ -2,11 +2,14 @@
 //! the "vanilla attention" baseline of Fig. 2 and the semantic oracle
 //! for the blocked engines.
 
-use super::{AttnGrads, AttnOutput, HeadLayout};
+use super::{gemm, parallel_2d, AttnGrads, AttnOutput, HeadLayout};
 
-/// Softmax attention with dense bias; row-major `[n, d]` inputs,
-/// `bias[n*n]` additive mask (0 / -inf).
-pub fn dense_forward(
+/// Rows `[row0, row0 + rows)` of the dense forward — the row-parallel
+/// work unit shared by [`dense_forward`] and
+/// [`dense_forward_grouped_parallel`].  Writes into the caller's
+/// output slices (`o_rows` is `[rows, d]`, `lse_rows` is `[rows]`).
+#[allow(clippy::too_many_arguments)]
+fn dense_forward_rows(
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -14,18 +17,18 @@ pub fn dense_forward(
     d: usize,
     bias: &[f32],
     scale: f32,
-) -> AttnOutput {
-    assert_eq!(bias.len(), n * n);
-    let mut o = vec![0f32; n * d];
-    let mut lse = vec![f32::NEG_INFINITY; n];
+    row0: usize,
+    o_rows: &mut [f32],
+    lse_rows: &mut [f32],
+) {
+    let rows = lse_rows.len();
+    debug_assert_eq!(o_rows.len(), rows * d);
     let mut srow = vec![0f32; n];
-    for i in 0..n {
+    for x in 0..rows {
+        let i = row0 + x;
         // S_i = q_i K^T * scale + bias_i
         for j in 0..n {
-            let mut acc = 0f32;
-            for dd in 0..d {
-                acc += q[i * d + dd] * k[j * d + dd];
-            }
+            let acc = gemm::dot(&q[i * d..(i + 1) * d], &k[j * d..(j + 1) * d]);
             srow[j] = acc * scale + bias[i * n + j];
         }
         let m = srow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
@@ -41,13 +44,30 @@ pub fn dense_forward(
                 let p = srow[j] * inv;
                 if p != 0.0 {
                     for dd in 0..d {
-                        o[i * d + dd] += p * v[j * d + dd];
+                        o_rows[x * d + dd] += p * v[j * d + dd];
                     }
                 }
             }
-            lse[i] = m_safe + l.ln();
+            lse_rows[x] = m_safe + l.ln();
         }
     }
+}
+
+/// Softmax attention with dense bias; row-major `[n, d]` inputs,
+/// `bias[n*n]` additive mask (0 / -inf).
+pub fn dense_forward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    bias: &[f32],
+    scale: f32,
+) -> AttnOutput {
+    assert_eq!(bias.len(), n * n);
+    let mut o = vec![0f32; n * d];
+    let mut lse = vec![f32::NEG_INFINITY; n];
+    dense_forward_rows(q, k, v, n, d, bias, scale, 0, &mut o, &mut lse);
     AttnOutput { o, lse }
 }
 
@@ -82,6 +102,67 @@ pub fn dense_forward_grouped(
             )
         })
         .collect()
+}
+
+/// [`dense_forward_grouped`] with (head × row-chunk) work partitioning
+/// via [`parallel_2d`] — the dense reference keeps up with multi-core
+/// kernel runs, so oracle comparisons at bench sizes don't dominate
+/// wall time.  Dense rows cost the same regardless of the mask, so the
+/// chunk weights are uniform.  Bitwise identical to the sequential
+/// path at any thread count (rows are independent).
+#[allow(clippy::too_many_arguments)]
+pub fn dense_forward_grouped_parallel(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    layout: HeadLayout,
+    bias: &[f32],
+    scale: f32,
+    max_threads: usize,
+) -> Vec<AttnOutput> {
+    assert_eq!(q.len(), layout.q_heads * n * d, "q must be [q_heads, n, d]");
+    assert_eq!(k.len(), layout.kv_heads * n * d, "k must be [kv_heads, n, d]");
+    assert_eq!(v.len(), layout.kv_heads * n * d, "v must be [kv_heads, n, d]");
+    assert_eq!(bias.len(), n * n);
+    const CHUNK: usize = 64;
+    let blocks = n.div_ceil(CHUNK).max(1);
+    let weights = vec![1u64; blocks];
+    let results = parallel_2d(layout.q_heads, blocks, &weights, max_threads, |h, b| {
+        let kh = layout.kv_head_of(h);
+        let row0 = b * CHUNK;
+        let rows = CHUNK.min(n - row0);
+        let mut o_rows = vec![0f32; rows * d];
+        let mut lse_rows = vec![f32::NEG_INFINITY; rows];
+        dense_forward_rows(
+            &q[h * n * d..(h + 1) * n * d],
+            &k[kh * n * d..(kh + 1) * n * d],
+            &v[kh * n * d..(kh + 1) * n * d],
+            n,
+            d,
+            bias,
+            scale,
+            row0,
+            &mut o_rows,
+            &mut lse_rows,
+        );
+        (o_rows, lse_rows)
+    });
+    let mut outs = Vec::with_capacity(layout.q_heads);
+    let mut items = results.into_iter();
+    for _h in 0..layout.q_heads {
+        let mut o = vec![0f32; n * d];
+        let mut lse = vec![f32::NEG_INFINITY; n];
+        for b in 0..blocks {
+            let (ob, lb) = items.next().expect("one item per (head, chunk)");
+            let row0 = b * CHUNK;
+            o[row0 * d..row0 * d + ob.len()].copy_from_slice(&ob);
+            lse[row0..row0 + lb.len()].copy_from_slice(&lb);
+        }
+        outs.push(AttnOutput { o, lse });
+    }
+    outs
 }
 
 /// Backward of [`dense_forward`] (textbook softmax-attention gradient).
@@ -209,6 +290,30 @@ mod tests {
                 0.5,
             );
             assert_eq!(outs[h].o, want.o, "head {h}");
+        }
+    }
+
+    #[test]
+    fn grouped_parallel_matches_sequential_bitwise() {
+        // row chunks are independent: any thread count reproduces the
+        // sequential dense oracle bit for bit, including the ragged
+        // tail chunk (n not a multiple of the 64-row chunk)
+        let (n, d) = (100, 4);
+        let layout = HeadLayout::new(4, 2);
+        let mut rng = Rng::new(15);
+        let q = rand_vec(layout.q_heads * n * d, &mut rng);
+        let k = rand_vec(layout.kv_heads * n * d, &mut rng);
+        let v = rand_vec(layout.kv_heads * n * d, &mut rng);
+        let mask = builders::causal_document(n, &[60, 40]);
+        let bias = mask.dense_bias();
+        let want = dense_forward_grouped(&q, &k, &v, n, d, layout, &bias, 0.5);
+        for threads in [1usize, 3, 8] {
+            let got =
+                dense_forward_grouped_parallel(&q, &k, &v, n, d, layout, &bias, 0.5, threads);
+            for h in 0..layout.q_heads {
+                assert_eq!(got[h].o, want[h].o, "threads={threads} head {h}");
+                assert_eq!(got[h].lse, want[h].lse, "threads={threads} head {h} lse");
+            }
         }
     }
 

@@ -7,7 +7,7 @@
 //! paper's §4.4 exactness claim, asserted in the tests below.
 
 use super::gemm;
-use super::{AttnConfig, AttnGrads, AttnOutput, HeadLayout, TileStats};
+use super::{parallel_2d, AttnConfig, AttnGrads, AttnOutput, HeadLayout, TileStats};
 use crate::mask::{BlockClass, BlockTable, FlashMask};
 
 const NEG_INF: f32 = f32::NEG_INFINITY;
@@ -61,28 +61,81 @@ pub(crate) fn tile_class(
     }
 }
 
-/// Classify every `(bi, bj)` tile of one mask (paper Eq. 4), row-major
-/// `[tr, tc]`.  The decision is a property of the mask alone — no head
-/// data enters it — which is what lets the grouped kernel classify
-/// once per KV head and reuse the table across its whole query group
-/// (and the serving engine share one table across all heads of a
-/// request).
-pub(crate) fn classify_tiles(
-    mask: &FlashMask,
-    table: &BlockTable,
-    tr: usize,
-    tc: usize,
-    br: usize,
-    bc: usize,
-    skip: bool,
-) -> Vec<BlockClass> {
-    let mut classes = Vec::with_capacity(tr * tc);
-    for bi in 0..tr {
-        for bj in 0..tc {
-            classes.push(tile_class(mask, table, bi, br, bj, bc, skip));
+/// Interval-driven tile schedule: the Eq. 4 classification of every
+/// `(bi, bj)` tile **plus** a per-row-block visit range `[bj_lo,
+/// bj_hi)` bounding the non-fully-masked column blocks, derived in the
+/// same single sweep over the column intervals.  The compute loop runs
+/// `bj in bj_lo..bj_hi` instead of the dense `0..tc` scan, so tiles
+/// outside the range are never visited at all (the
+/// visit-only-needed-tiles observation of Binary Block Masking,
+/// PAPERS.md) — for contiguous-visibility masks (causal, windows,
+/// documents) the trip count equals the executed-tile count.
+///
+/// The schedule is a property of the mask alone — no head data enters
+/// it — which is what lets the grouped kernel build it once per KV
+/// head and reuse it across the whole query group (and the serving
+/// engine share one schedule across all heads of a request).  The
+/// per-row-block executed-tile counts double as the [`parallel_2d`]
+/// cost weights.
+pub(crate) struct TileSchedule {
+    pub tr: usize,
+    pub tc: usize,
+    classes: Vec<BlockClass>,
+    ranges: Vec<(usize, usize)>,
+    /// Executed (non-fully-masked) tiles per row block — the
+    /// work-partitioning weight.
+    executed: Vec<u64>,
+}
+
+impl TileSchedule {
+    pub fn build(
+        mask: &FlashMask,
+        table: &BlockTable,
+        n: usize,
+        cfg: AttnConfig,
+        skip: bool,
+    ) -> TileSchedule {
+        let (br, bc) = (cfg.br, cfg.bc);
+        let (tr, tc) = (n.div_ceil(br), n.div_ceil(bc));
+        let mut classes = Vec::with_capacity(tr * tc);
+        let mut ranges = Vec::with_capacity(tr);
+        let mut executed = Vec::with_capacity(tr);
+        for bi in 0..tr {
+            let (mut lo, mut hi) = (0usize, 0usize);
+            let mut exec = 0u64;
+            for bj in 0..tc {
+                let class = tile_class(mask, table, bi, br, bj, bc, skip);
+                if class != BlockClass::FullyMasked {
+                    if exec == 0 {
+                        lo = bj;
+                    }
+                    hi = bj + 1;
+                    exec += 1;
+                }
+                classes.push(class);
+            }
+            // a fully-masked row block never set lo/hi: range stays (0, 0)
+            ranges.push((lo, hi));
+            executed.push(exec);
         }
+        TileSchedule { tr, tc, classes, ranges, executed }
     }
-    classes
+
+    #[inline]
+    pub fn class(&self, bi: usize, bj: usize) -> BlockClass {
+        self.classes[bi * self.tc + bj]
+    }
+
+    /// Column-block visit range `[bj_lo, bj_hi)` for row block `bi`.
+    #[inline]
+    pub fn range(&self, bi: usize) -> (usize, usize) {
+        self.ranges[bi]
+    }
+
+    /// Per-row-block executed-tile counts ([`parallel_2d`] weights).
+    pub fn weights(&self) -> &[u64] {
+        &self.executed
+    }
 }
 
 /// Charge one classification pass's tile census to `stats`.  Every
@@ -99,118 +152,117 @@ fn add_census(stats: &mut TileStats, classes: &[BlockClass]) {
     }
 }
 
-/// Algorithm 1 compute loop for one query head against one KV head,
-/// driven by a precomputed tile-class table.  Accumulates only the
-/// compute-side counters (`macs`, `mask_evals`) into `stats`; the tile
-/// census is the caller's (it decides how many heads share one
-/// classification pass).  Unlike the decode-side grouped kernels, the
-/// element-wise interval tests on partial tiles still run per query
-/// head here (sharing them needs a per-tile mask cache — follow-up).
-pub(crate) fn forward_tiles(
+/// Algorithm 1 compute loop for **one row block** of one query head
+/// against one (packed) KV head, driven by the interval schedule.
+/// Returns the row block's `[rows, d]` output and `[rows]` logsumexp;
+/// accumulates the compute-side counters (`macs`, `mask_evals`,
+/// `tiles_visited`) into `stats`.  This is the unit of
+/// [`parallel_2d`] work partitioning — row blocks are independent, so
+/// the parallel and sequential paths are bitwise-identical.
+///
+/// Unlike the decode-side grouped kernels, the element-wise interval
+/// tests on partial tiles still run per query head here (sharing them
+/// needs a per-tile mask cache — follow-up).
+pub(crate) fn forward_row_block(
     q: &[f32],
-    k: &[f32],
+    kt: &gemm::PackedKt,
     v: &[f32],
     n: usize,
     d: usize,
     mask: &FlashMask,
     cfg: AttnConfig,
-    classes: &[BlockClass],
+    sched: &TileSchedule,
+    bi: usize,
+    stats: &mut TileStats,
+) -> (Vec<f32>, Vec<f32>) {
+    let (br, bc) = (cfg.br, cfg.bc);
+    debug_assert_eq!(kt.bc(), bc);
+    let row0 = bi * br;
+    let rows = br.min(n - row0);
+
+    // pack the Q row block once; every visited tile streams it
+    let mut q_pack = gemm::PackedBlock::new();
+    q_pack.pack(&q[row0 * d..(row0 + rows) * d], rows, d);
+
+    let mut out = vec![0f32; rows * d];
+    let mut lse = vec![NEG_INF; rows];
+    let mut s = vec![0f32; rows * bc];
+    let mut o_acc = vec![0f32; rows * d];
+    let mut m_run = vec![NEG_INF; rows];
+    let mut l_run = vec![0f32; rows];
+    let mut alpha = vec![0f32; rows];
+
+    let (bj_lo, bj_hi) = sched.range(bi);
+    for bj in bj_lo..bj_hi {
+        stats.tiles_visited += 1;
+        let class = sched.class(bi, bj);
+        if class == BlockClass::FullyMasked {
+            continue; // interior hole (non-contiguous mask): branch only
+        }
+        let col0 = bj * bc;
+        let cols = bc.min(n - col0);
+
+        // S = (Q_i K_j^T) * scale — scale fused into the microkernel,
+        // no zeroing pass (the kernel writes, not accumulates)
+        let s_tile = &mut s[..rows * cols];
+        gemm::matmul_nt_packed(&q_pack, kt.block(bj), cfg.scale, s_tile);
+        stats.macs += (rows * cols * d) as u64;
+
+        if class == BlockClass::PartiallyMasked {
+            apply_tile_mask(s_tile, mask, row0, rows, col0, cols, stats);
+        }
+
+        // online softmax update (Alg. 1 lines 25-26): one lane-parallel
+        // max sweep + one fused exp/accumulate sweep per row
+        for x in 0..rows {
+            let srow = &mut s_tile[x * cols..(x + 1) * cols];
+            let m_new = m_run[x].max(gemm::row_max(srow));
+            let m_safe = if m_new.is_finite() { m_new } else { 0.0 };
+            let a = if m_run[x].is_finite() { (m_run[x] - m_safe).exp() } else { 0.0 };
+            l_run[x] = a * l_run[x] + gemm::exp_sub_sum(srow, m_safe);
+            m_run[x] = m_new;
+            alpha[x] = a;
+        }
+        gemm::scale_rows(&mut o_acc, &alpha[..rows], rows, d);
+        // O += P V_j
+        gemm::matmul_nn_acc(s_tile, &v[col0 * d..(col0 + cols) * d], rows, cols, d, &mut o_acc);
+        stats.macs += (rows * cols * d) as u64;
+    }
+
+    // finalize (Alg. 1 lines 28-29)
+    for x in 0..rows {
+        if l_run[x] > 0.0 {
+            let inv = 1.0 / l_run[x];
+            for dd in 0..d {
+                out[x * d + dd] = o_acc[x * d + dd] * inv;
+            }
+            let m_safe = if m_run[x].is_finite() { m_run[x] } else { 0.0 };
+            lse[x] = m_safe + l_run[x].ln();
+        } // fully-masked row: output stays 0, lse stays -inf
+    }
+    (out, lse)
+}
+
+/// Algorithm 1 compute loop for one query head against one packed KV
+/// head — the sequential row-block walk over [`forward_row_block`].
+pub(crate) fn forward_tiles(
+    q: &[f32],
+    kt: &gemm::PackedKt,
+    v: &[f32],
+    n: usize,
+    d: usize,
+    mask: &FlashMask,
+    cfg: AttnConfig,
+    sched: &TileSchedule,
     stats: &mut TileStats,
 ) -> AttnOutput {
-    let (br, bc) = (cfg.br, cfg.bc);
-    let tr = n.div_ceil(br);
-    let tc = n.div_ceil(bc);
-    debug_assert_eq!(classes.len(), tr * tc);
     let mut out = vec![0f32; n * d];
     let mut lse = vec![NEG_INF; n];
-
-    // per-row-block scratch, reused across iterations
-    let mut s = vec![0f32; br * bc];
-    let mut o_acc = vec![0f32; br * d];
-    let mut m_run = vec![NEG_INF; br];
-    let mut l_run = vec![0f32; br];
-    let mut alpha = vec![0f32; br];
-
-    for bi in 0..tr {
-        let row0 = bi * br;
-        let rows = br.min(n - row0);
-        o_acc[..rows * d].fill(0.0);
-        m_run[..rows].fill(NEG_INF);
-        l_run[..rows].fill(0.0);
-
-        for bj in 0..tc {
-            let class = classes[bi * tc + bj];
-            if class == BlockClass::FullyMasked {
-                continue;
-            }
-            let col0 = bj * bc;
-            let cols = bc.min(n - col0);
-
-            // S = Q_i K_j^T * scale
-            let s_tile = &mut s[..rows * cols];
-            s_tile.fill(0.0);
-            gemm::matmul_nt_acc(
-                &q[row0 * d..(row0 + rows) * d],
-                &k[col0 * d..(col0 + cols) * d],
-                rows,
-                d,
-                cols,
-                s_tile,
-            );
-            stats.macs += (rows * cols * d) as u64;
-            for sv in s_tile.iter_mut() {
-                *sv *= cfg.scale;
-            }
-
-            if class == BlockClass::PartiallyMasked {
-                apply_tile_mask(s_tile, mask, row0, rows, col0, cols, stats);
-            }
-
-            // online softmax update (Alg. 1 lines 25-26)
-            for x in 0..rows {
-                let srow = &mut s_tile[x * cols..(x + 1) * cols];
-                let mut row_max = NEG_INF;
-                for &sv in srow.iter() {
-                    row_max = row_max.max(sv);
-                }
-                let m_new = m_run[x].max(row_max);
-                let m_safe = if m_new.is_finite() { m_new } else { 0.0 };
-                let a = if m_run[x].is_finite() { (m_run[x] - m_safe).exp() } else { 0.0 };
-                let mut row_sum = 0f32;
-                for sv in srow.iter_mut() {
-                    let p = (*sv - m_safe).exp(); // exp(-inf) == 0 for masked
-                    *sv = p;
-                    row_sum += p;
-                }
-                l_run[x] = a * l_run[x] + row_sum;
-                m_run[x] = m_new;
-                alpha[x] = a;
-            }
-            gemm::scale_rows(&mut o_acc[..rows * d], &alpha[..rows], rows, d);
-            // O += P V_j
-            gemm::matmul_nn_acc(
-                s_tile,
-                &v[col0 * d..(col0 + cols) * d],
-                rows,
-                cols,
-                d,
-                &mut o_acc[..rows * d],
-            );
-            stats.macs += (rows * cols * d) as u64;
-        }
-
-        // finalize (Alg. 1 lines 28-29)
-        for x in 0..rows {
-            let i = row0 + x;
-            if l_run[x] > 0.0 {
-                let inv = 1.0 / l_run[x];
-                for dd in 0..d {
-                    out[i * d + dd] = o_acc[x * d + dd] * inv;
-                }
-                let m_safe = if m_run[x].is_finite() { m_run[x] } else { 0.0 };
-                lse[i] = m_safe + l_run[x].ln();
-            } // fully-masked row: output stays 0, lse stays -inf
-        }
+    for bi in 0..sched.tr {
+        let row0 = bi * cfg.br;
+        let (ob, lb) = forward_row_block(q, kt, v, n, d, mask, cfg, sched, bi, stats);
+        out[row0 * d..row0 * d + ob.len()].copy_from_slice(&ob);
+        lse[row0..row0 + lb.len()].copy_from_slice(&lb);
     }
     AttnOutput { o: out, lse }
 }
@@ -230,13 +282,13 @@ pub fn flashmask_forward(
     cfg: AttnConfig,
     skip: bool,
 ) -> (AttnOutput, TileStats) {
-    let (br, bc) = (cfg.br, cfg.bc);
     assert_eq!(q.len(), n * d);
     assert_eq!(mask.n(), n);
-    let classes = classify_tiles(mask, table, n.div_ceil(br), n.div_ceil(bc), br, bc, skip);
+    let sched = TileSchedule::build(mask, table, n, cfg, skip);
+    let kt = gemm::PackedKt::pack(k, n, d, cfg.bc);
     let mut stats = TileStats::default();
-    add_census(&mut stats, &classes);
-    let out = forward_tiles(q, k, v, n, d, mask, cfg, &classes, &mut stats);
+    add_census(&mut stats, &sched.classes);
+    let out = forward_tiles(q, &kt, v, n, d, mask, cfg, &sched, &mut stats);
     (out, stats)
 }
 
@@ -267,24 +319,84 @@ pub fn flashmask_forward_grouped(
     cfg: AttnConfig,
     skip: bool,
 ) -> (Vec<AttnOutput>, TileStats) {
+    flashmask_forward_grouped_parallel(q, k, v, n, d, layout, mask, table, cfg, skip, 1)
+}
+
+/// [`flashmask_forward_grouped`] with (head × row-block) work
+/// partitioning across up to `max_threads` OS threads.
+///
+/// The grid of `q_heads · ⌈n/Br⌉` row-block items is cut into
+/// cost-weighted contiguous chunks by [`parallel_2d`] (weight =
+/// executed tiles per row block from the interval schedule), so a
+/// single long 1-head sequence saturates every core and causal
+/// workloads don't tail-stall on the heavy last rows.  Row blocks are
+/// independent in Algorithm 1, so the result is **bitwise identical**
+/// to the sequential kernel at any thread count (asserted in the tests
+/// below).  The Eq. 4 schedule is built once per mask and each KV
+/// head's K is packed once; both are shared read-only across all
+/// threads and all query heads of the head's group.
+#[allow(clippy::too_many_arguments)]
+pub fn flashmask_forward_grouped_parallel(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    layout: HeadLayout,
+    mask: &FlashMask,
+    table: &BlockTable,
+    cfg: AttnConfig,
+    skip: bool,
+    max_threads: usize,
+) -> (Vec<AttnOutput>, TileStats) {
     assert_eq!(q.len(), layout.q_heads * n * d, "q must be [q_heads, n, d]");
     assert_eq!(k.len(), layout.kv_heads * n * d, "k must be [kv_heads, n, d]");
     assert_eq!(v.len(), layout.kv_heads * n * d, "v must be [kv_heads, n, d]");
     assert_eq!(mask.n(), n);
-    let (br, bc) = (cfg.br, cfg.bc);
-    let classes = classify_tiles(mask, table, n.div_ceil(br), n.div_ceil(bc), br, bc, skip);
-    let g = layout.group();
+    let sched = TileSchedule::build(mask, table, n, cfg, skip);
+    // pack each KV head's K once; every row block of every query head
+    // in the head's group streams the same packed tiles
+    let kts: Vec<gemm::PackedKt> = (0..layout.kv_heads)
+        .map(|kh| gemm::PackedKt::pack(&k[kh * n * d..(kh + 1) * n * d], n, d, cfg.bc))
+        .collect();
     let mut stats = TileStats::default();
-    let mut outs = Vec::with_capacity(layout.q_heads);
-    for kh in 0..layout.kv_heads {
+    for _ in 0..layout.kv_heads {
         // one classification pass per KV head; the group reuses it
-        add_census(&mut stats, &classes);
-        let kk = &k[kh * n * d..(kh + 1) * n * d];
-        let vv = &v[kh * n * d..(kh + 1) * n * d];
-        for qh in kh * g..(kh + 1) * g {
-            let qq = &q[qh * n * d..(qh + 1) * n * d];
-            outs.push(forward_tiles(qq, kk, vv, n, d, mask, cfg, &classes, &mut stats));
+        add_census(&mut stats, &sched.classes);
+    }
+    let tr = sched.tr;
+    let results = parallel_2d(layout.q_heads, tr, sched.weights(), max_threads, |h, bi| {
+        let kh = layout.kv_head_of(h);
+        let mut st = TileStats::default();
+        let (ob, lb) = forward_row_block(
+            &q[h * n * d..(h + 1) * n * d],
+            &kts[kh],
+            &v[kh * n * d..(kh + 1) * n * d],
+            n,
+            d,
+            mask,
+            cfg,
+            &sched,
+            bi,
+            &mut st,
+        );
+        (ob, lb, st)
+    });
+    // stitch the head-major, row-block-minor items back into per-head
+    // outputs; stats merge in item order (all counters are additive)
+    let mut outs = Vec::with_capacity(layout.q_heads);
+    let mut items = results.into_iter();
+    for _h in 0..layout.q_heads {
+        let mut o = vec![0f32; n * d];
+        let mut lse = vec![NEG_INF; n];
+        for bi in 0..tr {
+            let (ob, lb, st) = items.next().expect("one item per (head, row block)");
+            stats.merge(&st);
+            let row0 = bi * cfg.br;
+            o[row0 * d..row0 * d + ob.len()].copy_from_slice(&ob);
+            lse[row0..row0 + lb.len()].copy_from_slice(&lb);
         }
+        outs.push(AttnOutput { o, lse });
     }
     (outs, stats)
 }
@@ -603,6 +715,209 @@ mod tests {
         let want = dense::dense_forward(&q, &k, &v, n, d, &mask.dense_bias(), cfg.scale);
         for (a, b) in got.o.iter().zip(&want.o) {
             assert!((a - b).abs() < 2e-5);
+        }
+    }
+
+    /// The pre-refactor forward path, kept verbatim as a differential
+    /// oracle: loose-layout `matmul_nt_acc`, separate scale pass,
+    /// scalar per-row online softmax, dense `for bj in 0..tc` scan with
+    /// per-tile branch skipping.  The register-blocked/packed/
+    /// interval-scheduled kernel must match it within 1e-5 (different
+    /// float-accumulation order, identical math).
+    #[allow(clippy::too_many_arguments)]
+    fn reference_forward(
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        n: usize,
+        d: usize,
+        mask: &FlashMask,
+        table: &BlockTable,
+        cfg: AttnConfig,
+        skip: bool,
+    ) -> AttnOutput {
+        let (br, bc) = (cfg.br, cfg.bc);
+        let (tr, tc) = (n.div_ceil(br), n.div_ceil(bc));
+        let mut out = vec![0f32; n * d];
+        let mut lse = vec![NEG_INF; n];
+        let mut s = vec![0f32; br * bc];
+        for bi in 0..tr {
+            let row0 = bi * br;
+            let rows = br.min(n - row0);
+            let mut o_acc = vec![0f32; rows * d];
+            let mut m_run = vec![NEG_INF; rows];
+            let mut l_run = vec![0f32; rows];
+            for bj in 0..tc {
+                if tile_class(mask, table, bi, br, bj, bc, skip) == BlockClass::FullyMasked {
+                    continue;
+                }
+                let col0 = bj * bc;
+                let cols = bc.min(n - col0);
+                let s_tile = &mut s[..rows * cols];
+                s_tile.fill(0.0);
+                gemm::matmul_nt_acc(
+                    &q[row0 * d..(row0 + rows) * d],
+                    &k[col0 * d..(col0 + cols) * d],
+                    rows,
+                    d,
+                    cols,
+                    s_tile,
+                );
+                for sv in s_tile.iter_mut() {
+                    *sv *= cfg.scale;
+                }
+                let mut dummy = TileStats::default();
+                apply_tile_mask(s_tile, mask, row0, rows, col0, cols, &mut dummy);
+                for x in 0..rows {
+                    let srow = &mut s_tile[x * cols..(x + 1) * cols];
+                    let mut row_max = NEG_INF;
+                    for &sv in srow.iter() {
+                        row_max = row_max.max(sv);
+                    }
+                    let m_new = m_run[x].max(row_max);
+                    let m_safe = if m_new.is_finite() { m_new } else { 0.0 };
+                    let a = if m_run[x].is_finite() { (m_run[x] - m_safe).exp() } else { 0.0 };
+                    let mut row_sum = 0f32;
+                    for sv in srow.iter_mut() {
+                        let p = (*sv - m_safe).exp();
+                        *sv = p;
+                        row_sum += p;
+                    }
+                    l_run[x] = a * l_run[x] + row_sum;
+                    m_run[x] = m_new;
+                    for dd in 0..d {
+                        o_acc[x * d + dd] *= a;
+                    }
+                }
+                gemm::matmul_nn_acc(
+                    s_tile,
+                    &v[col0 * d..(col0 + cols) * d],
+                    rows,
+                    cols,
+                    d,
+                    &mut o_acc,
+                );
+            }
+            for x in 0..rows {
+                if l_run[x] > 0.0 {
+                    let inv = 1.0 / l_run[x];
+                    for dd in 0..d {
+                        out[(row0 + x) * d + dd] = o_acc[x * d + dd] * inv;
+                    }
+                    let m_safe = if m_run[x].is_finite() { m_run[x] } else { 0.0 };
+                    lse[row0 + x] = m_safe + l_run[x].ln();
+                }
+            }
+        }
+        AttnOutput { o: out, lse }
+    }
+
+    #[test]
+    fn forward_matches_pre_refactor_reference_all_masks_odd_shapes() {
+        // satellite: output + lse within 1e-5 of the pre-refactor path
+        // for every benchmark mask kind, at odd head dim (d = 80) and n
+        // not a multiple of the tile size, plus the visit-count
+        // invariant executed <= visited <= dense trip count
+        for (n, d) in [(100usize, 80usize), (96, 16)] {
+            let (q, k, v) = setup(n, d, 31);
+            let cfg = AttnConfig::new(32, 32, d);
+            for (kind, mask) in builders::benchmark_suite(n, 11) {
+                let table = BlockTable::build(&mask, cfg.bc);
+                let (got, st) = flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+                let want = reference_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+                for (i, (a, b)) in got.o.iter().zip(&want.o).enumerate() {
+                    assert!((a - b).abs() < 1e-5, "{kind} n={n} d={d} o[{i}]: {a} vs {b}");
+                }
+                for (i, (a, b)) in got.lse.iter().zip(&want.lse).enumerate() {
+                    if a.is_finite() || b.is_finite() {
+                        assert!((a - b).abs() < 1e-5, "{kind} lse[{i}]: {a} vs {b}");
+                    }
+                }
+                // interval scheduling: never fewer trips than executed
+                // tiles, never more than the old dense scan paid
+                assert!(
+                    st.tiles_partial + st.tiles_unmasked <= st.tiles_visited,
+                    "{kind}: visited {} < executed {}",
+                    st.tiles_visited,
+                    st.tiles_partial + st.tiles_unmasked
+                );
+                assert!(
+                    st.tiles_visited <= st.tiles_total,
+                    "{kind}: visited {} > dense trips {}",
+                    st.tiles_visited,
+                    st.tiles_total
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_ranges_exclude_only_fully_masked_tiles() {
+        // soundness of the per-row-block visit ranges: everything
+        // outside [bj_lo, bj_hi) is FullyMasked, and the executed
+        // weights agree with the class table
+        let n = 128;
+        let cfg = AttnConfig::new(32, 32, 8);
+        for (kind, mask) in builders::benchmark_suite(n, 19) {
+            let table = BlockTable::build(&mask, cfg.bc);
+            let sched = TileSchedule::build(&mask, &table, n, cfg, true);
+            for bi in 0..sched.tr {
+                let (lo, hi) = sched.range(bi);
+                let mut exec = 0u64;
+                for bj in 0..sched.tc {
+                    let class = sched.class(bi, bj);
+                    assert_eq!(
+                        class,
+                        tile_class(&mask, &table, bi, cfg.br, bj, cfg.bc, true),
+                        "{kind} ({bi},{bj})"
+                    );
+                    if bj < lo || bj >= hi {
+                        assert_eq!(
+                            class,
+                            BlockClass::FullyMasked,
+                            "{kind} ({bi},{bj}): outside range but not masked"
+                        );
+                    } else if class != BlockClass::FullyMasked {
+                        exec += 1;
+                    }
+                }
+                assert_eq!(exec, sched.weights()[bi], "{kind} row block {bi}");
+                // tight endpoints: a non-empty range starts and ends on
+                // executed tiles
+                if lo < hi {
+                    assert_ne!(sched.class(bi, lo), BlockClass::FullyMasked, "{kind} {bi}");
+                    assert_ne!(sched.class(bi, hi - 1), BlockClass::FullyMasked, "{kind} {bi}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_parallel_matches_sequential_bitwise() {
+        // row blocks are independent, so any thread count must
+        // reproduce the sequential kernel bit for bit — outputs, lse
+        // and stats
+        let (n, d) = (100, 8);
+        let layout = HeadLayout::new(4, 2);
+        let mut rng = Rng::new(41);
+        let q = rand_vec(layout.q_heads * n * d, &mut rng);
+        let k = rand_vec(layout.kv_heads * n * d, &mut rng);
+        let v = rand_vec(layout.kv_heads * n * d, &mut rng);
+        let cfg = AttnConfig::new(32, 16, d);
+        for (kind, mask) in builders::benchmark_suite(n, 23) {
+            let table = BlockTable::build(&mask, cfg.bc);
+            let (want, ws) =
+                flashmask_forward_grouped(&q, &k, &v, n, d, layout, &mask, &table, cfg, true);
+            for threads in [2usize, 3, 8] {
+                let (got, gs) = flashmask_forward_grouped_parallel(
+                    &q, &k, &v, n, d, layout, &mask, &table, cfg, true, threads,
+                );
+                for h in 0..layout.q_heads {
+                    assert_eq!(got[h].o, want[h].o, "{kind} t={threads} head {h}");
+                    assert_eq!(got[h].lse, want[h].lse, "{kind} t={threads} head {h} lse");
+                }
+                assert_eq!(gs, ws, "{kind} t={threads}: stats diverged");
+            }
         }
     }
 

@@ -1,33 +1,276 @@
-//! Small dense matmul microkernels for the blocked attention engine.
+//! Dense matmul microkernels for the blocked attention engine.
 //!
-//! Row-major f32.  These are the hot inner loops of the simulator; they
-//! use 8-lane dot reductions and 2-row-unrolled axpy so LLVM vectorizes
-//! (see EXPERIMENTS.md §Perf for the measured iteration history).
+//! Row-major f32, three tiers (EXPERIMENTS.md §Perf tracks the measured
+//! iteration history):
+//!
+//! 1. **Register-blocked packed kernel** ([`matmul_nt_packed`]) — the
+//!    S = Q K^T hot path.  Operands are re-laid out into zero-padded
+//!    [`PackedBlock`]s (depth rounded up to the 8-lane width), so the
+//!    4×2 register tile streams full SIMD chunks with no remainder
+//!    loop, keeps eight independent 8-lane accumulators live (enough
+//!    ILP to hide FMA latency), and amortizes every K-row load over
+//!    four query rows.  The softmax `scale` is fused into the final
+//!    accumulator reduction, removing the separate scaling pass over
+//!    the score tile.  [`PackedKt`] packs a whole K head once per
+//!    column block; the pack cost is then reused across **every row
+//!    block and every query head of a GQA group** (the data-layout
+//!    analogue of the classify-once reuse).
+//! 2. **Lane-blocked loose kernels** ([`matmul_nt_acc`],
+//!    [`matmul_nn_acc`], [`matmul_tn_acc`]) — unpacked fallbacks used
+//!    by the backward pass and the baseline engines.  [`dot`] keeps 8
+//!    independent partial sums and folds the `len % 8` tail into the
+//!    lane accumulators, so shapes like d = 80 stay on the parallel
+//!    accumulation path instead of degrading to a serial chain.
+//! 3. **Softmax row helpers** ([`row_max`], [`exp_sub_sum`]) — the
+//!    online-softmax inner pass as two lane-parallel sweeps instead of
+//!    the scalar per-element loop.
 
-const LANES: usize = 8;
+pub(crate) const LANES: usize = 8;
+/// Register-tile rows (query rows per microkernel invocation).
+pub const MR: usize = 4;
+/// Register-tile columns (key rows per microkernel invocation).
+pub const NR: usize = 2;
+
+/// Fused multiply-add when the target actually has an FMA unit;
+/// plain mul+add otherwise (`f32::mul_add` without hardware FMA lowers
+/// to a libm call, which would be far slower than the unfused form).
+#[inline(always)]
+fn fmadd(a: f32, b: f32, acc: f32) -> f32 {
+    #[cfg(target_feature = "fma")]
+    {
+        a.mul_add(b, acc)
+    }
+    #[cfg(not(target_feature = "fma"))]
+    {
+        acc + a * b
+    }
+}
 
 /// 8-lane dot product: independent partial sums let LLVM vectorize the
-/// reduction (plain `s += a*b` is a serial dependency chain).
+/// reduction (plain `s += a*b` is a serial dependency chain).  The
+/// remainder elements are folded into distinct lane accumulators —
+/// a `len % 8` tail (d = 80, 100, …) costs one extra partial chunk,
+/// not a serial scalar loop.
 #[inline]
-fn dot(a: &[f32], b: &[f32]) -> f32 {
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let chunks = a.len() / LANES;
     let mut acc = [0f32; LANES];
     for c in 0..chunks {
-        let ac = &a[c * LANES..(c + 1) * LANES];
-        let bc = &b[c * LANES..(c + 1) * LANES];
+        let ac: &[f32; LANES] = a[c * LANES..(c + 1) * LANES].try_into().unwrap();
+        let bc: &[f32; LANES] = b[c * LANES..(c + 1) * LANES].try_into().unwrap();
         for l in 0..LANES {
-            acc[l] += ac[l] * bc[l];
+            acc[l] = fmadd(ac[l], bc[l], acc[l]);
         }
     }
-    let mut s = acc.iter().sum::<f32>();
-    for kk in chunks * LANES..a.len() {
-        s += a[kk] * b[kk];
+    // tail: fold into the lane accumulators (tail length < LANES, so
+    // each tail element lands in its own independent lane)
+    for (l, kk) in (chunks * LANES..a.len()).enumerate() {
+        acc[l] = fmadd(a[kk], b[kk], acc[l]);
     }
-    s
+    acc.iter().sum()
 }
 
-/// `out[m,n] += a[m,k] @ b[n,k]^T` — the S = Q K^T shape.
+/// A row-panel with the depth axis zero-padded to a multiple of
+/// [`LANES`]: row `i` lives at `data[i*kp .. (i+1)*kp]` with
+/// `data[i*kp + k ..]` zeroed.  Padding makes every microkernel chunk a
+/// full SIMD width — the zero lanes contribute exact zeros to the
+/// accumulators, so no remainder loop ever runs.
+#[derive(Clone, Debug, Default)]
+pub struct PackedBlock {
+    rows: usize,
+    k: usize,
+    kp: usize,
+    data: Vec<f32>,
+}
+
+impl PackedBlock {
+    pub fn new() -> PackedBlock {
+        PackedBlock::default()
+    }
+
+    /// (Re)fill from a row-major `[rows, k]` slice, reusing the buffer.
+    pub fn pack(&mut self, src: &[f32], rows: usize, k: usize) {
+        debug_assert_eq!(src.len(), rows * k);
+        let kp = k.div_ceil(LANES) * LANES;
+        self.rows = rows;
+        self.k = k;
+        self.kp = kp;
+        self.data.resize(rows * kp, 0.0);
+        for i in 0..rows {
+            self.data[i * kp..i * kp + k].copy_from_slice(&src[i * k..(i + 1) * k]);
+            self.data[i * kp + k..(i + 1) * kp].fill(0.0);
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Logical (unpadded) depth.
+    pub fn depth(&self) -> usize {
+        self.k
+    }
+
+    /// Padded row `i` (`kp` elements, tail zeroed).
+    #[inline]
+    fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.kp..(i + 1) * self.kp]
+    }
+}
+
+/// K for one head, packed per `bc`-wide column block.  Built **once per
+/// KV head** and reused by every row block of every query head in the
+/// head's group — the packing cost is amortized by `tr × group`.
+#[derive(Clone, Debug)]
+pub struct PackedKt {
+    bc: usize,
+    blocks: Vec<PackedBlock>,
+}
+
+impl PackedKt {
+    /// Pack row-major `k[n, d]` into `⌈n/bc⌉` padded column blocks.
+    pub fn pack(k: &[f32], n: usize, d: usize, bc: usize) -> PackedKt {
+        debug_assert_eq!(k.len(), n * d);
+        let blocks = (0..n.div_ceil(bc))
+            .map(|bj| {
+                let col0 = bj * bc;
+                let cols = bc.min(n - col0);
+                let mut b = PackedBlock::new();
+                b.pack(&k[col0 * d..(col0 + cols) * d], cols, d);
+                b
+            })
+            .collect();
+        PackedKt { bc, blocks }
+    }
+
+    pub fn bc(&self) -> usize {
+        self.bc
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// The packed key block for column block `bj`.
+    pub fn block(&self, bj: usize) -> &PackedBlock {
+        &self.blocks[bj]
+    }
+}
+
+/// Lane dot over two padded rows (no tail by construction).
+#[inline]
+fn dot_padded(a: &[f32], b: &[f32], chunks: usize) -> f32 {
+    let mut acc = [0f32; LANES];
+    for c in 0..chunks {
+        let av: &[f32; LANES] = a[c * LANES..(c + 1) * LANES].try_into().unwrap();
+        let bv: &[f32; LANES] = b[c * LANES..(c + 1) * LANES].try_into().unwrap();
+        for l in 0..LANES {
+            acc[l] = fmadd(av[l], bv[l], acc[l]);
+        }
+    }
+    acc.iter().sum()
+}
+
+/// `out[m, n] = scale * (A B^T)` over packed operands — the fused
+/// S = (Q K^T)·scale shape.  4×2 register tiling: four A rows × two B
+/// rows share eight independent 8-lane accumulators, so each loaded A
+/// chunk is reused twice and each B chunk four times, and the FMA
+/// chains stay deep enough to saturate the ports.  Writes (does not
+/// accumulate): the score tile needs no pre-zeroing pass.
+pub fn matmul_nt_packed(a: &PackedBlock, b: &PackedBlock, scale: f32, out: &mut [f32]) {
+    assert_eq!(a.kp, b.kp, "packed operands must share the padded depth");
+    let (m, n) = (a.rows, b.rows);
+    debug_assert_eq!(out.len(), m * n);
+    let chunks = a.kp / LANES;
+    let mut i = 0;
+    while i + MR <= m {
+        let ar = [a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3)];
+        let mut j = 0;
+        while j + NR <= n {
+            let br = [b.row(j), b.row(j + 1)];
+            let mut acc = [[0f32; LANES]; MR * NR];
+            for c in 0..chunks {
+                let off = c * LANES;
+                for (r, arow) in ar.iter().enumerate() {
+                    let av: &[f32; LANES] = arow[off..off + LANES].try_into().unwrap();
+                    for (s, brow) in br.iter().enumerate() {
+                        let bv: &[f32; LANES] = brow[off..off + LANES].try_into().unwrap();
+                        let lane = &mut acc[r * NR + s];
+                        for l in 0..LANES {
+                            lane[l] = fmadd(av[l], bv[l], lane[l]);
+                        }
+                    }
+                }
+            }
+            for r in 0..MR {
+                for s in 0..NR {
+                    out[(i + r) * n + j + s] = scale * acc[r * NR + s].iter().sum::<f32>();
+                }
+            }
+            j += NR;
+        }
+        while j < n {
+            let brow = b.row(j);
+            for (r, arow) in ar.iter().enumerate() {
+                out[(i + r) * n + j] = scale * dot_padded(arow, brow, chunks);
+            }
+            j += 1;
+        }
+        i += MR;
+    }
+    while i < m {
+        let arow = a.row(i);
+        for j in 0..n {
+            out[i * n + j] = scale * dot_padded(arow, b.row(j), chunks);
+        }
+        i += 1;
+    }
+}
+
+/// Max over a score row — lane-parallel (exact: max is order-free).
+#[inline]
+pub fn row_max(s: &[f32]) -> f32 {
+    let chunks = s.len() / LANES;
+    let mut acc = [f32::NEG_INFINITY; LANES];
+    for c in 0..chunks {
+        let sv: &[f32; LANES] = s[c * LANES..(c + 1) * LANES].try_into().unwrap();
+        for l in 0..LANES {
+            acc[l] = acc[l].max(sv[l]);
+        }
+    }
+    for (l, kk) in (chunks * LANES..s.len()).enumerate() {
+        acc[l] = acc[l].max(s[kk]);
+    }
+    acc.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b))
+}
+
+/// In place `s[i] = exp(s[i] - m)`, returning the row sum — the online
+/// softmax exp/accumulate pass with independent partial sums
+/// (`exp(-inf) == 0` keeps masked elements exact).
+#[inline]
+pub fn exp_sub_sum(s: &mut [f32], m: f32) -> f32 {
+    const P: usize = 4;
+    let mut acc = [0f32; P];
+    let chunks = s.len() / P;
+    for c in 0..chunks {
+        let sv = &mut s[c * P..(c + 1) * P];
+        for l in 0..P {
+            let p = (sv[l] - m).exp();
+            sv[l] = p;
+            acc[l] += p;
+        }
+    }
+    for (l, kk) in (chunks * P..s.len()).enumerate() {
+        let p = (s[kk] - m).exp();
+        s[kk] = p;
+        acc[l] += p;
+    }
+    acc.iter().sum()
+}
+
+/// `out[m,n] += a[m,k] @ b[n,k]^T` — the S = Q K^T shape (loose-layout
+/// fallback; the forward hot path uses [`matmul_nt_packed`]).
 pub fn matmul_nt_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
@@ -153,6 +396,119 @@ mod tests {
                 assert!((x - y).abs() < 1e-4, "{x} vs {y}");
             }
         }
+    }
+
+    #[test]
+    fn nt_tail_shapes_match_naive() {
+        // satellite: d % 8 != 0 shapes (the lane-folded tail) must stay
+        // on the fast path *and* stay correct — d = 80 is the ISSUE's
+        // canonical odd head dim
+        let mut rng = Rng::new(7);
+        for k in [1usize, 3, 5, 7, 9, 15, 17, 80, 100] {
+            let (m, n) = (3, 4);
+            let a = rand(m * k, &mut rng);
+            let b = rand(n * k, &mut rng);
+            let mut out = vec![0.0; m * n];
+            matmul_nt_acc(&a, &b, m, k, n, &mut out);
+            let want = naive_nt(&a, &b, m, k, n);
+            for (x, y) in out.iter().zip(&want) {
+                assert!((x - y).abs() < 2e-4, "k={k}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_kernel_matches_naive_awkward_shapes() {
+        // satellite: every m,k,n in {1,3,5,7,80,100} — non-multiples of
+        // the 4×2 register tile and of the 8-lane width, so all edge
+        // paths (odd rows, odd columns, padded depth) are exercised
+        let dims = [1usize, 3, 5, 7, 80, 100];
+        let mut rng = Rng::new(2);
+        for &m in &dims {
+            for &k in &dims {
+                for &n in &dims {
+                    let a = rand(m * k, &mut rng);
+                    let b = rand(n * k, &mut rng);
+                    let mut pa = PackedBlock::new();
+                    pa.pack(&a, m, k);
+                    let mut pb = PackedBlock::new();
+                    pb.pack(&b, n, k);
+                    let mut out = vec![0.0; m * n];
+                    matmul_nt_packed(&pa, &pb, 1.0, &mut out);
+                    let want = naive_nt(&a, &b, m, k, n);
+                    for (i, (x, y)) in out.iter().zip(&want).enumerate() {
+                        assert!(
+                            (x - y).abs() < 2e-4,
+                            "m={m} k={k} n={n} out[{i}]: {x} vs {y}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_kernel_fuses_scale() {
+        let (m, k, n) = (6, 19, 5);
+        let mut rng = Rng::new(3);
+        let a = rand(m * k, &mut rng);
+        let b = rand(n * k, &mut rng);
+        let mut pa = PackedBlock::new();
+        pa.pack(&a, m, k);
+        let mut pb = PackedBlock::new();
+        pb.pack(&b, n, k);
+        let mut out = vec![0.0; m * n];
+        matmul_nt_packed(&pa, &pb, 0.125, &mut out);
+        let want = naive_nt(&a, &b, m, k, n);
+        for (x, y) in out.iter().zip(&want) {
+            assert!((x - 0.125 * y).abs() < 1e-4, "{x} vs {}", 0.125 * y);
+        }
+    }
+
+    #[test]
+    fn packed_block_reuse_and_padding() {
+        // repacking a larger then smaller panel must not leak stale data
+        let mut p = PackedBlock::new();
+        p.pack(&[1.0; 24], 2, 12); // kp = 16
+        p.pack(&[2.0; 6], 2, 3); // kp = 8, reused buffer
+        assert_eq!(p.rows(), 2);
+        assert_eq!(p.depth(), 3);
+        for i in 0..2 {
+            let r = p.row(i);
+            assert_eq!(&r[..3], &[2.0, 2.0, 2.0]);
+            assert!(r[3..].iter().all(|&x| x == 0.0), "padding must be zero");
+        }
+    }
+
+    #[test]
+    fn packed_kt_blocks_cover_the_head() {
+        let (n, d, bc) = (100, 5, 32);
+        let mut rng = Rng::new(4);
+        let k = rand(n * d, &mut rng);
+        let kt = PackedKt::pack(&k, n, d, bc);
+        assert_eq!(kt.n_blocks(), 4);
+        assert_eq!(kt.bc(), bc);
+        assert_eq!(kt.block(0).rows(), 32);
+        assert_eq!(kt.block(3).rows(), 4); // ragged tail block
+        // block 3 row 0 is K row 96
+        let mut pq = PackedBlock::new();
+        pq.pack(&k[96 * d..97 * d], 1, d);
+        let mut s = vec![0.0; 4];
+        matmul_nt_packed(&pq, kt.block(3), 1.0, &mut s);
+        let want: f32 = k[96 * d..97 * d].iter().map(|x| x * x).sum();
+        assert!((s[0] - want).abs() < 1e-4);
+    }
+
+    #[test]
+    fn row_max_and_exp_sub_sum() {
+        let mut s = vec![0.5f32, -1.0, 3.0, f32::NEG_INFINITY, 2.0, 0.0, -2.5, 1.5, 0.25, -0.75];
+        assert_eq!(row_max(&s), 3.0);
+        assert_eq!(row_max(&[f32::NEG_INFINITY; 3]), f32::NEG_INFINITY);
+        let want_sum: f32 = s.iter().map(|&x| (x - 3.0f32).exp()).sum();
+        let got_sum = exp_sub_sum(&mut s, 3.0);
+        assert!((got_sum - want_sum).abs() < 1e-5);
+        assert_eq!(s[3], 0.0, "masked element must become exactly zero");
+        assert!((s[2] - 1.0).abs() < 1e-6);
     }
 
     #[test]

@@ -114,6 +114,15 @@ pub struct TileStats {
     pub tiles_skipped: usize,
     pub tiles_partial: usize,
     pub tiles_unmasked: usize,
+    /// Inner-loop trips actually performed by the interval-driven tile
+    /// schedule (counted per compute pass, i.e. per query head).  Lies
+    /// between the executed-tile count (`tiles_partial +
+    /// tiles_unmasked` per pass) and the dense trip count the old
+    /// `for bj in 0..tc` scan paid (`tiles_total` per pass): tiles
+    /// outside a row block's `[bj_lo, bj_hi)` visit range are never
+    /// visited at all, tiles inside it that Eq. 4 masks still cost one
+    /// (branch-only) trip.
+    pub tiles_visited: usize,
     /// Multiply-accumulate count of executed matmuls (2 per MAC = FLOPs).
     pub macs: u64,
     /// Element-wise mask evaluations (the Flex `mask_mod` cost proxy).
@@ -130,6 +139,7 @@ impl TileStats {
         self.tiles_skipped += other.tiles_skipped;
         self.tiles_partial += other.tiles_partial;
         self.tiles_unmasked += other.tiles_unmasked;
+        self.tiles_visited += other.tiles_visited;
         self.macs += other.macs;
         self.mask_evals += other.mask_evals;
     }
@@ -143,32 +153,97 @@ pub struct AttnGrads {
     pub dv: Vec<f32>,
 }
 
-/// Run `heads` independent single-head problems across OS threads
-/// (the coordinator's head-parallel hot path).
+/// Cost-weighted work partitioning over a `(heads × blocks)` grid — the
+/// generalization of head-only parallelism to the sequence axis
+/// (FlashAttention-2's work-partitioning observation on this engine).
+///
+/// Work item `(h, b)` costs `weight[b]` (the caller passes the
+/// visited-tile count per row block, so a causal workload's heavy last
+/// rows don't tail-stall one thread while the early-row threads idle).
+/// Items are cut into at most `max_threads` *contiguous* chunks of
+/// approximately equal total weight — contiguity keeps each thread on
+/// one head's memory for as long as possible and makes the result
+/// order (head-major, block-minor) deterministic.
+///
+/// A single long sequence (`heads == 1`, many row blocks) now spreads
+/// across every core; head-only parallelism gave it exactly one.
+pub fn parallel_2d<F, R>(
+    heads: usize,
+    blocks: usize,
+    weight: &[u64],
+    max_threads: usize,
+    f: F,
+) -> Vec<R>
+where
+    F: Fn(usize, usize) -> R + Sync,
+    R: Send,
+{
+    assert!(max_threads >= 1);
+    assert_eq!(weight.len(), blocks, "one weight per block");
+    let items = heads * blocks;
+    if items == 0 {
+        return Vec::new();
+    }
+    let bounds = chunk_bounds(weight, heads, max_threads.min(items));
+    let mut results: Vec<Option<R>> = (0..items).map(|_| None).collect();
+    std::thread::scope(|scope| {
+        let mut rest: &mut [Option<R>] = &mut results;
+        let mut start = 0;
+        for &end in &bounds {
+            let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(end - start);
+            rest = tail;
+            let f = &f;
+            scope.spawn(move || {
+                for (off, slot) in chunk.iter_mut().enumerate() {
+                    let it = start + off;
+                    *slot = Some(f(it / blocks, it % blocks));
+                }
+            });
+            start = end;
+        }
+    });
+    results.into_iter().map(|r| r.unwrap()).collect()
+}
+
+/// Contiguous chunk ends (ascending, last == `heads * weight.len()`)
+/// cutting the item grid into at most `threads` pieces of ~equal total
+/// weight: chunk `c` closes once the running weight reaches its
+/// proportional share `(c+1)/threads` of the total.  Item `it` weighs
+/// `weight[it % blocks].max(1)` (the `max(1)` floor keeps zero-cost
+/// blocks from starving a chunk) — indexed modularly, so no per-item
+/// weight vector is materialized.  Every chunk is non-empty.
+fn chunk_bounds(weight: &[u64], heads: usize, threads: usize) -> Vec<usize> {
+    let blocks = weight.len();
+    let items = heads * blocks;
+    debug_assert!(threads >= 1 && threads <= items);
+    let w = |it: usize| weight[it % blocks].max(1);
+    let total: u64 = (0..items).map(w).sum();
+    let mut bounds: Vec<usize> = Vec::with_capacity(threads);
+    let mut acc = 0u64;
+    for it in 0..items {
+        acc += w(it);
+        if bounds.len() + 1 < threads
+            && acc * threads as u64 >= total * (bounds.len() as u64 + 1)
+        {
+            bounds.push(it + 1);
+        }
+    }
+    if bounds.last() != Some(&items) {
+        bounds.push(items);
+    }
+    bounds
+}
+
+/// Run `heads` independent single-head problems across OS threads —
+/// [`parallel_2d`] degenerated to a single uniform-weight block per
+/// head (the pre-row-block-partitioning behaviour, kept for callers
+/// whose work really is one item per head).
 pub fn parallel_heads<F, R>(heads: usize, max_threads: usize, f: F) -> Vec<R>
 where
     F: Fn(usize) -> R + Sync,
     R: Send,
 {
-    assert!(max_threads >= 1);
-    if heads == 0 {
-        return Vec::new();
-    }
-    let mut results: Vec<Option<R>> = (0..heads).map(|_| None).collect();
-    // one chunk size shared by the chunking and the spawned-closure
-    // index math, so the two can never drift apart
-    let per = heads.div_ceil(max_threads.min(heads));
-    std::thread::scope(|scope| {
-        for (ci, chunk) in results.chunks_mut(per).enumerate() {
-            let f = &f;
-            scope.spawn(move || {
-                for (off, slot) in chunk.iter_mut().enumerate() {
-                    *slot = Some(f(ci * per + off));
-                }
-            });
-        }
-    });
-    results.into_iter().map(|r| r.unwrap()).collect()
+    parallel_2d(heads, 1, &[1], max_threads, |h, _| f(h))
 }
 
 /// Reference finite-difference gradient check helper (tests only).
@@ -202,7 +277,10 @@ pub(crate) mod testutil {
     }
 }
 
-pub use flash::{flashmask_backward, flashmask_forward, flashmask_forward_grouped};
+pub use flash::{
+    flashmask_backward, flashmask_forward, flashmask_forward_grouped,
+    flashmask_forward_grouped_parallel,
+};
 
 /// Convenience: FLASHMASK forward for one head with stats.
 pub fn forward_single_head(
@@ -260,5 +338,66 @@ mod tests {
     fn parallel_heads_zero_heads_is_empty() {
         let got: Vec<usize> = parallel_heads(0, 4, |h| h);
         assert!(got.is_empty());
+    }
+
+    #[test]
+    fn parallel_2d_preserves_item_order() {
+        // result order must be head-major, block-minor regardless of
+        // thread count or weight skew
+        let weights: Vec<u64> = vec![1, 100, 3, 7];
+        for threads in [1usize, 2, 3, 8, 64] {
+            let got = parallel_2d(3, 4, &weights, threads, |h, b| (h, b));
+            let want: Vec<(usize, usize)> =
+                (0..3).flat_map(|h| (0..4).map(move |b| (h, b))).collect();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_2d_zero_weights_and_degenerate_grids() {
+        // all-zero weights (fully masked row blocks) must not divide by
+        // zero or starve items
+        let got = parallel_2d(2, 3, &[0, 0, 0], 4, |h, b| h * 10 + b);
+        assert_eq!(got, vec![0, 1, 2, 10, 11, 12]);
+        // single item, many threads
+        let got = parallel_2d(1, 1, &[5], 16, |h, b| (h, b));
+        assert_eq!(got, vec![(0, 0)]);
+        // empty grid
+        let got: Vec<usize> = parallel_2d(0, 4, &[1, 1, 1, 1], 4, |_, b| b);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn chunk_bounds_balance_causal_triangle() {
+        // a causal triangle of weights (row block bi visits bi+1 tiles):
+        // equal-count chunking would give the last chunk ~44% of the
+        // total weight; weighted chunking must keep every chunk near
+        // its 25% share, so the tail rows can't stall one thread
+        let weights: Vec<u64> = (0..64u64).map(|b| b + 1).collect();
+        let total: u64 = weights.iter().sum();
+        let bounds = chunk_bounds(&weights, 1, 4);
+        assert_eq!(*bounds.last().unwrap(), 64);
+        assert!(bounds.len() <= 4);
+        let mut start = 0;
+        for &end in &bounds {
+            assert!(end > start, "chunks must be non-empty");
+            let cw: u64 = weights[start..end].iter().sum();
+            assert!(
+                (cw as f64) < 0.40 * total as f64,
+                "chunk [{start},{end}) holds {cw} of {total}"
+            );
+            start = end;
+        }
+    }
+
+    #[test]
+    fn chunk_bounds_handles_dominant_item() {
+        // one item worth more than everything else: it absorbs several
+        // proportional shares, and the remaining chunks stay non-empty
+        let weights = vec![1u64, 1, 1000, 1, 1, 1];
+        let bounds = chunk_bounds(&weights, 1, 4);
+        assert_eq!(*bounds.last().unwrap(), 6);
+        assert!(bounds.len() <= 4);
+        assert!(bounds.windows(2).all(|w| w[1] > w[0]));
     }
 }

@@ -31,6 +31,7 @@
 use super::kvcache::{PagePool, PagedKv};
 use super::session::DecodeRequest;
 use super::step::DecodeStats;
+use crate::attention::gemm;
 use crate::mask::{BlockClass, FlashMask, IncrementalMaskView, TokenTree};
 use crate::util::rng::Rng;
 
@@ -469,7 +470,39 @@ pub fn verify_rows_group(
     let mut class = vec![BlockClass::FullyMasked; kd];
     let mut active: Vec<usize> = Vec::with_capacity(kd);
 
-    for p in 0..cache.n_pages() {
+    // interval-driven page schedule over the fully-committed region
+    // [0, cp): boundary scans shrink the loop to the union of the
+    // per-node live ranges (each node's row is its logical position
+    // under the base mask).  A page leaves the union only when *every*
+    // node classifies it fully masked; the scan classifies each
+    // excluded page at most once per node — exactly what the old dense
+    // loop paid for it — and early-exits on the first live node at the
+    // boundary, so this is never more classification work than the
+    // `0..n_pages` scan it replaces.  Excluded pages are bulk-accounted
+    // and never enter the hot loop.  Pages from cp on touch the draft
+    // region and are always visited (the tree classifier prunes per
+    // node inside).
+    let np = cache.n_pages();
+    let cp = t0 / ps;
+    let (mut u_lo, mut u_hi) = (0usize, cp);
+    if skip {
+        let all_masked = |p: usize| {
+            (0..kd).all(|i| {
+                base_view.classify_page(base, t0 + tree.depth(i), p) == BlockClass::FullyMasked
+            })
+        };
+        while u_lo < u_hi && all_masked(u_lo) {
+            u_lo += 1;
+        }
+        while u_hi > u_lo && all_masked(u_hi - 1) {
+            u_hi -= 1;
+        }
+    }
+    let bulk_skipped = (u_lo + (cp - u_hi)) as u64;
+    stats.pages_total += kd as u64 * bulk_skipped;
+    stats.pages_skipped += kd as u64 * bulk_skipped;
+
+    for p in (u_lo..u_hi).chain(cp..np) {
         let cols = cache.page_cols(p, ps);
         let col0 = p * ps;
         // pages that end at or before t0 hold only committed rows
@@ -505,19 +538,15 @@ pub fn verify_rows_group(
         // s_{g,i} = q_{g,i} · K_pᵀ * scale for every surviving node,
         // column-outer so each loaded K row is reused across all draft
         // rows of all query heads in the group (the multi-row batching
-        // win: one pass over page memory, group*k dot products of
-        // independent ILP per K row)
+        // win: one pass over page memory, group*k lane-parallel dot
+        // products per K row)
         for c in 0..cols {
             let krow = &kp[c * d..(c + 1) * d];
             for &i in &active {
                 for g in 0..group {
                     let row = g * kd + i;
                     let q_row = &q_rows[row * d..(row + 1) * d];
-                    let mut acc = 0f32;
-                    for dd in 0..d {
-                        acc += q_row[dd] * krow[dd];
-                    }
-                    s[row * ps + c] = acc * scale;
+                    s[row * ps + c] = gemm::dot(q_row, krow) * scale;
                 }
             }
         }

@@ -14,6 +14,7 @@
 //! (asserted in the tests below).
 
 use super::kvcache::{PagePool, PagedKv};
+use crate::attention::gemm;
 use crate::mask::{BlockClass, FlashMask, IncrementalMaskView};
 
 const NEG_INF: f32 = f32::NEG_INFINITY;
@@ -165,15 +166,23 @@ pub fn decode_step_group(
     m_run[..group].fill(NEG_INF);
     l_run[..group].fill(0.0);
 
-    for p in 0..cache.n_pages() {
-        stats.pages_total += 1; // once per KV head, not per query head
+    // interval-driven page schedule: pages outside [p_lo, p_hi) are
+    // fully masked (the range scan classified them), so the hot loop
+    // never visits them; their census is charged in bulk.  Counting
+    // happens once per KV head, not per query head, exactly as before.
+    let np = cache.n_pages();
+    let (p_lo, p_hi) = if skip { view.visit_range(mask, t, np) } else { (0, np) };
+    stats.pages_total += np as u64;
+    stats.pages_skipped += (p_lo + (np - p_hi)) as u64;
+
+    for p in p_lo..p_hi {
         let class = if skip {
             view.classify_page(mask, t, p)
         } else {
             BlockClass::PartiallyMasked
         };
         if class == BlockClass::FullyMasked {
-            stats.pages_skipped += 1;
+            stats.pages_skipped += 1; // interior hole (non-contiguous mask)
             continue;
         }
         let cols = cache.page_cols(p, ps);
@@ -181,16 +190,12 @@ pub fn decode_step_group(
         let kp = pool.page_k(cache.page_id(p));
 
         // s_g = q_g · K_pᵀ * scale, column-outer so each loaded K row
-        // serves the whole query group
+        // serves the whole query group, lane-parallel along d
         for c in 0..cols {
             let krow = &kp[c * d..(c + 1) * d];
             for g in 0..group {
                 let q_row = &q_rows[g * d..(g + 1) * d];
-                let mut acc = 0f32;
-                for dd in 0..d {
-                    acc += q_row[dd] * krow[dd];
-                }
-                s[g * ps + c] = acc * scale;
+                s[g * ps + c] = gemm::dot(q_row, krow) * scale;
             }
         }
         stats.macs += (group * cols * d) as u64;
@@ -354,6 +359,13 @@ mod tests {
             assert!(s_skip.pages_skipped > 0, "nothing skipped");
             assert_eq!(s_dense.pages_skipped, 0);
             assert!(s_skip.macs < s_dense.macs, "skip did not reduce work");
+            // bulk range accounting must preserve the census semantics:
+            // both modes consider every cached page of every step
+            assert_eq!(s_skip.pages_total, s_dense.pages_total);
+            assert_eq!(
+                s_skip.pages_skipped + s_skip.pages_partial + s_skip.pages_unmasked,
+                s_skip.pages_total
+            );
         }
     }
 

@@ -49,7 +49,7 @@ fn main() -> Result<()> {
         "kernel-bench" => {
             let n = args.get_usize("measure-n", 1024).map_err(|e| anyhow!(e))?;
             let hd = args.get_usize("head-dim", 128).map_err(|e| anyhow!(e))?;
-            reports::kernel_mask_report(n, &[8192, 32768, 131072], hd, bench_opts(&args)?);
+            let _ = reports::kernel_mask_report(n, &[8192, 32768, 131072], hd, bench_opts(&args)?);
         }
         "sparsity-bench" => {
             let n = args.get_usize("n", 1024).map_err(|e| anyhow!(e))?;

@@ -51,6 +51,29 @@ impl IncrementalMaskView {
         mask.allowed(t, j)
     }
 
+    /// Page visit range `[lo, hi)` for decode row `t` over the first
+    /// `n_pages` cached pages: every page outside the range is
+    /// FullyMasked (verified — the boundary scan classifies them), so
+    /// the kernel's page loop can run `lo..hi` and bulk-account the
+    /// rest without touching them.  Pages *inside* the range still
+    /// need per-page classification (non-contiguous masks can have
+    /// interior holes).  Under an implicit-causal mask the upper bound
+    /// starts at the diagonal page in O(1); the remaining boundary
+    /// scans cost one classification per *excluded* page — work the
+    /// dense loop paid anyway, moved out of the hot loop.
+    pub fn visit_range(&self, mask: &FlashMask, t: usize, n_pages: usize) -> (usize, usize) {
+        let np = n_pages.min(self.n_pages());
+        let mut hi = if mask.causal { np.min(t / self.page_size + 1) } else { np };
+        let mut lo = 0;
+        while lo < hi && self.classify_page(mask, t, lo) == BlockClass::FullyMasked {
+            lo += 1;
+        }
+        while hi > lo && self.classify_page(mask, t, hi - 1) == BlockClass::FullyMasked {
+            hi -= 1;
+        }
+        (lo, hi)
+    }
+
     /// Page census for row `t` over `n_pages` cached pages:
     /// `(skipped, partial, unmasked)`.
     pub fn row_census(&self, mask: &FlashMask, t: usize, n_pages: usize) -> (usize, usize, usize) {
@@ -174,6 +197,68 @@ mod tests {
         for t in [0, 23, 24, 47, 48, 63] {
             check_sound(&g, t, 16).unwrap();
         }
+    }
+
+    #[test]
+    fn visit_range_bounds_live_pages() {
+        let (n, ps, w) = (128, 16, 16);
+        let m = builders::sliding_window(n, w);
+        let view = IncrementalMaskView::new(&m, ps);
+        // last row: only the diagonal page is live (window 16 == page)
+        let (lo, hi) = view.visit_range(&m, n - 1, view.n_pages());
+        assert_eq!((lo, hi), (7, 8));
+        // first row: page 0 only (causal future bounded in O(1))
+        assert_eq!(view.visit_range(&m, 0, view.n_pages()), (0, 1));
+        // a row masked by page-aligned eviction yields an empty range
+        // (conservative Partial boundary pages stay in range for
+        // non-aligned masks — the kernel element-masks those)
+        let mut ev = builders::causal(32);
+        for j in 0..32 {
+            ev.lts[j] = (j as i32 / 8) * 8; // evicted from its page start
+            ev.lte[j] = 32;
+        }
+        ev.validate().unwrap();
+        let evv = IncrementalMaskView::new(&ev, 8);
+        let (lo, hi) = evv.visit_range(&ev, 20, evv.n_pages());
+        assert!(lo >= hi, "masked row must produce an empty range, got [{lo},{hi})");
+    }
+
+    #[test]
+    fn prop_visit_range_sound_all_benchmark_kinds() {
+        // pages outside [lo, hi) are FullyMasked; non-empty ranges end
+        // on live pages (tight bounds); every live page is inside
+        prop::check(
+            "visit-range-sound",
+            prop::PropConfig { cases: 24, base_seed: 0xBEEF },
+            |rng| {
+                let n = 128;
+                let t = rng.range(0, n as i64) as usize;
+                let ps = *rng.choose(&[8usize, 16, 32]);
+                for kind in MaskKind::BENCHMARK {
+                    let mask = builders::build(kind, n, rng);
+                    let view = IncrementalMaskView::new(&mask, ps);
+                    let np = view.n_pages();
+                    let (lo, hi) = view.visit_range(&mask, t, np);
+                    for page in 0..np {
+                        let class = view.classify_page(&mask, t, page);
+                        if (page < lo || page >= hi) && class != BlockClass::FullyMasked {
+                            return Err(format!(
+                                "{kind}: t={t} ps={ps} page {page} live but outside [{lo},{hi})"
+                            ));
+                        }
+                    }
+                    if lo < hi {
+                        if view.classify_page(&mask, t, lo) == BlockClass::FullyMasked {
+                            return Err(format!("{kind}: t={t} lo {lo} not live"));
+                        }
+                        if view.classify_page(&mask, t, hi - 1) == BlockClass::FullyMasked {
+                            return Err(format!("{kind}: t={t} hi-1 {} not live", hi - 1));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

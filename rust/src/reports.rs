@@ -12,6 +12,7 @@ use crate::mask::{builders, BlockTable, FlashMask, MaskKind};
 use crate::perf::a100_model::{self, Method};
 use crate::perf::{flops, memory_model};
 use crate::util::bench::{bench, BenchOpts};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 use crate::util::table::Table;
 use crate::workload::docgen::{self, Task};
@@ -60,24 +61,53 @@ fn paper_anchor(kind: MaskKind, n: usize) -> Option<f64> {
 ///
 /// `measure_n`: CPU-engine wall-clock size; `paper_ns`: A100-model
 /// projection sizes.  `head_dim` ∈ {64, 128}.
-pub fn kernel_mask_report(measure_n: usize, paper_ns: &[usize], head_dim: usize, opts: BenchOpts) {
+///
+/// Returns the measured section as a machine-readable [`Json`] blob
+/// (one entry per mask) so `scripts/bench.sh` can persist the perf
+/// trajectory into `BENCH_kernel.json`.  Asserts that the
+/// interval-driven tile schedule visits strictly fewer tiles than the
+/// dense `tr*tc` scan on every non-full mask with anything to skip at
+/// this tile granularity — a perf regression in the scheduler fails
+/// the bench loudly.
+pub fn kernel_mask_report(
+    measure_n: usize,
+    paper_ns: &[usize],
+    head_dim: usize,
+    opts: BenchOpts,
+) -> Json {
     // -- measured section (CPU engine) --
     let d = head_dim.min(64); // CPU time budget; structure is what matters
     let (q, k, v) = rand_qkv(measure_n, d, 1);
     let cfg = AttnConfig::new(64.min(measure_n), 64.min(measure_n), d);
     let mut t = Table::new(vec![
-        "mask", "rho", "fm fw ms", "fm bw ms", "dense-mask fw ms", "flex fw ms", "speedup vs dense",
+        "mask", "rho", "fm fw ms", "GF/s", "tiles visited", "fm bw ms", "dense-mask fw ms",
+        "flex fw ms", "speedup vs dense",
     ])
     .title(format!(
         "measured CPU engine, N={measure_n}, d={d} (shape check; A100 projection below)"
     ));
+    let mut json_masks: Vec<Json> = Vec::new();
     for (kind, mask) in builders::benchmark_suite(measure_n, 42) {
         let table = BlockTable::build(&mask, cfg.bc);
         let rho = mask.block_sparsity(cfg.br, cfg.bc);
         let fm_fw = bench("fm_fw", opts, || {
             let _ = flash::flashmask_forward(&q, &k, &v, measure_n, d, &mask, &table, cfg, true);
         });
-        let (fwd, _) = flash::flashmask_forward(&q, &k, &v, measure_n, d, &mask, &table, cfg, true);
+        let (fwd, st) = flash::flashmask_forward(&q, &k, &v, measure_n, d, &mask, &table, cfg, true);
+        // interval scheduling must beat the dense tr*tc scan whenever
+        // Eq. 4 skips anything at this tile granularity (tiny grids or
+        // degenerate mask draws may legitimately have nothing to skip:
+        // then there is nothing for ranges to exclude either)
+        if kind != MaskKind::Full && st.tiles_skipped > 0 {
+            assert!(
+                st.tiles_visited < st.tiles_total,
+                "{kind}: schedule visited {} of {} tiles with {} skipped — interval ranges bought nothing",
+                st.tiles_visited,
+                st.tiles_total,
+                st.tiles_skipped
+            );
+        }
+        let gflops = st.flops() as f64 / (fm_fw.median_ms / 1e3) / 1e9;
         let do_ = q.clone();
         let fm_bw = bench("fm_bw", opts, || {
             let _ = flash::flashmask_backward(
@@ -96,11 +126,25 @@ pub fn kernel_mask_report(measure_n: usize, paper_ns: &[usize], head_dim: usize,
             kind.to_string(),
             format!("{rho:.2}"),
             format!("{:.2}", fm_fw.median_ms),
+            format!("{gflops:.1}"),
+            format!("{}/{}", st.tiles_visited, st.tiles_total),
             format!("{:.2}", fm_bw.median_ms),
             format!("{:.2}", dm_fw.median_ms),
             format!("{:.2}", fx_fw.median_ms),
             format!("{:.2}x", dm_fw.median_ms / fm_fw.median_ms),
         ]);
+        json_masks.push(Json::obj(vec![
+            ("mask", Json::Str(kind.to_string())),
+            ("rho", Json::Num(rho)),
+            ("fm_fw_ms", Json::Num(fm_fw.median_ms)),
+            ("fm_bw_ms", Json::Num(fm_bw.median_ms)),
+            ("dense_mask_fw_ms", Json::Num(dm_fw.median_ms)),
+            ("flex_fw_ms", Json::Num(fx_fw.median_ms)),
+            ("gflops", Json::Num(gflops)),
+            ("tiles_visited", Json::Num(st.tiles_visited as f64)),
+            ("tiles_total", Json::Num(st.tiles_total as f64)),
+            ("speedup_vs_dense", Json::Num(dm_fw.median_ms / fm_fw.median_ms)),
+        ]));
     }
     t.print();
 
@@ -134,6 +178,13 @@ pub fn kernel_mask_report(measure_n: usize, paper_ns: &[usize], head_dim: usize,
         }
         t.print();
     }
+
+    Json::obj(vec![
+        ("measure_n", Json::Num(measure_n as f64)),
+        ("head_dim", Json::Num(head_dim as f64)),
+        ("measured_d", Json::Num(d as f64)),
+        ("masks", Json::Arr(json_masks)),
+    ])
 }
 
 /// Fig. 4(a): kernel latency vs block sparsity for three mask families.

@@ -3,7 +3,7 @@
 
 use super::queue::{Request, Response};
 use super::scheduler::BatchPlan;
-use crate::attention::{flash, parallel_heads, AttnConfig};
+use crate::attention::{flash, AttnConfig};
 use crate::decode::{BatcherConfig, BatcherReport, ContinuousBatcher, DecodeRequest};
 use crate::mask::BlockTable;
 use crate::runtime::{Executable, HostTensor};
@@ -164,41 +164,28 @@ impl ServeEngine {
 fn cpu_attention(req: &Request, tile: (usize, usize), threads: usize) -> Vec<f32> {
     let cfg = AttnConfig::new(tile.0.min(req.n), tile.1.min(req.n), req.d);
     let table = BlockTable::build(&req.mask, cfg.bc);
-    let layout = req.layout;
-    let per_head = req.n * req.d;
-    // the Eq. 4 classification is a property of the mask alone: compute
-    // the tile-class table once for the whole request, then fan the
-    // query heads out across threads — full q_heads parallelism (an MQA
-    // request still uses every core) with zero per-head classification
-    // work, each head reading its group's shared KV head
-    let classes = flash::classify_tiles(
+    // the grouped parallel kernel builds the Eq. 4 interval schedule
+    // once for the whole request and packs each KV head's K once, then
+    // partitions (query head × row block) items across threads with
+    // cost-weighted chunks — a 1-head 128K-context request saturates
+    // every core where head-only parallelism pinned it to one, and an
+    // MQA request still reuses a single packed K across all its heads
+    let (outs, _) = flash::flashmask_forward_grouped_parallel(
+        &req.q,
+        &req.k,
+        &req.v,
+        req.n,
+        req.d,
+        req.layout,
         &req.mask,
         &table,
-        req.n.div_ceil(cfg.br),
-        req.n.div_ceil(cfg.bc),
-        cfg.br,
-        cfg.bc,
+        cfg,
         true,
+        threads.max(1),
     );
-    let outs = parallel_heads(layout.q_heads, threads.max(1), |h| {
-        let kh = layout.kv_head_of(h);
-        let mut stats = crate::attention::TileStats::default();
-        flash::forward_tiles(
-            req.head(&req.q, h),
-            req.head(&req.k, kh),
-            req.head(&req.v, kh),
-            req.n,
-            req.d,
-            &req.mask,
-            cfg,
-            &classes,
-            &mut stats,
-        )
-        .o
-    });
-    let mut o = Vec::with_capacity(layout.q_heads * per_head);
+    let mut o = Vec::with_capacity(req.layout.q_heads * req.n * req.d);
     for part in outs {
-        o.extend(part);
+        o.extend(part.o);
     }
     o
 }

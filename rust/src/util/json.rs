@@ -18,6 +18,12 @@ pub enum Json {
 }
 
 impl Json {
+    /// Object from `(key, value)` pairs — the report/bench blob
+    /// constructor (later duplicate keys win, matching map insert).
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+    }
+
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -343,6 +349,16 @@ mod tests {
         let v = parse(src).unwrap();
         let v2 = parse(&v.to_string_pretty()).unwrap();
         assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn obj_constructor_builds_maps() {
+        let v = Json::obj(vec![("b", Json::Num(2.0)), ("a", Json::Bool(true))]);
+        assert_eq!(v.get("a"), Some(&Json::Bool(true)));
+        assert_eq!(v.get("b").and_then(Json::as_f64), Some(2.0));
+        // later duplicate keys win (map insert semantics)
+        let v = Json::obj(vec![("k", Json::Num(1.0)), ("k", Json::Num(2.0))]);
+        assert_eq!(v.get("k").and_then(Json::as_f64), Some(2.0));
     }
 
     #[test]

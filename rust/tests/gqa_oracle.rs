@@ -90,9 +90,12 @@ fn kernel_grouped_layouts_match_kv_replicated_mha_and_dense_oracle() {
                 assert_eq!(grouped[h].o, mha[h].o, "{name} {layout} head {h}");
                 assert_eq!(grouped[h].lse, mha[h].lse, "{name} {layout} head {h} lse");
             }
-            // and both match the dense semantic oracle
-            let oracle =
-                dense::dense_forward_grouped(&q, &k, &v, n, d, layout, &mask.dense_bias(), cfg.scale);
+            // and both match the dense semantic oracle (run through the
+            // row-parallel dense reference, which is itself pinned
+            // bitwise to the sequential dense path in dense.rs tests)
+            let oracle = dense::dense_forward_grouped_parallel(
+                &q, &k, &v, n, d, layout, &mask.dense_bias(), cfg.scale, 4,
+            );
             for h in 0..Q_HEADS {
                 assert_rows_close(
                     &format!("{name} {layout} head {h} vs dense"),

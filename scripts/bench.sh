@@ -1,0 +1,52 @@
+#!/usr/bin/env bash
+# Perf trajectory runner (EXPERIMENTS.md §Perf).
+#
+# Runs the kernel bench (full tables + §Perf anchor + parallel_2d
+# scaling) and the decode bench smoke, extracts each bench's
+# `== BENCH json ==` blob, and writes the merged machine-readable
+# result to BENCH_kernel.json at the repo root — the blob used to only
+# go to stdout and was lost between runs.
+#
+# Usage:
+#   scripts/bench.sh            # full run, writes BENCH_kernel.json
+#   scripts/bench.sh --smoke    # ~seconds-scale run (same file)
+#   FM_BENCH_OUT=BENCH_before.json scripts/bench.sh
+#                               # e.g. record a "before" snapshot on a
+#                               # baseline checkout for A/B comparisons
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+out="${FM_BENCH_OUT:-BENCH_kernel.json}"
+smoke_arg=""
+if [[ "${1:-}" == "--smoke" ]]; then
+  smoke_arg="--smoke"
+fi
+
+tmp="$(mktemp -d)"
+trap 'rm -rf "$tmp"' EXIT
+
+echo "== bench_kernel_masks =="
+# shellcheck disable=SC2086
+cargo bench --bench bench_kernel_masks -- $smoke_arg | tee "$tmp/kernel.out"
+
+echo "== bench_decode (smoke) =="
+cargo bench --bench bench_decode -- --smoke | tee "$tmp/decode.out"
+
+# everything after the marker line is the JSON blob
+awk 'f{print} /^== BENCH json ==$/{f=1}' "$tmp/kernel.out" > "$tmp/kernel.json"
+awk 'f{print} /^== BENCH json ==$/{f=1}' "$tmp/decode.out" > "$tmp/decode.json"
+
+python3 - "$tmp/kernel.json" "$tmp/decode.json" "$out" <<'PY'
+import json, sys, time
+kernel = json.load(open(sys.argv[1]))
+decode = json.load(open(sys.argv[2]))
+merged = {
+    "generated_unix": int(time.time()),
+    "kernel": kernel,
+    "decode": decode,
+}
+with open(sys.argv[3], "w") as f:
+    json.dump(merged, f, indent=2)
+    f.write("\n")
+print(f"bench.sh: wrote {sys.argv[3]}")
+PY

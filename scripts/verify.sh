@@ -27,6 +27,12 @@ cargo test -q --test decode_oracle
 echo "== GQA differential oracle (grouped layouts vs KV-replicated MHA) =="
 cargo test -q --test gqa_oracle
 
+echo "== kernel bench smoke (tiles-visited + parallel_2d bitwise asserts) =="
+# the bench asserts the interval schedule visits strictly fewer tiles
+# than tr*tc on every non-full mask and that row-block parallelism is
+# bitwise-identical to the sequential kernel
+cargo bench --bench bench_kernel_masks -- --smoke
+
 echo "== decode bench smoke (~2s, includes speculative oracle check) =="
 # the bench asserts speculative outputs match sequential row-for-row,
 # so any kernel/oracle divergence fails this step
