@@ -10,8 +10,9 @@
 //! cargo run --release --example dpo_packing
 //! ```
 
-use flashmask::attention::{flash, AttnConfig};
-use flashmask::mask::{builders, BlockTable};
+use flashmask::attention::api::{AttnProblem, Backend, CpuBackend, KvViews, QViews};
+use flashmask::attention::AttnConfig;
+use flashmask::mask::builders;
 use flashmask::util::rng::Rng;
 use flashmask::util::table::Table;
 use flashmask::workload::docgen::{self, Task};
@@ -54,13 +55,21 @@ fn main() {
     let mut mk = || (0..n * d).map(|_| rng.normal_f32() * 0.5).collect::<Vec<f32>>();
     let (q, k, v) = (mk(), mk(), mk());
     let cfg = AttnConfig::new(64, 64, d);
-    let table = BlockTable::build(&sample.mask, cfg.bc);
+    let problem = AttnProblem::new(n, d).mask(&sample.mask).tile(cfg.br, cfg.bc);
+    let qv = QViews::new(&q, 1, n, d).expect("q view");
+    let kvv = KvViews::new(&k, &v, 1, n, d).expect("k/v views");
     let t0 = std::time::Instant::now();
-    let (o1, s1) = flash::flashmask_forward(&q, &k, &v, n, d, &sample.mask, &table, cfg, true);
+    let run1 = CpuBackend
+        .prefill(&problem.plan().expect("plan"), qv, kvv)
+        .expect("prefill");
     let dt1 = t0.elapsed();
     let t0 = std::time::Instant::now();
-    let (o2, s2) = flash::flashmask_forward(&q, &k, &v, n, d, &sample.mask, &table, cfg, false);
+    let run2 = CpuBackend
+        .prefill(&problem.skip(false).plan().expect("plan"), qv, kvv)
+        .expect("prefill");
     let dt2 = t0.elapsed();
+    let (o1, s1) = (&run1.outs[0], run1.stats);
+    let (o2, s2) = (&run2.outs[0], run2.stats);
     assert_eq!(o1.o, o2.o);
     println!(
         "packed DPO attention: {:.2?} (skip) vs {:.2?} (dense mask), {:.1}% tiles skipped, bitwise equal",

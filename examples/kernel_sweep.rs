@@ -7,7 +7,8 @@
 //! ```
 
 use anyhow::{anyhow, Result};
-use flashmask::attention::{flash, flex, AttnConfig};
+use flashmask::attention::api::{AttnProblem, Backend, CpuBackend, KvViews, QViews};
+use flashmask::attention::{flex, AttnConfig};
 use flashmask::mask::{builders, BlockTable};
 use flashmask::util::bench::{bench, BenchOpts};
 use flashmask::util::cli::Args;
@@ -30,20 +31,24 @@ fn main() -> Result<()> {
     ])
     .title(format!("kernel sweep N={n} d={d} tiles {}x{}", cfg.br, cfg.bc));
 
+    let qv = QViews::new(&q, 1, n, d).expect("q view");
+    let kvv = KvViews::new(&k, &v, 1, n, d).expect("k/v views");
     for (kind, mask) in builders::benchmark_suite(n, 11) {
         let table = BlockTable::build(&mask, cfg.bc);
         let (fully, partial, _) = table.census(&mask, cfg.br);
         let rho = mask.block_sparsity(cfg.br, cfg.bc);
 
+        let problem = AttnProblem::new(n, d).mask(&mask).tile(cfg.br, cfg.bc);
+        let plan = problem.plan().expect("plan");
+        let plan_dense = problem.skip(false).plan().expect("plan");
         let fw = bench("fm", opts, || {
-            let _ = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+            let _ = CpuBackend.prefill(&plan, qv, kvv).expect("prefill");
         });
-        let (out, _) = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
         let fwbw = bench("fmbw", opts, || {
-            let (f, _) = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
-            let _ = flash::flashmask_backward(
-                &q, &k, &v, &f.o, &q, &f.lse, n, d, &mask, &table, cfg, true,
-            );
+            let out = CpuBackend.prefill(&plan, qv, kvv).expect("prefill");
+            let _ = CpuBackend
+                .backward(&plan, &q, &k, &v, &out.outs[0].o, &q, &out.outs[0].lse)
+                .expect("backward");
         });
         let pred = |i: usize, j: usize| mask.allowed(i, j);
         let bm = flex::BlockMask::build(&pred, n, cfg.br, cfg.bc);
@@ -51,9 +56,8 @@ fn main() -> Result<()> {
             let _ = flex::flex_forward(&q, &k, &v, n, d, &pred, &bm, cfg);
         });
         let dm = bench("dm", opts, || {
-            let _ = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, false);
+            let _ = CpuBackend.prefill(&plan_dense, qv, kvv).expect("prefill");
         });
-        let _ = out;
         t.row(vec![
             kind.to_string(),
             format!("{rho:.2}"),

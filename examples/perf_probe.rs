@@ -1,6 +1,7 @@
 // perf probe: forward breakdown at N=2048 d=64 causal
-use flashmask::attention::{flash, AttnConfig};
-use flashmask::mask::{builders, BlockTable};
+use flashmask::attention::api::{AttnProblem, Backend, CpuBackend, KvViews, QViews};
+use flashmask::attention::AttnConfig;
+use flashmask::mask::builders;
 use flashmask::util::rng::Rng;
 use std::time::Instant;
 fn main() {
@@ -10,23 +11,26 @@ fn main() {
     let (q,k,v) = (mk(), mk(), mk());
     let mask = builders::causal(n);
     let cfg = AttnConfig::new(64, 64, d);
-    let table = BlockTable::build(&mask, cfg.bc);
-    for _ in 0..2 { let _ = flash::flashmask_forward(&q,&k,&v,n,d,&mask,&table,cfg,true); }
+    let plan = AttnProblem::new(n, d).mask(&mask).tile(cfg.br, cfg.bc).plan().expect("plan");
+    let qv = QViews::new(&q, 1, n, d).expect("q view");
+    let kvv = KvViews::new(&k, &v, 1, n, d).expect("k/v views");
+    for _ in 0..2 { let _ = CpuBackend.prefill(&plan, qv, kvv).expect("prefill"); }
     let mut best = f64::MAX;
     for _ in 0..7 {
         let t0 = Instant::now();
-        let _ = std::hint::black_box(flash::flashmask_forward(&q,&k,&v,n,d,&mask,&table,cfg,true));
+        let _ = std::hint::black_box(CpuBackend.prefill(&plan, qv, kvv).expect("prefill"));
         best = best.min(t0.elapsed().as_secs_f64()*1e3);
     }
-    let (_, st) = flash::flashmask_forward(&q,&k,&v,n,d,&mask,&table,cfg,true);
+    let st = CpuBackend.prefill(&plan, qv, kvv).expect("prefill").stats;
     let gflops = st.flops() as f64 / (best/1e3) / 1e9;
     println!("fwd causal N={n} d={d}: {best:.2} ms  {gflops:.1} GFLOP/s");
     // bwd
-    let (f, _) = flash::flashmask_forward(&q,&k,&v,n,d,&mask,&table,cfg,true);
+    let fwd = CpuBackend.prefill(&plan, qv, kvv).expect("prefill");
+    let f = &fwd.outs[0];
     let mut bestb = f64::MAX;
     for _ in 0..5 {
         let t0 = Instant::now();
-        let _ = std::hint::black_box(flash::flashmask_backward(&q,&k,&v,&f.o,&q,&f.lse,n,d,&mask,&table,cfg,true));
+        let _ = std::hint::black_box(CpuBackend.backward(&plan,&q,&k,&v,&f.o,&q,&f.lse).expect("backward"));
         bestb = bestb.min(t0.elapsed().as_secs_f64()*1e3);
     }
     println!("bwd: {bestb:.2} ms");

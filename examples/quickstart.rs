@@ -5,7 +5,8 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use flashmask::attention::{flash, AttnConfig};
+use flashmask::attention::api::{AttnProblem, Backend, CpuBackend, KvViews, QViews};
+use flashmask::attention::AttnConfig;
 use flashmask::mask::{builders, BlockClass, BlockTable};
 use flashmask::util::rng::Rng;
 
@@ -31,19 +32,29 @@ fn main() {
     println!("block sparsity rho = {:.2}", mask.block_sparsity(cfg.br, cfg.bc));
     assert_eq!(table.classify(&mask, 7, 64, 0, 64), BlockClass::FullyMasked);
 
-    // 4. Run attention both ways; FLASHMASK must be bit-identical to the
-    //    dense-mask FlashAttention baseline (paper §4.4).
+    // 4. Run attention both ways through the unified API: describe the
+    //    problem once (AttnProblem), compile it to an ExecutionPlan
+    //    (classification + per-tile mask cache + packing buffers, all
+    //    reusable across calls), and execute on a Backend.  FLASHMASK
+    //    must be bit-identical to the dense-mask FlashAttention
+    //    baseline (paper §4.4).
     let d = 64;
     let mut rng = Rng::new(0);
     let mut mk = || (0..n * d).map(|_| rng.normal_f32() * 0.5).collect::<Vec<f32>>();
     let (q, k, v) = (mk(), mk(), mk());
+    let problem = AttnProblem::new(n, d).mask(&mask).tile(cfg.br, cfg.bc);
+    let plan = problem.plan().expect("valid problem");
+    let plan_dense = problem.skip(false).plan().expect("valid problem");
+    let qv = QViews::new(&q, 1, n, d).expect("q is [n, d]");
+    let kvv = KvViews::new(&k, &v, 1, n, d).expect("k/v are [n, d]");
     let t0 = std::time::Instant::now();
-    let (out_skip, stats_skip) = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+    let skip_run = CpuBackend.prefill(&plan, qv, kvv).expect("prefill");
     let t_skip = t0.elapsed();
     let t0 = std::time::Instant::now();
-    let (out_dense, stats_dense) =
-        flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, false);
+    let dense_run = CpuBackend.prefill(&plan_dense, qv, kvv).expect("prefill");
     let t_dense = t0.elapsed();
+    let (out_skip, stats_skip) = (&skip_run.outs[0], skip_run.stats);
+    let (out_dense, stats_dense) = (&dense_run.outs[0], dense_run.stats);
 
     assert_eq!(out_skip.o, out_dense.o, "bit-exactness violated!");
     println!(

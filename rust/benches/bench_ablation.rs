@@ -9,7 +9,8 @@
 //!    (the paper's "Preprocessing" step is exactly this saving);
 //! 3. skip on/off — the headline mechanism, isolated.
 
-use flashmask::attention::{flash, AttnConfig};
+use flashmask::attention::api::{AttnProblem, Backend, CpuBackend, KvViews, QViews};
+use flashmask::attention::AttnConfig;
 use flashmask::mask::{builders, BlockTable};
 use flashmask::util::bench::{bench, BenchOpts};
 use flashmask::util::rng::Rng;
@@ -33,15 +34,18 @@ fn main() {
             continue;
         }
         let cfg = AttnConfig::new(br, bc, d);
-        let table = BlockTable::build(&mask, bc);
+        let plan =
+            AttnProblem::new(n, d).mask(&mask).tile(cfg.br, cfg.bc).plan().expect("plan");
+        let qv = QViews::new(&q, 1, n, d).expect("q view");
+        let kvv = KvViews::new(&k, &v, 1, n, d).expect("k/v views");
         let fw = bench("fw", opts, || {
-            let _ = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+            let _ = CpuBackend.prefill(&plan, qv, kvv).expect("prefill");
         });
         let fwbw = bench("fwbw", opts, || {
-            let (f, _) = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
-            let _ = flash::flashmask_backward(
-                &q, &k, &v, &f.o, &q, &f.lse, n, d, &mask, &table, cfg, true,
-            );
+            let out = CpuBackend.prefill(&plan, qv, kvv).expect("prefill");
+            let _ = CpuBackend
+                .backward(&plan, &q, &k, &v, &out.outs[0].o, &q, &out.outs[0].lse)
+                .expect("backward");
         });
         t.row(vec![
             br.to_string(),
@@ -101,13 +105,16 @@ fn main() {
             continue;
         }
         let mask = builders::causal_document(n, &vec![n / docs; docs]);
-        let cfg = AttnConfig::new(64, 64, d);
-        let table = BlockTable::build(&mask, 64);
+        let problem = AttnProblem::new(n, d).mask(&mask).tile(64, 64);
+        let plan = problem.plan().expect("plan");
+        let plan_dense = problem.skip(false).plan().expect("plan");
+        let qv = QViews::new(&q, 1, n, d).expect("q view");
+        let kvv = KvViews::new(&k, &v, 1, n, d).expect("k/v views");
         let on = bench("on", opts, || {
-            let _ = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+            let _ = CpuBackend.prefill(&plan, qv, kvv).expect("prefill");
         });
         let off = bench("off", opts, || {
-            let _ = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, false);
+            let _ = CpuBackend.prefill(&plan_dense, qv, kvv).expect("prefill");
         });
         t.row(vec![
             docs.to_string(),

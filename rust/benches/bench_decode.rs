@@ -167,6 +167,7 @@ fn main() {
         "pages skipped",
         "resident KV",
         "pages/tok",
+        "plans/steps",
     ])
     .title("paged-KV decode: FLASHMASK page skip vs dense cache");
     let mut s = Table::new(vec![
@@ -192,6 +193,17 @@ fn main() {
         if *name == "sliding_window" {
             assert!(frac > 0.0, "sliding-window decode must skip pages at n >= 4x page size");
         }
+        // plan reuse: each session compiles its decode plan (incremental
+        // mask view + page schedule) exactly once, then steps hundreds of
+        // tokens through it — never one plan per token
+        assert_eq!(
+            rep_skip.plans_built, count as u64,
+            "{name}: expected one decode plan per session"
+        );
+        assert!(
+            rep_skip.tokens >= rep_skip.plans_built * (n as u64 / 2),
+            "{name}: plans amortize over many steps"
+        );
         t.row(vec![
             name.to_string(),
             format!("{tps_skip:.0}"),
@@ -200,6 +212,7 @@ fn main() {
             format!("{:.1}%", frac * 100.0),
             kib(rep_skip.resident_kv_bytes),
             format!("{:.2}", rep_skip.pages_per_token),
+            format!("{}/{}", rep_skip.plans_built, rep_skip.tokens),
         ]);
         json_masks.push(obj(vec![
             ("mask", Json::Str(name.to_string())),
@@ -208,6 +221,8 @@ fn main() {
             ("pages_skip_fraction", Json::Num(frac)),
             ("resident_kv_bytes", Json::Num(rep_skip.resident_kv_bytes as f64)),
             ("pages_per_token", Json::Num(rep_skip.pages_per_token)),
+            ("plans_built", Json::Num(rep_skip.plans_built as f64)),
+            ("steps", Json::Num(rep_skip.tokens as f64)),
         ]));
 
         if spec_k > 1 {

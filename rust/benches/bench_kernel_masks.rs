@@ -27,8 +27,11 @@
 //! FM_BENCH_ITERS (default 5; 2 under --smoke), FM_BENCH_PAR_N
 //! (default 4096; 1024 under --smoke).
 
-use flashmask::attention::{flash, AttnConfig, HeadLayout};
-use flashmask::mask::{builders, BlockTable};
+use flashmask::attention::api::{
+    AttnProblem, Backend, CpuBackend, KvViews, PlanCache, QViews,
+};
+use flashmask::attention::{AttnConfig, HeadLayout};
+use flashmask::mask::builders;
 use flashmask::reports;
 use flashmask::util::bench::{bench, time_once, BenchOpts};
 use flashmask::util::json::Json;
@@ -53,11 +56,14 @@ fn perf_anchor(n: usize, opts: BenchOpts) -> Json {
     let v = rand_vec(n * d, &mut rng);
     let mask = builders::causal(n);
     let cfg = AttnConfig::new(64.min(n), 64.min(n), d);
-    let table = BlockTable::build(&mask, cfg.bc);
+    let plan =
+        AttnProblem::new(n, d).mask(&mask).tile(cfg.br, cfg.bc).plan().expect("anchor plan");
+    let qv = QViews::new(&q, 1, n, d).expect("q view");
+    let kvv = KvViews::new(&k, &v, 1, n, d).expect("k/v views");
     let st = bench("anchor", opts, || {
-        let _ = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+        let _ = CpuBackend.prefill(&plan, qv, kvv).expect("prefill");
     });
-    let (_, ts) = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+    let ts = CpuBackend.prefill(&plan, qv, kvv).expect("prefill").stats;
     let gflops = ts.flops() as f64 / (st.median_ms / 1e3) / 1e9;
     let mut t = Table::new(vec!["workload", "median ms", "GF/s", "tiles visited", "tiles total"])
         .title("§Perf anchor: causal forward, d=128, 1 thread");
@@ -95,24 +101,24 @@ fn parallel_scaling(n: usize, threads_list: &[usize], opts: BenchOpts) -> Json {
     let v = rand_vec(n * d, &mut rng);
     let mask = builders::causal(n);
     let cfg = AttnConfig::new(64.min(n), 64.min(n), d);
-    let table = BlockTable::build(&mask, cfg.bc);
-    let (base, _) = flash::flashmask_forward_grouped_parallel(
-        &q, &k, &v, n, d, layout, &mask, &table, cfg, true, 1,
-    );
+    let problem = AttnProblem::new(n, d).layout(layout).mask(&mask).tile(cfg.br, cfg.bc);
+    let qv = QViews::new(&q, 1, n, d).expect("q view");
+    let kvv = KvViews::new(&k, &v, 1, n, d).expect("k/v views");
+    let base = CpuBackend
+        .prefill_grouped(&problem.plan().expect("plan"), qv, kvv)
+        .expect("prefill")
+        .outs;
     let mut t = Table::new(vec!["threads", "median ms", "speedup"])
         .title(format!("parallel_2d row-block scaling: causal, 1 head, n={n}, d=128"));
     let mut rows: Vec<Json> = Vec::new();
     let mut ms1 = 0.0;
     for &threads in threads_list {
+        let plan = problem.threads(threads).plan().expect("plan");
         let st = bench("par", opts, || {
-            let _ = flash::flashmask_forward_grouped_parallel(
-                &q, &k, &v, n, d, layout, &mask, &table, cfg, true, threads,
-            );
+            let _ = CpuBackend.prefill_grouped(&plan, qv, kvv).expect("prefill");
         });
         // work partitioning must not change a single bit of the result
-        let (out, _) = flash::flashmask_forward_grouped_parallel(
-            &q, &k, &v, n, d, layout, &mask, &table, cfg, true, threads,
-        );
+        let out = CpuBackend.prefill_grouped(&plan, qv, kvv).expect("prefill").outs;
         assert_eq!(out[0].o, base[0].o, "threads={threads}: outputs diverged");
         assert_eq!(out[0].lse, base[0].lse, "threads={threads}: lse diverged");
         if threads == threads_list[0] {
@@ -139,6 +145,98 @@ fn parallel_scaling(n: usize, threads_list: &[usize], opts: BenchOpts) -> Json {
     ])
 }
 
+/// Plan-cache amortization: a repeated-mask prefill microbench (every
+/// layer of a model sees the same mask and shape).  The cold path
+/// recompiles the plan — BlockTable, Eq. 4 schedule, per-tile mask
+/// cache, census, packing buffers — on every call, which is exactly
+/// what the pre-API free functions did; the warm path serves the plan
+/// from the content-keyed [`PlanCache`].  Asserts the acceptance
+/// criterion: warm is >= 1.2x faster than cold on the best workload
+/// (mask structure decides how much setup there is to amortize, so the
+/// section sweeps several regimes).
+fn plan_cache_section(opts: BenchOpts) -> Json {
+    // an L-layer model reusing one mask per forward pass.
+    // (label, n, d, tile, doc_len): doc_len > 0 is SFT doc-packing
+    // (many partial tiles => shared-interval-test savings); doc_len == 0
+    // is a narrow sliding window at small tiles, where the O(tr*tc)
+    // classification the plan caches dwarfs the O(n*w) compute.
+    let layers = 8usize;
+    let configs: [(&str, usize, usize, usize, usize); 4] = [
+        ("doc_packing_n512_d8", 512, 8, 16, 8),
+        ("doc_packing_n256_d8", 256, 8, 16, 8),
+        ("doc_packing_n1024_d16", 1024, 16, 32, 16),
+        ("sliding_window_n1024_d8_t8", 1024, 8, 8, 0),
+    ];
+    let mut t = Table::new(vec!["workload", "cold ms", "warm ms", "speedup", "hit rate"])
+        .title(format!("plan-cache amortization: {layers}-layer repeated-mask prefill"));
+    let mut rows: Vec<Json> = Vec::new();
+    let mut best = 0.0f64;
+    let mut hit_rate = 0.0f64;
+    for (label, n, d, tile, doc) in configs {
+        let mut rng = Rng::new(31);
+        let q = rand_vec(n * d, &mut rng);
+        let k = rand_vec(n * d, &mut rng);
+        let v = rand_vec(n * d, &mut rng);
+        let mask = if doc > 0 {
+            builders::causal_document(n, &vec![doc; n / doc])
+        } else {
+            builders::sliding_window(n, 8)
+        };
+        let problem = AttnProblem::new(n, d).mask(&mask).tile(tile, tile);
+        let qv = QViews::new(&q, 1, n, d).expect("q view");
+        let kvv = KvViews::new(&k, &v, 1, n, d).expect("k/v views");
+        let cold = bench("plan_cold", opts, || {
+            for _ in 0..layers {
+                let plan = problem.plan().expect("plan");
+                let _ = CpuBackend.prefill(&plan, qv, kvv).expect("prefill");
+            }
+        });
+        let mut cache = PlanCache::new(8);
+        let warm = bench("plan_warm", opts, || {
+            for _ in 0..layers {
+                let plan = cache.get_or_build(&problem).expect("plan");
+                let _ = CpuBackend.prefill(&plan, qv, kvv).expect("prefill");
+            }
+        });
+        let speedup = cold.median_ms / warm.median_ms;
+        if speedup > best {
+            best = speedup;
+            hit_rate = cache.hit_rate();
+        }
+        assert!(cache.hits() > 0, "{label}: warm loop never hit the cache");
+        t.row(vec![
+            label.to_string(),
+            format!("{:.3}", cold.median_ms),
+            format!("{:.3}", warm.median_ms),
+            format!("{speedup:.2}x"),
+            format!("{:.2}", cache.hit_rate()),
+        ]);
+        rows.push(Json::obj(vec![
+            ("workload", Json::Str(label.to_string())),
+            ("n", Json::Num(n as f64)),
+            ("d", Json::Num(d as f64)),
+            ("layers", Json::Num(layers as f64)),
+            ("cold_ms", Json::Num(cold.median_ms)),
+            ("warm_ms", Json::Num(warm.median_ms)),
+            ("speedup", Json::Num(speedup)),
+            ("hit_rate", Json::Num(cache.hit_rate())),
+        ]));
+    }
+    t.print();
+    // acceptance: plan reuse must buy >= 1.2x on a repeated-mask prefill
+    assert!(
+        best >= 1.2,
+        "plan reuse bought only {best:.2}x (acceptance floor 1.2x) — \
+         ExecutionPlan amortization regressed"
+    );
+    Json::obj(vec![
+        ("layers", Json::Num(layers as f64)),
+        ("best_speedup", Json::Num(best)),
+        ("best_hit_rate", Json::Num(hit_rate)),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let n = env_usize("FM_BENCH_N", if smoke { 256 } else { 1024 });
@@ -154,6 +252,12 @@ fn main() {
 
     println!();
     let anchor = perf_anchor(n, opts);
+    println!();
+    let plan_cache = plan_cache_section(BenchOpts {
+        warmup: 1,
+        iters: iters.max(3),
+        max_seconds: 20.0,
+    });
     let threads_list: &[usize] = if smoke { &[1, 4] } else { &[1, 2, 4, 8] };
     // scaling runs are long at n=4096 — time each point a few times only
     let par_opts = BenchOpts { warmup: 1, iters: iters.min(3), max_seconds: 60.0 };
@@ -172,6 +276,7 @@ fn main() {
         ),
         ("sections", Json::Arr(sections)),
         ("anchor", anchor),
+        ("plan_cache", plan_cache),
         ("parallel", parallel),
     ]);
     println!("{}", blob.to_string_pretty());

@@ -1,0 +1,1489 @@
+//! Unified attention API: problem builder, cached execution plans, and
+//! pluggable backends (DESIGN.md §Public API).
+//!
+//! The kernel layer grew one free function per (engine × layout ×
+//! threading) combination, each taking 9–11 positional arguments,
+//! validating by `assert!`, and rebuilding the Eq. 4 tile schedule and
+//! the packed-K layout on every call.  This module replaces that
+//! surface with three nouns:
+//!
+//! * [`AttnProblem`] — a builder describing *what* to compute
+//!   (`n`, `d`, [`HeadLayout`], mask, tile sizes, threads).  Validation
+//!   is typed: every misuse returns an [`AttnError`] instead of
+//!   panicking.
+//! * [`ExecutionPlan`] — the compiled form of a problem: the Eq. 4
+//!   [`TileSchedule`](crate::attention::flash) with its per-tile mask
+//!   cache, the tile census, and reusable per-KV-head packed-K buffers.
+//!   Repeated calls over the same mask/shape — every layer of a model,
+//!   every step of a decode session — reuse classification, the
+//!   element-wise interval tests, and packing storage instead of
+//!   recomputing them.  [`PlanCache`] keys plans by content (shape +
+//!   mask bytes), the seam prefix caching will later hash into.
+//! * [`Backend`] — *where* to compute: [`CpuBackend`] (the packed /
+//!   parallel blocked kernels), [`DenseRefBackend`] (the O(N²) oracle),
+//!   and [`PjrtBackend`] (the AOT `attn_fwd` artifact), each honestly
+//!   reporting its [`Capabilities`] so callers fall back explicitly
+//!   rather than ad hoc.
+//!
+//! The pre-existing free functions (`flashmask_forward`,
+//! `decode_step_group`, …) remain as deprecated shims delegating here,
+//! so every differential oracle pinned to them doubles as a migration
+//! test.
+//!
+//! ```
+//! use flashmask::attention::api::{AttnProblem, Backend, CpuBackend, KvViews, QViews};
+//! use flashmask::mask::builders;
+//!
+//! let (n, d) = (64, 8);
+//! let mask = builders::causal_document(n, &[40, 24]);
+//! let q = vec![0.1f32; n * d];
+//! let k = vec![0.2f32; n * d];
+//! let v = vec![0.3f32; n * d];
+//!
+//! let plan = AttnProblem::new(n, d).mask(&mask).tile(16, 16).plan()?;
+//! let out = CpuBackend.prefill(
+//!     &plan,
+//!     QViews::new(&q, 1, n, d)?,
+//!     KvViews::new(&k, &v, 1, n, d)?,
+//! )?;
+//! assert_eq!(out.outs.len(), 1);
+//! assert_eq!(out.outs[0].o.len(), n * d);
+//! assert!(out.stats.tiles_skipped > 0); // Eq. 4 pruned the dead tiles
+//! # Ok::<(), flashmask::attention::api::AttnError>(())
+//! ```
+
+use super::flash::{self, TileSchedule};
+use super::{dense, gemm, parallel_2d, AttnConfig, AttnGrads, AttnOutput, HeadLayout, TileStats};
+use crate::decode::kvcache::{PagePool, PagedKv};
+use crate::decode::step::DecodeStats;
+use crate::mask::{BlockTable, FlashMask, IncrementalMaskView, TokenTree};
+use crate::runtime::{Executable, HostTensor};
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+
+/// Largest packed-K working set an [`ExecutionPlan`] retains between
+/// calls.  Small serving shapes amortize the packing allocations across
+/// calls; past this bound the buffers are dropped after use so a
+/// long-lived [`PlanCache`] never pins per-call K-derived memory.
+const PACK_RETAIN_BYTES: usize = 4 << 20;
+
+/// One backend operation, named for capability reporting and
+/// [`AttnError::Unsupported`] diagnostics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Capability {
+    /// Full-sequence forward over an MHA layout.
+    Prefill,
+    /// Full-sequence forward over a grouped (GQA/MQA) layout without
+    /// host-side KV replication.
+    PrefillGrouped,
+    /// Single-token decode against a paged KV cache.
+    DecodeStep,
+    /// Multi-row speculative verify under a tree mask.
+    Verify,
+    /// Backward pass (gradients).
+    Backward,
+}
+
+impl std::fmt::Display for Capability {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Capability::Prefill => "prefill",
+            Capability::PrefillGrouped => "prefill_grouped",
+            Capability::DecodeStep => "decode_step",
+            Capability::Verify => "verify",
+            Capability::Backward => "backward",
+        })
+    }
+}
+
+/// What a [`Backend`] can execute.  Callers (the serving engine, the
+/// decode batcher) branch on this *before* dispatching, so a backend
+/// that cannot run an operation is never asked to — and the fallback
+/// that replaces it is recorded, not silent.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Capabilities {
+    pub prefill: bool,
+    pub prefill_grouped: bool,
+    pub decode: bool,
+    pub verify: bool,
+    pub backward: bool,
+}
+
+impl Capabilities {
+    /// All operations supported (the CPU reference point).
+    pub fn all() -> Capabilities {
+        Capabilities {
+            prefill: true,
+            prefill_grouped: true,
+            decode: true,
+            verify: true,
+            backward: true,
+        }
+    }
+
+    pub fn supports(&self, cap: Capability) -> bool {
+        match cap {
+            Capability::Prefill => self.prefill,
+            Capability::PrefillGrouped => self.prefill_grouped,
+            Capability::DecodeStep => self.decode,
+            Capability::Verify => self.verify,
+            Capability::Backward => self.backward,
+        }
+    }
+}
+
+/// Typed validation / dispatch error.  Every variant is reachable from
+/// safe code through the builder (`tests/api_misuse.rs` constructs each
+/// one); nothing in this module panics on caller input.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AttnError {
+    /// A tensor view's length or metadata disagrees with the problem.
+    ShapeMismatch { what: &'static str, got: usize, want: usize },
+    /// The problem was built without `.mask(&mask)`.
+    MaskMissing,
+    /// `mask.n()` differs from the problem's `n`.
+    MaskSizeMismatch { got: usize, want: usize },
+    /// The mask failed structural validation (inverted interval, out of
+    /// bounds, causal with a UT interval, …).
+    MaskInvalid { reason: String },
+    /// `kv_heads == 0`, `q_heads == 0`, or `q_heads % kv_heads != 0`.
+    UnsupportedLayout { q_heads: usize, kv_heads: usize },
+    /// Zero tile size.
+    InvalidTile { br: usize, bc: usize },
+    /// Zero `n` or `d`.
+    InvalidDim { what: &'static str },
+    /// The backend does not implement this operation; consult
+    /// [`Backend::capabilities`] before dispatching.
+    Unsupported { backend: &'static str, capability: Capability },
+    /// The backend accepted the problem but failed at runtime (e.g. a
+    /// PJRT artifact signature mismatch).
+    Backend { backend: &'static str, reason: String },
+}
+
+impl std::fmt::Display for AttnError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AttnError::ShapeMismatch { what, got, want } => {
+                write!(f, "shape mismatch: {what} has {got} elements, expected {want}")
+            }
+            AttnError::MaskMissing => write!(f, "problem has no mask; call .mask(&mask)"),
+            AttnError::MaskSizeMismatch { got, want } => {
+                write!(f, "mask is over {got} columns but the problem has n = {want}")
+            }
+            AttnError::MaskInvalid { reason } => write!(f, "invalid mask: {reason}"),
+            AttnError::UnsupportedLayout { q_heads, kv_heads } => write!(
+                f,
+                "unsupported head layout: {q_heads} query / {kv_heads} KV heads \
+                 (need kv_heads >= 1 and q_heads a positive multiple of kv_heads)"
+            ),
+            AttnError::InvalidTile { br, bc } => {
+                write!(f, "invalid tile sizes {br}x{bc} (both must be >= 1)")
+            }
+            AttnError::InvalidDim { what } => write!(f, "dimension '{what}' must be >= 1"),
+            AttnError::Unsupported { backend, capability } => {
+                write!(f, "backend '{backend}' does not support '{capability}'")
+            }
+            AttnError::Backend { backend, reason } => {
+                write!(f, "backend '{backend}' failed: {reason}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for AttnError {}
+
+/// Borrowed query tensor: head-major `[heads, n, d]` with its shape
+/// metadata, length-checked at construction.
+#[derive(Clone, Copy, Debug)]
+pub struct QViews<'a> {
+    pub data: &'a [f32],
+    pub heads: usize,
+    pub n: usize,
+    pub d: usize,
+}
+
+impl<'a> QViews<'a> {
+    pub fn new(data: &'a [f32], heads: usize, n: usize, d: usize) -> Result<QViews<'a>, AttnError> {
+        if data.len() != heads * n * d {
+            return Err(AttnError::ShapeMismatch {
+                what: "q",
+                got: data.len(),
+                want: heads * n * d,
+            });
+        }
+        Ok(QViews { data, heads, n, d })
+    }
+
+    /// Head `h`'s `[n, d]` rows.
+    pub fn head(&self, h: usize) -> &'a [f32] {
+        &self.data[h * self.n * self.d..(h + 1) * self.n * self.d]
+    }
+}
+
+/// Borrowed key/value tensors: head-major `[heads, n, d]` each (KV
+/// heads under GQA), length-checked at construction.
+#[derive(Clone, Copy, Debug)]
+pub struct KvViews<'a> {
+    pub k: &'a [f32],
+    pub v: &'a [f32],
+    pub heads: usize,
+    pub n: usize,
+    pub d: usize,
+}
+
+impl<'a> KvViews<'a> {
+    pub fn new(
+        k: &'a [f32],
+        v: &'a [f32],
+        heads: usize,
+        n: usize,
+        d: usize,
+    ) -> Result<KvViews<'a>, AttnError> {
+        let want = heads * n * d;
+        if k.len() != want {
+            return Err(AttnError::ShapeMismatch { what: "k", got: k.len(), want });
+        }
+        if v.len() != want {
+            return Err(AttnError::ShapeMismatch { what: "v", got: v.len(), want });
+        }
+        Ok(KvViews { k, v, heads, n, d })
+    }
+
+    /// KV head `h`'s `[n, d]` key rows.
+    pub fn k_head(&self, h: usize) -> &'a [f32] {
+        &self.k[h * self.n * self.d..(h + 1) * self.n * self.d]
+    }
+
+    /// KV head `h`'s `[n, d]` value rows.
+    pub fn v_head(&self, h: usize) -> &'a [f32] {
+        &self.v[h * self.n * self.d..(h + 1) * self.n * self.d]
+    }
+}
+
+/// Builder describing one attention problem.  All setters are
+/// chainable; nothing validates until [`plan`](Self::plan) /
+/// [`key`](Self::key), which return typed [`AttnError`]s instead of
+/// panicking.
+///
+/// ```
+/// use flashmask::attention::api::AttnProblem;
+/// use flashmask::attention::HeadLayout;
+/// use flashmask::mask::builders;
+///
+/// let mask = builders::causal(128);
+/// let plan = AttnProblem::new(128, 16)
+///     .layout(HeadLayout::gqa(8, 2))
+///     .mask(&mask)
+///     .tile(32, 32)
+///     .threads(4)
+///     .plan()?;
+/// assert_eq!(plan.layout().group(), 4);
+/// # Ok::<(), flashmask::attention::api::AttnError>(())
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct AttnProblem<'m> {
+    n: usize,
+    d: usize,
+    q_heads: usize,
+    kv_heads: usize,
+    mask: Option<&'m FlashMask>,
+    br: usize,
+    bc: usize,
+    scale: Option<f32>,
+    threads: usize,
+    skip: bool,
+}
+
+impl<'m> AttnProblem<'m> {
+    /// A single-head problem over an `n x n` score matrix at head dim
+    /// `d`, with 64×64 tiles (clamped to `n`), softmax scale
+    /// `1/sqrt(d)`, Eq. 4 skipping on, one thread.
+    pub fn new(n: usize, d: usize) -> AttnProblem<'m> {
+        AttnProblem {
+            n,
+            d,
+            q_heads: 1,
+            kv_heads: 1,
+            mask: None,
+            br: 64.min(n.max(1)),
+            bc: 64.min(n.max(1)),
+            scale: None,
+            threads: 1,
+            skip: true,
+        }
+    }
+
+    /// Set the head layout from an already-validated [`HeadLayout`].
+    pub fn layout(mut self, layout: HeadLayout) -> Self {
+        self.q_heads = layout.q_heads;
+        self.kv_heads = layout.kv_heads;
+        self
+    }
+
+    /// Set raw head counts; validated at [`plan`](Self::plan) (an
+    /// indivisible or zero count yields
+    /// [`AttnError::UnsupportedLayout`] instead of the panic
+    /// [`HeadLayout::new`] would raise).
+    pub fn heads(mut self, q_heads: usize, kv_heads: usize) -> Self {
+        self.q_heads = q_heads;
+        self.kv_heads = kv_heads;
+        self
+    }
+
+    /// Attach the column-interval mask (borrowed; the plan clones it).
+    pub fn mask(mut self, mask: &'m FlashMask) -> Self {
+        self.mask = Some(mask);
+        self
+    }
+
+    /// Tile sizes (`Br` query rows × `Bc` key columns).
+    pub fn tile(mut self, br: usize, bc: usize) -> Self {
+        self.br = br;
+        self.bc = bc;
+        self
+    }
+
+    /// Override the softmax scale (default `1/sqrt(d)`).
+    pub fn scale(mut self, scale: f32) -> Self {
+        self.scale = Some(scale);
+        self
+    }
+
+    /// Maximum OS threads for (head × row-block) work partitioning.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Eq. 4 tile skipping (`false` = the dense-mask baseline that
+    /// computes and element-masks every tile).
+    pub fn skip(mut self, skip: bool) -> Self {
+        self.skip = skip;
+        self
+    }
+
+    fn cfg(&self) -> AttnConfig {
+        AttnConfig {
+            br: self.br,
+            bc: self.bc,
+            scale: self.scale.unwrap_or(1.0 / (self.d.max(1) as f32).sqrt()),
+        }
+    }
+
+    /// Typed validation; returns the resolved layout and mask.
+    pub fn validate(&self) -> Result<(HeadLayout, &'m FlashMask), AttnError> {
+        if self.n == 0 {
+            return Err(AttnError::InvalidDim { what: "n" });
+        }
+        if self.d == 0 {
+            return Err(AttnError::InvalidDim { what: "d" });
+        }
+        if self.br == 0 || self.bc == 0 {
+            return Err(AttnError::InvalidTile { br: self.br, bc: self.bc });
+        }
+        if self.q_heads == 0 || self.kv_heads == 0 || self.q_heads % self.kv_heads != 0 {
+            return Err(AttnError::UnsupportedLayout {
+                q_heads: self.q_heads,
+                kv_heads: self.kv_heads,
+            });
+        }
+        let mask = self.mask.ok_or(AttnError::MaskMissing)?;
+        if mask.n() != self.n {
+            return Err(AttnError::MaskSizeMismatch { got: mask.n(), want: self.n });
+        }
+        mask.validate().map_err(|e| AttnError::MaskInvalid { reason: format!("{e:#}") })?;
+        Ok((HeadLayout::new(self.q_heads, self.kv_heads), mask))
+    }
+
+    /// Compile the problem: build the [`BlockTable`], the Eq. 4 tile
+    /// schedule with its per-tile mask cache, and the census.
+    /// This is the cost [`PlanCache`] amortizes across repeated calls.
+    pub fn plan(&self) -> Result<ExecutionPlan, AttnError> {
+        let (layout, mask) = self.validate()?;
+        let cfg = self.cfg();
+        let table = BlockTable::build(mask, cfg.bc);
+        let sched = TileSchedule::build(mask, &table, self.n, cfg, self.skip);
+        let census = sched.census();
+        Ok(ExecutionPlan {
+            n: self.n,
+            d: self.d,
+            layout,
+            cfg,
+            skip: self.skip,
+            threads: self.threads,
+            mask: mask.clone(),
+            sched,
+            census,
+            packs: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Content key for [`PlanCache`]: shape, layout, tiling, scale bits
+    /// and an FNV-1a hash over a bounded stride-sample of the mask's
+    /// four interval vectors (≤ ~64 probes per vector, so keying a hit
+    /// costs O(1) rather than O(n) as sequences grow).  The hash is a
+    /// fast path only: the cache verifies **full mask equality** on
+    /// every hit, so sampling can at worst cause a rebuild, never a
+    /// wrong plan.
+    pub fn key(&self) -> Result<PlanKey, AttnError> {
+        let (_, mask) = self.validate()?;
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        let stride = (mask.n() / 64).max(1);
+        for vs in [&mask.lts, &mask.lte, &mask.uts, &mask.ute] {
+            h = fnv1a_sampled(h, vs, stride);
+        }
+        Ok(PlanKey {
+            n: self.n,
+            d: self.d,
+            q_heads: self.q_heads,
+            kv_heads: self.kv_heads,
+            br: self.br,
+            bc: self.bc,
+            // execution policy, not content — but the plan carries it,
+            // so two thread policies must not share one cached plan
+            threads: self.threads,
+            skip: self.skip,
+            causal: mask.causal,
+            scale_bits: self.cfg().scale.to_bits(),
+            mask_hash: h,
+        })
+    }
+}
+
+fn fnv1a_i32(mut h: u64, v: i32) -> u64 {
+    for b in v.to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a over every `stride`-th element plus the last (tail changes —
+/// a mask extended by one column — always perturb the key).
+fn fnv1a_sampled(mut h: u64, vs: &[i32], stride: usize) -> u64 {
+    let mut j = 0;
+    while j < vs.len() {
+        h = fnv1a_i32(h, vs[j]);
+        j += stride;
+    }
+    if let Some(&last) = vs.last() {
+        h = fnv1a_i32(h, last);
+    }
+    h
+}
+
+/// Content key of an [`ExecutionPlan`] (see [`AttnProblem::key`]).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    n: usize,
+    d: usize,
+    q_heads: usize,
+    kv_heads: usize,
+    br: usize,
+    bc: usize,
+    threads: usize,
+    skip: bool,
+    causal: bool,
+    scale_bits: u32,
+    mask_hash: u64,
+}
+
+/// A compiled attention problem: everything derivable from the mask
+/// and shape alone, computed once and reused across calls.
+///
+/// Owns the Eq. 4 `TileSchedule` (classes, per-row-block visit
+/// ranges, cost weights, and the per-tile mask cache), a clone of the
+/// mask, the tile census, and the per-KV-head [`gemm::PackedKt`]
+/// packing buffers.  Packing *contents*
+/// are refreshed from the K views on every call (K is data, not part
+/// of the plan key); the buffers themselves — and every mask-derived
+/// structure — are reused.
+pub struct ExecutionPlan {
+    n: usize,
+    d: usize,
+    layout: HeadLayout,
+    cfg: AttnConfig,
+    skip: bool,
+    threads: usize,
+    mask: FlashMask,
+    sched: TileSchedule,
+    /// One classification pass's tile census (incl. the mask-cache
+    /// build cost as `mask_evals`) — charged once per KV head per call.
+    census: TileStats,
+    /// Reusable per-KV-head packed-K buffers, refreshed per call,
+    /// taken out under a scoped lock for the duration of a call (so
+    /// concurrent sharers never serialize on compute), and returned
+    /// only while under [`PACK_RETAIN_BYTES`] (so cached plans never
+    /// pin large per-call K-derived memory).
+    packs: Mutex<Vec<gemm::PackedKt>>,
+}
+
+impl ExecutionPlan {
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn layout(&self) -> HeadLayout {
+        self.layout
+    }
+
+    pub fn skip(&self) -> bool {
+        self.skip
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn scale(&self) -> f32 {
+        self.cfg.scale
+    }
+
+    /// Tile grid `(tr, tc)`.
+    pub fn tiles(&self) -> (usize, usize) {
+        (self.sched.tr, self.sched.tc)
+    }
+
+    /// The plan's owned copy of the mask.
+    pub fn mask(&self) -> &FlashMask {
+        &self.mask
+    }
+
+    /// One classification pass's tile census (see [`TileStats`]).
+    pub fn census(&self) -> TileStats {
+        self.census
+    }
+
+    fn same_mask(&self, mask: &FlashMask) -> bool {
+        self.mask == *mask
+    }
+
+    fn check_views(&self, q: QViews<'_>, kv: KvViews<'_>) -> Result<(), AttnError> {
+        if q.heads != self.layout.q_heads {
+            return Err(AttnError::ShapeMismatch {
+                what: "q view heads",
+                got: q.heads,
+                want: self.layout.q_heads,
+            });
+        }
+        if kv.heads != self.layout.kv_heads {
+            return Err(AttnError::ShapeMismatch {
+                what: "kv view heads",
+                got: kv.heads,
+                want: self.layout.kv_heads,
+            });
+        }
+        if q.n != self.n || kv.n != self.n {
+            return Err(AttnError::ShapeMismatch {
+                what: "view n",
+                got: if q.n != self.n { q.n } else { kv.n },
+                want: self.n,
+            });
+        }
+        if q.d != self.d || kv.d != self.d {
+            return Err(AttnError::ShapeMismatch {
+                what: "view d",
+                got: if q.d != self.d { q.d } else { kv.d },
+                want: self.d,
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Forward result: one [`AttnOutput`] per query head (query-head
+/// order) plus the merged work counters.
+#[derive(Clone, Debug)]
+pub struct PrefillOutput {
+    pub outs: Vec<AttnOutput>,
+    pub stats: TileStats,
+}
+
+/// Arguments for one paged-cache decode step (the whole query group of
+/// one KV head; see `decode::step`).
+pub struct DecodeStep<'a> {
+    /// `[group, d]` query rows, query-head order within the group.
+    pub q_rows: &'a [f32],
+    pub group: usize,
+    pub cache: &'a PagedKv,
+    pub pool: &'a PagePool,
+    pub mask: &'a FlashMask,
+    pub view: &'a IncrementalMaskView,
+    /// Decode row (the cache already holds rows `0..=t`).
+    pub t: usize,
+    pub scale: f32,
+    pub skip: bool,
+}
+
+/// Arguments for one speculative verify pass (all drafted rows of the
+/// whole query group of one KV head; see `decode::spec`).
+pub struct VerifyStep<'a> {
+    /// `[group, tree.len(), d]` drafted query rows, query-head-major.
+    pub q_rows: &'a [f32],
+    pub group: usize,
+    pub cache: &'a PagedKv,
+    pub pool: &'a PagePool,
+    pub base: &'a FlashMask,
+    pub base_view: &'a IncrementalMaskView,
+    pub tree: &'a TokenTree,
+    pub tree_mask: &'a FlashMask,
+    pub tree_view: &'a IncrementalMaskView,
+    /// First drafted position (the committed prefix is `0..t0`).
+    pub t0: usize,
+    pub scale: f32,
+    pub skip: bool,
+}
+
+/// An attention execution target.  Implementations report what they
+/// can run via [`capabilities`](Self::capabilities); unsupported
+/// operations return [`AttnError::Unsupported`] (the default method
+/// bodies), never a silent wrong answer.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    fn capabilities(&self) -> Capabilities;
+
+    /// Full-sequence forward over an MHA layout.  The default treats
+    /// MHA as a group-1 grouped layout.
+    fn prefill(
+        &self,
+        plan: &ExecutionPlan,
+        q: QViews<'_>,
+        kv: KvViews<'_>,
+    ) -> Result<PrefillOutput, AttnError> {
+        self.prefill_grouped(plan, q, kv)
+    }
+
+    /// Full-sequence forward over any [`HeadLayout`]: Q `[q_heads, n,
+    /// d]` against shared K/V `[kv_heads, n, d]`.
+    fn prefill_grouped(
+        &self,
+        plan: &ExecutionPlan,
+        q: QViews<'_>,
+        kv: KvViews<'_>,
+    ) -> Result<PrefillOutput, AttnError>;
+
+    /// Decode one token for a query group against a paged KV cache.
+    /// Returns the `[group, d]` output rows.
+    fn decode_step(
+        &self,
+        step: DecodeStep<'_>,
+        stats: &mut DecodeStats,
+        scratch: &mut Vec<f32>,
+    ) -> Result<Vec<f32>, AttnError> {
+        let _ = (step, stats, scratch);
+        Err(AttnError::Unsupported { backend: self.name(), capability: Capability::DecodeStep })
+    }
+
+    /// Score all drafted rows of a query group in one pass over the
+    /// cache pages.  Returns the `[group, tree.len(), d]` output rows.
+    fn verify(
+        &self,
+        step: VerifyStep<'_>,
+        stats: &mut DecodeStats,
+        scratch: &mut Vec<f32>,
+    ) -> Result<Vec<f32>, AttnError> {
+        let _ = (step, stats, scratch);
+        Err(AttnError::Unsupported { backend: self.name(), capability: Capability::Verify })
+    }
+
+    /// Backward pass for a single head (`q,k,v,o,do,lse` as in paper
+    /// Alg. 2).
+    #[allow(clippy::too_many_arguments)]
+    fn backward(
+        &self,
+        plan: &ExecutionPlan,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        o: &[f32],
+        do_: &[f32],
+        lse: &[f32],
+    ) -> Result<(AttnGrads, TileStats), AttnError> {
+        let _ = (plan, q, k, v, o, do_, lse);
+        Err(AttnError::Unsupported { backend: self.name(), capability: Capability::Backward })
+    }
+}
+
+/// The CPU blocked engine: register-blocked packed microkernels,
+/// interval-driven tile scheduling, per-tile mask cache, and
+/// cost-weighted (head × row-block) work partitioning.  Supports every
+/// capability; the reference all other backends are pinned to.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CpuBackend;
+
+impl Backend for CpuBackend {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::all()
+    }
+
+    fn prefill_grouped(
+        &self,
+        plan: &ExecutionPlan,
+        q: QViews<'_>,
+        kv: KvViews<'_>,
+    ) -> Result<PrefillOutput, AttnError> {
+        plan.check_views(q, kv)?;
+        let (n, d) = (plan.n, plan.d);
+        let layout = plan.layout;
+        let cfg = plan.cfg;
+        let sched = &plan.sched;
+
+        // Take the reusable packing buffers *out* of the plan under a
+        // scoped lock, then compute unlocked: concurrent callers sharing
+        // one cached Arc<ExecutionPlan> never serialize on the kernel —
+        // a racing call simply finds the slot empty and packs into
+        // fresh buffers.  Contents are always repacked (K is data, and
+        // the plan key covers only mask/shape).
+        let mut packs = {
+            let mut slot = plan.packs.lock().unwrap_or_else(|p| p.into_inner());
+            std::mem::take(&mut *slot)
+        };
+        if packs.len() != layout.kv_heads {
+            packs.clear();
+            packs.resize_with(layout.kv_heads, || gemm::PackedKt::empty(cfg.bc));
+        }
+        for (kh, kt) in packs.iter_mut().enumerate() {
+            kt.repack(kv.k_head(kh), n, d);
+        }
+        let kts: &[gemm::PackedKt] = &packs;
+
+        // one classification pass per KV head; the query group reuses
+        // both the classes and the per-tile mask cache
+        let mut stats = TileStats::default();
+        for _ in 0..layout.kv_heads {
+            stats.merge(&plan.census);
+        }
+
+        let tr = sched.tr;
+        let mut outs: Vec<AttnOutput> = Vec::with_capacity(layout.q_heads);
+        if plan.threads <= 1 {
+            // sequential fast path: no thread-scope round trip
+            for h in 0..layout.q_heads {
+                let kh = layout.kv_head_of(h);
+                let out = flash::forward_tiles(
+                    q.head(h),
+                    &kts[kh],
+                    kv.v_head(kh),
+                    n,
+                    d,
+                    &plan.mask,
+                    cfg,
+                    sched,
+                    &mut stats,
+                );
+                outs.push(out);
+            }
+        } else {
+            let results =
+                parallel_2d(layout.q_heads, tr, sched.weights(), plan.threads, |h, bi| {
+                    let kh = layout.kv_head_of(h);
+                    let mut st = TileStats::default();
+                    let (ob, lb) = flash::forward_row_block(
+                        q.head(h),
+                        &kts[kh],
+                        kv.v_head(kh),
+                        n,
+                        d,
+                        &plan.mask,
+                        cfg,
+                        sched,
+                        bi,
+                        &mut st,
+                    );
+                    (ob, lb, st)
+                });
+            // stitch head-major, row-block-minor items back into
+            // per-head outputs; stats merge in item order (additive)
+            let mut items = results.into_iter();
+            for _h in 0..layout.q_heads {
+                let mut o = vec![0f32; n * d];
+                let mut lse = vec![f32::NEG_INFINITY; n];
+                for bi in 0..tr {
+                    let (ob, lb, st) = items.next().expect("one item per (head, row block)");
+                    stats.merge(&st);
+                    let row0 = bi * cfg.br;
+                    o[row0 * d..row0 * d + ob.len()].copy_from_slice(&ob);
+                    lse[row0..row0 + lb.len()].copy_from_slice(&lb);
+                }
+                outs.push(AttnOutput { o, lse });
+            }
+        }
+
+        // hand the buffers back for the next call — unless they are big
+        // enough to matter as resident memory: a long-lived PlanCache
+        // must not pin per-call K-derived bytes at long context, so
+        // large buffers are dropped instead of cached
+        let dp = d.div_ceil(gemm::LANES) * gemm::LANES;
+        let packed_bytes = layout.kv_heads * n * dp * std::mem::size_of::<f32>();
+        if packed_bytes <= PACK_RETAIN_BYTES {
+            *plan.packs.lock().unwrap_or_else(|p| p.into_inner()) = packs;
+        }
+        Ok(PrefillOutput { outs, stats })
+    }
+
+    fn decode_step(
+        &self,
+        step: DecodeStep<'_>,
+        stats: &mut DecodeStats,
+        scratch: &mut Vec<f32>,
+    ) -> Result<Vec<f32>, AttnError> {
+        if step.group == 0 {
+            return Err(AttnError::InvalidDim { what: "group" });
+        }
+        let want = step.group * step.pool.d();
+        if step.q_rows.len() != want {
+            return Err(AttnError::ShapeMismatch {
+                what: "decode q rows",
+                got: step.q_rows.len(),
+                want,
+            });
+        }
+        if step.view.page_size() != step.pool.page_size() {
+            return Err(AttnError::ShapeMismatch {
+                what: "mask view page size",
+                got: step.view.page_size(),
+                want: step.pool.page_size(),
+            });
+        }
+        if step.t >= step.mask.n() {
+            // the kernel indexes the interval vectors at row t; an
+            // out-of-range row must be a typed error, not a panic
+            return Err(AttnError::MaskSizeMismatch {
+                got: step.mask.n(),
+                want: step.t + 1,
+            });
+        }
+        Ok(crate::decode::step::decode_step_group_impl(
+            step.q_rows,
+            step.group,
+            step.cache,
+            step.pool,
+            step.mask,
+            step.view,
+            step.t,
+            step.scale,
+            step.skip,
+            stats,
+            scratch,
+        ))
+    }
+
+    fn verify(
+        &self,
+        step: VerifyStep<'_>,
+        stats: &mut DecodeStats,
+        scratch: &mut Vec<f32>,
+    ) -> Result<Vec<f32>, AttnError> {
+        if step.group == 0 {
+            return Err(AttnError::InvalidDim { what: "group" });
+        }
+        let want = step.group * step.tree.len() * step.pool.d();
+        if step.q_rows.len() != want {
+            return Err(AttnError::ShapeMismatch {
+                what: "verify q rows",
+                got: step.q_rows.len(),
+                want,
+            });
+        }
+        if step.tree_mask.n() != step.t0 + step.tree.len() {
+            return Err(AttnError::MaskSizeMismatch {
+                got: step.tree_mask.n(),
+                want: step.t0 + step.tree.len(),
+            });
+        }
+        if step.t0 + step.tree.max_path_len() > step.base.n() {
+            // drafted rows evaluate the base mask at their *logical*
+            // positions t0 + depth(node); a path running past the mask
+            // end must be a typed error, not an indexing panic.  (Node
+            // *count* may legitimately exceed the remaining rows —
+            // rejected sibling branches share depths.)
+            return Err(AttnError::MaskSizeMismatch {
+                got: step.base.n(),
+                want: step.t0 + step.tree.max_path_len(),
+            });
+        }
+        Ok(crate::decode::spec::verify_rows_group_impl(
+            step.q_rows,
+            step.group,
+            step.cache,
+            step.pool,
+            step.base,
+            step.base_view,
+            step.tree,
+            step.tree_mask,
+            step.tree_view,
+            step.t0,
+            step.scale,
+            step.skip,
+            stats,
+            scratch,
+        ))
+    }
+
+    fn backward(
+        &self,
+        plan: &ExecutionPlan,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        o: &[f32],
+        do_: &[f32],
+        lse: &[f32],
+    ) -> Result<(AttnGrads, TileStats), AttnError> {
+        let (n, d) = (plan.n, plan.d);
+        for (what, buf) in [("q", q), ("k", k), ("v", v), ("o", o), ("do", do_)] {
+            if buf.len() != n * d {
+                return Err(AttnError::ShapeMismatch { what, got: buf.len(), want: n * d });
+            }
+        }
+        if lse.len() != n {
+            return Err(AttnError::ShapeMismatch { what: "lse", got: lse.len(), want: n });
+        }
+        Ok(flash::backward_impl(q, k, v, o, do_, lse, n, d, &plan.mask, plan.cfg, &plan.sched))
+    }
+}
+
+/// The vanilla O(N²) dense oracle (paper Eq. 2) behind the same trait —
+/// what differential suites pin the blocked kernels to.  No paged-cache
+/// path: `decode`/`verify` are honestly unsupported.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DenseRefBackend;
+
+impl DenseRefBackend {
+    /// Dense forward from an explicit additive bias (`0 / -inf`,
+    /// row-major `n*n`) — the raw entry the deprecated
+    /// `dense_forward*` free functions delegate to.  `threads <= 1`
+    /// runs the sequential per-head loop; otherwise rows are
+    /// partitioned with `parallel_2d` (bitwise identical).
+    #[allow(clippy::too_many_arguments)]
+    pub fn forward_bias(
+        &self,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        n: usize,
+        d: usize,
+        layout: HeadLayout,
+        bias: &[f32],
+        scale: f32,
+        threads: usize,
+    ) -> Vec<AttnOutput> {
+        if threads <= 1 {
+            (0..layout.q_heads)
+                .map(|h| {
+                    let kh = layout.kv_head_of(h);
+                    dense::forward_impl(
+                        &q[h * n * d..(h + 1) * n * d],
+                        &k[kh * n * d..(kh + 1) * n * d],
+                        &v[kh * n * d..(kh + 1) * n * d],
+                        n,
+                        d,
+                        bias,
+                        scale,
+                    )
+                })
+                .collect()
+        } else {
+            dense::grouped_parallel_impl(q, k, v, n, d, layout, bias, scale, threads)
+        }
+    }
+}
+
+impl Backend for DenseRefBackend {
+    fn name(&self) -> &'static str {
+        "dense-ref"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            prefill: true,
+            prefill_grouped: true,
+            decode: false,
+            verify: false,
+            backward: true,
+        }
+    }
+
+    fn prefill_grouped(
+        &self,
+        plan: &ExecutionPlan,
+        q: QViews<'_>,
+        kv: KvViews<'_>,
+    ) -> Result<PrefillOutput, AttnError> {
+        plan.check_views(q, kv)?;
+        let (n, d) = (plan.n, plan.d);
+        let bias = plan.mask.dense_bias();
+        let outs = self.forward_bias(
+            q.data,
+            kv.k,
+            kv.v,
+            n,
+            d,
+            plan.layout,
+            &bias,
+            plan.cfg.scale,
+            plan.threads,
+        );
+        // the dense engine has no tile census; it computes every score
+        let stats = TileStats {
+            macs: 2 * (plan.layout.q_heads * n * n * d) as u64,
+            mask_evals: (n * n) as u64,
+            ..TileStats::default()
+        };
+        Ok(PrefillOutput { outs, stats })
+    }
+
+    fn backward(
+        &self,
+        plan: &ExecutionPlan,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        o: &[f32],
+        do_: &[f32],
+        lse: &[f32],
+    ) -> Result<(AttnGrads, TileStats), AttnError> {
+        let (n, d) = (plan.n, plan.d);
+        for (what, buf) in [("q", q), ("k", k), ("v", v), ("o", o), ("do", do_)] {
+            if buf.len() != n * d {
+                return Err(AttnError::ShapeMismatch { what, got: buf.len(), want: n * d });
+            }
+        }
+        if lse.len() != n {
+            return Err(AttnError::ShapeMismatch { what: "lse", got: lse.len(), want: n });
+        }
+        let bias = plan.mask.dense_bias();
+        let grads = dense::dense_backward(q, k, v, o, do_, lse, n, d, &bias, plan.cfg.scale);
+        Ok((grads, TileStats::default()))
+    }
+}
+
+/// The AOT-compiled Pallas `attn_fwd` artifact via PJRT.  Wraps
+/// today's artifact path honestly: the compiled signature is MHA-only
+/// and single-problem, returns no logsumexp residuals, and there is no
+/// decode/verify/backward artifact yet — all reported through
+/// [`Capabilities`] so `ServeEngine` falls back *explicitly* (counted
+/// and logged) instead of ad hoc.
+pub struct PjrtBackend {
+    exe: Executable,
+}
+
+impl PjrtBackend {
+    pub fn new(exe: Executable) -> PjrtBackend {
+        PjrtBackend { exe }
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities {
+            prefill: true,
+            prefill_grouped: false, // grouped decode artifact: ROADMAP
+            decode: false,          // no AOT decode artifact compiled yet
+            verify: false,
+            backward: false, // train-step artifacts fuse their own backward
+        }
+    }
+
+    fn prefill(
+        &self,
+        plan: &ExecutionPlan,
+        q: QViews<'_>,
+        kv: KvViews<'_>,
+    ) -> Result<PrefillOutput, AttnError> {
+        plan.check_views(q, kv)?;
+        if !plan.layout.is_mha() {
+            return Err(AttnError::Unsupported {
+                backend: self.name(),
+                capability: Capability::PrefillGrouped,
+            });
+        }
+        let (n, d, heads) = (plan.n, plan.d, plan.layout.q_heads);
+        let shape4 = vec![1, heads, n, d];
+        let vec_t = |v: &Vec<i32>| HostTensor::I32 { shape: vec![1, n], data: v.clone() };
+        let out = self
+            .exe
+            .run(&[
+                HostTensor::F32 { shape: shape4.clone(), data: q.data.to_vec() },
+                HostTensor::F32 { shape: shape4.clone(), data: kv.k.to_vec() },
+                HostTensor::F32 { shape: shape4, data: kv.v.to_vec() },
+                vec_t(&plan.mask.lts),
+                vec_t(&plan.mask.lte),
+                vec_t(&plan.mask.uts),
+                vec_t(&plan.mask.ute),
+            ])
+            .map_err(|e| AttnError::Backend { backend: "pjrt", reason: format!("{e:#}") })?;
+        let flat = out
+            .first()
+            .ok_or_else(|| AttnError::Backend {
+                backend: "pjrt",
+                reason: "empty result tuple".into(),
+            })?
+            .as_f32()
+            .map_err(|e| AttnError::Backend { backend: "pjrt", reason: format!("{e:#}") })?;
+        if flat.len() != heads * n * d {
+            return Err(AttnError::ShapeMismatch {
+                what: "pjrt output",
+                got: flat.len(),
+                want: heads * n * d,
+            });
+        }
+        let outs = (0..heads)
+            .map(|h| AttnOutput {
+                o: flat[h * n * d..(h + 1) * n * d].to_vec(),
+                // the artifact returns no logsumexp residuals
+                lse: Vec::new(),
+            })
+            .collect();
+        // work accounting from the plan census: the Eq. 4 skip decision
+        // is a property of the mask, identical on device
+        let mut stats = TileStats::default();
+        for _ in 0..heads {
+            stats.merge(&plan.census);
+        }
+        Ok(PrefillOutput { outs, stats })
+    }
+
+    fn prefill_grouped(
+        &self,
+        plan: &ExecutionPlan,
+        q: QViews<'_>,
+        kv: KvViews<'_>,
+    ) -> Result<PrefillOutput, AttnError> {
+        if plan.layout.is_mha() {
+            return self.prefill(plan, q, kv);
+        }
+        Err(AttnError::Unsupported {
+            backend: self.name(),
+            capability: Capability::PrefillGrouped,
+        })
+    }
+}
+
+/// Content-keyed cache of [`ExecutionPlan`]s with FIFO eviction.
+///
+/// Keyed by [`AttnProblem::key`] (shape + tiling + mask-byte hash); a
+/// hash hit is double-checked against the stored plan's mask bytes, so
+/// a 64-bit collision degrades to a rebuild, never a wrong plan.  Hit
+/// and miss counters feed the serving report and the bench's
+/// plan-cache section.
+pub struct PlanCache {
+    cap: usize,
+    map: HashMap<PlanKey, Arc<ExecutionPlan>>,
+    order: VecDeque<PlanKey>,
+    hits: u64,
+    misses: u64,
+}
+
+impl PlanCache {
+    pub fn new(cap: usize) -> PlanCache {
+        PlanCache {
+            cap: cap.max(1),
+            map: HashMap::new(),
+            order: VecDeque::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Hits / lookups, 0 when nothing was looked up.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Return the cached plan for `problem`, building (and caching) it
+    /// on miss.
+    pub fn get_or_build(
+        &mut self,
+        problem: &AttnProblem<'_>,
+    ) -> Result<Arc<ExecutionPlan>, AttnError> {
+        let key = problem.key()?;
+        let mut collided = false;
+        if let Some(plan) = self.map.get(&key) {
+            // key() already validated, so the mask is present
+            let mask = problem.mask.expect("validated problem has a mask");
+            if plan.same_mask(mask) {
+                self.hits += 1;
+                return Ok(Arc::clone(plan));
+            }
+            // hash collision (the sampled key aliased two masks): the
+            // rebuild below overwrites the slot in place — the key is
+            // already in the FIFO queue, so it must NOT be re-queued
+            // (a duplicate would corrupt the eviction accounting)
+            collided = true;
+        }
+        self.misses += 1;
+        let plan = Arc::new(problem.plan()?);
+        if !collided {
+            if self.map.len() >= self.cap {
+                if let Some(old) = self.order.pop_front() {
+                    self.map.remove(&old);
+                }
+            }
+            self.order.push_back(key.clone());
+        }
+        self.map.insert(key, Arc::clone(&plan));
+        Ok(plan)
+    }
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache::new(64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mask::builders;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32() * 0.5).collect()
+    }
+
+    #[test]
+    fn builder_validates_typed_errors() {
+        let mask = builders::causal(32);
+        // happy path
+        assert!(AttnProblem::new(32, 4).mask(&mask).plan().is_ok());
+        // missing mask
+        assert_eq!(AttnProblem::new(32, 4).plan().unwrap_err(), AttnError::MaskMissing);
+        // wrong mask size
+        assert_eq!(
+            AttnProblem::new(64, 4).mask(&mask).plan().unwrap_err(),
+            AttnError::MaskSizeMismatch { got: 32, want: 64 }
+        );
+        // degenerate layouts
+        assert_eq!(
+            AttnProblem::new(32, 4).heads(4, 0).mask(&mask).plan().unwrap_err(),
+            AttnError::UnsupportedLayout { q_heads: 4, kv_heads: 0 }
+        );
+        assert_eq!(
+            AttnProblem::new(32, 4).heads(6, 4).mask(&mask).plan().unwrap_err(),
+            AttnError::UnsupportedLayout { q_heads: 6, kv_heads: 4 }
+        );
+        // zero dims / tiles
+        assert_eq!(
+            AttnProblem::new(0, 4).mask(&mask).plan().unwrap_err(),
+            AttnError::InvalidDim { what: "n" }
+        );
+        assert_eq!(
+            AttnProblem::new(32, 4).mask(&mask).tile(0, 16).plan().unwrap_err(),
+            AttnError::InvalidTile { br: 0, bc: 16 }
+        );
+        // structurally broken mask
+        let mut bad = builders::causal(32);
+        bad.lts[0] = 30;
+        bad.lte[0] = 2;
+        assert!(matches!(
+            AttnProblem::new(32, 4).mask(&bad).plan().unwrap_err(),
+            AttnError::MaskInvalid { .. }
+        ));
+    }
+
+    #[test]
+    fn views_check_lengths() {
+        let buf = vec![0f32; 24];
+        assert!(QViews::new(&buf, 2, 3, 4).is_ok());
+        assert_eq!(
+            QViews::new(&buf, 2, 3, 5).unwrap_err(),
+            AttnError::ShapeMismatch { what: "q", got: 24, want: 30 }
+        );
+        assert!(KvViews::new(&buf, &buf, 1, 6, 4).is_ok());
+        let short = vec![0f32; 23];
+        assert!(matches!(
+            KvViews::new(&buf, &short, 1, 6, 4).unwrap_err(),
+            AttnError::ShapeMismatch { what: "v", .. }
+        ));
+    }
+
+    #[test]
+    fn cpu_prefill_matches_dense_ref() {
+        let (n, d) = (96, 8);
+        let layout = HeadLayout::gqa(4, 2);
+        let mut rng = Rng::new(5);
+        let q = rand_vec(layout.q_heads * n * d, &mut rng);
+        let k = rand_vec(layout.kv_heads * n * d, &mut rng);
+        let v = rand_vec(layout.kv_heads * n * d, &mut rng);
+        for (kind, mask) in builders::benchmark_suite(n, 9) {
+            let problem =
+                AttnProblem::new(n, d).layout(layout).mask(&mask).tile(32, 32).threads(2);
+            let plan = problem.plan().unwrap();
+            let qv = QViews::new(&q, layout.q_heads, n, d).unwrap();
+            let kvv = KvViews::new(&k, &v, layout.kv_heads, n, d).unwrap();
+            let cpu = CpuBackend.prefill_grouped(&plan, qv, kvv).unwrap();
+            let oracle = DenseRefBackend.prefill_grouped(&plan, qv, kvv).unwrap();
+            assert_eq!(cpu.outs.len(), layout.q_heads, "{kind}");
+            for h in 0..layout.q_heads {
+                for (i, (a, b)) in cpu.outs[h].o.iter().zip(&oracle.outs[h].o).enumerate() {
+                    assert!((a - b).abs() < 3e-5, "{kind} head {h} o[{i}]: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_and_parallel_paths_bitwise_equal() {
+        let (n, d) = (100, 8);
+        let layout = HeadLayout::gqa(4, 2);
+        let mut rng = Rng::new(7);
+        let q = rand_vec(layout.q_heads * n * d, &mut rng);
+        let k = rand_vec(layout.kv_heads * n * d, &mut rng);
+        let v = rand_vec(layout.kv_heads * n * d, &mut rng);
+        let mask = builders::causal_document(n, &[48, 52]);
+        let qv = QViews::new(&q, layout.q_heads, n, d).unwrap();
+        let kvv = KvViews::new(&k, &v, layout.kv_heads, n, d).unwrap();
+        let base = AttnProblem::new(n, d).layout(layout).mask(&mask).tile(32, 16);
+        let want = CpuBackend.prefill_grouped(&base.plan().unwrap(), qv, kvv).unwrap();
+        for threads in [2usize, 3, 8] {
+            let plan = base.threads(threads).plan().unwrap();
+            let got = CpuBackend.prefill_grouped(&plan, qv, kvv).unwrap();
+            for h in 0..layout.q_heads {
+                assert_eq!(got.outs[h].o, want.outs[h].o, "threads={threads} head {h}");
+                assert_eq!(got.outs[h].lse, want.outs[h].lse, "threads={threads} head {h}");
+            }
+            assert_eq!(got.stats, want.stats, "threads={threads}: stats diverged");
+        }
+    }
+
+    #[test]
+    fn plan_reuse_is_bitwise_stable() {
+        // one plan, many calls (the per-layer reuse): outputs must be
+        // bitwise identical call over call, packing buffers included
+        let (n, d) = (64, 8);
+        let mut rng = Rng::new(11);
+        let q = rand_vec(n * d, &mut rng);
+        let k = rand_vec(n * d, &mut rng);
+        let v = rand_vec(n * d, &mut rng);
+        let mask = builders::sliding_window(n, 12);
+        let plan = AttnProblem::new(n, d).mask(&mask).tile(16, 16).plan().unwrap();
+        let qv = QViews::new(&q, 1, n, d).unwrap();
+        let kvv = KvViews::new(&k, &v, 1, n, d).unwrap();
+        let first = CpuBackend.prefill(&plan, qv, kvv).unwrap();
+        for _ in 0..3 {
+            let again = CpuBackend.prefill(&plan, qv, kvv).unwrap();
+            assert_eq!(again.outs[0].o, first.outs[0].o);
+            assert_eq!(again.outs[0].lse, first.outs[0].lse);
+            assert_eq!(again.stats, first.stats);
+        }
+        // different K through the same plan must not see stale packing
+        let k2 = rand_vec(n * d, &mut rng);
+        let kvv2 = KvViews::new(&k2, &v, 1, n, d).unwrap();
+        let other = CpuBackend.prefill(&plan, qv, kvv2).unwrap();
+        assert_ne!(other.outs[0].o, first.outs[0].o, "repack must refresh contents");
+    }
+
+    #[test]
+    fn plan_cache_hits_and_collision_guard() {
+        let n = 64;
+        let mask_a = builders::causal(n);
+        let mask_b = builders::sliding_window(n, 8);
+        let mut cache = PlanCache::new(8);
+        let pa = AttnProblem::new(n, 8).mask(&mask_a).tile(16, 16);
+        let pb = AttnProblem::new(n, 8).mask(&mask_b).tile(16, 16);
+        let a1 = cache.get_or_build(&pa).unwrap();
+        let a2 = cache.get_or_build(&pa).unwrap();
+        assert!(Arc::ptr_eq(&a1, &a2), "same problem must share one plan");
+        let b = cache.get_or_build(&pb).unwrap();
+        assert!(!Arc::ptr_eq(&a1, &b));
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 2);
+        assert!((cache.hit_rate() - 1.0 / 3.0).abs() < 1e-12);
+        // same mask content, different tiling => different plan
+        let pc = AttnProblem::new(n, 8).mask(&mask_a).tile(32, 32);
+        let c = cache.get_or_build(&pc).unwrap();
+        assert!(!Arc::ptr_eq(&a1, &c));
+    }
+
+    #[test]
+    fn plan_cache_evicts_fifo() {
+        let n = 32;
+        let masks: Vec<_> = (1..=4).map(|w| builders::sliding_window(n, w * 2)).collect();
+        let mut cache = PlanCache::new(2);
+        for m in &masks {
+            cache.get_or_build(&AttnProblem::new(n, 4).mask(m)).unwrap();
+        }
+        assert_eq!(cache.len(), 2);
+        // the two oldest were evicted; re-requesting them misses
+        let before = cache.misses();
+        cache.get_or_build(&AttnProblem::new(n, 4).mask(&masks[0])).unwrap();
+        assert_eq!(cache.misses(), before + 1);
+    }
+
+    #[test]
+    fn unsupported_capabilities_are_typed() {
+        let n = 32;
+        let mask = builders::causal(n);
+        let plan = AttnProblem::new(n, 4).mask(&mask).plan().unwrap();
+        assert!(!DenseRefBackend.capabilities().decode);
+        assert!(DenseRefBackend.capabilities().supports(Capability::Prefill));
+        assert!(!DenseRefBackend.capabilities().supports(Capability::DecodeStep));
+        // default trait bodies surface Unsupported, never wrong answers
+        let pool = PagePool::new(8, 4, 4);
+        let cache = PagedKv::new();
+        let view = IncrementalMaskView::new(&mask, 8);
+        let mut stats = DecodeStats::default();
+        let mut scratch = Vec::new();
+        let err = DenseRefBackend
+            .decode_step(
+                DecodeStep {
+                    q_rows: &[0.0; 4],
+                    group: 1,
+                    cache: &cache,
+                    pool: &pool,
+                    mask: &mask,
+                    view: &view,
+                    t: 0,
+                    scale: 1.0,
+                    skip: true,
+                },
+                &mut stats,
+                &mut scratch,
+            )
+            .unwrap_err();
+        assert_eq!(
+            err,
+            AttnError::Unsupported {
+                backend: "dense-ref",
+                capability: Capability::DecodeStep
+            }
+        );
+        let _ = plan;
+    }
+}

@@ -155,6 +155,7 @@ pub fn bsr_forward(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the legacy entry points double as migration oracles
 mod tests {
     use super::*;
     use crate::attention::testutil::rand_vec;

@@ -2,7 +2,7 @@
 //! the "vanilla attention" baseline of Fig. 2 and the semantic oracle
 //! for the blocked engines.
 
-use super::{gemm, parallel_2d, AttnGrads, AttnOutput, HeadLayout};
+use super::{api, gemm, parallel_2d, AttnGrads, AttnOutput, HeadLayout};
 
 /// Rows `[row0, row0 + rows)` of the dense forward — the row-parallel
 /// work unit shared by [`dense_forward`] and
@@ -53,9 +53,9 @@ fn dense_forward_rows(
     }
 }
 
-/// Softmax attention with dense bias; row-major `[n, d]` inputs,
-/// `bias[n*n]` additive mask (0 / -inf).
-pub fn dense_forward(
+/// Single-head dense forward body shared by the [`api::DenseRefBackend`]
+/// and the deprecated free functions.
+pub(crate) fn forward_impl(
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -71,10 +71,38 @@ pub fn dense_forward(
     AttnOutput { o, lse }
 }
 
-/// [`dense_forward`] over a grouped head layout: Q `[q_heads, n, d]`
+/// Softmax attention with dense bias; row-major `[n, d]` inputs,
+/// `bias[n*n]` additive mask (0 / -inf).
+///
+/// Deprecated shim over [`api::DenseRefBackend`] (which also accepts a
+/// FlashMask-backed [`api::ExecutionPlan`] via the [`api::Backend`]
+/// trait).
+#[deprecated(
+    note = "use attention::api — DenseRefBackend::prefill with an AttnProblem, or DenseRefBackend::forward_bias for raw-bias calls (DESIGN.md §Public API)"
+)]
+pub fn dense_forward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    bias: &[f32],
+    scale: f32,
+) -> AttnOutput {
+    let mut outs =
+        api::DenseRefBackend.forward_bias(q, k, v, n, d, HeadLayout::mha(1), bias, scale, 1);
+    outs.remove(0)
+}
+
+/// Dense forward over a grouped head layout: Q `[q_heads, n, d]`
 /// against shared K/V `[kv_heads, n, d]`, each query head scored
 /// against its group's KV head.  Returns one output per query head —
 /// the GQA semantic oracle the grouped blocked kernels are pinned to.
+///
+/// Deprecated shim over [`api::DenseRefBackend`].
+#[deprecated(
+    note = "use attention::api — DenseRefBackend::prefill_grouped with an AttnProblem, or DenseRefBackend::forward_bias (DESIGN.md §Public API)"
+)]
 pub fn dense_forward_grouped(
     q: &[f32],
     k: &[f32],
@@ -88,30 +116,43 @@ pub fn dense_forward_grouped(
     assert_eq!(q.len(), layout.q_heads * n * d, "q must be [q_heads, n, d]");
     assert_eq!(k.len(), layout.kv_heads * n * d, "k must be [kv_heads, n, d]");
     assert_eq!(v.len(), layout.kv_heads * n * d, "v must be [kv_heads, n, d]");
-    (0..layout.q_heads)
-        .map(|h| {
-            let kh = layout.kv_head_of(h);
-            dense_forward(
-                &q[h * n * d..(h + 1) * n * d],
-                &k[kh * n * d..(kh + 1) * n * d],
-                &v[kh * n * d..(kh + 1) * n * d],
-                n,
-                d,
-                bias,
-                scale,
-            )
-        })
-        .collect()
+    api::DenseRefBackend.forward_bias(q, k, v, n, d, layout, bias, scale, 1)
 }
 
-/// [`dense_forward_grouped`] with (head × row-chunk) work partitioning
-/// via [`parallel_2d`] — the dense reference keeps up with multi-core
+/// Grouped dense forward with (head × row-chunk) work partitioning via
+/// [`parallel_2d`] — the dense reference keeps up with multi-core
 /// kernel runs, so oracle comparisons at bench sizes don't dominate
 /// wall time.  Dense rows cost the same regardless of the mask, so the
 /// chunk weights are uniform.  Bitwise identical to the sequential
 /// path at any thread count (rows are independent).
+///
+/// Deprecated shim over [`api::DenseRefBackend`].
+#[deprecated(
+    note = "use attention::api — DenseRefBackend::prefill_grouped with an AttnProblem.threads(t), or DenseRefBackend::forward_bias (DESIGN.md §Public API)"
+)]
 #[allow(clippy::too_many_arguments)]
 pub fn dense_forward_grouped_parallel(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    layout: HeadLayout,
+    bias: &[f32],
+    scale: f32,
+    max_threads: usize,
+) -> Vec<AttnOutput> {
+    assert_eq!(q.len(), layout.q_heads * n * d, "q must be [q_heads, n, d]");
+    assert_eq!(k.len(), layout.kv_heads * n * d, "k must be [kv_heads, n, d]");
+    assert_eq!(v.len(), layout.kv_heads * n * d, "v must be [kv_heads, n, d]");
+    assert_eq!(bias.len(), n * n);
+    api::DenseRefBackend.forward_bias(q, k, v, n, d, layout, bias, scale, max_threads)
+}
+
+/// The parallel grouped dense body shared by [`api::DenseRefBackend`]
+/// and the deprecated free functions.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn grouped_parallel_impl(
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -225,6 +266,7 @@ pub fn dense_backward(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the legacy entry points double as migration oracles
 mod tests {
     use super::*;
     use crate::attention::testutil::rand_vec;

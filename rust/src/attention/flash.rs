@@ -6,8 +6,9 @@
 //! arithmetic over *all* tiles, so the two are bitwise-equal — the
 //! paper's §4.4 exactness claim, asserted in the tests below.
 
+use super::api::{self, Backend as _};
 use super::gemm;
-use super::{parallel_2d, AttnConfig, AttnGrads, AttnOutput, HeadLayout, TileStats};
+use super::{AttnConfig, AttnGrads, AttnOutput, HeadLayout, TileStats};
 use crate::mask::{BlockClass, BlockTable, FlashMask};
 
 const NEG_INF: f32 = f32::NEG_INFINITY;
@@ -40,6 +41,17 @@ fn apply_tile_mask(
         }
     }
     stats.mask_evals += (rows * cols) as u64;
+}
+
+/// Replay a precomputed per-tile mask byte map (1 = masked) over a
+/// score tile — the cache-hit path of [`apply_tile_mask`].  Branch-free
+/// select so the pass vectorizes.
+#[inline]
+fn apply_tile_mask_cached(s: &mut [f32], bits: &[u8]) {
+    debug_assert_eq!(s.len(), bits.len());
+    for (sv, &m) in s.iter_mut().zip(bits) {
+        *sv = if m != 0 { NEG_INF } else { *sv };
+    }
 }
 
 /// Tile decision shared by forward and backward.
@@ -75,8 +87,8 @@ pub(crate) fn tile_class(
 /// it — which is what lets the grouped kernel build it once per KV
 /// head and reuse it across the whole query group (and the serving
 /// engine share one schedule across all heads of a request).  The
-/// per-row-block executed-tile counts double as the [`parallel_2d`]
-/// cost weights.
+/// per-row-block executed-tile counts double as the
+/// [`super::parallel_2d`] cost weights.
 pub(crate) struct TileSchedule {
     pub tr: usize,
     pub tc: usize,
@@ -85,9 +97,36 @@ pub(crate) struct TileSchedule {
     /// Executed (non-fully-masked) tiles per row block — the
     /// work-partitioning weight.
     executed: Vec<u64>,
+    /// Per-tile mask cache: for every `Partial` tile (when the Eq. 4
+    /// classification is on) the element-wise interval tests are run
+    /// **once here** and materialized as a `rows*cols` byte map
+    /// (1 = masked).  Every compute pass — each query head of a GQA
+    /// group, each row-block thread, each repeated call through a
+    /// cached [`api::ExecutionPlan`] — applies the precomputed map
+    /// instead of re-testing the intervals.  `tile_off[t]..tile_off[t+1]`
+    /// indexes tile `t`'s bytes; non-partial tiles have zero extent.
+    /// Bounded by [`Self::MASK_CACHE_BYTES`] — partial tiles past the
+    /// budget stay uncached and fall back to per-pass element-wise
+    /// tests.  Empty in dense-baseline schedules (`skip = false`),
+    /// which keep the per-pass element-wise masking the baseline is
+    /// meant to pay.
+    masked: Vec<u8>,
+    tile_off: Vec<usize>,
+    /// Interval tests performed building the cache (the one-time cost a
+    /// plan charges as `mask_evals`).
+    build_mask_evals: u64,
 }
 
 impl TileSchedule {
+    /// Cap on materialized mask-cache bytes per schedule.  Partial
+    /// tiles are worst-case O(n²) elements (e.g. eviction masks where
+    /// most lower-triangle tiles are partial), so an unbounded cache
+    /// would trade the representation's O(n) memory story away at long
+    /// context — and `PlanCache` retains up to 64 plans.  Tiles past
+    /// the budget simply stay uncached and fall back to the per-pass
+    /// element-wise interval tests (bitwise-identical results).
+    pub const MASK_CACHE_BYTES: usize = 4 << 20;
+
     pub fn build(
         mask: &FlashMask,
         table: &BlockTable,
@@ -100,9 +139,15 @@ impl TileSchedule {
         let mut classes = Vec::with_capacity(tr * tc);
         let mut ranges = Vec::with_capacity(tr);
         let mut executed = Vec::with_capacity(tr);
+        let mut masked = Vec::new();
+        let mut tile_off = Vec::with_capacity(tr * tc + 1);
+        tile_off.push(0);
+        let mut build_mask_evals = 0u64;
         for bi in 0..tr {
             let (mut lo, mut hi) = (0usize, 0usize);
             let mut exec = 0u64;
+            let row0 = bi * br;
+            let rows = br.min(n - row0);
             for bj in 0..tc {
                 let class = tile_class(mask, table, bi, br, bj, bc, skip);
                 if class != BlockClass::FullyMasked {
@@ -112,13 +157,31 @@ impl TileSchedule {
                     hi = bj + 1;
                     exec += 1;
                 }
+                if skip && class == BlockClass::PartiallyMasked {
+                    let col0 = bj * bc;
+                    let cols = bc.min(n - col0);
+                    if masked.len() + rows * cols <= Self::MASK_CACHE_BYTES {
+                        // run the interval tests once; every pass
+                        // replays the byte map
+                        for x in 0..rows {
+                            let i = row0 + x;
+                            for y in 0..cols {
+                                masked.push(u8::from(!mask.allowed(i, col0 + y)));
+                            }
+                        }
+                        build_mask_evals += (rows * cols) as u64;
+                    }
+                    // over budget: tile stays uncached; compute passes
+                    // keep the element-wise tests for it
+                }
+                tile_off.push(masked.len());
                 classes.push(class);
             }
             // a fully-masked row block never set lo/hi: range stays (0, 0)
             ranges.push((lo, hi));
             executed.push(exec);
         }
-        TileSchedule { tr, tc, classes, ranges, executed }
+        TileSchedule { tr, tc, classes, ranges, executed, masked, tile_off, build_mask_evals }
     }
 
     #[inline]
@@ -132,9 +195,40 @@ impl TileSchedule {
         self.ranges[bi]
     }
 
-    /// Per-row-block executed-tile counts ([`parallel_2d`] weights).
+    /// Per-row-block executed-tile counts ([`super::parallel_2d`] weights).
     pub fn weights(&self) -> &[u64] {
         &self.executed
+    }
+
+    /// All tile classes, row-major (`tr * tc`) — the census input.
+    pub fn classes(&self) -> &[BlockClass] {
+        &self.classes
+    }
+
+    pub fn build_mask_evals(&self) -> u64 {
+        self.build_mask_evals
+    }
+
+    /// The cached `rows*cols` mask bytes of tile `(bi, bj)`, if the
+    /// tile is partial and the cache was built (`skip = true`).
+    #[inline]
+    pub fn tile_mask(&self, bi: usize, bj: usize) -> Option<&[u8]> {
+        let t = bi * self.tc + bj;
+        let (s, e) = (self.tile_off[t], self.tile_off[t + 1]);
+        if s == e {
+            None
+        } else {
+            Some(&self.masked[s..e])
+        }
+    }
+
+    /// One classification pass's tile census plus the cache build cost
+    /// — what [`api::ExecutionPlan`] charges per KV head.
+    pub fn census(&self) -> TileStats {
+        let mut stats = TileStats::default();
+        add_census(&mut stats, &self.classes);
+        stats.mask_evals = self.build_mask_evals;
+        stats
     }
 }
 
@@ -157,12 +251,15 @@ fn add_census(stats: &mut TileStats, classes: &[BlockClass]) {
 /// Returns the row block's `[rows, d]` output and `[rows]` logsumexp;
 /// accumulates the compute-side counters (`macs`, `mask_evals`,
 /// `tiles_visited`) into `stats`.  This is the unit of
-/// [`parallel_2d`] work partitioning — row blocks are independent, so
-/// the parallel and sequential paths are bitwise-identical.
+/// [`super::parallel_2d`] work partitioning — row blocks are
+/// independent, so the parallel and sequential paths are
+/// bitwise-identical.
 ///
-/// Unlike the decode-side grouped kernels, the element-wise interval
-/// tests on partial tiles still run per query head here (sharing them
-/// needs a per-tile mask cache — follow-up).
+/// Partial tiles replay the schedule's per-tile mask cache (interval
+/// tests run once at schedule build and are shared across the whole
+/// query group and across repeated plan-cached calls — the decode
+/// kernels' classify-once reuse, brought to prefill); dense-baseline
+/// schedules (`skip = false`) fall back to per-pass element-wise tests.
 pub(crate) fn forward_row_block(
     q: &[f32],
     kt: &gemm::PackedKt,
@@ -209,7 +306,15 @@ pub(crate) fn forward_row_block(
         stats.macs += (rows * cols * d) as u64;
 
         if class == BlockClass::PartiallyMasked {
-            apply_tile_mask(s_tile, mask, row0, rows, col0, cols, stats);
+            if let Some(bits) = sched.tile_mask(bi, bj) {
+                // per-tile mask cache: interval tests ran once at
+                // schedule build; replay the byte map (same positions,
+                // bitwise-identical scores)
+                apply_tile_mask_cached(s_tile, bits);
+                stats.mask_cache_hits += 1;
+            } else {
+                apply_tile_mask(s_tile, mask, row0, rows, col0, cols, stats);
+            }
         }
 
         // online softmax update (Alg. 1 lines 25-26): one lane-parallel
@@ -271,6 +376,15 @@ pub(crate) fn forward_tiles(
 ///
 /// `q,k,v`: row-major `[n, d]`.  Returns output, per-row logsumexp, and
 /// tile/work counters.
+///
+/// Deprecated shim over [`api`]: builds a one-shot
+/// [`api::AttnProblem`] and runs [`api::CpuBackend`], so the
+/// differential suites pinned to this entry point double as migration
+/// tests.  The passed `table` is ignored — the plan rebuilds an
+/// identical one from the same mask and `cfg.bc` (deterministic).
+#[deprecated(
+    note = "use attention::api — AttnProblem::new(n, d).mask(&mask).tile(br, bc) + CpuBackend::prefill (DESIGN.md §Public API)"
+)]
 pub fn flashmask_forward(
     q: &[f32],
     k: &[f32],
@@ -282,14 +396,23 @@ pub fn flashmask_forward(
     cfg: AttnConfig,
     skip: bool,
 ) -> (AttnOutput, TileStats) {
-    assert_eq!(q.len(), n * d);
-    assert_eq!(mask.n(), n);
-    let sched = TileSchedule::build(mask, table, n, cfg, skip);
-    let kt = gemm::PackedKt::pack(k, n, d, cfg.bc);
-    let mut stats = TileStats::default();
-    add_census(&mut stats, &sched.classes);
-    let out = forward_tiles(q, &kt, v, n, d, mask, cfg, &sched, &mut stats);
-    (out, stats)
+    let _ = table;
+    let plan = api::AttnProblem::new(n, d)
+        .mask(mask)
+        .tile(cfg.br, cfg.bc)
+        .scale(cfg.scale)
+        .skip(skip)
+        .plan()
+        .expect("flashmask_forward: invalid problem");
+    let out = api::CpuBackend
+        .prefill(
+            &plan,
+            api::QViews::new(q, 1, n, d).expect("flashmask_forward: q must be [n, d]"),
+            api::KvViews::new(k, v, 1, n, d).expect("flashmask_forward: k/v must be [n, d]"),
+        )
+        .expect("flashmask_forward: CPU prefill");
+    let mut outs = out.outs;
+    (outs.remove(0), out.stats)
 }
 
 /// Algorithm 1 forward over a grouped head layout: Q `[q_heads, n, d]`
@@ -306,6 +429,12 @@ pub fn flashmask_forward(
 /// Returns one [`AttnOutput`] per query head, in query-head order.
 /// With an MHA layout this is bitwise-identical to calling
 /// [`flashmask_forward`] once per head.
+///
+/// Deprecated shim over [`api`] (single-threaded); see
+/// [`flashmask_forward`] for the migration contract.
+#[deprecated(
+    note = "use attention::api — AttnProblem::new(n, d).layout(layout).mask(&mask) + CpuBackend::prefill_grouped (DESIGN.md §Public API)"
+)]
 #[allow(clippy::too_many_arguments)]
 pub fn flashmask_forward_grouped(
     q: &[f32],
@@ -319,14 +448,14 @@ pub fn flashmask_forward_grouped(
     cfg: AttnConfig,
     skip: bool,
 ) -> (Vec<AttnOutput>, TileStats) {
-    flashmask_forward_grouped_parallel(q, k, v, n, d, layout, mask, table, cfg, skip, 1)
+    grouped_shim(q, k, v, n, d, layout, mask, table, cfg, skip, 1)
 }
 
 /// [`flashmask_forward_grouped`] with (head × row-block) work
 /// partitioning across up to `max_threads` OS threads.
 ///
 /// The grid of `q_heads · ⌈n/Br⌉` row-block items is cut into
-/// cost-weighted contiguous chunks by [`parallel_2d`] (weight =
+/// cost-weighted contiguous chunks by [`super::parallel_2d`] (weight =
 /// executed tiles per row block from the interval schedule), so a
 /// single long 1-head sequence saturates every core and causal
 /// workloads don't tail-stall on the heavy last rows.  Row blocks are
@@ -335,6 +464,9 @@ pub fn flashmask_forward_grouped(
 /// below).  The Eq. 4 schedule is built once per mask and each KV
 /// head's K is packed once; both are shared read-only across all
 /// threads and all query heads of the head's group.
+#[deprecated(
+    note = "use attention::api — AttnProblem::new(n, d).layout(layout).mask(&mask).threads(t) + CpuBackend::prefill_grouped (DESIGN.md §Public API)"
+)]
 #[allow(clippy::too_many_arguments)]
 pub fn flashmask_forward_grouped_parallel(
     q: &[f32],
@@ -349,63 +481,54 @@ pub fn flashmask_forward_grouped_parallel(
     skip: bool,
     max_threads: usize,
 ) -> (Vec<AttnOutput>, TileStats) {
-    assert_eq!(q.len(), layout.q_heads * n * d, "q must be [q_heads, n, d]");
-    assert_eq!(k.len(), layout.kv_heads * n * d, "k must be [kv_heads, n, d]");
-    assert_eq!(v.len(), layout.kv_heads * n * d, "v must be [kv_heads, n, d]");
-    assert_eq!(mask.n(), n);
-    let sched = TileSchedule::build(mask, table, n, cfg, skip);
-    // pack each KV head's K once; every row block of every query head
-    // in the head's group streams the same packed tiles
-    let kts: Vec<gemm::PackedKt> = (0..layout.kv_heads)
-        .map(|kh| gemm::PackedKt::pack(&k[kh * n * d..(kh + 1) * n * d], n, d, cfg.bc))
-        .collect();
-    let mut stats = TileStats::default();
-    for _ in 0..layout.kv_heads {
-        // one classification pass per KV head; the group reuses it
-        add_census(&mut stats, &sched.classes);
-    }
-    let tr = sched.tr;
-    let results = parallel_2d(layout.q_heads, tr, sched.weights(), max_threads, |h, bi| {
-        let kh = layout.kv_head_of(h);
-        let mut st = TileStats::default();
-        let (ob, lb) = forward_row_block(
-            &q[h * n * d..(h + 1) * n * d],
-            &kts[kh],
-            &v[kh * n * d..(kh + 1) * n * d],
-            n,
-            d,
-            mask,
-            cfg,
-            &sched,
-            bi,
-            &mut st,
-        );
-        (ob, lb, st)
-    });
-    // stitch the head-major, row-block-minor items back into per-head
-    // outputs; stats merge in item order (all counters are additive)
-    let mut outs = Vec::with_capacity(layout.q_heads);
-    let mut items = results.into_iter();
-    for _h in 0..layout.q_heads {
-        let mut o = vec![0f32; n * d];
-        let mut lse = vec![NEG_INF; n];
-        for bi in 0..tr {
-            let (ob, lb, st) = items.next().expect("one item per (head, row block)");
-            stats.merge(&st);
-            let row0 = bi * cfg.br;
-            o[row0 * d..row0 * d + ob.len()].copy_from_slice(&ob);
-            lse[row0..row0 + lb.len()].copy_from_slice(&lb);
-        }
-        outs.push(AttnOutput { o, lse });
-    }
-    (outs, stats)
+    grouped_shim(q, k, v, n, d, layout, mask, table, cfg, skip, max_threads)
+}
+
+/// Shared body of the two deprecated grouped entry points: build a
+/// one-shot [`api::AttnProblem`] and run [`api::CpuBackend`].
+#[allow(clippy::too_many_arguments)]
+fn grouped_shim(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    layout: HeadLayout,
+    mask: &FlashMask,
+    table: &BlockTable,
+    cfg: AttnConfig,
+    skip: bool,
+    max_threads: usize,
+) -> (Vec<AttnOutput>, TileStats) {
+    let _ = table;
+    let plan = api::AttnProblem::new(n, d)
+        .layout(layout)
+        .mask(mask)
+        .tile(cfg.br, cfg.bc)
+        .scale(cfg.scale)
+        .skip(skip)
+        .threads(max_threads)
+        .plan()
+        .expect("grouped forward: invalid problem");
+    let out = api::CpuBackend
+        .prefill_grouped(
+            &plan,
+            api::QViews::new(q, layout.q_heads, n, d)
+                .expect("grouped forward: q must be [q_heads, n, d]"),
+            api::KvViews::new(k, v, layout.kv_heads, n, d)
+                .expect("grouped forward: k/v must be [kv_heads, n, d]"),
+        )
+        .expect("grouped forward: CPU prefill");
+    (out.outs, out.stats)
 }
 
 /// Algorithm 2 — backward pass for a single head.
 ///
-/// Column-parallel over key blocks exactly like the paper: `K_j`/`V_j`
-/// and the interval vectors stay resident across the inner row loop, and
-/// `dQ_i` is accumulated in the output buffer (Alg. 2 line 31).
+/// Deprecated shim over [`api`]; see [`flashmask_forward`] for the
+/// migration contract.
+#[deprecated(
+    note = "use attention::api — AttnProblem::new(n, d).mask(&mask) + CpuBackend::backward (DESIGN.md §Public API)"
+)]
 #[allow(clippy::too_many_arguments)]
 pub fn flashmask_backward(
     q: &[f32],
@@ -421,13 +544,52 @@ pub fn flashmask_backward(
     cfg: AttnConfig,
     skip: bool,
 ) -> (AttnGrads, TileStats) {
+    let _ = table;
+    let plan = api::AttnProblem::new(n, d)
+        .mask(mask)
+        .tile(cfg.br, cfg.bc)
+        .scale(cfg.scale)
+        .skip(skip)
+        .plan()
+        .expect("flashmask_backward: invalid problem");
+    api::CpuBackend
+        .backward(&plan, q, k, v, o, do_, lse)
+        .expect("flashmask_backward: CPU backward")
+}
+
+/// Algorithm 2 backward body, driven by the interval schedule.
+///
+/// Column-parallel over key blocks exactly like the paper: `K_j`/`V_j`
+/// and the interval vectors stay resident across the inner row loop, and
+/// `dQ_i` is accumulated in the output buffer (Alg. 2 line 31).
+/// Partial tiles replay the schedule's per-tile mask cache when it was
+/// built (`skip = true`), so the element-wise interval tests run once
+/// per plan instead of once per tile visit.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn backward_impl(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    o: &[f32],
+    do_: &[f32],
+    lse: &[f32],
+    n: usize,
+    d: usize,
+    mask: &FlashMask,
+    cfg: AttnConfig,
+    sched: &TileSchedule,
+) -> (AttnGrads, TileStats) {
     let (br, bc) = (cfg.br, cfg.bc);
-    let tr = n.div_ceil(br);
-    let tc = n.div_ceil(bc);
+    let tr = sched.tr;
+    let tc = sched.tc;
     let mut dq = vec![0f32; n * d];
     let mut dk = vec![0f32; n * d];
     let mut dv = vec![0f32; n * d];
-    let mut stats = TileStats { tiles_total: tr * tc, ..Default::default() };
+    let mut stats = TileStats {
+        tiles_total: tr * tc,
+        mask_evals: sched.build_mask_evals(),
+        ..Default::default()
+    };
 
     // D = rowsum(dO ∘ O)  (Alg. 2 line 4)
     let mut dvec = vec![0f32; n];
@@ -449,7 +611,7 @@ pub fn flashmask_backward(
         let vj = &v[col0 * d..(col0 + cols) * d];
 
         for bi in 0..tr {
-            let class = tile_class(mask, table, bi, br, bj, bc, skip);
+            let class = sched.class(bi, bj);
             if class == BlockClass::FullyMasked {
                 stats.tiles_skipped += 1;
                 continue;
@@ -468,7 +630,12 @@ pub fn flashmask_backward(
                 *sv *= cfg.scale;
             }
             if class == BlockClass::PartiallyMasked {
-                apply_tile_mask(s_tile, mask, row0, rows, col0, cols, &mut stats);
+                if let Some(bits) = sched.tile_mask(bi, bj) {
+                    apply_tile_mask_cached(s_tile, bits);
+                    stats.mask_cache_hits += 1;
+                } else {
+                    apply_tile_mask(s_tile, mask, row0, rows, col0, cols, &mut stats);
+                }
                 stats.tiles_partial += 1;
             } else {
                 stats.tiles_unmasked += 1;
@@ -519,6 +686,7 @@ pub fn flashmask_backward(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the legacy entry points double as migration oracles
 mod tests {
     use super::*;
     use crate::attention::dense;
@@ -662,6 +830,17 @@ mod tests {
             assert_eq!(gs.tiles_total * layout.group(), per_head.tiles_total, "{kind}");
             assert_eq!(gs.tiles_skipped * layout.group(), per_head.tiles_skipped, "{kind}");
             assert_eq!(gs.macs, per_head.macs, "{kind}: MACs must not change");
+            // per-tile mask cache: the element-wise interval tests run
+            // once per KV head (at schedule build), not once per query
+            // head — the whole group replays the cached byte maps
+            assert_eq!(
+                gs.mask_evals * layout.group(),
+                per_head.mask_evals,
+                "{kind}: interval tests must be shared across the query group"
+            );
+            if gs.tiles_partial > 0 {
+                assert!(gs.mask_cache_hits > 0, "{kind}: partial tiles must hit the cache");
+            }
         }
     }
 
@@ -890,6 +1069,101 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn tile_mask_cache_matches_interval_tests() {
+        // the cached byte maps must reproduce the element-wise interval
+        // tests exactly (same masked positions), exist for every partial
+        // tile of a skip schedule, and never exist elsewhere
+        let n = 100;
+        let cfg = AttnConfig::new(32, 16, 8);
+        for (kind, mask) in builders::benchmark_suite(n, 29) {
+            let table = BlockTable::build(&mask, cfg.bc);
+            let sched = TileSchedule::build(&mask, &table, n, cfg, true);
+            let mut cached_evals = 0u64;
+            for bi in 0..sched.tr {
+                for bj in 0..sched.tc {
+                    let bits = sched.tile_mask(bi, bj);
+                    if sched.class(bi, bj) != BlockClass::PartiallyMasked {
+                        assert!(bits.is_none(), "{kind}: non-partial tile ({bi},{bj}) cached");
+                        continue;
+                    }
+                    let bits =
+                        bits.unwrap_or_else(|| panic!("{kind}: partial ({bi},{bj}) not cached"));
+                    let row0 = bi * cfg.br;
+                    let rows = cfg.br.min(n - row0);
+                    let col0 = bj * cfg.bc;
+                    let cols = cfg.bc.min(n - col0);
+                    assert_eq!(bits.len(), rows * cols, "{kind} ({bi},{bj})");
+                    for x in 0..rows {
+                        for y in 0..cols {
+                            assert_eq!(
+                                bits[x * cols + y] != 0,
+                                !mask.allowed(row0 + x, col0 + y),
+                                "{kind} tile ({bi},{bj}) elem ({x},{y})"
+                            );
+                        }
+                    }
+                    cached_evals += (rows * cols) as u64;
+                }
+            }
+            assert_eq!(cached_evals, sched.build_mask_evals(), "{kind}: build census");
+        }
+        // dense-baseline schedules build no cache: the baseline keeps
+        // paying the per-pass element-wise masking it is meant to model
+        let mask = builders::causal(64);
+        let table = BlockTable::build(&mask, 16);
+        let sched = TileSchedule::build(&mask, &table, 64, AttnConfig::new(16, 16, 8), false);
+        for bi in 0..sched.tr {
+            for bj in 0..sched.tc {
+                assert!(sched.tile_mask(bi, bj).is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn mask_cache_budget_falls_back_bitwise() {
+        // a mask whose partial-tile volume exceeds MASK_CACHE_BYTES:
+        // per-column random half-height intervals make essentially every
+        // tile partial, so an unbounded cache would hold ~n^2 bytes.
+        // Tiles past the budget must stay uncached (per-pass
+        // element-wise fallback) and the mixed cached/uncached forward
+        // must still be bitwise equal to the dense baseline.
+        let (n, d) = (3072, 2);
+        let mut mask = FlashMask::empty(n, false);
+        let mut x = 1u64;
+        for j in 0..n {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let a = (x >> 33) as usize % (n / 2);
+            mask.lts[j] = a as i32;
+            mask.lte[j] = (a + n / 2) as i32;
+        }
+        mask.validate().unwrap();
+        let cfg = AttnConfig::new(32, 32, d);
+        let table = BlockTable::build(&mask, cfg.bc);
+        let sched = TileSchedule::build(&mask, &table, n, cfg, true);
+        let mut cached_bytes = 0usize;
+        let mut uncached_partial = 0usize;
+        for bi in 0..sched.tr {
+            for bj in 0..sched.tc {
+                if sched.class(bi, bj) == BlockClass::PartiallyMasked {
+                    match sched.tile_mask(bi, bj) {
+                        Some(bits) => cached_bytes += bits.len(),
+                        None => uncached_partial += 1,
+                    }
+                }
+            }
+        }
+        assert!(
+            cached_bytes <= TileSchedule::MASK_CACHE_BYTES,
+            "cache exceeded its budget: {cached_bytes}"
+        );
+        assert!(uncached_partial > 0, "workload too small to exercise the budget");
+        let (q, k, v) = setup(n, d, 53);
+        let (a, _) = flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+        let (b, _) = flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, false);
+        assert_eq!(a.o, b.o, "mixed cached/uncached masking changed the result");
     }
 
     #[test]

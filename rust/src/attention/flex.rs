@@ -289,6 +289,7 @@ pub fn flex_backward(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the legacy entry points double as migration oracles
 mod tests {
     use super::*;
     use crate::attention::testutil::rand_vec;

@@ -129,19 +129,34 @@ pub struct PackedKt {
 }
 
 impl PackedKt {
+    /// An unpacked placeholder (no blocks); fill it with
+    /// [`repack`](Self::repack) before use.  Lets plan/cache layers own
+    /// reusable packing buffers without packing dummy data.
+    pub fn empty(bc: usize) -> PackedKt {
+        PackedKt { bc, blocks: Vec::new() }
+    }
+
     /// Pack row-major `k[n, d]` into `⌈n/bc⌉` padded column blocks.
     pub fn pack(k: &[f32], n: usize, d: usize, bc: usize) -> PackedKt {
+        let mut kt = PackedKt::empty(bc);
+        kt.repack(k, n, d);
+        kt
+    }
+
+    /// (Re)fill from row-major `k[n, d]`, reusing the block buffers —
+    /// repeated packs of same-shape data perform no allocation, which
+    /// is what lets an `ExecutionPlan` amortize packing storage across
+    /// calls.
+    pub fn repack(&mut self, k: &[f32], n: usize, d: usize) {
         debug_assert_eq!(k.len(), n * d);
-        let blocks = (0..n.div_ceil(bc))
-            .map(|bj| {
-                let col0 = bj * bc;
-                let cols = bc.min(n - col0);
-                let mut b = PackedBlock::new();
-                b.pack(&k[col0 * d..(col0 + cols) * d], cols, d);
-                b
-            })
-            .collect();
-        PackedKt { bc, blocks }
+        let bc = self.bc;
+        let nb = n.div_ceil(bc);
+        self.blocks.resize_with(nb, PackedBlock::new);
+        for (bj, b) in self.blocks.iter_mut().enumerate() {
+            let col0 = bj * bc;
+            let cols = bc.min(n - col0);
+            b.pack(&k[col0 * d..(col0 + cols) * d], cols, d);
+        }
     }
 
     pub fn bc(&self) -> usize {

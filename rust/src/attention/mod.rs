@@ -7,6 +7,11 @@
 //! scales with executed tiles exactly as GPU time scales with executed
 //! tiles, so speedup *shapes* transfer (DESIGN.md §Substitutions).
 //!
+//! The public surface is [`api`]: an `AttnProblem` builder compiled to
+//! a cached `ExecutionPlan` and executed on a pluggable `Backend`
+//! (`CpuBackend` / `DenseRefBackend` / `PjrtBackend`).  The engine
+//! free functions below are deprecated shims over it.
+//!
 //! Engines:
 //! * [`dense`] — vanilla O(N²) attention + dense additive mask
 //!   (the paper's "vanilla attention" baseline).
@@ -18,6 +23,7 @@
 //! * [`bsr`] — FlashInfer-like block-sparse-row baseline with mask
 //!   block size R/C (Tables 10–14).
 
+pub mod api;
 pub mod bsr;
 pub mod dense;
 pub mod flash;
@@ -25,6 +31,8 @@ pub mod flex;
 pub mod gemm;
 
 use crate::mask::FlashMask;
+// trait in scope for the deprecated `forward_single_head` shim below
+use api::Backend as _;
 
 /// Query/KV head counts of an attention layout.
 ///
@@ -60,6 +68,12 @@ impl HeadLayout {
     /// Multi-query attention: one KV head shared by every query head.
     pub fn mqa(q_heads: usize) -> HeadLayout {
         HeadLayout::new(q_heads, 1)
+    }
+
+    /// Grouped-query attention — alias of [`HeadLayout::new`] matching
+    /// the builder-API spelling `AttnProblem::new(n, d).layout(HeadLayout::gqa(32, 8))`.
+    pub fn gqa(q_heads: usize, kv_heads: usize) -> HeadLayout {
+        HeadLayout::new(q_heads, kv_heads)
     }
 
     /// Query heads per KV head.
@@ -126,7 +140,17 @@ pub struct TileStats {
     /// Multiply-accumulate count of executed matmuls (2 per MAC = FLOPs).
     pub macs: u64,
     /// Element-wise mask evaluations (the Flex `mask_mod` cost proxy).
+    /// With the per-tile mask cache these are performed once per
+    /// [`api::ExecutionPlan`] build and charged once per KV head, not
+    /// once per query head per call — at group size `g` the counter
+    /// shrinks by `g` versus the pre-cache kernels.
     pub mask_evals: u64,
+    /// Partial-tile mask applications served from the plan's
+    /// precomputed per-tile mask cache (one per partial tile per
+    /// row-block pass) instead of re-running the element-wise interval
+    /// tests — the work the cache shares across the query group and
+    /// across repeated calls.
+    pub mask_cache_hits: u64,
 }
 
 impl TileStats {
@@ -142,6 +166,7 @@ impl TileStats {
         self.tiles_visited += other.tiles_visited;
         self.macs += other.macs;
         self.mask_evals += other.mask_evals;
+        self.mask_cache_hits += other.mask_cache_hits;
     }
 }
 
@@ -277,12 +302,16 @@ pub(crate) mod testutil {
     }
 }
 
+#[allow(deprecated)]
 pub use flash::{
     flashmask_backward, flashmask_forward, flashmask_forward_grouped,
     flashmask_forward_grouped_parallel,
 };
 
 /// Convenience: FLASHMASK forward for one head with stats.
+#[deprecated(
+    note = "use attention::api — AttnProblem::new(n, d).mask(&mask).tile(br, bc) + CpuBackend::prefill (DESIGN.md §Public API)"
+)]
 pub fn forward_single_head(
     q: &[f32],
     k: &[f32],
@@ -293,8 +322,21 @@ pub fn forward_single_head(
     cfg: AttnConfig,
     skip: bool,
 ) -> (AttnOutput, TileStats) {
-    let table = crate::mask::BlockTable::build(mask, cfg.bc);
-    flash::flashmask_forward(q, k, v, n, d, mask, &table, cfg, skip)
+    let problem = api::AttnProblem::new(n, d)
+        .mask(mask)
+        .tile(cfg.br, cfg.bc)
+        .scale(cfg.scale)
+        .skip(skip);
+    let plan = problem.plan().expect("forward_single_head: invalid problem");
+    let out = api::CpuBackend
+        .prefill(
+            &plan,
+            api::QViews::new(q, 1, n, d).expect("forward_single_head: q shape"),
+            api::KvViews::new(k, v, 1, n, d).expect("forward_single_head: k/v shape"),
+        )
+        .expect("forward_single_head: CPU prefill");
+    let mut outs = out.outs;
+    (outs.remove(0), out.stats)
 }
 
 #[cfg(test)]

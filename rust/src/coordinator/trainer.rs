@@ -10,8 +10,10 @@
 
 use super::batcher::Batch;
 use super::metrics::Metrics;
+use crate::attention::api::AttnProblem;
+use crate::mask::FlashMask;
 use crate::runtime::{Executable, HostTensor, Runtime};
-use anyhow::{ensure, Context, Result};
+use anyhow::{anyhow, ensure, Context, Result};
 
 #[derive(Clone, Debug)]
 pub struct TrainerOptions {
@@ -61,6 +63,17 @@ impl Trainer {
         let params = init.run(&[seed])?;
         let n_leaves = rt.manifest.n_leaves();
         ensure!(params.len() == n_leaves, "init returned {} leaves, want {n_leaves}", params.len());
+        // validate the manifest's attention geometry through the
+        // unified API once, up front: a bad (max_seq, d_head, Br, Bc)
+        // combination surfaces here as a typed AttnError instead of as
+        // an opaque artifact failure mid-training
+        let m = &rt.manifest.model;
+        let template = FlashMask::empty(m.max_seq, true);
+        AttnProblem::new(m.max_seq, m.d_head)
+            .mask(&template)
+            .tile(m.br, m.bc)
+            .validate()
+            .map_err(|e| anyhow!("manifest attention geometry: {e}"))?;
         let zeros: Vec<HostTensor> = params
             .iter()
             .map(|p| HostTensor::F32 { shape: p.shape().to_vec(), data: vec![0.0; p.numel()] })
@@ -82,7 +95,25 @@ impl Trainer {
     }
 
     /// Execute one optimizer step on a batch; returns the loss.
+    ///
+    /// Each sample's FlashMask vectors are validated first via the
+    /// allocation-free `FlashMask::validate_parts` (the hot path copies
+    /// nothing): a malformed interval surfaces here as a typed error
+    /// with the sample index instead of as NaNs three layers down the
+    /// train-step artifact.  The manifest-level attention geometry was
+    /// validated through `attention::api` once in [`Trainer::new`].
     pub fn step(&mut self, batch: &Batch) -> Result<f32> {
+        for bi in 0..batch.batch {
+            let r = bi * batch.n..(bi + 1) * batch.n;
+            FlashMask::validate_parts(
+                &batch.lts[r.clone()],
+                &batch.lte[r.clone()],
+                &batch.uts[r.clone()],
+                &batch.ute[r],
+                true,
+            )
+            .map_err(|e| anyhow!("train batch sample {bi}: {e:#}"))?;
+        }
         let mut inputs: Vec<HostTensor> =
             Vec::with_capacity(3 * self.n_leaves + 1 + 7);
         inputs.extend(self.params.iter().cloned());

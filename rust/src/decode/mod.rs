@@ -53,8 +53,10 @@ pub use session::{
     BatcherConfig, BatcherReport, ContinuousBatcher, DecodeRequest, DecodeResponse,
     DecodeSession, StepOutcome,
 };
+#[allow(deprecated)] // verify_rows{,_group} re-exported as migration shims
 pub use spec::{
     greedy_accept_path, token_rows, verify_rows, verify_rows_group, DraftKind, DraftProposer,
     DraftTree, OracleProposer, SelfDraftProposer, SpecBudget, SpecPolicy,
 };
+#[allow(deprecated)] // decode_step{,_group} re-exported as migration shims
 pub use step::{decode_step, decode_step_group, DecodeStats};

@@ -389,6 +389,12 @@ pub fn spec_visible(
 /// Score all `k` drafted rows of one head in a single pass over the
 /// cache pages.  Single-query-head convenience over
 /// [`verify_rows_group`] — the MHA case.
+///
+/// Deprecated shim over `attention::api` (see
+/// [`api::Backend::verify`](crate::attention::api::Backend::verify)).
+#[deprecated(
+    note = "use attention::api — CpuBackend::verify with a VerifyStep argument pack (DESIGN.md §Public API)"
+)]
 #[allow(clippy::too_many_arguments)]
 pub fn verify_rows(
     q_rows: &[f32],
@@ -405,10 +411,51 @@ pub fn verify_rows(
     stats: &mut DecodeStats,
     scratch: &mut Vec<f32>,
 ) -> Vec<f32> {
-    verify_rows_group(
+    verify_shim(
         q_rows, 1, cache, pool, base, base_view, tree, tree_mask, tree_view, t0, scale, skip,
         stats, scratch,
     )
+}
+
+/// Shared body of the two deprecated verify entry points.
+#[allow(clippy::too_many_arguments)]
+fn verify_shim(
+    q_rows: &[f32],
+    group: usize,
+    cache: &PagedKv,
+    pool: &PagePool,
+    base: &FlashMask,
+    base_view: &IncrementalMaskView,
+    tree: &TokenTree,
+    tree_mask: &FlashMask,
+    tree_view: &IncrementalMaskView,
+    t0: usize,
+    scale: f32,
+    skip: bool,
+    stats: &mut DecodeStats,
+    scratch: &mut Vec<f32>,
+) -> Vec<f32> {
+    use crate::attention::api::{Backend, CpuBackend, VerifyStep};
+    CpuBackend
+        .verify(
+            VerifyStep {
+                q_rows,
+                group,
+                cache,
+                pool,
+                base,
+                base_view,
+                tree,
+                tree_mask,
+                tree_view,
+                t0,
+                scale,
+                skip,
+            },
+            stats,
+            scratch,
+        )
+        .expect("verify_rows: CPU backend rejected a validated verify pass")
 }
 
 /// Score all drafted rows of a whole query *group* sharing one KV
@@ -431,8 +478,39 @@ pub fn verify_rows(
 /// work and shrink by the group factor, while per-query-row MACs are
 /// unchanged.  `skip=false` is the dense baseline that visits and
 /// element-masks every page.
+///
+/// Deprecated shim over `attention::api` (see
+/// [`api::Backend::verify`](crate::attention::api::Backend::verify)).
+#[deprecated(
+    note = "use attention::api — CpuBackend::verify with a VerifyStep argument pack (DESIGN.md §Public API)"
+)]
 #[allow(clippy::too_many_arguments)]
 pub fn verify_rows_group(
+    q_rows: &[f32],
+    group: usize,
+    cache: &PagedKv,
+    pool: &PagePool,
+    base: &FlashMask,
+    base_view: &IncrementalMaskView,
+    tree: &TokenTree,
+    tree_mask: &FlashMask,
+    tree_view: &IncrementalMaskView,
+    t0: usize,
+    scale: f32,
+    skip: bool,
+    stats: &mut DecodeStats,
+    scratch: &mut Vec<f32>,
+) -> Vec<f32> {
+    verify_shim(
+        q_rows, group, cache, pool, base, base_view, tree, tree_mask, tree_view, t0, scale,
+        skip, stats, scratch,
+    )
+}
+
+/// The verify kernel body (see [`verify_rows_group`] for the contract)
+/// — called through [`crate::attention::api::CpuBackend`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn verify_rows_group_impl(
     q_rows: &[f32],
     group: usize,
     cache: &PagedKv,
@@ -636,6 +714,7 @@ pub fn greedy_accept_path(req: &DecodeRequest, draft: &DraftTree, t0: usize) -> 
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the legacy entry points double as migration oracles
 mod tests {
     use super::*;
     use crate::decode::decode_step;

@@ -50,6 +50,11 @@ pub struct DecodeStats {
     /// Verify passes that accepted nothing and fell back to one
     /// sequential decode step.
     pub fallback_steps: u64,
+    /// Decode plans (incremental mask views + page schedules) built —
+    /// one per session construction.  Compared against `steps` this
+    /// proves a session builds its plan once and reuses it for every
+    /// decoded token (the bench's plan-reuse column).
+    pub plans_built: u64,
 }
 
 impl DecodeStats {
@@ -69,6 +74,7 @@ impl DecodeStats {
         self.drafted += other.drafted;
         self.accepted += other.accepted;
         self.fallback_steps += other.fallback_steps;
+        self.plans_built += other.plans_built;
     }
 
     /// Fraction of cache pages skipped; 0 when no pages were visited
@@ -97,6 +103,12 @@ impl DecodeStats {
 ///
 /// Single-query-head convenience over [`decode_step_group`] — the MHA
 /// case, where every query head owns its KV head.
+///
+/// Deprecated shim over `attention::api` (see
+/// [`api::Backend::decode_step`](crate::attention::api::Backend::decode_step)).
+#[deprecated(
+    note = "use attention::api — CpuBackend::decode_step with a DecodeStep argument pack (DESIGN.md §Public API)"
+)]
 #[allow(clippy::too_many_arguments)]
 pub fn decode_step(
     q_row: &[f32],
@@ -110,7 +122,7 @@ pub fn decode_step(
     stats: &mut DecodeStats,
     scratch: &mut Vec<f32>,
 ) -> Vec<f32> {
-    decode_step_group(q_row, 1, cache, pool, mask, view, t, scale, skip, stats, scratch)
+    step_shim(q_row, 1, cache, pool, mask, view, t, scale, skip, stats, scratch)
 }
 
 /// Attention for decode row `t` for a whole query *group* sharing one
@@ -134,8 +146,58 @@ pub fn decode_step(
 /// `skip=false` is the dense-cache baseline: every page is visited and
 /// element-masked, the behaviour of a decoder that keeps no mask
 /// structure — the comparison `bench_decode` measures.
+///
+/// Deprecated shim over `attention::api` (see
+/// [`api::Backend::decode_step`](crate::attention::api::Backend::decode_step)).
+#[deprecated(
+    note = "use attention::api — CpuBackend::decode_step with a DecodeStep argument pack (DESIGN.md §Public API)"
+)]
 #[allow(clippy::too_many_arguments)]
 pub fn decode_step_group(
+    q_rows: &[f32],
+    group: usize,
+    cache: &PagedKv,
+    pool: &PagePool,
+    mask: &FlashMask,
+    view: &IncrementalMaskView,
+    t: usize,
+    scale: f32,
+    skip: bool,
+    stats: &mut DecodeStats,
+    scratch: &mut Vec<f32>,
+) -> Vec<f32> {
+    step_shim(q_rows, group, cache, pool, mask, view, t, scale, skip, stats, scratch)
+}
+
+/// Shared body of the two deprecated step entry points.
+#[allow(clippy::too_many_arguments)]
+fn step_shim(
+    q_rows: &[f32],
+    group: usize,
+    cache: &PagedKv,
+    pool: &PagePool,
+    mask: &FlashMask,
+    view: &IncrementalMaskView,
+    t: usize,
+    scale: f32,
+    skip: bool,
+    stats: &mut DecodeStats,
+    scratch: &mut Vec<f32>,
+) -> Vec<f32> {
+    use crate::attention::api::{Backend, CpuBackend, DecodeStep};
+    CpuBackend
+        .decode_step(
+            DecodeStep { q_rows, group, cache, pool, mask, view, t, scale, skip },
+            stats,
+            scratch,
+        )
+        .expect("decode_step: CPU backend rejected a validated step")
+}
+
+/// The decode-step kernel body (see [`decode_step_group`] for the
+/// contract) — called through [`crate::attention::api::CpuBackend`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn decode_step_group_impl(
     q_rows: &[f32],
     group: usize,
     cache: &PagedKv,
@@ -258,6 +320,7 @@ pub fn decode_step_group(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the legacy entry points double as migration oracles
 mod tests {
     use super::*;
     use crate::attention::{flash, AttnConfig};
@@ -470,6 +533,7 @@ mod tests {
             drafted: r(),
             accepted: r(),
             fallback_steps: r(),
+            plans_built: r(),
         }
     }
 

@@ -8,7 +8,10 @@
 //!   the per-tile min/max classifier of Eq. 4.
 //! * [`attention`] — a CPU blocked-attention engine executing Alg. 1/2
 //!   tile-for-tile (the "GPU simulator"), plus FlexAttention-like and
-//!   FlashInfer-BSR-like baselines.
+//!   FlashInfer-BSR-like baselines.  [`attention::api`] is the public
+//!   surface: an `AttnProblem` builder compiled to cached
+//!   `ExecutionPlan`s and executed on pluggable `Backend`s
+//!   (DESIGN.md §Public API).
 //! * [`decode`] — the autoregressive serving path: paged KV cache,
 //!   single-row flash-decode kernel driven by the incremental mask
 //!   view, and a continuous-batching scheduler (DESIGN.md §Decode).

@@ -308,9 +308,16 @@ fn cmd_decode(args: &Args) -> Result<()> {
             report.spec_fallbacks
         );
     }
+    println!(
+        "decode plans  : {} built for {} sequences ({} tokens stepped through them)",
+        report.plans_built, report.sequences, report.tokens
+    );
     let rep = engine.report();
     println!("decode p50    : {:.2} ms", rep.p50_compute_ms);
     println!("decode p99    : {:.2} ms", rep.p99_compute_ms);
+    if rep.fallbacks > 0 {
+        println!("fallbacks     : {} (backend lacked a capability; see log)", rep.fallbacks);
+    }
     Ok(())
 }
 

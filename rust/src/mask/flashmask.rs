@@ -35,24 +35,35 @@ impl FlashMask {
     /// convention).  All builders return validated masks; call this when
     /// ingesting masks from outside (e.g. a request payload).
     pub fn validate(&self) -> Result<()> {
-        let n = self.n() as i32;
+        FlashMask::validate_parts(&self.lts, &self.lte, &self.uts, &self.ute, self.causal)
+    }
+
+    /// [`validate`](Self::validate) over borrowed interval slices — the
+    /// allocation-free variant for hot paths that hold mask vectors in
+    /// batched/flattened form (e.g. the trainer's per-sample batch
+    /// rows) and should not clone them just to validate.
+    pub fn validate_parts(
+        lts: &[i32],
+        lte: &[i32],
+        uts: &[i32],
+        ute: &[i32],
+        causal: bool,
+    ) -> Result<()> {
+        let n = lts.len() as i32;
         ensure!(
-            self.lte.len() == self.n()
-                && self.uts.len() == self.n()
-                && self.ute.len() == self.n(),
+            lte.len() == lts.len() && uts.len() == lts.len() && ute.len() == lts.len(),
             "vector length mismatch"
         );
-        for j in 0..self.n() {
-            for (name, v) in
-                [("lts", self.lts[j]), ("lte", self.lte[j]), ("uts", self.uts[j]), ("ute", self.ute[j])]
+        for j in 0..lts.len() {
+            for (name, v) in [("lts", lts[j]), ("lte", lte[j]), ("uts", uts[j]), ("ute", ute[j])]
             {
                 ensure!((0..=n).contains(&v), "{name}[{j}] = {v} out of [0, {n}]");
             }
-            ensure!(self.lts[j] <= self.lte[j], "lower interval inverted at {j}");
-            ensure!(self.uts[j] <= self.ute[j], "upper interval inverted at {j}");
-            if self.causal {
+            ensure!(lts[j] <= lte[j], "lower interval inverted at {j}");
+            ensure!(uts[j] <= ute[j], "upper interval inverted at {j}");
+            if causal {
                 ensure!(
-                    self.uts[j] == n && self.ute[j] == n,
+                    uts[j] == n && ute[j] == n,
                     "causal mask with non-empty UT interval at {j}"
                 );
             }

@@ -7,8 +7,9 @@
 //! the paper's sizes, next to the paper's published numbers where we
 //! have them.
 
-use crate::attention::{bsr, flash, flex, AttnConfig};
-use crate::mask::{builders, BlockTable, FlashMask, MaskKind};
+use crate::attention::api::{AttnProblem, Backend, CpuBackend, ExecutionPlan, KvViews, QViews};
+use crate::attention::{bsr, flex, AttnConfig};
+use crate::mask::{builders, FlashMask, MaskKind};
 use crate::perf::a100_model::{self, Method};
 use crate::perf::{flops, memory_model};
 use crate::util::bench::{bench, BenchOpts};
@@ -86,14 +87,21 @@ pub fn kernel_mask_report(
     .title(format!(
         "measured CPU engine, N={measure_n}, d={d} (shape check; A100 projection below)"
     ));
+    let qv = QViews::new(&q, 1, measure_n, d).expect("bench q view");
+    let kvv = KvViews::new(&k, &v, 1, measure_n, d).expect("bench k/v views");
     let mut json_masks: Vec<Json> = Vec::new();
     for (kind, mask) in builders::benchmark_suite(measure_n, 42) {
-        let table = BlockTable::build(&mask, cfg.bc);
+        // one plan per (mask, shape), reused across every timed call —
+        // the amortized serving path the PlanCache gives a deployment
+        let problem = AttnProblem::new(measure_n, d).mask(&mask).tile(cfg.br, cfg.bc);
+        let plan = problem.plan().expect("bench plan");
+        let plan_dense = problem.skip(false).plan().expect("bench dense plan");
         let rho = mask.block_sparsity(cfg.br, cfg.bc);
         let fm_fw = bench("fm_fw", opts, || {
-            let _ = flash::flashmask_forward(&q, &k, &v, measure_n, d, &mask, &table, cfg, true);
+            let _ = CpuBackend.prefill(&plan, qv, kvv).expect("fm prefill");
         });
-        let (fwd, st) = flash::flashmask_forward(&q, &k, &v, measure_n, d, &mask, &table, cfg, true);
+        let out = CpuBackend.prefill(&plan, qv, kvv).expect("fm prefill");
+        let (fwd, st) = (&out.outs[0], out.stats);
         // interval scheduling must beat the dense tr*tc scan whenever
         // Eq. 4 skips anything at this tile granularity (tiny grids or
         // degenerate mask draws may legitimately have nothing to skip:
@@ -110,12 +118,12 @@ pub fn kernel_mask_report(
         let gflops = st.flops() as f64 / (fm_fw.median_ms / 1e3) / 1e9;
         let do_ = q.clone();
         let fm_bw = bench("fm_bw", opts, || {
-            let _ = flash::flashmask_backward(
-                &q, &k, &v, &fwd.o, &do_, &fwd.lse, measure_n, d, &mask, &table, cfg, true,
-            );
+            let _ = CpuBackend
+                .backward(&plan, &q, &k, &v, &fwd.o, &do_, &fwd.lse)
+                .expect("fm backward");
         });
         let dm_fw = bench("dm_fw", opts, || {
-            let _ = flash::flashmask_forward(&q, &k, &v, measure_n, d, &mask, &table, cfg, false);
+            let _ = CpuBackend.prefill(&plan_dense, qv, kvv).expect("dense-mask prefill");
         });
         let pred = |i: usize, j: usize| mask.allowed(i, j);
         let bm = flex::BlockMask::build(&pred, measure_n, cfg.br, cfg.bc);
@@ -191,6 +199,8 @@ pub fn kernel_mask_report(
 pub fn sparsity_report(n: usize, d: usize, opts: BenchOpts, seed: u64) {
     let cfg = AttnConfig::new(64.min(n), 64.min(n), d);
     let (q, k, v) = rand_qkv(n, d, seed);
+    let qv = QViews::new(&q, 1, n, d).expect("bench q view");
+    let kvv = KvViews::new(&k, &v, 1, n, d).expect("bench k/v views");
     for kind in [MaskKind::CausalDocument, MaskKind::ShareQuestion, MaskKind::Document] {
         let bcfg = BucketConfig { min_per_bucket: 1, max_per_bucket: 2, max_draws: 600 };
         let mut samples = sparsity_buckets::sample_buckets(kind, n, cfg.bc, &bcfg, seed);
@@ -198,23 +208,25 @@ pub fn sparsity_report(n: usize, d: usize, opts: BenchOpts, seed: u64) {
         let mut t = Table::new(vec!["rho", "fw+bw ms (measured)", "tiles run", "A100 model ms"])
             .title(format!("latency vs sparsity: {kind} N={n} d={d} (paper Fig 4a)"));
         for s in &samples {
-            let table = BlockTable::build(&s.mask, cfg.bc);
+            let plan = AttnProblem::new(n, d)
+                .mask(&s.mask)
+                .tile(cfg.br, cfg.bc)
+                .plan()
+                .expect("bench plan");
             let st = bench("fwbw", opts, || {
-                let (fwd, _) =
-                    flash::flashmask_forward(&q, &k, &v, n, d, &s.mask, &table, cfg, true);
-                let _ = flash::flashmask_backward(
-                    &q, &k, &v, &fwd.o, &q, &fwd.lse, n, d, &s.mask, &table, cfg, true,
-                );
+                let out = CpuBackend.prefill(&plan, qv, kvv).expect("prefill");
+                let _ = CpuBackend
+                    .backward(&plan, &q, &k, &v, &out.outs[0].o, &q, &out.outs[0].lse)
+                    .expect("backward");
             });
-            let (fully, partial, unmasked) = table.census(&s.mask, cfg.br);
+            let census = plan.census();
             let est = a100_model::estimate(Method::FlashMask, &s.mask, 4, 32, 128);
             t.row(vec![
                 format!("{:.2}", s.sparsity),
                 format!("{:.2}", st.median_ms),
-                format!("{}", partial + unmasked),
+                format!("{}", census.tiles_partial + census.tiles_unmasked),
                 format!("{:.2}", est.total_ms()),
             ]);
-            let _ = fully;
         }
         t.print();
     }
@@ -237,19 +249,25 @@ pub fn inference_report(n: usize, d: usize, opts: BenchOpts, seed: u64) {
     let mask = builders::document(n, &lens);
     let pred = |i: usize, j: usize| mask.allowed(i, j);
     let (q, k, v) = rand_qkv(n, d, seed);
+    let qv = QViews::new(&q, 1, n, d).expect("bench q view");
+    let kvv = KvViews::new(&k, &v, 1, n, d).expect("bench k/v views");
     let scale = 1.0 / (d as f32).sqrt();
     let rho = mask.block_sparsity(align, align);
 
     let mut t = Table::new(vec!["method", "R/C", "fw ms", "vs FLASHMASK"])
         .title(format!("inference fwd, Document mask, N={n} d={d} rho={rho:.2} (paper Tables 12-14)"));
     let cfg = AttnConfig::new(64.min(n), 64.min(n), d);
-    let table = BlockTable::build(&mask, cfg.bc);
+    let fm_plan = |m: &FlashMask, skip: bool| -> ExecutionPlan {
+        AttnProblem::new(n, d).mask(m).tile(cfg.br, cfg.bc).skip(skip).plan().expect("bench plan")
+    };
+    let plan = fm_plan(&mask, true);
+    let plan_dense = fm_plan(&mask, false);
     let fm = bench("flashmask", opts, || {
-        let _ = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+        let _ = CpuBackend.prefill(&plan, qv, kvv).expect("prefill");
     });
     // FlashInfer dense: computes everything with a token mask
     let dm = bench("fi-dense", opts, || {
-        let _ = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, false);
+        let _ = CpuBackend.prefill(&plan_dense, qv, kvv).expect("prefill");
     });
     let mut rc = 1usize;
     while rc <= align {
@@ -280,12 +298,13 @@ pub fn inference_report(n: usize, d: usize, opts: BenchOpts, seed: u64) {
     // causal-document + shared-question single rows (Tables 10-11 shape)
     for kind in [MaskKind::CausalDocument, MaskKind::ShareQuestion] {
         let mask = builders::build(kind, n, &mut rng);
-        let table = BlockTable::build(&mask, cfg.bc);
+        let plan = fm_plan(&mask, true);
+        let plan_dense = fm_plan(&mask, false);
         let fm = bench("fm", opts, || {
-            let _ = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+            let _ = CpuBackend.prefill(&plan, qv, kvv).expect("prefill");
         });
         let dm = bench("dm", opts, || {
-            let _ = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, false);
+            let _ = CpuBackend.prefill(&plan_dense, qv, kvv).expect("prefill");
         });
         let mut t = Table::new(vec!["method", "fw ms", "speedup"])
             .title(format!("inference fwd, {kind}, N={n} (paper Tables 10-11)"));

@@ -1,12 +1,20 @@
-//! Serving engine: executes batch plans on the CPU blocked engine or on
-//! the AOT `attn_fwd` PJRT artifact, with per-request latency tracking.
+//! Serving engine: executes batch plans through the pluggable
+//! [`Backend`] trait (`attention::api`) with a content-keyed
+//! [`PlanCache`], per-request latency tracking, and *explicit*
+//! capability-driven fallbacks — when the configured backend cannot run
+//! an operation (e.g. the PJRT artifact has no grouped or decode
+//! kernel) the engine records the missing capability in
+//! [`ServeReport::fallbacks`] and logs it, then routes the work to the
+//! CPU backend.
 
 use super::queue::{Request, Response};
 use super::scheduler::BatchPlan;
-use crate::attention::{flash, AttnConfig};
+use crate::attention::api::{
+    AttnProblem, Backend, Capabilities, Capability, CpuBackend, KvViews, PjrtBackend, PlanCache,
+    QViews,
+};
 use crate::decode::{BatcherConfig, BatcherReport, ContinuousBatcher, DecodeRequest};
-use crate::mask::BlockTable;
-use crate::runtime::{Executable, HostTensor};
+use crate::runtime::Executable;
 use anyhow::Result;
 use std::time::Instant;
 
@@ -20,11 +28,17 @@ pub enum EngineKind {
 }
 
 pub struct ServeEngine {
-    kind: EngineKind,
+    backend: Box<dyn Backend>,
+    threads: usize,
     pub tile: (usize, usize),
+    /// Content-keyed plan cache: requests sharing a mask/shape (every
+    /// layer of a model, repeated prompts) reuse classification and
+    /// packing buffers instead of recompiling per request.
+    plans: PlanCache,
     pub completed: Vec<Response>,
     started: Instant,
     tokens: usize,
+    fallbacks: u64,
 }
 
 /// Aggregate serving statistics (the numbers a deployment dashboards).
@@ -36,86 +50,140 @@ pub struct ServeReport {
     pub p50_compute_ms: f64,
     pub p99_compute_ms: f64,
     pub mean_sparsity: f64,
+    /// Operations the configured backend could not run and the engine
+    /// re-routed (each one was logged with the missing capability).
+    pub fallbacks: u64,
+    /// Plan-cache lookups served from cache.
+    pub plan_hits: u64,
+    /// Plan-cache lookups that compiled a fresh plan.
+    pub plan_misses: u64,
 }
 
 impl ServeEngine {
     pub fn new(kind: EngineKind, tile: (usize, usize)) -> ServeEngine {
-        ServeEngine { kind, tile, completed: Vec::new(), started: Instant::now(), tokens: 0 }
+        match kind {
+            EngineKind::Cpu { threads } => {
+                ServeEngine::with_backend(Box::new(CpuBackend), threads.max(1), tile)
+            }
+            EngineKind::Pjrt(exe) => {
+                ServeEngine::with_backend(Box::new(PjrtBackend::new(*exe)), 1, tile)
+            }
+        }
+    }
+
+    /// Plug in any [`Backend`] implementation (tests use stub backends;
+    /// deployments can bring their own accelerators).
+    pub fn with_backend(
+        backend: Box<dyn Backend>,
+        threads: usize,
+        tile: (usize, usize),
+    ) -> ServeEngine {
+        ServeEngine {
+            backend,
+            threads: threads.max(1),
+            tile,
+            plans: PlanCache::default(),
+            completed: Vec::new(),
+            started: Instant::now(),
+            tokens: 0,
+            fallbacks: 0,
+        }
+    }
+
+    /// The configured backend's capability surface.
+    pub fn capabilities(&self) -> Capabilities {
+        self.backend.capabilities()
+    }
+
+    fn note_fallback(&mut self, missing: Capability) {
+        self.fallbacks += 1;
+        eprintln!(
+            "serve: backend '{}' lacks capability '{missing}'; falling back to the CPU path",
+            self.backend.name()
+        );
     }
 
     /// Execute one batch plan; responses are appended to `completed`.
     pub fn execute(&mut self, plan: BatchPlan) -> Result<()> {
         let now = Instant::now();
-        match &self.kind {
-            EngineKind::Cpu { threads } => {
-                let threads = *threads;
-                for req in plan.requests {
-                    let t0 = Instant::now();
-                    let o = cpu_attention(&req, self.tile, threads);
-                    let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
-                    self.tokens += req.n;
-                    self.completed.push(Response {
-                        id: req.id,
-                        o,
-                        queue_ms: now.duration_since(req.arrived).as_secs_f64() * 1e3,
-                        compute_ms,
-                        sparsity: req.mask.block_sparsity(self.tile.0, self.tile.1),
-                    });
-                }
-            }
-            EngineKind::Pjrt(exe) => {
-                for req in plan.requests {
-                    let t0 = Instant::now();
-                    let shape4 = vec![1, req.layout.q_heads, req.n, req.d];
-                    // the AOT artifact is compiled for an MHA signature:
-                    // expand grouped K/V by replicating each KV head
-                    // across its query group (semantically identical —
-                    // the GQA residency win stays host-side until a
-                    // grouped decode artifact exists, DESIGN.md §Head
-                    // layouts)
-                    let expand = |src: &[f32]| -> Vec<f32> {
-                        if req.layout.is_mha() {
-                            return src.to_vec();
-                        }
-                        let per = req.n * req.d;
-                        let mut out = Vec::with_capacity(req.layout.q_heads * per);
-                        for qh in 0..req.layout.q_heads {
-                            let kh = req.layout.kv_head_of(qh);
-                            out.extend_from_slice(&src[kh * per..(kh + 1) * per]);
-                        }
-                        out
-                    };
-                    let vec_t = |v: &Vec<i32>| HostTensor::I32 { shape: vec![1, req.n], data: v.clone() };
-                    let out = exe.run(&[
-                        HostTensor::F32 { shape: shape4.clone(), data: req.q.clone() },
-                        HostTensor::F32 { shape: shape4.clone(), data: expand(&req.k) },
-                        HostTensor::F32 { shape: shape4, data: expand(&req.v) },
-                        vec_t(&req.mask.lts),
-                        vec_t(&req.mask.lte),
-                        vec_t(&req.mask.uts),
-                        vec_t(&req.mask.ute),
-                    ])?;
-                    let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
-                    self.tokens += req.n;
-                    self.completed.push(Response {
-                        id: req.id,
-                        o: out[0].as_f32()?.to_vec(),
-                        queue_ms: now.duration_since(req.arrived).as_secs_f64() * 1e3,
-                        compute_ms,
-                        sparsity: req.mask.block_sparsity(self.tile.0, self.tile.1),
-                    });
-                }
-            }
+        let caps = self.backend.capabilities();
+        for req in plan.requests {
+            let t0 = Instant::now();
+            let o = self.run_prefill(&req, caps)?;
+            let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
+            self.tokens += req.n;
+            self.completed.push(Response {
+                id: req.id,
+                o,
+                queue_ms: now.duration_since(req.arrived).as_secs_f64() * 1e3,
+                compute_ms,
+                sparsity: req.mask.block_sparsity(self.tile.0, self.tile.1),
+            });
         }
         Ok(())
     }
 
-    /// Decode entry point — [`EngineKind`]-agnostic: the paged-cache
-    /// step kernel is CPU-resident for now (no AOT decode artifact is
-    /// compiled yet, DESIGN.md §Decode), so both engine kinds route
-    /// decode through the continuous batcher.  Retired sequences land
-    /// in `completed` like prefill responses: `o` holds the generated
-    /// rows and `sparsity` reports the fraction of cache pages skipped.
+    /// One request's prefill through the capability-dispatched backend.
+    fn run_prefill(&mut self, req: &Request, caps: Capabilities) -> Result<Vec<f32>> {
+        let problem = AttnProblem::new(req.n, req.d)
+            .layout(req.layout)
+            .mask(&req.mask)
+            .tile(self.tile.0.min(req.n), self.tile.1.min(req.n))
+            .threads(self.threads);
+        let q = QViews::new(&req.q, req.layout.q_heads, req.n, req.d)?;
+        let kv = KvViews::new(&req.k, &req.v, req.layout.kv_heads, req.n, req.d)?;
+        let supported = if req.layout.is_mha() { caps.prefill } else { caps.prefill_grouped };
+        let out = if supported {
+            let plan = self.plans.get_or_build(&problem)?;
+            if req.layout.is_mha() {
+                self.backend.prefill(&plan, q, kv)?
+            } else {
+                self.backend.prefill_grouped(&plan, q, kv)?
+            }
+        } else if !req.layout.is_mha() && caps.prefill {
+            // explicit grouped fallback: the backend's artifact is
+            // compiled for an MHA signature, so each KV head is
+            // replicated across its query group host-side (semantically
+            // identical — the GQA residency win stays host-side until a
+            // grouped artifact exists, DESIGN.md §Head layouts)
+            self.note_fallback(Capability::PrefillGrouped);
+            let per = req.n * req.d;
+            let mut k_rep = Vec::with_capacity(req.layout.q_heads * per);
+            let mut v_rep = Vec::with_capacity(req.layout.q_heads * per);
+            for qh in 0..req.layout.q_heads {
+                let kh = req.layout.kv_head_of(qh);
+                k_rep.extend_from_slice(&req.k[kh * per..(kh + 1) * per]);
+                v_rep.extend_from_slice(&req.v[kh * per..(kh + 1) * per]);
+            }
+            let mha = problem.heads(req.layout.q_heads, req.layout.q_heads);
+            let plan = self.plans.get_or_build(&mha)?;
+            let kv_rep = KvViews::new(&k_rep, &v_rep, req.layout.q_heads, req.n, req.d)?;
+            self.backend.prefill(&plan, q, kv_rep)?
+        } else {
+            // the backend cannot prefill this request at all
+            self.note_fallback(if req.layout.is_mha() {
+                Capability::Prefill
+            } else {
+                Capability::PrefillGrouped
+            });
+            let plan = self.plans.get_or_build(&problem)?;
+            CpuBackend.prefill_grouped(&plan, q, kv)?
+        };
+        let mut o = Vec::with_capacity(req.layout.q_heads * req.n * req.d);
+        for part in out.outs {
+            o.extend(part.o);
+        }
+        Ok(o)
+    }
+
+    /// Decode entry point.  The paged-cache step/verify kernels are
+    /// CPU-resident (no AOT decode artifact is compiled yet, DESIGN.md
+    /// §Decode): a backend without the `decode` capability has the gap
+    /// *recorded* in [`ServeReport::fallbacks`] and logged — never a
+    /// silent downgrade — before the continuous batcher runs on the CPU
+    /// backend.  Retired sequences land in `completed` like prefill
+    /// responses: `o` holds the generated rows and `sparsity` reports
+    /// the fraction of cache pages skipped.
     ///
     /// `cfg.spec` selects speculative decoding (draft → tree-mask
     /// verify → commit/rollback); outputs are token-identical to
@@ -127,6 +195,9 @@ impl ServeEngine {
         reqs: Vec<DecodeRequest>,
         cfg: BatcherConfig,
     ) -> Result<BatcherReport> {
+        if !self.backend.capabilities().decode {
+            self.note_fallback(Capability::DecodeStep);
+        }
         let mut batcher = ContinuousBatcher::new(cfg);
         for r in reqs {
             batcher.submit(r)?;
@@ -157,42 +228,18 @@ impl ServeEngine {
             p50_compute_ms: pct(0.5),
             p99_compute_ms: pct(0.99),
             mean_sparsity: self.completed.iter().map(|r| r.sparsity).sum::<f64>() / n as f64,
+            fallbacks: self.fallbacks,
+            plan_hits: self.plans.hits(),
+            plan_misses: self.plans.misses(),
         }
     }
 }
 
-fn cpu_attention(req: &Request, tile: (usize, usize), threads: usize) -> Vec<f32> {
-    let cfg = AttnConfig::new(tile.0.min(req.n), tile.1.min(req.n), req.d);
-    let table = BlockTable::build(&req.mask, cfg.bc);
-    // the grouped parallel kernel builds the Eq. 4 interval schedule
-    // once for the whole request and packs each KV head's K once, then
-    // partitions (query head × row block) items across threads with
-    // cost-weighted chunks — a 1-head 128K-context request saturates
-    // every core where head-only parallelism pinned it to one, and an
-    // MQA request still reuses a single packed K across all its heads
-    let (outs, _) = flash::flashmask_forward_grouped_parallel(
-        &req.q,
-        &req.k,
-        &req.v,
-        req.n,
-        req.d,
-        req.layout,
-        &req.mask,
-        &table,
-        cfg,
-        true,
-        threads.max(1),
-    );
-    let mut o = Vec::with_capacity(req.layout.q_heads * req.n * req.d);
-    for part in outs {
-        o.extend(part.o);
-    }
-    o
-}
-
 #[cfg(test)]
+#[allow(deprecated)] // the legacy entry points double as migration oracles
 mod tests {
     use super::*;
+    use crate::attention::api::{AttnError, ExecutionPlan, PrefillOutput};
     use crate::attention::{dense, HeadLayout};
     use crate::mask::builders;
     use crate::server::queue::RequestQueue;
@@ -227,6 +274,126 @@ mod tests {
                 assert!((a - b).abs() < 3e-5);
             }
         }
+        // no fallbacks on the all-capable CPU backend
+        assert_eq!(eng.report().fallbacks, 0);
+    }
+
+    #[test]
+    fn repeated_masks_hit_the_plan_cache() {
+        // six requests over two distinct (mask, shape) contents: the
+        // engine compiles two plans and serves four calls from cache
+        let (n, heads, d) = (48, 1, 8);
+        let mut q = RequestQueue::new();
+        for i in 0..6 {
+            let mut r = rand_req(n, heads, d, 10 + i);
+            if i % 2 == 1 {
+                r.mask = builders::causal(n);
+            }
+            q.push(r).unwrap();
+        }
+        let s = Scheduler::new(SchedulerConfig { max_batch: 8, max_wait_ms: 0.0 });
+        let mut eng = ServeEngine::new(EngineKind::Cpu { threads: 1 }, (16, 16));
+        while let Some(plan) = s.next_batch(&mut q, std::time::Instant::now()) {
+            eng.execute(plan).unwrap();
+        }
+        let rep = eng.report();
+        assert_eq!(rep.requests, 6);
+        assert_eq!(rep.plan_misses, 2, "two distinct plans");
+        assert_eq!(rep.plan_hits, 4, "four cache hits");
+    }
+
+    /// A backend that can do nothing — every operation must fall back
+    /// to the CPU path, counted and with correct results.
+    struct NullBackend;
+
+    impl Backend for NullBackend {
+        fn name(&self) -> &'static str {
+            "null"
+        }
+
+        fn capabilities(&self) -> Capabilities {
+            Capabilities::default()
+        }
+
+        fn prefill_grouped(
+            &self,
+            _plan: &ExecutionPlan,
+            _q: QViews<'_>,
+            _kv: KvViews<'_>,
+        ) -> Result<PrefillOutput, AttnError> {
+            Err(AttnError::Unsupported {
+                backend: "null",
+                capability: Capability::PrefillGrouped,
+            })
+        }
+    }
+
+    #[test]
+    fn incapable_backend_falls_back_to_cpu_and_is_counted() {
+        let (n, heads, d) = (48, 2, 8);
+        let req = rand_req(n, heads, d, 3);
+        let mut q = RequestQueue::new();
+        q.push(req.clone()).unwrap();
+        let s = Scheduler::new(SchedulerConfig { max_batch: 1, max_wait_ms: 0.0 });
+        let mut eng = ServeEngine::with_backend(Box::new(NullBackend), 1, (16, 16));
+        let plan = s.next_batch(&mut q, std::time::Instant::now()).unwrap();
+        eng.execute(plan).unwrap();
+        // the fallback still computes the right answer
+        let resp = &eng.completed[0];
+        let bias = req.mask.dense_bias();
+        for h in 0..heads {
+            let r = h * n * d..(h + 1) * n * d;
+            let want = dense::dense_forward(
+                &req.q[r.clone()], &req.k[r.clone()], &req.v[r.clone()],
+                n, d, &bias, 1.0 / (d as f32).sqrt(),
+            );
+            for (a, b) in resp.o[r].iter().zip(&want.o) {
+                assert!((a - b).abs() < 3e-5);
+            }
+        }
+        assert_eq!(eng.report().fallbacks, 1, "prefill fallback must be recorded");
+    }
+
+    #[test]
+    fn decode_fallback_is_recorded_not_silent() {
+        // satellite: a backend without the decode capability must have
+        // the gap counted in ServeReport.fallbacks (and logged), while
+        // the CPU batcher still produces the tokens
+        let (n, d, prompt) = (32, 8, 8);
+        let req = rand_req(n, 1, d, 9);
+        let mut eng = ServeEngine::with_backend(Box::new(NullBackend), 1, (16, 16));
+        let report = eng
+            .execute_decode(
+                vec![req.into_decode(prompt)],
+                BatcherConfig {
+                    page_size: 8,
+                    d,
+                    max_pages: 64,
+                    max_active: 2,
+                    skip: true,
+                    spec: crate::decode::SpecPolicy::Off,
+                },
+            )
+            .unwrap();
+        assert_eq!(report.sequences, 1);
+        assert_eq!(report.tokens, (n - prompt) as u64);
+        assert_eq!(eng.report().fallbacks, 1, "decode fallback must be recorded");
+        // the CPU engine kind needs no fallback for decode
+        let req2 = rand_req(n, 1, d, 10);
+        let mut cpu = ServeEngine::new(EngineKind::Cpu { threads: 1 }, (16, 16));
+        cpu.execute_decode(
+            vec![req2.into_decode(prompt)],
+            BatcherConfig {
+                page_size: 8,
+                d,
+                max_pages: 64,
+                max_active: 2,
+                skip: true,
+                spec: crate::decode::SpecPolicy::Off,
+            },
+        )
+        .unwrap();
+        assert_eq!(cpu.report().fallbacks, 0);
     }
 
     /// GQA request plus its MHA twin (same Q, KV replicated per group).
@@ -425,5 +592,8 @@ mod tests {
         assert!(rep.throughput_tok_s > 0.0);
         assert!(rep.p99_compute_ms >= rep.p50_compute_ms);
         assert!((0.0..=1.0).contains(&rep.mean_sparsity));
+        // all six requests share one mask content and shape
+        assert_eq!(rep.plan_misses, 1);
+        assert_eq!(rep.plan_hits, 5);
     }
 }

@@ -1,0 +1,369 @@
+//! `attention::api` contract tests.
+//!
+//! Two halves:
+//!
+//! 1. **Misuse coverage** — every [`AttnError`] variant is reachable
+//!    from safe code through the builder/views (mismatched `q.len()`,
+//!    wrong mask `n`, `kv_heads = 0`, `q_heads % kv_heads != 0`, zero
+//!    tiles/dims, missing or structurally invalid masks, unsupported
+//!    backend capabilities) and comes back as `Err`, never a panic.
+//! 2. **Migration differential** — the new API is *bitwise identical*
+//!    to each legacy free-function entry point across all 12 benchmark
+//!    mask kinds (the legacy functions are deprecated shims over the
+//!    API, so this pins the delegation and guards future divergence).
+
+#![allow(deprecated)] // the legacy entry points are the migration oracle here
+
+use flashmask::attention::api::{
+    AttnError, AttnProblem, Backend, Capability, CpuBackend, DecodeStep, DenseRefBackend,
+    KvViews, PlanCache, QViews,
+};
+use flashmask::attention::{dense, flash, AttnConfig, HeadLayout};
+use flashmask::decode::{decode_step_group, DecodeStats, PagePool, PagedKv};
+use flashmask::mask::{builders, BlockTable, IncrementalMaskView};
+use flashmask::util::rng::Rng;
+
+fn rand_vec(n: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32() * 0.5).collect()
+}
+
+// ---------------------------------------------------------------- misuse
+
+#[test]
+fn every_error_variant_reachable_from_safe_code() {
+    let n = 64;
+    let mask = builders::causal(n);
+
+    // ShapeMismatch: mismatched q.len()
+    let short = vec![0f32; 10];
+    assert!(matches!(
+        QViews::new(&short, 1, n, 8).unwrap_err(),
+        AttnError::ShapeMismatch { what: "q", got: 10, want: 512 }
+    ));
+    // ShapeMismatch: view disagrees with the plan
+    let plan = AttnProblem::new(n, 8).mask(&mask).plan().unwrap();
+    let q = vec![0f32; 2 * n * 8];
+    let kv = vec![0f32; n * 8];
+    let err = CpuBackend
+        .prefill_grouped(
+            &plan,
+            QViews::new(&q, 2, n, 8).unwrap(), // plan is single-head
+            KvViews::new(&kv, &kv, 1, n, 8).unwrap(),
+        )
+        .unwrap_err();
+    assert!(matches!(err, AttnError::ShapeMismatch { what: "q view heads", .. }));
+
+    // MaskMissing
+    assert_eq!(AttnProblem::new(n, 8).plan().unwrap_err(), AttnError::MaskMissing);
+
+    // MaskSizeMismatch: wrong mask n
+    assert_eq!(
+        AttnProblem::new(32, 8).mask(&mask).plan().unwrap_err(),
+        AttnError::MaskSizeMismatch { got: n, want: 32 }
+    );
+
+    // MaskInvalid: structurally broken mask
+    let mut bad = builders::causal(n);
+    bad.lts[3] = 50;
+    bad.lte[3] = 4;
+    assert!(matches!(
+        AttnProblem::new(n, 8).mask(&bad).plan().unwrap_err(),
+        AttnError::MaskInvalid { .. }
+    ));
+
+    // UnsupportedLayout: kv_heads = 0 and q_heads % kv_heads != 0
+    assert_eq!(
+        AttnProblem::new(n, 8).heads(4, 0).mask(&mask).plan().unwrap_err(),
+        AttnError::UnsupportedLayout { q_heads: 4, kv_heads: 0 }
+    );
+    assert_eq!(
+        AttnProblem::new(n, 8).heads(0, 1).mask(&mask).plan().unwrap_err(),
+        AttnError::UnsupportedLayout { q_heads: 0, kv_heads: 1 }
+    );
+    assert_eq!(
+        AttnProblem::new(n, 8).heads(6, 4).mask(&mask).plan().unwrap_err(),
+        AttnError::UnsupportedLayout { q_heads: 6, kv_heads: 4 }
+    );
+
+    // InvalidTile / InvalidDim
+    assert_eq!(
+        AttnProblem::new(n, 8).mask(&mask).tile(16, 0).plan().unwrap_err(),
+        AttnError::InvalidTile { br: 16, bc: 0 }
+    );
+    assert_eq!(
+        AttnProblem::new(n, 0).mask(&mask).plan().unwrap_err(),
+        AttnError::InvalidDim { what: "d" }
+    );
+    assert_eq!(
+        AttnProblem::new(0, 8).mask(&mask).plan().unwrap_err(),
+        AttnError::InvalidDim { what: "n" }
+    );
+
+    // Unsupported: a capability-poor backend refuses, typed
+    let pool = PagePool::new(8, 8, 4);
+    let cache = PagedKv::new();
+    let view = IncrementalMaskView::new(&mask, 8);
+    let mut stats = DecodeStats::default();
+    let mut scratch = Vec::new();
+    let err = DenseRefBackend
+        .decode_step(
+            DecodeStep {
+                q_rows: &[0f32; 8],
+                group: 1,
+                cache: &cache,
+                pool: &pool,
+                mask: &mask,
+                view: &view,
+                t: 0,
+                scale: 1.0,
+                skip: true,
+            },
+            &mut stats,
+            &mut scratch,
+        )
+        .unwrap_err();
+    assert_eq!(
+        err,
+        AttnError::Unsupported { backend: "dense-ref", capability: Capability::DecodeStep }
+    );
+
+    // out-of-range decode row: typed error, not an interval-vector panic
+    let err = CpuBackend
+        .decode_step(
+            DecodeStep {
+                q_rows: &[0f32; 8],
+                group: 1,
+                cache: &cache,
+                pool: &pool,
+                mask: &mask,
+                view: &view,
+                t: n,
+                scale: 1.0,
+                skip: true,
+            },
+            &mut stats,
+            &mut scratch,
+        )
+        .unwrap_err();
+    assert_eq!(err, AttnError::MaskSizeMismatch { got: n, want: n + 1 });
+
+    // Backend: the runtime-failure variant renders its context
+    let e = AttnError::Backend { backend: "pjrt", reason: "artifact signature".into() };
+    assert!(e.to_string().contains("pjrt"));
+
+    // every error Displays without panicking (Error impl)
+    let all: Vec<AttnError> = vec![
+        AttnError::ShapeMismatch { what: "q", got: 1, want: 2 },
+        AttnError::MaskMissing,
+        AttnError::MaskSizeMismatch { got: 1, want: 2 },
+        AttnError::MaskInvalid { reason: "x".into() },
+        AttnError::UnsupportedLayout { q_heads: 3, kv_heads: 2 },
+        AttnError::InvalidTile { br: 0, bc: 0 },
+        AttnError::InvalidDim { what: "n" },
+        AttnError::Unsupported { backend: "cpu", capability: Capability::Verify },
+        AttnError::Backend { backend: "pjrt", reason: "y".into() },
+    ];
+    for e in all {
+        assert!(!e.to_string().is_empty());
+        let _: &dyn std::error::Error = &e;
+    }
+}
+
+#[test]
+fn plan_cache_propagates_validation_errors() {
+    let mask = builders::causal(32);
+    let mut cache = PlanCache::new(4);
+    assert!(cache.get_or_build(&AttnProblem::new(64, 8).mask(&mask)).is_err());
+    assert!(cache.is_empty(), "invalid problems must not pollute the cache");
+}
+
+// ---------------------------------------------- migration differentials
+
+#[test]
+fn api_bitwise_identical_to_legacy_single_head_forward() {
+    let (n, d) = (128, 16);
+    let mut rng = Rng::new(1);
+    let q = rand_vec(n * d, &mut rng);
+    let k = rand_vec(n * d, &mut rng);
+    let v = rand_vec(n * d, &mut rng);
+    let cfg = AttnConfig::new(32, 32, d);
+    for (kind, mask) in builders::benchmark_suite(n, 3) {
+        let table = BlockTable::build(&mask, cfg.bc);
+        for skip in [true, false] {
+            let (want, ws) = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, skip);
+            let plan = AttnProblem::new(n, d)
+                .mask(&mask)
+                .tile(cfg.br, cfg.bc)
+                .skip(skip)
+                .plan()
+                .unwrap();
+            let got = CpuBackend
+                .prefill(
+                    &plan,
+                    QViews::new(&q, 1, n, d).unwrap(),
+                    KvViews::new(&k, &v, 1, n, d).unwrap(),
+                )
+                .unwrap();
+            assert_eq!(got.outs[0].o, want.o, "{kind} skip={skip}: outputs diverged");
+            assert_eq!(got.outs[0].lse, want.lse, "{kind} skip={skip}: lse diverged");
+            assert_eq!(got.stats, ws, "{kind} skip={skip}: stats diverged");
+        }
+    }
+}
+
+#[test]
+fn api_bitwise_identical_to_legacy_grouped_forward() {
+    let (n, d) = (96, 8);
+    let layout = HeadLayout::new(4, 2);
+    let mut rng = Rng::new(2);
+    let q = rand_vec(layout.q_heads * n * d, &mut rng);
+    let k = rand_vec(layout.kv_heads * n * d, &mut rng);
+    let v = rand_vec(layout.kv_heads * n * d, &mut rng);
+    let cfg = AttnConfig::new(32, 32, d);
+    for (kind, mask) in builders::benchmark_suite(n, 5) {
+        let table = BlockTable::build(&mask, cfg.bc);
+        let (want, ws) =
+            flash::flashmask_forward_grouped(&q, &k, &v, n, d, layout, &mask, &table, cfg, true);
+        let (want_p, _) = flash::flashmask_forward_grouped_parallel(
+            &q, &k, &v, n, d, layout, &mask, &table, cfg, true, 3,
+        );
+        let plan = AttnProblem::new(n, d)
+            .layout(layout)
+            .mask(&mask)
+            .tile(cfg.br, cfg.bc)
+            .plan()
+            .unwrap();
+        let got = CpuBackend
+            .prefill_grouped(
+                &plan,
+                QViews::new(&q, layout.q_heads, n, d).unwrap(),
+                KvViews::new(&k, &v, layout.kv_heads, n, d).unwrap(),
+            )
+            .unwrap();
+        for h in 0..layout.q_heads {
+            assert_eq!(got.outs[h].o, want[h].o, "{kind} head {h}: grouped diverged");
+            assert_eq!(got.outs[h].o, want_p[h].o, "{kind} head {h}: parallel diverged");
+            assert_eq!(got.outs[h].lse, want[h].lse, "{kind} head {h}: lse diverged");
+        }
+        assert_eq!(got.stats, ws, "{kind}: stats diverged");
+    }
+}
+
+#[test]
+fn api_bitwise_identical_to_legacy_backward() {
+    let (n, d) = (64, 8);
+    let mut rng = Rng::new(4);
+    let q = rand_vec(n * d, &mut rng);
+    let k = rand_vec(n * d, &mut rng);
+    let v = rand_vec(n * d, &mut rng);
+    let do_ = rand_vec(n * d, &mut rng);
+    let cfg = AttnConfig::new(16, 16, d);
+    for (kind, mask) in builders::benchmark_suite(n, 6) {
+        let table = BlockTable::build(&mask, cfg.bc);
+        let (fwd, _) = flash::flashmask_forward(&q, &k, &v, n, d, &mask, &table, cfg, true);
+        let (want, _) = flash::flashmask_backward(
+            &q, &k, &v, &fwd.o, &do_, &fwd.lse, n, d, &mask, &table, cfg, true,
+        );
+        let plan = AttnProblem::new(n, d).mask(&mask).tile(cfg.br, cfg.bc).plan().unwrap();
+        let (got, _) = CpuBackend.backward(&plan, &q, &k, &v, &fwd.o, &do_, &fwd.lse).unwrap();
+        assert_eq!(got.dq, want.dq, "{kind} dq");
+        assert_eq!(got.dk, want.dk, "{kind} dk");
+        assert_eq!(got.dv, want.dv, "{kind} dv");
+    }
+}
+
+#[test]
+fn api_bitwise_identical_to_legacy_dense_oracle() {
+    let (n, d) = (64, 8);
+    let layout = HeadLayout::new(4, 2);
+    let mut rng = Rng::new(7);
+    let q = rand_vec(layout.q_heads * n * d, &mut rng);
+    let k = rand_vec(layout.kv_heads * n * d, &mut rng);
+    let v = rand_vec(layout.kv_heads * n * d, &mut rng);
+    for (kind, mask) in builders::benchmark_suite(n, 8) {
+        let bias = mask.dense_bias();
+        let want = dense::dense_forward_grouped(&q, &k, &v, n, d, layout, &bias, 0.5);
+        let want_p =
+            dense::dense_forward_grouped_parallel(&q, &k, &v, n, d, layout, &bias, 0.5, 3);
+        let plan = AttnProblem::new(n, d).layout(layout).mask(&mask).scale(0.5).plan().unwrap();
+        let got = DenseRefBackend
+            .prefill_grouped(
+                &plan,
+                QViews::new(&q, layout.q_heads, n, d).unwrap(),
+                KvViews::new(&k, &v, layout.kv_heads, n, d).unwrap(),
+            )
+            .unwrap();
+        for h in 0..layout.q_heads {
+            assert_eq!(got.outs[h].o, want[h].o, "{kind} head {h}: dense diverged");
+            assert_eq!(got.outs[h].o, want_p[h].o, "{kind} head {h}: dense parallel diverged");
+        }
+        // single-head shim too
+        let w1 = dense::dense_forward(&q[..n * d], &k[..n * d], &v[..n * d], n, d, &bias, 0.5);
+        let plan1 = AttnProblem::new(n, d).mask(&mask).scale(0.5).plan().unwrap();
+        let g1 = DenseRefBackend
+            .prefill(
+                &plan1,
+                QViews::new(&q[..n * d], 1, n, d).unwrap(),
+                KvViews::new(&k[..n * d], &v[..n * d], 1, n, d).unwrap(),
+            )
+            .unwrap();
+        assert_eq!(g1.outs[0].o, w1.o, "{kind}: single-head dense diverged");
+    }
+}
+
+#[test]
+fn api_bitwise_identical_to_legacy_decode_step() {
+    // causal families only (decode requires causal masks)
+    let (n, d, ps, group) = (64, 8, 8, 2);
+    let mut rng = Rng::new(9);
+    let q = rand_vec(group * n * d, &mut rng);
+    let k = rand_vec(n * d, &mut rng);
+    let v = rand_vec(n * d, &mut rng);
+    let masks = [
+        ("causal", builders::causal(n)),
+        ("sliding_window", builders::sliding_window(n, 12)),
+        ("causal_document", builders::causal_document(n, &[30, 34])),
+        ("random_eviction", builders::random_eviction(n, &mut rng)),
+    ];
+    for (kind, mask) in &masks {
+        let view = IncrementalMaskView::new(mask, ps);
+        let mut pool = PagePool::new(ps, d, n.div_ceil(ps) + 1);
+        let mut cache = PagedKv::new();
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut legacy_stats = DecodeStats::default();
+        let mut api_stats = DecodeStats::default();
+        let mut s1 = Vec::new();
+        let mut s2 = Vec::new();
+        for t in 0..n {
+            assert!(cache.append(&mut pool, &k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]));
+            let mut q_rows = Vec::with_capacity(group * d);
+            for g in 0..group {
+                let base = g * n * d + t * d;
+                q_rows.extend_from_slice(&q[base..base + d]);
+            }
+            let want = decode_step_group(
+                &q_rows, group, &cache, &pool, mask, &view, t, scale, true, &mut legacy_stats,
+                &mut s1,
+            );
+            let got = CpuBackend
+                .decode_step(
+                    DecodeStep {
+                        q_rows: &q_rows,
+                        group,
+                        cache: &cache,
+                        pool: &pool,
+                        mask,
+                        view: &view,
+                        t,
+                        scale,
+                        skip: true,
+                    },
+                    &mut api_stats,
+                    &mut s2,
+                )
+                .unwrap();
+            assert_eq!(got, want, "{kind} t={t}: decode rows diverged");
+        }
+        assert_eq!(api_stats, legacy_stats, "{kind}: decode stats diverged");
+    }
+}

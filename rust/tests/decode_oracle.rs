@@ -16,6 +16,9 @@
 //! tree mask, or the accept/rollback path broke the paper's exactness
 //! guarantee on the decode side.
 
+#![allow(deprecated)] // legacy kernel entry points are deprecated shims over attention::api;
+// exercising them here makes every differential oracle double as a migration test
+
 use flashmask::attention::{flash, AttnConfig};
 use flashmask::decode::{BatcherConfig, ContinuousBatcher, DecodeRequest, SpecPolicy};
 use flashmask::mask::{builders, BlockTable, MaskKind};

@@ -12,6 +12,9 @@
 //!    replication at 1/group the cache residency — including under
 //!    pool-pressure preemption and speculative rollback.
 
+#![allow(deprecated)] // legacy kernel entry points are deprecated shims over attention::api;
+// exercising them here makes every differential oracle double as a migration test
+
 use flashmask::attention::{dense, flash, AttnConfig, HeadLayout};
 use flashmask::decode::{BatcherConfig, ContinuousBatcher, DecodeRequest, DecodeResponse, SpecPolicy};
 use flashmask::mask::{builders, BlockTable, FlashMask, MaskKind};

@@ -45,6 +45,20 @@ merged = {
     "kernel": kernel,
     "decode": decode,
 }
+# surface the ExecutionPlan amortization headline (plan-cache hit rate
+# and amortized-vs-cold latency) at the top level for trend tracking
+pc = kernel.get("plan_cache")
+if pc:
+    merged["plan_cache"] = {
+        "best_speedup_warm_vs_cold": pc.get("best_speedup"),
+        "hit_rate": pc.get("best_hit_rate"),
+        "rows": pc.get("rows"),
+    }
+# decode plan reuse: schedules built per session vs tokens stepped
+plans = sum(m.get("plans_built", 0) for m in decode.get("masks", []))
+steps = sum(m.get("steps", 0) for m in decode.get("masks", []))
+if steps:
+    merged["decode_plan_reuse"] = {"plans_built": plans, "steps": steps}
 with open(sys.argv[3], "w") as f:
     json.dump(merged, f, indent=2)
     f.write("\n")

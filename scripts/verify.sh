@@ -21,16 +21,52 @@ cargo clippy --all-targets -- -D warnings \
   -A clippy::derivable_impls \
   -A clippy::type_complexity
 
+echo "== docs: rustdoc builds clean (warnings are errors) =="
+# the attention::api rustdoc examples also run under `cargo test` above;
+# this gate keeps intra-doc links and doc markup from rotting
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "== api migration: no non-test code calls the deprecated kernel entry points =="
+# The legacy free functions (flashmask_forward*, dense_forward*,
+# decode_step*, verify_rows*, flashmask_backward, forward_single_head)
+# are deprecated shims over attention::api.  Only tests/#[cfg(test)]
+# modules may call them (they double as migration oracles).  Test
+# modules sit at the bottom of every src file, so everything from the
+# `#[cfg(test)]` line on is stripped before scanning; definition lines
+# (`fn name(`) and comments are excluded — what remains are call sites.
+deprecated_calls=0
+while IFS= read -r f; do
+  # `.decode_step(` / `.verify(` are Backend *trait methods* (the new
+  # API) that share the legacy free functions' names — a leading dot
+  # marks them as method calls and exempts them
+  hits=$(awk '/#\[cfg\(test\)\]/{exit} {print}' "$f" \
+    | grep -nE '\b(flashmask_forward|flashmask_forward_grouped|flashmask_forward_grouped_parallel|flashmask_backward|dense_forward|dense_forward_grouped|dense_forward_grouped_parallel|decode_step|decode_step_group|verify_rows|verify_rows_group|forward_single_head)\(' \
+    | grep -v 'fn ' | grep -vE '^\s*[0-9]+:\s*//' \
+    | grep -vE '\.\s*(decode_step|decode_step_group|verify_rows|verify_rows_group)\(' || true)
+  if [ -n "$hits" ]; then
+    echo "deprecated entry point called from non-test code in $f:"
+    echo "$hits"
+    deprecated_calls=1
+  fi
+done < <(find rust/src rust/benches examples -name '*.rs' ! -path 'rust/src/attention/api.rs')
+if [ "$deprecated_calls" -ne 0 ]; then
+  echo "verify.sh: FAIL — migrate these calls to attention::api (DESIGN.md §Public API)"
+  exit 1
+fi
+echo "api migration grep: clean"
+
 echo "== decode oracle suite (sequential vs speculative vs prefill) =="
 cargo test -q --test decode_oracle
 
 echo "== GQA differential oracle (grouped layouts vs KV-replicated MHA) =="
 cargo test -q --test gqa_oracle
 
-echo "== kernel bench smoke (tiles-visited + parallel_2d bitwise asserts) =="
+echo "== kernel bench smoke (tiles-visited + parallel_2d bitwise + plan-cache asserts) =="
 # the bench asserts the interval schedule visits strictly fewer tiles
-# than tr*tc on every non-full mask and that row-block parallelism is
-# bitwise-identical to the sequential kernel
+# than tr*tc on every non-full mask, that row-block parallelism is
+# bitwise-identical to the sequential kernel, and that ExecutionPlan
+# reuse makes the repeated-mask prefill microbench >= 1.2x faster than
+# the plan-per-call cold path (ISSUE 5 acceptance)
 cargo bench --bench bench_kernel_masks -- --smoke
 
 echo "== decode bench smoke (~2s, includes speculative oracle check) =="
