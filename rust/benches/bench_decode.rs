@@ -181,6 +181,17 @@ fn main() {
     .title(format!(
         "speculative decode (oracle draft, k={spec_k}) vs one-token-at-a-time"
     ));
+    // request-latency percentiles from the batcher's telemetry
+    // histograms (log2 buckets: values are upper bounds within one
+    // power of two — DESIGN.md §Telemetry)
+    let mut l = Table::new(vec![
+        "mask",
+        "TTFT p50 ms",
+        "TTFT p99 ms",
+        "ITL p50 ms",
+        "ITL p99 ms",
+    ])
+    .title("decode latency: time-to-first-token and inter-token gap");
     let mut json_masks: Vec<Json> = Vec::new();
     for (name, mask_of) in &cases {
         let reqs = requests(n, d, heads, count, mask_of.as_ref());
@@ -214,6 +225,18 @@ fn main() {
             format!("{:.2}", rep_skip.pages_per_token),
             format!("{}/{}", rep_skip.plans_built, rep_skip.tokens),
         ]);
+        // every retired sequence generated > 1 token here, so both
+        // histograms must be populated and ordered
+        assert!(rep_skip.ttft_p50_ms > 0.0, "{name}: empty TTFT histogram");
+        assert!(rep_skip.ttft_p99_ms >= rep_skip.ttft_p50_ms, "{name}: TTFT percentiles inverted");
+        assert!(rep_skip.itl_p99_ms >= rep_skip.itl_p50_ms, "{name}: ITL percentiles inverted");
+        l.row(vec![
+            name.to_string(),
+            format!("{:.2}", rep_skip.ttft_p50_ms),
+            format!("{:.2}", rep_skip.ttft_p99_ms),
+            format!("{:.3}", rep_skip.itl_p50_ms),
+            format!("{:.3}", rep_skip.itl_p99_ms),
+        ]);
         json_masks.push(obj(vec![
             ("mask", Json::Str(name.to_string())),
             ("tokens_per_s_skip", Json::Num(tps_skip)),
@@ -223,6 +246,10 @@ fn main() {
             ("pages_per_token", Json::Num(rep_skip.pages_per_token)),
             ("plans_built", Json::Num(rep_skip.plans_built as f64)),
             ("steps", Json::Num(rep_skip.tokens as f64)),
+            ("ttft_p50_ms", Json::Num(rep_skip.ttft_p50_ms)),
+            ("ttft_p99_ms", Json::Num(rep_skip.ttft_p99_ms)),
+            ("itl_p50_ms", Json::Num(rep_skip.itl_p50_ms)),
+            ("itl_p99_ms", Json::Num(rep_skip.itl_p99_ms)),
         ]));
 
         if spec_k > 1 {
@@ -248,6 +275,7 @@ fn main() {
         }
     }
     t.print();
+    l.print();
     if spec_k > 1 {
         s.print();
     }

@@ -18,6 +18,9 @@
 //!   counts: head-only parallelism pins this workload to one core;
 //!   (head × row-block) partitioning must scale it.  Outputs are
 //!   asserted bitwise-equal across thread counts.
+//! * **telemetry overhead** — prefill with tracing active-but-unsampled
+//!   must stay within 3% of tracing-disabled (DESIGN.md §Telemetry);
+//!   the section embeds the global metrics-registry snapshot.
 //!
 //! A machine-readable `== BENCH json ==` blob with all sections is
 //! printed last; `scripts/bench.sh` persists it into
@@ -237,6 +240,75 @@ fn plan_cache_section(opts: BenchOpts) -> Json {
     ])
 }
 
+/// Telemetry overhead smoke (ISSUE 6 acceptance): prefill with tracing
+/// active-but-unsampled (spans enabled, `sample_every = 0` keeps none)
+/// must be within 3% of the same workload with tracing disabled — the
+/// bound DESIGN.md §Telemetry promises for always-on instrumentation.
+/// Measured A/B/A (off, unsampled, off again) with the *slower* of the
+/// two off runs as baseline, so monotone machine drift across the
+/// section cannot fail the assertion spuriously.  The section's JSON
+/// also embeds the global registry snapshot, which `scripts/bench.sh`
+/// persists into `BENCH_kernel.json`.
+fn telemetry_overhead_section(n: usize, opts: BenchOpts) -> Json {
+    use flashmask::telemetry::trace;
+    let d = 64;
+    let mut rng = Rng::new(13);
+    let q = rand_vec(n * d, &mut rng);
+    let k = rand_vec(n * d, &mut rng);
+    let v = rand_vec(n * d, &mut rng);
+    let mask = builders::causal(n);
+    let cfg = AttnConfig::new(64.min(n), 64.min(n), d);
+    let plan = AttnProblem::new(n, d).mask(&mask).tile(cfg.br, cfg.bc).plan().expect("plan");
+    let qv = QViews::new(&q, 1, n, d).expect("q view");
+    let kvv = KvViews::new(&k, &v, 1, n, d).expect("k/v views");
+    // several prefill calls per timed sample: spans/counters fire a
+    // handful of times per call, so samples are ms-scale and the
+    // per-call overhead is not lost in timer resolution
+    let reps = 8;
+    let body = || {
+        for _ in 0..reps {
+            let _ = CpuBackend.prefill(&plan, qv, kvv).expect("prefill");
+        }
+    };
+    trace::set_enabled(false);
+    let off_a = bench("tel_off_a", opts, body);
+    trace::set_enabled(true);
+    trace::set_sample_every(0); // active but unsampled: every span suppressed
+    let on = bench("tel_unsampled", opts, body);
+    trace::set_enabled(false);
+    let off_b = bench("tel_off_b", opts, body);
+    trace::set_sample_every(1);
+    let off_ms = off_a.median_ms.max(off_b.median_ms);
+    let overhead = on.median_ms / off_ms - 1.0;
+    let mut t = Table::new(vec!["config", "median ms", "overhead"])
+        .title(format!("telemetry overhead: causal prefill x{reps}, n={n}, d={d}"));
+    t.row(vec!["tracing off (a)".into(), format!("{:.3}", off_a.median_ms), "-".into()]);
+    t.row(vec![
+        "active, unsampled".into(),
+        format!("{:.3}", on.median_ms),
+        format!("{:+.1}%", overhead * 100.0),
+    ]);
+    t.row(vec!["tracing off (b)".into(), format!("{:.3}", off_b.median_ms), "-".into()]);
+    t.print();
+    assert!(
+        overhead <= 0.03,
+        "active-but-unsampled telemetry costs {:.1}% over disabled (budget 3%) — \
+         a span or counter crept into a per-tile loop",
+        overhead * 100.0
+    );
+    Json::obj(vec![
+        ("n", Json::Num(n as f64)),
+        ("d", Json::Num(d as f64)),
+        ("reps_per_sample", Json::Num(reps as f64)),
+        ("off_a_ms", Json::Num(off_a.median_ms)),
+        ("unsampled_ms", Json::Num(on.median_ms)),
+        ("off_b_ms", Json::Num(off_b.median_ms)),
+        ("overhead_frac", Json::Num(overhead)),
+        ("budget_frac", Json::Num(0.03)),
+        ("registry", flashmask::telemetry::metrics::global().snapshot()),
+    ])
+}
+
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let n = env_usize("FM_BENCH_N", if smoke { 256 } else { 1024 });
@@ -262,6 +334,11 @@ fn main() {
     // scaling runs are long at n=4096 — time each point a few times only
     let par_opts = BenchOpts { warmup: 1, iters: iters.min(3), max_seconds: 60.0 };
     let (parallel, _) = time_once(|| parallel_scaling(par_n, threads_list, par_opts));
+    println!();
+    let telemetry = telemetry_overhead_section(
+        n,
+        BenchOpts { warmup: 1, iters: iters.max(5), max_seconds: 20.0 },
+    );
 
     println!("== BENCH json ==");
     let blob = Json::obj(vec![
@@ -278,6 +355,7 @@ fn main() {
         ("anchor", anchor),
         ("plan_cache", plan_cache),
         ("parallel", parallel),
+        ("telemetry", telemetry),
     ]);
     println!("{}", blob.to_string_pretty());
 }

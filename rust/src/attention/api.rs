@@ -399,11 +399,14 @@ impl<'m> AttnProblem<'m> {
     /// schedule with its per-tile mask cache, and the census.
     /// This is the cost [`PlanCache`] amortizes across repeated calls.
     pub fn plan(&self) -> Result<ExecutionPlan, AttnError> {
+        let sp = crate::telemetry::trace::span("plan.build");
         let (layout, mask) = self.validate()?;
         let cfg = self.cfg();
         let table = BlockTable::build(mask, cfg.bc);
         let sched = TileSchedule::build(mask, &table, self.n, cfg, self.skip);
         let census = sched.census();
+        crate::telemetry::metrics::global().add("plan.builds", 1);
+        sp.add("tiles", (sched.tr * sched.tc) as u64);
         Ok(ExecutionPlan {
             n: self.n,
             d: self.d,
@@ -747,14 +750,19 @@ impl Backend for CpuBackend {
             let mut slot = plan.packs.lock().unwrap_or_else(|p| p.into_inner());
             std::mem::take(&mut *slot)
         };
-        if packs.len() != layout.kv_heads {
-            packs.clear();
-            packs.resize_with(layout.kv_heads, || gemm::PackedKt::empty(cfg.bc));
-        }
-        for (kh, kt) in packs.iter_mut().enumerate() {
-            kt.repack(kv.k_head(kh), n, d);
+        {
+            let sp = crate::telemetry::trace::span("prefill.pack");
+            if packs.len() != layout.kv_heads {
+                packs.clear();
+                packs.resize_with(layout.kv_heads, || gemm::PackedKt::empty(cfg.bc));
+            }
+            for (kh, kt) in packs.iter_mut().enumerate() {
+                kt.repack(kv.k_head(kh), n, d);
+            }
+            sp.add("kv_heads", layout.kv_heads as u64);
         }
         let kts: &[gemm::PackedKt] = &packs;
+        let sp_tiles = crate::telemetry::trace::span("prefill.tiles");
 
         // one classification pass per KV head; the query group reuses
         // both the classes and the per-tile mask cache
@@ -817,6 +825,10 @@ impl Backend for CpuBackend {
                 outs.push(AttnOutput { o, lse });
             }
         }
+
+        sp_tiles.add("tiles_visited", stats.tiles_visited as u64);
+        drop(sp_tiles);
+        stats.publish();
 
         // hand the buffers back for the next call — unless they are big
         // enough to matter as resident memory: a long-lived PlanCache
@@ -1186,6 +1198,7 @@ pub struct PlanCache {
     order: VecDeque<PlanKey>,
     hits: u64,
     misses: u64,
+    evictions: u64,
 }
 
 impl PlanCache {
@@ -1196,6 +1209,7 @@ impl PlanCache {
             order: VecDeque::new(),
             hits: 0,
             misses: 0,
+            evictions: 0,
         }
     }
 
@@ -1213,6 +1227,10 @@ impl PlanCache {
 
     pub fn misses(&self) -> u64 {
         self.misses
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
     }
 
     /// Hits / lookups, 0 when nothing was looked up.
@@ -1238,6 +1256,7 @@ impl PlanCache {
             let mask = problem.mask.expect("validated problem has a mask");
             if plan.same_mask(mask) {
                 self.hits += 1;
+                crate::telemetry::metrics::global().add("plan.cache.hits", 1);
                 return Ok(Arc::clone(plan));
             }
             // hash collision (the sampled key aliased two masks): the
@@ -1247,11 +1266,14 @@ impl PlanCache {
             collided = true;
         }
         self.misses += 1;
+        crate::telemetry::metrics::global().add("plan.cache.misses", 1);
         let plan = Arc::new(problem.plan()?);
         if !collided {
             if self.map.len() >= self.cap {
                 if let Some(old) = self.order.pop_front() {
                     self.map.remove(&old);
+                    self.evictions += 1;
+                    crate::telemetry::metrics::global().add("plan.cache.evictions", 1);
                 }
             }
             self.order.push_back(key.clone());
@@ -1440,10 +1462,12 @@ mod tests {
             cache.get_or_build(&AttnProblem::new(n, 4).mask(m)).unwrap();
         }
         assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 2);
         // the two oldest were evicted; re-requesting them misses
         let before = cache.misses();
         cache.get_or_build(&AttnProblem::new(n, 4).mask(&masks[0])).unwrap();
         assert_eq!(cache.misses(), before + 1);
+        assert_eq!(cache.evictions(), 3);
     }
 
     #[test]

@@ -134,6 +134,7 @@ impl TileSchedule {
         cfg: AttnConfig,
         skip: bool,
     ) -> TileSchedule {
+        let sp = crate::telemetry::trace::span("plan.classify");
         let (br, bc) = (cfg.br, cfg.bc);
         let (tr, tc) = (n.div_ceil(br), n.div_ceil(bc));
         let mut classes = Vec::with_capacity(tr * tc);
@@ -181,6 +182,7 @@ impl TileSchedule {
             ranges.push((lo, hi));
             executed.push(exec);
         }
+        sp.add("mask_evals", build_mask_evals);
         TileSchedule { tr, tc, classes, ranges, executed, masked, tile_off, build_mask_evals }
     }
 

@@ -168,6 +168,22 @@ impl TileStats {
         self.mask_evals += other.mask_evals;
         self.mask_cache_hits += other.mask_cache_hits;
     }
+
+    /// Accumulate this census into the global telemetry registry under
+    /// the `tile.*` names (DESIGN.md §Telemetry).  Called once per
+    /// prefill execution, not per tile, so the cost is a handful of
+    /// counter adds.
+    pub fn publish(&self) {
+        let r = crate::telemetry::metrics::global();
+        r.add("tile.total", self.tiles_total as u64);
+        r.add("tile.skipped", self.tiles_skipped as u64);
+        r.add("tile.partial", self.tiles_partial as u64);
+        r.add("tile.unmasked", self.tiles_unmasked as u64);
+        r.add("tile.visited", self.tiles_visited as u64);
+        r.add("tile.macs", self.macs);
+        r.add("tile.mask_evals", self.mask_evals);
+        r.add("tile.mask_cache_hits", self.mask_cache_hits);
+    }
 }
 
 /// Gradients from a backward pass.

@@ -1,30 +1,60 @@
 //! Training metrics: loss tracking, throughput, CSV export.
+//!
+//! Step timing is routed through a telemetry [`Histogram`] (local to
+//! the run for report percentiles, mirrored into the global registry
+//! as `train.step_ms`) rather than a bare `Instant` subtraction, so
+//! `flashmask metrics` surfaces training latency alongside the
+//! kernel/decode/serve metrics (DESIGN.md §Telemetry).
 
+use crate::telemetry::Histogram;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Rolling training metrics.
 pub struct Metrics {
-    start: Instant,
+    /// Instant of the previous `record()` (or construction) — the delta
+    /// to the next `record()` is one step-time histogram sample.
+    last: Instant,
+    /// Wall time accumulated across recorded steps, in seconds; 0 on
+    /// the empty state (the old `start.elapsed()` kept ticking while
+    /// idle, skewing throughput).
+    elapsed: f64,
     pub steps: usize,
     pub tokens: usize,
     pub losses: Vec<f32>,
     ema: Option<f64>,
     ema_alpha: f64,
+    /// This run's step-time distribution (for `step_p50_ms()` etc.).
+    step_hist: Histogram,
+    /// Global-registry mirror, resolved once at construction.
+    g_step: Arc<Histogram>,
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
         Metrics {
-            start: Instant::now(),
+            last: Instant::now(),
+            elapsed: 0.0,
             steps: 0,
             tokens: 0,
             losses: Vec::new(),
             ema: None,
             ema_alpha: 0.1,
+            step_hist: Histogram::new(),
+            g_step: crate::telemetry::metrics::global().histogram("train.step_ms"),
         }
     }
 
     pub fn record(&mut self, loss: f32, tokens: usize) {
+        let now = Instant::now();
+        let step_ms = (now - self.last).as_secs_f64() * 1e3;
+        self.last = now;
+        self.elapsed += step_ms / 1e3;
+        self.step_hist.record_ms(step_ms);
+        self.g_step.record_ms(step_ms);
+        let reg = crate::telemetry::metrics::global();
+        reg.add("train.steps", 1);
+        reg.add("train.tokens", tokens as u64);
         self.steps += 1;
         self.tokens += tokens;
         self.losses.push(loss);
@@ -35,16 +65,29 @@ impl Metrics {
         });
     }
 
+    /// Exponential moving average of the loss; 0 before any step (the
+    /// old behaviour returned NaN, which poisoned downstream reports).
     pub fn ema_loss(&self) -> f64 {
-        self.ema.unwrap_or(f64::NAN)
+        self.ema.unwrap_or(0.0)
     }
 
+    /// Wall time attributed to recorded steps; 0 on the empty state.
     pub fn elapsed_s(&self) -> f64 {
-        self.start.elapsed().as_secs_f64()
+        self.elapsed
     }
 
+    /// Token throughput over recorded steps; 0 before any step instead
+    /// of a near-zero-division artifact.
     pub fn tokens_per_s(&self) -> f64 {
-        self.tokens as f64 / self.elapsed_s().max(1e-9)
+        if self.steps == 0 {
+            return 0.0;
+        }
+        self.tokens as f64 / self.elapsed.max(1e-9)
+    }
+
+    /// Step-time percentile in ms from the telemetry histogram.
+    pub fn step_quantile_ms(&self, q: f64) -> f64 {
+        self.step_hist.quantile_ms(q)
     }
 
     pub fn last_loss(&self) -> Option<f32> {
@@ -88,6 +131,31 @@ mod tests {
     }
 
     #[test]
+    fn empty_state_is_safe() {
+        // satellite: no NaN / divide-by-near-zero before the first step
+        let m = Metrics::default();
+        assert_eq!(m.steps, 0);
+        assert_eq!(m.ema_loss(), 0.0);
+        assert_eq!(m.tokens_per_s(), 0.0);
+        assert_eq!(m.elapsed_s(), 0.0);
+        assert_eq!(m.step_quantile_ms(0.5), 0.0);
+        assert_eq!(m.last_loss(), None);
+    }
+
+    #[test]
+    fn step_timing_feeds_histogram() {
+        let mut m = Metrics::new();
+        m.record(1.0, 10);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        m.record(0.9, 10);
+        assert_eq!(m.step_hist.count(), 2);
+        // the sleep makes the max bucket at least ~2ms; quantile(1.0)
+        // returns the bucket upper bound, so it must be >= the sample
+        assert!(m.step_quantile_ms(1.0) >= 2.0);
+        assert!(m.elapsed_s() > 0.0);
+    }
+
+    #[test]
     fn csv_format() {
         let mut m = Metrics::new();
         m.record(1.5, 10);
@@ -102,6 +170,7 @@ mod tests {
     #[test]
     fn throughput_positive() {
         let mut m = Metrics::new();
+        std::thread::sleep(std::time::Duration::from_millis(1));
         m.record(1.0, 1000);
         assert!(m.tokens_per_s() > 0.0);
     }

@@ -103,6 +103,8 @@ impl Trainer {
     /// train-step artifact.  The manifest-level attention geometry was
     /// validated through `attention::api` once in [`Trainer::new`].
     pub fn step(&mut self, batch: &Batch) -> Result<f32> {
+        let sp = crate::telemetry::trace::span("train.step");
+        sp.add("tokens", (batch.batch * batch.n) as u64);
         for bi in 0..batch.batch {
             let r = bi * batch.n..(bi + 1) * batch.n;
             FlashMask::validate_parts(
@@ -169,13 +171,16 @@ impl Trainer {
             let batch = batcher.next_batch();
             let loss = self.step(&batch)?;
             if !self.opts.quiet && (s + 1) % self.opts.log_every.max(1) == 0 {
-                println!(
-                    "step {:>5}  loss {:>8.4}  ema {:>8.4}  {:>9.0} tok/s  rho={:.2}",
-                    s + 1,
-                    loss,
-                    self.metrics.ema_loss(),
-                    self.metrics.tokens_per_s(),
-                    batch.sparsity,
+                crate::telemetry::log::info(
+                    "train",
+                    format!(
+                        "step {:>5}  loss {:>8.4}  ema {:>8.4}  {:>9.0} tok/s  rho={:.2}",
+                        s + 1,
+                        loss,
+                        self.metrics.ema_loss(),
+                        self.metrics.tokens_per_s(),
+                        batch.sparsity,
+                    ),
                 );
             }
         }

@@ -22,8 +22,10 @@ use super::step::DecodeStats;
 use crate::attention::api::{Backend, CpuBackend, DecodeStep, VerifyStep};
 use crate::attention::HeadLayout;
 use crate::mask::{builders, FlashMask, IncrementalMaskView};
+use crate::telemetry::{Gauge, Histogram};
 use anyhow::{bail, ensure, Result};
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Instant;
 
 /// One decode request: teacher-forced Q/K/V streams for the whole
@@ -147,6 +149,10 @@ pub struct DecodeSession {
     backend: CpuBackend,
     pub stats: DecodeStats,
     pub admitted: Instant,
+    /// When the first *generated* row completed (TTFT's right edge).
+    /// Reset with the session on preemption, so after a re-decode it
+    /// reflects the successful run — consistent with `decode_ms`.
+    first_token: Option<Instant>,
 }
 
 impl DecodeSession {
@@ -172,6 +178,7 @@ impl DecodeSession {
             backend: CpuBackend,
             stats: DecodeStats { plans_built: 1, ..DecodeStats::default() },
             admitted: Instant::now(),
+            first_token: None,
         }
     }
 
@@ -282,6 +289,9 @@ impl DecodeSession {
             }
         }
         self.pos += 1;
+        if self.pos > self.req.prompt_len && self.first_token.is_none() {
+            self.first_token = Some(Instant::now());
+        }
         if self.pos == self.req.n {
             StepOutcome::Finished
         } else {
@@ -432,6 +442,9 @@ impl DecodeSession {
         }
         self.stats.accepted += path.len() as u64;
         self.pos += path.len();
+        if self.pos > self.req.prompt_len && self.first_token.is_none() {
+            self.first_token = Some(Instant::now());
+        }
         if self.pos == self.req.n {
             StepOutcome::Finished
         } else {
@@ -463,8 +476,16 @@ impl DecodeSession {
         for c in &mut self.caches {
             c.release(pool, false);
         }
-        let decode_ms = self.admitted.elapsed().as_secs_f64() * 1e3;
+        let now = Instant::now();
+        let decode_ms = (now - self.admitted).as_secs_f64() * 1e3;
         let queue_ms = (self.admitted - self.req.arrived).as_secs_f64() * 1e3;
+        // a finished session generated >= 1 token, so first_token is
+        // set; fall back to `now` defensively rather than panic
+        let first = self.first_token.unwrap_or(now);
+        let ttft_ms = (first - self.req.arrived).as_secs_f64() * 1e3;
+        let gen = self.req.gen_len();
+        let itl_ms =
+            if gen > 1 { (now - first).as_secs_f64() * 1e3 / (gen - 1) as f64 } else { 0.0 };
         let mut o = Vec::with_capacity(self.req.layout.q_heads * self.req.gen_len() * self.req.d);
         for h in self.out.drain(..) {
             o.extend(h);
@@ -478,6 +499,8 @@ impl DecodeSession {
             o,
             queue_ms,
             decode_ms,
+            ttft_ms,
+            itl_ms,
             stats: self.stats,
         }
     }
@@ -499,6 +522,12 @@ pub struct DecodeResponse {
     pub queue_ms: f64,
     /// Final (successful) admission → retirement.
     pub decode_ms: f64,
+    /// Arrival → first generated token (queueing and prompt prefill
+    /// included) — the latency a streaming client perceives.
+    pub ttft_ms: f64,
+    /// Mean gap between consecutive generated tokens after the first;
+    /// 0 when only one token was generated.
+    pub itl_ms: f64,
     pub stats: DecodeStats,
 }
 
@@ -566,6 +595,15 @@ pub struct BatcherReport {
     /// its incremental mask view / page schedule once and reused it for
     /// every decoded token — the bench_decode plan-reuse column.
     pub plans_built: u64,
+    /// p50 time-to-first-token across retired sequences, from the
+    /// batcher's telemetry histogram (log2 buckets, so quantiles are
+    /// upper bounds within one power of two — DESIGN.md §Telemetry).
+    pub ttft_p50_ms: f64,
+    pub ttft_p99_ms: f64,
+    /// p50 inter-token latency (mean gap per sequence; sequences that
+    /// generated a single token contribute no sample).
+    pub itl_p50_ms: f64,
+    pub itl_p99_ms: f64,
 }
 
 impl BatcherReport {
@@ -590,10 +628,19 @@ pub struct ContinuousBatcher {
     preemptions: u64,
     decoded_tokens: u64,
     started: Instant,
+    /// This run's latency distributions (the report's percentiles)…
+    ttft: Histogram,
+    itl: Histogram,
+    /// …mirrored into the process-wide registry (handles resolved once
+    /// so the retire path never takes the registry lock).
+    g_ttft: Arc<Histogram>,
+    g_itl: Arc<Histogram>,
+    g_peak: Arc<Gauge>,
 }
 
 impl ContinuousBatcher {
     pub fn new(cfg: BatcherConfig) -> ContinuousBatcher {
+        let reg = crate::telemetry::metrics::global();
         ContinuousBatcher {
             cfg,
             pool: PagePool::new(cfg.page_size, cfg.d, cfg.max_pages),
@@ -604,6 +651,11 @@ impl ContinuousBatcher {
             preemptions: 0,
             decoded_tokens: 0,
             started: Instant::now(),
+            ttft: Histogram::new(),
+            itl: Histogram::new(),
+            g_ttft: reg.histogram("decode.ttft_ms"),
+            g_itl: reg.histogram("decode.itl_ms"),
+            g_peak: reg.gauge("decode.peak_pages"),
         }
     }
 
@@ -719,7 +771,16 @@ impl ContinuousBatcher {
                     self.decoded_tokens += (self.active[i].pos - before) as u64;
                     let s = self.active.remove(i);
                     self.agg.merge(&s.stats);
-                    self.finished.push(s.retire(&mut self.pool));
+                    s.stats.publish();
+                    let resp = s.retire(&mut self.pool);
+                    self.ttft.record_ms(resp.ttft_ms);
+                    self.g_ttft.record_ms(resp.ttft_ms);
+                    if resp.n - resp.prompt_len > 1 {
+                        self.itl.record_ms(resp.itl_ms);
+                        self.g_itl.record_ms(resp.itl_ms);
+                    }
+                    self.g_peak.set_max(self.pool.stats.peak_in_use as u64);
+                    self.finished.push(resp);
                     // don't advance: the next session shifted into slot i
                 }
             }
@@ -761,6 +822,10 @@ impl ContinuousBatcher {
             accepted_tokens: self.agg.accepted,
             spec_fallbacks: self.agg.fallback_steps,
             plans_built: self.agg.plans_built,
+            ttft_p50_ms: self.ttft.quantile_ms(0.50),
+            ttft_p99_ms: self.ttft.quantile_ms(0.99),
+            itl_p50_ms: self.itl.quantile_ms(0.50),
+            itl_p99_ms: self.itl.quantile_ms(0.99),
         }
     }
 }
@@ -860,6 +925,16 @@ mod tests {
         // token — the schedule is never rebuilt mid-session
         assert_eq!(report.plans_built, 3);
         assert!(report.tokens > report.plans_built);
+        // latency histograms: every sequence contributes a TTFT sample,
+        // multi-token sequences an ITL sample, and log2-bucket quantiles
+        // are monotone in q
+        assert!(report.ttft_p50_ms > 0.0);
+        assert!(report.ttft_p99_ms >= report.ttft_p50_ms);
+        assert!(report.itl_p99_ms >= report.itl_p50_ms);
+        for resp in b.finished.iter() {
+            assert!(resp.ttft_ms > 0.0 && resp.ttft_ms <= resp.queue_ms + resp.decode_ms + 1.0);
+            assert!(resp.itl_ms >= 0.0);
+        }
         let mut done = b.take_finished();
         done.sort_by_key(|r| r.id);
         for (req, resp) in reqs.iter().zip(&done) {

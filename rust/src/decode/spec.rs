@@ -526,6 +526,8 @@ pub(crate) fn verify_rows_group_impl(
     stats: &mut DecodeStats,
     scratch: &mut Vec<f32>,
 ) -> Vec<f32> {
+    let sp = crate::telemetry::trace::span("decode.verify");
+    sp.add("drafted", tree.len() as u64);
     let d = pool.d();
     let ps = pool.page_size();
     let kd = tree.len();

@@ -96,6 +96,26 @@ impl DecodeStats {
             self.accepted as f64 / self.drafted as f64
         }
     }
+
+    /// Accumulate these counters into the global telemetry registry
+    /// under the `decode.*` names (DESIGN.md §Telemetry).  Called once
+    /// per retired sequence by the continuous batcher — never from the
+    /// per-token hot loop.
+    pub fn publish(&self) {
+        let r = crate::telemetry::metrics::global();
+        r.add("decode.steps", self.steps);
+        r.add("decode.pages_total", self.pages_total);
+        r.add("decode.pages_skipped", self.pages_skipped);
+        r.add("decode.pages_partial", self.pages_partial);
+        r.add("decode.pages_unmasked", self.pages_unmasked);
+        r.add("decode.macs", self.macs);
+        r.add("decode.mask_evals", self.mask_evals);
+        r.add("decode.spec_passes", self.spec_passes);
+        r.add("decode.drafted", self.drafted);
+        r.add("decode.accepted", self.accepted);
+        r.add("decode.fallback_steps", self.fallback_steps);
+        r.add("decode.plans_built", self.plans_built);
+    }
 }
 
 /// Attention for decode row `t` (already appended: `cache.len() == t+1`)
@@ -210,6 +230,7 @@ pub(crate) fn decode_step_group_impl(
     stats: &mut DecodeStats,
     scratch: &mut Vec<f32>,
 ) -> Vec<f32> {
+    let _sp = crate::telemetry::trace::span("decode.step");
     let d = pool.d();
     let ps = pool.page_size();
     debug_assert!(group >= 1);

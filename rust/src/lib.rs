@@ -23,6 +23,9 @@
 //!   by `python/compile/aot.py` (python never runs at request time).
 //! * [`coordinator`] — the training driver: document packing → FlashMask
 //!   vectors → PJRT train step → metrics.
+//! * [`telemetry`] — unified observability: metrics registry with
+//!   latency histograms, request-scoped tracing spans and the leveled
+//!   logger (DESIGN.md §Telemetry).
 //! * [`util`] — std-only substitutes for crates unavailable in this
 //!   offline image (CLI, JSON, PRNG, bench harness, mini-proptest).
 
@@ -34,5 +37,6 @@ pub mod mask;
 pub mod perf;
 pub mod runtime;
 pub mod server;
+pub mod telemetry;
 pub mod util;
 pub mod workload;

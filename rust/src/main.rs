@@ -15,6 +15,7 @@
 //! flashmask decode --requests 8           # paged-KV continuous batching
 //! flashmask decode --speculate 4          # + tree-mask speculative decode
 //! flashmask decode --heads 8 --kv-heads 2 # GQA: group-shared KV pages
+//! flashmask metrics                       # telemetry snapshot (JSON)
 //! ```
 
 use anyhow::{anyhow, Result};
@@ -63,6 +64,7 @@ fn main() -> Result<()> {
         "e2e-model" => reports::e2e_report(11),
         "gen-data" => cmd_gen_data(&args)?,
         "decode" => cmd_decode(&args)?,
+        "metrics" => cmd_metrics(&args)?,
         "help" | _ => {
             println!("{}", HELP);
             return Ok(());
@@ -100,6 +102,11 @@ subcommands:
                    --accept-rate A, default 1.0, for throughput studies);
                    --adaptive shrinks/grows the draft budget from a
                    rolling acceptance window (dynamic k)
+  metrics          run a small prefill+decode workload and dump the
+                   telemetry registry snapshot + span tree as JSON
+                   (--n N --d D --requests R --seed S; --no-trace
+                   disables span collection; --sample-every K keeps
+                   every K-th request trace)
 common: --artifacts DIR (default ./artifacts)";
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -315,9 +322,75 @@ fn cmd_decode(args: &Args) -> Result<()> {
     let rep = engine.report();
     println!("decode p50    : {:.2} ms", rep.p50_compute_ms);
     println!("decode p99    : {:.2} ms", rep.p99_compute_ms);
+    println!("TTFT p50/p99  : {:.2} / {:.2} ms", rep.p50_ttft_ms, rep.p99_ttft_ms);
+    println!("ITL  p50/p99  : {:.2} / {:.2} ms", rep.p50_itl_ms, rep.p99_itl_ms);
     if rep.fallbacks > 0 {
         println!("fallbacks     : {} (backend lacked a capability; see log)", rep.fallbacks);
     }
+    Ok(())
+}
+
+/// `flashmask metrics`: exercise the prefill + decode serving paths on
+/// a small synthetic workload, then dump the global telemetry registry
+/// (tile, plan-cache, decode and serve metrics from one registry) plus
+/// the collected span trees as a JSON document on stdout.
+fn cmd_metrics(args: &Args) -> Result<()> {
+    use flashmask::decode::{BatcherConfig, SpecPolicy};
+    use flashmask::mask::builders;
+    use flashmask::server::{EngineKind, Request, RequestQueue, Scheduler, SchedulerConfig, ServeEngine};
+    use flashmask::telemetry::trace;
+    use flashmask::util::rng::Rng;
+
+    let n = args.get_usize("n", 256).map_err(|e| anyhow!(e))?;
+    let d = args.get_usize("d", 32).map_err(|e| anyhow!(e))?;
+    let n_requests = args.get_usize("requests", 4).map_err(|e| anyhow!(e))?;
+    let seed = args.get_u64("seed", 7).map_err(|e| anyhow!(e))?;
+    let sample_every = args.get_u64("sample-every", 1).map_err(|e| anyhow!(e))?;
+    anyhow::ensure!(n >= 32, "--n must be >= 32 (got {n})");
+    anyhow::ensure!(n_requests >= 1, "--requests must be >= 1");
+    if !args.flag("no-trace") {
+        trace::set_enabled(true);
+        trace::set_sample_every(sample_every.max(1));
+    }
+
+    let mut rng = Rng::new(seed);
+    let mut mk = |len: usize| (0..len).map(|_| rng.normal_f32() * 0.5).collect::<Vec<f32>>();
+    // prefill: repeat one mask so the plan cache records hits as well
+    // as misses, plus one distinct mask for a second compile
+    let mut queue = RequestQueue::new();
+    for i in 0..n_requests {
+        let mask = if i == 0 {
+            builders::sliding_window(n, (n / 8).max(1))
+        } else {
+            builders::causal(n)
+        };
+        queue.push(Request::new(0, 1, n, d, mk(n * d), mk(n * d), mk(n * d), mask))?;
+    }
+    let scheduler = Scheduler::new(SchedulerConfig { max_batch: n_requests, max_wait_ms: 0.0 });
+    let mut engine = ServeEngine::new(EngineKind::Cpu { threads: 1 }, (16, 16));
+    if let Some(plan) = scheduler.next_batch(&mut queue, std::time::Instant::now()) {
+        engine.execute(plan)?;
+    }
+    // decode: a couple of short sequences through the batcher
+    let decode_reqs: Vec<_> = (0..2)
+        .map(|_| {
+            let mask = builders::causal(n);
+            Request::new(0, 1, n, d, mk(n * d), mk(n * d), mk(n * d), mask).into_decode(n / 2)
+        })
+        .collect();
+    engine.execute_decode(
+        decode_reqs,
+        BatcherConfig {
+            page_size: 16,
+            d,
+            max_pages: 4096,
+            max_active: 2,
+            skip: true,
+            spec: SpecPolicy::Off,
+        },
+    )?;
+
+    println!("{}", reports::telemetry_report().to_string_pretty());
     Ok(())
 }
 

@@ -439,6 +439,23 @@ pub fn e2e_report(seed: u64) {
     t.print();
 }
 
+/// `flashmask metrics` payload: the process-wide telemetry snapshot
+/// (counters, gauges, latency histograms) plus any collected trace
+/// roots, as one JSON document (DESIGN.md §Telemetry).
+///
+/// Unlike the other reports this does not *run* anything — it reads
+/// whatever the preceding workload left in the global registry, so
+/// callers populate it first (the CLI runs a small prefill+decode
+/// workload before dumping).
+pub fn telemetry_report() -> Json {
+    let snap = crate::telemetry::metrics::global().snapshot();
+    let roots = crate::telemetry::trace::take_roots();
+    Json::obj(vec![
+        ("metrics", snap),
+        ("spans", crate::telemetry::trace::roots_to_json(&roots)),
+    ])
+}
+
 /// A synthetic causal-document mask hitting a target block sparsity
 /// (helper for the throughput model).
 fn synth_mask(n: usize, target_rho: f64) -> FlashMask {

@@ -15,6 +15,7 @@ use crate::attention::api::{
 };
 use crate::decode::{BatcherConfig, BatcherReport, ContinuousBatcher, DecodeRequest};
 use crate::runtime::Executable;
+use crate::telemetry::{log, metrics, trace, Histogram};
 use anyhow::Result;
 use std::time::Instant;
 
@@ -39,6 +40,11 @@ pub struct ServeEngine {
     started: Instant,
     tokens: usize,
     fallbacks: u64,
+    /// This engine's decode-latency distributions (the report's TTFT /
+    /// inter-token percentiles); every sample is mirrored into the
+    /// global registry under `serve.ttft_ms` / `serve.itl_ms`.
+    ttft: Histogram,
+    itl: Histogram,
 }
 
 /// Aggregate serving statistics (the numbers a deployment dashboards).
@@ -57,6 +63,16 @@ pub struct ServeReport {
     pub plan_hits: u64,
     /// Plan-cache lookups that compiled a fresh plan.
     pub plan_misses: u64,
+    /// Decode-path time-to-first-token percentiles from the engine's
+    /// telemetry histogram (0 when no decode ran).  Log2 buckets, so
+    /// values are upper bounds within one power of two (DESIGN.md
+    /// §Telemetry).
+    pub p50_ttft_ms: f64,
+    pub p99_ttft_ms: f64,
+    /// Decode-path inter-token-latency percentiles (per-sequence mean
+    /// gap; 0 when no multi-token sequence retired).
+    pub p50_itl_ms: f64,
+    pub p99_itl_ms: f64,
 }
 
 impl ServeEngine {
@@ -87,6 +103,8 @@ impl ServeEngine {
             started: Instant::now(),
             tokens: 0,
             fallbacks: 0,
+            ttft: Histogram::new(),
+            itl: Histogram::new(),
         }
     }
 
@@ -97,9 +115,13 @@ impl ServeEngine {
 
     fn note_fallback(&mut self, missing: Capability) {
         self.fallbacks += 1;
-        eprintln!(
-            "serve: backend '{}' lacks capability '{missing}'; falling back to the CPU path",
-            self.backend.name()
+        metrics::global().add("serve.fallbacks", 1);
+        log::warn(
+            "serve",
+            format!(
+                "backend '{}' lacks capability '{missing}'; falling back to the CPU path",
+                self.backend.name()
+            ),
         );
     }
 
@@ -107,15 +129,24 @@ impl ServeEngine {
     pub fn execute(&mut self, plan: BatchPlan) -> Result<()> {
         let now = Instant::now();
         let caps = self.backend.capabilities();
+        let reg = metrics::global();
         for req in plan.requests {
+            let sp = trace::span("serve.request");
+            sp.add("tokens", req.n as u64);
             let t0 = Instant::now();
             let o = self.run_prefill(&req, caps)?;
             let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
+            drop(sp);
+            let queue_ms = now.duration_since(req.arrived).as_secs_f64() * 1e3;
+            reg.add("serve.requests", 1);
+            reg.add("serve.tokens", req.n as u64);
+            reg.observe_ms("serve.compute_ms", compute_ms);
+            reg.observe_ms("serve.queue_ms", queue_ms);
             self.tokens += req.n;
             self.completed.push(Response {
                 id: req.id,
                 o,
-                queue_ms: now.duration_since(req.arrived).as_secs_f64() * 1e3,
+                queue_ms,
                 compute_ms,
                 sparsity: req.mask.block_sparsity(self.tile.0, self.tile.1),
             });
@@ -198,12 +229,24 @@ impl ServeEngine {
         if !self.backend.capabilities().decode {
             self.note_fallback(Capability::DecodeStep);
         }
+        let sp = trace::span("serve.decode_batch");
+        sp.add("sequences", reqs.len() as u64);
         let mut batcher = ContinuousBatcher::new(cfg);
         for r in reqs {
             batcher.submit(r)?;
         }
         let report = batcher.run()?;
+        drop(sp);
+        let reg = metrics::global();
         for resp in batcher.take_finished() {
+            self.ttft.record_ms(resp.ttft_ms);
+            reg.observe_ms("serve.ttft_ms", resp.ttft_ms);
+            if resp.n - resp.prompt_len > 1 {
+                self.itl.record_ms(resp.itl_ms);
+                reg.observe_ms("serve.itl_ms", resp.itl_ms);
+            }
+            reg.add("serve.requests", 1);
+            reg.add("serve.tokens", (resp.n - resp.prompt_len) as u64);
             self.tokens += resp.n - resp.prompt_len;
             self.completed.push(Response {
                 id: resp.id,
@@ -231,6 +274,10 @@ impl ServeEngine {
             fallbacks: self.fallbacks,
             plan_hits: self.plans.hits(),
             plan_misses: self.plans.misses(),
+            p50_ttft_ms: self.ttft.quantile_ms(0.50),
+            p99_ttft_ms: self.ttft.quantile_ms(0.99),
+            p50_itl_ms: self.itl.quantile_ms(0.50),
+            p99_itl_ms: self.itl.quantile_ms(0.99),
         }
     }
 }
@@ -394,6 +441,36 @@ mod tests {
         )
         .unwrap();
         assert_eq!(cpu.report().fallbacks, 0);
+    }
+
+    #[test]
+    fn fallback_warning_is_logged() {
+        // satellite: the old eprintln! fallback warning now goes through
+        // telemetry::log, so tests can capture and assert it
+        let cap = crate::telemetry::log::capture();
+        let (n, heads, d) = (32, 1, 8);
+        let req = rand_req(n, heads, d, 11);
+        let mut q = RequestQueue::new();
+        q.push(req).unwrap();
+        let s = Scheduler::new(SchedulerConfig { max_batch: 1, max_wait_ms: 0.0 });
+        let mut eng = ServeEngine::with_backend(Box::new(NullBackend), 1, (16, 16));
+        let plan = s.next_batch(&mut q, std::time::Instant::now()).unwrap();
+        eng.execute(plan).unwrap();
+        let records = cap.take();
+        let warning = records
+            .iter()
+            .find(|r| r.target == "serve" && r.level == crate::telemetry::log::Level::Warn)
+            .expect("fallback must emit a serve warning");
+        assert!(
+            warning.msg.contains("falling back to the CPU path"),
+            "unexpected fallback message: {}",
+            warning.msg
+        );
+        assert!(
+            warning.msg.contains("'null'"),
+            "warning must name the incapable backend: {}",
+            warning.msg
+        );
     }
 
     /// GQA request plus its MHA twin (same Q, KV replicated per group).

@@ -1,0 +1,164 @@
+//! Leveled structured logger (DESIGN.md §Telemetry).
+//!
+//! Library code must not call `eprintln!`/`println!` directly — the
+//! `scripts/verify.sh` grep gate enforces it (reports/CLI/table output
+//! is exempt).  Instead, call [`debug`]/[`info`]/[`warn`]/[`error`]
+//! with a `target` (the emitting subsystem, e.g. `"serve"`) and a
+//! message.  Records below [`set_min_level`] (default `Info`) are
+//! dropped; the rest go to stderr as `[LEVEL] target: message` —
+//! unless a test holds a [`capture`] guard, in which case they are
+//! buffered for assertion instead.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+/// Severity, ordered `Debug < Info < Warn < Error`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+impl std::fmt::Display for Level {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO",
+            Level::Warn => "WARN",
+            Level::Error => "ERROR",
+        })
+    }
+}
+
+/// One emitted log line.
+#[derive(Clone, Debug)]
+pub struct LogRecord {
+    pub level: Level,
+    pub target: &'static str,
+    pub msg: String,
+}
+
+static MIN_LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static CAPTURE: Mutex<Option<Vec<LogRecord>>> = Mutex::new(None);
+// serializes concurrent `capture()` holders (parallel tests)
+static CAPTURE_SERIAL: Mutex<()> = Mutex::new(());
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poison| poison.into_inner())
+}
+
+/// Drop records below `level` (default `Info`).
+pub fn set_min_level(level: Level) {
+    MIN_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn min_level() -> Level {
+    match MIN_LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Debug,
+        1 => Level::Info,
+        2 => Level::Warn,
+        _ => Level::Error,
+    }
+}
+
+/// Emit a record (prefer the level helpers below).
+pub fn log(level: Level, target: &'static str, msg: String) {
+    if (level as u8) < MIN_LEVEL.load(Ordering::Relaxed) {
+        return;
+    }
+    let mut cap = lock(&CAPTURE);
+    if let Some(buf) = cap.as_mut() {
+        buf.push(LogRecord { level, target, msg });
+        return;
+    }
+    drop(cap);
+    eprintln!("[{level}] {target}: {msg}");
+}
+
+pub fn debug(target: &'static str, msg: impl Into<String>) {
+    log(Level::Debug, target, msg.into());
+}
+
+pub fn info(target: &'static str, msg: impl Into<String>) {
+    log(Level::Info, target, msg.into());
+}
+
+pub fn warn(target: &'static str, msg: impl Into<String>) {
+    log(Level::Warn, target, msg.into());
+}
+
+pub fn error(target: &'static str, msg: impl Into<String>) {
+    log(Level::Error, target, msg.into());
+}
+
+/// RAII capture guard: while alive, records are buffered instead of
+/// written to stderr.  Guards serialize across threads, so parallel
+/// tests block rather than corrupt each other's buffers — but any
+/// thread's records land in the active buffer, so assert with
+/// `any`-style matching, not exact equality.
+pub struct Capture {
+    _serial: MutexGuard<'static, ()>,
+}
+
+pub fn capture() -> Capture {
+    let serial = lock(&CAPTURE_SERIAL);
+    *lock(&CAPTURE) = Some(Vec::new());
+    Capture { _serial: serial }
+}
+
+impl Capture {
+    /// Drain everything captured so far.
+    pub fn take(&self) -> Vec<LogRecord> {
+        let mut cap = lock(&CAPTURE);
+        match cap.as_mut() {
+            Some(buf) => std::mem::take(buf),
+            None => Vec::new(),
+        }
+    }
+}
+
+impl Drop for Capture {
+    fn drop(&mut self) {
+        *lock(&CAPTURE) = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capture_buffers_and_level_filters() {
+        let cap = capture();
+        debug("t", "below min level, dropped");
+        warn("t", format!("warn {}", 7));
+        error("t", "boom");
+        let recs = cap.take();
+        assert!(recs.iter().any(|r| r.level == Level::Warn && r.msg == "warn 7"));
+        assert!(recs.iter().any(|r| r.level == Level::Error && r.target == "t"));
+        assert!(!recs.iter().any(|r| r.level == Level::Debug && r.target == "t"));
+        // drained — a second take starts empty of our records
+        assert!(!cap.take().iter().any(|r| r.target == "t"));
+    }
+
+    #[test]
+    fn min_level_is_adjustable() {
+        let cap = capture();
+        set_min_level(Level::Debug);
+        debug("t2", "now visible");
+        set_min_level(Level::Info);
+        debug("t2", "hidden again");
+        let recs = cap.take();
+        assert_eq!(recs.iter().filter(|r| r.target == "t2").count(), 1);
+    }
+
+    #[test]
+    fn level_ordering_and_display() {
+        assert!(Level::Debug < Level::Info);
+        assert!(Level::Warn < Level::Error);
+        assert_eq!(Level::Warn.to_string(), "WARN");
+    }
+}

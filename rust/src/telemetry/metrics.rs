@@ -1,0 +1,509 @@
+//! Metrics registry: named atomic counters, gauges and log2-bucket
+//! latency histograms (DESIGN.md §Telemetry).
+//!
+//! Everything here is pure `std` and lock-light: a metric handle is an
+//! `Arc` around atomics, so the registry `Mutex` is only taken on the
+//! first lookup of a name (call sites resolve handles once and then
+//! update through the `Arc`).  Histograms bucket by `log2(value)` —
+//! recording is a `leading_zeros` plus one atomic add, and quantiles
+//! are exact *counts* walked over the cumulative bucket distribution,
+//! so `quantile(q)` is within one power-of-two bucket of the true
+//! sample quantile (asserted by the property tests below).
+//!
+//! Naming scheme (dotted, lowercase): `<layer>.<metric>` — e.g.
+//! `tile.macs`, `plan.cache.hits`, `decode.ttft_ms`, `serve.requests`,
+//! `train.step_ms`.  Histogram names carry a `_ms` suffix; samples are
+//! stored in integer microseconds and converted back at the edges.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+/// Number of histogram buckets: bucket 0 holds the value 0 and bucket
+/// `i >= 1` holds values in `[2^(i-1), 2^i - 1]`, so 65 buckets cover
+/// the full `u64` range.
+pub const HIST_BUCKETS: usize = 65;
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    pub fn add(&self, delta: u64) {
+        self.0.fetch_add(delta, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge with a monotonic-max helper (used for peaks).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise the gauge to `v` if `v` is larger (peak tracking).
+    pub fn set_max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Plain (non-atomic) histogram contents — the value type used for
+/// merge-law tests and snapshots.  `merge` is commutative and
+/// associative (bucket-wise addition), mirroring `DecodeStats::merge`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistData {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl Default for HistData {
+    fn default() -> Self {
+        HistData { buckets: vec![0; HIST_BUCKETS], count: 0, sum: 0 }
+    }
+}
+
+impl HistData {
+    pub fn merge(&mut self, other: &HistData) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+}
+
+/// Fixed-bucket log2 latency histogram over `u64` samples
+/// (microseconds by convention; see module docs for the unit rule).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Bucket index of a sample: 0 for 0, else `64 - leading_zeros`.
+    #[inline]
+    pub fn bucket_of(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            64 - v.leading_zeros() as usize
+        }
+    }
+
+    /// Inclusive upper bound of bucket `i` — the value `quantile`
+    /// reports, so estimates always sit at or above the true sample.
+    #[inline]
+    pub fn bucket_ub(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else if i >= 64 {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    pub fn record(&self, v: u64) {
+        self.buckets[Self::bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// Record a millisecond duration (stored as integer microseconds).
+    pub fn record_ms(&self, ms: f64) {
+        self.record((ms * 1000.0).max(0.0).round() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean() / 1000.0
+    }
+
+    /// Exact-count quantile estimate: the upper bound of the bucket
+    /// containing the rank-`ceil(q*n)` sample.  Returns 0 on the empty
+    /// histogram.  For a true sample value `x > 0` the estimate is in
+    /// `[x, 2x)` — one log2 bucket of relative error.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut acc = 0u64;
+        for i in 0..HIST_BUCKETS {
+            acc += self.buckets[i].load(Ordering::Relaxed);
+            if acc >= rank {
+                return Self::bucket_ub(i);
+            }
+        }
+        Self::bucket_ub(HIST_BUCKETS - 1)
+    }
+
+    /// `quantile` converted back to milliseconds.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        self.quantile(q) as f64 / 1000.0
+    }
+
+    /// Bucket-wise accumulate `other` into `self` (commutative and
+    /// associative over `HistData`; see the merge-law tests).
+    pub fn merge_from(&self, other: &Histogram) {
+        for i in 0..HIST_BUCKETS {
+            let b = other.buckets[i].load(Ordering::Relaxed);
+            if b != 0 {
+                self.buckets[i].fetch_add(b, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count(), Ordering::Relaxed);
+        self.sum.fetch_add(other.sum(), Ordering::Relaxed);
+    }
+
+    /// Plain-value snapshot of the atomics.
+    pub fn data(&self) -> HistData {
+        HistData {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count(),
+            sum: self.sum(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("sum_us", Json::Num(self.sum() as f64)),
+            ("mean_ms", Json::Num(self.mean_ms())),
+            ("p50_ms", Json::Num(self.quantile_ms(0.50))),
+            ("p90_ms", Json::Num(self.quantile_ms(0.90))),
+            ("p99_ms", Json::Num(self.quantile_ms(0.99))),
+        ])
+    }
+}
+
+/// Named-metric registry.  One global instance backs the whole library
+/// ([`global`]); independent instances are used in unit tests so
+/// parallel tests never race on shared names.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    hists: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poison| poison.into_inner())
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Handle to the named counter, creating it on first use.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut map = lock(&self.counters);
+        map.entry(name.to_string()).or_insert_with(|| Arc::new(Counter::new())).clone()
+    }
+
+    /// Handle to the named gauge, creating it on first use.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut map = lock(&self.gauges);
+        map.entry(name.to_string()).or_insert_with(|| Arc::new(Gauge::new())).clone()
+    }
+
+    /// Handle to the named histogram, creating it on first use.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut map = lock(&self.hists);
+        map.entry(name.to_string()).or_insert_with(|| Arc::new(Histogram::new())).clone()
+    }
+
+    /// One-shot counter add (hot paths should cache the handle).
+    pub fn add(&self, name: &str, delta: u64) {
+        if delta != 0 {
+            self.counter(name).add(delta);
+        }
+    }
+
+    /// One-shot histogram observation in milliseconds.
+    pub fn observe_ms(&self, name: &str, ms: f64) {
+        self.histogram(name).record_ms(ms);
+    }
+
+    /// Serialize every metric to the repo's `util::json` format:
+    /// `{ "counters": {..}, "gauges": {..}, "histograms": {..} }` with
+    /// names sorted (BTreeMap order) for deterministic output.
+    pub fn snapshot(&self) -> Json {
+        let counters: BTreeMap<String, Json> = lock(&self.counters)
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(v.get() as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Json> = lock(&self.gauges)
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Num(v.get() as f64)))
+            .collect();
+        let hists: BTreeMap<String, Json> = lock(&self.hists)
+            .iter()
+            .map(|(k, v)| (k.clone(), v.to_json()))
+            .collect();
+        Json::Obj(
+            [
+                ("counters".to_string(), Json::Obj(counters)),
+                ("gauges".to_string(), Json::Obj(gauges)),
+                ("histograms".to_string(), Json::Obj(hists)),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+
+    /// Drop every registered metric (CLI / bench isolation; existing
+    /// handles keep working but are no longer reachable by name).
+    pub fn reset(&self) {
+        lock(&self.counters).clear();
+        lock(&self.gauges).clear();
+        lock(&self.hists).clear();
+    }
+}
+
+/// The process-wide registry every layer publishes into.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, PropConfig};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let r = Registry::new();
+        r.add("a.hits", 3);
+        r.add("a.hits", 2);
+        assert_eq!(r.counter("a.hits").get(), 5);
+        let g = r.gauge("a.peak");
+        g.set(7);
+        g.set_max(4);
+        assert_eq!(g.get(), 7);
+        g.set_max(11);
+        assert_eq!(g.get(), 11);
+    }
+
+    #[test]
+    fn registry_handles_are_shared() {
+        let r = Registry::new();
+        let h1 = r.histogram("x_ms");
+        let h2 = r.histogram("x_ms");
+        h1.record(10);
+        assert_eq!(h2.count(), 1);
+    }
+
+    #[test]
+    fn histogram_empty_state_is_safe() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile_ms(0.99), 0.0);
+    }
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 1);
+        assert_eq!(Histogram::bucket_of(2), 2);
+        assert_eq!(Histogram::bucket_of(3), 2);
+        assert_eq!(Histogram::bucket_of(4), 3);
+        assert_eq!(Histogram::bucket_of(u64::MAX), 64);
+        assert_eq!(Histogram::bucket_ub(0), 0);
+        assert_eq!(Histogram::bucket_ub(1), 1);
+        assert_eq!(Histogram::bucket_ub(2), 3);
+        assert_eq!(Histogram::bucket_ub(64), u64::MAX);
+        // every value lands in a bucket whose bounds contain it
+        for v in [0u64, 1, 2, 3, 4, 5, 127, 128, 1 << 20, u64::MAX / 2] {
+            let b = Histogram::bucket_of(v);
+            assert!(v <= Histogram::bucket_ub(b), "v={v} b={b}");
+            if b > 0 {
+                assert!(v > Histogram::bucket_ub(b - 1), "v={v} b={b}");
+            }
+        }
+    }
+
+    /// Exact quantile with the same rank convention the histogram uses:
+    /// the rank-`ceil(q*n)` order statistic.
+    fn exact_quantile(sorted: &[u64], q: f64) -> u64 {
+        let n = sorted.len() as u64;
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        sorted[(rank - 1) as usize]
+    }
+
+    #[test]
+    fn prop_quantile_within_one_bucket_of_exact() {
+        // satellite: across random distributions, quantile(q) must sit
+        // in [exact, 2*exact) — the log2 bucket's relative error bound
+        check(
+            "hist-quantile-vs-exact",
+            PropConfig { cases: 48, base_seed: 0x715706A3 },
+            |rng| {
+                let n = rng.range(1, 400) as usize;
+                let h = Histogram::new();
+                let mut samples = Vec::with_capacity(n);
+                // mix of scales: uniform small, exponential-ish large
+                for _ in 0..n {
+                    let v = match rng.gen_range(3) {
+                        0 => rng.gen_range(16),
+                        1 => rng.gen_range(10_000),
+                        _ => 1u64 << rng.gen_range(40),
+                    };
+                    samples.push(v);
+                    h.record(v);
+                }
+                samples.sort_unstable();
+                for &q in &[0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+                    let exact = exact_quantile(&samples, q);
+                    let est = h.quantile(q);
+                    crate::prop_assert!(est >= exact, "q={q}: est {est} < exact {exact}");
+                    if exact == 0 {
+                        crate::prop_assert!(est == 0, "q={q}: est {est} for exact 0");
+                    } else {
+                        crate::prop_assert!(
+                            est < exact.saturating_mul(2),
+                            "q={q}: est {est} >= 2*exact ({exact})"
+                        );
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    fn arbitrary_hist(rng: &mut Rng) -> Histogram {
+        let h = Histogram::new();
+        for _ in 0..rng.range(0, 60) {
+            h.record(rng.gen_range(1 << 30));
+        }
+        h
+    }
+
+    #[test]
+    fn prop_merge_commutes_and_associates() {
+        // mirrors the DecodeStats::merge laws: bucket-wise addition is
+        // order-independent
+        check(
+            "hist-merge-laws",
+            PropConfig { cases: 32, base_seed: 0x4E46_11 },
+            |rng| {
+                let (a, b, c) = (arbitrary_hist(rng), arbitrary_hist(rng), arbitrary_hist(rng));
+                // commutativity: a+b == b+a
+                let ab = Histogram::new();
+                ab.merge_from(&a);
+                ab.merge_from(&b);
+                let ba = Histogram::new();
+                ba.merge_from(&b);
+                ba.merge_from(&a);
+                crate::prop_assert!(ab.data() == ba.data(), "merge not commutative");
+                // associativity: (a+b)+c == a+(b+c)
+                let ab_c = Histogram::new();
+                ab_c.merge_from(&ab);
+                ab_c.merge_from(&c);
+                let bc = Histogram::new();
+                bc.merge_from(&b);
+                bc.merge_from(&c);
+                let a_bc = Histogram::new();
+                a_bc.merge_from(&a);
+                a_bc.merge_from(&bc);
+                crate::prop_assert!(ab_c.data() == a_bc.data(), "merge not associative");
+                // HistData::merge agrees with Histogram::merge_from
+                let mut d = a.data();
+                d.merge(&b.data());
+                crate::prop_assert!(d == ab.data(), "HistData::merge disagrees");
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn snapshot_serializes_all_metric_kinds() {
+        let r = Registry::new();
+        r.add("plan.cache.hits", 4);
+        r.gauge("decode.peak_pages").set(9);
+        r.observe_ms("serve.ttft_ms", 3.5);
+        r.observe_ms("serve.ttft_ms", 12.0);
+        let snap = r.snapshot();
+        let counter = snap.get("counters").and_then(|o| o.get("plan.cache.hits"));
+        assert_eq!(counter.and_then(Json::as_f64), Some(4.0));
+        let gauge = snap.get("gauges").and_then(|o| o.get("decode.peak_pages"));
+        assert_eq!(gauge.and_then(Json::as_f64), Some(9.0));
+        let h = snap.get("histograms").and_then(|o| o.get("serve.ttft_ms")).expect("hist");
+        assert_eq!(h.get("count").and_then(Json::as_f64), Some(2.0));
+        assert!(h.get("p99_ms").and_then(Json::as_f64).unwrap() >= 12.0);
+        // round-trips through the parser
+        let text = snap.to_string_pretty();
+        assert_eq!(crate::util::json::parse(&text).as_ref(), Ok(&snap));
+    }
+
+    #[test]
+    fn reset_clears_names() {
+        let r = Registry::new();
+        r.add("x", 1);
+        r.reset();
+        assert_eq!(r.counter("x").get(), 0);
+    }
+}

@@ -1,0 +1,29 @@
+//! Unified telemetry: metrics registry, tracing spans and leveled
+//! logging (DESIGN.md §Telemetry).
+//!
+//! Three pure-`std` pillars share this module:
+//!
+//! * [`metrics`] — named atomic counters/gauges plus log2-bucket
+//!   latency histograms with p50/p90/p99 estimation, all publishing
+//!   into one process-wide [`metrics::global`] registry whose
+//!   [`metrics::Registry::snapshot`] serializes to `util::json`.
+//! * [`trace`] — RAII spans forming a per-request tree (plan build →
+//!   pack → tile loop / decode step / speculation verify) with
+//!   configurable sampling and a global off switch.
+//! * [`log`] — the leveled logger library code uses instead of
+//!   `eprintln!` (enforced by `scripts/verify.sh`); capturable in
+//!   tests.
+//!
+//! Emitters live with their layers: `attention::TileStats::publish`,
+//! `decode::DecodeStats::publish`, `PlanCache` hit/miss/evict
+//! counters, `ContinuousBatcher`/`ServeEngine` TTFT and inter-token
+//! latency histograms, and `coordinator::metrics` step-time
+//! histograms all feed the same registry, dumped by the
+//! `flashmask metrics` subcommand and merged into `BENCH_kernel.json`
+//! by `scripts/bench.sh`.
+
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{Counter, Gauge, HistData, Histogram, Registry};

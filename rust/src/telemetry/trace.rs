@@ -1,0 +1,322 @@
+//! Request-scoped tracing spans (DESIGN.md §Telemetry).
+//!
+//! A [`span`] is an RAII wall-clock timer.  Spans opened while another
+//! span is live on the same thread become its children, so a serve
+//! request naturally produces the tree
+//!
+//! ```text
+//! serve.request
+//! ├── plan.build
+//! │   └── plan.classify
+//! ├── prefill.pack
+//! └── prefill.tiles
+//! ```
+//!
+//! and a decode batch produces `serve.decode_batch → decode.step /
+//! decode.verify` children.  Completed root spans are published to a
+//! bounded global collector drained by [`take_roots`].
+//!
+//! Overhead rules (asserted by the `bench_kernel_masks` telemetry
+//! section): with tracing disabled every `span()` call is a single
+//! relaxed atomic load returning an inert guard — no clock read, no
+//! thread-local access, no allocation.  When enabled, sampling is
+//! decided once per *root* span (`1` in [`set_sample_every`]`(n)`
+//! roots record; `n = 0` keeps the instrumentation active but records
+//! nothing); unsampled roots suppress their whole subtree through a
+//! thread-local depth counter.
+
+use std::cell::{Cell, RefCell};
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Children kept per span before further ones are counted into
+/// [`SpanNode::dropped`] instead (bounds memory when a root wraps a
+/// long decode loop).
+pub const MAX_CHILDREN: usize = 256;
+
+/// Completed root spans retained before the oldest is discarded.
+pub const MAX_ROOTS: usize = 64;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static SAMPLE_EVERY: AtomicU64 = AtomicU64::new(1);
+static ROOT_SEQ: AtomicU64 = AtomicU64::new(0);
+static ROOTS: Mutex<Vec<SpanNode>> = Mutex::new(Vec::new());
+
+thread_local! {
+    static STACK: RefCell<Vec<SpanNode>> = const { RefCell::new(Vec::new()) };
+    static SUPPRESS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Master switch.  Off by default; when off, `span()` costs one atomic
+/// load and records nothing.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+pub fn is_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Record one in every `n` root spans (`1` = all, `0` = none — the
+/// "active but unsampled" mode the overhead bench measures).
+pub fn set_sample_every(n: u64) {
+    SAMPLE_EVERY.store(n, Ordering::Relaxed);
+}
+
+/// A finished (or in-flight, while on the stack) span.
+#[derive(Clone, Debug)]
+pub struct SpanNode {
+    pub name: &'static str,
+    pub wall_ms: f64,
+    /// Counters attributed to this span via [`SpanGuard::add`].
+    pub counters: Vec<(&'static str, u64)>,
+    pub children: Vec<SpanNode>,
+    /// Children discarded after [`MAX_CHILDREN`].
+    pub dropped: u64,
+}
+
+impl SpanNode {
+    fn new(name: &'static str) -> SpanNode {
+        SpanNode { name, wall_ms: 0.0, counters: Vec::new(), children: Vec::new(), dropped: 0 }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::Str(self.name.to_string())),
+            ("wall_ms", Json::Num(self.wall_ms)),
+        ];
+        if !self.counters.is_empty() {
+            pairs.push((
+                "counters",
+                Json::Obj(
+                    self.counters
+                        .iter()
+                        .map(|(k, v)| (k.to_string(), Json::Num(*v as f64)))
+                        .collect(),
+                ),
+            ));
+        }
+        if !self.children.is_empty() {
+            pairs.push(("children", Json::Arr(self.children.iter().map(|c| c.to_json()).collect())));
+        }
+        if self.dropped > 0 {
+            pairs.push(("children_dropped", Json::Num(self.dropped as f64)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+enum Mode {
+    /// Tracing globally off — nothing to undo on drop.
+    Inert,
+    /// Under an unsampled root — decrement the suppress depth on drop.
+    Suppressed,
+    /// Recording — `depth` is this span's index in the thread stack.
+    Active { start: Instant, depth: usize },
+}
+
+/// RAII span timer; see [`span`].  `!Send` — a guard closes on the
+/// thread that opened it.
+pub struct SpanGuard {
+    mode: Mode,
+    _not_send: PhantomData<*const ()>,
+}
+
+/// Open a span.  The guard's drop records wall time and attaches the
+/// node to the enclosing span (or publishes it as a root).
+pub fn span(name: &'static str) -> SpanGuard {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return SpanGuard { mode: Mode::Inert, _not_send: PhantomData };
+    }
+    let suppressed = SUPPRESS.with(|s| {
+        if s.get() > 0 {
+            s.set(s.get() + 1);
+            return true;
+        }
+        let is_root = STACK.with(|st| st.borrow().is_empty());
+        if is_root {
+            let every = SAMPLE_EVERY.load(Ordering::Relaxed);
+            let seq = ROOT_SEQ.fetch_add(1, Ordering::Relaxed);
+            if every == 0 || seq % every != 0 {
+                s.set(1);
+                return true;
+            }
+        }
+        false
+    });
+    if suppressed {
+        return SpanGuard { mode: Mode::Suppressed, _not_send: PhantomData };
+    }
+    let depth = STACK.with(|st| {
+        let mut st = st.borrow_mut();
+        st.push(SpanNode::new(name));
+        st.len() - 1
+    });
+    SpanGuard { mode: Mode::Active { start: Instant::now(), depth }, _not_send: PhantomData }
+}
+
+impl SpanGuard {
+    /// Attribute `delta` to `counter` on this span (repeat names
+    /// accumulate into one entry).
+    pub fn add(&self, counter: &'static str, delta: u64) {
+        if let Mode::Active { depth, .. } = self.mode {
+            STACK.with(|st| {
+                let mut st = st.borrow_mut();
+                if let Some(node) = st.get_mut(depth) {
+                    if let Some(slot) = node.counters.iter_mut().find(|(k, _)| *k == counter) {
+                        slot.1 += delta;
+                    } else {
+                        node.counters.push((counter, delta));
+                    }
+                }
+            });
+        }
+    }
+
+    /// Whether this guard is recording (false when tracing is off or
+    /// the enclosing root was not sampled).
+    pub fn is_recording(&self) -> bool {
+        matches!(self.mode, Mode::Active { .. })
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        match self.mode {
+            Mode::Inert => {}
+            Mode::Suppressed => SUPPRESS.with(|s| s.set(s.get().saturating_sub(1))),
+            Mode::Active { start, .. } => {
+                let wall_ms = start.elapsed().as_secs_f64() * 1e3;
+                STACK.with(|st| {
+                    let mut st = st.borrow_mut();
+                    // guards drop in LIFO order, so this span is the top
+                    let Some(mut node) = st.pop() else { return };
+                    node.wall_ms = wall_ms;
+                    if let Some(parent) = st.last_mut() {
+                        if parent.children.len() < MAX_CHILDREN {
+                            parent.children.push(node);
+                        } else {
+                            parent.dropped += 1;
+                        }
+                    } else {
+                        let mut roots = ROOTS.lock().unwrap_or_else(|p| p.into_inner());
+                        if roots.len() >= MAX_ROOTS {
+                            roots.remove(0);
+                        }
+                        roots.push(node);
+                    }
+                });
+            }
+        }
+    }
+}
+
+/// Drain every collected root span (oldest first).
+pub fn take_roots() -> Vec<SpanNode> {
+    let mut roots = ROOTS.lock().unwrap_or_else(|p| p.into_inner());
+    roots.drain(..).collect()
+}
+
+/// Serialize root spans for the CLI dump.
+pub fn roots_to_json(roots: &[SpanNode]) -> Json {
+    Json::Arr(roots.iter().map(|r| r.to_json()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The enable switch and collector are process-global, so tests that
+    // flip them serialize on this lock and assert with `any`-style
+    // matching (other tests' spans may interleave into the collector).
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn locked() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _l = locked();
+        set_enabled(false);
+        take_roots();
+        {
+            let g = span("t.off");
+            assert!(!g.is_recording());
+            g.add("x", 1);
+        }
+        assert!(take_roots().iter().all(|r| r.name != "t.off"));
+    }
+
+    #[test]
+    fn span_tree_nests_and_attributes_counters() {
+        let _l = locked();
+        set_enabled(true);
+        set_sample_every(1);
+        take_roots();
+        {
+            let root = span("t.root");
+            root.add("items", 2);
+            root.add("items", 3);
+            {
+                let _child = span("t.child");
+                let _grand = span("t.grand");
+            }
+            let _sibling = span("t.sibling");
+        }
+        set_enabled(false);
+        let roots = take_roots();
+        let root = roots.iter().find(|r| r.name == "t.root").expect("root collected");
+        assert!(root.wall_ms >= 0.0);
+        assert_eq!(root.counters, vec![("items", 5)]);
+        let names: Vec<&str> = root.children.iter().map(|c| c.name).collect();
+        assert_eq!(names, vec!["t.child", "t.sibling"]);
+        assert_eq!(root.children[0].children[0].name, "t.grand");
+        // serializes to parseable json
+        let text = roots_to_json(std::slice::from_ref(root)).to_string_pretty();
+        assert!(crate::util::json::parse(&text).is_ok());
+    }
+
+    #[test]
+    fn sample_every_zero_is_active_but_silent() {
+        let _l = locked();
+        set_enabled(true);
+        set_sample_every(0);
+        take_roots();
+        {
+            let root = span("t.unsampled");
+            assert!(!root.is_recording());
+            // nested spans under an unsampled root are suppressed too,
+            // and must not be promoted to roots of their own
+            let child = span("t.unsampled_child");
+            assert!(!child.is_recording());
+        }
+        set_enabled(false);
+        set_sample_every(1);
+        let roots = take_roots();
+        assert!(roots.iter().all(|r| !r.name.starts_with("t.unsampled")));
+    }
+
+    #[test]
+    fn child_cap_counts_drops() {
+        let _l = locked();
+        set_enabled(true);
+        set_sample_every(1);
+        take_roots();
+        {
+            let _root = span("t.capped");
+            for _ in 0..(MAX_CHILDREN + 10) {
+                let _c = span("t.tick");
+            }
+        }
+        set_enabled(false);
+        let roots = take_roots();
+        let root = roots.iter().find(|r| r.name == "t.capped").expect("root");
+        assert_eq!(root.children.len(), MAX_CHILDREN);
+        assert_eq!(root.dropped, 10);
+    }
+}

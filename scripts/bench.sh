@@ -59,6 +59,10 @@ plans = sum(m.get("plans_built", 0) for m in decode.get("masks", []))
 steps = sum(m.get("steps", 0) for m in decode.get("masks", []))
 if steps:
     merged["decode_plan_reuse"] = {"plans_built": plans, "steps": steps}
+# telemetry overhead smoke + the end-of-run registry snapshot
+tel = kernel.get("telemetry")
+if tel:
+    merged["telemetry"] = tel
 with open(sys.argv[3], "w") as f:
     json.dump(merged, f, indent=2)
     f.write("\n")

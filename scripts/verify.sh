@@ -55,18 +55,46 @@ if [ "$deprecated_calls" -ne 0 ]; then
 fi
 echo "api migration grep: clean"
 
+echo "== telemetry: library code logs through telemetry::log, not println!/eprintln! =="
+# ad-hoc prints bypass the leveled logger (and its test capture), so
+# non-test library code must not call println!/eprintln! directly.
+# Exempt: the CLI binary and the report/table printers (stdout is their
+# product), and telemetry::log itself (the logger's stderr sink).
+print_calls=0
+while IFS= read -r f; do
+  hits=$(awk '/#\[cfg\(test\)\]/{exit} {print}' "$f" \
+    | grep -nE '\b(println|eprintln)!' \
+    | grep -vE '^\s*[0-9]+:\s*//' || true)
+  if [ -n "$hits" ]; then
+    echo "direct print from library code in $f:"
+    echo "$hits"
+    print_calls=1
+  fi
+done < <(find rust/src -name '*.rs' \
+  ! -path 'rust/src/main.rs' \
+  ! -path 'rust/src/reports.rs' \
+  ! -path 'rust/src/util/table.rs' \
+  ! -path 'rust/src/telemetry/log.rs')
+if [ "$print_calls" -ne 0 ]; then
+  echo "verify.sh: FAIL — route these through telemetry::log (DESIGN.md §Telemetry)"
+  exit 1
+fi
+echo "telemetry print gate: clean"
+
 echo "== decode oracle suite (sequential vs speculative vs prefill) =="
 cargo test -q --test decode_oracle
 
 echo "== GQA differential oracle (grouped layouts vs KV-replicated MHA) =="
 cargo test -q --test gqa_oracle
 
-echo "== kernel bench smoke (tiles-visited + parallel_2d bitwise + plan-cache asserts) =="
+echo "== kernel bench smoke (tiles-visited + parallel_2d bitwise + plan-cache + telemetry-overhead asserts) =="
 # the bench asserts the interval schedule visits strictly fewer tiles
 # than tr*tc on every non-full mask, that row-block parallelism is
-# bitwise-identical to the sequential kernel, and that ExecutionPlan
+# bitwise-identical to the sequential kernel, that ExecutionPlan
 # reuse makes the repeated-mask prefill microbench >= 1.2x faster than
-# the plan-per-call cold path (ISSUE 5 acceptance)
+# the plan-per-call cold path (ISSUE 5 acceptance), and that
+# active-but-unsampled telemetry stays within 3% of tracing-disabled
+# prefill throughput (ISSUE 6 acceptance)
 cargo bench --bench bench_kernel_masks -- --smoke
 
 echo "== decode bench smoke (~2s, includes speculative oracle check) =="
