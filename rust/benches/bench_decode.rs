@@ -183,7 +183,9 @@ fn main() {
     ));
     // request-latency percentiles from the batcher's telemetry
     // histograms (log2 buckets: values are upper bounds within one
-    // power of two — DESIGN.md §Telemetry)
+    // power of two — DESIGN.md §Telemetry); ITL quantiles are over
+    // per-token gap samples (every consecutive generated-token pair),
+    // not per-request means, so a single stalled gap surfaces in p99
     let mut l = Table::new(vec![
         "mask",
         "TTFT p50 ms",
@@ -191,7 +193,7 @@ fn main() {
         "ITL p50 ms",
         "ITL p99 ms",
     ])
-    .title("decode latency: time-to-first-token and inter-token gap");
+    .title("decode latency: time-to-first-token and per-token inter-token gaps");
     let mut json_masks: Vec<Json> = Vec::new();
     for (name, mask_of) in &cases {
         let reqs = requests(n, d, heads, count, mask_of.as_ref());

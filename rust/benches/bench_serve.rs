@@ -1,0 +1,322 @@
+//! `cargo bench --bench bench_serve [-- --smoke] [-- --requests R] [-- --rate HZ]`
+//!
+//! Serving latency under an open-loop Poisson arrival process: the same
+//! seeded request set and arrival trace is replayed through
+//!
+//! 1. the strict-FIFO [`ContinuousBatcher`] baseline, which admits on
+//!    bare page counts (prompt pages only) and recovers from its
+//!    over-admission by preempting — re-decoding evicted sequences from
+//!    scratch, and
+//! 2. the token-budget [`Router`], whose wave admission reserves each
+//!    request's worst-case page demand up front
+//!    (`max_batch_prefill_tokens` / `max_batch_total_tokens` /
+//!    `waiting_served_ratio` / `max_waiting_tokens`, DESIGN.md
+//!    §Serving) and is therefore preemption-free by construction.
+//!
+//! The pool is sized to hold ~2.5 fully-grown sequences while many more
+//! arrive, so the baseline demonstrably thrashes (the bench asserts its
+//! preemption count is non-zero and the router's is zero) and the bench
+//! asserts the headline claim: **budget admission beats strict FIFO on
+//! p99 TTFT at equal delivered tokens**, with throughput within noise.
+//! Both runs teacher-force the same tokens, so outputs are compared
+//! row-for-row — the scheduling policies must not change the math.
+//!
+//! TTFT is arrival → first generated token; ITL percentiles are over
+//! *per-token* gap samples (every consecutive generated-token pair),
+//! not per-request means.  The router run additionally validates the
+//! streaming contract on every channel: `Admitted`, then `Token{index}`
+//! consecutive from 0, then `Done`.
+//!
+//! A machine-readable `BENCH json` blob with both configurations is
+//! printed after the table (scripts/bench.sh → BENCH_serve.json).
+//!
+//! `--smoke` shrinks the workload to a sub-second run for
+//! scripts/verify.sh and additionally asserts that every admitted
+//! request retires and the TTFT histogram is fully populated.
+
+use std::sync::mpsc::Receiver;
+
+use flashmask::decode::{
+    BatcherConfig, BatcherReport, ContinuousBatcher, DecodeRequest, DecodeResponse, HeadLayout,
+    SpecPolicy,
+};
+use flashmask::mask::builders;
+use flashmask::server::{
+    poisson_arrivals_ms, replay_arrivals, Router, RouterConfig, RouterReport, StreamEvent,
+};
+use flashmask::telemetry::log;
+use flashmask::util::json::Json;
+use flashmask::util::rng::Rng;
+use flashmask::util::table::Table;
+
+/// Ragged request set with the four serving mask families mixed in
+/// round-robin; prompt is a quarter of each sequence, so admission
+/// decisions made on prompt footprint alone under-reserve by 4x — the
+/// over-admission the FIFO baseline suffers from.
+fn ragged_requests(count: usize, base_n: usize, d: usize, page: usize, seed: u64) -> Vec<DecodeRequest> {
+    let mut rng = Rng::new(seed);
+    let layout = HeadLayout::mha(1);
+    (0..count)
+        .map(|i| {
+            let ni = (base_n / 2 + rng.range(0, (base_n / 2) as i64) as usize).max(2 * page);
+            let mask = match i % 4 {
+                0 => builders::causal(ni),
+                1 => builders::sliding_window(ni, (ni / 8).max(1)),
+                2 => builders::causal_document(ni, &[ni / 2, ni - ni / 2]),
+                _ => builders::random_eviction(ni, &mut rng),
+            };
+            let mut mk = || (0..ni * d).map(|_| rng.normal_f32() * 0.5).collect::<Vec<f32>>();
+            DecodeRequest::with_layout(i as u64, layout, ni, d, ni / 4, mk(), mk(), mk(), mask)
+        })
+        .collect()
+}
+
+/// Replay the arrival trace through the strict-FIFO page-count batcher.
+fn run_fifo(
+    reqs: &[DecodeRequest],
+    due: &[f64],
+    cfg: BatcherConfig,
+) -> (BatcherReport, Vec<DecodeResponse>, f64) {
+    let mut b = ContinuousBatcher::new(cfg);
+    let wall_ms = replay_arrivals(reqs.to_vec(), due, |cmd| match cmd {
+        Some(req) => {
+            b.submit(req).expect("fifo submit");
+            Ok(true)
+        }
+        None => b.step(),
+    })
+    .expect("fifo replay");
+    let mut done = b.take_finished();
+    done.sort_by_key(|r| r.id);
+    (b.report(), done, wall_ms)
+}
+
+/// Replay the arrival trace through the token-budget router, holding
+/// every stream receiver for post-run contract validation.
+fn run_router(
+    reqs: &[DecodeRequest],
+    due: &[f64],
+    cfg: RouterConfig,
+) -> (RouterReport, Vec<DecodeResponse>, Vec<(u64, usize, Receiver<StreamEvent>)>, f64) {
+    let mut router = Router::new(cfg);
+    let mut rxs: Vec<(u64, usize, Receiver<StreamEvent>)> = Vec::new();
+    let wall_ms = replay_arrivals(reqs.to_vec(), due, |cmd| match cmd {
+        Some(req) => {
+            let (id, gen) = (req.id, req.gen_len());
+            let rx = router.submit(req).expect("router submit");
+            rxs.push((id, gen, rx));
+            Ok(true)
+        }
+        None => router.tick(),
+    })
+    .expect("router replay");
+    let mut done = router.take_finished();
+    done.sort_by_key(|r| r.id);
+    (router.report(), done, rxs, wall_ms)
+}
+
+/// Drain one stream and enforce the contract: `Admitted`, then
+/// consecutive `Token{index}` from 0, then exactly one terminal `Done`.
+/// Returns the token-event count.
+fn check_stream(id: u64, gen: usize, rx: &Receiver<StreamEvent>) -> usize {
+    let events: Vec<StreamEvent> = rx.try_iter().collect();
+    assert!(
+        matches!(events.first(), Some(StreamEvent::Admitted)),
+        "request {id}: stream must open with Admitted"
+    );
+    let mut tokens = 0usize;
+    let mut done = 0usize;
+    for ev in &events[1..] {
+        match ev {
+            StreamEvent::Admitted => panic!("request {id}: duplicate Admitted"),
+            StreamEvent::Preempted => {
+                panic!("request {id}: preempted under reservation-safe admission")
+            }
+            StreamEvent::Token { index } => {
+                assert_eq!(*index, tokens, "request {id}: token stream must be gap-free");
+                tokens += 1;
+            }
+            StreamEvent::Done(resp) => {
+                assert_eq!(resp.id, id, "request {id}: Done carries the wrong response");
+                done += 1;
+            }
+        }
+    }
+    assert_eq!(done, 1, "request {id}: exactly one terminal Done");
+    assert!(
+        matches!(events.last(), Some(StreamEvent::Done(_))),
+        "request {id}: Done must be the final event"
+    );
+    assert_eq!(tokens, gen, "request {id}: streamed {tokens} of {gen} generated tokens");
+    tokens
+}
+
+/// Scheduling must not change the math: both runs teacher-force the
+/// same tokens, so retired outputs match row-for-row.
+fn assert_identical(fifo: &[DecodeResponse], router: &[DecodeResponse]) {
+    assert_eq!(fifo.len(), router.len(), "retired sequence count diverged");
+    for (a, b) in fifo.iter().zip(router) {
+        assert_eq!(a.id, b.id, "retirement ids diverged");
+        assert_eq!(a.o.len(), b.o.len(), "output shape diverged at req {}", a.id);
+        for (i, (x, y)) in a.o.iter().zip(&b.o).enumerate() {
+            assert!(
+                (x - y).abs() < 1e-4,
+                "scheduling changed decode output at req {} elem {i}: {x} vs {y}",
+                a.id
+            );
+        }
+    }
+}
+
+fn main() {
+    log::init_from_env();
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let arg_f64 = |key: &str| -> Option<f64> {
+        args.iter().position(|a| a == key).map(|i| {
+            args.get(i + 1)
+                .and_then(|v| v.parse().ok())
+                .unwrap_or_else(|| panic!("{key} needs a number"))
+        })
+    };
+    // pool holds ~2.5 fully-grown sequences in either configuration;
+    // many more requests arrive within the first few service times
+    let (requests, base_n, d, max_pages) = if smoke { (10, 192, 16, 24) } else { (24, 288, 16, 44) };
+    let requests = arg_f64("--requests").map(|v| v as usize).unwrap_or(requests);
+    let rate = arg_f64("--rate").unwrap_or(if smoke { 500.0 } else { 200.0 });
+    let (page, max_active, seed) = (16, 8, 42u64);
+    let batcher = BatcherConfig { page_size: page, d, max_pages, max_active, skip: true, spec: SpecPolicy::Off };
+    let router_cfg = RouterConfig {
+        batcher,
+        max_batch_prefill_tokens: base_n,
+        max_batch_total_tokens: max_pages * page,
+        waiting_served_ratio: 1.2,
+        max_waiting_tokens: 20,
+    };
+
+    let reqs = ragged_requests(requests, base_n, d, page, seed);
+    let mut rng = Rng::new(seed ^ 0xA551);
+    let due = poisson_arrivals_ms(rate, requests, &mut rng);
+    let total_gen: u64 = reqs.iter().map(|r| r.gen_len() as u64).sum();
+    println!(
+        "serve bench: {requests} ragged requests (n up to {base_n}, d={d}), pool {max_pages} pages \
+         of {page}, Poisson {rate:.0} req/s{}",
+        if smoke { " (smoke)" } else { "" }
+    );
+
+    let (fifo, fifo_out, fifo_wall) = run_fifo(&reqs, &due, batcher);
+    let (router, router_out, rxs, router_wall) = run_router(&reqs, &due, router_cfg);
+
+    // -- delivery: every admitted request retires in both runs --------
+    assert_eq!(fifo.sequences, requests, "fifo retired {} of {requests}", fifo.sequences);
+    assert_eq!(router.sequences, requests, "router retired {} of {requests}", router.sequences);
+    assert_eq!(router.cancelled, 0, "no stream was dropped, nothing may be cancelled");
+    assert_eq!(fifo.tokens, total_gen, "fifo must deliver every generated token");
+    assert_eq!(router.tokens, total_gen, "router must deliver every generated token");
+    assert_identical(&fifo_out, &router_out);
+
+    // -- streaming contract on every channel --------------------------
+    let streamed: usize = rxs.iter().map(|(id, gen, rx)| check_stream(*id, *gen, rx)).sum();
+    assert_eq!(streamed as u64, router.tokens, "token events must cover every generated token");
+
+    // -- the headline: reservation-safe budgets beat page-count FIFO --
+    assert!(
+        fifo.preemptions > 0,
+        "pool of ~2.5 sequences must force the page-count baseline to thrash"
+    );
+    assert_eq!(router.preemptions, 0, "reservation-safe wave admission must never preempt");
+    assert!(router.ttft_p50_ms > 0.0, "TTFT histogram must be populated");
+    assert!(router.itl_p99_ms >= router.itl_p50_ms, "ITL percentiles inverted");
+    assert!(
+        router.ttft_p99_ms < fifo.ttft_p99_ms,
+        "budget admission must beat strict FIFO on p99 TTFT: router {:.2} ms vs fifo {:.2} ms",
+        router.ttft_p99_ms,
+        fifo.ttft_p99_ms
+    );
+    assert!(
+        router.tokens_per_s >= 0.9 * fifo.tokens_per_s,
+        "equal-throughput clause violated: router {:.0} tok/s vs fifo {:.0} tok/s",
+        router.tokens_per_s,
+        fifo.tokens_per_s
+    );
+
+    let mut t = Table::new(vec!["metric", "fifo (page-count)", "router (token-budget)"])
+        .title("identical Poisson trace, head-to-head");
+    t.row(vec![
+        "TTFT p50/p99 ms".into(),
+        format!("{:.2} / {:.2}", fifo.ttft_p50_ms, fifo.ttft_p99_ms),
+        format!("{:.2} / {:.2}", router.ttft_p50_ms, router.ttft_p99_ms),
+    ]);
+    t.row(vec![
+        "ITL p50/p99 ms".into(),
+        format!("{:.3} / {:.3}", fifo.itl_p50_ms, fifo.itl_p99_ms),
+        format!("{:.3} / {:.3}", router.itl_p50_ms, router.itl_p99_ms),
+    ]);
+    t.row(vec![
+        "tokens/s".into(),
+        format!("{:.0}", fifo.tokens_per_s),
+        format!("{:.0}", router.tokens_per_s),
+    ]);
+    t.row(vec!["preemptions".into(), fifo.preemptions.to_string(), router.preemptions.to_string()]);
+    t.row(vec![
+        "waves (forced)".into(),
+        "-".into(),
+        format!("{} ({})", router.waves, router.forced_waves),
+    ]);
+    t.row(vec!["wall ms".into(), format!("{fifo_wall:.0}"), format!("{router_wall:.0}")]);
+    t.print();
+    println!(
+        "p99 TTFT win: {:.2}x ({} token stream events checked)",
+        fifo.ttft_p99_ms / router.ttft_p99_ms.max(1e-9),
+        streamed
+    );
+
+    println!("== BENCH json ==");
+    let blob = Json::obj(vec![
+        (
+            "config",
+            Json::obj(vec![
+                ("requests", Json::Num(requests as f64)),
+                ("base_n", Json::Num(base_n as f64)),
+                ("d", Json::Num(d as f64)),
+                ("page_size", Json::Num(page as f64)),
+                ("max_pages", Json::Num(max_pages as f64)),
+                ("max_active", Json::Num(max_active as f64)),
+                ("rate_per_s", Json::Num(rate)),
+                ("max_batch_prefill_tokens", Json::Num(base_n as f64)),
+                ("max_batch_total_tokens", Json::Num((max_pages * page) as f64)),
+                ("waiting_served_ratio", Json::Num(1.2)),
+                ("max_waiting_tokens", Json::Num(20.0)),
+                ("smoke", Json::Bool(smoke)),
+            ]),
+        ),
+        (
+            "fifo",
+            Json::obj(vec![
+                ("ttft_p50_ms", Json::Num(fifo.ttft_p50_ms)),
+                ("ttft_p99_ms", Json::Num(fifo.ttft_p99_ms)),
+                ("itl_p50_ms", Json::Num(fifo.itl_p50_ms)),
+                ("itl_p99_ms", Json::Num(fifo.itl_p99_ms)),
+                ("tokens_per_s", Json::Num(fifo.tokens_per_s)),
+                ("preemptions", Json::Num(fifo.preemptions as f64)),
+                ("wall_ms", Json::Num(fifo_wall)),
+            ]),
+        ),
+        (
+            "router",
+            Json::obj(vec![
+                ("ttft_p50_ms", Json::Num(router.ttft_p50_ms)),
+                ("ttft_p99_ms", Json::Num(router.ttft_p99_ms)),
+                ("itl_p50_ms", Json::Num(router.itl_p50_ms)),
+                ("itl_p99_ms", Json::Num(router.itl_p99_ms)),
+                ("tokens_per_s", Json::Num(router.tokens_per_s)),
+                ("preemptions", Json::Num(router.preemptions as f64)),
+                ("waves", Json::Num(router.waves as f64)),
+                ("forced_waves", Json::Num(router.forced_waves as f64)),
+                ("wall_ms", Json::Num(router_wall)),
+            ]),
+        ),
+        ("ttft_p99_win", Json::Num(fifo.ttft_p99_ms / router.ttft_p99_ms.max(1e-9))),
+    ]);
+    println!("{}", blob.to_string_pretty());
+}

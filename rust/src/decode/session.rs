@@ -22,7 +22,7 @@ use super::step::DecodeStats;
 use crate::attention::api::{Backend, CpuBackend, DecodeStep, VerifyStep};
 use crate::attention::HeadLayout;
 use crate::mask::{builders, FlashMask, IncrementalMaskView};
-use crate::telemetry::{Gauge, Histogram};
+use crate::telemetry::{log, Gauge, Histogram};
 use anyhow::{bail, ensure, Result};
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -149,10 +149,14 @@ pub struct DecodeSession {
     backend: CpuBackend,
     pub stats: DecodeStats,
     pub admitted: Instant,
-    /// When the first *generated* row completed (TTFT's right edge).
-    /// Reset with the session on preemption, so after a re-decode it
-    /// reflects the successful run — consistent with `decode_ms`.
-    first_token: Option<Instant>,
+    /// Completion instant of every *generated* row, in commit order —
+    /// `token_times[0]` is TTFT's right edge and consecutive pairs are
+    /// the per-token inter-token gaps (tokens committed by one
+    /// speculative verify pass share an instant: the client receives
+    /// them as a burst).  Dropped with the session on preemption, so
+    /// after a re-decode the timeline reflects the successful run —
+    /// consistent with `decode_ms`.
+    token_times: Vec<Instant>,
 }
 
 impl DecodeSession {
@@ -178,7 +182,7 @@ impl DecodeSession {
             backend: CpuBackend,
             stats: DecodeStats { plans_built: 1, ..DecodeStats::default() },
             admitted: Instant::now(),
-            first_token: None,
+            token_times: Vec::new(),
         }
     }
 
@@ -289,8 +293,8 @@ impl DecodeSession {
             }
         }
         self.pos += 1;
-        if self.pos > self.req.prompt_len && self.first_token.is_none() {
-            self.first_token = Some(Instant::now());
+        if self.pos > self.req.prompt_len {
+            self.token_times.push(Instant::now());
         }
         if self.pos == self.req.n {
             StepOutcome::Finished
@@ -441,9 +445,15 @@ impl DecodeSession {
             }
         }
         self.stats.accepted += path.len() as u64;
+        // the whole accepted prefix commits at one instant: the client
+        // receives the burst together, so the burst's internal gaps are
+        // ~0 and the next gap spans the following verify pass
+        let committed_at = Instant::now();
+        let gen_before = self.pos.saturating_sub(self.req.prompt_len);
         self.pos += path.len();
-        if self.pos > self.req.prompt_len && self.first_token.is_none() {
-            self.first_token = Some(Instant::now());
+        let gen_after = self.pos.saturating_sub(self.req.prompt_len);
+        for _ in gen_before..gen_after {
+            self.token_times.push(committed_at);
         }
         if self.pos == self.req.n {
             StepOutcome::Finished
@@ -479,13 +489,21 @@ impl DecodeSession {
         let now = Instant::now();
         let decode_ms = (now - self.admitted).as_secs_f64() * 1e3;
         let queue_ms = (self.admitted - self.req.arrived).as_secs_f64() * 1e3;
-        // a finished session generated >= 1 token, so first_token is
-        // set; fall back to `now` defensively rather than panic
-        let first = self.first_token.unwrap_or(now);
+        // a finished session generated >= 1 token, so token_times is
+        // non-empty; fall back to `now` defensively rather than panic
+        let first = self.token_times.first().copied().unwrap_or(now);
         let ttft_ms = (first - self.req.arrived).as_secs_f64() * 1e3;
-        let gen = self.req.gen_len();
-        let itl_ms =
-            if gen > 1 { (now - first).as_secs_f64() * 1e3 / (gen - 1) as f64 } else { 0.0 };
+        debug_assert_eq!(self.token_times.len(), self.req.gen_len());
+        let itl_gaps_ms: Vec<f64> = self
+            .token_times
+            .windows(2)
+            .map(|w| (w[1] - w[0]).as_secs_f64() * 1e3)
+            .collect();
+        let itl_ms = if itl_gaps_ms.is_empty() {
+            0.0
+        } else {
+            itl_gaps_ms.iter().sum::<f64>() / itl_gaps_ms.len() as f64
+        };
         let mut o = Vec::with_capacity(self.req.layout.q_heads * self.req.gen_len() * self.req.d);
         for h in self.out.drain(..) {
             o.extend(h);
@@ -501,6 +519,7 @@ impl DecodeSession {
             decode_ms,
             ttft_ms,
             itl_ms,
+            itl_gaps_ms,
             stats: self.stats,
         }
     }
@@ -525,9 +544,16 @@ pub struct DecodeResponse {
     /// Arrival → first generated token (queueing and prompt prefill
     /// included) — the latency a streaming client perceives.
     pub ttft_ms: f64,
-    /// Mean gap between consecutive generated tokens after the first;
-    /// 0 when only one token was generated.
+    /// Mean gap between consecutive generated tokens (derived from
+    /// `itl_gaps_ms`); 0 when only one token was generated.  Summary
+    /// only — percentile consumers must use the per-token gaps, a p99
+    /// over per-request means structurally hides per-token stalls.
     pub itl_ms: f64,
+    /// Every inter-token gap individually: `itl_gaps_ms[i]` is the
+    /// wall time between generated tokens `i` and `i+1` (empty when
+    /// only one token was generated).  Tokens committed together by a
+    /// speculative verify pass have ~0 gaps between them.
+    pub itl_gaps_ms: Vec<f64>,
     pub stats: DecodeStats,
 }
 
@@ -600,10 +626,17 @@ pub struct BatcherReport {
     /// upper bounds within one power of two — DESIGN.md §Telemetry).
     pub ttft_p50_ms: f64,
     pub ttft_p99_ms: f64,
-    /// p50 inter-token latency (mean gap per sequence; sequences that
-    /// generated a single token contribute no sample).
+    /// p50 inter-token latency over *per-token* gap samples: every
+    /// consecutive generated-token pair of every retired sequence
+    /// contributes one sample, so a single stalled gap (a preemption
+    /// hiccup, a slow verify pass) surfaces in the tail instead of
+    /// being averaged away inside its sequence's mean.
     pub itl_p50_ms: f64,
     pub itl_p99_ms: f64,
+    /// Prefills that failed after the fit check (pool drained in
+    /// between, e.g. by a caller interleaving its own allocations);
+    /// each one was rolled back and its request re-queued.
+    pub prefill_rejects: u64,
 }
 
 impl BatcherReport {
@@ -627,6 +660,7 @@ pub struct ContinuousBatcher {
     agg: DecodeStats,
     preemptions: u64,
     decoded_tokens: u64,
+    prefill_rejects: u64,
     started: Instant,
     /// This run's latency distributions (the report's percentiles)…
     ttft: Histogram,
@@ -650,6 +684,7 @@ impl ContinuousBatcher {
             agg: DecodeStats::default(),
             preemptions: 0,
             decoded_tokens: 0,
+            prefill_rejects: 0,
             started: Instant::now(),
             ttft: Histogram::new(),
             itl: Histogram::new(),
@@ -701,14 +736,41 @@ impl ContinuousBatcher {
                 self.waiting.push_front(req);
                 break;
             }
-            let mut session = DecodeSession::new(req, self.cfg.page_size);
-            if let Some(proposer) = self.cfg.spec.build(session.req.id) {
-                session.set_speculation(proposer, self.cfg.spec.k(), self.cfg.spec.adaptive());
+            if !self.admit_one(req) {
+                break;
             }
-            let ok = session.prefill(&mut self.pool);
-            debug_assert!(ok, "prefill failed after fit check");
-            self.active.push(session);
         }
+    }
+
+    /// Build a session for `req` and prefill its prompt.  On prefill
+    /// failure the request is re-queued at the *front* of the waiting
+    /// queue (FIFO preserved) and `false` is returned — `prefill`
+    /// allocates nothing when the prompt no longer fits, so there is no
+    /// partial page chain to roll back beyond the empty one `preempt`
+    /// releases.  The failure is a real release-mode path, not an
+    /// assertable invariant: callers that interleave their own
+    /// allocations between `admit`'s fit check and this call (the serve
+    /// router's wave admission, tests that drain the pool) must get the
+    /// request back, not a silently pageless session in the active set.
+    fn admit_one(&mut self, req: DecodeRequest) -> bool {
+        let mut session = DecodeSession::new(req, self.cfg.page_size);
+        if let Some(proposer) = self.cfg.spec.build(session.req.id) {
+            session.set_speculation(proposer, self.cfg.spec.k(), self.cfg.spec.adaptive());
+        }
+        if !session.prefill(&mut self.pool) {
+            self.prefill_rejects += 1;
+            log::warn(
+                "decode",
+                format!(
+                    "request {}: pool drained between fit check and prefill; re-queued",
+                    session.req.id
+                ),
+            );
+            self.waiting.push_front(session.preempt(&mut self.pool));
+            return false;
+        }
+        self.active.push(session);
+        true
     }
 
     /// One scheduler iteration: admit, step every active sequence one
@@ -775,9 +837,12 @@ impl ContinuousBatcher {
                     let resp = s.retire(&mut self.pool);
                     self.ttft.record_ms(resp.ttft_ms);
                     self.g_ttft.record_ms(resp.ttft_ms);
-                    if resp.n - resp.prompt_len > 1 {
-                        self.itl.record_ms(resp.itl_ms);
-                        self.g_itl.record_ms(resp.itl_ms);
+                    // one sample per inter-token gap, not the sequence
+                    // mean: the ITL percentiles must see individual
+                    // stalls (single-token sequences have no gaps)
+                    for &gap in &resp.itl_gaps_ms {
+                        self.itl.record_ms(gap);
+                        self.g_itl.record_ms(gap);
                     }
                     self.g_peak.set_max(self.pool.stats.peak_in_use as u64);
                     self.finished.push(resp);
@@ -826,6 +891,7 @@ impl ContinuousBatcher {
             ttft_p99_ms: self.ttft.quantile_ms(0.99),
             itl_p50_ms: self.itl.quantile_ms(0.50),
             itl_p99_ms: self.itl.quantile_ms(0.99),
+            prefill_rejects: self.prefill_rejects,
         }
     }
 }
@@ -1381,6 +1447,169 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn prefill_failure_between_fit_check_and_prefill_requeues_cleanly() {
+        // release-profile-safe regression for the old
+        // `debug_assert!(ok, "prefill failed after fit check")`: drain
+        // the pool *between* the fit check and the prefill (a wave
+        // admitter interleaving its own allocations does exactly this)
+        // and assert the request is rolled back and re-queued with
+        // nothing allocated.  In release builds the old code silently
+        // pushed a pageless session into the active set; this test
+        // asserts the handled path, so it holds under both profiles.
+        let d = 4;
+        let mut b = ContinuousBatcher::new(BatcherConfig {
+            page_size: 8,
+            d,
+            max_pages: 4,
+            max_active: 2,
+            skip: true,
+            spec: SpecPolicy::Off,
+        });
+        b.submit(request(0, 1, 32, d, 16, 1234)).unwrap(); // prompt: 2 pages
+        // the interleaved allocation: every page is taken by the time
+        // admit_one runs, even though the fit check would have passed
+        let stolen: Vec<_> = (0..4).map(|_| b.pool.try_alloc().unwrap()).collect();
+        let cap = crate::telemetry::log::capture();
+        let req = b.waiting.pop_front().unwrap();
+        assert!(!b.admit_one(req), "prefill must fail on the drained pool");
+        assert!(
+            cap.take().iter().any(|r| r.level == crate::telemetry::log::Level::Warn
+                && r.target == "decode"
+                && r.msg.contains("re-queued")),
+            "the rejected prefill must be logged"
+        );
+        drop(cap);
+        assert_eq!(b.active_len(), 0, "no pageless session may enter the active set");
+        assert_eq!(b.waiting_len(), 1, "the request must be re-queued");
+        assert_eq!(b.waiting.front().unwrap().id, 0);
+        assert_eq!(b.pool.in_use(), 4, "a failed prefill must not allocate");
+        assert!(b.pool.conserved());
+        // once the contention clears, the re-queued request completes
+        for id in stolen {
+            b.pool.free_page(id);
+        }
+        let report = b.run().unwrap();
+        assert_eq!(report.sequences, 1);
+        assert_eq!(report.tokens, 32 - 16);
+        assert_eq!(report.prefill_rejects, 1);
+        assert_eq!(b.pool().in_use(), 0);
+    }
+
+    #[test]
+    fn prop_decoded_tokens_match_retired_generation_under_preemption() {
+        // satellite audit of the preemption accounting
+        // (`decoded_tokens -= pos - prompt_len`): across random
+        // preempt/readmit interleavings — tight pools preempt
+        // organically, mid-run submissions churn the victim order — the
+        // counter must always equal
+        //     Σ retired gen_len  +  Σ active (pos - prompt_len)
+        // after every scheduler iteration, and exactly Σ retired
+        // gen_len once drained.  A double-subtract on a session
+        // preempted more than once would wrap the u64 or break the
+        // equality; the invariant holding here is the audit's verdict
+        // that subtracting the *cursor delta since the last admission*
+        // is correct however many times a session is evicted.
+        crate::util::prop::check(
+            "decoded-tokens-preemption",
+            crate::util::prop::PropConfig { cases: 8, base_seed: 0xDEC0D },
+            |rng| {
+                let d = 4;
+                let mut b = ContinuousBatcher::new(BatcherConfig {
+                    page_size: 4,
+                    // one sequence needs <= 8 pages; several don't fit
+                    max_pages: 8 + rng.range(0, 4) as usize,
+                    d,
+                    max_active: 4,
+                    skip: true,
+                    spec: SpecPolicy::Off,
+                });
+                let mut next_id = 0u64;
+                let mut submit_random = |b: &mut ContinuousBatcher, rng: &mut Rng| {
+                    let n = 16 + rng.range(0, 16) as usize;
+                    let prompt = rng.range(0, (n / 2) as i64) as usize;
+                    let req = request(next_id, 1, n, d, prompt, 3000 + next_id);
+                    next_id += 1;
+                    b.submit(req).unwrap();
+                    (n - prompt) as u64
+                };
+                let mut expect_total = 0u64;
+                for _ in 0..3 {
+                    expect_total += submit_random(&mut b, rng);
+                }
+                let mut steps = 0;
+                loop {
+                    let more = b.step().map_err(|e| e.to_string())?;
+                    // mid-run invariant: useful tokens == retired + live
+                    let retired: u64 =
+                        b.finished.iter().map(|r| (r.n - r.prompt_len) as u64).sum();
+                    let live: u64 =
+                        b.active.iter().map(|s| (s.pos - s.req.prompt_len) as u64).sum();
+                    if b.decoded_tokens != retired + live {
+                        return Err(format!(
+                            "step {steps}: decoded_tokens {} != retired {retired} + live {live}",
+                            b.decoded_tokens
+                        ));
+                    }
+                    if steps < 10 && rng.f64() < 0.4 {
+                        expect_total += submit_random(&mut b, rng);
+                    }
+                    steps += 1;
+                    if !more && b.waiting_len() == 0 {
+                        break;
+                    }
+                    if steps > 10_000 {
+                        return Err("batcher failed to terminate".into());
+                    }
+                }
+                let retired: u64 =
+                    b.finished.iter().map(|r| (r.n - r.prompt_len) as u64).sum();
+                if b.decoded_tokens != retired || retired != expect_total {
+                    return Err(format!(
+                        "drained: decoded_tokens {} retired {retired} submitted {expect_total}",
+                        b.decoded_tokens
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn itl_gaps_are_per_token_and_consistent_with_mean() {
+        // satellite: a retired response carries one gap per consecutive
+        // generated-token pair (gen-1 of them), the mean field is the
+        // mean of exactly those gaps, and the batcher's ITL histogram
+        // holds per-token samples — its count is Σ (gen_i - 1), not the
+        // number of sequences
+        let d = 8;
+        let reqs: Vec<DecodeRequest> = [(0u64, 40usize, 8usize), (1, 64, 16), (2, 96, 0)]
+            .iter()
+            .map(|&(id, n, p)| request(id, 2, n, d, p, 4000 + id))
+            .collect();
+        let mut b = ContinuousBatcher::new(BatcherConfig {
+            page_size: 16,
+            d,
+            max_pages: 64,
+            max_active: 4,
+            skip: true,
+            spec: SpecPolicy::Off,
+        });
+        for r in &reqs {
+            b.submit(r.clone()).unwrap();
+        }
+        b.run().unwrap();
+        let expected_gaps: u64 = reqs.iter().map(|r| (r.gen_len() - 1) as u64).sum();
+        assert_eq!(b.itl.count(), expected_gaps, "histogram must hold per-token gaps");
+        for resp in b.take_finished() {
+            let gen = resp.n - resp.prompt_len;
+            assert_eq!(resp.itl_gaps_ms.len(), gen - 1);
+            assert!(resp.itl_gaps_ms.iter().all(|&g| g >= 0.0));
+            let mean = resp.itl_gaps_ms.iter().sum::<f64>() / (gen - 1) as f64;
+            assert!((resp.itl_ms - mean).abs() < 1e-9);
+        }
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //! flashmask decode --requests 8           # paged-KV continuous batching
 //! flashmask decode --speculate 4          # + tree-mask speculative decode
 //! flashmask decode --heads 8 --kv-heads 2 # GQA: group-shared KV pages
+//! flashmask serve --rate 200              # streaming router, Poisson load
 //! flashmask metrics                       # telemetry snapshot (JSON)
 //! ```
 
@@ -42,6 +43,15 @@ fn bench_opts(args: &Args) -> Result<BenchOpts> {
 
 fn main() -> Result<()> {
     let args = Args::parse_env().map_err(|e| anyhow!(e))?;
+    // log verbosity: the FLASHMASK_LOG env var sets the default, an
+    // explicit --log-level flag overrides it (both accept
+    // debug|info|warn|error)
+    flashmask::telemetry::log::init_from_env();
+    if let Some(lv) = args.get("log-level") {
+        let level = flashmask::telemetry::log::parse_level(lv)
+            .ok_or_else(|| anyhow!("--log-level must be debug|info|warn|error (got '{lv}')"))?;
+        flashmask::telemetry::log::set_min_level(level);
+    }
     let sub = args.subcommand.clone().unwrap_or_else(|| "help".into());
     match sub.as_str() {
         "info" => cmd_info(&args)?,
@@ -64,6 +74,7 @@ fn main() -> Result<()> {
         "e2e-model" => reports::e2e_report(11),
         "gen-data" => cmd_gen_data(&args)?,
         "decode" => cmd_decode(&args)?,
+        "serve" => cmd_serve(&args)?,
         "metrics" => cmd_metrics(&args)?,
         "help" | _ => {
             println!("{}", HELP);
@@ -102,12 +113,28 @@ subcommands:
                    --accept-rate A, default 1.0, for throughput studies);
                    --adaptive shrinks/grows the draft budget from a
                    rolling acceptance window (dynamic k)
+  serve            streaming serve router under Poisson load: token-
+                   budget admission (TGI-style) + per-request streams
+                   (--requests R --n N --d D --heads H --kv-heads K
+                   --page P --max-pages M --rate req/s --seed S
+                   --max-active A --dense)
+                   budget knobs: --prefill-budget T caps prompt tokens
+                   per admission wave, --total-budget T caps worst-case
+                   running tokens (default: pool token capacity, i.e.
+                   preemption-free), --waiting-served-ratio F pauses
+                   prefill until a wave is worth the decode stall,
+                   --max-waiting W forces admission after W decode
+                   iterations (starvation valve)
+                   --compare-fifo replays the identical arrival trace
+                   through the strict-FIFO page-count batcher and
+                   prints the head-to-head latency table
   metrics          run a small prefill+decode workload and dump the
                    telemetry registry snapshot + span tree as JSON
                    (--n N --d D --requests R --seed S; --no-trace
                    disables span collection; --sample-every K keeps
                    every K-th request trace)
-common: --artifacts DIR (default ./artifacts)";
+common: --artifacts DIR (default ./artifacts)
+        --log-level debug|info|warn|error (or FLASHMASK_LOG env var)";
 
 fn cmd_info(args: &Args) -> Result<()> {
     let rt = Runtime::open(&artifacts_dir(args))?;
@@ -326,6 +353,144 @@ fn cmd_decode(args: &Args) -> Result<()> {
     println!("ITL  p50/p99  : {:.2} / {:.2} ms", rep.p50_itl_ms, rep.p99_itl_ms);
     if rep.fallbacks > 0 {
         println!("fallbacks     : {} (backend lacked a capability; see log)", rep.fallbacks);
+    }
+    Ok(())
+}
+
+/// `flashmask serve`: drive the streaming router under a seeded
+/// Poisson arrival trace and report TTFT / per-token ITL percentiles;
+/// with `--compare-fifo` the identical trace is replayed through the
+/// strict-FIFO page-count batcher for a head-to-head latency table
+/// (DESIGN.md §Serving).
+fn cmd_serve(args: &Args) -> Result<()> {
+    use flashmask::decode::{
+        BatcherConfig, ContinuousBatcher, DecodeRequest, HeadLayout, SpecPolicy,
+    };
+    use flashmask::mask::builders;
+    use flashmask::server::{poisson_arrivals_ms, replay_arrivals, Router, RouterConfig};
+    use flashmask::util::rng::Rng;
+
+    let n_requests = args.get_usize("requests", 12).map_err(|e| anyhow!(e))?;
+    let n = args.get_usize("n", 256).map_err(|e| anyhow!(e))?;
+    let d = args.get_usize("d", 32).map_err(|e| anyhow!(e))?;
+    let heads = args.get_usize("heads", 2).map_err(|e| anyhow!(e))?;
+    let kv_heads = args.get_usize("kv-heads", heads).map_err(|e| anyhow!(e))?;
+    let page = args.get_usize("page", 16).map_err(|e| anyhow!(e))?;
+    let max_pages = args.get_usize("max-pages", 4096).map_err(|e| anyhow!(e))?;
+    let max_active = args.get_usize("max-active", 8).map_err(|e| anyhow!(e))?;
+    let rate = args.get_f64("rate", 200.0).map_err(|e| anyhow!(e))?;
+    let seed = args.get_u64("seed", 7).map_err(|e| anyhow!(e))?;
+    let skip = !args.flag("dense");
+    let prefill_budget = args.get_usize("prefill-budget", 4096).map_err(|e| anyhow!(e))?;
+    let total_budget =
+        args.get_usize("total-budget", max_pages * page / kv_heads.max(1)).map_err(|e| anyhow!(e))?;
+    let ratio = args.get_f64("waiting-served-ratio", 1.2).map_err(|e| anyhow!(e))?;
+    let max_waiting = args.get_usize("max-waiting", 20).map_err(|e| anyhow!(e))?;
+    let compare_fifo = args.flag("compare-fifo");
+    anyhow::ensure!(n >= 8, "--n must be >= 8 (got {n})");
+    anyhow::ensure!(rate > 0.0, "--rate must be positive (got {rate})");
+    anyhow::ensure!(
+        kv_heads >= 1 && heads % kv_heads == 0,
+        "--kv-heads must divide --heads ({heads} % {kv_heads} != 0)"
+    );
+    let layout = HeadLayout::new(heads, kv_heads);
+
+    // the same ragged request set + arrival trace for every loop
+    let mut rng = Rng::new(seed);
+    let make_requests = |rng: &mut Rng| -> Vec<DecodeRequest> {
+        (0..n_requests)
+            .map(|i| {
+                let ni = (n / 2 + (rng.range(0, (n / 2) as i64) as usize)).max(2 * page);
+                let mask = match i % 4 {
+                    0 => builders::causal(ni),
+                    1 => builders::sliding_window(ni, (ni / 8).max(1)),
+                    2 => builders::causal_document(ni, &[ni / 2, ni - ni / 2]),
+                    _ => builders::random_eviction(ni, rng),
+                };
+                let mut mk = |hh: usize| {
+                    (0..hh * ni * d).map(|_| rng.normal_f32() * 0.5).collect::<Vec<f32>>()
+                };
+                let q = mk(layout.q_heads);
+                let k = mk(layout.kv_heads);
+                let v = mk(layout.kv_heads);
+                DecodeRequest::with_layout(i as u64, layout, ni, d, ni / 4, q, k, v, mask)
+            })
+            .collect()
+    };
+    let reqs = make_requests(&mut rng);
+    let due = poisson_arrivals_ms(rate, n_requests, &mut rng);
+    let batcher_cfg =
+        BatcherConfig { page_size: page, d, max_pages, max_active, skip, spec: SpecPolicy::Off };
+
+    println!(
+        "serving {n_requests} requests (ragged n up to {n}, layout {layout}, d={d}) \
+         at {rate:.0} req/s Poisson"
+    );
+    let mut router = Router::new(RouterConfig {
+        batcher: batcher_cfg,
+        max_batch_prefill_tokens: prefill_budget,
+        max_batch_total_tokens: total_budget,
+        waiting_served_ratio: ratio,
+        max_waiting_tokens: max_waiting,
+    });
+    let mut rxs = Vec::new();
+    let wall_ms = replay_arrivals(reqs.clone(), &due, |cmd| match cmd {
+        Some(req) => {
+            rxs.push(router.submit(req)?);
+            Ok(true)
+        }
+        None => router.tick(),
+    })?;
+    let rep = router.report();
+    let streamed: usize = rxs.iter().map(|rx| rx.try_iter().count()).sum();
+
+    println!("\n=== router report (token-budget admission) ===");
+    println!("sequences     : {} retired, {} cancelled", rep.sequences, rep.cancelled);
+    println!("decoded tokens: {} ({} stream events)", rep.tokens, streamed);
+    println!("throughput    : {:.0} tokens/s over {:.0} ms wall", rep.tokens_per_s, wall_ms);
+    println!(
+        "admission     : {} waves ({} forced), {} preemptions, {} prefill rejects",
+        rep.waves, rep.forced_waves, rep.preemptions, rep.prefill_rejects
+    );
+    println!("peak pool use : {} pages", rep.peak_pages);
+    println!("pages skipped : {:.1}%", rep.pages_skip_fraction * 100.0);
+    println!("TTFT p50/p99  : {:.2} / {:.2} ms", rep.ttft_p50_ms, rep.ttft_p99_ms);
+    println!("ITL  p50/p99  : {:.2} / {:.2} ms (per-token gaps)", rep.itl_p50_ms, rep.itl_p99_ms);
+
+    if compare_fifo {
+        let mut b = ContinuousBatcher::new(batcher_cfg);
+        let fifo_wall = replay_arrivals(reqs, &due, |cmd| match cmd {
+            Some(req) => {
+                b.submit(req)?;
+                Ok(true)
+            }
+            None => b.step(),
+        })?;
+        let f = b.report();
+        let mut t = Table::new(vec!["metric", "fifo (page-count)", "router (token-budget)"])
+            .title("identical Poisson trace, head-to-head");
+        t.row(vec![
+            "TTFT p50/p99 ms".into(),
+            format!("{:.2} / {:.2}", f.ttft_p50_ms, f.ttft_p99_ms),
+            format!("{:.2} / {:.2}", rep.ttft_p50_ms, rep.ttft_p99_ms),
+        ]);
+        t.row(vec![
+            "ITL p50/p99 ms".into(),
+            format!("{:.2} / {:.2}", f.itl_p50_ms, f.itl_p99_ms),
+            format!("{:.2} / {:.2}", rep.itl_p50_ms, rep.itl_p99_ms),
+        ]);
+        t.row(vec![
+            "tokens/s".into(),
+            format!("{:.0}", f.tokens_per_s),
+            format!("{:.0}", rep.tokens_per_s),
+        ]);
+        t.row(vec!["preemptions".into(), f.preemptions.to_string(), rep.preemptions.to_string()]);
+        t.row(vec![
+            "wall ms".into(),
+            format!("{fifo_wall:.0}"),
+            format!("{wall_ms:.0}"),
+        ]);
+        t.print();
     }
     Ok(())
 }

@@ -69,8 +69,11 @@ pub struct ServeReport {
     /// §Telemetry).
     pub p50_ttft_ms: f64,
     pub p99_ttft_ms: f64,
-    /// Decode-path inter-token-latency percentiles (per-sequence mean
-    /// gap; 0 when no multi-token sequence retired).
+    /// Decode-path inter-token-latency percentiles over *per-token*
+    /// gap samples — every consecutive generated-token pair contributes
+    /// one sample, so individual stalls land in the tail instead of
+    /// being averaged away per sequence (0 when no multi-token
+    /// sequence retired).
     pub p50_itl_ms: f64,
     pub p99_itl_ms: f64,
 }
@@ -241,9 +244,9 @@ impl ServeEngine {
         for resp in batcher.take_finished() {
             self.ttft.record_ms(resp.ttft_ms);
             reg.observe_ms("serve.ttft_ms", resp.ttft_ms);
-            if resp.n - resp.prompt_len > 1 {
-                self.itl.record_ms(resp.itl_ms);
-                reg.observe_ms("serve.itl_ms", resp.itl_ms);
+            for &gap in &resp.itl_gaps_ms {
+                self.itl.record_ms(gap);
+                reg.observe_ms("serve.itl_ms", gap);
             }
             reg.add("serve.requests", 1);
             reg.add("serve.tokens", (resp.n - resp.prompt_len) as u64);

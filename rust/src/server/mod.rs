@@ -9,11 +9,23 @@
 //! [`crate::decode`]), and an [`engine`] that executes them (CPU engine
 //! or the AOT `attn_fwd` artifact via PJRT) and reports per-request
 //! latency plus aggregate throughput.
+//!
+//! On top of the decode stack sits the [`router`]: an async-style
+//! streaming front end with TGI-style token-budget admission
+//! (`max_batch_prefill_tokens` / `max_batch_total_tokens` /
+//! `waiting_served_ratio` / `max_waiting_tokens`), per-request
+//! [`std::sync::mpsc`] token streams, and a Poisson load
+//! generator + trace replayer for latency benchmarking (DESIGN.md
+//! §Serving).
 
 pub mod engine;
 pub mod queue;
+pub mod router;
 pub mod scheduler;
 
 pub use engine::{EngineKind, ServeEngine, ServeReport};
 pub use queue::{Request, RequestQueue, Response};
+pub use router::{
+    poisson_arrivals_ms, replay_arrivals, Router, RouterConfig, RouterReport, StreamEvent,
+};
 pub use scheduler::{BatchPlan, Scheduler, SchedulerConfig};

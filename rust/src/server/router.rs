@@ -1,0 +1,917 @@
+//! Async-style streaming serve router with token-budget admission.
+//!
+//! [`ContinuousBatcher`] is a synchronous admit/step-all/retire loop
+//! whose admission is strict FIFO on bare *page counts*: it admits the
+//! head-of-line request whenever its prompt pages fit, over-committing
+//! the pool against decode growth and paying for it later with
+//! preemption (evict + full re-decode).  This module is the serving
+//! front end on top of the same [`DecodeSession`] machinery — an event
+//! loop (one [`Router::tick`] per decode iteration; a single thread
+//! simulates the async runtime, so no new runtime dependency) that
+//! schedules the way production routers do (TGI's
+//! `Infer`/`batching_task`):
+//!
+//! * **Token-budget admission in waves.**  Waiting requests are
+//!   admitted in prefill waves bounded by
+//!   [`RouterConfig::max_batch_prefill_tokens`] (prompt tokens per
+//!   wave — bounds the decode stall a wave causes) and
+//!   [`RouterConfig::max_batch_total_tokens`] (worst-case token
+//!   residency of the running batch — bounds per-token latency and,
+//!   set at or below the pool's token capacity, makes admission
+//!   reservation-safe: the router also reserves every sequence's
+//!   worst-case page demand, so it never has to preempt to keep its
+//!   own promises).  [`RouterConfig::waiting_served_ratio`] and
+//!   [`RouterConfig::max_waiting_tokens`] arbitrate *when* decode is
+//!   paused for a wave: under decode pressure a wave must be worth the
+//!   stall (at least `active × ratio` requests), unless
+//!   `max_waiting_tokens` decode iterations have passed since the last
+//!   wave, which forces admission so queued requests cannot starve.
+//! * **Per-request streaming.**  [`Router::submit`] returns the
+//!   receiving end of an unbounded [`std::sync::mpsc`] channel; the
+//!   event loop emits [`StreamEvent`]s as the live batch decodes —
+//!   `Admitted`, one `Token` per committed token (a speculative verify
+//!   pass delivers its accepted prefix as a burst), `Preempted` when
+//!   pool pressure evicts the session (progress is re-streamed from
+//!   token 0 after readmission), and finally `Done` with the full
+//!   response.  A dropped receiver is the cancellation signal: the
+//!   next failed send retires the session mid-flight and releases its
+//!   pages.
+//! * **Mid-flight filter/concatenate.**  Finished and cancelled
+//!   sessions are filtered out of the live batch the iteration they
+//!   complete, and admission waves concatenate onto it — no
+//!   end-of-batch barrier.
+//!
+//! The load side lives here too: [`poisson_arrivals_ms`] builds a
+//! seeded open-loop Poisson arrival trace and [`replay_arrivals`]
+//! replays it against any serving loop (`bench_serve` drives both this
+//! router and the strict-FIFO batcher through it for the head-to-head
+//! TTFT comparison).
+
+use crate::decode::{
+    BatcherConfig, DecodeRequest, DecodeResponse, DecodeSession, DecodeStats, PagePool,
+    StepOutcome,
+};
+use crate::telemetry::{log, metrics, trace, Gauge, Histogram};
+use crate::util::rng::Rng;
+use anyhow::{bail, ensure, Result};
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Serving configuration: the decode substrate plus TGI's four
+/// admission knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct RouterConfig {
+    /// Decode substrate (page pool geometry, `max_active` slot cap,
+    /// page skipping, speculation policy).
+    pub batcher: BatcherConfig,
+    /// Prompt tokens prefilled per admission wave.  A wave stalls
+    /// every running sequence for its whole prefill, so this bounds
+    /// the worst-case inter-token hiccup admission can inject.
+    /// Requests whose prompt alone exceeds it are rejected at submit.
+    pub max_batch_prefill_tokens: usize,
+    /// Worst-case token residency (`Σ n` over running sequences) the
+    /// router will admit.  Set at or below the pool's token capacity
+    /// (`max_pages × page_size / kv_heads`-worth of sequences) it
+    /// makes admission reservation-safe and decode preemption-free —
+    /// the trade the batcher's eager page-count admission refuses.
+    pub max_batch_total_tokens: usize,
+    /// Minimum admission wave size under decode pressure, as a
+    /// fraction of the running batch: a wave must carry at least
+    /// `⌊active × ratio⌋` requests to be worth pausing decode for.
+    /// `0.0` admits eagerly whenever anything fits.
+    pub waiting_served_ratio: f64,
+    /// Decode iterations allowed since the last wave before admission
+    /// is forced despite `waiting_served_ratio` — the starvation
+    /// valve for queued requests under a long-running batch.
+    pub max_waiting_tokens: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig {
+            batcher: BatcherConfig::default(),
+            max_batch_prefill_tokens: 4096,
+            // BatcherConfig::default is 4096 pages × 16 tokens
+            max_batch_total_tokens: 65_536,
+            // TGI defaults for the two pacing knobs
+            waiting_served_ratio: 1.2,
+            max_waiting_tokens: 20,
+        }
+    }
+}
+
+/// One event on a request's stream, in emission order.
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// The prompt was prefilled; decode begins.
+    Admitted,
+    /// Generated token `index` (0-based) committed.  Indices are
+    /// consecutive within one admission; tokens committed together by
+    /// a speculative verify pass arrive as a burst of events.
+    Token { index: usize },
+    /// Pool pressure evicted the session.  Progress is discarded
+    /// (decode is deterministic, the retry reproduces it) and the
+    /// request re-queued: after readmission tokens are re-streamed
+    /// from index 0.
+    Preempted,
+    /// Terminal event: the full response, after which the channel
+    /// closes.
+    Done(Box<DecodeResponse>),
+}
+
+/// Aggregate router statistics.
+#[derive(Clone, Debug)]
+pub struct RouterReport {
+    /// Sequences retired (cancelled ones excluded).
+    pub sequences: usize,
+    /// Useful generated tokens across retired sequences (preempted and
+    /// cancelled work uncounted).
+    pub tokens: u64,
+    pub tokens_per_s: f64,
+    pub preemptions: u64,
+    /// Requests dropped because their stream receiver was gone.
+    pub cancelled: u64,
+    /// Prefills that failed inside a wave after planning (rolled back
+    /// and re-queued) — defensive seam, see `ContinuousBatcher`'s
+    /// `admit_one`.
+    pub prefill_rejects: u64,
+    /// Admission waves that prefilled at least one request.
+    pub waves: u64,
+    /// Waves admitted only because `max_waiting_tokens` expired (the
+    /// ratio gate alone would have kept waiting).
+    pub forced_waves: u64,
+    pub peak_pages: usize,
+    /// Fraction of cache pages skipped across retired sequences.
+    pub pages_skip_fraction: f64,
+    pub drafted_tokens: u64,
+    pub accepted_tokens: u64,
+    /// Time-to-first-token percentiles across retired sequences
+    /// (arrival → first token; log2 buckets, DESIGN.md §Telemetry).
+    pub ttft_p50_ms: f64,
+    pub ttft_p99_ms: f64,
+    /// Inter-token-latency percentiles over *per-token* gap samples.
+    pub itl_p50_ms: f64,
+    pub itl_p99_ms: f64,
+}
+
+/// Streaming serve router: an event loop over [`DecodeSession`]s with
+/// token-budget wave admission.  Drive it with [`tick`](Self::tick)
+/// (one decode iteration) or [`run`](Self::run) (to completion).
+pub struct Router {
+    pub cfg: RouterConfig,
+    pool: PagePool,
+    waiting: VecDeque<DecodeRequest>,
+    active: Vec<DecodeSession>,
+    /// Sender side of each live request's stream.  Requests submitted
+    /// detached have no entry and can never be cancelled.
+    streams: HashMap<u64, Sender<StreamEvent>>,
+    /// Tokens already streamed per active session (reset on
+    /// preemption: the retry re-streams from 0).
+    streamed: HashMap<u64, usize>,
+    finished: Vec<DecodeResponse>,
+    agg: DecodeStats,
+    preemptions: u64,
+    cancelled: u64,
+    prefill_rejects: u64,
+    waves: u64,
+    forced_waves: u64,
+    /// Decode iterations since the last admission wave — TGI's
+    /// `waiting_tokens` counter, compared against `max_waiting_tokens`.
+    ticks_since_wave: usize,
+    decoded_tokens: u64,
+    started: Instant,
+    /// This router's latency distributions (the report's percentiles)…
+    ttft: Histogram,
+    itl: Histogram,
+    /// …mirrored into the process-wide registry (handles resolved once
+    /// so the hot loop never takes the registry lock).
+    g_ttft: Arc<Histogram>,
+    g_itl: Arc<Histogram>,
+    g_active: Arc<Gauge>,
+    g_waiting: Arc<Gauge>,
+}
+
+impl Router {
+    pub fn new(cfg: RouterConfig) -> Router {
+        assert!(cfg.batcher.max_active >= 1, "max_active must be >= 1");
+        assert!(
+            cfg.waiting_served_ratio.is_finite() && cfg.waiting_served_ratio >= 0.0,
+            "waiting_served_ratio must be a finite non-negative fraction"
+        );
+        let reg = metrics::global();
+        Router {
+            cfg,
+            pool: PagePool::new(cfg.batcher.page_size, cfg.batcher.d, cfg.batcher.max_pages),
+            waiting: VecDeque::new(),
+            active: Vec::new(),
+            streams: HashMap::new(),
+            streamed: HashMap::new(),
+            finished: Vec::new(),
+            agg: DecodeStats::default(),
+            preemptions: 0,
+            cancelled: 0,
+            prefill_rejects: 0,
+            waves: 0,
+            forced_waves: 0,
+            ticks_since_wave: 0,
+            decoded_tokens: 0,
+            started: Instant::now(),
+            ttft: Histogram::new(),
+            itl: Histogram::new(),
+            g_ttft: reg.histogram("router.ttft_ms"),
+            g_itl: reg.histogram("router.itl_ms"),
+            g_active: reg.gauge("router.active_peak"),
+            g_waiting: reg.gauge("router.waiting_peak"),
+        }
+    }
+
+    pub fn pool(&self) -> &PagePool {
+        &self.pool
+    }
+
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn waiting_len(&self) -> usize {
+        self.waiting.len()
+    }
+
+    fn is_live(&self, id: u64) -> bool {
+        self.streams.contains_key(&id)
+            || self.waiting.iter().any(|r| r.id == id)
+            || self.active.iter().any(|s| s.req.id == id)
+    }
+
+    /// Reject requests no configuration of this router could ever
+    /// serve: they would wait forever, not just long.
+    fn validate(&self, req: &DecodeRequest) -> Result<()> {
+        req.mask.validate()?;
+        ensure!(
+            req.d == self.cfg.batcher.d,
+            "head dim {} != pool row width {}",
+            req.d,
+            self.cfg.batcher.d
+        );
+        let worst = req.pages_needed(self.cfg.batcher.page_size);
+        ensure!(
+            worst <= self.cfg.batcher.max_pages,
+            "request {} needs up to {worst} pages, pool holds {}",
+            req.id,
+            self.cfg.batcher.max_pages
+        );
+        // budget feasibility: a prompt that alone exceeds the per-wave
+        // prefill budget, or a sequence that alone exceeds the running
+        // token budget, can never be admitted
+        ensure!(
+            req.prompt_len.max(1) <= self.cfg.max_batch_prefill_tokens,
+            "request {} prompt ({} tokens) exceeds max_batch_prefill_tokens ({})",
+            req.id,
+            req.prompt_len,
+            self.cfg.max_batch_prefill_tokens
+        );
+        ensure!(
+            req.n <= self.cfg.max_batch_total_tokens,
+            "request {} needs {} total tokens, max_batch_total_tokens is {}",
+            req.id,
+            req.n,
+            self.cfg.max_batch_total_tokens
+        );
+        ensure!(!self.is_live(req.id), "request id {} is already live", req.id);
+        Ok(())
+    }
+
+    /// Queue a request and return the receiving end of its stream.
+    /// Dropping the receiver cancels the request: the router retires
+    /// the session at its next failed send and releases its pages.
+    pub fn submit(&mut self, req: DecodeRequest) -> Result<Receiver<StreamEvent>> {
+        self.validate(&req)?;
+        let (tx, rx) = channel();
+        self.streams.insert(req.id, tx);
+        self.waiting.push_back(req);
+        self.g_waiting.set_max(self.waiting.len() as u64);
+        Ok(rx)
+    }
+
+    /// Queue a request without a stream (throughput callers that only
+    /// want [`take_finished`](Self::take_finished)).  Detached
+    /// requests cannot be cancelled.
+    pub fn submit_detached(&mut self, req: DecodeRequest) -> Result<()> {
+        self.validate(&req)?;
+        self.waiting.push_back(req);
+        self.g_waiting.set_max(self.waiting.len() as u64);
+        Ok(())
+    }
+
+    /// Send an event on `id`'s stream.  `false` means the receiver is
+    /// gone (client hang-up) and the caller must cancel the request;
+    /// detached requests have no stream and always report delivered.
+    fn emit(&self, id: u64, ev: StreamEvent) -> bool {
+        match self.streams.get(&id) {
+            Some(tx) => tx.send(ev).is_ok(),
+            None => true,
+        }
+    }
+
+    /// Forget a request whose receiver hung up: close its stream and
+    /// count the cancellation (its pages are already released).
+    fn cancel(&mut self, id: u64) {
+        self.streams.remove(&id);
+        self.streamed.remove(&id);
+        self.cancelled += 1;
+        metrics::global().add("router.cancelled", 1);
+        log::info("router", format!("request {id}: stream dropped, cancelled"));
+    }
+
+    /// Plan and run one admission wave if it clears the pacing gates.
+    /// Returns `true` when the wave consumed at least one waiting
+    /// request (admitted or cancelled) — `false` means decode should
+    /// proceed undisturbed.
+    fn admit_wave(&mut self) -> Result<bool> {
+        if self.waiting.is_empty() {
+            return Ok(false);
+        }
+        let forced = self.ticks_since_wave >= self.cfg.max_waiting_tokens;
+        // pacing gate: under decode pressure a wave must be worth the
+        // prefill stall it injects, unless starvation forces it
+        let ratio_min = if self.active.is_empty() {
+            1
+        } else {
+            (((self.active.len() as f64) * self.cfg.waiting_served_ratio).floor() as usize).max(1)
+        };
+        let min_size = if forced { 1 } else { ratio_min };
+
+        // plan the wave: the longest FIFO prefix within all budgets.
+        // Pool feasibility reserves every sequence's *worst-case* page
+        // demand (active remainder + wave), so an admitted sequence can
+        // always decode to completion — budget admission trades prefill
+        // latency for a preemption-free decode plateau.
+        let ps = self.cfg.batcher.page_size;
+        let mut prefill_tokens = 0usize;
+        let mut total_tokens: usize = self.active.iter().map(|s| s.req.n).sum();
+        let reserved: usize =
+            self.active.iter().map(|s| s.req.pages_needed(ps) - s.pages_held()).sum();
+        let mut pages_left = self.pool.available().saturating_sub(reserved);
+        let mut wave: Vec<DecodeRequest> = Vec::new();
+        while self.active.len() + wave.len() < self.cfg.batcher.max_active {
+            let Some(req) = self.waiting.front() else { break };
+            let cost = req.prompt_len.max(1);
+            let worst = req.pages_needed(ps);
+            if prefill_tokens + cost > self.cfg.max_batch_prefill_tokens
+                || total_tokens + req.n > self.cfg.max_batch_total_tokens
+                || worst > pages_left
+            {
+                break;
+            }
+            prefill_tokens += cost;
+            total_tokens += req.n;
+            pages_left -= worst;
+            wave.push(self.waiting.pop_front().unwrap());
+        }
+        if wave.len() < min_size {
+            // not worth stalling decode: restore FIFO order and wait
+            for req in wave.into_iter().rev() {
+                self.waiting.push_front(req);
+            }
+            return Ok(false);
+        }
+        let was_forced = forced && wave.len() < ratio_min;
+
+        let sp = trace::span("router.wave");
+        sp.add("requests", wave.len() as u64);
+        sp.add("prefill_tokens", prefill_tokens as u64);
+        let reg = metrics::global();
+        self.waves += 1;
+        reg.add("router.waves", 1);
+        if was_forced {
+            self.forced_waves += 1;
+            reg.add("router.forced_waves", 1);
+        }
+        for req in wave {
+            let id = req.id;
+            let mut session = DecodeSession::new(req, ps);
+            if let Some(proposer) = self.cfg.batcher.spec.build(id) {
+                session.set_speculation(
+                    proposer,
+                    self.cfg.batcher.spec.k(),
+                    self.cfg.batcher.spec.adaptive(),
+                );
+            }
+            if !session.prefill(&mut self.pool) {
+                // defensive seam (cf. ContinuousBatcher::admit_one):
+                // the reservation above makes this unreachable from
+                // safe configs, but a failed prefill must still roll
+                // back and re-queue, never silently enter the batch
+                self.prefill_rejects += 1;
+                reg.add("router.prefill_rejects", 1);
+                log::warn(
+                    "router",
+                    format!("request {id}: prefill failed inside the wave; re-queued"),
+                );
+                self.waiting.push_front(session.preempt(&mut self.pool));
+                break;
+            }
+            if !self.emit(id, StreamEvent::Admitted) {
+                // the client hung up while the request queued: release
+                // the prompt pages before paying any decode work
+                let _ = session.preempt(&mut self.pool);
+                self.cancel(id);
+                continue;
+            }
+            self.streamed.insert(id, 0);
+            self.active.push(session);
+        }
+        self.ticks_since_wave = 0;
+        self.g_active.set_max(self.active.len() as u64);
+        Ok(true)
+    }
+
+    /// One event-loop iteration: run an admission wave if due, step
+    /// every active session one decode iteration, stream newly
+    /// committed tokens, and filter finished/cancelled sessions out of
+    /// the live batch.  Returns `false` when no work remains.
+    pub fn tick(&mut self) -> Result<bool> {
+        if self.active.is_empty() && self.waiting.is_empty() {
+            return Ok(false);
+        }
+        let waved = self.admit_wave()?;
+        if !waved {
+            self.ticks_since_wave += 1;
+        }
+        if self.active.is_empty() {
+            if self.waiting.is_empty() {
+                return Ok(false);
+            }
+            // an idle router admits unconditionally (wave minimum is 1
+            // and every budget was single-request-checked at submit),
+            // so reaching here without progress is a bug, not
+            // backpressure
+            ensure!(
+                waved,
+                "request {} cannot be admitted into an idle router",
+                self.waiting.front().map(|r| r.id).unwrap_or(0)
+            );
+            return Ok(true);
+        }
+
+        let mut i = 0;
+        while i < self.active.len() {
+            let id = self.active[i].req.id;
+            let before = self.active[i].pos;
+            let outcome = if self.active[i].speculative() {
+                self.active[i].try_speculate(&mut self.pool, self.cfg.batcher.skip)
+            } else {
+                self.active[i].try_step(&mut self.pool, self.cfg.batcher.skip)
+            };
+            match outcome {
+                StepOutcome::NoPage => {
+                    // reservation admission makes this unreachable, but
+                    // the batcher's newest-first preemption is kept as
+                    // the defensive fallback: fail soft, not loud
+                    if self.active.len() == 1 {
+                        bail!(
+                            "session {id} stalled alone on an exhausted pool ({} pages)",
+                            self.pool.capacity()
+                        );
+                    }
+                    let victim = self.active.len() - 1;
+                    let s = self.active.remove(victim);
+                    let vid = s.req.id;
+                    self.preemptions += 1;
+                    metrics::global().add("router.preemptions", 1);
+                    self.decoded_tokens -= (s.pos - s.req.prompt_len) as u64;
+                    self.streamed.remove(&vid);
+                    let req = s.preempt(&mut self.pool);
+                    if self.emit(vid, StreamEvent::Preempted) {
+                        self.waiting.push_front(req);
+                    } else {
+                        self.cancel(vid);
+                    }
+                }
+                StepOutcome::Stepped | StepOutcome::Finished => {
+                    self.decoded_tokens += (self.active[i].pos - before) as u64;
+                    // stream every token this iteration committed
+                    let gen = self.active[i].pos - self.active[i].req.prompt_len;
+                    let from = self.streamed.get(&id).copied().unwrap_or(0);
+                    let mut delivered = true;
+                    for index in from..gen {
+                        if !self.emit(id, StreamEvent::Token { index }) {
+                            delivered = false;
+                            break;
+                        }
+                    }
+                    if !delivered {
+                        // client hung up mid-decode: filter the session
+                        // out of the live batch and release its pages
+                        let s = self.active.remove(i);
+                        self.decoded_tokens -= (s.pos - s.req.prompt_len) as u64;
+                        let _ = s.preempt(&mut self.pool);
+                        self.cancel(id);
+                        continue; // slot i now holds the next session
+                    }
+                    self.streamed.insert(id, gen);
+                    if outcome == StepOutcome::Finished {
+                        let s = self.active.remove(i);
+                        self.agg.merge(&s.stats);
+                        s.stats.publish();
+                        let resp = s.retire(&mut self.pool);
+                        self.ttft.record_ms(resp.ttft_ms);
+                        self.g_ttft.record_ms(resp.ttft_ms);
+                        for &gap in &resp.itl_gaps_ms {
+                            self.itl.record_ms(gap);
+                            self.g_itl.record_ms(gap);
+                        }
+                        self.streamed.remove(&id);
+                        let _ = self.emit(id, StreamEvent::Done(Box::new(resp.clone())));
+                        self.streams.remove(&id);
+                        self.finished.push(resp);
+                        continue;
+                    }
+                    i += 1;
+                }
+            }
+        }
+        Ok(!(self.active.is_empty() && self.waiting.is_empty()))
+    }
+
+    /// Drive the event loop until every submitted request has retired
+    /// or been cancelled.
+    pub fn run(&mut self) -> Result<RouterReport> {
+        while self.tick()? {}
+        Ok(self.report())
+    }
+
+    /// Completed responses, in retirement order.
+    pub fn take_finished(&mut self) -> Vec<DecodeResponse> {
+        std::mem::take(&mut self.finished)
+    }
+
+    pub fn report(&self) -> RouterReport {
+        RouterReport {
+            sequences: self.finished.len(),
+            tokens: self.decoded_tokens,
+            tokens_per_s: self.decoded_tokens as f64
+                / self.started.elapsed().as_secs_f64().max(1e-9),
+            preemptions: self.preemptions,
+            cancelled: self.cancelled,
+            prefill_rejects: self.prefill_rejects,
+            waves: self.waves,
+            forced_waves: self.forced_waves,
+            peak_pages: self.pool.stats.peak_in_use,
+            pages_skip_fraction: self.agg.skip_fraction(),
+            drafted_tokens: self.agg.drafted,
+            accepted_tokens: self.agg.accepted,
+            ttft_p50_ms: self.ttft.quantile_ms(0.50),
+            ttft_p99_ms: self.ttft.quantile_ms(0.99),
+            itl_p50_ms: self.itl.quantile_ms(0.50),
+            itl_p99_ms: self.itl.quantile_ms(0.99),
+        }
+    }
+}
+
+/// Cumulative Poisson arrival times in ms: exponential inter-arrival
+/// gaps at `rate_per_s`, inverse-CDF sampled from the seeded
+/// generator — the standard memoryless open-loop load model.
+pub fn poisson_arrivals_ms(rate_per_s: f64, count: usize, rng: &mut Rng) -> Vec<f64> {
+    assert!(rate_per_s > 0.0 && rate_per_s.is_finite());
+    let mut t = 0.0;
+    (0..count)
+        .map(|_| {
+            let u = 1.0 - rng.f64(); // (0, 1]: ln never sees 0
+            t += -u.ln() * 1e3 / rate_per_s;
+            t
+        })
+        .collect()
+}
+
+/// Replay a timed arrival trace against a serving loop.
+///
+/// `step(Some(req))` submits a request the moment its arrival time
+/// passes (its `arrived` stamp is refreshed to the true submission
+/// instant, so TTFT measures real queueing); `step(None)` runs one
+/// scheduler iteration and reports whether work remains.  The loop
+/// sleeps only when the system is idle and the next arrival is in the
+/// future.  Returns the replay's wall-clock milliseconds.
+pub fn replay_arrivals<F>(reqs: Vec<DecodeRequest>, due_ms: &[f64], mut step: F) -> Result<f64>
+where
+    F: FnMut(Option<DecodeRequest>) -> Result<bool>,
+{
+    assert_eq!(reqs.len(), due_ms.len(), "one arrival time per request");
+    let t0 = Instant::now();
+    let mut pending: VecDeque<DecodeRequest> = VecDeque::from(reqs);
+    let mut next = 0usize;
+    loop {
+        if !pending.is_empty() && t0.elapsed().as_secs_f64() * 1e3 >= due_ms[next] {
+            let mut req = pending.pop_front().unwrap();
+            next += 1;
+            req.arrived = Instant::now();
+            step(Some(req))?;
+            continue;
+        }
+        let more = step(None)?;
+        if !more {
+            if pending.is_empty() {
+                break;
+            }
+            let wait_ms = (due_ms[next] - t0.elapsed().as_secs_f64() * 1e3).max(0.0);
+            std::thread::sleep(Duration::from_micros((wait_ms * 1e3) as u64 + 1));
+        }
+    }
+    Ok(t0.elapsed().as_secs_f64() * 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decode::{ContinuousBatcher, SpecPolicy};
+    use crate::mask::builders;
+
+    fn rand_vec(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32() * 0.5).collect()
+    }
+
+    fn request(id: u64, n: usize, d: usize, prompt: usize, seed: u64) -> DecodeRequest {
+        let mut rng = Rng::new(seed);
+        DecodeRequest::new(
+            id,
+            1,
+            n,
+            d,
+            prompt,
+            rand_vec(n * d, &mut rng),
+            rand_vec(n * d, &mut rng),
+            rand_vec(n * d, &mut rng),
+            builders::causal(n),
+        )
+    }
+
+    fn cfg(page_size: usize, d: usize, max_pages: usize, max_active: usize) -> RouterConfig {
+        RouterConfig {
+            batcher: BatcherConfig {
+                page_size,
+                d,
+                max_pages,
+                max_active,
+                skip: true,
+                spec: SpecPolicy::Off,
+            },
+            max_batch_prefill_tokens: 4096,
+            max_batch_total_tokens: max_pages * page_size,
+            waiting_served_ratio: 1.2,
+            max_waiting_tokens: 20,
+        }
+    }
+
+    /// Drain a stream and assert its ordering contract: `Admitted`
+    /// first, consecutive `Token` indices from 0 (restarting after
+    /// each `Preempted`), one terminal `Done`.
+    fn drain_stream(rx: &Receiver<StreamEvent>) -> (usize, Option<DecodeResponse>) {
+        let mut expect = 0usize;
+        let mut admitted = false;
+        let mut done = None;
+        while let Ok(ev) = rx.try_recv() {
+            assert!(done.is_none(), "no events may follow Done");
+            match ev {
+                StreamEvent::Admitted => {
+                    assert!(!admitted, "Admitted must not repeat without a Preempted");
+                    admitted = true;
+                }
+                StreamEvent::Token { index } => {
+                    assert!(admitted, "tokens require admission");
+                    assert_eq!(index, expect, "token indices must be consecutive");
+                    expect += 1;
+                }
+                StreamEvent::Preempted => {
+                    assert!(admitted);
+                    admitted = false;
+                    expect = 0;
+                }
+                StreamEvent::Done(resp) => done = Some(*resp),
+            }
+        }
+        (expect, done)
+    }
+
+    #[test]
+    fn router_streams_tokens_and_matches_batcher_outputs() {
+        // the router is a scheduler, not a kernel: its retired outputs
+        // must be byte-identical to the strict-FIFO batcher's for the
+        // same requests, and every stream must follow the contract
+        let d = 8;
+        let reqs: Vec<DecodeRequest> = [(0u64, 40usize, 8usize), (1, 64, 16), (2, 96, 0)]
+            .iter()
+            .map(|&(id, n, p)| request(id, n, d, p, 7000 + id))
+            .collect();
+
+        let mut b = ContinuousBatcher::new(BatcherConfig {
+            page_size: 16,
+            d,
+            max_pages: 64,
+            max_active: 4,
+            skip: true,
+            spec: SpecPolicy::Off,
+        });
+        let mut r = Router::new(cfg(16, d, 64, 4));
+        let mut rxs = Vec::new();
+        for req in &reqs {
+            b.submit(req.clone()).unwrap();
+            rxs.push(r.submit(req.clone()).unwrap());
+        }
+        b.run().unwrap();
+        let report = r.run().unwrap();
+        assert_eq!(report.sequences, 3);
+        assert_eq!(report.cancelled, 0);
+        assert_eq!(report.tokens, (40 - 8) + (64 - 16) + 96);
+        assert!(report.waves >= 1);
+        assert_eq!(r.pool().in_use(), 0);
+
+        let mut from_batcher = b.take_finished();
+        let mut from_router = r.take_finished();
+        from_batcher.sort_by_key(|x| x.id);
+        from_router.sort_by_key(|x| x.id);
+        for (a, c) in from_batcher.iter().zip(&from_router) {
+            assert_eq!(a.id, c.id);
+            assert_eq!(a.o, c.o, "req {}: router output diverged from batcher", a.id);
+        }
+        for (req, rx) in reqs.iter().zip(&rxs) {
+            let (tokens, done) = drain_stream(rx);
+            assert_eq!(tokens, req.gen_len(), "req {}: one Token event per token", req.id);
+            let resp = done.expect("stream must end with Done");
+            assert_eq!(resp.id, req.id);
+            assert_eq!(resp.itl_gaps_ms.len(), req.gen_len() - 1);
+        }
+    }
+
+    #[test]
+    fn infeasible_budget_requests_rejected_at_submit() {
+        let d = 4;
+        let mut c = cfg(8, d, 64, 4);
+        c.max_batch_prefill_tokens = 8;
+        c.max_batch_total_tokens = 64;
+        let mut r = Router::new(c);
+        // prompt alone exceeds the per-wave prefill budget
+        let err = r.submit(request(0, 32, d, 16, 1)).unwrap_err();
+        assert!(err.to_string().contains("max_batch_prefill_tokens"), "{err}");
+        // total sequence length alone exceeds the running token budget
+        let err = r.submit(request(1, 96, d, 4, 2)).unwrap_err();
+        assert!(err.to_string().contains("max_batch_total_tokens"), "{err}");
+        // a feasible request still passes, and duplicate ids do not
+        let rx = r.submit(request(2, 32, d, 4, 3)).unwrap();
+        assert!(r.submit(request(2, 32, d, 4, 4)).is_err(), "duplicate live id");
+        let report = r.run().unwrap();
+        assert_eq!(report.sequences, 1);
+        drop(rx);
+    }
+
+    #[test]
+    fn waiting_served_ratio_pauses_prefill_until_forced() {
+        // decode pressure: with 2 running and ratio 2.0 a 1-request
+        // wave is not worth the stall — admission must wait until
+        // max_waiting_tokens decode iterations force it
+        let d = 4;
+        let mut c = cfg(8, d, 64, 8);
+        c.waiting_served_ratio = 2.0;
+        c.max_waiting_tokens = 4;
+        let mut r = Router::new(c);
+        let mut rxs = Vec::new();
+        for id in 0..2u64 {
+            rxs.push(r.submit(request(id, 64, d, 32, 8000 + id)).unwrap());
+        }
+        assert!(r.tick().unwrap()); // first wave admits both
+        assert_eq!(r.active_len(), 2);
+        assert_eq!(r.report().waves, 1);
+        rxs.push(r.submit(request(2, 64, d, 32, 8002)).unwrap());
+        // ratio gate: floor(2 × 2.0) = 4 > 1 waiting, so decode runs
+        // undisturbed while the starvation counter climbs…
+        for _ in 0..4 {
+            assert!(r.tick().unwrap());
+            assert_eq!(r.active_len(), 2, "wave must pause under the ratio gate");
+            assert_eq!(r.waiting_len(), 1);
+        }
+        // …and the max_waiting_tokens valve forces the admission
+        assert!(r.tick().unwrap());
+        assert_eq!(r.active_len(), 3, "forced wave must admit the straggler");
+        let report = r.run().unwrap();
+        assert_eq!(report.sequences, 3);
+        assert_eq!(report.waves, 2);
+        assert_eq!(report.forced_waves, 1);
+        for rx in &rxs {
+            let (_, done) = drain_stream(rx);
+            assert!(done.is_some());
+        }
+    }
+
+    #[test]
+    fn dropped_receiver_cancels_mid_decode_and_releases_pages() {
+        // the client hangs up mid-decode: the session must be filtered
+        // out of the live batch, its pages released, the other request
+        // unaffected
+        let d = 4;
+        let mut r = Router::new(cfg(8, d, 64, 4));
+        let rx0 = r.submit(request(0, 48, d, 16, 9000)).unwrap();
+        let rx1 = r.submit(request(1, 48, d, 16, 9001)).unwrap();
+        for _ in 0..4 {
+            assert!(r.tick().unwrap());
+        }
+        assert_eq!(r.active_len(), 2);
+        drop(rx0);
+        let report = r.run().unwrap();
+        assert_eq!(report.cancelled, 1);
+        assert_eq!(report.sequences, 1, "only the surviving request retires");
+        assert_eq!(r.pool().in_use(), 0, "cancelled session must release its pages");
+        assert!(r.pool().conserved());
+        let (tokens, done) = drain_stream(&rx1);
+        assert_eq!(tokens, 32);
+        assert_eq!(done.unwrap().id, 1);
+        // cancelled work is uncounted, like preempted work
+        assert_eq!(report.tokens, 32);
+    }
+
+    #[test]
+    fn total_token_budget_bounds_concurrency_without_preemption() {
+        // max_batch_total_tokens 128 with n=64 sequences: at most two
+        // run at once, everything completes, and reservation admission
+        // never needs to preempt
+        let d = 4;
+        let mut c = cfg(8, d, 64, 8);
+        c.max_batch_total_tokens = 128;
+        let mut r = Router::new(c);
+        let mut rxs = Vec::new();
+        for id in 0..5u64 {
+            rxs.push(r.submit(request(id, 64, d, 8, 9100 + id)).unwrap());
+        }
+        loop {
+            if !r.tick().unwrap() {
+                break;
+            }
+            assert!(r.active_len() <= 2, "token budget must cap concurrency");
+        }
+        let report = r.report();
+        assert_eq!(report.sequences, 5);
+        assert_eq!(report.preemptions, 0, "reservation admission never preempts");
+        assert_eq!(r.pool().in_use(), 0);
+        for rx in &rxs {
+            let (tokens, done) = drain_stream(rx);
+            assert_eq!(tokens, 64 - 8);
+            assert!(done.is_some());
+        }
+    }
+
+    #[test]
+    fn detached_requests_complete_without_streams() {
+        let d = 4;
+        let mut r = Router::new(cfg(8, d, 64, 4));
+        for id in 0..3u64 {
+            r.submit_detached(request(id, 32, d, 8, 9200 + id)).unwrap();
+        }
+        let report = r.run().unwrap();
+        assert_eq!(report.sequences, 3);
+        assert_eq!(report.cancelled, 0);
+        assert_eq!(r.take_finished().len(), 3);
+    }
+
+    #[test]
+    fn poisson_arrivals_are_monotone_and_rate_scaled() {
+        let mut rng = Rng::new(42);
+        let arr = poisson_arrivals_ms(100.0, 500, &mut rng);
+        assert_eq!(arr.len(), 500);
+        assert!(arr.windows(2).all(|w| w[1] >= w[0]), "arrival times must be monotone");
+        // mean inter-arrival ≈ 10ms at 100 req/s; the seeded sample
+        // mean stays within a loose statistical band
+        let mean = arr.last().unwrap() / 500.0;
+        assert!((5.0..20.0).contains(&mean), "mean gap {mean}ms");
+    }
+
+    #[test]
+    fn replay_drives_router_under_poisson_load() {
+        // end-to-end: a seeded Poisson trace replayed against the
+        // router; every request must retire with a full stream
+        let d = 4;
+        let reqs: Vec<DecodeRequest> =
+            (0..6u64).map(|id| request(id, 40, d, 8, 9300 + id)).collect();
+        let mut rng = Rng::new(7);
+        let due = poisson_arrivals_ms(2000.0, reqs.len(), &mut rng);
+        let mut r = Router::new(cfg(8, d, 64, 4));
+        let mut rxs = Vec::new();
+        let wall_ms = replay_arrivals(reqs, &due, |cmd| match cmd {
+            Some(req) => {
+                rxs.push(r.submit(req)?);
+                Ok(true)
+            }
+            None => r.tick(),
+        })
+        .unwrap();
+        assert!(wall_ms > 0.0);
+        let report = r.report();
+        assert_eq!(report.sequences, 6);
+        assert_eq!(report.cancelled, 0);
+        assert!(report.ttft_p99_ms >= report.ttft_p50_ms);
+        for rx in &rxs {
+            let (tokens, done) = drain_stream(rx);
+            assert_eq!(tokens, 32);
+            assert!(done.is_some());
+        }
+    }
+}

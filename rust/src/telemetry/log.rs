@@ -55,6 +55,31 @@ pub fn set_min_level(level: Level) {
     MIN_LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+/// Parse a level name — `debug|info|warn|warning|error`, any case.
+pub fn parse_level(s: &str) -> Option<Level> {
+    match s.to_ascii_lowercase().as_str() {
+        "debug" => Some(Level::Debug),
+        "info" => Some(Level::Info),
+        "warn" | "warning" => Some(Level::Warn),
+        "error" => Some(Level::Error),
+        _ => None,
+    }
+}
+
+/// Environment variable [`init_from_env`] reads the min level from.
+pub const LOG_ENV_VAR: &str = "FLASHMASK_LOG";
+
+/// Wire the min level from `FLASHMASK_LOG` (unset or unparsable leaves
+/// the current level).  The CLI and the bench binaries call this at
+/// startup, so `FLASHMASK_LOG=debug flashmask serve …` surfaces router
+/// traces without a recompile; the CLI's `--log-level` flag overrides
+/// the variable.  Returns the level applied, if any.
+pub fn init_from_env() -> Option<Level> {
+    let lv = parse_level(&std::env::var(LOG_ENV_VAR).ok()?)?;
+    set_min_level(lv);
+    Some(lv)
+}
+
 pub fn min_level() -> Level {
     match MIN_LEVEL.load(Ordering::Relaxed) {
         0 => Level::Debug,
@@ -153,6 +178,32 @@ mod tests {
         debug("t2", "hidden again");
         let recs = cap.take();
         assert_eq!(recs.iter().filter(|r| r.target == "t2").count(), 1);
+    }
+
+    #[test]
+    fn parse_level_accepts_names_any_case() {
+        assert_eq!(parse_level("debug"), Some(Level::Debug));
+        assert_eq!(parse_level("INFO"), Some(Level::Info));
+        assert_eq!(parse_level("Warning"), Some(Level::Warn));
+        assert_eq!(parse_level("error"), Some(Level::Error));
+        assert_eq!(parse_level("verbose"), None);
+        assert_eq!(parse_level(""), None);
+    }
+
+    #[test]
+    fn init_from_env_sets_min_level() {
+        // hold the capture guard to serialize with the other tests
+        // that touch the global min level
+        let _cap = capture();
+        std::env::set_var(LOG_ENV_VAR, "error");
+        assert_eq!(init_from_env(), Some(Level::Error));
+        assert_eq!(min_level(), Level::Error);
+        std::env::set_var(LOG_ENV_VAR, "not-a-level");
+        assert_eq!(init_from_env(), None);
+        assert_eq!(min_level(), Level::Error, "unparsable value leaves the level");
+        std::env::remove_var(LOG_ENV_VAR);
+        assert_eq!(init_from_env(), None);
+        set_min_level(Level::Info); // restore the default for other tests
     }
 
     #[test]

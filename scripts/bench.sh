@@ -5,11 +5,14 @@
 # scaling) and the decode bench smoke, extracts each bench's
 # `== BENCH json ==` blob, and writes the merged machine-readable
 # result to BENCH_kernel.json at the repo root — the blob used to only
-# go to stdout and was lost between runs.
+# go to stdout and was lost between runs.  The serving bench (Poisson
+# arrivals, FIFO-vs-budget head-to-head) is extracted the same way
+# into BENCH_serve.json.
 #
 # Usage:
 #   scripts/bench.sh            # full run, writes BENCH_kernel.json
-#   scripts/bench.sh --smoke    # ~seconds-scale run (same file)
+#                               # and BENCH_serve.json
+#   scripts/bench.sh --smoke    # ~seconds-scale run (same files)
 #   FM_BENCH_OUT=BENCH_before.json scripts/bench.sh
 #                               # e.g. record a "before" snapshot on a
 #                               # baseline checkout for A/B comparisons
@@ -17,6 +20,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 out="${FM_BENCH_OUT:-BENCH_kernel.json}"
+serve_out="${FM_BENCH_SERVE_OUT:-BENCH_serve.json}"
 smoke_arg=""
 if [[ "${1:-}" == "--smoke" ]]; then
   smoke_arg="--smoke"
@@ -32,9 +36,27 @@ cargo bench --bench bench_kernel_masks -- $smoke_arg | tee "$tmp/kernel.out"
 echo "== bench_decode (smoke) =="
 cargo bench --bench bench_decode -- --smoke | tee "$tmp/decode.out"
 
+echo "== bench_serve =="
+# Poisson-arrival serving latency: p50/p99 TTFT and per-token ITL for
+# the strict-FIFO baseline vs the token-budget router on an identical
+# trace; the bench itself asserts the router's p99-TTFT win
+# shellcheck disable=SC2086
+cargo bench --bench bench_serve -- $smoke_arg | tee "$tmp/serve.out"
+
 # everything after the marker line is the JSON blob
 awk 'f{print} /^== BENCH json ==$/{f=1}' "$tmp/kernel.out" > "$tmp/kernel.json"
 awk 'f{print} /^== BENCH json ==$/{f=1}' "$tmp/decode.out" > "$tmp/decode.json"
+awk 'f{print} /^== BENCH json ==$/{f=1}' "$tmp/serve.out" > "$tmp/serve.json"
+
+python3 - "$tmp/serve.json" "$serve_out" <<'PY'
+import json, sys, time
+serve = json.load(open(sys.argv[1]))
+serve["generated_unix"] = int(time.time())
+with open(sys.argv[2], "w") as f:
+    json.dump(serve, f, indent=2)
+    f.write("\n")
+print(f"bench.sh: wrote {sys.argv[2]}")
+PY
 
 python3 - "$tmp/kernel.json" "$tmp/decode.json" "$out" <<'PY'
 import json, sys, time

@@ -108,4 +108,12 @@ echo "== decode bench GQA smoke (group-2 layout vs MHA at equal outputs) =="
 # the speculative table the previous invocation already covered
 cargo bench --bench bench_decode -- --smoke --kv-heads 2 --speculate 1
 
+echo "== serve bench smoke (Poisson router vs FIFO baseline, ISSUE 7 acceptance) =="
+# the bench asserts every admitted request retires with a populated
+# TTFT histogram, the streaming contract holds on every channel
+# (Admitted, gap-free Token{0..gen}, terminal Done), the FIFO baseline
+# thrashes while reservation-safe wave admission never preempts, and
+# the router beats strict FIFO on p99 TTFT at equal delivered tokens
+cargo bench --bench bench_serve -- --smoke
+
 echo "verify.sh: OK"
