@@ -59,6 +59,7 @@ fn main() -> Result<()> {
         max_active: 4,
         skip,
         spec: SpecPolicy::Off, // see examples/spec_decode.rs for the speculative path
+        prefix_cache: false,
     };
     let report = engine.execute_decode(decode_reqs, cfg)?;
 

@@ -56,7 +56,8 @@ fn periodic_request(id: u64, n: usize, heads: usize, d: usize, period: usize, pr
 }
 
 fn run(reqs: &[DecodeRequest], d: usize, spec: SpecPolicy) -> Result<(f64, flashmask::decode::BatcherReport, Vec<DecodeResponse>)> {
-    let cfg = BatcherConfig { page_size: 16, d, max_pages: 4096, max_active: 8, skip: true, spec };
+    let cfg =
+        BatcherConfig { page_size: 16, d, max_pages: 4096, max_active: 8, skip: true, spec, prefix_cache: false };
     let mut b = ContinuousBatcher::new(cfg);
     for r in reqs {
         b.submit(r.clone())?;

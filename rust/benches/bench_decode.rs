@@ -83,14 +83,52 @@ fn gqa_requests(n: usize, d: usize, q_heads: usize, kv_heads: usize, count: usiz
         .collect()
 }
 
+/// Shared-prefix requests: every sequence carries the *same* K/V
+/// content for its first `prefix_tokens` prompt rows (think: one system
+/// prompt) and fresh random rows after that, so the content-addressed
+/// prefix cache can deduplicate the page-aligned prefix while the
+/// suffixes keep the sequences distinct.  Single-head layout.
+fn shared_prefix_requests(
+    n: usize,
+    d: usize,
+    prompt: usize,
+    prefix_tokens: usize,
+    count: usize,
+) -> Vec<DecodeRequest> {
+    assert!(prefix_tokens <= prompt && prompt <= n);
+    let mut rng = Rng::new(1234);
+    let prefix_k: Vec<f32> = (0..prefix_tokens * d).map(|_| rng.normal_f32() * 0.5).collect();
+    let prefix_v: Vec<f32> = (0..prefix_tokens * d).map(|_| rng.normal_f32() * 0.5).collect();
+    (0..count as u64)
+        .map(|id| {
+            let mask = builders::causal(n);
+            let q: Vec<f32> = (0..n * d).map(|_| rng.normal_f32() * 0.5).collect();
+            let mut k = prefix_k.clone();
+            k.extend((0..(n - prefix_tokens) * d).map(|_| rng.normal_f32() * 0.5));
+            let mut v = prefix_v.clone();
+            v.extend((0..(n - prefix_tokens) * d).map(|_| rng.normal_f32() * 0.5));
+            DecodeRequest::new(id, 1, n, d, prompt, q, k, v, mask)
+        })
+        .collect()
+}
+
 fn run(
     reqs: &[DecodeRequest],
     page_size: usize,
     d: usize,
     skip: bool,
     spec: SpecPolicy,
+    prefix_cache: bool,
 ) -> (f64, flashmask::decode::BatcherReport, Vec<DecodeResponse>) {
-    let cfg = BatcherConfig { page_size, d, max_pages: 1 << 16, max_active: 8, skip, spec };
+    let cfg = BatcherConfig {
+        page_size,
+        d,
+        max_pages: 1 << 16,
+        max_active: 8,
+        skip,
+        spec,
+        prefix_cache,
+    };
     let mut b = ContinuousBatcher::new(cfg);
     for r in reqs {
         b.submit(r.clone()).expect("submit");
@@ -197,8 +235,8 @@ fn main() {
     let mut json_masks: Vec<Json> = Vec::new();
     for (name, mask_of) in &cases {
         let reqs = requests(n, d, heads, count, mask_of.as_ref());
-        let (ms_skip, rep_skip, seq_out) = run(&reqs, page_size, d, true, SpecPolicy::Off);
-        let (ms_dense, _, _) = run(&reqs, page_size, d, false, SpecPolicy::Off);
+        let (ms_skip, rep_skip, seq_out) = run(&reqs, page_size, d, true, SpecPolicy::Off, false);
+        let (ms_dense, _, _) = run(&reqs, page_size, d, false, SpecPolicy::Off, false);
         let tokens = rep_skip.tokens;
         let tps_skip = tokens as f64 / (ms_skip / 1e3);
         let tps_dense = tokens as f64 / (ms_dense / 1e3);
@@ -257,7 +295,7 @@ fn main() {
         if spec_k > 1 {
             let policy =
                 SpecPolicy::Oracle { k: spec_k, accept_rate: 1.0, branch: 1, seed: 99 };
-            let (ms_spec, rep_spec, spec_out) = run(&reqs, page_size, d, true, policy);
+            let (ms_spec, rep_spec, spec_out) = run(&reqs, page_size, d, true, policy, false);
             assert_identical(name, &seq_out, &spec_out);
             assert_eq!(rep_spec.tokens, tokens, "{name}: speculative run dropped tokens");
             assert!(
@@ -306,7 +344,7 @@ fn main() {
         "GQA decode at equal outputs (q_heads={q_heads}, n={n_gqa}, causal_document)"
     ));
     let mha_reqs = gqa_requests(n_gqa, d, q_heads, q_heads, count_gqa);
-    let (mha_ms, mha_rep, mha_out) = run(&mha_reqs, page_size, d, true, SpecPolicy::Off);
+    let (mha_ms, mha_rep, mha_out) = run(&mha_reqs, page_size, d, true, SpecPolicy::Off, false);
     let mha_tps = mha_rep.tokens as f64 / (mha_ms / 1e3);
     g.row(vec![
         format!("{}", HeadLayout::mha(q_heads)),
@@ -331,7 +369,7 @@ fn main() {
         let layout = HeadLayout::new(q_heads, kv);
         let group = layout.group();
         let reqs = gqa_requests(n_gqa, d, q_heads, kv, count_gqa);
-        let (ms, rep, out) = run(&reqs, page_size, d, true, SpecPolicy::Off);
+        let (ms, rep, out) = run(&reqs, page_size, d, true, SpecPolicy::Off, false);
         // exactness: replicated-KV layouts all compute the same rows
         assert_identical(&format!("gqa {layout}"), &mha_out, &out);
         // the GQA memory win: one page chain per KV head
@@ -372,6 +410,104 @@ fn main() {
     }
     g.print();
 
+    // === shared-prefix table: content-addressed KV prefix caching ===
+    // 8 sessions sharing a 128-token (8-page) prompt prefix, each with
+    // a 16-token unique prompt tail + 16 generated tokens.  Sharing
+    // must cut both resident pages and prefill MACs by >= 3x while
+    // per-token outputs stay bitwise identical to the unshared run
+    // (shared pages hold the same bits prefill would have written).
+    let (n_pfx, d_pfx, page_pfx, sessions) = (160, 16, 16, 8);
+    let (prompt_pfx, prefix_tokens) = (144, 128);
+    let pfx_reqs = shared_prefix_requests(n_pfx, d_pfx, prompt_pfx, prefix_tokens, sessions);
+    let (off_ms, off_rep, off_out) =
+        run(&pfx_reqs, page_pfx, d_pfx, true, SpecPolicy::Off, false);
+    let (on_ms, on_rep, on_out) = run(&pfx_reqs, page_pfx, d_pfx, true, SpecPolicy::Off, true);
+    assert_eq!(off_out.len(), on_out.len(), "shared-prefix: sequence count diverged");
+    for (a, b) in off_out.iter().zip(&on_out) {
+        assert_eq!(a.id, b.id, "shared-prefix: retirement order diverged");
+        assert_eq!(a.n, b.n, "shared-prefix: req {} final length diverged", a.id);
+        assert_eq!(a.o.len(), b.o.len(), "shared-prefix: output shape diverged");
+        for (i, (x, y)) in a.o.iter().zip(&b.o).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "shared-prefix: req {} output elem {i} not bitwise identical: {x} vs {y}",
+                a.id
+            );
+        }
+    }
+    let page_ratio = off_rep.peak_pages as f64 / on_rep.peak_pages.max(1) as f64;
+    let mac_ratio = off_rep.prefill_macs as f64 / on_rep.prefill_macs.max(1) as f64;
+    assert!(
+        page_ratio >= 3.0,
+        "shared-prefix: resident pages must drop >= 3x (off {} vs on {})",
+        off_rep.peak_pages,
+        on_rep.peak_pages
+    );
+    assert!(
+        mac_ratio >= 3.0,
+        "shared-prefix: prefill MACs must drop >= 3x (off {} vs on {})",
+        off_rep.prefill_macs,
+        on_rep.prefill_macs
+    );
+    assert_eq!(on_rep.prefix_misses, 1, "shared-prefix: only the first prompt misses");
+    assert_eq!(on_rep.prefix_hits, sessions as u64 - 1, "shared-prefix: every clone hits");
+    let mut p = Table::new(vec![
+        "prefix cache",
+        "tok/s",
+        "peak pages",
+        "prefill MACs",
+        "hits/misses",
+        "shared pages",
+        "CoW copies",
+    ])
+    .title(format!(
+        "shared-prefix decode: {sessions} sessions x {prefix_tokens}-token common prefix \
+         (prompt {prompt_pfx}, page {page_pfx})"
+    ));
+    let pfx_row = |label: &str,
+                   ms: f64,
+                   rep: &flashmask::decode::BatcherReport| {
+        vec![
+            label.to_string(),
+            format!("{:.0}", rep.tokens as f64 / (ms / 1e3)),
+            rep.peak_pages.to_string(),
+            rep.prefill_macs.to_string(),
+            format!("{}/{}", rep.prefix_hits, rep.prefix_misses),
+            rep.prefix_shared_pages.to_string(),
+            rep.cow_copies.to_string(),
+        ]
+    };
+    p.row(pfx_row("off", off_ms, &off_rep));
+    p.row(pfx_row("on", on_ms, &on_rep));
+    p.row(vec![
+        "ratio".to_string(),
+        String::new(),
+        format!("{page_ratio:.2}x"),
+        format!("{mac_ratio:.2}x"),
+        String::new(),
+        String::new(),
+        String::new(),
+    ]);
+    p.print();
+    let json_prefix = obj(vec![
+        ("sessions", Json::Num(sessions as f64)),
+        ("prompt_tokens", Json::Num(prompt_pfx as f64)),
+        ("prefix_tokens", Json::Num(prefix_tokens as f64)),
+        ("page_size", Json::Num(page_pfx as f64)),
+        ("peak_pages_off", Json::Num(off_rep.peak_pages as f64)),
+        ("peak_pages_on", Json::Num(on_rep.peak_pages as f64)),
+        ("peak_pages_ratio", Json::Num(page_ratio)),
+        ("prefill_macs_off", Json::Num(off_rep.prefill_macs as f64)),
+        ("prefill_macs_on", Json::Num(on_rep.prefill_macs as f64)),
+        ("prefill_macs_ratio", Json::Num(mac_ratio)),
+        ("prefix_hits", Json::Num(on_rep.prefix_hits as f64)),
+        ("prefix_misses", Json::Num(on_rep.prefix_misses as f64)),
+        ("prefix_shared_pages", Json::Num(on_rep.prefix_shared_pages as f64)),
+        ("cow_copies", Json::Num(on_rep.cow_copies as f64)),
+        ("bitwise_identical", Json::Bool(true)),
+    ]);
+
     println!("== BENCH json ==");
     let blob = obj(vec![
         (
@@ -388,6 +524,7 @@ fn main() {
         ),
         ("masks", Json::Arr(json_masks)),
         ("gqa", Json::Arr(json_gqa)),
+        ("shared_prefix", json_prefix),
     ]);
     println!("{}", blob.to_string_pretty());
 }

@@ -27,6 +27,12 @@
 //! streaming contract on every channel: `Admitted`, then `Token{index}`
 //! consecutive from 0, then `Done`.
 //!
+//! A second, shared-prompt trace sends a burst of requests that all
+//! carry the same system prompt through the router twice — prefix
+//! cache off and on — at the same pool size, asserting that sharing
+//! admits strictly more concurrent sessions with zero preemptions and
+//! bitwise-identical streamed tokens.
+//!
 //! A machine-readable `BENCH json` blob with both configurations is
 //! printed after the table (scripts/bench.sh → BENCH_serve.json).
 //!
@@ -71,6 +77,29 @@ fn ragged_requests(count: usize, base_n: usize, d: usize, page: usize, seed: u64
         .collect()
 }
 
+/// Shared-prompt request set: every request carries byte-identical K/V
+/// for the whole prompt (one system prompt served to many users) and a
+/// unique teacher-forced continuation after it.  Feeds the prefix-cache
+/// trace: with `--prefix-cache` semantics on, the router's wave
+/// reservation counts only pages that are *new* after prefix reuse.
+fn shared_prompt_requests(count: usize, n: usize, prompt: usize, d: usize, seed: u64) -> Vec<DecodeRequest> {
+    let mut rng = Rng::new(seed);
+    let layout = HeadLayout::mha(1);
+    let prompt_k: Vec<f32> = (0..prompt * d).map(|_| rng.normal_f32() * 0.5).collect();
+    let prompt_v: Vec<f32> = (0..prompt * d).map(|_| rng.normal_f32() * 0.5).collect();
+    (0..count)
+        .map(|i| {
+            let mask = builders::causal(n);
+            let q: Vec<f32> = (0..n * d).map(|_| rng.normal_f32() * 0.5).collect();
+            let mut k = prompt_k.clone();
+            k.extend((0..(n - prompt) * d).map(|_| rng.normal_f32() * 0.5));
+            let mut v = prompt_v.clone();
+            v.extend((0..(n - prompt) * d).map(|_| rng.normal_f32() * 0.5));
+            DecodeRequest::with_layout(i as u64, layout, n, d, prompt, q, k, v, mask)
+        })
+        .collect()
+}
+
 /// Replay the arrival trace through the strict-FIFO page-count batcher.
 fn run_fifo(
     reqs: &[DecodeRequest],
@@ -97,9 +126,12 @@ fn run_router(
     reqs: &[DecodeRequest],
     due: &[f64],
     cfg: RouterConfig,
-) -> (RouterReport, Vec<DecodeResponse>, Vec<(u64, usize, Receiver<StreamEvent>)>, f64) {
+) -> (RouterReport, Vec<DecodeResponse>, Vec<(u64, usize, Receiver<StreamEvent>)>, f64, usize) {
     let mut router = Router::new(cfg);
     let mut rxs: Vec<(u64, usize, Receiver<StreamEvent>)> = Vec::new();
+    // peak concurrently-decoding sessions, sampled after every tick —
+    // the shared-prompt table's admitted-concurrency column
+    let mut max_active = 0usize;
     let wall_ms = replay_arrivals(reqs.to_vec(), due, |cmd| match cmd {
         Some(req) => {
             let (id, gen) = (req.id, req.gen_len());
@@ -107,12 +139,16 @@ fn run_router(
             rxs.push((id, gen, rx));
             Ok(true)
         }
-        None => router.tick(),
+        None => {
+            let more = router.tick();
+            max_active = max_active.max(router.active_len());
+            more
+        }
     })
     .expect("router replay");
     let mut done = router.take_finished();
     done.sort_by_key(|r| r.id);
-    (router.report(), done, rxs, wall_ms)
+    (router.report(), done, rxs, wall_ms, max_active)
 }
 
 /// Drain one stream and enforce the contract: `Admitted`, then
@@ -185,7 +221,15 @@ fn main() {
     let requests = arg_f64("--requests").map(|v| v as usize).unwrap_or(requests);
     let rate = arg_f64("--rate").unwrap_or(if smoke { 500.0 } else { 200.0 });
     let (page, max_active, seed) = (16, 8, 42u64);
-    let batcher = BatcherConfig { page_size: page, d, max_pages, max_active, skip: true, spec: SpecPolicy::Off };
+    let batcher = BatcherConfig {
+        page_size: page,
+        d,
+        max_pages,
+        max_active,
+        skip: true,
+        spec: SpecPolicy::Off,
+        prefix_cache: false,
+    };
     let router_cfg = RouterConfig {
         batcher,
         max_batch_prefill_tokens: base_n,
@@ -205,7 +249,7 @@ fn main() {
     );
 
     let (fifo, fifo_out, fifo_wall) = run_fifo(&reqs, &due, batcher);
-    let (router, router_out, rxs, router_wall) = run_router(&reqs, &due, router_cfg);
+    let (router, router_out, rxs, router_wall, _) = run_router(&reqs, &due, router_cfg);
 
     // -- delivery: every admitted request retires in both runs --------
     assert_eq!(fifo.sequences, requests, "fifo retired {} of {requests}", fifo.sequences);
@@ -271,6 +315,86 @@ fn main() {
         streamed
     );
 
+    // === shared-prompt trace: prefix caching under a burst ============
+    // One 64-token system prompt (4 pages of 16) shared by 6 requests
+    // that all arrive at t=0, pool of 14 pages.  Without the prefix
+    // cache the wave reservation books 5 worst-case pages per request
+    // (~2 fit); with it every request after the first books only its
+    // unique page, so the whole burst decodes concurrently — strictly
+    // more admitted sessions at the same pool, zero preemptions either
+    // way, identical streamed tokens.
+    let (sp_count, sp_n, sp_prompt, sp_pool) = (6, 80, 64, 14);
+    let sp_reqs = shared_prompt_requests(sp_count, sp_n, sp_prompt, d, seed ^ 0x5AFE);
+    let sp_due = vec![0.0; sp_count];
+    let sp_cfg = |prefix_cache: bool| RouterConfig {
+        batcher: BatcherConfig {
+            page_size: page,
+            d,
+            max_pages: sp_pool,
+            max_active: sp_count,
+            skip: true,
+            spec: SpecPolicy::Off,
+            prefix_cache,
+        },
+        max_batch_prefill_tokens: sp_count * sp_prompt,
+        // token budgets deliberately slack: page reservation is the
+        // binding constraint this trace measures
+        max_batch_total_tokens: 4096,
+        waiting_served_ratio: 1.2,
+        max_waiting_tokens: 20,
+    };
+    let (sp_off, sp_off_out, sp_off_rxs, _, sp_off_max) = run_router(&sp_reqs, &sp_due, sp_cfg(false));
+    let (sp_on, sp_on_out, sp_on_rxs, _, sp_on_max) = run_router(&sp_reqs, &sp_due, sp_cfg(true));
+    assert_eq!(sp_off.sequences, sp_count, "shared-prompt off: every request retires");
+    assert_eq!(sp_on.sequences, sp_count, "shared-prompt on: every request retires");
+    assert_eq!(sp_off.preemptions, 0, "reservation-safe admission must not preempt (off)");
+    assert_eq!(sp_on.preemptions, 0, "reservation-safe admission must not preempt (on)");
+    assert!(
+        sp_on_max > sp_off_max,
+        "prefix cache must admit strictly more concurrent sessions: {sp_on_max} vs {sp_off_max}"
+    );
+    assert_eq!(sp_on_max, sp_count, "the whole shared-prompt burst must decode concurrently");
+    assert!(sp_on.prefix_hits >= 1, "shared prompts must hit the prefix cache");
+    // scheduling and sharing must not change the math: bitwise equality
+    assert_eq!(sp_off_out.len(), sp_on_out.len());
+    for (a, b) in sp_off_out.iter().zip(&sp_on_out) {
+        assert_eq!(a.id, b.id, "shared-prompt: retirement ids diverged");
+        assert_eq!(a.o.len(), b.o.len(), "shared-prompt: output shape diverged");
+        for (i, (x, y)) in a.o.iter().zip(&b.o).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "shared-prompt: req {} elem {i} not bitwise identical under sharing",
+                a.id
+            );
+        }
+    }
+    let sp_streamed: usize =
+        sp_on_rxs.iter().map(|(id, gen, rx)| check_stream(*id, *gen, rx)).sum();
+    let _ = sp_off_rxs; // off-mode streams carry the same contract; spot-checked above
+    let mut sp_t = Table::new(vec!["prefix cache", "max concurrent", "TTFT p50/p99 ms", "prefix hits", "shared pages", "peak pages"])
+        .title(format!(
+            "shared-prompt burst: {sp_count} requests x {sp_prompt}-token system prompt, pool {sp_pool} pages"
+        ));
+    sp_t.row(vec![
+        "off".into(),
+        sp_off_max.to_string(),
+        format!("{:.2} / {:.2}", sp_off.ttft_p50_ms, sp_off.ttft_p99_ms),
+        sp_off.prefix_hits.to_string(),
+        sp_off.prefix_shared_pages.to_string(),
+        sp_off.peak_pages.to_string(),
+    ]);
+    sp_t.row(vec![
+        "on".into(),
+        sp_on_max.to_string(),
+        format!("{:.2} / {:.2}", sp_on.ttft_p50_ms, sp_on.ttft_p99_ms),
+        sp_on.prefix_hits.to_string(),
+        sp_on.prefix_shared_pages.to_string(),
+        sp_on.peak_pages.to_string(),
+    ]);
+    sp_t.print();
+    println!("shared-prompt burst: {sp_streamed} token stream events checked under sharing");
+
     println!("== BENCH json ==");
     let blob = Json::obj(vec![
         (
@@ -317,6 +441,24 @@ fn main() {
             ]),
         ),
         ("ttft_p99_win", Json::Num(fifo.ttft_p99_ms / router.ttft_p99_ms.max(1e-9))),
+        (
+            "shared_prompt",
+            Json::obj(vec![
+                ("requests", Json::Num(sp_count as f64)),
+                ("prompt_tokens", Json::Num(sp_prompt as f64)),
+                ("pool_pages", Json::Num(sp_pool as f64)),
+                ("max_concurrent_off", Json::Num(sp_off_max as f64)),
+                ("max_concurrent_on", Json::Num(sp_on_max as f64)),
+                ("ttft_p99_ms_off", Json::Num(sp_off.ttft_p99_ms)),
+                ("ttft_p99_ms_on", Json::Num(sp_on.ttft_p99_ms)),
+                ("prefix_hits", Json::Num(sp_on.prefix_hits as f64)),
+                ("prefix_shared_pages", Json::Num(sp_on.prefix_shared_pages as f64)),
+                ("cow_copies", Json::Num(sp_on.cow_copies as f64)),
+                ("peak_pages_off", Json::Num(sp_off.peak_pages as f64)),
+                ("peak_pages_on", Json::Num(sp_on.peak_pages as f64)),
+                ("bitwise_identical", Json::Bool(true)),
+            ]),
+        ),
     ]);
     println!("{}", blob.to_string_pretty());
 }

@@ -11,6 +11,23 @@
 //! whole pages against the FlashMask column intervals, so the decode
 //! step kernel never touches pages whose every column is masked for the
 //! current row (sliding windows, packed documents, evicted KV entries).
+//!
+//! # Page sharing
+//!
+//! Every page carries a refcount.  A page with one reference behaves
+//! exactly as before; [`PagePool::retain`] lets a second reader attach
+//! the same physical page (content-addressed prompt-prefix reuse via
+//! [`PrefixCache`]), and `free_page`/`evict_page` only return the page
+//! to the free list when the *last* reference drops — a shared page is
+//! unevictable until its last reader retires.  Writes go through
+//! copy-on-write: appending into a partially-filled shared page first
+//! clones it into a private page ([`PoolStats::cow_copies`]), so no
+//! reader ever observes another sequence's rows.  `truncate` never
+//! clones — it only drops references — because stale rows in a kept
+//! shared page are unreachable (`page_cols` bounds every read by `len`)
+//! and the next `append` into it triggers the clone.
+
+use std::collections::HashMap;
 
 /// Index into the pool's page storage.
 pub type PageId = usize;
@@ -28,18 +45,28 @@ pub struct PoolStats {
     pub alloc_failures: u64,
     /// High-water mark of pages simultaneously in use.
     pub peak_in_use: usize,
+    /// Extra references handed out on already-resident pages.
+    pub retains: u64,
+    /// Releases that dropped a reference on a still-shared page
+    /// (no physical page returned to the free list).
+    pub shared_releases: u64,
+    /// Shared pages cloned into private copies before a write.
+    pub cow_copies: u64,
 }
 
 /// Global fixed-capacity page pool shared by every active sequence.
 ///
 /// Storage is grown lazily up to `max_pages`; freed pages go on a free
-/// list and are reused before new storage is touched.
+/// list and are reused before new storage is touched.  `in_use` /
+/// `available` count *physical* pages — a page shared by five readers
+/// occupies one slot — which is what admission fit checks care about.
 pub struct PagePool {
     page_size: usize,
     d: usize,
     max_pages: usize,
     k: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
+    refs: Vec<u32>,
     free: Vec<PageId>,
     in_use: usize,
     pub stats: PoolStats,
@@ -54,6 +81,7 @@ impl PagePool {
             max_pages,
             k: Vec::new(),
             v: Vec::new(),
+            refs: Vec::new(),
             free: Vec::new(),
             in_use: 0,
             stats: PoolStats::default(),
@@ -81,17 +109,37 @@ impl PagePool {
         self.max_pages - self.in_use
     }
 
-    /// Conservation invariant: every page ever handed out is either
-    /// still in use or was returned through exactly one of free/evict.
-    /// The leak detector for per-KV-head page chains — any admit /
-    /// step / speculate / preempt / retire interleaving must preserve
-    /// it (asserted by the property tests here and in
-    /// [`super::session`]).
-    pub fn conserved(&self) -> bool {
-        self.stats.allocs == self.stats.frees + self.stats.evictions + self.in_use as u64
+    /// Current reference count of a page (0 = on the free list).
+    pub fn ref_count(&self, id: PageId) -> u32 {
+        self.refs[id]
     }
 
-    /// Hand out one page, or `None` when the pool is exhausted.
+    /// Live references across all resident pages (each shared reader
+    /// counts once).
+    pub fn live_refs(&self) -> u64 {
+        self.refs.iter().map(|&r| r as u64).sum()
+    }
+
+    /// Conservation invariants, physical and logical.
+    ///
+    /// Physical: every page ever handed out is either still resident or
+    /// was returned through exactly one of free/evict.  Logical: every
+    /// reference ever created (`allocs` + `retains`) was either dropped
+    /// (`frees` + `evictions` + `shared_releases`) or is still live.
+    /// The leak detector for per-KV-head page chains — any admit /
+    /// step / speculate / share / CoW / preempt / retire interleaving
+    /// must preserve both (asserted by the property tests here and in
+    /// [`super::session`]).
+    pub fn conserved(&self) -> bool {
+        let physical =
+            self.stats.allocs == self.stats.frees + self.stats.evictions + self.in_use as u64;
+        let dropped = self.stats.frees + self.stats.evictions + self.stats.shared_releases;
+        let logical = self.stats.allocs + self.stats.retains == dropped + self.live_refs();
+        physical && logical
+    }
+
+    /// Hand out one page (refcount 1), or `None` when the pool is
+    /// exhausted.
     pub fn try_alloc(&mut self) -> Option<PageId> {
         let id = match self.free.pop() {
             Some(id) => id,
@@ -103,32 +151,83 @@ impl PagePool {
                 let elems = self.page_size * self.d;
                 self.k.push(vec![0.0; elems]);
                 self.v.push(vec![0.0; elems]);
+                self.refs.push(0);
                 self.k.len() - 1
             }
         };
+        debug_assert_eq!(self.refs[id], 0, "page on free list with live refs");
+        self.refs[id] = 1;
         self.in_use += 1;
         self.stats.allocs += 1;
         self.stats.peak_in_use = self.stats.peak_in_use.max(self.in_use);
         Some(id)
     }
 
-    /// Return a page from a retiring sequence.
+    /// Add a reference to an already-resident page (prefix sharing).
+    pub fn retain(&mut self, id: PageId) {
+        debug_assert!(id < self.refs.len(), "foreign page id");
+        debug_assert!(self.refs[id] > 0, "retain of a free page {id}");
+        self.refs[id] += 1;
+        self.stats.retains += 1;
+    }
+
+    /// Drop a reference from a retiring sequence; the page returns to
+    /// the free list only when this was the last reference.
     pub fn free_page(&mut self, id: PageId) {
-        self.release(id);
-        self.stats.frees += 1;
+        if self.drop_ref(id) {
+            self.stats.frees += 1;
+        }
     }
 
-    /// Return a page taken back by preemption (eviction accounting).
+    /// Drop a reference taken back by preemption (eviction accounting).
+    /// A still-shared page is *not* evicted — only the reference goes.
     pub fn evict_page(&mut self, id: PageId) {
-        self.release(id);
-        self.stats.evictions += 1;
+        if self.drop_ref(id) {
+            self.stats.evictions += 1;
+        }
     }
 
-    fn release(&mut self, id: PageId) {
-        debug_assert!(id < self.k.len(), "foreign page id");
-        debug_assert!(!self.free.contains(&id), "double free of page {id}");
-        self.free.push(id);
-        self.in_use -= 1;
+    /// Returns true when the page physically left the pool.
+    fn drop_ref(&mut self, id: PageId) -> bool {
+        debug_assert!(id < self.refs.len(), "foreign page id");
+        debug_assert!(self.refs[id] > 0, "double free of page {id}");
+        self.refs[id] -= 1;
+        if self.refs[id] == 0 {
+            self.free.push(id);
+            self.in_use -= 1;
+            true
+        } else {
+            self.stats.shared_releases += 1;
+            false
+        }
+    }
+
+    /// Clone a shared page into a fresh private one (copy-on-write),
+    /// dropping the caller's reference on the original.  `None` when
+    /// the pool is exhausted, in which case the original keeps its
+    /// reference and nothing changed.
+    fn cow_clone(&mut self, id: PageId) -> Option<PageId> {
+        debug_assert!(self.refs[id] > 1, "CoW of an unshared page");
+        let new_id = self.try_alloc()?;
+        let (src, dst) = if id < new_id {
+            let (a, b) = self.k.split_at_mut(new_id);
+            b[0].copy_from_slice(&a[id]);
+            let (a, b) = self.v.split_at_mut(new_id);
+            b[0].copy_from_slice(&a[id]);
+            (id, new_id)
+        } else {
+            let (a, b) = self.k.split_at_mut(id);
+            a[new_id].copy_from_slice(&b[0]);
+            let (a, b) = self.v.split_at_mut(id);
+            a[new_id].copy_from_slice(&b[0]);
+            (id, new_id)
+        };
+        debug_assert_ne!(src, dst);
+        self.refs[id] -= 1;
+        self.stats.shared_releases += 1;
+        self.stats.cow_copies += 1;
+        crate::telemetry::metrics::global().add("prefix.cow_copies", 1);
+        Some(new_id)
     }
 
     pub fn page_k(&self, id: PageId) -> &[f32] {
@@ -143,6 +242,7 @@ impl PagePool {
         debug_assert!(slot < self.page_size);
         debug_assert_eq!(k_row.len(), self.d);
         debug_assert_eq!(v_row.len(), self.d);
+        debug_assert_eq!(self.refs[id], 1, "write into a shared page (missed CoW)");
         let off = slot * self.d;
         self.k[id][off..off + self.d].copy_from_slice(k_row);
         self.v[id][off..off + self.d].copy_from_slice(v_row);
@@ -184,8 +284,26 @@ impl PagedKv {
         (self.len - p * page_size).min(page_size)
     }
 
+    /// Attach already-resident *full* pages as a shared prefix, adding
+    /// a reference to each.  Only legal at a page boundary (a shared
+    /// page is full by construction — sharing below page granularity
+    /// does not exist), so in practice on an empty chain at prefill.
+    pub fn attach_shared(&mut self, pool: &mut PagePool, ids: &[PageId]) {
+        assert_eq!(
+            self.len % pool.page_size(),
+            0,
+            "shared prefix attach must be page-aligned"
+        );
+        for &id in ids {
+            pool.retain(id);
+            self.page_ids.push(id);
+        }
+        self.len += ids.len() * pool.page_size();
+    }
+
     /// Append one K/V row; returns `false` (appending nothing) when a
-    /// fresh page was needed and the pool is exhausted.
+    /// fresh page was needed (or a shared tail page had to be cloned)
+    /// and the pool is exhausted.
     #[must_use]
     pub fn append(&mut self, pool: &mut PagePool, k_row: &[f32], v_row: &[f32]) -> bool {
         let ps = pool.page_size();
@@ -195,6 +313,16 @@ impl PagedKv {
                 Some(id) => self.page_ids.push(id),
                 None => return false,
             }
+        } else {
+            // copy-on-write: never scribble on a page another reader
+            // (or the prefix cache) still holds
+            let id = *self.page_ids.last().unwrap();
+            if pool.ref_count(id) > 1 {
+                match pool.cow_clone(id) {
+                    Some(new_id) => *self.page_ids.last_mut().unwrap() = new_id,
+                    None => return false,
+                }
+            }
         }
         let id = *self.page_ids.last().unwrap();
         pool.write_row(id, slot, k_row, v_row);
@@ -202,12 +330,13 @@ impl PagedKv {
         true
     }
 
-    /// Drop rows past `new_len`, returning now-empty tail pages to the
+    /// Drop rows past `new_len`, releasing now-empty tail pages to the
     /// pool — the speculative-decode rollback: drafted-but-rejected
     /// rows vanish and their pages are immediately reusable.  Stale
     /// data left in the kept tail page is unreachable (`page_cols`
     /// bounds every read by `len`) and is overwritten by the next
-    /// `append`.
+    /// `append` — which clones first if the page is shared, so
+    /// truncating into a shared prefix page never needs a copy here.
     pub fn truncate(&mut self, pool: &mut PagePool, new_len: usize) {
         assert!(new_len <= self.len, "truncate {new_len} > len {}", self.len);
         let keep = new_len.div_ceil(pool.page_size());
@@ -217,8 +346,9 @@ impl PagedKv {
         self.len = new_len;
     }
 
-    /// Return every page to the pool; `evict` selects the accounting
-    /// bucket (preemption vs. normal retirement).
+    /// Drop every reference; `evict` selects the accounting bucket
+    /// (preemption vs. normal retirement).  Pages still shared with
+    /// other readers stay resident.
     pub fn release(&mut self, pool: &mut PagePool, evict: bool) {
         for id in self.page_ids.drain(..) {
             if evict {
@@ -228,6 +358,313 @@ impl PagedKv {
             }
         }
         self.len = 0;
+    }
+
+    /// Pages only this chain references (physically freed if the chain
+    /// were released right now) — the preemption cost signal: a victim
+    /// with many unique pages gives memory back, one whose pages are
+    /// all shared frees nothing.
+    pub fn unique_pages(&self, pool: &PagePool) -> usize {
+        self.page_ids.iter().filter(|&&id| pool.ref_count(id) == 1).count()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Content-addressed prefix index
+// ---------------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+#[inline]
+fn fnv1a_u64(h: u64, v: u64) -> u64 {
+    (h ^ v).wrapping_mul(FNV_PRIME)
+}
+
+/// Cumulative FNV-1a hash chain over page-aligned prompt-prefix K/V
+/// content, head-major across all KV-head chains (the same
+/// content-key idiom as `attention::api::PlanCache`, hashing f32 bit
+/// patterns so the key is exact, not tolerance-based).
+///
+/// `k`/`v` are head-major `[kv_heads][n][d]`; entry `p` of the result
+/// keys the first `p + 1` full pages of the prompt (tokens
+/// `0..(p+1)*page_size`).  The partial tail page of an unaligned
+/// prompt is never keyed — sharing below page granularity does not
+/// exist.  Callers feed these hashes to [`PrefixCache`]; tests forge
+/// them to exercise the equality double-check.
+pub fn prefix_hash_chain(
+    k: &[f32],
+    v: &[f32],
+    kv_heads: usize,
+    n: usize,
+    d: usize,
+    prompt_len: usize,
+    page_size: usize,
+) -> Vec<u64> {
+    let full_pages = prompt_len / page_size;
+    let mut hashes = Vec::with_capacity(full_pages);
+    let mut h = fnv1a_u64(FNV_OFFSET, kv_heads as u64);
+    h = fnv1a_u64(h, d as u64);
+    h = fnv1a_u64(h, page_size as u64);
+    for p in 0..full_pages {
+        for kh in 0..kv_heads {
+            let base = kh * n * d + p * page_size * d;
+            for &x in &k[base..base + page_size * d] {
+                h = fnv1a_u64(h, x.to_bits() as u64);
+            }
+            for &x in &v[base..base + page_size * d] {
+                h = fnv1a_u64(h, x.to_bits() as u64);
+            }
+        }
+        hashes.push(h);
+    }
+    hashes
+}
+
+/// Counters the prefix index keeps (mirrored into `BatcherReport` /
+/// `RouterReport` and the `prefix.*` global metrics).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PrefixStats {
+    /// Lookups that attached at least one shared page.
+    pub hits: u64,
+    /// Lookups that found no reusable prefix.
+    pub misses: u64,
+    /// Prefix lengths registered (one per new cumulative entry).
+    pub insertions: u64,
+    /// Hash matches rejected by the content equality double-check.
+    pub collisions: u64,
+    /// Total pages attached as shared prefixes (sum over hits).
+    pub shared_pages: u64,
+    /// Physical pages freed by LRU reclaim under pool pressure.
+    pub reclaimed_pages: u64,
+}
+
+struct PrefixEntry {
+    kv_heads: usize,
+    /// Full pages per KV-head chain covered by this entry.
+    n_pages: usize,
+    /// `[kv_heads][n_pages]` page ids, each holding one cache reference.
+    pages: Vec<Vec<PageId>>,
+    last_use: u64,
+}
+
+/// Content-addressed index of page-aligned prompt prefixes.
+///
+/// Keyed by [`prefix_hash_chain`] values; every hash hit is
+/// double-checked against the pool's actual page bytes before any
+/// sharing happens (as in `PlanCache`), so a hash collision degrades to
+/// a miss, never to wrong KV content.  The cache itself is a reader:
+/// registering a prefix retains its pages, so donor retirement cannot
+/// free them out from under later sessions.  Under pool pressure
+/// [`PrefixCache::reclaim`] drops least-recently-used entries — cached
+/// pages are reclaimed before any live session is preempted.
+#[derive(Default)]
+pub struct PrefixCache {
+    entries: HashMap<u64, PrefixEntry>,
+    seq: u64,
+    pub stats: PrefixStats,
+}
+
+impl PrefixCache {
+    pub fn new() -> PrefixCache {
+        PrefixCache::default()
+    }
+
+    /// Cached prefix entries (cumulative lengths count separately).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// References this cache holds (pages counted once per entry using
+    /// them).
+    pub fn held_refs(&self) -> usize {
+        self.entries.values().map(|e| e.kv_heads * e.n_pages).sum()
+    }
+
+    fn touch(&mut self, key: u64) {
+        self.seq += 1;
+        let seq = self.seq;
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.last_use = seq;
+        }
+    }
+
+    /// Bitwise compare an entry's cached pages against a candidate
+    /// prompt's head-major K/V rows — the collision guard.
+    fn content_matches(
+        entry: &PrefixEntry,
+        pool: &PagePool,
+        k: &[f32],
+        v: &[f32],
+        n: usize,
+    ) -> bool {
+        let (ps, d) = (pool.page_size(), pool.d());
+        for kh in 0..entry.kv_heads {
+            for p in 0..entry.n_pages {
+                let base = kh * n * d + p * ps * d;
+                let want_k = &k[base..base + ps * d];
+                let want_v = &v[base..base + ps * d];
+                let id = entry.pages[kh][p];
+                let bits_eq = |a: &[f32], b: &[f32]| {
+                    a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+                };
+                if !bits_eq(pool.page_k(id), want_k) || !bits_eq(pool.page_v(id), want_v) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Longest cached page-aligned prefix of the candidate prompt,
+    /// without mutating anything — the admission fit checks' view.
+    /// Returns the number of full pages *per KV-head chain* that a
+    /// prefill lookup would attach (0 = no reuse).
+    pub fn peek(
+        &self,
+        pool: &PagePool,
+        kv_heads: usize,
+        hashes: &[u64],
+        k: &[f32],
+        v: &[f32],
+        n: usize,
+    ) -> usize {
+        for p in (0..hashes.len()).rev() {
+            if let Some(e) = self.entries.get(&hashes[p]) {
+                if e.kv_heads == kv_heads
+                    && e.n_pages == p + 1
+                    && Self::content_matches(e, pool, k, v, n)
+                {
+                    return p + 1;
+                }
+            }
+        }
+        0
+    }
+
+    /// Longest cached page-aligned prefix match for a candidate prompt:
+    /// walks the hash chain from longest to shortest, double-checking
+    /// every hash hit against page content.  On a hit returns the
+    /// `[kv_heads][pages]` page ids (NOT yet retained — the caller
+    /// attaches them per chain via [`PagedKv::attach_shared`]) and the
+    /// token count they cover.
+    pub fn lookup(
+        &mut self,
+        pool: &PagePool,
+        kv_heads: usize,
+        hashes: &[u64],
+        k: &[f32],
+        v: &[f32],
+        n: usize,
+    ) -> Option<(Vec<Vec<PageId>>, usize)> {
+        for p in (0..hashes.len()).rev() {
+            let key = hashes[p];
+            let Some(e) = self.entries.get(&key) else { continue };
+            if e.kv_heads != kv_heads || e.n_pages != p + 1 {
+                continue;
+            }
+            if !Self::content_matches(e, pool, k, v, n) {
+                self.stats.collisions += 1;
+                crate::telemetry::metrics::global().add("prefix.collisions", 1);
+                continue;
+            }
+            let pages = e.pages.clone();
+            let tokens = (p + 1) * pool.page_size();
+            self.touch(key);
+            self.stats.hits += 1;
+            self.stats.shared_pages += (kv_heads * (p + 1)) as u64;
+            let reg = crate::telemetry::metrics::global();
+            reg.add("prefix.hits", 1);
+            reg.add("prefix.shared_pages", (kv_heads * (p + 1)) as u64);
+            return Some((pages, tokens));
+        }
+        self.stats.misses += 1;
+        crate::telemetry::metrics::global().add("prefix.misses", 1);
+        None
+    }
+
+    /// Register a donor's page-aligned prompt prefix: one cumulative
+    /// entry per full page count, each retaining the pages it covers so
+    /// they outlive the donor.  Existing entries (same content) are
+    /// left alone; a hash collision with different content keeps the
+    /// incumbent and counts a collision.
+    pub fn register(
+        &mut self,
+        pool: &mut PagePool,
+        hashes: &[u64],
+        chains: &[PagedKv],
+    ) {
+        let kv_heads = chains.len();
+        for (p, &key) in hashes.iter().enumerate() {
+            debug_assert!(chains.iter().all(|c| c.n_pages() > p));
+            if let Some(e) = self.entries.get(&key) {
+                if e.kv_heads != kv_heads || e.n_pages != p + 1 {
+                    self.stats.collisions += 1;
+                }
+                // same content already cached (the common case: a
+                // second session re-registering the shared prefix it
+                // just attached) — or a collision; either way keep the
+                // incumbent
+                continue;
+            }
+            let mut pages = Vec::with_capacity(kv_heads);
+            for c in chains {
+                let ids: Vec<PageId> = (0..=p).map(|i| c.page_id(i)).collect();
+                for &id in &ids {
+                    pool.retain(id);
+                }
+                pages.push(ids);
+            }
+            self.seq += 1;
+            self.entries.insert(
+                key,
+                PrefixEntry { kv_heads, n_pages: p + 1, pages, last_use: self.seq },
+            );
+            self.stats.insertions += 1;
+        }
+    }
+
+    /// Drop least-recently-used entries until at least `want` physical
+    /// pages came back to the free list (or the cache is empty).
+    /// Returns the pages actually freed — fewer than the refs dropped
+    /// when live sessions still share them, zero when every cached page
+    /// has another reader.
+    pub fn reclaim(&mut self, pool: &mut PagePool, want: usize) -> usize {
+        let before = pool.in_use();
+        while before - pool.in_use() < want && !self.entries.is_empty() {
+            let lru = self
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(&k, _)| k)
+                .expect("non-empty");
+            let e = self.entries.remove(&lru).expect("present");
+            for chain in &e.pages {
+                for &id in chain {
+                    pool.evict_page(id);
+                }
+            }
+        }
+        let freed = before - pool.in_use();
+        self.stats.reclaimed_pages += freed as u64;
+        freed
+    }
+
+    /// Drop every entry, releasing all cache-held references (normal
+    /// free accounting).  Used when a batcher drains or sharing is
+    /// switched off; live sessions keep shared pages alive.
+    pub fn release_all(&mut self, pool: &mut PagePool) {
+        for (_, e) in self.entries.drain() {
+            for chain in &e.pages {
+                for &id in chain {
+                    pool.free_page(id);
+                }
+            }
+        }
     }
 }
 
@@ -325,12 +762,267 @@ mod tests {
     }
 
     #[test]
+    fn shared_page_refcount_lifecycle() {
+        let d = 2;
+        let mut pool = PagePool::new(2, d, 4);
+        let mut a = PagedKv::new();
+        for t in 0..4 {
+            assert!(a.append(&mut pool, &row(t as f32, d), &row(t as f32, d)));
+        }
+        // b shares a's two full pages
+        let ids: Vec<PageId> = (0..a.n_pages()).map(|p| a.page_id(p)).collect();
+        let mut b = PagedKv::new();
+        b.attach_shared(&mut pool, &ids);
+        assert_eq!(b.len(), 4);
+        assert_eq!(pool.in_use(), 2, "sharing costs no physical pages");
+        assert_eq!(pool.ref_count(ids[0]), 2);
+        assert_eq!(pool.stats.retains, 2);
+        // donor retires: pages stay resident for b
+        a.release(&mut pool, false);
+        assert_eq!(pool.in_use(), 2, "shared pages survive the donor");
+        assert_eq!(pool.stats.shared_releases, 2);
+        assert_eq!(pool.stats.frees, 0);
+        assert_eq!(pool.page_k(b.page_id(1))[0], 2.0, "content intact");
+        // last reader retires: pages physically free
+        b.release(&mut pool, false);
+        assert_eq!(pool.in_use(), 0);
+        assert_eq!(pool.stats.frees, 2);
+        assert!(pool.conserved());
+    }
+
+    #[test]
+    fn shared_page_eviction_only_drops_reference() {
+        let d = 2;
+        let mut pool = PagePool::new(2, d, 4);
+        let mut a = PagedKv::new();
+        for _ in 0..2 {
+            assert!(a.append(&mut pool, &row(1.0, d), &row(1.0, d)));
+        }
+        let mut b = PagedKv::new();
+        b.attach_shared(&mut pool, &[a.page_id(0)]);
+        // preempting b must not evict the shared page out from under a
+        b.release(&mut pool, true);
+        assert_eq!(pool.stats.evictions, 0, "shared page is unevictable");
+        assert_eq!(pool.stats.shared_releases, 1);
+        assert_eq!(pool.in_use(), 1);
+        a.release(&mut pool, true);
+        assert_eq!(pool.stats.evictions, 1, "last reader's eviction counts");
+        assert!(pool.conserved());
+    }
+
+    #[test]
+    fn cow_on_append_into_shared_tail_page() {
+        let d = 2;
+        let mut pool = PagePool::new(4, d, 4);
+        let mut a = PagedKv::new();
+        for t in 0..4 {
+            assert!(a.append(&mut pool, &row(t as f32, d), &row(t as f32, d)));
+        }
+        let mut b = PagedKv::new();
+        b.attach_shared(&mut pool, &[a.page_id(0)]);
+        // b rolls back into the shared page, then appends a diverging
+        // row: the write must clone, not scribble on a's page
+        b.truncate(&mut pool, 2);
+        assert_eq!(pool.stats.cow_copies, 0, "truncate alone never clones");
+        assert!(b.append(&mut pool, &row(99.0, d), &row(99.0, d)));
+        assert_eq!(pool.stats.cow_copies, 1);
+        assert_ne!(b.page_id(0), a.page_id(0), "b moved to a private copy");
+        assert_eq!(pool.ref_count(a.page_id(0)), 1, "a's ref survives the CoW");
+        // a sees its original rows, b sees shared prefix + divergence
+        assert_eq!(pool.page_k(a.page_id(0))[2 * d], 2.0);
+        assert_eq!(pool.page_k(b.page_id(0))[0], 0.0, "cloned prefix kept");
+        assert_eq!(pool.page_k(b.page_id(0))[2 * d], 99.0);
+        assert!(pool.conserved());
+        a.release(&mut pool, false);
+        b.release(&mut pool, false);
+        assert_eq!(pool.in_use(), 0);
+        assert!(pool.conserved());
+    }
+
+    #[test]
+    fn cow_exhaustion_leaves_share_intact() {
+        let d = 2;
+        let mut pool = PagePool::new(2, d, 1);
+        let mut a = PagedKv::new();
+        for _ in 0..2 {
+            assert!(a.append(&mut pool, &row(1.0, d), &row(1.0, d)));
+        }
+        let mut b = PagedKv::new();
+        b.attach_shared(&mut pool, &[a.page_id(0)]);
+        b.truncate(&mut pool, 1);
+        // pool has no free page for the clone: append must fail cleanly
+        assert!(!b.append(&mut pool, &row(9.0, d), &row(9.0, d)));
+        assert_eq!(b.len(), 1);
+        assert_eq!(pool.ref_count(a.page_id(0)), 2, "reference unchanged");
+        assert_eq!(pool.page_k(a.page_id(0))[d], 1.0, "no partial write");
+        assert!(pool.conserved());
+        a.release(&mut pool, false);
+        b.release(&mut pool, false);
+        assert!(pool.conserved());
+    }
+
+    fn fill_chains(
+        pool: &mut PagePool,
+        kv_heads: usize,
+        k: &[f32],
+        v: &[f32],
+        n: usize,
+        len: usize,
+    ) -> Vec<PagedKv> {
+        let d = pool.d();
+        let mut chains: Vec<PagedKv> = (0..kv_heads).map(|_| PagedKv::new()).collect();
+        for (kh, c) in chains.iter_mut().enumerate() {
+            for t in 0..len {
+                let off = kh * n * d + t * d;
+                assert!(c.append(pool, &k[off..off + d], &v[off..off + d]));
+            }
+        }
+        chains
+    }
+
+    fn prompt(seed: u64, kv_heads: usize, n: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let k: Vec<f32> = (0..kv_heads * n * d).map(|_| rng.normal_f32()).collect();
+        let v: Vec<f32> = (0..kv_heads * n * d).map(|_| rng.normal_f32()).collect();
+        (k, v)
+    }
+
+    #[test]
+    fn prefix_cache_longest_match_and_double_check() {
+        let (kv_heads, n, d, ps) = (2, 12, 3, 4);
+        let mut pool = PagePool::new(ps, d, 32);
+        let mut cache = PrefixCache::new();
+        let (k, v) = prompt(7, kv_heads, n, d);
+        let hashes = prefix_hash_chain(&k, &v, kv_heads, n, d, 12, ps);
+        assert_eq!(hashes.len(), 3);
+        let chains = fill_chains(&mut pool, kv_heads, &k, &v, n, 12);
+        cache.register(&mut pool, &hashes, &chains);
+        assert_eq!(cache.stats.insertions, 3);
+        // a prompt sharing only the first 2 pages matches at length 2
+        let (mut k2, v2) = (k.clone(), v.clone());
+        for kh in 0..kv_heads {
+            k2[kh * n * d + 2 * ps * d] += 1.0; // diverge at token 8
+        }
+        let h2 = prefix_hash_chain(&k2, &v2, kv_heads, n, d, 12, ps);
+        assert_eq!(h2[..2], hashes[..2]);
+        assert_ne!(h2[2], hashes[2]);
+        let (pages, tokens) = cache.lookup(&pool, kv_heads, &h2, &k2, &v2, n).expect("hit");
+        assert_eq!(tokens, 8);
+        assert_eq!(pages.len(), kv_heads);
+        assert_eq!(pages[0], vec![chains[0].page_id(0), chains[0].page_id(1)]);
+        assert_eq!(cache.stats.hits, 1);
+        assert_eq!(cache.stats.shared_pages, 4);
+        // an unrelated prompt misses
+        let (k3, v3) = prompt(8, kv_heads, n, d);
+        let h3 = prefix_hash_chain(&k3, &v3, kv_heads, n, d, 12, ps);
+        assert!(cache.lookup(&pool, kv_heads, &h3, &k3, &v3, n).is_none());
+        assert_eq!(cache.stats.misses, 1);
+        // kv-head layout mismatch can never share pages
+        assert_eq!(cache.peek(&pool, 1, &hashes, &k, &v, n), 0);
+        cache.release_all(&mut pool);
+        for mut c in chains {
+            c.release(&mut pool, false);
+        }
+        assert_eq!(pool.in_use(), 0);
+        assert!(pool.conserved());
+    }
+
+    #[test]
+    fn prefix_cache_forced_hash_collision_rejected() {
+        // negative path: forge the hash chain so two different contents
+        // collide — the equality double-check must reject the hit
+        let (kv_heads, n, d, ps) = (1, 4, 2, 4);
+        let mut pool = PagePool::new(ps, d, 8);
+        let mut cache = PrefixCache::new();
+        let (ka, va) = prompt(1, kv_heads, n, d);
+        let chains = fill_chains(&mut pool, kv_heads, &ka, &va, n, 4);
+        let forged = vec![0xDEAD_BEEFu64];
+        cache.register(&mut pool, &forged, &chains);
+        let (kb, vb) = prompt(2, kv_heads, n, d);
+        assert!(
+            cache.lookup(&pool, kv_heads, &forged, &kb, &vb, n).is_none(),
+            "colliding hash with different content must miss"
+        );
+        assert_eq!(cache.stats.collisions, 1);
+        assert_eq!(cache.peek(&pool, kv_heads, &forged, &kb, &vb, n), 0);
+        // the true content still hits
+        assert!(cache.lookup(&pool, kv_heads, &forged, &ka, &va, n).is_some());
+        cache.release_all(&mut pool);
+        for mut c in chains {
+            c.release(&mut pool, false);
+        }
+        assert!(pool.conserved());
+    }
+
+    #[test]
+    fn prefix_cache_no_sharing_below_page_granularity() {
+        // negative path: prompts identical for 1.5 pages share exactly
+        // one page — the partial second page is never shared
+        let (kv_heads, n, d, ps) = (1, 8, 2, 4);
+        let mut pool = PagePool::new(ps, d, 16);
+        let mut cache = PrefixCache::new();
+        let (k, v) = prompt(3, kv_heads, n, d);
+        let chains = fill_chains(&mut pool, kv_heads, &k, &v, n, 8);
+        let hashes = prefix_hash_chain(&k, &v, kv_heads, n, d, 8, ps);
+        cache.register(&mut pool, &hashes, &chains);
+        // identical through token 5 (mid page 1), diverging at token 6
+        let (mut k2, v2) = (k.clone(), v.clone());
+        k2[6 * d] += 1.0;
+        // an unaligned prompt of 6 tokens keys only its single full page
+        let h2 = prefix_hash_chain(&k2, &v2, kv_heads, n, d, 6, ps);
+        assert_eq!(h2.len(), 1, "partial pages are never keyed");
+        let (pages, tokens) = cache.lookup(&pool, kv_heads, &h2, &k2, &v2, n).expect("hit");
+        assert_eq!(tokens, ps, "sharing stops at the page boundary");
+        assert_eq!(pages[0].len(), 1);
+        cache.release_all(&mut pool);
+        for mut c in chains {
+            c.release(&mut pool, false);
+        }
+        assert!(pool.conserved());
+    }
+
+    #[test]
+    fn prefix_cache_reclaim_frees_lru_under_pressure() {
+        let (kv_heads, n, d, ps) = (1, 8, 2, 16);
+        let mut pool = PagePool::new(ps, d, 16);
+        let mut cache = PrefixCache::new();
+        // two donors, the second used more recently
+        let (ka, va) = prompt(10, kv_heads, n, d);
+        let (kb, vb) = prompt(11, kv_heads, n, d);
+        let mut ca = fill_chains(&mut pool, kv_heads, &ka, &va, n, 8);
+        let mut cb = fill_chains(&mut pool, kv_heads, &kb, &vb, n, 8);
+        let ha = prefix_hash_chain(&ka, &va, kv_heads, n, d, 8, ps);
+        let hb = prefix_hash_chain(&kb, &vb, kv_heads, n, d, 8, ps);
+        cache.register(&mut pool, &ha, &ca);
+        cache.register(&mut pool, &hb, &cb);
+        // donors retire; only the cache keeps the pages alive
+        ca[0].release(&mut pool, false);
+        cb[0].release(&mut pool, false);
+        assert_eq!(pool.in_use(), 2);
+        let _ = cache.lookup(&pool, kv_heads, &hb, &kb, &vb, n); // touch b
+        let freed = cache.reclaim(&mut pool, 1);
+        assert_eq!(freed, 1);
+        assert_eq!(cache.len(), 1, "only the LRU entry (a) was dropped");
+        assert!(cache.lookup(&pool, kv_heads, &hb, &kb, &vb, n).is_some());
+        assert!(cache.lookup(&pool, kv_heads, &ha, &ka, &va, n).is_none());
+        // reclaiming more than exists drains the cache and reports less
+        let freed = cache.reclaim(&mut pool, 100);
+        assert_eq!(freed, 1);
+        assert!(cache.is_empty());
+        assert_eq!(pool.in_use(), 0);
+        assert!(pool.conserved());
+    }
+
+    #[test]
     fn prop_pool_conservation_random_chain_interleavings() {
-        // satellite: allocs == frees + evictions + in_use after any
-        // interleaving of append / truncate / release(free) /
-        // release(evict) across multiple chains sharing one pool —
-        // the chain-level half of the leak detector (the batcher-level
-        // admit/step/speculate/preempt/retire half lives in session.rs)
+        // satellite: both conservation equalities hold after any
+        // interleaving of append / truncate / share-attach / CoW /
+        // release(free) / release(evict) across multiple chains sharing
+        // one pool — the chain-level half of the leak detector (the
+        // batcher-level admit/step/speculate/preempt/retire half lives
+        // in session.rs).  Shared pages make `held pages == in_use`
+        // a *distinct*-page identity, and per-page refcounts must equal
+        // the number of chains referencing the page.
         crate::util::prop::check(
             "pool-conservation-chains",
             crate::util::prop::PropConfig { cases: 24, base_seed: 0xC0DE },
@@ -340,18 +1032,31 @@ mod tests {
                 let max_pages = 4 + rng.range(0, 12) as usize;
                 let mut pool = PagePool::new(ps, d, max_pages);
                 let mut chains: Vec<PagedKv> = (0..4).map(|_| PagedKv::new()).collect();
-                for _ in 0..200 {
+                for _ in 0..300 {
                     let c = rng.range(0, chains.len() as i64) as usize;
-                    match rng.range(0, 4) {
+                    match rng.range(0, 6) {
                         0 | 1 => {
-                            // append (may fail on exhaustion — that must
-                            // not break conservation either)
+                            // append (may fail on exhaustion, and may
+                            // CoW a shared tail page — neither may
+                            // break conservation)
                             let _ = chains[c].append(&mut pool, &[1.0; 2], &[2.0; 2]);
                         }
                         2 => {
                             let new_len =
                                 rng.range(0, chains[c].len() as i64 + 1) as usize;
                             chains[c].truncate(&mut pool, new_len);
+                        }
+                        3 => {
+                            // share: attach a random aligned prefix of
+                            // a donor chain onto an empty chain
+                            let donor = rng.range(0, chains.len() as i64) as usize;
+                            let full = chains[donor].len() / ps;
+                            if donor != c && chains[c].is_empty() && full > 0 {
+                                let take = 1 + rng.range(0, full as i64) as usize;
+                                let ids: Vec<PageId> =
+                                    (0..take).map(|p| chains[donor].page_id(p)).collect();
+                                chains[c].attach_shared(&mut pool, &ids);
+                            }
                         }
                         _ => {
                             let evict = rng.f64() < 0.5;
@@ -360,23 +1065,43 @@ mod tests {
                     }
                     if !pool.conserved() {
                         return Err(format!(
-                            "conservation broken: allocs {} != frees {} + evictions {} + in_use {}",
+                            "conservation broken: allocs {} retains {} vs frees {} evictions {} shared_releases {} in_use {} live_refs {}",
                             pool.stats.allocs,
+                            pool.stats.retains,
                             pool.stats.frees,
                             pool.stats.evictions,
+                            pool.stats.shared_releases,
+                            pool.in_use(),
+                            pool.live_refs(),
+                        ));
+                    }
+                    let mut ref_counts: HashMap<PageId, u32> = HashMap::new();
+                    for ch in &chains {
+                        for p in 0..ch.n_pages() {
+                            *ref_counts.entry(ch.page_id(p)).or_insert(0) += 1;
+                        }
+                    }
+                    if ref_counts.len() != pool.in_use() {
+                        return Err(format!(
+                            "distinct held {} != pool in_use {}",
+                            ref_counts.len(),
                             pool.in_use()
                         ));
                     }
-                    let held: usize = chains.iter().map(|ch| ch.n_pages()).sum();
-                    if held != pool.in_use() {
-                        return Err(format!("held {held} != pool in_use {}", pool.in_use()));
+                    for (&id, &want) in &ref_counts {
+                        if pool.ref_count(id) != want {
+                            return Err(format!(
+                                "page {id}: refcount {} != holders {want}",
+                                pool.ref_count(id)
+                            ));
+                        }
                     }
                 }
                 for ch in &mut chains {
                     ch.release(&mut pool, false);
                 }
-                if pool.in_use() != 0 || !pool.conserved() {
-                    return Err("final drain leaked pages".into());
+                if pool.in_use() != 0 || pool.live_refs() != 0 || !pool.conserved() {
+                    return Err("final drain leaked pages or references".into());
                 }
                 Ok(())
             },

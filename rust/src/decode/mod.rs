@@ -48,7 +48,9 @@ pub mod spec;
 pub mod step;
 
 pub use crate::attention::HeadLayout;
-pub use kvcache::{PageId, PagePool, PagedKv, PoolStats};
+pub use kvcache::{
+    prefix_hash_chain, PageId, PagePool, PagedKv, PoolStats, PrefixCache, PrefixStats,
+};
 pub use session::{
     BatcherConfig, BatcherReport, ContinuousBatcher, DecodeRequest, DecodeResponse,
     DecodeSession, StepOutcome,

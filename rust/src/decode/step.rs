@@ -55,6 +55,11 @@ pub struct DecodeStats {
     /// proves a session builds its plan once and reuses it for every
     /// decoded token (the bench's plan-reuse column).
     pub plans_built: u64,
+    /// Multiply-accumulates worth of K/V rows materialized at prefill
+    /// (`d` per row actually written into the cache).  Rows attached
+    /// from the prefix cache cost nothing here — the shared-prefix
+    /// bench asserts this drops by the sharing factor.
+    pub prefill_macs: u64,
 }
 
 impl DecodeStats {
@@ -75,6 +80,7 @@ impl DecodeStats {
         self.accepted += other.accepted;
         self.fallback_steps += other.fallback_steps;
         self.plans_built += other.plans_built;
+        self.prefill_macs += other.prefill_macs;
     }
 
     /// Fraction of cache pages skipped; 0 when no pages were visited
@@ -115,6 +121,7 @@ impl DecodeStats {
         r.add("decode.accepted", self.accepted);
         r.add("decode.fallback_steps", self.fallback_steps);
         r.add("decode.plans_built", self.plans_built);
+        r.add("decode.prefill_macs", self.prefill_macs);
     }
 }
 
@@ -555,6 +562,7 @@ mod tests {
             accepted: r(),
             fallback_steps: r(),
             plans_built: r(),
+            prefill_macs: r(),
         }
     }
 

@@ -100,6 +100,10 @@ subcommands:
   decode           autoregressive decode serving: paged KV cache +
                    continuous batching (--requests R --n N --d D
                    --heads H --page P --max-pages M --seed S --dense)
+                   --prefix-cache shares page-aligned identical prompt
+                   prefixes across sequences (content-addressed pages,
+                   refcounted with copy-on-write; prefill computes the
+                   unshared suffix only)
                    head layout: --kv-heads K shares each KV head across
                    a group of H/K query heads (GQA; K=1 is MQA) — KV
                    pages, pool pressure and page classification all
@@ -128,11 +132,19 @@ subcommands:
                    --compare-fifo replays the identical arrival trace
                    through the strict-FIFO page-count batcher and
                    prints the head-to-head latency table
+                   --prefix-cache enables content-addressed KV prefix
+                   sharing: admission fit checks and wave reservations
+                   count only pages that are new after prefix reuse
   metrics          run a small prefill+decode workload and dump the
                    telemetry registry snapshot + span tree as JSON
                    (--n N --d D --requests R --seed S; --no-trace
                    disables span collection; --sample-every K keeps
                    every K-th request trace)
+                   --trace-out FILE also writes the span trees as a
+                   chrome://tracing JSON document (open in Perfetto)
+                   --watch S repeats the decode round and dumps a
+                   fresh snapshot every S seconds (--watch-iters N,
+                   default 3) so counters can be seen advancing
 common: --artifacts DIR (default ./artifacts)
         --log-level debug|info|warn|error (or FLASHMASK_LOG env var)";
 
@@ -246,6 +258,7 @@ fn cmd_decode(args: &Args) -> Result<()> {
     let page = args.get_usize("page", 16).map_err(|e| anyhow!(e))?;
     let max_pages = args.get_usize("max-pages", 4096).map_err(|e| anyhow!(e))?;
     let skip = !args.flag("dense");
+    let prefix_cache = args.flag("prefix-cache");
     let seed = args.get_u64("seed", 7).map_err(|e| anyhow!(e))?;
     let spec_k = args.get_usize("speculate", 0).map_err(|e| anyhow!(e))?;
     let adaptive = args.flag("adaptive");
@@ -316,7 +329,8 @@ fn cmd_decode(args: &Args) -> Result<()> {
         })
         .collect();
     let mut engine = ServeEngine::new(EngineKind::Cpu { threads: 1 }, (page, page));
-    let cfg = BatcherConfig { page_size: page, d, max_pages, max_active: 8, skip, spec };
+    let cfg =
+        BatcherConfig { page_size: page, d, max_pages, max_active: 8, skip, spec, prefix_cache };
     let report = engine.execute_decode(decode_reqs, cfg)?;
 
     println!("\n=== decode report ({}) ===", if skip { "flashmask page skip" } else { "dense cache" });
@@ -326,6 +340,13 @@ fn cmd_decode(args: &Args) -> Result<()> {
     println!("pages skipped : {:.1}%", report.pages_skip_fraction * 100.0);
     println!("preemptions   : {} ({} pages evicted)", report.preemptions, report.evicted_pages);
     println!("peak pool use : {} pages", report.peak_pages);
+    if prefix_cache {
+        println!(
+            "prefix cache  : {} hits / {} misses, {} shared pages attached, {} CoW copies",
+            report.prefix_hits, report.prefix_misses, report.prefix_shared_pages, report.cow_copies
+        );
+        println!("prefill MACs  : {} (suffix-only under sharing)", report.prefill_macs);
+    }
     println!(
         "resident KV   : {:.1} KiB peak ({:.2} pages/token; {} chains per sequence)",
         report.resident_kv_bytes as f64 / 1024.0,
@@ -381,6 +402,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let rate = args.get_f64("rate", 200.0).map_err(|e| anyhow!(e))?;
     let seed = args.get_u64("seed", 7).map_err(|e| anyhow!(e))?;
     let skip = !args.flag("dense");
+    let prefix_cache = args.flag("prefix-cache");
     let prefill_budget = args.get_usize("prefill-budget", 4096).map_err(|e| anyhow!(e))?;
     let total_budget =
         args.get_usize("total-budget", max_pages * page / kv_heads.max(1)).map_err(|e| anyhow!(e))?;
@@ -419,8 +441,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let reqs = make_requests(&mut rng);
     let due = poisson_arrivals_ms(rate, n_requests, &mut rng);
-    let batcher_cfg =
-        BatcherConfig { page_size: page, d, max_pages, max_active, skip, spec: SpecPolicy::Off };
+    let batcher_cfg = BatcherConfig {
+        page_size: page,
+        d,
+        max_pages,
+        max_active,
+        skip,
+        spec: SpecPolicy::Off,
+        prefix_cache,
+    };
 
     println!(
         "serving {n_requests} requests (ragged n up to {n}, layout {layout}, d={d}) \
@@ -454,6 +483,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     println!("peak pool use : {} pages", rep.peak_pages);
     println!("pages skipped : {:.1}%", rep.pages_skip_fraction * 100.0);
+    if prefix_cache {
+        println!(
+            "prefix cache  : {} hits / {} misses, {} shared pages attached, {} CoW copies",
+            rep.prefix_hits, rep.prefix_misses, rep.prefix_shared_pages, rep.cow_copies
+        );
+    }
     println!("TTFT p50/p99  : {:.2} / {:.2} ms", rep.ttft_p50_ms, rep.ttft_p99_ms);
     println!("ITL  p50/p99  : {:.2} / {:.2} ms (per-token gaps)", rep.itl_p50_ms, rep.itl_p99_ms);
 
@@ -511,15 +546,22 @@ fn cmd_metrics(args: &Args) -> Result<()> {
     let n_requests = args.get_usize("requests", 4).map_err(|e| anyhow!(e))?;
     let seed = args.get_u64("seed", 7).map_err(|e| anyhow!(e))?;
     let sample_every = args.get_u64("sample-every", 1).map_err(|e| anyhow!(e))?;
+    let watch = args.get_f64("watch", 0.0).map_err(|e| anyhow!(e))?;
+    let watch_iters = args.get_usize("watch-iters", 3).map_err(|e| anyhow!(e))?;
+    let trace_out = args.get("trace-out").map(str::to_string);
     anyhow::ensure!(n >= 32, "--n must be >= 32 (got {n})");
     anyhow::ensure!(n_requests >= 1, "--requests must be >= 1");
+    anyhow::ensure!(watch >= 0.0, "--watch must be non-negative seconds (got {watch})");
     if !args.flag("no-trace") {
         trace::set_enabled(true);
         trace::set_sample_every(sample_every.max(1));
     }
 
+    fn gauss(rng: &mut Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| rng.normal_f32() * 0.5).collect()
+    }
+
     let mut rng = Rng::new(seed);
-    let mut mk = |len: usize| (0..len).map(|_| rng.normal_f32() * 0.5).collect::<Vec<f32>>();
     // prefill: repeat one mask so the plan cache records hits as well
     // as misses, plus one distinct mask for a second compile
     let mut queue = RequestQueue::new();
@@ -529,33 +571,64 @@ fn cmd_metrics(args: &Args) -> Result<()> {
         } else {
             builders::causal(n)
         };
-        queue.push(Request::new(0, 1, n, d, mk(n * d), mk(n * d), mk(n * d), mask))?;
+        let (q, k, v) = (gauss(&mut rng, n * d), gauss(&mut rng, n * d), gauss(&mut rng, n * d));
+        queue.push(Request::new(0, 1, n, d, q, k, v, mask))?;
     }
     let scheduler = Scheduler::new(SchedulerConfig { max_batch: n_requests, max_wait_ms: 0.0 });
     let mut engine = ServeEngine::new(EngineKind::Cpu { threads: 1 }, (16, 16));
     if let Some(plan) = scheduler.next_batch(&mut queue, std::time::Instant::now()) {
         engine.execute(plan)?;
     }
-    // decode: a couple of short sequences through the batcher
-    let decode_reqs: Vec<_> = (0..2)
-        .map(|_| {
-            let mask = builders::causal(n);
-            Request::new(0, 1, n, d, mk(n * d), mk(n * d), mk(n * d), mask).into_decode(n / 2)
-        })
-        .collect();
-    engine.execute_decode(
-        decode_reqs,
-        BatcherConfig {
-            page_size: 16,
-            d,
-            max_pages: 4096,
-            max_active: 2,
-            skip: true,
-            spec: SpecPolicy::Off,
-        },
-    )?;
+    // decode: a couple of short sequences through the batcher (rerun
+    // before each --watch snapshot so successive dumps show the
+    // registry counters advancing)
+    let decode_round = |engine: &mut ServeEngine, rng: &mut Rng| -> Result<()> {
+        let decode_reqs: Vec<_> = (0..2)
+            .map(|_| {
+                let mask = builders::causal(n);
+                let (q, k, v) = (gauss(rng, n * d), gauss(rng, n * d), gauss(rng, n * d));
+                Request::new(0, 1, n, d, q, k, v, mask).into_decode(n / 2)
+            })
+            .collect();
+        engine.execute_decode(
+            decode_reqs,
+            BatcherConfig {
+                page_size: 16,
+                d,
+                max_pages: 4096,
+                max_active: 2,
+                skip: true,
+                spec: SpecPolicy::Off,
+                prefix_cache: false,
+            },
+        )?;
+        Ok(())
+    };
+    decode_round(&mut engine, &mut rng)?;
 
-    println!("{}", reports::telemetry_report().to_string_pretty());
+    let snapshots = if watch > 0.0 { watch_iters.max(1) } else { 1 };
+    let mut all_roots = Vec::new();
+    for i in 0..snapshots {
+        if i > 0 {
+            std::thread::sleep(std::time::Duration::from_secs_f64(watch));
+            decode_round(&mut engine, &mut rng)?;
+        }
+        if snapshots > 1 {
+            println!("=== telemetry snapshot {}/{snapshots} (every {watch}s) ===", i + 1);
+        }
+        let roots = trace::take_roots();
+        println!("{}", reports::telemetry_report_with_roots(&roots).to_string_pretty());
+        all_roots.extend(roots);
+    }
+    if let Some(path) = trace_out {
+        let doc = trace::roots_to_chrome_json(&all_roots);
+        std::fs::write(&path, doc.to_string_pretty())
+            .map_err(|e| anyhow!("writing --trace-out {path}: {e}"))?;
+        println!(
+            "chrome trace written to {path} ({} root spans; open in chrome://tracing or Perfetto)",
+            all_roots.len()
+        );
+    }
     Ok(())
 }
 

@@ -448,11 +448,19 @@ pub fn e2e_report(seed: u64) {
 /// callers populate it first (the CLI runs a small prefill+decode
 /// workload before dumping).
 pub fn telemetry_report() -> Json {
-    let snap = crate::telemetry::metrics::global().snapshot();
     let roots = crate::telemetry::trace::take_roots();
+    telemetry_report_with_roots(&roots)
+}
+
+/// [`telemetry_report`] over an explicit set of already-drained span
+/// roots — lets the CLI reuse one drain for both the JSON dump and a
+/// chrome://tracing export
+/// ([`roots_to_chrome_json`](crate::telemetry::trace::roots_to_chrome_json)).
+pub fn telemetry_report_with_roots(roots: &[crate::telemetry::trace::SpanNode]) -> Json {
+    let snap = crate::telemetry::metrics::global().snapshot();
     Json::obj(vec![
         ("metrics", snap),
-        ("spans", crate::telemetry::trace::roots_to_json(&roots)),
+        ("spans", crate::telemetry::trace::roots_to_json(roots)),
     ])
 }
 

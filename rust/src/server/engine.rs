@@ -422,6 +422,7 @@ mod tests {
                     max_active: 2,
                     skip: true,
                     spec: crate::decode::SpecPolicy::Off,
+                    prefix_cache: false,
                 },
             )
             .unwrap();
@@ -440,6 +441,7 @@ mod tests {
                 max_active: 2,
                 skip: true,
                 spec: crate::decode::SpecPolicy::Off,
+                prefix_cache: false,
             },
         )
         .unwrap();
@@ -533,6 +535,7 @@ mod tests {
                         max_active: 2,
                         skip: true,
                         spec: crate::decode::SpecPolicy::Off,
+                        prefix_cache: false,
                     },
                 )
                 .unwrap();
@@ -573,6 +576,7 @@ mod tests {
                     max_active: 4,
                     skip: true,
                     spec: crate::decode::SpecPolicy::Off,
+                    prefix_cache: false,
                 },
             )
             .unwrap();
@@ -632,6 +636,7 @@ mod tests {
                         max_active: 4,
                         skip: true,
                         spec,
+                        prefix_cache: false,
                     },
                 )
                 .unwrap();

@@ -71,6 +71,10 @@ pub fn set_sample_every(n: u64) {
 #[derive(Clone, Debug)]
 pub struct SpanNode {
     pub name: &'static str,
+    /// Opening instant — kept so exporters can place spans on a shared
+    /// timeline (chrome://tracing `ts` is relative to the earliest
+    /// exported root).  Not serialized by [`to_json`](Self::to_json).
+    pub start: Instant,
     pub wall_ms: f64,
     /// Counters attributed to this span via [`SpanGuard::add`].
     pub counters: Vec<(&'static str, u64)>,
@@ -81,7 +85,14 @@ pub struct SpanNode {
 
 impl SpanNode {
     fn new(name: &'static str) -> SpanNode {
-        SpanNode { name, wall_ms: 0.0, counters: Vec::new(), children: Vec::new(), dropped: 0 }
+        SpanNode {
+            name,
+            start: Instant::now(),
+            wall_ms: 0.0,
+            counters: Vec::new(),
+            children: Vec::new(),
+            dropped: 0,
+        }
     }
 
     pub fn to_json(&self) -> Json {
@@ -226,6 +237,54 @@ pub fn roots_to_json(roots: &[SpanNode]) -> Json {
     Json::Arr(roots.iter().map(|r| r.to_json()).collect())
 }
 
+/// Serialize root spans as a chrome://tracing document (the "JSON
+/// object format": `{"traceEvents": [...]}` of complete `ph:"X"`
+/// events, `ts`/`dur` in microseconds relative to the earliest
+/// exported root) — load the file in `chrome://tracing` or Perfetto.
+/// Counters and the dropped-children count travel in each event's
+/// `args`.
+pub fn roots_to_chrome_json(roots: &[SpanNode]) -> Json {
+    let t0 = roots.iter().map(|r| r.start).min();
+    let mut events = Vec::new();
+    if let Some(t0) = t0 {
+        for r in roots {
+            push_chrome_events(r, t0, &mut events);
+        }
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+fn push_chrome_events(node: &SpanNode, t0: Instant, out: &mut Vec<Json>) {
+    let ts_us = node.start.saturating_duration_since(t0).as_secs_f64() * 1e6;
+    let mut args: Vec<(&str, Json)> = node
+        .counters
+        .iter()
+        .map(|(k, v)| (*k, Json::Num(*v as f64)))
+        .collect();
+    if node.dropped > 0 {
+        args.push(("children_dropped", Json::Num(node.dropped as f64)));
+    }
+    let mut pairs = vec![
+        ("name", Json::Str(node.name.to_string())),
+        ("cat", Json::Str("flashmask".to_string())),
+        ("ph", Json::Str("X".to_string())),
+        ("ts", Json::Num(ts_us)),
+        ("dur", Json::Num(node.wall_ms * 1e3)),
+        ("pid", Json::Num(1.0)),
+        ("tid", Json::Num(1.0)),
+    ];
+    if !args.is_empty() {
+        pairs.push(("args", Json::obj(args)));
+    }
+    out.push(Json::obj(pairs));
+    for c in &node.children {
+        push_chrome_events(c, t0, out);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -299,6 +358,49 @@ mod tests {
         set_sample_every(1);
         let roots = take_roots();
         assert!(roots.iter().all(|r| !r.name.starts_with("t.unsampled")));
+    }
+
+    #[test]
+    fn chrome_export_round_trips() {
+        let _l = locked();
+        set_enabled(true);
+        set_sample_every(1);
+        take_roots();
+        {
+            let root = span("t.chrome_root");
+            root.add("pages", 7);
+            {
+                let _child = span("t.chrome_child");
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }
+        set_enabled(false);
+        let roots = take_roots();
+        let root =
+            roots.iter().find(|r| r.name == "t.chrome_root").expect("root collected").clone();
+        let text = roots_to_chrome_json(&[root]).to_string_pretty();
+        let doc = crate::util::json::parse(&text).expect("chrome export parses");
+        assert_eq!(doc.get("displayTimeUnit").and_then(|j| j.as_str()), Some("ms"));
+        let events = doc.get("traceEvents").and_then(|j| j.as_arr()).expect("traceEvents array");
+        assert_eq!(events.len(), 2);
+        let parent = &events[0];
+        let child = &events[1];
+        assert_eq!(parent.get("name").and_then(|j| j.as_str()), Some("t.chrome_root"));
+        assert_eq!(child.get("name").and_then(|j| j.as_str()), Some("t.chrome_child"));
+        for ev in [parent, child] {
+            assert_eq!(ev.get("ph").and_then(|j| j.as_str()), Some("X"));
+            assert_eq!(ev.get("pid").and_then(|j| j.as_f64()), Some(1.0));
+        }
+        // the child opens after its parent and closes no later (half a
+        // microsecond of float slack on the close edge)
+        let ts = |ev: &Json| ev.get("ts").and_then(|j| j.as_f64()).expect("ts");
+        let dur = |ev: &Json| ev.get("dur").and_then(|j| j.as_f64()).expect("dur");
+        assert_eq!(ts(parent), 0.0);
+        assert!(ts(child) >= ts(parent));
+        assert!(dur(child) >= 1e3, "child slept 1ms, dur {} us", dur(child));
+        assert!(ts(child) + dur(child) <= ts(parent) + dur(parent) + 0.5);
+        // counters ride in args
+        assert_eq!(parent.path(&["args", "pages"]).and_then(|j| j.as_f64()), Some(7.0));
     }
 
     #[test]

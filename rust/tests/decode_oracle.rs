@@ -79,6 +79,7 @@ fn decode_rows(req: &DecodeRequest, spec: SpecPolicy) -> Vec<f32> {
         max_active: 4,
         skip: true,
         spec,
+        prefix_cache: false,
     });
     b.submit(req.clone()).unwrap();
     let report = b.run().unwrap();
@@ -189,6 +190,7 @@ fn speculative_page_skipping_is_noop_on_outputs() {
             max_active: 4,
             skip,
             spec: SpecPolicy::Oracle { k: 4, accept_rate: 1.0, branch: 2, seed: 3 },
+            prefix_cache: false,
         });
         b.submit(req.clone()).unwrap();
         b.run().unwrap();

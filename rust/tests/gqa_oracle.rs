@@ -163,6 +163,7 @@ fn decode_one(req: DecodeRequest, max_pages: usize, spec: SpecPolicy) -> (flashm
         max_active: 4,
         skip: true,
         spec,
+        prefix_cache: false,
     });
     b.submit(req).unwrap();
     let report = b.run().unwrap();
@@ -238,6 +239,7 @@ fn gqa_exact_under_preemption_and_leak_free() {
         max_active: 4,
         skip: true,
         spec,
+        prefix_cache: false,
     });
     for (gqa, _) in &reqs {
         b.submit(gqa.clone()).unwrap();

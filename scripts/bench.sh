@@ -3,15 +3,16 @@
 #
 # Runs the kernel bench (full tables + §Perf anchor + parallel_2d
 # scaling) and the decode bench smoke, extracts each bench's
-# `== BENCH json ==` blob, and writes the merged machine-readable
-# result to BENCH_kernel.json at the repo root — the blob used to only
-# go to stdout and was lost between runs.  The serving bench (Poisson
-# arrivals, FIFO-vs-budget head-to-head) is extracted the same way
-# into BENCH_serve.json.
+# `== BENCH json ==` blob, and writes the machine-readable results to
+# the repo root — the blobs used to only go to stdout and were lost
+# between runs.  Each bench gets its own file: BENCH_kernel.json,
+# BENCH_decode.json (paged-KV decode incl. the shared-prefix caching
+# table), and BENCH_serve.json (Poisson arrivals, FIFO-vs-budget
+# head-to-head, shared-prompt prefix trace).
 #
 # Usage:
-#   scripts/bench.sh            # full run, writes BENCH_kernel.json
-#                               # and BENCH_serve.json
+#   scripts/bench.sh            # full run, writes BENCH_kernel.json,
+#                               # BENCH_decode.json, BENCH_serve.json
 #   scripts/bench.sh --smoke    # ~seconds-scale run (same files)
 #   FM_BENCH_OUT=BENCH_before.json scripts/bench.sh
 #                               # e.g. record a "before" snapshot on a
@@ -20,6 +21,7 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 out="${FM_BENCH_OUT:-BENCH_kernel.json}"
+decode_out="${FM_BENCH_DECODE_OUT:-BENCH_decode.json}"
 serve_out="${FM_BENCH_SERVE_OUT:-BENCH_serve.json}"
 smoke_arg=""
 if [[ "${1:-}" == "--smoke" ]]; then
@@ -58,6 +60,18 @@ with open(sys.argv[2], "w") as f:
 print(f"bench.sh: wrote {sys.argv[2]}")
 PY
 
+# the decode blob gets its own file (it used to ride inside
+# BENCH_kernel.json, which buried the shared-prefix caching numbers)
+python3 - "$tmp/decode.json" "$decode_out" <<'PY'
+import json, sys, time
+decode = json.load(open(sys.argv[1]))
+decode["generated_unix"] = int(time.time())
+with open(sys.argv[2], "w") as f:
+    json.dump(decode, f, indent=2)
+    f.write("\n")
+print(f"bench.sh: wrote {sys.argv[2]}")
+PY
+
 python3 - "$tmp/kernel.json" "$tmp/decode.json" "$out" <<'PY'
 import json, sys, time
 kernel = json.load(open(sys.argv[1]))
@@ -65,7 +79,6 @@ decode = json.load(open(sys.argv[2]))
 merged = {
     "generated_unix": int(time.time()),
     "kernel": kernel,
-    "decode": decode,
 }
 # surface the ExecutionPlan amortization headline (plan-cache hit rate
 # and amortized-vs-cold latency) at the top level for trend tracking

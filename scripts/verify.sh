@@ -97,9 +97,13 @@ echo "== kernel bench smoke (tiles-visited + parallel_2d bitwise + plan-cache + 
 # prefill throughput (ISSUE 6 acceptance)
 cargo bench --bench bench_kernel_masks -- --smoke
 
-echo "== decode bench smoke (~2s, includes speculative oracle check) =="
+echo "== decode bench smoke (~2s, includes speculative oracle + prefix-sharing checks) =="
 # the bench asserts speculative outputs match sequential row-for-row,
-# so any kernel/oracle divergence fails this step
+# so any kernel/oracle divergence fails this step.  Its shared-prefix
+# table (ISSUE 8 acceptance) runs 8 sessions with a common 8-page
+# prompt prefix through the batcher with the prefix cache off and on,
+# asserting resident pages and prefill MACs both drop >= 3x while
+# per-token outputs stay *bitwise* identical under sharing
 cargo bench --bench bench_decode -- --smoke --speculate 4
 
 echo "== decode bench GQA smoke (group-2 layout vs MHA at equal outputs) =="
@@ -113,7 +117,11 @@ echo "== serve bench smoke (Poisson router vs FIFO baseline, ISSUE 7 acceptance)
 # TTFT histogram, the streaming contract holds on every channel
 # (Admitted, gap-free Token{0..gen}, terminal Done), the FIFO baseline
 # thrashes while reservation-safe wave admission never preempts, and
-# the router beats strict FIFO on p99 TTFT at equal delivered tokens
+# the router beats strict FIFO on p99 TTFT at equal delivered tokens.
+# Its shared-prompt trace additionally asserts a same-system-prompt
+# burst admits strictly more concurrent sessions with the prefix cache
+# on than off at an equal pool, with zero preemptions and identical
+# streamed tokens (ISSUE 8 acceptance)
 cargo bench --bench bench_serve -- --smoke
 
 echo "verify.sh: OK"
