@@ -24,6 +24,9 @@ fn main() -> Result<()> {
     let mut rng = Rng::new(3);
     let mut mk = || (0..n * d).map(|_| rng.normal_f32() * 0.5).collect::<Vec<f32>>();
     let (q, k, v) = (mk(), mk(), mk());
+    // independent upstream gradient — aliasing q as dO correlates the
+    // backward's dP with S and skews the fw+bw column
+    let do_ = mk();
     let cfg = AttnConfig::new(64.min(n), 64.min(n), d);
 
     let mut t = Table::new(vec![
@@ -47,7 +50,7 @@ fn main() -> Result<()> {
         let fwbw = bench("fmbw", opts, || {
             let out = CpuBackend.prefill(&plan, qv, kvv).expect("prefill");
             let _ = CpuBackend
-                .backward(&plan, &q, &k, &v, &out.outs[0].o, &q, &out.outs[0].lse)
+                .backward(&plan, &q, &k, &v, &out.outs[0].o, &do_, &out.outs[0].lse)
                 .expect("backward");
         });
         let pred = |i: usize, j: usize| mask.allowed(i, j);

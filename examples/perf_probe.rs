@@ -9,6 +9,7 @@ fn main() {
     let mut rng = Rng::new(1);
     let mut mk = || (0..n*d).map(|_| rng.normal_f32()*0.5).collect::<Vec<f32>>();
     let (q,k,v) = (mk(), mk(), mk());
+    let do_ = mk(); // independent upstream gradient, not an alias of q
     let mask = builders::causal(n);
     let cfg = AttnConfig::new(64, 64, d);
     let plan = AttnProblem::new(n, d).mask(&mask).tile(cfg.br, cfg.bc).plan().expect("plan");
@@ -30,7 +31,7 @@ fn main() {
     let mut bestb = f64::MAX;
     for _ in 0..5 {
         let t0 = Instant::now();
-        let _ = std::hint::black_box(CpuBackend.backward(&plan,&q,&k,&v,&f.o,&q,&f.lse).expect("backward"));
+        let _ = std::hint::black_box(CpuBackend.backward(&plan,&q,&k,&v,&f.o,&do_,&f.lse).expect("backward"));
         bestb = bestb.min(t0.elapsed().as_secs_f64()*1e3);
     }
     println!("bwd: {bestb:.2} ms");

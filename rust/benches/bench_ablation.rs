@@ -24,6 +24,9 @@ fn main() {
     let mut rng = Rng::new(5);
     let mut mk = || (0..n * d).map(|_| rng.normal_f32() * 0.5).collect::<Vec<f32>>();
     let (q, k, v) = (mk(), mk(), mk());
+    // dO must be its own draw: reusing q as the upstream gradient
+    // correlates dP with S and flatters the backward timings
+    let do_ = mk();
     let mask = builders::causal_document(n, &[n / 4; 4]);
 
     // 1. tile-size sweep
@@ -44,7 +47,7 @@ fn main() {
         let fwbw = bench("fwbw", opts, || {
             let out = CpuBackend.prefill(&plan, qv, kvv).expect("prefill");
             let _ = CpuBackend
-                .backward(&plan, &q, &k, &v, &out.outs[0].o, &q, &out.outs[0].lse)
+                .backward(&plan, &q, &k, &v, &out.outs[0].o, &do_, &out.outs[0].lse)
                 .expect("backward");
         });
         t.row(vec![

@@ -1,0 +1,503 @@
+//! `cargo bench --bench bench_train [-- --smoke]`
+//!
+//! End-to-end **training-throughput** bench for the backward-pass
+//! rebuild (ISSUE 9): per-step attention cost over the paper's training
+//! scenarios, flashmask tile-skipping vs the dense-mask baseline.
+//!
+//! Sections:
+//!
+//! * **backward kernel anchor** — causal, d = 128, one thread: the
+//!   packed column-parallel backward (`CpuBackend::backward`) vs the
+//!   pre-rebuild loose-GEMM backward (reimplemented here verbatim as
+//!   the reference engine).  Asserts the packed path is ≥ 1.5x at the
+//!   §Perf anchor (n ≥ 1024) and that the two engines agree.
+//! * **parallel backward** — dQ/dK/dV asserted **bitwise-identical** to
+//!   the sequential run at every tested thread count (the column-stripe
+//!   + ordered-fold reduction contract).
+//! * **grouped GQA backward** — `backward_grouped` across group sizes;
+//!   asserts the mask-classification work denominator shrinks exactly
+//!   with the KV-head count.
+//! * **training scenarios** — packed-document SFT, DPO pairs, RM
+//!   full-mask batches from `coordinator::Batcher`, planned through the
+//!   cross-step `StepPlanner` (plans_built == unique masks, asserted),
+//!   each step = per-sample prefill + backward.  Reports the
+//!   flashmask-vs-dense step-time ratio (> 1.0 asserted for SFT and DPO
+//!   at n ≥ 1024).
+//!
+//! A machine-readable `== BENCH json ==` blob is printed last;
+//! `scripts/bench.sh` persists it into `BENCH_train.json`.
+//!
+//! Env knobs: FM_BENCH_N (default 1024; 256 under --smoke),
+//! FM_BENCH_ITERS (default 3; 2 under --smoke), FM_BENCH_THREADS
+//! (default 4; 2 under --smoke).
+
+use flashmask::attention::api::{AttnProblem, Backend, CpuBackend, KvViews, QViews};
+use flashmask::attention::gemm;
+use flashmask::coordinator::{Batch, Batcher, StepPlanner};
+use flashmask::mask::{builders, BlockClass, BlockTable, FlashMask};
+use flashmask::telemetry::{metrics, trace};
+use flashmask::util::bench::{bench, time_once, BenchOpts};
+use flashmask::util::json::Json;
+use flashmask::util::rng::Rng;
+use flashmask::util::table::Table;
+use flashmask::workload::Task;
+use std::collections::HashSet;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn rand_vec(n: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32() * 0.5).collect()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+/// The pre-rebuild loose-GEMM backward, kept verbatim as the bench's
+/// reference engine: per-tile `matmul_nt_acc`/`matmul_tn_acc`/
+/// `matmul_nn_acc` with no operand packing.  The Eq. 4 class grid is
+/// precomputed by the caller (untimed), matching what the old
+/// `backward_impl` got from its schedule — so the measured gap is pure
+/// kernel, not classification.
+#[allow(clippy::too_many_arguments)]
+fn loose_backward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    o: &[f32],
+    do_: &[f32],
+    lse: &[f32],
+    n: usize,
+    d: usize,
+    mask: &FlashMask,
+    br: usize,
+    bc: usize,
+    classes: &[BlockClass],
+    scale: f32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (tr, tc) = (n.div_ceil(br), n.div_ceil(bc));
+    let mut dq = vec![0.0f32; n * d];
+    let mut dk = vec![0.0f32; n * d];
+    let mut dv = vec![0.0f32; n * d];
+    // D_i = rowsum(dO ∘ O)
+    let mut dvec = vec![0.0f32; n];
+    for (i, dst) in dvec.iter_mut().enumerate() {
+        *dst = do_[i * d..(i + 1) * d].iter().zip(&o[i * d..(i + 1) * d]).map(|(a, b)| a * b).sum();
+    }
+    let mut s = vec![0.0f32; br * bc];
+    let mut dp = vec![0.0f32; br * bc];
+    for bj in 0..tc {
+        let col0 = bj * bc;
+        let cols = bc.min(n - col0);
+        let kj = &k[col0 * d..(col0 + cols) * d];
+        let vj = &v[col0 * d..(col0 + cols) * d];
+        for bi in 0..tr {
+            let class = classes[bi * tc + bj];
+            if class == BlockClass::FullyMasked {
+                continue;
+            }
+            let row0 = bi * br;
+            let rows = br.min(n - row0);
+            let qi = &q[row0 * d..(row0 + rows) * d];
+            let doi = &do_[row0 * d..(row0 + rows) * d];
+            let st = &mut s[..rows * cols];
+            // S = scale · Q_i K_jᵀ, then P = exp(S − lse) with masked
+            // entries exactly zero
+            st.fill(0.0);
+            gemm::matmul_nt_acc(qi, kj, rows, d, cols, st);
+            for (idx, x) in st.iter_mut().enumerate() {
+                let (i, j) = (idx / cols, idx % cols);
+                if class == BlockClass::PartiallyMasked && !mask.allowed(row0 + i, col0 + j) {
+                    *x = 0.0;
+                    continue;
+                }
+                let p = (*x * scale - lse[row0 + i]).exp();
+                *x = if p.is_finite() { p } else { 0.0 };
+            }
+            // dV_j += Pᵀ dO_i
+            gemm::matmul_tn_acc(st, doi, rows, cols, d, &mut dv[col0 * d..(col0 + cols) * d]);
+            // dP = dO_i V_jᵀ ; dS = P ∘ (dP − D_i) · scale (in place)
+            let dpt = &mut dp[..rows * cols];
+            dpt.fill(0.0);
+            gemm::matmul_nt_acc(doi, vj, rows, d, cols, dpt);
+            for (idx, x) in dpt.iter_mut().enumerate() {
+                let i = idx / cols;
+                *x = st[idx] * (*x - dvec[row0 + i]) * scale;
+            }
+            // dQ_i += dS K_j ; dK_j += dSᵀ Q_i
+            gemm::matmul_nn_acc(dpt, kj, rows, cols, d, &mut dq[row0 * d..(row0 + rows) * d]);
+            gemm::matmul_tn_acc(dpt, qi, rows, cols, d, &mut dk[col0 * d..(col0 + cols) * d]);
+        }
+    }
+    (dq, dk, dv)
+}
+
+/// §Perf anchor, backward edition: causal, d = 128, one thread.
+fn backward_anchor(n: usize, opts: BenchOpts) -> Json {
+    let d = 128;
+    let (br, bc) = (64.min(n), 64.min(n));
+    let mut rng = Rng::new(11);
+    let q = rand_vec(n * d, &mut rng);
+    let k = rand_vec(n * d, &mut rng);
+    let v = rand_vec(n * d, &mut rng);
+    let do_ = rand_vec(n * d, &mut rng);
+    let mask = builders::causal(n);
+    let plan = AttnProblem::new(n, d).mask(&mask).tile(br, bc).plan().expect("anchor plan");
+    let qv = QViews::new(&q, 1, n, d).expect("q view");
+    let kvv = KvViews::new(&k, &v, 1, n, d).expect("k/v views");
+    let fwd = CpuBackend.prefill(&plan, qv, kvv).expect("prefill");
+    let (o, lse) = (&fwd.outs[0].o, &fwd.outs[0].lse);
+
+    // untimed: the Eq. 4 class grid the loose engine reads
+    let table = BlockTable::build(&mask, bc);
+    let (tr, tc) = (n.div_ceil(br), n.div_ceil(bc));
+    let mut classes = Vec::with_capacity(tr * tc);
+    for bi in 0..tr {
+        for bj in 0..tc {
+            classes.push(table.classify(&mask, bi, br, bj, bc));
+        }
+    }
+    let scale = plan.scale();
+
+    let st_packed = bench("backward.packed", opts, || {
+        let _ = CpuBackend.backward(&plan, &q, &k, &v, o, &do_, lse).expect("packed backward");
+    });
+    let st_loose = bench("backward.loose", opts, || {
+        let _ = loose_backward(&q, &k, &v, o, &do_, lse, n, d, &mask, br, bc, &classes, scale);
+    });
+
+    // both engines must agree — the speedup is only meaningful if the
+    // reference computes the same gradients
+    let (grads, ts) = CpuBackend.backward(&plan, &q, &k, &v, o, &do_, lse).expect("grads");
+    let (ldq, ldk, ldv) = loose_backward(&q, &k, &v, o, &do_, lse, n, d, &mask, br, bc, &classes, scale);
+    let diff = max_abs_diff(&grads.dq, &ldq)
+        .max(max_abs_diff(&grads.dk, &ldk))
+        .max(max_abs_diff(&grads.dv, &ldv));
+    assert!(diff < 2e-3, "packed vs loose backward disagree: max|Δ| = {diff}");
+
+    let speedup = st_loose.median_ms / st_packed.median_ms;
+    let gf = |ms: f64| ts.flops() as f64 / (ms / 1e3) / 1e9;
+    let mut t = Table::new(vec!["engine", "median ms", "GF/s", "speedup"])
+        .title("backward kernel anchor: causal, d=128, 1 thread");
+    t.row(vec![
+        "loose (pre-PR)".into(),
+        format!("{:.2}", st_loose.median_ms),
+        format!("{:.2}", gf(st_loose.median_ms)),
+        "1.00".into(),
+    ]);
+    t.row(vec![
+        "packed".into(),
+        format!("{:.2}", st_packed.median_ms),
+        format!("{:.2}", gf(st_packed.median_ms)),
+        format!("{speedup:.2}"),
+    ]);
+    t.print();
+    if n >= 1024 {
+        assert!(speedup >= 1.5, "packed backward {speedup:.2}x < 1.5x loose at the §Perf anchor");
+    }
+    Json::obj(vec![
+        ("mask", Json::Str("causal".into())),
+        ("n", Json::Num(n as f64)),
+        ("d", Json::Num(d as f64)),
+        ("threads", Json::Num(1.0)),
+        ("loose_ms", Json::Num(st_loose.median_ms)),
+        ("packed_ms", Json::Num(st_packed.median_ms)),
+        ("packed_gflops", Json::Num(gf(st_packed.median_ms))),
+        ("speedup_vs_loose", Json::Num(speedup)),
+        ("max_abs_diff", Json::Num(diff as f64)),
+    ])
+}
+
+/// Bitwise determinism: the column-stripe backward must produce the
+/// same bits at every thread count.
+fn parallel_backward(n: usize, threads_list: &[usize], opts: BenchOpts) -> Json {
+    let d = 64;
+    let mut rng = Rng::new(23);
+    let q = rand_vec(n * d, &mut rng);
+    let k = rand_vec(n * d, &mut rng);
+    let v = rand_vec(n * d, &mut rng);
+    let do_ = rand_vec(n * d, &mut rng);
+    let mask = builders::causal_document(n, &[n / 3, n / 4, n - n / 3 - n / 4]);
+    let seq_plan =
+        AttnProblem::new(n, d).mask(&mask).tile(64.min(n), 64.min(n)).threads(1).plan().expect("plan");
+    let qv = QViews::new(&q, 1, n, d).expect("q view");
+    let kvv = KvViews::new(&k, &v, 1, n, d).expect("k/v views");
+    let fwd = CpuBackend.prefill(&seq_plan, qv, kvv).expect("prefill");
+    let (o, lse) = (&fwd.outs[0].o, &fwd.outs[0].lse);
+    let (reference, _) = CpuBackend.backward(&seq_plan, &q, &k, &v, o, &do_, lse).expect("seq");
+
+    let mut rows = Vec::new();
+    let mut ms1 = 0.0;
+    let mut t = Table::new(vec!["threads", "median ms", "speedup", "bitwise"])
+        .title(format!("parallel backward: doc mask, n={n}, d={d}"));
+    for &threads in threads_list {
+        let plan = AttnProblem::new(n, d)
+            .mask(&mask)
+            .tile(64.min(n), 64.min(n))
+            .threads(threads)
+            .plan()
+            .expect("plan");
+        let (g, _) = CpuBackend.backward(&plan, &q, &k, &v, o, &do_, lse).expect("backward");
+        assert_eq!(g.dq, reference.dq, "dQ not bitwise-identical at {threads} threads");
+        assert_eq!(g.dk, reference.dk, "dK not bitwise-identical at {threads} threads");
+        assert_eq!(g.dv, reference.dv, "dV not bitwise-identical at {threads} threads");
+        let st = bench(&format!("backward.par.{threads}"), opts, || {
+            let _ = CpuBackend.backward(&plan, &q, &k, &v, o, &do_, lse).expect("backward");
+        });
+        if threads == threads_list[0] {
+            ms1 = st.median_ms;
+        }
+        t.row(vec![
+            threads.to_string(),
+            format!("{:.2}", st.median_ms),
+            format!("{:.2}", ms1 / st.median_ms),
+            "ok".into(),
+        ]);
+        rows.push(Json::obj(vec![
+            ("threads", Json::Num(threads as f64)),
+            ("median_ms", Json::Num(st.median_ms)),
+            ("bitwise_identical", Json::Bool(true)),
+        ]));
+    }
+    t.print();
+    Json::obj(vec![
+        ("mask", Json::Str("causal_document".into())),
+        ("n", Json::Num(n as f64)),
+        ("d", Json::Num(d as f64)),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
+/// Grouped GQA backward: dK/dV accumulated across the query group with
+/// once-per-KV-head classification — the mask-eval denominator must
+/// shrink exactly with the KV-head count.
+fn gqa_backward(n: usize, opts: BenchOpts) -> Json {
+    let d = 64;
+    let q_heads = 4;
+    let mut rng = Rng::new(31);
+    let q = rand_vec(q_heads * n * d, &mut rng);
+    let do_ = rand_vec(q_heads * n * d, &mut rng);
+    let k_full = rand_vec(q_heads * n * d, &mut rng);
+    let v_full = rand_vec(q_heads * n * d, &mut rng);
+    let mask = builders::causal_document(n, &[n / 2, n - n / 2]);
+
+    let mut rows = Vec::new();
+    let mut mha_evals = 0u64;
+    let mut t = Table::new(vec!["kv heads", "group", "median ms", "mask evals"])
+        .title(format!("grouped GQA backward: q_heads={q_heads}, n={n}, d={d}"));
+    for kv_heads in [4usize, 2, 1] {
+        let k = &k_full[..kv_heads * n * d];
+        let v = &v_full[..kv_heads * n * d];
+        let plan = AttnProblem::new(n, d)
+            .heads(q_heads, kv_heads)
+            .mask(&mask)
+            .tile(64.min(n), 64.min(n))
+            .plan()
+            .expect("gqa plan");
+        let qv = QViews::new(&q, q_heads, n, d).expect("q view");
+        let kvv = KvViews::new(k, v, kv_heads, n, d).expect("k/v views");
+        let fwd = CpuBackend.prefill(&plan, qv, kvv).expect("prefill");
+        let mut o = Vec::with_capacity(q_heads * n * d);
+        let mut lse = Vec::with_capacity(q_heads * n);
+        for out in &fwd.outs {
+            o.extend_from_slice(&out.o);
+            lse.extend_from_slice(&out.lse);
+        }
+        let (_, ts) =
+            CpuBackend.backward_grouped(&plan, qv, kvv, &o, &do_, &lse).expect("grouped backward");
+        if kv_heads == q_heads {
+            mha_evals = ts.mask_evals;
+        } else {
+            // classification is per KV head: evals scale exactly with it
+            assert_eq!(
+                ts.mask_evals * (q_heads / kv_heads) as u64,
+                mha_evals,
+                "grouped mask-eval denominator must shrink by the group factor"
+            );
+        }
+        let st = bench(&format!("backward.gqa.{kv_heads}"), opts, || {
+            let _ = CpuBackend.backward_grouped(&plan, qv, kvv, &o, &do_, &lse).expect("grouped");
+        });
+        t.row(vec![
+            kv_heads.to_string(),
+            (q_heads / kv_heads).to_string(),
+            format!("{:.2}", st.median_ms),
+            ts.mask_evals.to_string(),
+        ]);
+        rows.push(Json::obj(vec![
+            ("kv_heads", Json::Num(kv_heads as f64)),
+            ("group", Json::Num((q_heads / kv_heads) as f64)),
+            ("median_ms", Json::Num(st.median_ms)),
+            ("mask_evals", Json::Num(ts.mask_evals as f64)),
+        ]));
+    }
+    t.print();
+    Json::obj(vec![
+        ("q_heads", Json::Num(q_heads as f64)),
+        ("n", Json::Num(n as f64)),
+        ("d", Json::Num(d as f64)),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
+/// One training "step" over a batch: per-sample prefill + backward
+/// using the sample's cached plan.
+fn attention_step(planner: &mut StepPlanner, batch: &Batch, acts: &[SampleActs]) {
+    let sp = trace::span("train.step");
+    sp.add("tokens", (batch.batch * batch.n) as u64);
+    let plans = planner.plan_batch(batch).expect("batch plans");
+    for (bi, plan) in plans.iter().enumerate() {
+        let a = &acts[bi];
+        let qv = QViews::new(&a.q, 1, batch.n, a.d).expect("q view");
+        let kvv = KvViews::new(&a.k, &a.v, 1, batch.n, a.d).expect("k/v views");
+        let fwd = CpuBackend.prefill(plan, qv, kvv).expect("prefill");
+        let _ = CpuBackend
+            .backward(plan, &a.q, &a.k, &a.v, &fwd.outs[0].o, &a.do_, &fwd.outs[0].lse)
+            .expect("backward");
+    }
+}
+
+struct SampleActs {
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    do_: Vec<f32>,
+    d: usize,
+}
+
+/// Packed-doc SFT / DPO pairs / RM full-mask: flashmask vs dense-mask
+/// per-step attention time over real `Batcher` layouts.
+fn training_scenarios(n: usize, threads: usize, steps: usize, opts: BenchOpts) -> Json {
+    let d = 64;
+    let batch = 2;
+    let (br, bc) = (64.min(n), 64.min(n));
+    let mut rng = Rng::new(47);
+    let mut rows = Vec::new();
+    let mut t = Table::new(vec!["scenario", "rho", "flash ms", "dense ms", "ratio", "tok/s", "plans"])
+        .title(format!("training step: batch={batch}, steps={steps}, n={n}, d={d}, {threads} threads"));
+    for (name, task) in [("sft", Task::Sft), ("dpo", Task::Dpo), ("rm", Task::Rm)] {
+        let mut batcher = Batcher::new(n, batch, task, 42);
+        let batches: Vec<Batch> = (0..steps).map(|_| batcher.next_batch()).collect();
+        let acts: Vec<SampleActs> = (0..batch)
+            .map(|_| SampleActs {
+                q: rand_vec(n * d, &mut rng),
+                k: rand_vec(n * d, &mut rng),
+                v: rand_vec(n * d, &mut rng),
+                do_: rand_vec(n * d, &mut rng),
+                d,
+            })
+            .collect();
+        let mut unique: HashSet<(Vec<i32>, Vec<i32>, Vec<i32>, Vec<i32>)> = HashSet::new();
+        for b in &batches {
+            for bi in 0..b.batch {
+                let r = bi * b.n..(bi + 1) * b.n;
+                unique.insert((
+                    b.lts[r.clone()].to_vec(),
+                    b.lte[r.clone()].to_vec(),
+                    b.uts[r.clone()].to_vec(),
+                    b.ute[r].to_vec(),
+                ));
+            }
+        }
+        let sparsity = batches.iter().map(|b| b.sparsity).sum::<f64>() / batches.len() as f64;
+
+        let mut flash = StepPlanner::new(n, d, br, bc).threads(threads);
+        let st_flash = bench(&format!("train.{name}.flash"), opts, || {
+            for b in &batches {
+                attention_step(&mut flash, b, &acts);
+            }
+        });
+        // the PlanCache is the reuse contract: plans are built once per
+        // unique mask, then every warmup/timed step replays them
+        assert_eq!(
+            flash.plans_built(),
+            unique.len() as u64,
+            "plans_built must equal unique masks, not steps"
+        );
+
+        let mut dense = StepPlanner::new(n, d, br, bc).threads(threads).skip(false);
+        let st_dense = bench(&format!("train.{name}.dense"), opts, || {
+            for b in &batches {
+                attention_step(&mut dense, b, &acts);
+            }
+        });
+
+        let ratio = st_dense.median_ms / st_flash.median_ms;
+        if n >= 1024 && (name == "sft" || name == "dpo") {
+            assert!(ratio > 1.0, "flashmask-vs-dense ratio {ratio:.2} ≤ 1.0 on {name} at n={n}");
+        }
+        let tokens = (steps * batch * n) as f64;
+        let tok_s = tokens / (st_flash.median_ms / 1e3);
+        t.row(vec![
+            name.into(),
+            format!("{sparsity:.2}"),
+            format!("{:.2}", st_flash.median_ms),
+            format!("{:.2}", st_dense.median_ms),
+            format!("{ratio:.2}"),
+            format!("{tok_s:.0}"),
+            format!("{}/{}", flash.plans_built(), unique.len()),
+        ]);
+        rows.push(Json::obj(vec![
+            ("scenario", Json::Str(name.into())),
+            ("sparsity", Json::Num(sparsity)),
+            ("flash_ms", Json::Num(st_flash.median_ms)),
+            ("dense_ms", Json::Num(st_dense.median_ms)),
+            ("flashmask_vs_dense_ratio", Json::Num(ratio)),
+            ("tokens_per_s", Json::Num(tok_s)),
+            ("plans_built", Json::Num(flash.plans_built() as f64)),
+            ("unique_masks", Json::Num(unique.len() as f64)),
+        ]));
+    }
+    t.print();
+    Json::obj(vec![
+        ("n", Json::Num(n as f64)),
+        ("d", Json::Num(d as f64)),
+        ("batch", Json::Num(batch as f64)),
+        ("steps", Json::Num(steps as f64)),
+        ("threads", Json::Num(threads as f64)),
+        ("rows", Json::Arr(rows)),
+    ])
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let n = env_usize("FM_BENCH_N", if smoke { 256 } else { 1024 });
+    let iters = env_usize("FM_BENCH_ITERS", if smoke { 2 } else { 3 });
+    let threads = env_usize("FM_BENCH_THREADS", if smoke { 2 } else { 4 });
+    let opts = BenchOpts { warmup: 1, iters, max_seconds: 20.0 };
+
+    let anchor = backward_anchor(n, opts);
+    println!();
+    let threads_list: &[usize] = if smoke { &[1, 2, 3] } else { &[1, 2, 3, 8] };
+    let parallel = parallel_backward(n, threads_list, BenchOpts { warmup: 1, iters, max_seconds: 30.0 });
+    println!();
+    let gqa = gqa_backward(n, opts);
+    println!();
+    let steps = if smoke { 1 } else { 2 };
+    let (scenarios, _) = time_once(|| training_scenarios(n, threads, steps, opts));
+
+    // the backward hot path must have fed the latency histogram
+    let backward_obs = metrics::global().histogram("train.backward_ms").count();
+    assert!(backward_obs > 0, "train.backward_ms histogram never observed");
+
+    println!("== BENCH json ==");
+    let blob = Json::obj(vec![
+        (
+            "config",
+            Json::obj(vec![
+                ("n", Json::Num(n as f64)),
+                ("iters", Json::Num(iters as f64)),
+                ("threads", Json::Num(threads as f64)),
+                ("smoke", Json::Bool(smoke)),
+            ]),
+        ),
+        ("backward_anchor", anchor),
+        ("parallel_backward", parallel),
+        ("gqa_backward", gqa),
+        ("training", scenarios),
+        ("metrics", metrics::global().snapshot()),
+    ]);
+    println!("{}", blob.to_string_pretty());
+}

@@ -53,7 +53,10 @@
 //! ```
 
 use super::flash::{self, TileSchedule};
-use super::{dense, gemm, parallel_2d, AttnConfig, AttnGrads, AttnOutput, HeadLayout, TileStats};
+use super::{
+    dense, gemm, parallel_2d, AttnConfig, AttnGrads, AttnOutput, GroupedGrads, HeadLayout,
+    TileStats,
+};
 use crate::decode::kvcache::{PagePool, PagedKv};
 use crate::decode::step::DecodeStats;
 use crate::mask::{BlockTable, FlashMask, IncrementalMaskView, TokenTree};
@@ -82,6 +85,10 @@ pub enum Capability {
     Verify,
     /// Backward pass (gradients).
     Backward,
+    /// Backward pass over a grouped (GQA/MQA) layout with dK/dV
+    /// accumulated across the query group, without host-side KV
+    /// replication.
+    BackwardGrouped,
 }
 
 impl std::fmt::Display for Capability {
@@ -92,6 +99,7 @@ impl std::fmt::Display for Capability {
             Capability::DecodeStep => "decode_step",
             Capability::Verify => "verify",
             Capability::Backward => "backward",
+            Capability::BackwardGrouped => "backward_grouped",
         })
     }
 }
@@ -107,6 +115,7 @@ pub struct Capabilities {
     pub decode: bool,
     pub verify: bool,
     pub backward: bool,
+    pub backward_grouped: bool,
 }
 
 impl Capabilities {
@@ -118,6 +127,7 @@ impl Capabilities {
             decode: true,
             verify: true,
             backward: true,
+            backward_grouped: true,
         }
     }
 
@@ -128,6 +138,7 @@ impl Capabilities {
             Capability::DecodeStep => self.decode,
             Capability::Verify => self.verify,
             Capability::Backward => self.backward,
+            Capability::BackwardGrouped => self.backward_grouped,
         }
     }
 }
@@ -710,6 +721,24 @@ pub trait Backend {
         let _ = (plan, q, k, v, o, do_, lse);
         Err(AttnError::Unsupported { backend: self.name(), capability: Capability::Backward })
     }
+
+    /// Backward pass over any [`HeadLayout`]: per-query-head `o`/`do`
+    /// `[q_heads, n, d]` and `lse` `[q_heads, n]` against shared K/V
+    /// `[kv_heads, n, d]`.  Returns one dQ per query head and one
+    /// dK/dV per KV head (accumulated across the query group).
+    #[allow(clippy::too_many_arguments)]
+    fn backward_grouped(
+        &self,
+        plan: &ExecutionPlan,
+        q: QViews<'_>,
+        kv: KvViews<'_>,
+        o: &[f32],
+        do_: &[f32],
+        lse: &[f32],
+    ) -> Result<(GroupedGrads, TileStats), AttnError> {
+        let _ = (plan, q, kv, o, do_, lse);
+        Err(AttnError::Unsupported { backend: self.name(), capability: Capability::BackwardGrouped })
+    }
 }
 
 /// The CPU blocked engine: register-blocked packed microkernels,
@@ -960,7 +989,77 @@ impl Backend for CpuBackend {
         if lse.len() != n {
             return Err(AttnError::ShapeMismatch { what: "lse", got: lse.len(), want: n });
         }
-        Ok(flash::backward_impl(q, k, v, o, do_, lse, n, d, &plan.mask, plan.cfg, &plan.sched))
+        let sp = crate::telemetry::trace::span("plan.backward");
+        let t0 = std::time::Instant::now();
+        let (grads, stats) = flash::backward_impl(
+            q,
+            k,
+            v,
+            o,
+            do_,
+            lse,
+            n,
+            d,
+            &plan.mask,
+            plan.cfg,
+            &plan.sched,
+            plan.threads,
+        );
+        crate::telemetry::metrics::global()
+            .observe_ms("train.backward_ms", t0.elapsed().as_secs_f64() * 1e3);
+        sp.add("tiles_partial", stats.tiles_partial as u64);
+        sp.add("macs", stats.macs);
+        stats.publish();
+        Ok((grads, stats))
+    }
+
+    fn backward_grouped(
+        &self,
+        plan: &ExecutionPlan,
+        q: QViews<'_>,
+        kv: KvViews<'_>,
+        o: &[f32],
+        do_: &[f32],
+        lse: &[f32],
+    ) -> Result<(GroupedGrads, TileStats), AttnError> {
+        plan.check_views(q, kv)?;
+        let (n, d) = (plan.n, plan.d);
+        let q_heads = plan.layout.q_heads;
+        for (what, buf) in [("o", o), ("do", do_)] {
+            if buf.len() != q_heads * n * d {
+                return Err(AttnError::ShapeMismatch {
+                    what,
+                    got: buf.len(),
+                    want: q_heads * n * d,
+                });
+            }
+        }
+        if lse.len() != q_heads * n {
+            return Err(AttnError::ShapeMismatch { what: "lse", got: lse.len(), want: q_heads * n });
+        }
+        let sp = crate::telemetry::trace::span("plan.backward");
+        let t0 = std::time::Instant::now();
+        let (grads, stats) = flash::backward_grouped_impl(
+            q.data,
+            kv.k,
+            kv.v,
+            o,
+            do_,
+            lse,
+            n,
+            d,
+            plan.layout,
+            &plan.mask,
+            plan.cfg,
+            &plan.sched,
+            plan.threads,
+        );
+        crate::telemetry::metrics::global()
+            .observe_ms("train.backward_ms", t0.elapsed().as_secs_f64() * 1e3);
+        sp.add("tiles_partial", stats.tiles_partial as u64);
+        sp.add("macs", stats.macs);
+        stats.publish();
+        Ok((grads, stats))
     }
 }
 
@@ -1022,6 +1121,7 @@ impl Backend for DenseRefBackend {
             decode: false,
             verify: false,
             backward: true,
+            backward_grouped: false, // single-head oracle; grouped suites replicate KV themselves
         }
     }
 
@@ -1106,7 +1206,8 @@ impl Backend for PjrtBackend {
             prefill_grouped: false, // grouped decode artifact: ROADMAP
             decode: false,          // no AOT decode artifact compiled yet
             verify: false,
-            backward: false, // train-step artifacts fuse their own backward
+            backward: false,         // train-step artifacts fuse their own backward
+            backward_grouped: false, // ditto
         }
     }
 

@@ -54,6 +54,31 @@ fn apply_tile_mask_cached(s: &mut [f32], bits: &[u8]) {
     }
 }
 
+/// Run the element-wise interval tests of one tile into a byte map
+/// (1 = masked) — the uncached-tile analogue of the schedule's mask
+/// cache.  The backward pass classifies each tile **once per KV head**
+/// and replays the map across every query head of the group (and both
+/// the S recompute and nothing else — P/dS reuse the already-masked
+/// scores), so over-budget and dense-baseline tiles still pay the
+/// interval tests only once per tile visit, not once per group member.
+fn tile_mask_bits(
+    mask: &FlashMask,
+    row0: usize,
+    rows: usize,
+    col0: usize,
+    cols: usize,
+    out: &mut Vec<u8>,
+) {
+    out.clear();
+    out.reserve(rows * cols);
+    for x in 0..rows {
+        let i = row0 + x;
+        for y in 0..cols {
+            out.push(u8::from(!mask.allowed(i, col0 + y)));
+        }
+    }
+}
+
 /// Tile decision shared by forward and backward.
 #[inline]
 pub(crate) fn tile_class(
@@ -95,8 +120,13 @@ pub(crate) struct TileSchedule {
     classes: Vec<BlockClass>,
     ranges: Vec<(usize, usize)>,
     /// Executed (non-fully-masked) tiles per row block — the
-    /// work-partitioning weight.
+    /// work-partitioning weight of the forward pass.
     executed: Vec<u64>,
+    /// Executed tiles per **column** block — the work-partitioning
+    /// weight of the column-parallel backward pass (causal masks make
+    /// early key columns heavy and late ones light; the transpose of
+    /// the row-block skew).
+    executed_cols: Vec<u64>,
     /// Per-tile mask cache: for every `Partial` tile (when the Eq. 4
     /// classification is on) the element-wise interval tests are run
     /// **once here** and materialized as a `rows*cols` byte map
@@ -140,6 +170,7 @@ impl TileSchedule {
         let mut classes = Vec::with_capacity(tr * tc);
         let mut ranges = Vec::with_capacity(tr);
         let mut executed = Vec::with_capacity(tr);
+        let mut executed_cols = vec![0u64; tc];
         let mut masked = Vec::new();
         let mut tile_off = Vec::with_capacity(tr * tc + 1);
         tile_off.push(0);
@@ -157,6 +188,7 @@ impl TileSchedule {
                     }
                     hi = bj + 1;
                     exec += 1;
+                    executed_cols[bj] += 1;
                 }
                 if skip && class == BlockClass::PartiallyMasked {
                     let col0 = bj * bc;
@@ -183,7 +215,17 @@ impl TileSchedule {
             executed.push(exec);
         }
         sp.add("mask_evals", build_mask_evals);
-        TileSchedule { tr, tc, classes, ranges, executed, masked, tile_off, build_mask_evals }
+        TileSchedule {
+            tr,
+            tc,
+            classes,
+            ranges,
+            executed,
+            executed_cols,
+            masked,
+            tile_off,
+            build_mask_evals,
+        }
     }
 
     #[inline]
@@ -200,6 +242,12 @@ impl TileSchedule {
     /// Per-row-block executed-tile counts ([`super::parallel_2d`] weights).
     pub fn weights(&self) -> &[u64] {
         &self.executed
+    }
+
+    /// Per-column-block executed-tile counts — the [`super::parallel_2d`]
+    /// weights of the column-parallel backward pass.
+    pub fn col_weights(&self) -> &[u64] {
+        &self.executed_cols
     }
 
     /// All tile classes, row-major (`tr * tc`) — the census input.
@@ -559,14 +607,331 @@ pub fn flashmask_backward(
         .expect("flashmask_backward: CPU backward")
 }
 
-/// Algorithm 2 backward body, driven by the interval schedule.
+/// Packed per-key-block operands for the backward pass, built **once
+/// per KV head** and shared read-only by every column stripe and every
+/// query head of the head's group.
+struct BackwardKvPack {
+    /// K row panels per `bc` block (depth `d`) — the S = Q·Kᵀ recompute
+    /// right operand (same layout the forward pass packs).
+    kt: gemm::PackedKt,
+    /// V row panels per `bc` block (depth `d`) — the transposed-operand
+    /// "PackedVt" right operand of dP = dO·Vᵀ.
+    vt: gemm::PackedKt,
+    /// `K_jᵀ` panels (rows = `d`, depth = `cols`) — the dQ += dS·K
+    /// right operand.
+    kt_t: Vec<gemm::PackedBlock>,
+}
+
+impl BackwardKvPack {
+    fn pack(k: &[f32], v: &[f32], n: usize, d: usize, bc: usize) -> BackwardKvPack {
+        let kt = gemm::PackedKt::pack(k, n, d, bc);
+        let vt = gemm::PackedKt::pack(v, n, d, bc);
+        let tc = n.div_ceil(bc);
+        let mut kt_t = Vec::with_capacity(tc);
+        for bj in 0..tc {
+            let col0 = bj * bc;
+            let cols = bc.min(n - col0);
+            let mut p = gemm::PackedBlock::new();
+            p.pack_transposed(&k[col0 * d..(col0 + cols) * d], cols, d);
+            kt_t.push(p);
+        }
+        BackwardKvPack { kt, vt, kt_t }
+    }
+}
+
+/// Packed per-row-block operands for one query head's backward pass.
+struct BackwardQPack {
+    /// Q row panels per `br` block (depth `d`) — S = Q·Kᵀ left operand.
+    qt: gemm::PackedKt,
+    /// dO row panels per `br` block (depth `d`) — dP = dO·Vᵀ left operand.
+    dot: gemm::PackedKt,
+    /// `Q_iᵀ` panels (rows = `d`, depth = `rows`) — dK += dSᵀ·Q right
+    /// operand.
+    qt_t: Vec<gemm::PackedBlock>,
+    /// `dO_iᵀ` panels (rows = `d`, depth = `rows`) — dV += Pᵀ·dO right
+    /// operand.
+    dot_t: Vec<gemm::PackedBlock>,
+    /// D = rowsum(dO ∘ O) (Alg. 2 line 4).
+    dvec: Vec<f32>,
+}
+
+impl BackwardQPack {
+    fn pack(q: &[f32], do_: &[f32], o: &[f32], n: usize, d: usize, br: usize) -> BackwardQPack {
+        let qt = gemm::PackedKt::pack(q, n, d, br);
+        let dot = gemm::PackedKt::pack(do_, n, d, br);
+        let tr = n.div_ceil(br);
+        let mut qt_t = Vec::with_capacity(tr);
+        let mut dot_t = Vec::with_capacity(tr);
+        for bi in 0..tr {
+            let row0 = bi * br;
+            let rows = br.min(n - row0);
+            let mut pq = gemm::PackedBlock::new();
+            pq.pack_transposed(&q[row0 * d..(row0 + rows) * d], rows, d);
+            qt_t.push(pq);
+            let mut pd = gemm::PackedBlock::new();
+            pd.pack_transposed(&do_[row0 * d..(row0 + rows) * d], rows, d);
+            dot_t.push(pd);
+        }
+        let mut dvec = vec![0f32; n];
+        for (i, dst) in dvec.iter_mut().enumerate() {
+            let mut acc = 0f32;
+            for dd in 0..d {
+                acc += do_[i * d + dd] * o[i * d + dd];
+            }
+            *dst = acc;
+        }
+        BackwardQPack { qt, dot, qt_t, dot_t, dvec }
+    }
+}
+
+/// One column stripe's backward output: the stripe **owns** its dK_j /
+/// dV_j columns outright, and carries windowed dQ *partials* that the
+/// caller folds in ascending-stripe order (the deterministic
+/// reduction).
+struct ColStripeOut {
+    /// dK for this stripe's key columns, `[cols, d]` (grouped layouts:
+    /// summed across the query group in ascending query-head order).
+    dk: Vec<f32>,
+    /// dV for this stripe's key columns, `[cols, d]`.
+    dv: Vec<f32>,
+    /// First row covered by the dQ partials (a `br` multiple).
+    row_lo: usize,
+    /// Per-group-member dQ partial over rows `row_lo..`, `[span, d]`
+    /// each — only the row window this stripe's executed tiles touch.
+    dq: Vec<Vec<f32>>,
+    stats: TileStats,
+}
+
+/// Algorithm 2 backward body over a grouped head layout, column-parallel
+/// over key blocks on the packed microkernels.
 ///
-/// Column-parallel over key blocks exactly like the paper: `K_j`/`V_j`
-/// and the interval vectors stay resident across the inner row loop, and
-/// `dQ_i` is accumulated in the output buffer (Alg. 2 line 31).
-/// Partial tiles replay the schedule's per-tile mask cache when it was
-/// built (`skip = true`), so the element-wise interval tests run once
-/// per plan instead of once per tile visit.
+/// **Work item = one (KV head, key-column stripe) pair.**  A stripe owns
+/// its dK_j/dV_j columns (no reduction needed — FlashAttention-2's
+/// backward partitioning), recomputes S and P per tile from the packed
+/// panels, and accumulates the query group's dK/dV in ascending
+/// query-head order.  dQ is row-indexed, so every stripe produces
+/// windowed dQ *partials*; the caller folds them **in ascending (kv
+/// head, stripe) order on the calling thread**, and the sequential path
+/// runs the identical stripe-then-fold code.  Parallel output is
+/// therefore bitwise-identical to sequential at any thread count *by
+/// construction* (each stripe's arithmetic is independent and
+/// deterministic; only the fold adds floats across stripes, and its
+/// order never depends on the thread count) — asserted in the tests and
+/// the backward bench.
+///
+/// Mask classification runs **once per KV-head tile**: partial tiles
+/// replay the schedule's byte map (or, when uncached, materialize it
+/// once via [`tile_mask_bits`]) across all `group` query heads, so the
+/// classification/mask-eval denominator shrinks by the group factor
+/// exactly as in the grouped forward path.  All five tile GEMMs ride
+/// the 4×2 packed NT register tile via transposed-operand packing
+/// (see [`gemm::matmul_tn_packed_acc`] / [`gemm::matmul_nn_packed_acc`]);
+/// the per-tile pack cost is O(rows·cols) against O(rows·cols·d) of
+/// GEMM work.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn backward_grouped_impl(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    o: &[f32],
+    do_: &[f32],
+    lse: &[f32],
+    n: usize,
+    d: usize,
+    layout: HeadLayout,
+    mask: &FlashMask,
+    cfg: AttnConfig,
+    sched: &TileSchedule,
+    threads: usize,
+) -> (super::GroupedGrads, TileStats) {
+    let (br, bc) = (cfg.br, cfg.bc);
+    let (tr, tc) = (sched.tr, sched.tc);
+    let (q_heads, kv_heads) = (layout.q_heads, layout.kv_heads);
+    let group = layout.group();
+    let hd = n * d;
+
+    let kv_packs: Vec<BackwardKvPack> = (0..kv_heads)
+        .map(|kh| BackwardKvPack::pack(&k[kh * hd..(kh + 1) * hd], &v[kh * hd..(kh + 1) * hd], n, d, bc))
+        .collect();
+    let q_packs: Vec<BackwardQPack> = (0..q_heads)
+        .map(|h| {
+            BackwardQPack::pack(
+                &q[h * hd..(h + 1) * hd],
+                &do_[h * hd..(h + 1) * hd],
+                &o[h * hd..(h + 1) * hd],
+                n,
+                d,
+                br,
+            )
+        })
+        .collect();
+
+    // classification denominators are charged once per KV head — the
+    // grouped forward's accounting, carried to the backward
+    let mut stats = TileStats {
+        tiles_total: kv_heads * tr * tc,
+        mask_evals: kv_heads as u64 * sched.build_mask_evals(),
+        ..Default::default()
+    };
+
+    let worker = |kh: usize, bj: usize| -> ColStripeOut {
+        let col0 = bj * bc;
+        let cols = bc.min(n - col0);
+        let kvp = &kv_packs[kh];
+        let mut st = TileStats::default();
+        let mut dk = vec![0f32; cols * d];
+        let mut dv = vec![0f32; cols * d];
+
+        // row window: only the rows this stripe's executed tiles touch
+        let (mut lo, mut hi) = (tr, 0usize);
+        for bi in 0..tr {
+            if sched.class(bi, bj) != BlockClass::FullyMasked {
+                lo = lo.min(bi);
+                hi = bi + 1;
+            }
+        }
+        let (row_lo, row_hi) = if hi == 0 { (0, 0) } else { (lo * br, (hi * br).min(n)) };
+        let span = row_hi - row_lo;
+        let mut dq: Vec<Vec<f32>> = (0..group).map(|_| vec![0f32; span * d]).collect();
+
+        let mut s = vec![0f32; br.min(n) * cols];
+        let mut dp = vec![0f32; br.min(n) * cols];
+        let mut bits_scratch: Vec<u8> = Vec::new();
+        let mut p_t = gemm::PackedBlock::new();
+        let mut ds_p = gemm::PackedBlock::new();
+        let mut ds_t = gemm::PackedBlock::new();
+
+        for bi in 0..tr {
+            let class = sched.class(bi, bj);
+            if class == BlockClass::FullyMasked {
+                st.tiles_skipped += 1;
+                continue;
+            }
+            let row0 = bi * br;
+            let rows = br.min(n - row0);
+
+            // mask bits computed/fetched once per KV-head tile, replayed
+            // across the whole query group
+            let (bits, from_cache): (Option<&[u8]>, bool) = if class == BlockClass::PartiallyMasked
+            {
+                st.tiles_partial += 1;
+                if let Some(b) = sched.tile_mask(bi, bj) {
+                    (Some(b), true)
+                } else {
+                    tile_mask_bits(mask, row0, rows, col0, cols, &mut bits_scratch);
+                    st.mask_evals += (rows * cols) as u64;
+                    (Some(bits_scratch.as_slice()), false)
+                }
+            } else {
+                st.tiles_unmasked += 1;
+                (None, false)
+            };
+
+            for (g, dq_g) in dq.iter_mut().enumerate() {
+                let h = kh * group + g;
+                let qp = &q_packs[h];
+
+                // S = (Q_i K_jᵀ)·scale (Alg. 2 line 20), packed recompute
+                let s_tile = &mut s[..rows * cols];
+                gemm::matmul_nt_packed(qp.qt.block(bi), kvp.kt.block(bj), cfg.scale, s_tile);
+                st.macs += (rows * cols * d) as u64;
+                if let Some(b) = bits {
+                    apply_tile_mask_cached(s_tile, b);
+                    if from_cache {
+                        st.mask_cache_hits += 1;
+                    }
+                }
+
+                // P = exp(S - L_i) (line 27); masked rows have
+                // lse = -inf => P = 0
+                let lse_h = &lse[h * n..(h + 1) * n];
+                for x in 0..rows {
+                    let l = lse_h[row0 + x];
+                    let srow = &mut s_tile[x * cols..(x + 1) * cols];
+                    if l.is_finite() {
+                        for sv in srow.iter_mut() {
+                            *sv = (*sv - l).exp();
+                        }
+                    } else {
+                        srow.fill(0.0);
+                    }
+                }
+
+                // dV_j += Pᵀ dO_i (line 28)
+                p_t.pack_transposed(s_tile, rows, cols);
+                gemm::matmul_tn_packed_acc(&p_t, &qp.dot_t[bi], 1.0, &mut dv);
+                st.macs += (rows * cols * d) as u64;
+
+                // dP = dO_i V_jᵀ (line 29)
+                let dp_tile = &mut dp[..rows * cols];
+                gemm::matmul_nt_packed(qp.dot.block(bi), kvp.vt.block(bj), 1.0, dp_tile);
+                st.macs += (rows * cols * d) as u64;
+
+                // dS = P ∘ (dP - D_i) · scale (line 30)
+                for x in 0..rows {
+                    let dv_i = qp.dvec[row0 + x];
+                    for y in 0..cols {
+                        let idx = x * cols + y;
+                        dp_tile[idx] = s_tile[idx] * (dp_tile[idx] - dv_i) * cfg.scale;
+                    }
+                }
+
+                // dQ_i += dS K_j (line 31) — into this stripe's partial
+                ds_p.pack(dp_tile, rows, cols);
+                let off = (row0 - row_lo) * d;
+                gemm::matmul_nn_packed_acc(&ds_p, &kvp.kt_t[bj], 1.0, &mut dq_g[off..off + rows * d]);
+                st.macs += (rows * cols * d) as u64;
+
+                // dK_j += dSᵀ Q_i (line 32)
+                ds_t.pack_transposed(dp_tile, rows, cols);
+                gemm::matmul_tn_packed_acc(&ds_t, &qp.qt_t[bi], 1.0, &mut dk);
+                st.macs += (rows * cols * d) as u64;
+            }
+        }
+        ColStripeOut { dk, dv, row_lo, dq, stats: st }
+    };
+
+    let results: Vec<ColStripeOut> = if threads <= 1 {
+        let mut r = Vec::with_capacity(kv_heads * tc);
+        for kh in 0..kv_heads {
+            for bj in 0..tc {
+                r.push(worker(kh, bj));
+            }
+        }
+        r
+    } else {
+        super::parallel_2d(kv_heads, tc, sched.col_weights(), threads, &worker)
+    };
+
+    // deterministic reduction: fold stripe outputs in ascending
+    // (kv head, stripe) order on the calling thread — the one float
+    // addition across stripes, and its order never depends on the
+    // thread count
+    let mut dq_heads = vec![vec![0f32; hd]; q_heads];
+    let mut dk_heads = vec![vec![0f32; hd]; kv_heads];
+    let mut dv_heads = vec![vec![0f32; hd]; kv_heads];
+    for (it, out) in results.into_iter().enumerate() {
+        let (kh, bj) = (it / tc, it % tc);
+        let col0 = bj * bc;
+        let cols = bc.min(n - col0);
+        dk_heads[kh][col0 * d..(col0 + cols) * d].copy_from_slice(&out.dk);
+        dv_heads[kh][col0 * d..(col0 + cols) * d].copy_from_slice(&out.dv);
+        for (g, part) in out.dq.iter().enumerate() {
+            let h = kh * group + g;
+            let dst = &mut dq_heads[h][out.row_lo * d..out.row_lo * d + part.len()];
+            for (a, b) in dst.iter_mut().zip(part) {
+                *a += *b;
+            }
+        }
+        stats.merge(&out.stats);
+    }
+    (super::GroupedGrads { dq: dq_heads, dk: dk_heads, dv: dv_heads }, stats)
+}
+
+/// Algorithm 2 backward body for a single head — the MHA special case
+/// of [`backward_grouped_impl`] (one query head, one KV head), keeping
+/// the column-parallel stripe-then-fold path so single-head callers get
+/// the same packed kernels and the same bitwise-determinism guarantee.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn backward_impl(
     q: &[f32],
@@ -580,111 +945,27 @@ pub(crate) fn backward_impl(
     mask: &FlashMask,
     cfg: AttnConfig,
     sched: &TileSchedule,
+    threads: usize,
 ) -> (AttnGrads, TileStats) {
-    let (br, bc) = (cfg.br, cfg.bc);
-    let tr = sched.tr;
-    let tc = sched.tc;
-    let mut dq = vec![0f32; n * d];
-    let mut dk = vec![0f32; n * d];
-    let mut dv = vec![0f32; n * d];
-    let mut stats = TileStats {
-        tiles_total: tr * tc,
-        mask_evals: sched.build_mask_evals(),
-        ..Default::default()
-    };
-
-    // D = rowsum(dO ∘ O)  (Alg. 2 line 4)
-    let mut dvec = vec![0f32; n];
-    for i in 0..n {
-        let mut acc = 0f32;
-        for dd in 0..d {
-            acc += do_[i * d + dd] * o[i * d + dd];
-        }
-        dvec[i] = acc;
-    }
-
-    let mut s = vec![0f32; br * bc];
-    let mut dp = vec![0f32; br * bc];
-
-    for bj in 0..tc {
-        let col0 = bj * bc;
-        let cols = bc.min(n - col0);
-        let kj = &k[col0 * d..(col0 + cols) * d];
-        let vj = &v[col0 * d..(col0 + cols) * d];
-
-        for bi in 0..tr {
-            let class = sched.class(bi, bj);
-            if class == BlockClass::FullyMasked {
-                stats.tiles_skipped += 1;
-                continue;
-            }
-            let row0 = bi * br;
-            let rows = br.min(n - row0);
-            let qi = &q[row0 * d..(row0 + rows) * d];
-            let doi = &do_[row0 * d..(row0 + rows) * d];
-
-            // S = Q_i K_j^T * scale (Alg. 2 line 20)
-            let s_tile = &mut s[..rows * cols];
-            s_tile.fill(0.0);
-            gemm::matmul_nt_acc(qi, kj, rows, d, cols, s_tile);
-            stats.macs += (rows * cols * d) as u64;
-            for sv in s_tile.iter_mut() {
-                *sv *= cfg.scale;
-            }
-            if class == BlockClass::PartiallyMasked {
-                if let Some(bits) = sched.tile_mask(bi, bj) {
-                    apply_tile_mask_cached(s_tile, bits);
-                    stats.mask_cache_hits += 1;
-                } else {
-                    apply_tile_mask(s_tile, mask, row0, rows, col0, cols, &mut stats);
-                }
-                stats.tiles_partial += 1;
-            } else {
-                stats.tiles_unmasked += 1;
-            }
-
-            // P = exp(S - L_i) (Alg. 2 line 27); masked rows have
-            // lse = -inf => P = 0
-            for x in 0..rows {
-                let l = lse[row0 + x];
-                let srow = &mut s_tile[x * cols..(x + 1) * cols];
-                if l.is_finite() {
-                    for sv in srow.iter_mut() {
-                        *sv = (*sv - l).exp();
-                    }
-                } else {
-                    srow.fill(0.0);
-                }
-            }
-
-            // dV_j += P^T dO_i (line 28)
-            gemm::matmul_tn_acc(s_tile, doi, rows, cols, d, &mut dv[col0 * d..(col0 + cols) * d]);
-            stats.macs += (rows * cols * d) as u64;
-
-            // dP = dO_i V_j^T (line 29)
-            let dp_tile = &mut dp[..rows * cols];
-            dp_tile.fill(0.0);
-            gemm::matmul_nt_acc(doi, vj, rows, d, cols, dp_tile);
-            stats.macs += (rows * cols * d) as u64;
-
-            // dS = P ∘ (dP - D_i) * scale (line 30)
-            for x in 0..rows {
-                let dv_i = dvec[row0 + x];
-                for y in 0..cols {
-                    let idx = x * cols + y;
-                    dp_tile[idx] = s_tile[idx] * (dp_tile[idx] - dv_i) * cfg.scale;
-                }
-            }
-
-            // dQ_i += dS K_j (line 31)
-            gemm::matmul_nn_acc(dp_tile, kj, rows, cols, d, &mut dq[row0 * d..(row0 + rows) * d]);
-            stats.macs += (rows * cols * d) as u64;
-            // dK_j += dS^T Q_i (line 32)
-            gemm::matmul_tn_acc(dp_tile, qi, rows, cols, d, &mut dk[col0 * d..(col0 + cols) * d]);
-            stats.macs += (rows * cols * d) as u64;
-        }
-    }
-    (AttnGrads { dq, dk, dv }, stats)
+    let (mut gg, stats) = backward_grouped_impl(
+        q,
+        k,
+        v,
+        o,
+        do_,
+        lse,
+        n,
+        d,
+        HeadLayout::mha(1),
+        mask,
+        cfg,
+        sched,
+        threads,
+    );
+    (
+        AttnGrads { dq: gg.dq.remove(0), dk: gg.dk.remove(0), dv: gg.dv.remove(0) },
+        stats,
+    )
 }
 
 #[cfg(test)]

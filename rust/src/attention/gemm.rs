@@ -14,10 +14,17 @@
 //!    the score tile.  [`PackedKt`] packs a whole K head once per
 //!    column block; the pack cost is then reused across **every row
 //!    block and every query head of a GQA group** (the data-layout
-//!    analogue of the classify-once reuse).
+//!    analogue of the classify-once reuse).  The backward pass rides
+//!    the same tile through [`matmul_nt_packed_acc`] and the
+//!    transposed-operand TN/NN wrappers ([`matmul_tn_packed_acc`],
+//!    [`matmul_nn_packed_acc`]): packing an operand with
+//!    [`PackedBlock::pack_transposed`] swaps its reduction axis, so
+//!    dP = dO·Vᵀ, dV += Pᵀ·dO, dQ += dS·K and dK += dSᵀ·Q are all the
+//!    one NT register kernel under different layouts.
 //! 2. **Lane-blocked loose kernels** ([`matmul_nt_acc`],
 //!    [`matmul_nn_acc`], [`matmul_tn_acc`]) — unpacked fallbacks used
-//!    by the backward pass and the baseline engines.  [`dot`] keeps 8
+//!    by the baseline engines (and kept as the backward bench's
+//!    pre-rebuild reference).  [`dot`] keeps 8
 //!    independent partial sums and folds the `len % 8` tail into the
 //!    lane accumulators, so shapes like d = 80 stay on the parallel
 //!    accumulation path instead of degrading to a serial chain.
@@ -100,6 +107,30 @@ impl PackedBlock {
         for i in 0..rows {
             self.data[i * kp..i * kp + k].copy_from_slice(&src[i * k..(i + 1) * k]);
             self.data[i * kp + k..(i + 1) * kp].fill(0.0);
+        }
+    }
+
+    /// (Re)fill with the **transpose** of a row-major `[rows, cols]`
+    /// slice: the packed panel holds `cols` rows of depth `rows` (padded
+    /// to the lane width).  This is how the backward pass turns every
+    /// TN/NN GEMM into the one NT register tile: packing an operand
+    /// transposed swaps which axis is the reduction axis, so
+    /// dV += Pᵀ·dO, dK += dSᵀ·Q and dQ += dS·K all become `A Bᵀ` over
+    /// suitably transposed panels (see [`matmul_tn_packed_acc`] /
+    /// [`matmul_nn_packed_acc`]).
+    pub fn pack_transposed(&mut self, src: &[f32], rows: usize, cols: usize) {
+        debug_assert_eq!(src.len(), rows * cols);
+        let kp = rows.div_ceil(LANES) * LANES;
+        self.rows = cols;
+        self.k = rows;
+        self.kp = kp;
+        self.data.resize(cols * kp, 0.0);
+        for j in 0..cols {
+            let row = &mut self.data[j * kp..(j + 1) * kp];
+            for (i, slot) in row[..rows].iter_mut().enumerate() {
+                *slot = src[i * cols + j];
+            }
+            row[rows..].fill(0.0);
         }
     }
 
@@ -241,6 +272,84 @@ pub fn matmul_nt_packed(a: &PackedBlock, b: &PackedBlock, scale: f32, out: &mut 
         }
         i += 1;
     }
+}
+
+/// `out[m, n] += scale * (A B^T)` over packed operands — the
+/// accumulating twin of [`matmul_nt_packed`], for the backward shapes
+/// that add into running gradient buffers instead of overwriting a
+/// score tile.  Identical 4×2 register tiling and edge paths; only the
+/// final store accumulates.
+pub fn matmul_nt_packed_acc(a: &PackedBlock, b: &PackedBlock, scale: f32, out: &mut [f32]) {
+    assert_eq!(a.kp, b.kp, "packed operands must share the padded depth");
+    let (m, n) = (a.rows, b.rows);
+    debug_assert_eq!(out.len(), m * n);
+    let chunks = a.kp / LANES;
+    let mut i = 0;
+    while i + MR <= m {
+        let ar = [a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3)];
+        let mut j = 0;
+        while j + NR <= n {
+            let br = [b.row(j), b.row(j + 1)];
+            let mut acc = [[0f32; LANES]; MR * NR];
+            for c in 0..chunks {
+                let off = c * LANES;
+                for (r, arow) in ar.iter().enumerate() {
+                    let av: &[f32; LANES] = arow[off..off + LANES].try_into().unwrap();
+                    for (s, brow) in br.iter().enumerate() {
+                        let bv: &[f32; LANES] = brow[off..off + LANES].try_into().unwrap();
+                        let lane = &mut acc[r * NR + s];
+                        for l in 0..LANES {
+                            lane[l] = fmadd(av[l], bv[l], lane[l]);
+                        }
+                    }
+                }
+            }
+            for r in 0..MR {
+                for s in 0..NR {
+                    out[(i + r) * n + j + s] += scale * acc[r * NR + s].iter().sum::<f32>();
+                }
+            }
+            j += NR;
+        }
+        while j < n {
+            let brow = b.row(j);
+            for (r, arow) in ar.iter().enumerate() {
+                out[(i + r) * n + j] += scale * dot_padded(arow, brow, chunks);
+            }
+            j += 1;
+        }
+        i += MR;
+    }
+    while i < m {
+        let arow = a.row(i);
+        for j in 0..n {
+            out[i * n + j] += scale * dot_padded(arow, b.row(j), chunks);
+        }
+        i += 1;
+    }
+}
+
+/// Packed TN microkernel: `out[k, n] += scale * (A^T B)` where
+/// `at = pack_transposed(A[m, k])` and `bt = pack_transposed(B[m, n])`.
+/// Transposing both operands turns the shared `m` axis into the packed
+/// reduction depth, so the dV += Pᵀ·dO and dK += dSᵀ·Q shapes ride the
+/// same 4×2 `fmadd` tile as the forward S = Q·Kᵀ kernel — there is one
+/// register kernel in this engine, and operand *layout* selects the
+/// GEMM flavor.
+#[inline]
+pub fn matmul_tn_packed_acc(at: &PackedBlock, bt: &PackedBlock, scale: f32, out: &mut [f32]) {
+    matmul_nt_packed_acc(at, bt, scale, out);
+}
+
+/// Packed NN microkernel: `out[m, n] += scale * (A B)` where
+/// `a = pack(A[m, k])` and `bt = pack_transposed(B[k, n])`.  Only the
+/// right operand is transposed-packed (a `PackedVt`-style layout), which
+/// is exactly the dQ += dS·K shape — dS packs naturally along its key
+/// axis and Kᵀ is packed once per column block and reused by every row
+/// block of every query head in the group.
+#[inline]
+pub fn matmul_nn_packed_acc(a: &PackedBlock, bt: &PackedBlock, scale: f32, out: &mut [f32]) {
+    matmul_nt_packed_acc(a, bt, scale, out);
 }
 
 /// Max over a score row — lane-parallel (exact: max is order-free).
@@ -572,5 +681,119 @@ mod tests {
         let mut x = vec![1.0, 2.0, 3.0, 4.0];
         scale_rows(&mut x, &[2.0, 0.5], 2, 2);
         assert_eq!(x, vec![2.0, 4.0, 1.5, 2.0]);
+    }
+
+    #[test]
+    fn pack_transposed_is_the_transpose() {
+        // pack_transposed([rows, cols]) must equal pack of the explicit
+        // transpose, bit for bit (padding included) — the backward
+        // kernels rely on the two layouts being interchangeable
+        let dims = [1usize, 3, 5, 7, 80, 100];
+        let mut rng = Rng::new(11);
+        for &rows in &dims {
+            for &cols in &dims {
+                let src = rand(rows * cols, &mut rng);
+                let mut t = vec![0.0; cols * rows];
+                for i in 0..rows {
+                    for j in 0..cols {
+                        t[j * rows + i] = src[i * cols + j];
+                    }
+                }
+                let mut pt = PackedBlock::new();
+                pt.pack_transposed(&src, rows, cols);
+                let mut pe = PackedBlock::new();
+                pe.pack(&t, cols, rows);
+                assert_eq!(pt.rows(), cols);
+                assert_eq!(pt.depth(), rows);
+                for j in 0..cols {
+                    assert_eq!(pt.row(j), pe.row(j), "rows={rows} cols={cols} panel row {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_acc_matches_naive_awkward_shapes_and_accumulates() {
+        // the accumulating twin must agree with naive A·Bᵀ *added onto*
+        // a non-zero running buffer across the same edge-path grid as
+        // the write kernel
+        let dims = [1usize, 3, 5, 7, 80, 100];
+        let mut rng = Rng::new(12);
+        for &m in &dims {
+            for &k in &dims {
+                for &n in &dims {
+                    let a = rand(m * k, &mut rng);
+                    let b = rand(n * k, &mut rng);
+                    let base = rand(m * n, &mut rng);
+                    let mut pa = PackedBlock::new();
+                    pa.pack(&a, m, k);
+                    let mut pb = PackedBlock::new();
+                    pb.pack(&b, n, k);
+                    let mut out = base.clone();
+                    matmul_nt_packed_acc(&pa, &pb, 0.5, &mut out);
+                    let want = naive_nt(&a, &b, m, k, n);
+                    for i in 0..m * n {
+                        let expect = base[i] + 0.5 * want[i];
+                        assert!(
+                            (out[i] - expect).abs() < 2e-4,
+                            "m={m} k={k} n={n} out[{i}]: {} vs {expect}",
+                            out[i]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_tn_matches_loose_tn() {
+        // out[k,n] += Aᵀ·B via transposed panels vs the loose kernel
+        let mut rng = Rng::new(13);
+        for (m, k, n) in [(6, 4, 5), (64, 64, 80), (7, 3, 100), (1, 1, 1)] {
+            let a = rand(m * k, &mut rng);
+            let b = rand(m * n, &mut rng);
+            let mut want = rand(k * n, &mut rng);
+            let mut got = want.clone();
+            matmul_tn_acc(&a, &b, m, k, n, &mut want);
+            let mut at = PackedBlock::new();
+            at.pack_transposed(&a, m, k);
+            let mut bt = PackedBlock::new();
+            bt.pack_transposed(&b, m, n);
+            matmul_tn_packed_acc(&at, &bt, 1.0, &mut got);
+            for i in 0..k * n {
+                assert!(
+                    (got[i] - want[i]).abs() < 2e-4,
+                    "m={m} k={k} n={n} out[{i}]: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_nn_matches_loose_nn() {
+        // out[m,n] += A·B with only the right operand transposed-packed
+        let mut rng = Rng::new(14);
+        for (m, k, n) in [(4, 6, 5), (64, 64, 128), (5, 100, 7), (1, 1, 1)] {
+            let a = rand(m * k, &mut rng);
+            let b = rand(k * n, &mut rng);
+            let mut want = rand(m * n, &mut rng);
+            let mut got = want.clone();
+            matmul_nn_acc(&a, &b, m, k, n, &mut want);
+            let mut pa = PackedBlock::new();
+            pa.pack(&a, m, k);
+            let mut bt = PackedBlock::new();
+            bt.pack_transposed(&b, k, n);
+            matmul_nn_packed_acc(&pa, &bt, 1.0, &mut got);
+            for i in 0..m * n {
+                assert!(
+                    (got[i] - want[i]).abs() < 2e-4,
+                    "m={m} k={k} n={n} out[{i}]: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
     }
 }

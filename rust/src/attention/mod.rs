@@ -194,6 +194,21 @@ pub struct AttnGrads {
     pub dv: Vec<f32>,
 }
 
+/// Gradients from a grouped-layout backward pass: one dQ per query
+/// head, and one dK/dV per **KV head** — the query group's key/value
+/// gradients are accumulated across the group (in ascending query-head
+/// order), mirroring how the shared K/V received contributions from
+/// every group member in the forward pass.
+#[derive(Clone, Debug)]
+pub struct GroupedGrads {
+    /// Per query head, `[n * d]` each.
+    pub dq: Vec<Vec<f32>>,
+    /// Per KV head, `[n * d]` each (summed over the query group).
+    pub dk: Vec<Vec<f32>>,
+    /// Per KV head, `[n * d]` each (summed over the query group).
+    pub dv: Vec<Vec<f32>>,
+}
+
 /// Cost-weighted work partitioning over a `(heads × blocks)` grid — the
 /// generalization of head-only parallelism to the sequence axis
 /// (FlashAttention-2's work-partitioning observation on this engine).

@@ -14,4 +14,4 @@ pub mod trainer;
 
 pub use batcher::{Batch, Batcher};
 pub use checkpoint::Checkpoint;
-pub use trainer::{TrainLog, Trainer, TrainerOptions};
+pub use trainer::{StepPlanner, TrainLog, Trainer, TrainerOptions};

@@ -10,10 +10,89 @@
 
 use super::batcher::Batch;
 use super::metrics::Metrics;
-use crate::attention::api::AttnProblem;
+use crate::attention::api::{AttnProblem, ExecutionPlan, PlanCache};
 use crate::mask::FlashMask;
 use crate::runtime::{Executable, HostTensor, Runtime};
 use anyhow::{anyhow, ensure, Context, Result};
+use std::sync::Arc;
+
+/// Per-sample attention plans for training batches, with a [`PlanCache`]
+/// held **across steps**: epochs revisit the same packed-document
+/// layouts, so the Eq. 4 classification + per-tile mask cache for a
+/// given sample mask is built once per unique mask, not once per step.
+/// `plans_built()` therefore tracks unique mask keys, not step count —
+/// asserted in the tests below and in `bench_train`.
+///
+/// Shared by [`Trainer::step`] (validation + plan reuse ahead of the
+/// fused artifact) and by the CPU training bench, which drives
+/// `CpuBackend` prefill/backward directly from the resolved plans.
+pub struct StepPlanner {
+    cache: PlanCache,
+    n: usize,
+    d: usize,
+    br: usize,
+    bc: usize,
+    threads: usize,
+    skip: bool,
+}
+
+impl StepPlanner {
+    pub fn new(n: usize, d: usize, br: usize, bc: usize) -> StepPlanner {
+        StepPlanner { cache: PlanCache::default(), n, d, br, bc, threads: 1, skip: true }
+    }
+
+    /// Thread cap stamped into each plan (default 1).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Eq. 4 tile skipping (default on; `false` = dense-mask baseline).
+    pub fn skip(mut self, skip: bool) -> Self {
+        self.skip = skip;
+        self
+    }
+
+    /// Plans actually built (cache misses) — equals the number of
+    /// *unique* sample masks seen, not the number of steps.
+    pub fn plans_built(&self) -> u64 {
+        self.cache.misses()
+    }
+
+    /// Cache hits (steps × samples that reused an existing plan).
+    pub fn plan_hits(&self) -> u64 {
+        self.cache.hits()
+    }
+
+    /// Resolve one [`ExecutionPlan`] per batch sample, reusing cached
+    /// plans for repeated masks.  A malformed sample mask surfaces as
+    /// a typed `AttnError` wrapped with the sample index — plan
+    /// validation subsumes the old per-sample `validate_parts` check.
+    pub fn plan_batch(&mut self, batch: &Batch) -> Result<Vec<Arc<ExecutionPlan>>> {
+        let mut plans = Vec::with_capacity(batch.batch);
+        for bi in 0..batch.batch {
+            let r = bi * batch.n..(bi + 1) * batch.n;
+            let mask = FlashMask {
+                lts: batch.lts[r.clone()].to_vec(),
+                lte: batch.lte[r.clone()].to_vec(),
+                uts: batch.uts[r.clone()].to_vec(),
+                ute: batch.ute[r].to_vec(),
+                causal: true,
+            };
+            let problem = AttnProblem::new(self.n, self.d)
+                .mask(&mask)
+                .tile(self.br, self.bc)
+                .threads(self.threads)
+                .skip(self.skip);
+            plans.push(
+                self.cache
+                    .get_or_build(&problem)
+                    .map_err(|e| anyhow!("train batch sample {bi}: {e}"))?,
+            );
+        }
+        Ok(plans)
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct TrainerOptions {
@@ -47,6 +126,7 @@ pub struct Trainer {
     opt_v: Vec<HostTensor>,
     step_no: i32,
     opts: TrainerOptions,
+    planner: StepPlanner,
     pub metrics: Metrics,
 }
 
@@ -86,8 +166,15 @@ impl Trainer {
             opt_v: zeros,
             step_no: 0,
             opts,
+            planner: StepPlanner::new(m.max_seq, m.d_head, m.br, m.bc),
             metrics: Metrics::new(),
         })
+    }
+
+    /// Unique sample masks planned so far (PlanCache misses); stays
+    /// flat across steps that revisit the same packed layouts.
+    pub fn plans_built(&self) -> u64 {
+        self.planner.plans_built()
     }
 
     pub fn n_params(&self) -> usize {
@@ -96,26 +183,19 @@ impl Trainer {
 
     /// Execute one optimizer step on a batch; returns the loss.
     ///
-    /// Each sample's FlashMask vectors are validated first via the
-    /// allocation-free `FlashMask::validate_parts` (the hot path copies
-    /// nothing): a malformed interval surfaces here as a typed error
-    /// with the sample index instead of as NaNs three layers down the
-    /// train-step artifact.  The manifest-level attention geometry was
-    /// validated through `attention::api` once in [`Trainer::new`].
+    /// Each sample's mask is resolved through the cross-step
+    /// [`StepPlanner`]: a malformed interval surfaces here as a typed
+    /// error with the sample index instead of as NaNs three layers down
+    /// the train-step artifact, and repeated packed-document layouts
+    /// reuse their cached plan (Eq. 4 classification + tile mask cache)
+    /// instead of rebuilding it every step.  The manifest-level
+    /// attention geometry was validated through `attention::api` once
+    /// in [`Trainer::new`].
     pub fn step(&mut self, batch: &Batch) -> Result<f32> {
         let sp = crate::telemetry::trace::span("train.step");
         sp.add("tokens", (batch.batch * batch.n) as u64);
-        for bi in 0..batch.batch {
-            let r = bi * batch.n..(bi + 1) * batch.n;
-            FlashMask::validate_parts(
-                &batch.lts[r.clone()],
-                &batch.lte[r.clone()],
-                &batch.uts[r.clone()],
-                &batch.ute[r],
-                true,
-            )
-            .map_err(|e| anyhow!("train batch sample {bi}: {e:#}"))?;
-        }
+        self.planner.plan_batch(batch)?;
+        sp.add("plans_built", self.planner.plans_built());
         let mut inputs: Vec<HostTensor> =
             Vec::with_capacity(3 * self.n_leaves + 1 + 7);
         inputs.extend(self.params.iter().cloned());
@@ -124,7 +204,15 @@ impl Trainer {
         inputs.push(HostTensor::I32 { shape: vec![], data: vec![self.step_no] });
         inputs.extend(batch.to_tensors());
 
-        let mut out = self.step_exe.run(&inputs)?;
+        let mut out = {
+            // the AOT artifact fuses forward+backward+optimizer; the
+            // span marks where the backward lives under `train.step`
+            // (the CPU path's `CpuBackend::backward` opens the same
+            // span name and feeds the `train.backward_ms` histogram)
+            let bsp = crate::telemetry::trace::span("plan.backward");
+            bsp.add("fused", 1);
+            self.step_exe.run(&inputs)?
+        };
         ensure!(
             out.len() == 1 + 3 * self.n_leaves,
             "train step returned {} outputs, want {}",
@@ -190,5 +278,50 @@ impl Trainer {
             steps: self.metrics.steps,
             elapsed_s: self.metrics.elapsed_s(),
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::StepPlanner;
+    use crate::coordinator::Batcher;
+    use crate::workload::docgen::Task;
+
+    #[test]
+    fn step_planner_builds_once_per_unique_mask_not_per_step() {
+        let (n, batch) = (128, 2);
+        let mut batcher = Batcher::new(n, batch, Task::Sft, 9);
+        let b = batcher.next_batch();
+        let mut planner = StepPlanner::new(n, 16, 32, 32);
+
+        let plans = planner.plan_batch(&b).expect("generated batch must plan");
+        assert_eq!(plans.len(), batch);
+        let built_after_first = planner.plans_built();
+        assert!((1..=batch as u64).contains(&built_after_first));
+
+        // replaying the same batch for more "steps" builds nothing new:
+        // plans_built counts unique masks, not steps
+        for _ in 0..3 {
+            planner.plan_batch(&b).expect("replay must plan");
+        }
+        assert_eq!(planner.plans_built(), built_after_first);
+        assert!(planner.plan_hits() >= 3 * batch as u64);
+
+        // a genuinely new batch layout may add plans, never remove
+        let b2 = batcher.next_batch();
+        planner.plan_batch(&b2).expect("second batch must plan");
+        assert!(planner.plans_built() >= built_after_first);
+    }
+
+    #[test]
+    fn step_planner_rejects_malformed_sample_with_index() {
+        let (n, batch) = (64, 2);
+        let mut batcher = Batcher::new(n, batch, Task::Sft, 3);
+        let mut b = batcher.next_batch();
+        // corrupt sample 1's lower-triangular start interval
+        b.lts[n] = n as i32 + 7;
+        let mut planner = StepPlanner::new(n, 16, 32, 32);
+        let err = planner.plan_batch(&b).expect_err("corrupt mask must fail");
+        assert!(format!("{err:#}").contains("sample 1"), "got: {err:#}");
     }
 }

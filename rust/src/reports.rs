@@ -25,6 +25,13 @@ fn rand_qkv(n: usize, d: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     (mk(), mk(), mk())
 }
 
+/// Independent upstream gradient for backward timings — never alias q
+/// as dO (a correlated dP = dO·Vᵀ skews the measurement).
+fn rand_do(n: usize, d: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ 0xD0D0);
+    (0..n * d).map(|_| rng.normal_f32() * 0.5).collect()
+}
+
 /// Paper anchor values: FLASHMASK total TFLOPs/s from Tables 4–6 (hd128).
 fn paper_anchor(kind: MaskKind, n: usize) -> Option<f64> {
     let rows_8k: &[(&str, f64)] = &[
@@ -116,7 +123,7 @@ pub fn kernel_mask_report(
             );
         }
         let gflops = st.flops() as f64 / (fm_fw.median_ms / 1e3) / 1e9;
-        let do_ = q.clone();
+        let do_ = rand_do(measure_n, d, 42);
         let fm_bw = bench("fm_bw", opts, || {
             let _ = CpuBackend
                 .backward(&plan, &q, &k, &v, &fwd.o, &do_, &fwd.lse)
@@ -199,6 +206,7 @@ pub fn kernel_mask_report(
 pub fn sparsity_report(n: usize, d: usize, opts: BenchOpts, seed: u64) {
     let cfg = AttnConfig::new(64.min(n), 64.min(n), d);
     let (q, k, v) = rand_qkv(n, d, seed);
+    let do_ = rand_do(n, d, seed);
     let qv = QViews::new(&q, 1, n, d).expect("bench q view");
     let kvv = KvViews::new(&k, &v, 1, n, d).expect("bench k/v views");
     for kind in [MaskKind::CausalDocument, MaskKind::ShareQuestion, MaskKind::Document] {
@@ -216,7 +224,7 @@ pub fn sparsity_report(n: usize, d: usize, opts: BenchOpts, seed: u64) {
             let st = bench("fwbw", opts, || {
                 let out = CpuBackend.prefill(&plan, qv, kvv).expect("prefill");
                 let _ = CpuBackend
-                    .backward(&plan, &q, &k, &v, &out.outs[0].o, &q, &out.outs[0].lse)
+                    .backward(&plan, &q, &k, &v, &out.outs[0].o, &do_, &out.outs[0].lse)
                     .expect("backward");
             });
             let census = plan.census();

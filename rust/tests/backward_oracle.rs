@@ -1,0 +1,211 @@
+//! Differential + determinism oracles for the packed column-parallel
+//! backward rebuild (ISSUE 9).
+//!
+//! Three pins:
+//!
+//! 1. **Dense differential** — `CpuBackend::backward` (packed kernels,
+//!    Eq. 4 tile skipping) matches the textbook `DenseRefBackend`
+//!    gradient to < 1e-4 across all 12 benchmark mask kinds at
+//!    n ∈ {100, 256} × d ∈ {80, 128}.
+//! 2. **Bitwise determinism** — the column-stripe parallel backward is
+//!    bitwise-identical to the sequential run at thread counts
+//!    {1, 2, 3, 8} (stripe-owned dK/dV, ordered dQ fold).
+//! 3. **GQA replication equivalence** — `backward_grouped` at groups
+//!    {2, 4, 8}: per-query-head dQ is bitwise the single-head backward
+//!    against its KV head, grouped dK/dV match the KV-replicated MHA
+//!    sum, and the mask-classification denominator shrinks exactly by
+//!    the group factor.
+
+use flashmask::attention::api::{
+    AttnProblem, Backend, CpuBackend, DenseRefBackend, ExecutionPlan, KvViews, QViews,
+};
+use flashmask::mask::{builders, FlashMask};
+use flashmask::util::rng::Rng;
+
+fn rand_vec(len: usize, rng: &mut Rng) -> Vec<f32> {
+    (0..len).map(|_| rng.normal_f32() * 0.5).collect()
+}
+
+fn assert_close(label: &str, got: &[f32], want: &[f32], tol: f32, d: usize) {
+    assert_eq!(got.len(), want.len(), "{label}: length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (a - b).abs() < tol,
+            "{label}: row {} dim {}: {a} vs {b} (|Δ| = {})",
+            i / d,
+            i % d,
+            (a - b).abs()
+        );
+    }
+}
+
+/// Single-head forward through the unified API → (o, lse).
+fn forward(plan: &ExecutionPlan, q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
+    let qv = QViews::new(q, 1, n, d).expect("q view");
+    let kvv = KvViews::new(k, v, 1, n, d).expect("k/v views");
+    let mut out = CpuBackend.prefill(plan, qv, kvv).expect("prefill");
+    let head = out.outs.remove(0);
+    (head.o, head.lse)
+}
+
+#[test]
+fn backward_matches_dense_reference_across_mask_suite() {
+    for &(n, d) in &[(100usize, 80usize), (100, 128), (256, 80), (256, 128)] {
+        let mut rng = Rng::new(31 * n as u64 + d as u64);
+        let q = rand_vec(n * d, &mut rng);
+        let k = rand_vec(n * d, &mut rng);
+        let v = rand_vec(n * d, &mut rng);
+        let do_ = rand_vec(n * d, &mut rng);
+        for (kind, mask) in builders::benchmark_suite(n, 7) {
+            let plan = AttnProblem::new(n, d)
+                .mask(&mask)
+                .tile(64.min(n), 64.min(n))
+                .plan()
+                .unwrap_or_else(|e| panic!("{kind} n={n} d={d}: plan: {e}"));
+            let (o, lse) = forward(&plan, &q, &k, &v, n, d);
+            let (fg, _) = CpuBackend
+                .backward(&plan, &q, &k, &v, &o, &do_, &lse)
+                .unwrap_or_else(|e| panic!("{kind}: flash backward: {e}"));
+            let (dg, _) = DenseRefBackend
+                .backward(&plan, &q, &k, &v, &o, &do_, &lse)
+                .unwrap_or_else(|e| panic!("{kind}: dense backward: {e}"));
+            let label = format!("{kind} n={n} d={d}");
+            assert_close(&format!("{label}: dQ"), &fg.dq, &dg.dq, 1e-4, d);
+            assert_close(&format!("{label}: dK"), &fg.dk, &dg.dk, 1e-4, d);
+            assert_close(&format!("{label}: dV"), &fg.dv, &dg.dv, 1e-4, d);
+        }
+    }
+}
+
+#[test]
+fn parallel_backward_is_bitwise_identical_to_sequential() {
+    let (n, d) = (256usize, 64usize);
+    let mut rng = Rng::new(17);
+    let q = rand_vec(n * d, &mut rng);
+    let k = rand_vec(n * d, &mut rng);
+    let v = rand_vec(n * d, &mut rng);
+    let do_ = rand_vec(n * d, &mut rng);
+    let masks: Vec<(&str, FlashMask)> = vec![
+        ("causal", builders::causal(n)),
+        ("causal_document", builders::causal_document(n, &[n / 3, n / 5, n - n / 3 - n / 5])),
+        ("sliding_window", builders::sliding_window(n, n / 8)),
+    ];
+    for (name, mask) in &masks {
+        let seq = AttnProblem::new(n, d).mask(mask).tile(64, 64).threads(1).plan().expect("plan");
+        let (o, lse) = forward(&seq, &q, &k, &v, n, d);
+        let (reference, _) = CpuBackend.backward(&seq, &q, &k, &v, &o, &do_, &lse).expect("seq");
+        for threads in [1usize, 2, 3, 8] {
+            let plan = AttnProblem::new(n, d)
+                .mask(mask)
+                .tile(64, 64)
+                .threads(threads)
+                .plan()
+                .expect("plan");
+            let (g, _) =
+                CpuBackend.backward(&plan, &q, &k, &v, &o, &do_, &lse).expect("par backward");
+            // bitwise, not approximate: the column-stripe reduction
+            // folds in a fixed order regardless of thread count
+            assert_eq!(g.dq, reference.dq, "{name}: dQ differs at {threads} threads");
+            assert_eq!(g.dk, reference.dk, "{name}: dK differs at {threads} threads");
+            assert_eq!(g.dv, reference.dv, "{name}: dV differs at {threads} threads");
+        }
+    }
+}
+
+#[test]
+fn grouped_backward_matches_kv_replicated_mha() {
+    let (n, d) = (128usize, 64usize);
+    let q_heads = 8usize;
+    let mut rng = Rng::new(29);
+    let q = rand_vec(q_heads * n * d, &mut rng);
+    let do_ = rand_vec(q_heads * n * d, &mut rng);
+    let k_full = rand_vec(q_heads * n * d, &mut rng);
+    let v_full = rand_vec(q_heads * n * d, &mut rng);
+    let mask = builders::causal_document(n, &[n / 2, n / 4, n - n / 2 - n / 4]);
+
+    // MHA twin (group 1): the classification-work baseline
+    let mha_evals = {
+        let plan = AttnProblem::new(n, d)
+            .heads(q_heads, q_heads)
+            .mask(&mask)
+            .tile(64, 64)
+            .plan()
+            .expect("mha plan");
+        let qv = QViews::new(&q, q_heads, n, d).expect("q view");
+        let kvv = KvViews::new(&k_full, &v_full, q_heads, n, d).expect("k/v views");
+        let fwd = CpuBackend.prefill(&plan, qv, kvv).expect("prefill");
+        let (mut o, mut lse) = (Vec::new(), Vec::new());
+        for h in &fwd.outs {
+            o.extend_from_slice(&h.o);
+            lse.extend_from_slice(&h.lse);
+        }
+        let (_, ts) =
+            CpuBackend.backward_grouped(&plan, qv, kvv, &o, &do_, &lse).expect("mha grouped");
+        ts.mask_evals
+    };
+
+    for kv_heads in [4usize, 2, 1] {
+        let group = q_heads / kv_heads;
+        let k = &k_full[..kv_heads * n * d];
+        let v = &v_full[..kv_heads * n * d];
+        let plan = AttnProblem::new(n, d)
+            .heads(q_heads, kv_heads)
+            .mask(&mask)
+            .tile(64, 64)
+            .plan()
+            .expect("gqa plan");
+        let qv = QViews::new(&q, q_heads, n, d).expect("q view");
+        let kvv = KvViews::new(k, v, kv_heads, n, d).expect("k/v views");
+        let fwd = CpuBackend.prefill(&plan, qv, kvv).expect("prefill");
+        let (mut o, mut lse) = (Vec::new(), Vec::new());
+        for h in &fwd.outs {
+            o.extend_from_slice(&h.o);
+            lse.extend_from_slice(&h.lse);
+        }
+        let (gg, ts) =
+            CpuBackend.backward_grouped(&plan, qv, kvv, &o, &do_, &lse).expect("grouped backward");
+        assert_eq!(gg.dq.len(), q_heads);
+        assert_eq!(gg.dk.len(), kv_heads);
+        assert_eq!(gg.dv.len(), kv_heads);
+
+        // classification runs once per KV head: the work denominator
+        // shrinks exactly by the group factor
+        assert_eq!(
+            ts.mask_evals * group as u64,
+            mha_evals,
+            "group {group}: mask_evals must shrink by the group factor"
+        );
+
+        // per-query-head dQ is BITWISE the single-head backward against
+        // its KV head (same stripe order, same fold order)
+        let single_plan = AttnProblem::new(n, d).mask(&mask).tile(64, 64).plan().expect("plan");
+        let mut repl_dk = vec![vec![0.0f32; n * d]; kv_heads];
+        let mut repl_dv = vec![vec![0.0f32; n * d]; kv_heads];
+        for h in 0..q_heads {
+            let kh = plan.layout().kv_head_of(h);
+            let qh = &q[h * n * d..(h + 1) * n * d];
+            let doh = &do_[h * n * d..(h + 1) * n * d];
+            let kh_data = &k[kh * n * d..(kh + 1) * n * d];
+            let vh_data = &v[kh * n * d..(kh + 1) * n * d];
+            let oh = &o[h * n * d..(h + 1) * n * d];
+            let lseh = &lse[h * n..(h + 1) * n];
+            let (sg, _) = CpuBackend
+                .backward(&single_plan, qh, kh_data, vh_data, oh, doh, lseh)
+                .expect("single-head backward");
+            assert_eq!(gg.dq[h], sg.dq, "group {group}: head {h} dQ not bitwise single-head");
+            for (a, b) in repl_dk[kh].iter_mut().zip(&sg.dk) {
+                *a += *b;
+            }
+            for (a, b) in repl_dv[kh].iter_mut().zip(&sg.dv) {
+                *a += *b;
+            }
+        }
+        // grouped dK/dV accumulate across the query group in tile-inner
+        // order — equal to the replicated-MHA sum up to f32 reordering
+        for kh in 0..kv_heads {
+            let label = format!("group {group} kv head {kh}");
+            assert_close(&format!("{label}: dK"), &gg.dk[kh], &repl_dk[kh], 2e-4, d);
+            assert_close(&format!("{label}: dV"), &gg.dv[kh], &repl_dv[kh], 2e-4, d);
+        }
+    }
+}

@@ -7,8 +7,9 @@
 # the repo root — the blobs used to only go to stdout and were lost
 # between runs.  Each bench gets its own file: BENCH_kernel.json,
 # BENCH_decode.json (paged-KV decode incl. the shared-prefix caching
-# table), and BENCH_serve.json (Poisson arrivals, FIFO-vs-budget
-# head-to-head, shared-prompt prefix trace).
+# table), BENCH_serve.json (Poisson arrivals, FIFO-vs-budget
+# head-to-head, shared-prompt prefix trace), and BENCH_train.json
+# (backward-kernel anchor + flashmask-vs-dense training step ratio).
 #
 # Usage:
 #   scripts/bench.sh            # full run, writes BENCH_kernel.json,
@@ -23,6 +24,7 @@ cd "$(dirname "$0")/.."
 out="${FM_BENCH_OUT:-BENCH_kernel.json}"
 decode_out="${FM_BENCH_DECODE_OUT:-BENCH_decode.json}"
 serve_out="${FM_BENCH_SERVE_OUT:-BENCH_serve.json}"
+train_out="${FM_BENCH_TRAIN_OUT:-BENCH_train.json}"
 smoke_arg=""
 if [[ "${1:-}" == "--smoke" ]]; then
   smoke_arg="--smoke"
@@ -45,10 +47,18 @@ echo "== bench_serve =="
 # shellcheck disable=SC2086
 cargo bench --bench bench_serve -- $smoke_arg | tee "$tmp/serve.out"
 
+echo "== bench_train =="
+# end-to-end training-throughput: packed backward anchor (>= 1.5x the
+# loose-GEMM reference), bitwise parallel backward, grouped GQA
+# backward, and flashmask-vs-dense step-time ratio over SFT/DPO/RM
+# shellcheck disable=SC2086
+cargo bench --bench bench_train -- $smoke_arg | tee "$tmp/train.out"
+
 # everything after the marker line is the JSON blob
 awk 'f{print} /^== BENCH json ==$/{f=1}' "$tmp/kernel.out" > "$tmp/kernel.json"
 awk 'f{print} /^== BENCH json ==$/{f=1}' "$tmp/decode.out" > "$tmp/decode.json"
 awk 'f{print} /^== BENCH json ==$/{f=1}' "$tmp/serve.out" > "$tmp/serve.json"
+awk 'f{print} /^== BENCH json ==$/{f=1}' "$tmp/train.out" > "$tmp/train.json"
 
 python3 - "$tmp/serve.json" "$serve_out" <<'PY'
 import json, sys, time
@@ -56,6 +66,27 @@ serve = json.load(open(sys.argv[1]))
 serve["generated_unix"] = int(time.time())
 with open(sys.argv[2], "w") as f:
     json.dump(serve, f, indent=2)
+    f.write("\n")
+print(f"bench.sh: wrote {sys.argv[2]}")
+PY
+
+# training-throughput blob: surface the headline flashmask-vs-dense
+# step-time ratios and the backward-kernel speedup at the top level
+python3 - "$tmp/train.json" "$train_out" <<'PY'
+import json, sys, time
+train = json.load(open(sys.argv[1]))
+train["generated_unix"] = int(time.time())
+ratios = {
+    r["scenario"]: r.get("flashmask_vs_dense_ratio")
+    for r in train.get("training", {}).get("rows", [])
+}
+if ratios:
+    train["flashmask_vs_dense_ratio"] = ratios
+anchor = train.get("backward_anchor", {})
+if "speedup_vs_loose" in anchor:
+    train["backward_packed_vs_loose"] = anchor["speedup_vs_loose"]
+with open(sys.argv[2], "w") as f:
+    json.dump(train, f, indent=2)
     f.write("\n")
 print(f"bench.sh: wrote {sys.argv[2]}")
 PY

@@ -87,6 +87,14 @@ cargo test -q --test decode_oracle
 echo "== GQA differential oracle (grouped layouts vs KV-replicated MHA) =="
 cargo test -q --test gqa_oracle
 
+echo "== backward oracle suite (dense differential + bitwise parallel + grouped GQA) =="
+# packed backward vs the dense reference (< 1e-4, all 12 mask kinds at
+# n in {100,256} x d in {80,128}), column-parallel backward bitwise vs
+# sequential at threads {1,2,3,8}, and backward_grouped vs the
+# KV-replicated MHA sum with the classification denominator shrinking
+# by the group factor (ISSUE 9 acceptance)
+cargo test -q --test backward_oracle
+
 echo "== kernel bench smoke (tiles-visited + parallel_2d bitwise + plan-cache + telemetry-overhead asserts) =="
 # the bench asserts the interval schedule visits strictly fewer tiles
 # than tr*tc on every non-full mask, that row-block parallelism is
@@ -111,6 +119,14 @@ echo "== decode bench GQA smoke (group-2 layout vs MHA at equal outputs) =="
 # factor while outputs stay row-for-row identical; --speculate 1 skips
 # the speculative table the previous invocation already covered
 cargo bench --bench bench_decode -- --smoke --kv-heads 2 --speculate 1
+
+echo "== train bench smoke (packed backward vs loose reference + plan reuse + ratio table) =="
+# the bench asserts packed/loose backward agreement, bitwise parallel
+# backward at every tested thread count, the grouped mask-eval
+# denominator, StepPlanner plans_built == unique masks, and that the
+# train.backward_ms histogram is fed (ISSUE 9 acceptance; the >= 1.5x
+# and ratio > 1.0 asserts arm at full n >= 1024 runs)
+cargo bench --bench bench_train -- --smoke
 
 echo "== serve bench smoke (Poisson router vs FIFO baseline, ISSUE 7 acceptance) =="
 # the bench asserts every admitted request retires with a populated
