@@ -17,12 +17,12 @@
 //! * **grouped GQA backward** — `backward_grouped` across group sizes;
 //!   asserts the mask-classification work denominator shrinks exactly
 //!   with the KV-head count.
-//! * **training scenarios** — packed-document SFT, DPO pairs, RM
-//!   full-mask batches from `coordinator::Batcher`, planned through the
-//!   cross-step `StepPlanner` (plans_built == unique masks, asserted),
-//!   each step = per-sample prefill + backward.  Reports the
-//!   flashmask-vs-dense step-time ratio (> 1.0 asserted for SFT and DPO
-//!   at n ≥ 1024).
+//! * **training scenarios** — packed-document SFT and LoRA, DPO pairs,
+//!   RM full-mask batches from `coordinator::Batcher`, planned through
+//!   the cross-step `StepPlanner` (plans_built == unique masks,
+//!   asserted), each step = per-sample prefill + backward.  Reports the
+//!   flashmask-vs-dense step-time ratio (> 1.0 asserted for SFT, LoRA
+//!   and DPO at n ≥ 1024).
 //!
 //! A machine-readable `== BENCH json ==` blob is printed last;
 //! `scripts/bench.sh` persists it into `BENCH_train.json`.
@@ -367,8 +367,12 @@ struct SampleActs {
     d: usize,
 }
 
-/// Packed-doc SFT / DPO pairs / RM full-mask: flashmask vs dense-mask
-/// per-step attention time over real `Batcher` layouts.
+/// Packed-doc SFT and LoRA / DPO pairs / RM full-mask: flashmask vs
+/// dense-mask per-step attention time over real `Batcher` layouts.
+/// LoRA shares SFT's causal-document mask (adapter training changes
+/// the weight update, not the attention pattern), so its row also
+/// carries the ratio > 1.0 assert at full n — the scenario pins the
+/// docgen Task::Lora path through the same planner/backward stack.
 fn training_scenarios(n: usize, threads: usize, steps: usize, opts: BenchOpts) -> Json {
     let d = 64;
     let batch = 2;
@@ -377,7 +381,9 @@ fn training_scenarios(n: usize, threads: usize, steps: usize, opts: BenchOpts) -
     let mut rows = Vec::new();
     let mut t = Table::new(vec!["scenario", "rho", "flash ms", "dense ms", "ratio", "tok/s", "plans"])
         .title(format!("training step: batch={batch}, steps={steps}, n={n}, d={d}, {threads} threads"));
-    for (name, task) in [("sft", Task::Sft), ("dpo", Task::Dpo), ("rm", Task::Rm)] {
+    for (name, task) in
+        [("sft", Task::Sft), ("lora", Task::Lora), ("dpo", Task::Dpo), ("rm", Task::Rm)]
+    {
         let mut batcher = Batcher::new(n, batch, task, 42);
         let batches: Vec<Batch> = (0..steps).map(|_| batcher.next_batch()).collect();
         let acts: Vec<SampleActs> = (0..batch)
@@ -425,7 +431,7 @@ fn training_scenarios(n: usize, threads: usize, steps: usize, opts: BenchOpts) -
         });
 
         let ratio = st_dense.median_ms / st_flash.median_ms;
-        if n >= 1024 && (name == "sft" || name == "dpo") {
+        if n >= 1024 && (name == "sft" || name == "lora" || name == "dpo") {
             assert!(ratio > 1.0, "flashmask-vs-dense ratio {ratio:.2} ≤ 1.0 on {name} at n={n}");
         }
         let tokens = (steps * batch * n) as f64;

@@ -1,0 +1,468 @@
+//! The pluggable lint-pass engine (DESIGN.md §Static analysis).
+//!
+//! [`run`] walks the requested roots, lexes every `.rs` file once
+//! ([`super::lexer`]), hands each [`SourceFile`] to every registered
+//! [`Pass`] whose [`Pass::applies`] accepts the path, then filters the
+//! collected [`Diagnostic`]s through the suppression pragmas found in
+//! the file's comments.  The surviving diagnostics (plus a count of
+//! suppressed ones) form the [`Report`] the `flashmask lint`
+//! subcommand prints.
+//!
+//! ## Suppression pragmas
+//!
+//! ```text
+//! // lint: allow(<pass>[:<rule>][, …]) — <reason>
+//! // lint: allow-file(<pass>[:<rule>][, …]) — <reason>
+//! ```
+//!
+//! `allow` applies to its own line and the line directly below (so a
+//! pragma can sit on the offending line or on a comment line above
+//! it); `allow-file` applies to the whole file.  The reason is
+//! **required** — a pragma without one is itself an error diagnostic
+//! (`pragma:missing-reason`), so every suppression carries its
+//! justification in the source.  `-`/`--` are accepted in place of the
+//! em-dash.
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use super::lexer::{self, SourceFile};
+use crate::util::json::Json;
+
+/// Diagnostic severity. Both levels fail `flashmask lint`; the split
+/// lets downstream tooling (and future passes) triage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl std::fmt::Display for Severity {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        })
+    }
+}
+
+/// One finding, addressed `file:line` (1-indexed line).
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// Emitting pass (`hot-path-panic`, `deprecated-shim`, …).
+    pub pass: &'static str,
+    /// Sub-rule within the pass (`unwrap`, `index`, `undeclared`, …).
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub severity: Severity,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn render(&self) -> String {
+        format!(
+            "{}:{}: {} [{}:{}] {}",
+            self.file, self.line, self.severity, self.pass, self.rule, self.message
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("pass", Json::Str(self.pass.to_string())),
+            ("rule", Json::Str(self.rule.to_string())),
+            ("file", Json::Str(self.file.clone())),
+            ("line", Json::Num(self.line as f64)),
+            ("severity", Json::Str(self.severity.to_string())),
+            ("message", Json::Str(self.message.clone())),
+        ])
+    }
+}
+
+/// Shared per-run state passed to every pass.
+pub struct Context {
+    /// Telemetry names declared in the linted tree's
+    /// `telemetry/names.rs` (falling back to the built-in
+    /// [`crate::telemetry::names::ALL`] when the file is not part of
+    /// the lint set — e.g. when linting a fixture directory).
+    pub declared_names: BTreeSet<String>,
+}
+
+/// A lint pass: a named check over one lexed file.
+pub trait Pass {
+    /// Stable pass name — used in diagnostics and pragma specs.
+    fn name(&self) -> &'static str;
+    /// One-line description for `--json` / docs.
+    fn description(&self) -> &'static str;
+    /// Whether this pass runs on `path` (suffix-matched, `/`-separated).
+    fn applies(&self, path: &str) -> bool;
+    fn run(&self, file: &SourceFile, ctx: &Context, out: &mut Vec<Diagnostic>);
+}
+
+/// Parsed suppression pragma.
+#[derive(Clone, Debug)]
+struct Pragma {
+    line: usize,
+    file_scope: bool,
+    /// `(pass, rule)`; `rule` empty = all rules of the pass.
+    specs: Vec<(String, String)>,
+    has_reason: bool,
+}
+
+/// Extract every `lint:` pragma from a file's comment lines.
+fn collect_pragmas(file: &SourceFile) -> Vec<Pragma> {
+    let mut out = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate() {
+        let c = &line.comment;
+        let Some(pos) = c.find("lint:") else { continue };
+        let rest = c[pos + "lint:".len()..].trim_start();
+        let (file_scope, rest) = if let Some(r) = rest.strip_prefix("allow-file") {
+            (true, r)
+        } else if let Some(r) = rest.strip_prefix("allow") {
+            (false, r)
+        } else {
+            continue;
+        };
+        let rest = rest.trim_start();
+        let Some(rest) = rest.strip_prefix('(') else { continue };
+        let Some(close) = rest.find(')') else { continue };
+        let specs = rest[..close]
+            .split(',')
+            .map(|s| {
+                let s = s.trim();
+                match s.split_once(':') {
+                    Some((p, r)) => (p.trim().to_string(), r.trim().to_string()),
+                    None => (s.to_string(), String::new()),
+                }
+            })
+            .filter(|(p, _)| !p.is_empty())
+            .collect();
+        // reason: whatever follows the closing paren, minus dash/em-dash
+        // separators; must be non-empty
+        let reason = rest[close + 1..]
+            .trim_start()
+            .trim_start_matches(['—', '–', '-', ':'])
+            .trim();
+        out.push(Pragma {
+            line: idx + 1,
+            file_scope,
+            specs,
+            has_reason: !reason.is_empty(),
+        });
+    }
+    out
+}
+
+fn pragma_matches(p: &Pragma, d: &Diagnostic) -> bool {
+    let in_range = p.file_scope || p.line == d.line || p.line + 1 == d.line;
+    in_range
+        && p.specs
+            .iter()
+            .any(|(pass, rule)| pass == d.pass && (rule.is_empty() || rule == d.rule))
+}
+
+/// The result of a lint run.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Pass names that ran, in registration order.
+    pub passes: Vec<&'static str>,
+    /// Files lexed.
+    pub files: usize,
+    /// Non-suppressed findings, ordered by file then line.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Findings silenced by a reasoned pragma.
+    pub suppressed: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Stable JSON shape (schema pinned by `json_schema_is_stable`):
+    /// `{tool, schema_version, files, passes, diagnostics, suppressed,
+    /// clean}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("tool", Json::Str("flashmask-lint".to_string())),
+            ("schema_version", Json::Num(1.0)),
+            ("files", Json::Num(self.files as f64)),
+            (
+                "passes",
+                Json::Arr(self.passes.iter().map(|p| Json::Str(p.to_string())).collect()),
+            ),
+            (
+                "diagnostics",
+                Json::Arr(self.diagnostics.iter().map(|d| d.to_json()).collect()),
+            ),
+            ("suppressed", Json::Num(self.suppressed as f64)),
+            ("clean", Json::Bool(self.clean())),
+        ])
+    }
+}
+
+/// Recursively collect `.rs` files under `root` (or `root` itself),
+/// sorted for deterministic output.  `target/` build dirs are skipped.
+pub fn collect_rs_files(root: &Path, out: &mut Vec<PathBuf>) -> Result<(), String> {
+    if root.is_file() {
+        if root.extension().is_some_and(|e| e == "rs") {
+            out.push(root.to_path_buf());
+        }
+        return Ok(());
+    }
+    let rd = std::fs::read_dir(root)
+        .map_err(|e| format!("lint: cannot read directory {}: {e}", root.display()))?;
+    let mut entries: Vec<PathBuf> = rd
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.file_name().map(|n| n != "target").unwrap_or(true))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs_files(&p, out)?;
+        } else if p.extension().is_some_and(|e| e == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Run `passes` over every `.rs` file under `roots`.  Roots that do
+/// not exist are an error; pass an explicit file list to lint a
+/// subset.
+pub fn run(roots: &[PathBuf], passes: &[Box<dyn Pass>]) -> Result<Report, String> {
+    let mut files = Vec::new();
+    for r in roots {
+        collect_rs_files(r, &mut files)?;
+    }
+    files.dedup();
+
+    // lex everything once
+    let mut lexed = Vec::with_capacity(files.len());
+    for f in &files {
+        let src = std::fs::read_to_string(f)
+            .map_err(|e| format!("lint: cannot read {}: {e}", f.display()))?;
+        let path = f.to_string_lossy().replace('\\', "/");
+        lexed.push(lexer::lex(&path, &src));
+    }
+
+    // the declared-name registry: parse the linted tree's names.rs if
+    // present (so the lint checks the tree as it is on disk), else the
+    // built-in registry
+    let declared_names: BTreeSet<String> = match lexed
+        .iter()
+        .find(|f| f.path.ends_with("telemetry/names.rs"))
+    {
+        Some(f) => f
+            .strings
+            .iter()
+            .filter(|s| !f.lines.get(s.line - 1).is_some_and(|l| l.in_test))
+            .map(|s| s.text.clone())
+            .collect(),
+        None => crate::telemetry::names::ALL.iter().map(|s| s.to_string()).collect(),
+    };
+    let ctx = Context { declared_names };
+
+    let mut report = Report {
+        passes: passes.iter().map(|p| p.name()).collect(),
+        files: lexed.len(),
+        ..Report::default()
+    };
+    for file in &lexed {
+        let mut raw = Vec::new();
+        for pass in passes {
+            if pass.applies(&file.path) {
+                pass.run(file, &ctx, &mut raw);
+            }
+        }
+        let pragmas = collect_pragmas(file);
+        for d in raw {
+            if pragmas.iter().any(|p| pragma_matches(p, &d)) {
+                report.suppressed += 1;
+            } else {
+                report.diagnostics.push(d);
+            }
+        }
+        // a pragma without a reason is itself a finding
+        for p in &pragmas {
+            if !p.has_reason {
+                report.diagnostics.push(Diagnostic {
+                    pass: "pragma",
+                    rule: "missing-reason",
+                    file: file.path.clone(),
+                    line: p.line,
+                    severity: Severity::Error,
+                    message: "suppression pragma requires a reason: \
+                              `// lint: allow(pass[:rule]) — <why>`"
+                        .to_string(),
+                });
+            }
+        }
+    }
+    report
+        .diagnostics
+        .sort_by(|a, b| a.file.cmp(&b.file).then(a.line.cmp(&b.line)));
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct EveryLine;
+    impl Pass for EveryLine {
+        fn name(&self) -> &'static str {
+            "every-line"
+        }
+        fn description(&self) -> &'static str {
+            "test pass flagging every non-empty code line"
+        }
+        fn applies(&self, _path: &str) -> bool {
+            true
+        }
+        fn run(&self, file: &SourceFile, _ctx: &Context, out: &mut Vec<Diagnostic>) {
+            for (i, l) in file.lines.iter().enumerate() {
+                if !l.code.trim().is_empty() {
+                    out.push(Diagnostic {
+                        pass: "every-line",
+                        rule: "hit",
+                        file: file.path.clone(),
+                        line: i + 1,
+                        severity: Severity::Error,
+                        message: "line".into(),
+                    });
+                }
+            }
+        }
+    }
+
+    fn run_src(src: &str) -> (Vec<Diagnostic>, usize) {
+        let file = lexer::lex("fixture.rs", src);
+        let ctx = Context { declared_names: BTreeSet::new() };
+        let mut raw = Vec::new();
+        EveryLine.run(&file, &ctx, &mut raw);
+        let pragmas = collect_pragmas(&file);
+        let mut kept = Vec::new();
+        let mut suppressed = 0;
+        for d in raw {
+            if pragmas.iter().any(|p| pragma_matches(p, &d)) {
+                suppressed += 1;
+            } else {
+                kept.push(d);
+            }
+        }
+        (kept, suppressed)
+    }
+
+    #[test]
+    fn same_line_pragma_suppresses() {
+        let (kept, sup) = run_src("let a = 1; // lint: allow(every-line) — fixture\nlet b = 2;\n");
+        assert_eq!(sup, 1);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].line, 2);
+    }
+
+    #[test]
+    fn preceding_line_pragma_suppresses_next_line() {
+        let (kept, sup) =
+            run_src("// lint: allow(every-line) — fixture\nlet a = 1;\nlet b = 2;\n");
+        assert_eq!(sup, 1);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].line, 3);
+    }
+
+    #[test]
+    fn file_scope_pragma_suppresses_everywhere() {
+        let (kept, sup) =
+            run_src("// lint: allow-file(every-line) — fixture\nlet a = 1;\nlet b = 2;\n");
+        assert_eq!(sup, 2);
+        assert!(kept.is_empty());
+    }
+
+    #[test]
+    fn rule_scoped_pragma_only_matches_its_rule() {
+        let (kept, sup) = run_src("let a = 1; // lint: allow(every-line:other) — fixture\n");
+        assert_eq!(sup, 0, "rule `other` must not silence rule `hit`");
+        assert_eq!(kept.len(), 1);
+        let (kept, sup) = run_src("let a = 1; // lint: allow(every-line:hit) — fixture\n");
+        assert_eq!(sup, 1);
+        assert!(kept.is_empty());
+    }
+
+    #[test]
+    fn pragma_without_reason_is_flagged() {
+        let file = lexer::lex("fixture.rs", "let a = 1; // lint: allow(every-line)\n");
+        let pragmas = collect_pragmas(&file);
+        assert_eq!(pragmas.len(), 1);
+        assert!(!pragmas[0].has_reason);
+        // plain-dash separators are accepted as the reason marker
+        let file = lexer::lex("fixture.rs", "let a = 1; // lint: allow(every-line) -- fixture\n");
+        assert!(collect_pragmas(&file)[0].has_reason);
+    }
+
+    #[test]
+    fn multiple_specs_in_one_pragma() {
+        let (kept, sup) = run_src("let a = 1; // lint: allow(other, every-line:hit) — fixture\n");
+        assert_eq!(sup, 1);
+        assert!(kept.is_empty());
+    }
+
+    #[test]
+    fn json_schema_is_stable() {
+        let report = Report {
+            passes: vec!["every-line"],
+            files: 1,
+            diagnostics: vec![Diagnostic {
+                pass: "every-line",
+                rule: "hit",
+                file: "x.rs".into(),
+                line: 3,
+                severity: Severity::Warning,
+                message: "m".into(),
+            }],
+            suppressed: 2,
+        };
+        let j = report.to_json();
+        let fields = j.as_obj().expect("report must serialize to an object");
+        let keys: Vec<&str> = fields.keys().map(|k| k.as_str()).collect();
+        assert_eq!(
+            keys,
+            ["clean", "diagnostics", "files", "passes", "schema_version", "suppressed", "tool"],
+            "schema keys are pinned — bump schema_version to change them"
+        );
+        let diag = j.get("diagnostics").and_then(|d| d.idx(0)).expect("one diagnostic");
+        let dkeys: Vec<&str> =
+            diag.as_obj().expect("diagnostic object").keys().map(|k| k.as_str()).collect();
+        assert_eq!(dkeys, ["file", "line", "message", "pass", "rule", "severity"]);
+        let text = j.to_string_pretty();
+        for needle in [
+            "\"tool\": \"flashmask-lint\"",
+            "\"schema_version\": 1",
+            "\"files\": 1",
+            "\"suppressed\": 2",
+            "\"clean\": false",
+            "\"pass\": \"every-line\"",
+            "\"rule\": \"hit\"",
+            "\"file\": \"x.rs\"",
+            "\"line\": 3",
+            "\"severity\": \"warning\"",
+        ] {
+            assert!(text.contains(needle), "JSON missing {needle}: {text}");
+        }
+        // round-trips through the repo's JSON parser
+        crate::util::json::parse(&text).expect("lint JSON must reparse");
+    }
+
+    #[test]
+    fn render_is_file_line_addressed() {
+        let d = Diagnostic {
+            pass: "p",
+            rule: "r",
+            file: "a/b.rs".into(),
+            line: 7,
+            severity: Severity::Error,
+            message: "msg".into(),
+        };
+        assert_eq!(d.render(), "a/b.rs:7: error [p:r] msg");
+    }
+}

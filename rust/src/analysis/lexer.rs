@@ -1,0 +1,572 @@
+//! A small Rust source lexer for the lint engine (DESIGN.md §Static
+//! analysis).
+//!
+//! The old `verify.sh` gates were `awk`/`grep` pipelines that broke on
+//! a `#[cfg(test)]` inside a string literal, a second test module, or
+//! a multi-line comment.  This lexer walks the source once and
+//! classifies every character as **code**, **comment** or **string**,
+//! handling:
+//!
+//! * line comments and *nested* block comments (`/* /* */ */`);
+//! * normal / byte strings with escapes, and raw / raw-byte strings
+//!   with arbitrary hash fences (`r#"…"#`, `br##"…"##`);
+//! * char literals vs lifetimes (`'a'` vs `<'a>`);
+//! * attributes (`#[…]` / `#![…]`, nested brackets);
+//! * `#[cfg(test)]` region tracking by brace depth, so nested test
+//!   modules and test items anywhere in the file — not just a trailing
+//!   `mod tests` — are recognized.
+//!
+//! The output is line-oriented: for every source line the lexer keeps
+//! the raw text, a same-length `code` projection (comment characters
+//! and string *contents* blanked with spaces, delimiters kept, so
+//! column positions line up), the concatenated comment text, and an
+//! `in_test` flag.  String literal bodies are collected separately
+//! with their line/column so passes can inspect them without regex
+//! games.
+
+/// One string literal occurrence (the body, without delimiters).
+#[derive(Clone, Debug)]
+pub struct StrLit {
+    /// 1-indexed line of the opening delimiter.
+    pub line: usize,
+    /// 0-indexed column (in characters) of the first delimiter char —
+    /// the `"` for normal strings, the `r`/`b` prefix for raw/byte.
+    pub col: usize,
+    /// Literal body, escapes left as written.
+    pub text: String,
+}
+
+/// Per-line lexing result.
+#[derive(Clone, Debug, Default)]
+pub struct LineInfo {
+    /// The original line (no trailing newline).
+    pub raw: String,
+    /// Same length as `raw`: comment chars and string bodies replaced
+    /// by spaces, everything else (incl. string delimiters) kept.
+    pub code: String,
+    /// Comment text on this line (both `//` and `/* */` parts).
+    pub comment: String,
+    /// True when any part of the line is inside (or is the attribute
+    /// opening) a `#[cfg(test)]` region.
+    pub in_test: bool,
+}
+
+/// A lexed source file.
+#[derive(Clone, Debug)]
+pub struct SourceFile {
+    /// Path as given to [`lex`] (repo-relative in normal runs).
+    pub path: String,
+    pub lines: Vec<LineInfo>,
+    /// Every string literal body, in source order.
+    pub strings: Vec<StrLit>,
+}
+
+impl SourceFile {
+    /// The string literal whose opening delimiter sits at
+    /// `(line, col)` (1-indexed line, 0-indexed column).
+    pub fn string_at(&self, line: usize, col: usize) -> Option<&StrLit> {
+        self.strings.iter().find(|s| s.line == line && s.col == col)
+    }
+}
+
+/// Lex `src`; `path` is carried through to diagnostics.
+pub fn lex(path: &str, src: &str) -> SourceFile {
+    Lexer::new(src).run(path)
+}
+
+struct Lexer {
+    chars: Vec<char>,
+    i: usize,
+    // per-line builders
+    raw: String,
+    code: String,
+    comment: String,
+    line_in_test: bool,
+    lines: Vec<LineInfo>,
+    strings: Vec<StrLit>,
+    // structure tracking
+    depth: i64,
+    /// Brace depths at which a `#[cfg(test)]` region opened; the
+    /// region closes when `}` returns to that depth (a stack, so
+    /// nested test modules just extend the enclosing region).
+    test_regions: Vec<i64>,
+    /// A `#[cfg(test)]` attribute was seen and its item has not yet
+    /// opened a brace or ended with `;`.
+    pending_test: bool,
+}
+
+impl Lexer {
+    fn new(src: &str) -> Lexer {
+        Lexer {
+            chars: src.chars().collect(),
+            i: 0,
+            raw: String::new(),
+            code: String::new(),
+            comment: String::new(),
+            line_in_test: false,
+            lines: Vec::new(),
+            strings: Vec::new(),
+            depth: 0,
+            test_regions: Vec::new(),
+            pending_test: false,
+        }
+    }
+
+    fn in_test(&self) -> bool {
+        self.pending_test || !self.test_regions.is_empty()
+    }
+
+    fn peek(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.i + ahead).copied()
+    }
+
+    /// Record a char as code (kept in the `code` projection).
+    fn put_code(&mut self, c: char) {
+        self.raw.push(c);
+        self.code.push(c);
+    }
+
+    /// Record a char as non-code: blanked in `code`, optionally
+    /// appended to the line's comment text.
+    fn put_blank(&mut self, c: char, is_comment: bool) {
+        self.raw.push(c);
+        self.code.push(' ');
+        if is_comment {
+            self.comment.push(c);
+        }
+    }
+
+    fn newline(&mut self) {
+        self.line_in_test |= self.in_test();
+        self.lines.push(LineInfo {
+            raw: std::mem::take(&mut self.raw),
+            code: std::mem::take(&mut self.code),
+            comment: std::mem::take(&mut self.comment),
+            in_test: self.line_in_test,
+        });
+        self.line_in_test = false;
+    }
+
+    fn cur_line(&self) -> usize {
+        self.lines.len() + 1
+    }
+
+    fn cur_col(&self) -> usize {
+        self.raw.chars().count()
+    }
+
+    fn run(mut self, path: &str) -> SourceFile {
+        while let Some(c) = self.peek(0) {
+            self.line_in_test |= self.in_test();
+            match c {
+                '\n' => {
+                    self.i += 1;
+                    self.newline();
+                }
+                '/' if self.peek(1) == Some('/') => self.line_comment(),
+                '/' if self.peek(1) == Some('*') => self.block_comment(),
+                '"' => self.string(0, false),
+                'b' if self.peek(1) == Some('"') => self.string(1, false),
+                'r' | 'b' if self.raw_string_fence(c).is_some() => {
+                    let (prefix, hashes) = self.raw_string_fence(c).unwrap_or((1, 0));
+                    self.string(prefix + hashes, true);
+                }
+                '\'' => self.char_or_lifetime(),
+                '#' => self.attribute_or_hash(),
+                _ => {
+                    self.code_char(c);
+                    self.i += 1;
+                }
+            }
+        }
+        if !self.raw.is_empty() || !self.code.is_empty() {
+            self.newline();
+        }
+        SourceFile { path: path.to_string(), lines: self.lines, strings: self.strings }
+    }
+
+    /// If a raw(-byte) string starts at `i`, return
+    /// `(prefix_len, hash_count)` where `prefix_len` counts the
+    /// `r`/`br` chars before the hashes.
+    fn raw_string_fence(&self, c: char) -> Option<(usize, usize)> {
+        let (prefix, mut j) = if c == 'r' {
+            (1, self.i + 1)
+        } else if c == 'b' && self.peek(1) == Some('r') {
+            (2, self.i + 2)
+        } else {
+            return None;
+        };
+        // an identifier char before r"…" means this is e.g. `for"`…
+        // impossible in valid Rust, but identifiers like `br` alone
+        // must not trigger: require `"` after the hashes
+        if self.i > 0 {
+            if let Some(&p) = self.chars.get(self.i - 1) {
+                if p.is_alphanumeric() || p == '_' {
+                    return None;
+                }
+            }
+        }
+        let mut hashes = 0;
+        while self.chars.get(j) == Some(&'#') {
+            hashes += 1;
+            j += 1;
+        }
+        if self.chars.get(j) == Some(&'"') {
+            Some((prefix, hashes))
+        } else {
+            None
+        }
+    }
+
+    fn line_comment(&mut self) {
+        while let Some(c) = self.peek(0) {
+            if c == '\n' {
+                break;
+            }
+            self.put_blank(c, true);
+            self.i += 1;
+        }
+    }
+
+    fn block_comment(&mut self) {
+        let mut depth = 0usize;
+        while let Some(c) = self.peek(0) {
+            if c == '/' && self.peek(1) == Some('*') {
+                depth += 1;
+                self.put_blank('/', true);
+                self.put_blank('*', true);
+                self.i += 2;
+            } else if c == '*' && self.peek(1) == Some('/') {
+                depth -= 1;
+                self.put_blank('*', true);
+                self.put_blank('/', true);
+                self.i += 2;
+                if depth == 0 {
+                    return;
+                }
+            } else if c == '\n' {
+                self.i += 1;
+                self.newline();
+            } else {
+                self.put_blank(c, true);
+                self.i += 1;
+            }
+        }
+    }
+
+    /// Consume a string literal.  `fence` is the number of prefix
+    /// chars before the opening quote (`r`/`b` plus hashes); `raw`
+    /// selects raw-string (no escapes, closes on `"` + hashes)
+    /// semantics.
+    fn string(&mut self, fence: usize, raw: bool) {
+        let lit_line = self.cur_line();
+        let lit_col = self.cur_col();
+        let hashes = if raw { fence.saturating_sub(1) } else { 0 };
+        // emit the fence + opening quote as code (delimiters kept)
+        for _ in 0..fence {
+            let c = self.peek(0).unwrap_or('"');
+            self.put_code(c);
+            self.i += 1;
+        }
+        if self.peek(0) == Some('"') {
+            self.put_code('"');
+            self.i += 1;
+        }
+        let mut body = String::new();
+        while let Some(c) = self.peek(0) {
+            if !raw && c == '\\' {
+                // escape: consume both chars as string body
+                body.push(c);
+                self.put_blank(c, false);
+                self.i += 1;
+                if let Some(e) = self.peek(0) {
+                    if e == '\n' {
+                        self.i += 1;
+                        self.newline();
+                    } else {
+                        body.push(e);
+                        self.put_blank(e, false);
+                        self.i += 1;
+                    }
+                }
+                continue;
+            }
+            if c == '"' {
+                // raw strings need `"` + `#`*hashes to close
+                let closes = if raw {
+                    (1..=hashes).all(|k| self.peek(k) == Some('#'))
+                } else {
+                    true
+                };
+                if closes {
+                    self.put_code('"');
+                    self.i += 1;
+                    for _ in 0..hashes {
+                        self.put_code('#');
+                        self.i += 1;
+                    }
+                    break;
+                }
+            }
+            if c == '\n' {
+                self.i += 1;
+                self.newline();
+                body.push('\n');
+            } else {
+                body.push(c);
+                self.put_blank(c, false);
+                self.i += 1;
+            }
+        }
+        self.strings.push(StrLit { line: lit_line, col: lit_col, text: body });
+    }
+
+    fn char_or_lifetime(&mut self) {
+        // '\x' escape or 'c' single char => char literal; else lifetime
+        let is_char = match self.peek(1) {
+            Some('\\') => true,
+            Some(c) if c != '\'' => self.peek(2) == Some('\''),
+            _ => false,
+        };
+        if !is_char {
+            self.put_code('\'');
+            self.i += 1;
+            return;
+        }
+        self.put_code('\'');
+        self.i += 1;
+        while let Some(c) = self.peek(0) {
+            if c == '\\' {
+                self.put_blank(c, false);
+                self.i += 1;
+                if let Some(e) = self.peek(0) {
+                    self.put_blank(e, false);
+                    self.i += 1;
+                }
+                continue;
+            }
+            if c == '\'' {
+                self.put_code('\'');
+                self.i += 1;
+                break;
+            }
+            self.put_blank(c, false);
+            self.i += 1;
+        }
+    }
+
+    /// `#[…]` / `#![…]` attribute: captured to spot `#[cfg(test)]`.
+    /// A bare `#` (raw-string fences are consumed elsewhere) falls
+    /// through as a plain code char.
+    fn attribute_or_hash(&mut self) {
+        let bang = self.peek(1) == Some('!');
+        let open = if bang { 2 } else { 1 };
+        if self.peek(open) != Some('[') {
+            self.put_code('#');
+            self.i += 1;
+            return;
+        }
+        self.put_code('#');
+        self.i += 1;
+        if bang {
+            self.put_code('!');
+            self.i += 1;
+        }
+        self.put_code('[');
+        self.i += 1;
+        let mut text = String::new();
+        let mut brackets = 1usize;
+        while let Some(c) = self.peek(0) {
+            match c {
+                '[' => brackets += 1,
+                ']' => {
+                    brackets -= 1;
+                    if brackets == 0 {
+                        self.put_code(']');
+                        self.i += 1;
+                        break;
+                    }
+                }
+                '\n' => {
+                    self.i += 1;
+                    self.newline();
+                    continue;
+                }
+                _ => {}
+            }
+            text.push(c);
+            self.put_code(c);
+            self.i += 1;
+        }
+        let normalized: String = text.chars().filter(|c| !c.is_whitespace()).collect();
+        if !bang && normalized == "cfg(test)" {
+            self.pending_test = true;
+            self.line_in_test = true;
+        }
+    }
+
+    fn code_char(&mut self, c: char) {
+        match c {
+            '{' => {
+                if self.pending_test {
+                    self.test_regions.push(self.depth);
+                    self.pending_test = false;
+                }
+                self.depth += 1;
+            }
+            '}' => {
+                self.depth -= 1;
+                if self.test_regions.last() == Some(&self.depth) {
+                    self.test_regions.pop();
+                    // the closing `}` line itself still counts as test
+                    self.line_in_test = true;
+                }
+            }
+            ';' => {
+                // `#[cfg(test)] use …;` — a braceless test item ends
+                // at the semicolon (only when no brace opened first)
+                if self.pending_test {
+                    self.pending_test = false;
+                    self.line_in_test = true;
+                }
+            }
+            _ => {}
+        }
+        self.put_code(c);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> Vec<String> {
+        lex("t.rs", src).lines.iter().map(|l| l.code.clone()).collect()
+    }
+
+    #[test]
+    fn comments_are_blanked() {
+        let f = lex("t.rs", "let x = 1; // unwrap() here\n/* panic!() */ let y = 2;\n");
+        assert!(!f.lines[0].code.contains("unwrap"));
+        assert!(f.lines[0].comment.contains("unwrap()"));
+        assert!(!f.lines[1].code.contains("panic"));
+        assert!(f.lines[1].code.contains("let y = 2;"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let src = "a /* one /* two */ still comment */ b\nc /* open\nstill\n*/ d\n";
+        let code = code_of(src);
+        assert!(code[0].contains('a') && code[0].contains('b'));
+        assert!(!code[0].contains("still comment"));
+        assert!(!code[1].contains("open"));
+        assert!(!code[2].contains("still"));
+        assert!(code[3].contains('d'));
+    }
+
+    #[test]
+    fn strings_are_blanked_but_collected() {
+        let f = lex("t.rs", "let s = \"println!(\\\"x\\\")\"; call();\n");
+        assert!(!f.lines[0].code.contains("println"));
+        assert!(f.lines[0].code.contains("call();"));
+        assert_eq!(f.strings.len(), 1);
+        assert_eq!(f.strings[0].text, "println!(\\\"x\\\")");
+        assert_eq!(f.strings[0].line, 1);
+    }
+
+    #[test]
+    fn raw_strings_with_fences() {
+        let f = lex("t.rs", "let s = r#\"has \"quotes\" and #[cfg(test)]\"#; next();\n");
+        assert!(!f.lines[0].code.contains("cfg(test)"));
+        assert!(f.lines[0].code.contains("next();"));
+        assert_eq!(f.strings[0].text, "has \"quotes\" and #[cfg(test)]");
+        assert!(!f.lines[0].in_test, "cfg(test) inside a string must not open a region");
+    }
+
+    #[test]
+    fn byte_and_raw_byte_strings() {
+        let f = lex("t.rs", "let a = b\"bytes\"; let b2 = br##\"raw # bytes\"##; go();\n");
+        assert_eq!(f.strings.len(), 2);
+        assert_eq!(f.strings[0].text, "bytes");
+        assert_eq!(f.strings[1].text, "raw # bytes");
+        assert!(f.lines[0].code.contains("go();"));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let f = lex("t.rs", "fn f<'a>(x: &'a str) { let c = '\"'; let d = '\\''; g(); }\n");
+        // the quote inside the char literal must not open a string
+        assert!(f.strings.is_empty());
+        assert!(f.lines[0].code.contains("g();"));
+    }
+
+    #[test]
+    fn cfg_test_region_tracks_braces() {
+        let src = "\
+fn live() { x.unwrap(); }
+#[cfg(test)]
+mod tests {
+    fn t() { y.unwrap(); }
+}
+fn live_again() { z.unwrap(); }
+";
+        let f = lex("t.rs", src);
+        assert!(!f.lines[0].in_test);
+        assert!(f.lines[1].in_test, "the attribute line itself");
+        assert!(f.lines[2].in_test);
+        assert!(f.lines[3].in_test);
+        assert!(f.lines[4].in_test, "closing brace line");
+        assert!(!f.lines[5].in_test, "a second live region after the test mod");
+    }
+
+    #[test]
+    fn nested_modules_inside_test_region() {
+        let src = "\
+#[cfg(test)]
+mod tests {
+    mod inner {
+        fn t() {}
+    }
+}
+fn live() {}
+";
+        let f = lex("t.rs", src);
+        for l in 0..6 {
+            assert!(f.lines[l].in_test, "line {} should be in the test region", l + 1);
+        }
+        assert!(!f.lines[6].in_test);
+    }
+
+    #[test]
+    fn braceless_test_item_ends_at_semicolon() {
+        let src = "#[cfg(test)]\nuse crate::thing;\nfn live() {}\n";
+        let f = lex("t.rs", src);
+        assert!(f.lines[0].in_test);
+        assert!(f.lines[1].in_test);
+        assert!(!f.lines[2].in_test);
+    }
+
+    #[test]
+    fn cfg_test_in_comment_or_string_is_inert() {
+        let src = "// #[cfg(test)]\nlet s = \"#[cfg(test)]\";\nfn live() {}\n";
+        let f = lex("t.rs", src);
+        assert!(f.lines.iter().all(|l| !l.in_test));
+    }
+
+    #[test]
+    fn code_projection_preserves_columns() {
+        let src = "reg.add(\"decode.steps\", 1);\n";
+        let f = lex("t.rs", src);
+        assert_eq!(f.lines[0].code.chars().count(), f.lines[0].raw.chars().count());
+        let col = f.lines[0].raw.find('"').unwrap_or_default();
+        assert!(f.string_at(1, col).is_some());
+        assert_eq!(f.string_at(1, col).map(|s| s.text.as_str()), Some("decode.steps"));
+    }
+
+    #[test]
+    fn attribute_capture_handles_inner_and_nested() {
+        let src = "#![deny(unsafe_op_in_unsafe_fn)]\n#[cfg_attr(test, allow(dead_code))]\nfn live() {}\n";
+        let f = lex("t.rs", src);
+        assert!(f.lines.iter().all(|l| !l.in_test), "near-miss attributes must not open regions");
+    }
+}

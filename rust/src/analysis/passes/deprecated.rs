@@ -1,0 +1,158 @@
+//! `deprecated-shim` — the legacy kernel entry points are callable
+//! from tests only.
+//!
+//! PR 5 unified the ~10 parallel kernel entry points behind
+//! `attention::api`; the old free functions survive as deprecated
+//! shims doubling as migration oracles.  Non-test code must go through
+//! the API.  This supersedes the `verify.sh` awk gate, which stripped
+//! everything from the *first* `#[cfg(test)]` line — wrong for a
+//! second test module, a `cfg(test)` inside a string, or a call above
+//! a mid-file test item.
+//!
+//! Exemptions mirror the old gate: `fn name(` definition lines,
+//! `.name(` method calls (the `Backend` trait methods share the free
+//! functions' names — a leading dot marks the new API), and
+//! `attention/api.rs` itself (the shims' implementation target).
+
+use crate::analysis::engine::{Context, Diagnostic, Pass, Severity};
+use crate::analysis::lexer::SourceFile;
+use crate::analysis::passes::find_token;
+
+/// The deprecated free functions (see `attention::flash`,
+/// `attention::dense`, `decode::step`, `decode::spec`).
+const DEPRECATED: &[&str] = &[
+    "flashmask_forward",
+    "flashmask_forward_grouped",
+    "flashmask_forward_grouped_parallel",
+    "flashmask_backward",
+    "dense_forward",
+    "dense_forward_grouped",
+    "dense_forward_grouped_parallel",
+    "decode_step",
+    "decode_step_group",
+    "verify_rows",
+    "verify_rows_group",
+    "forward_single_head",
+];
+
+pub struct DeprecatedShim;
+
+impl Pass for DeprecatedShim {
+    fn name(&self) -> &'static str {
+        "deprecated-shim"
+    }
+
+    fn description(&self) -> &'static str {
+        "deprecated kernel entry points are called from tests only (use attention::api)"
+    }
+
+    fn applies(&self, path: &str) -> bool {
+        // integration tests (rust/tests/) are whole-file test code with
+        // no #[cfg(test)] marker — they are the shims' migration
+        // oracles, exempt like in-module test regions
+        !path.ends_with("attention/api.rs") && !path.contains("/tests/")
+    }
+
+    fn run(&self, file: &SourceFile, _ctx: &Context, out: &mut Vec<Diagnostic>) {
+        for (idx, line) in file.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            let code = &line.code;
+            for name in DEPRECATED {
+                let tok = format!("{name}(");
+                for pos in find_token(code, &tok) {
+                    let before = code[..pos].trim_end();
+                    // `fn name(` / `pub fn name(` — the definition
+                    if before.ends_with("fn") {
+                        continue;
+                    }
+                    // `.name(` — a Backend trait method, the new API
+                    if before.ends_with('.') {
+                        continue;
+                    }
+                    out.push(Diagnostic {
+                        pass: "deprecated-shim",
+                        rule: "call",
+                        file: file.path.clone(),
+                        line: idx + 1,
+                        severity: Severity::Error,
+                        message: format!(
+                            "non-test call to deprecated `{name}` — migrate to \
+                             attention::api (DESIGN.md §Public API)"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+    use std::collections::BTreeSet;
+
+    fn run_on(src: &str) -> Vec<Diagnostic> {
+        let file = lex("rust/src/somewhere.rs", src);
+        let ctx = Context { declared_names: BTreeSet::new() };
+        let mut out = Vec::new();
+        DeprecatedShim.run(&file, &ctx, &mut out);
+        out
+    }
+
+    #[test]
+    fn tripping_fixture_flags_live_calls() {
+        let diags = run_on(
+            "fn caller() {\n\
+             \x20   let o = flashmask_forward(&q, &k, &v, n, d, &mask, 64, 64, true);\n\
+             \x20   let r = flash::decode_step_group(&q, 2, &cache);\n\
+             }\n",
+        );
+        assert_eq!(diags.len(), 2, "{diags:?}");
+        assert!(diags.iter().any(|d| d.message.contains("flashmask_forward")));
+        assert!(diags.iter().any(|d| d.message.contains("decode_step_group")));
+    }
+
+    #[test]
+    fn near_miss_fixture_stays_clean() {
+        let diags = run_on(
+            "//! Shims over [`flashmask_forward`] live here; dense_forward(q) in docs.\n\
+             pub fn flashmask_forward(q: &[f32]) {}\n\
+             fn new_api(b: &dyn Backend) {\n\
+             \x20   let s = \"decode_step(q) inside a string\";\n\
+             \x20   b.decode_step(pack, stats, scratch);\n\
+             \x20   b . verify_rows(pack);\n\
+             }\n\
+             #[cfg(test)]\n\
+             mod tests {\n\
+             \x20   fn t() { let _ = verify_rows_group(&q, 2); }\n\
+             }\n",
+        );
+        assert!(diags.is_empty(), "near-miss fixture tripped: {diags:?}");
+    }
+
+    #[test]
+    fn second_test_module_is_still_exempt() {
+        // the old awk gate only stripped from the FIRST #[cfg(test)];
+        // a live call *between* two test modules must still trip
+        let diags = run_on(
+            "#[cfg(test)]\n\
+             mod early_tests { fn t() { decode_step(&q); } }\n\
+             fn live() { decode_step(&q); }\n\
+             #[cfg(test)]\n\
+             mod late_tests { fn t() { decode_step(&q); } }\n",
+        );
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].line, 3);
+    }
+
+    #[test]
+    fn api_rs_and_integration_tests_are_exempt() {
+        assert!(!DeprecatedShim.applies("rust/src/attention/api.rs"));
+        assert!(!DeprecatedShim.applies("rust/tests/api_misuse.rs"));
+        assert!(DeprecatedShim.applies("rust/src/attention/flash.rs"));
+        assert!(DeprecatedShim.applies("rust/benches/bench_decode.rs"));
+    }
+}

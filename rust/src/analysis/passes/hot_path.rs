@@ -1,0 +1,157 @@
+//! `hot-path-panic` — panic-freedom for the kernel hot paths.
+//!
+//! FlashAttention-style kernels fail as silent numeric drift, not
+//! crashes, so the repo leans on `debug_assert!` + typed `AttnError`
+//! returns; a release-mode panic site in the tile/step/verify loops
+//! means a malformed-but-validated input can abort a live serve batch.
+//! This pass bans `unwrap`/`expect`/`panic!`-family macros/`assert!`
+//! and (as the `index` sub-rule) `[]` indexing in the designated
+//! kernel modules.  Remaining sites are either converted in-tree or
+//! carry a reasoned pragma, e.g. the deprecated shims' `.expect(`
+//! calls on an already-validated argument pack.
+//!
+//! The `index` sub-rule is lexical — it cannot see types, so it flags
+//! every `expr[` site.  The kernel files suppress it file-wide with
+//! `// lint: allow-file(hot-path-panic:index) — …` pragmas whose
+//! reasons document the schedule invariants that bound the indices;
+//! the rule stays on so *new* kernel modules must either use `get` or
+//! write the same justification down.
+
+use crate::analysis::engine::{Context, Diagnostic, Pass, Severity};
+use crate::analysis::lexer::SourceFile;
+use crate::analysis::passes::{find_token, is_ident};
+
+/// Kernel modules under the panic-freedom contract.
+const HOT_PATHS: &[&str] = &[
+    "attention/gemm.rs",
+    "attention/flash.rs",
+    "decode/step.rs",
+    "decode/spec.rs",
+];
+
+pub struct HotPathPanic;
+
+impl Pass for HotPathPanic {
+    fn name(&self) -> &'static str {
+        "hot-path-panic"
+    }
+
+    fn description(&self) -> &'static str {
+        "no unwrap/expect/panic!/assert!/[]-indexing in kernel hot-path modules"
+    }
+
+    fn applies(&self, path: &str) -> bool {
+        HOT_PATHS.iter().any(|p| path.ends_with(p))
+    }
+
+    fn run(&self, file: &SourceFile, _ctx: &Context, out: &mut Vec<Diagnostic>) {
+        for (idx, line) in file.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            let code = &line.code;
+            let mut push = |rule: &'static str, what: &str| {
+                out.push(Diagnostic {
+                    pass: "hot-path-panic",
+                    rule,
+                    file: file.path.clone(),
+                    line: idx + 1,
+                    severity: Severity::Error,
+                    message: format!(
+                        "{what} in a kernel hot path — use debug_assert!, a typed \
+                         AttnError return, or a reasoned pragma"
+                    ),
+                });
+            };
+            if code.contains(".unwrap(") {
+                push("unwrap", "`.unwrap()`");
+            }
+            if code.contains(".expect(") {
+                push("expect", "`.expect()`");
+            }
+            for tok in ["panic!(", "unreachable!(", "todo!(", "unimplemented!("] {
+                if !find_token(code, tok).is_empty() {
+                    push("panic", "a panicking macro");
+                }
+            }
+            for tok in ["assert!(", "assert_eq!(", "assert_ne!("] {
+                if !find_token(code, tok).is_empty() {
+                    push("assert", "release-mode `assert!`");
+                }
+            }
+            // `expr[` — identifier / `)` / `]` immediately followed by
+            // `[` is indexing (panics on out-of-bounds); `#[`, `vec![`,
+            // types and slice patterns are preceded by non-value chars
+            let mut prev = ' ';
+            for c in code.chars() {
+                if c == '[' && (is_ident(prev) || prev == ')' || prev == ']') {
+                    push("index", "`[]` indexing (no `get`)");
+                    break;
+                }
+                prev = c;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+    use std::collections::BTreeSet;
+
+    fn run_on(src: &str) -> Vec<Diagnostic> {
+        let file = lex("rust/src/attention/gemm.rs", src);
+        let ctx = Context { declared_names: BTreeSet::new() };
+        let mut out = Vec::new();
+        HotPathPanic.run(&file, &ctx, &mut out);
+        out
+    }
+
+    #[test]
+    fn tripping_fixture_flags_each_rule() {
+        let diags = run_on(
+            "fn hot(v: &[f32], i: usize) -> f32 {\n\
+             \x20   let a = v.first().unwrap();\n\
+             \x20   let b: &f32 = v.get(1).expect(\"b\");\n\
+             \x20   assert!(i < v.len());\n\
+             \x20   assert_eq!(*a, *b);\n\
+             \x20   if i > 9 { panic!(\"bad\"); }\n\
+             \x20   v[i]\n\
+             }\n",
+        );
+        let rules: BTreeSet<&str> = diags.iter().map(|d| d.rule).collect();
+        for r in ["unwrap", "expect", "assert", "panic", "index"] {
+            assert!(rules.contains(r), "rule {r} must trip: {diags:?}");
+        }
+    }
+
+    #[test]
+    fn near_miss_fixture_stays_clean() {
+        // the banned names in a comment, in a string, below
+        // #[cfg(test)], and as their debug_* / *_or cousins
+        let diags = run_on(
+            "// calling unwrap() or panic!() here would be bad\n\
+             fn hot(v: &[f32]) -> f32 {\n\
+             \x20   let msg = \"never .unwrap() nor assert!(x) nor v[i]\";\n\
+             \x20   debug_assert!(!v.is_empty(), \"{}\", msg);\n\
+             \x20   debug_assert_eq!(msg.len() > 0, true);\n\
+             \x20   v.first().copied().unwrap_or(0.0)\n\
+             }\n\
+             #[cfg(test)]\n\
+             mod tests {\n\
+             \x20   #[test]\n\
+             \x20   fn t() { let v = [1.0f32]; assert_eq!(v[0].to_bits(), 1.0f32.to_bits()); }\n\
+             }\n",
+        );
+        assert!(diags.is_empty(), "near-miss fixture tripped: {diags:?}");
+    }
+
+    #[test]
+    fn applies_only_to_kernel_modules() {
+        assert!(HotPathPanic.applies("rust/src/attention/gemm.rs"));
+        assert!(HotPathPanic.applies("rust/src/decode/spec.rs"));
+        assert!(!HotPathPanic.applies("rust/src/server/router.rs"));
+        assert!(!HotPathPanic.applies("rust/src/coordinator/checkpoint.rs"));
+    }
+}

@@ -1,0 +1,64 @@
+//! The shipped lint passes (DESIGN.md §Static analysis).
+//!
+//! | pass | guards |
+//! |---|---|
+//! | [`hot_path`] `hot-path-panic` | no release-mode panic sites in the kernel hot paths |
+//! | [`deprecated`] `deprecated-shim` | legacy kernel entry points called from tests only |
+//! | [`print`] `direct-print` | library code logs through `telemetry::log` |
+//! | [`telemetry_names`] `telemetry-names` | metric/span/log-target literals are declared in `telemetry::names` |
+//! | [`unsafe_hygiene`] `unsafe-hygiene` | every `unsafe` carries a `// SAFETY:` contract and sits on the allowlist |
+//!
+//! Each pass works on the [`lexer`](super::lexer) projection, so names
+//! in comments, strings or `#[cfg(test)]` regions never trip it — the
+//! failure modes of the old `awk`/`grep` gates these passes replace.
+
+pub mod deprecated;
+pub mod hot_path;
+pub mod print;
+pub mod telemetry_names;
+pub mod unsafe_hygiene;
+
+use super::engine::Pass;
+
+/// Every shipped pass, in reporting order.
+pub fn default_passes() -> Vec<Box<dyn Pass>> {
+    vec![
+        Box::new(hot_path::HotPathPanic),
+        Box::new(deprecated::DeprecatedShim),
+        Box::new(print::DirectPrint),
+        Box::new(telemetry_names::TelemetryNames),
+        Box::new(unsafe_hygiene::UnsafeHygiene),
+    ]
+}
+
+pub(crate) fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Byte offsets of `tok` in `code` whose preceding char is not an
+/// identifier char (so `debug_assert!(` never matches `assert!(`).
+pub(crate) fn find_token(code: &str, tok: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(rel) = code[from..].find(tok) {
+        let pos = from + rel;
+        let bounded = code[..pos].chars().next_back().map(|c| !is_ident(c)).unwrap_or(true);
+        if bounded {
+            out.push(pos);
+        }
+        from = pos + tok.len().max(1);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn find_token_respects_left_boundary() {
+        assert_eq!(find_token("assert!(x); debug_assert!(y);", "assert!(").len(), 1);
+        assert_eq!(find_token("sparsity_histogram(n)", "histogram(").len(), 0);
+        assert_eq!(find_token("reg.histogram(name)", "histogram(").len(), 1);
+    }
+}

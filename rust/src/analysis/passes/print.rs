@@ -1,0 +1,111 @@
+//! `direct-print` — library code logs through `telemetry::log`.
+//!
+//! Ad-hoc `println!`/`eprintln!` bypass the leveled logger and its
+//! test capture.  Exempt (their stdout/stderr *is* the product): the
+//! CLI binary, the report/table printers, and `telemetry::log` itself
+//! (the logger's stderr sink).  Supersedes the `verify.sh` print grep,
+//! which could not tell a call from a mention in a comment or string.
+
+use crate::analysis::engine::{Context, Diagnostic, Pass, Severity};
+use crate::analysis::lexer::SourceFile;
+use crate::analysis::passes::find_token;
+
+/// Files whose direct prints are the product, not stray logging.
+const EXEMPT: &[&str] = &[
+    "rust/src/main.rs",
+    "rust/src/reports.rs",
+    "rust/src/util/table.rs",
+    "rust/src/telemetry/log.rs",
+];
+
+pub struct DirectPrint;
+
+impl Pass for DirectPrint {
+    fn name(&self) -> &'static str {
+        "direct-print"
+    }
+
+    fn description(&self) -> &'static str {
+        "library code must log via telemetry::log, not println!/eprintln!"
+    }
+
+    fn applies(&self, path: &str) -> bool {
+        // library sources only — benches/examples/tests print tables
+        // by design, exactly like the old gate's `find rust/src` scope
+        (path.contains("rust/src/") || path.starts_with("src/"))
+            && !EXEMPT.iter().any(|e| path.ends_with(e.trim_start_matches("rust/")))
+    }
+
+    fn run(&self, file: &SourceFile, _ctx: &Context, out: &mut Vec<Diagnostic>) {
+        for (idx, line) in file.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            for tok in ["println!", "eprintln!", "print!", "eprint!"] {
+                if !find_token(&line.code, tok).is_empty() {
+                    out.push(Diagnostic {
+                        pass: "direct-print",
+                        rule: "print",
+                        file: file.path.clone(),
+                        line: idx + 1,
+                        severity: Severity::Error,
+                        message: format!(
+                            "`{tok}` from library code — route through telemetry::log \
+                             (DESIGN.md §Telemetry)"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+    use std::collections::BTreeSet;
+
+    fn run_on(src: &str) -> Vec<Diagnostic> {
+        let file = lex("rust/src/server/engine.rs", src);
+        let ctx = Context { declared_names: BTreeSet::new() };
+        let mut out = Vec::new();
+        DirectPrint.run(&file, &ctx, &mut out);
+        out
+    }
+
+    #[test]
+    fn tripping_fixture_flags_prints() {
+        let diags =
+            run_on("fn f() {\n    println!(\"x\");\n    eprintln!(\"y = {}\", 2);\n}\n");
+        assert_eq!(diags.len(), 2, "{diags:?}");
+        assert_eq!(diags[0].line, 2);
+        assert_eq!(diags[1].line, 3);
+    }
+
+    #[test]
+    fn near_miss_fixture_stays_clean() {
+        let diags = run_on(
+            "// println! would bypass the logger\n\
+             fn f() {\n\
+             \x20   let doc = \"use println!(\\\"x\\\") in examples\";\n\
+             \x20   crate::telemetry::log::info(\"serve\", doc);\n\
+             }\n\
+             #[cfg(test)]\n\
+             mod tests {\n\
+             \x20   fn t() { println!(\"test output is fine\"); }\n\
+             }\n",
+        );
+        assert!(diags.is_empty(), "near-miss fixture tripped: {diags:?}");
+    }
+
+    #[test]
+    fn exempt_files_do_not_apply() {
+        assert!(!DirectPrint.applies("rust/src/main.rs"));
+        assert!(!DirectPrint.applies("rust/src/reports.rs"));
+        assert!(!DirectPrint.applies("rust/src/util/table.rs"));
+        assert!(!DirectPrint.applies("rust/src/telemetry/log.rs"));
+        assert!(DirectPrint.applies("rust/src/telemetry/metrics.rs"));
+        assert!(!DirectPrint.applies("rust/benches/bench_train.rs"));
+    }
+}

@@ -1,0 +1,269 @@
+//! `telemetry-names` — metric/span/log-target literals must be
+//! declared in [`crate::telemetry::names`].
+//!
+//! A typo'd literal (`"decode.page_total"`) silently forks a metric
+//! series; this pass kills that statically.  Checked call shapes:
+//!
+//! * `counter("…")` / `gauge("…")` / `histogram("…")` /
+//!   `observe_ms("…")` / `span("…")` — the literal must be a declared
+//!   name and follow the dotted `layer.noun[.verb]` scheme;
+//! * `add("…", …)` — only when the literal **contains a dot**: that is
+//!   a `Registry::add` metric name.  Dotless `add` literals are
+//!   `SpanGuard::add` attribute keys, scoped to their span and
+//!   deliberately unregistered;
+//! * `log::info(/warn(/error(/debug("…", …)` — the target literal
+//!   must be a declared single-word target.
+//!
+//! Call sites that already use a `names::` const produce no literal
+//! and pass vacuously — the migration plus this pass pin the registry
+//! closed.  The declared set is parsed from the linted tree's
+//! `telemetry/names.rs` (falling back to the built-in registry), so
+//! adding a name and its call site in one commit lints clean.
+
+use crate::analysis::engine::{Context, Diagnostic, Pass, Severity};
+use crate::analysis::lexer::SourceFile;
+use crate::analysis::passes::find_token;
+
+/// Call tokens whose first argument is a metric/span name.
+const NAME_CALLS: &[&str] = &["counter(", "gauge(", "histogram(", "observe_ms(", "span("];
+
+/// `log::`-qualified level helpers whose first argument is a target.
+const LOG_CALLS: &[&str] = &["info(", "warn(", "error(", "debug("];
+
+pub struct TelemetryNames;
+
+impl Pass for TelemetryNames {
+    fn name(&self) -> &'static str {
+        "telemetry-names"
+    }
+
+    fn description(&self) -> &'static str {
+        "metric/span/log-target literals are declared in telemetry::names"
+    }
+
+    fn applies(&self, path: &str) -> bool {
+        // library sources only, minus the registry itself (it is the
+        // declaration site) and the metrics/trace plumbing that takes
+        // caller-supplied names by reference
+        (path.contains("rust/src/") || path.starts_with("src/"))
+            && !path.ends_with("telemetry/names.rs")
+    }
+
+    fn run(&self, file: &SourceFile, ctx: &Context, out: &mut Vec<Diagnostic>) {
+        for (idx, line) in file.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            let code = &line.code;
+            for tok in NAME_CALLS {
+                for pos in find_token(code, tok) {
+                    if let Some(lit) = literal_after(file, idx, char_col(code, pos + tok.len())) {
+                        check_metric(file, idx, &lit, ctx, out);
+                    }
+                }
+            }
+            for tok in LOG_CALLS {
+                for pos in find_token(code, tok) {
+                    if !code[..pos].ends_with("log::") {
+                        continue;
+                    }
+                    if let Some(lit) = literal_after(file, idx, char_col(code, pos + tok.len())) {
+                        check_target(file, idx, &lit, ctx, out);
+                    }
+                }
+            }
+            // Registry::add("layer.metric", δ): a literal first
+            // argument with a dot is a metric name (SpanGuard::add
+            // attribute keys are dotless)
+            for pos in find_token(code, "add(") {
+                if let Some(lit) = literal_after(file, idx, char_col(code, pos + "add(".len())) {
+                    if lit.contains('.') {
+                        check_metric(file, idx, &lit, ctx, out);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Byte offset → char column (the lexer records char columns).
+fn char_col(code: &str, byte_pos: usize) -> usize {
+    code[..byte_pos].chars().count()
+}
+
+/// The string literal opening at or after `(line, col)`, skipping
+/// whitespace — across line breaks, so `log::warn(\n "router", …)`
+/// still resolves.  `None` when the first argument is not a literal
+/// (a `names::` const — nothing to check).
+fn literal_after(file: &SourceFile, line: usize, col: usize) -> Option<String> {
+    let mut li = line;
+    let mut ci = col;
+    // look at most a few lines ahead: arguments broken further than
+    // that are not a formatting style this codebase uses
+    for _ in 0..4 {
+        let l = file.lines.get(li)?;
+        for (c_idx, c) in l.code.chars().enumerate().skip(ci) {
+            if c.is_whitespace() {
+                continue;
+            }
+            if c == '"' {
+                return file.string_at(li + 1, c_idx).map(|s| s.text.clone());
+            }
+            return None;
+        }
+        li += 1;
+        ci = 0;
+    }
+    None
+}
+
+fn scheme_ok_metric(n: &str) -> bool {
+    n.contains('.')
+        && n.split('.').all(|seg| {
+            !seg.is_empty()
+                && seg.chars().next().map(|c| c.is_ascii_lowercase()).unwrap_or(false)
+                && seg.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+        })
+}
+
+fn check_metric(
+    file: &SourceFile,
+    idx: usize,
+    lit: &str,
+    ctx: &Context,
+    out: &mut Vec<Diagnostic>,
+) {
+    if !ctx.declared_names.contains(lit) {
+        out.push(Diagnostic {
+            pass: "telemetry-names",
+            rule: "undeclared",
+            file: file.path.clone(),
+            line: idx + 1,
+            severity: Severity::Error,
+            message: format!(
+                "telemetry name \"{lit}\" is not declared in telemetry::names — \
+                 declare it there and use the const"
+            ),
+        });
+    }
+    if !scheme_ok_metric(lit) {
+        out.push(Diagnostic {
+            pass: "telemetry-names",
+            rule: "scheme",
+            file: file.path.clone(),
+            line: idx + 1,
+            severity: Severity::Warning,
+            message: format!(
+                "telemetry name \"{lit}\" breaks the dotted lowercase \
+                 `layer.noun[.verb]` scheme"
+            ),
+        });
+    }
+}
+
+fn check_target(
+    file: &SourceFile,
+    idx: usize,
+    lit: &str,
+    ctx: &Context,
+    out: &mut Vec<Diagnostic>,
+) {
+    if !ctx.declared_names.contains(lit) {
+        out.push(Diagnostic {
+            pass: "telemetry-names",
+            rule: "undeclared",
+            file: file.path.clone(),
+            line: idx + 1,
+            severity: Severity::Error,
+            message: format!(
+                "log target \"{lit}\" is not declared in telemetry::names — \
+                 declare a TARGET_* const and use it"
+            ),
+        });
+    }
+    if !lit.chars().all(|c| c.is_ascii_lowercase()) || lit.is_empty() {
+        out.push(Diagnostic {
+            pass: "telemetry-names",
+            rule: "scheme",
+            file: file.path.clone(),
+            line: idx + 1,
+            severity: Severity::Warning,
+            message: format!("log target \"{lit}\" must be a single lowercase word"),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+    use std::collections::BTreeSet;
+
+    fn ctx() -> Context {
+        Context {
+            declared_names: ["decode.steps", "serve.ttft_ms", "router"]
+                .into_iter()
+                .map(String::from)
+                .collect::<BTreeSet<_>>(),
+        }
+    }
+
+    fn run_on(src: &str) -> Vec<Diagnostic> {
+        let file = lex("rust/src/server/engine.rs", src);
+        let mut out = Vec::new();
+        TelemetryNames.run(&file, &ctx(), &mut out);
+        out
+    }
+
+    #[test]
+    fn tripping_fixture_flags_undeclared_and_misscheme() {
+        let diags = run_on(
+            "fn f(reg: &Registry) {\n\
+             \x20   reg.add(\"decode.stepz\", 1);\n\
+             \x20   reg.observe_ms(\"serve.ttft_ms\", 1.0);\n\
+             \x20   reg.histogram(\"Serve.TTFT\");\n\
+             \x20   let _sp = trace::span(\"decode.step2\");\n\
+             \x20   log::warn(\"rooter\", \"m\".to_string());\n\
+             }\n",
+        );
+        // decode.stepz: undeclared; Serve.TTFT: undeclared + scheme;
+        // decode.step2: undeclared; rooter: undeclared
+        let undeclared = diags.iter().filter(|d| d.rule == "undeclared").count();
+        let scheme = diags.iter().filter(|d| d.rule == "scheme").count();
+        assert_eq!(undeclared, 4, "{diags:?}");
+        assert_eq!(scheme, 1, "{diags:?}");
+        assert!(!diags.iter().any(|d| d.line == 3), "declared serve.ttft_ms must pass");
+    }
+
+    #[test]
+    fn near_miss_fixture_stays_clean() {
+        let diags = run_on(
+            "// counter(\"not.a.call\") in a comment\n\
+             fn f(reg: &Registry, sp: &SpanGuard) {\n\
+             \x20   let doc = \"histogram(\\\"fake.name\\\") inside a string\";\n\
+             \x20   reg.add(names::DECODE_STEPS, 1);\n\
+             \x20   sp.add(\"tokens\", 7);\n\
+             \x20   let h = docgen::sparsity_histogram(doc.len());\n\
+             }\n\
+             #[cfg(test)]\n\
+             mod tests {\n\
+             \x20   fn t(reg: &Registry) { reg.add(\"x.y\", 1); }\n\
+             }\n",
+        );
+        assert!(diags.is_empty(), "near-miss fixture tripped: {diags:?}");
+    }
+
+    #[test]
+    fn literal_on_the_next_line_is_still_checked() {
+        let diags = run_on("fn f() {\n    log::warn(\n        \"router\",\n        m,\n    );\n    log::info(\n        \"nope\",\n        m,\n    );\n}\n");
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert!(diags[0].message.contains("nope"));
+    }
+
+    #[test]
+    fn names_rs_is_the_declaration_site_and_exempt() {
+        assert!(!TelemetryNames.applies("rust/src/telemetry/names.rs"));
+        assert!(TelemetryNames.applies("rust/src/telemetry/metrics.rs"));
+        assert!(!TelemetryNames.applies("rust/benches/bench_train.rs"));
+    }
+}

@@ -1,0 +1,213 @@
+//! `unsafe-hygiene` — every `unsafe` carries a written contract and
+//! sits on the crate allowlist.
+//!
+//! The crate is std-only scalar code; it needs `unsafe` in exactly one
+//! place (the checkpoint writer's byte-level f32 serialization, see
+//! `coordinator/checkpoint.rs`).  Two rules:
+//!
+//! * `missing-safety` — an `unsafe` keyword without a `// SAFETY:`
+//!   comment on the same line or in the comment block just above (at
+//!   most [`SAFETY_CODE_GAP`] code lines away; comment lines don't
+//!   count, so a long contract stays adjacent).  The contract must say
+//!   *why* the invariants hold, next to the code that relies on them.
+//! * `not-allowlisted` — `unsafe` in any file other than
+//!   `coordinator/checkpoint.rs`.  New unsafe code must extend the
+//!   allowlist here, which puts the decision in review where it
+//!   belongs instead of letting it slip in silently.
+//!
+//! `#![deny(unsafe_op_in_unsafe_fn)]` and other identifiers that merely
+//! *contain* `unsafe` never match: the keyword is detected with word
+//! boundaries on both sides.
+
+use crate::analysis::engine::{Context, Diagnostic, Pass, Severity};
+use crate::analysis::lexer::SourceFile;
+use crate::analysis::passes::{find_token, is_ident};
+
+/// Files allowed to contain `unsafe` at all.
+const ALLOWLIST: &[&str] = &["coordinator/checkpoint.rs"];
+
+/// How many *code* lines may sit between an `unsafe` site and its
+/// `// SAFETY:` contract.  Comment-only lines are traversed freely, so
+/// a multi-line contract stays adjacent however long it runs.
+const SAFETY_CODE_GAP: usize = 3;
+
+pub struct UnsafeHygiene;
+
+impl Pass for UnsafeHygiene {
+    fn name(&self) -> &'static str {
+        "unsafe-hygiene"
+    }
+
+    fn description(&self) -> &'static str {
+        "every `unsafe` needs an adjacent // SAFETY: contract and an allowlist entry"
+    }
+
+    fn applies(&self, _path: &str) -> bool {
+        true
+    }
+
+    fn run(&self, file: &SourceFile, _ctx: &Context, out: &mut Vec<Diagnostic>) {
+        let allowlisted = ALLOWLIST.iter().any(|p| file.path.ends_with(p));
+        for (idx, line) in file.lines.iter().enumerate() {
+            if line.in_test {
+                continue;
+            }
+            let code = &line.code;
+            let hit = find_token(code, "unsafe").into_iter().any(|pos| {
+                // right boundary: `unsafe fn` / `unsafe {` yes,
+                // `unsafe_op_in_unsafe_fn` no
+                code[pos + "unsafe".len()..]
+                    .chars()
+                    .next()
+                    .map(|c| !is_ident(c))
+                    .unwrap_or(true)
+            });
+            if !hit {
+                continue;
+            }
+            let mut documented = line.comment.contains("SAFETY:");
+            let mut budget = SAFETY_CODE_GAP;
+            let mut j = idx;
+            while !documented && j > 0 {
+                j -= 1;
+                let above = &file.lines[j];
+                if above.comment.contains("SAFETY:") {
+                    documented = true;
+                    break;
+                }
+                // comment-only lines extend the contract block for
+                // free; code or blank lines burn the gap budget
+                let comment_only =
+                    !above.comment.trim().is_empty() && above.code.trim().is_empty();
+                if !comment_only {
+                    if budget == 0 {
+                        break;
+                    }
+                    budget -= 1;
+                }
+            }
+            if !documented {
+                out.push(Diagnostic {
+                    pass: "unsafe-hygiene",
+                    rule: "missing-safety",
+                    file: file.path.clone(),
+                    line: idx + 1,
+                    severity: Severity::Error,
+                    message: "`unsafe` without an adjacent `// SAFETY:` contract — \
+                              state why the invariants hold"
+                        .to_string(),
+                });
+            }
+            if !allowlisted {
+                out.push(Diagnostic {
+                    pass: "unsafe-hygiene",
+                    rule: "not-allowlisted",
+                    file: file.path.clone(),
+                    line: idx + 1,
+                    severity: Severity::Error,
+                    message: "`unsafe` outside the crate allowlist \
+                              (coordinator/checkpoint.rs) — extend the allowlist in \
+                              analysis::passes::unsafe_hygiene if this is deliberate"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+    use std::collections::BTreeSet;
+
+    fn run_on(path: &str, src: &str) -> Vec<Diagnostic> {
+        let file = lex(path, src);
+        let ctx = Context { declared_names: BTreeSet::new() };
+        let mut out = Vec::new();
+        UnsafeHygiene.run(&file, &ctx, &mut out);
+        out
+    }
+
+    #[test]
+    fn tripping_fixture_flags_undocumented_and_off_allowlist() {
+        let diags = run_on(
+            "rust/src/attention/gemm.rs",
+            "fn f(v: &[f32]) -> f32 {\n\
+             \x20   unsafe { *v.get_unchecked(0) }\n\
+             }\n",
+        );
+        let rules: BTreeSet<&str> = diags.iter().map(|d| d.rule).collect();
+        assert!(rules.contains("missing-safety"), "{diags:?}");
+        assert!(rules.contains("not-allowlisted"), "{diags:?}");
+        assert!(diags.iter().all(|d| d.line == 2));
+    }
+
+    #[test]
+    fn near_miss_fixture_stays_clean() {
+        // `unsafe` in a comment, in a string, inside a larger
+        // identifier (the deny attribute), and below #[cfg(test)]
+        let diags = run_on(
+            "rust/src/coordinator/checkpoint.rs",
+            "#![deny(unsafe_op_in_unsafe_fn)]\n\
+             // unsafe would be needed for get_unchecked\n\
+             fn f() {\n\
+             \x20   let doc = \"unsafe { } in a string\";\n\
+             \x20   let _ = doc;\n\
+             }\n\
+             #[cfg(test)]\n\
+             mod tests {\n\
+             \x20   fn t() { let x = [0u8; 4]; let _ = unsafe { std::mem::transmute::<_, f32>(x) }; }\n\
+             }\n",
+        );
+        assert!(diags.is_empty(), "near-miss fixture tripped: {diags:?}");
+    }
+
+    #[test]
+    fn documented_allowlisted_unsafe_is_clean() {
+        let diags = run_on(
+            "rust/src/coordinator/checkpoint.rs",
+            "fn f(bytes: &[u8]) -> f32 {\n\
+             \x20   // SAFETY: the caller guarantees `bytes` holds at least four\n\
+             \x20   // bytes of a little-endian f32 (checked by the header parser).\n\
+             \x20   unsafe { read_f32(bytes) }\n\
+             }\n",
+        );
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn long_contract_block_plus_binding_line_still_counts() {
+        // the checkpoint.rs shape: a many-line SAFETY comment, then a
+        // `let` binding line, then the `unsafe` expression
+        let diags = run_on(
+            "rust/src/coordinator/checkpoint.rs",
+            "fn f(data: &[f32]) -> &[u8] {\n\
+             \x20   // SAFETY: `data` is a live &[f32], so the pointer is valid\n\
+             \x20   // for len*4 bytes, u8 has no alignment requirement, and\n\
+             \x20   // every byte of an f32 is initialized plain-old-data.\n\
+             \x20   // The borrow outlives the produced slice.\n\
+             \x20   let bytes: &[u8] =\n\
+             \x20       unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };\n\
+             \x20   bytes\n\
+             }\n",
+        );
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn safety_comment_too_far_above_does_not_count() {
+        let diags = run_on(
+            "rust/src/coordinator/checkpoint.rs",
+            "// SAFETY: too far away to bind to the site below\n\
+             fn a() {}\n\
+             fn b() {}\n\
+             fn c() {}\n\
+             fn f(bytes: &[u8]) -> f32 {\n\
+             \x20   unsafe { read_f32(bytes) }\n\
+             }\n",
+        );
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].rule, "missing-safety");
+    }
+}

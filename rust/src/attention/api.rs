@@ -410,13 +410,13 @@ impl<'m> AttnProblem<'m> {
     /// schedule with its per-tile mask cache, and the census.
     /// This is the cost [`PlanCache`] amortizes across repeated calls.
     pub fn plan(&self) -> Result<ExecutionPlan, AttnError> {
-        let sp = crate::telemetry::trace::span("plan.build");
+        let sp = crate::telemetry::trace::span(crate::telemetry::names::PLAN_BUILD);
         let (layout, mask) = self.validate()?;
         let cfg = self.cfg();
         let table = BlockTable::build(mask, cfg.bc);
         let sched = TileSchedule::build(mask, &table, self.n, cfg, self.skip);
         let census = sched.census();
-        crate::telemetry::metrics::global().add("plan.builds", 1);
+        crate::telemetry::metrics::global().add(crate::telemetry::names::PLAN_BUILDS, 1);
         sp.add("tiles", (sched.tr * sched.tc) as u64);
         Ok(ExecutionPlan {
             n: self.n,
@@ -780,7 +780,7 @@ impl Backend for CpuBackend {
             std::mem::take(&mut *slot)
         };
         {
-            let sp = crate::telemetry::trace::span("prefill.pack");
+            let sp = crate::telemetry::trace::span(crate::telemetry::names::PREFILL_PACK);
             if packs.len() != layout.kv_heads {
                 packs.clear();
                 packs.resize_with(layout.kv_heads, || gemm::PackedKt::empty(cfg.bc));
@@ -791,7 +791,7 @@ impl Backend for CpuBackend {
             sp.add("kv_heads", layout.kv_heads as u64);
         }
         let kts: &[gemm::PackedKt] = &packs;
-        let sp_tiles = crate::telemetry::trace::span("prefill.tiles");
+        let sp_tiles = crate::telemetry::trace::span(crate::telemetry::names::PREFILL_TILES);
 
         // one classification pass per KV head; the query group reuses
         // both the classes and the per-tile mask cache
@@ -989,7 +989,7 @@ impl Backend for CpuBackend {
         if lse.len() != n {
             return Err(AttnError::ShapeMismatch { what: "lse", got: lse.len(), want: n });
         }
-        let sp = crate::telemetry::trace::span("plan.backward");
+        let sp = crate::telemetry::trace::span(crate::telemetry::names::PLAN_BACKWARD);
         let t0 = std::time::Instant::now();
         let (grads, stats) = flash::backward_impl(
             q,
@@ -1006,7 +1006,7 @@ impl Backend for CpuBackend {
             plan.threads,
         );
         crate::telemetry::metrics::global()
-            .observe_ms("train.backward_ms", t0.elapsed().as_secs_f64() * 1e3);
+            .observe_ms(crate::telemetry::names::TRAIN_BACKWARD_MS, t0.elapsed().as_secs_f64() * 1e3);
         sp.add("tiles_partial", stats.tiles_partial as u64);
         sp.add("macs", stats.macs);
         stats.publish();
@@ -1037,7 +1037,7 @@ impl Backend for CpuBackend {
         if lse.len() != q_heads * n {
             return Err(AttnError::ShapeMismatch { what: "lse", got: lse.len(), want: q_heads * n });
         }
-        let sp = crate::telemetry::trace::span("plan.backward");
+        let sp = crate::telemetry::trace::span(crate::telemetry::names::PLAN_BACKWARD);
         let t0 = std::time::Instant::now();
         let (grads, stats) = flash::backward_grouped_impl(
             q.data,
@@ -1055,7 +1055,7 @@ impl Backend for CpuBackend {
             plan.threads,
         );
         crate::telemetry::metrics::global()
-            .observe_ms("train.backward_ms", t0.elapsed().as_secs_f64() * 1e3);
+            .observe_ms(crate::telemetry::names::TRAIN_BACKWARD_MS, t0.elapsed().as_secs_f64() * 1e3);
         sp.add("tiles_partial", stats.tiles_partial as u64);
         sp.add("macs", stats.macs);
         stats.publish();
@@ -1357,7 +1357,7 @@ impl PlanCache {
             let mask = problem.mask.expect("validated problem has a mask");
             if plan.same_mask(mask) {
                 self.hits += 1;
-                crate::telemetry::metrics::global().add("plan.cache.hits", 1);
+                crate::telemetry::metrics::global().add(crate::telemetry::names::PLAN_CACHE_HITS, 1);
                 return Ok(Arc::clone(plan));
             }
             // hash collision (the sampled key aliased two masks): the
@@ -1367,14 +1367,14 @@ impl PlanCache {
             collided = true;
         }
         self.misses += 1;
-        crate::telemetry::metrics::global().add("plan.cache.misses", 1);
+        crate::telemetry::metrics::global().add(crate::telemetry::names::PLAN_CACHE_MISSES, 1);
         let plan = Arc::new(problem.plan()?);
         if !collided {
             if self.map.len() >= self.cap {
                 if let Some(old) = self.order.pop_front() {
                     self.map.remove(&old);
                     self.evictions += 1;
-                    crate::telemetry::metrics::global().add("plan.cache.evictions", 1);
+                    crate::telemetry::metrics::global().add(crate::telemetry::names::PLAN_CACHE_EVICTIONS, 1);
                 }
             }
             self.order.push_back(key.clone());

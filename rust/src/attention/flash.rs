@@ -6,6 +6,15 @@
 //! arithmetic over *all* tiles, so the two are bitwise-equal — the
 //! paper's §4.4 exactness claim, asserted in the tests below.
 
+// lint: allow-file(hot-path-panic:index) — tile indices are bounded by
+// the Eq. 4 block schedule: every `s[x * cols ..]` / `lts[j]` access is
+// confined to `rows × cols` tiles cut from `n` by the plan, and the
+// oracle suites compare each path bitwise against the dense reference.
+// lint: allow-file(hot-path-panic:expect) — the only `.expect(` users
+// in this file are the deprecated one-shot shims (kept as migration
+// oracles); they are documented to panic on invalid input, while the
+// `attention::api` path returns typed `AttnError`s.
+
 use super::api::{self, Backend as _};
 use super::gemm;
 use super::{AttnConfig, AttnGrads, AttnOutput, HeadLayout, TileStats};
@@ -164,7 +173,7 @@ impl TileSchedule {
         cfg: AttnConfig,
         skip: bool,
     ) -> TileSchedule {
-        let sp = crate::telemetry::trace::span("plan.classify");
+        let sp = crate::telemetry::trace::span(crate::telemetry::names::PLAN_CLASSIFY);
         let (br, bc) = (cfg.br, cfg.bc);
         let (tr, tc) = (n.div_ceil(br), n.div_ceil(bc));
         let mut classes = Vec::with_capacity(tr * tc);

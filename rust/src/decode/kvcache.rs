@@ -226,7 +226,7 @@ impl PagePool {
         self.refs[id] -= 1;
         self.stats.shared_releases += 1;
         self.stats.cow_copies += 1;
-        crate::telemetry::metrics::global().add("prefix.cow_copies", 1);
+        crate::telemetry::metrics::global().add(crate::telemetry::names::PREFIX_COW_COPIES, 1);
         Some(new_id)
     }
 
@@ -569,7 +569,7 @@ impl PrefixCache {
             }
             if !Self::content_matches(e, pool, k, v, n) {
                 self.stats.collisions += 1;
-                crate::telemetry::metrics::global().add("prefix.collisions", 1);
+                crate::telemetry::metrics::global().add(crate::telemetry::names::PREFIX_COLLISIONS, 1);
                 continue;
             }
             let pages = e.pages.clone();
@@ -578,12 +578,12 @@ impl PrefixCache {
             self.stats.hits += 1;
             self.stats.shared_pages += (kv_heads * (p + 1)) as u64;
             let reg = crate::telemetry::metrics::global();
-            reg.add("prefix.hits", 1);
-            reg.add("prefix.shared_pages", (kv_heads * (p + 1)) as u64);
+            reg.add(crate::telemetry::names::PREFIX_HITS, 1);
+            reg.add(crate::telemetry::names::PREFIX_SHARED_PAGES, (kv_heads * (p + 1)) as u64);
             return Some((pages, tokens));
         }
         self.stats.misses += 1;
-        crate::telemetry::metrics::global().add("prefix.misses", 1);
+        crate::telemetry::metrics::global().add(crate::telemetry::names::PREFIX_MISSES, 1);
         None
     }
 

@@ -778,9 +778,9 @@ impl ContinuousBatcher {
             started: Instant::now(),
             ttft: Histogram::new(),
             itl: Histogram::new(),
-            g_ttft: reg.histogram("decode.ttft_ms"),
-            g_itl: reg.histogram("decode.itl_ms"),
-            g_peak: reg.gauge("decode.peak_pages"),
+            g_ttft: reg.histogram(crate::telemetry::names::DECODE_TTFT_MS),
+            g_itl: reg.histogram(crate::telemetry::names::DECODE_ITL_MS),
+            g_peak: reg.gauge(crate::telemetry::names::DECODE_PEAK_PAGES),
         }
     }
 
@@ -892,7 +892,7 @@ impl ContinuousBatcher {
         if !session.prefill(&mut self.pool, self.prefix.as_mut()) {
             self.prefill_rejects += 1;
             log::warn(
-                "decode",
+                crate::telemetry::names::TARGET_DECODE,
                 format!(
                     "request {}: pool drained between fit check and prefill; re-queued",
                     session.req.id

@@ -13,6 +13,11 @@
 //! terms, so `skip=true` and `skip=false` are bitwise-identical
 //! (asserted in the tests below).
 
+// lint: allow-file(hot-path-panic:index) — page-local indices are
+// bounded by the pool's page geometry (`ps`, `d` fixed at pool build)
+// and `t`-derived page counts; the skip/no-skip bitwise-equality tests
+// cover every indexing path against the dense reference.
+
 use super::kvcache::{PagePool, PagedKv};
 use crate::attention::gemm;
 use crate::mask::{BlockClass, FlashMask, IncrementalMaskView};
@@ -108,20 +113,21 @@ impl DecodeStats {
     /// per retired sequence by the continuous batcher — never from the
     /// per-token hot loop.
     pub fn publish(&self) {
+        use crate::telemetry::names as tn;
         let r = crate::telemetry::metrics::global();
-        r.add("decode.steps", self.steps);
-        r.add("decode.pages_total", self.pages_total);
-        r.add("decode.pages_skipped", self.pages_skipped);
-        r.add("decode.pages_partial", self.pages_partial);
-        r.add("decode.pages_unmasked", self.pages_unmasked);
-        r.add("decode.macs", self.macs);
-        r.add("decode.mask_evals", self.mask_evals);
-        r.add("decode.spec_passes", self.spec_passes);
-        r.add("decode.drafted", self.drafted);
-        r.add("decode.accepted", self.accepted);
-        r.add("decode.fallback_steps", self.fallback_steps);
-        r.add("decode.plans_built", self.plans_built);
-        r.add("decode.prefill_macs", self.prefill_macs);
+        r.add(tn::DECODE_STEPS, self.steps);
+        r.add(tn::DECODE_PAGES_TOTAL, self.pages_total);
+        r.add(tn::DECODE_PAGES_SKIPPED, self.pages_skipped);
+        r.add(tn::DECODE_PAGES_PARTIAL, self.pages_partial);
+        r.add(tn::DECODE_PAGES_UNMASKED, self.pages_unmasked);
+        r.add(tn::DECODE_MACS, self.macs);
+        r.add(tn::DECODE_MASK_EVALS, self.mask_evals);
+        r.add(tn::DECODE_SPEC_PASSES, self.spec_passes);
+        r.add(tn::DECODE_DRAFTED, self.drafted);
+        r.add(tn::DECODE_ACCEPTED, self.accepted);
+        r.add(tn::DECODE_FALLBACK_STEPS, self.fallback_steps);
+        r.add(tn::DECODE_PLANS_BUILT, self.plans_built);
+        r.add(tn::DECODE_PREFILL_MACS, self.prefill_macs);
     }
 }
 
@@ -218,6 +224,7 @@ fn step_shim(
             stats,
             scratch,
         )
+        // lint: allow(hot-path-panic:expect) — deprecated shim: the backend revalidates the pack; the api path returns the typed error instead
         .expect("decode_step: CPU backend rejected a validated step")
 }
 
@@ -237,7 +244,7 @@ pub(crate) fn decode_step_group_impl(
     stats: &mut DecodeStats,
     scratch: &mut Vec<f32>,
 ) -> Vec<f32> {
-    let _sp = crate::telemetry::trace::span("decode.step");
+    let _sp = crate::telemetry::trace::span(crate::telemetry::names::DECODE_STEP);
     let d = pool.d();
     let ps = pool.page_size();
     debug_assert!(group >= 1);

@@ -28,7 +28,18 @@
 //!   logger (DESIGN.md §Telemetry).
 //! * [`util`] — std-only substitutes for crates unavailable in this
 //!   offline image (CLI, JSON, PRNG, bench harness, mini-proptest).
+//! * [`analysis`] — project-native static analysis (`flashmask lint`):
+//!   a lexer-driven checker for the repo's own invariants — hot-path
+//!   panic-freedom, deprecated-shim bans, telemetry naming, unsafe
+//!   hygiene (DESIGN.md §Static analysis).
 
+// The only unsafe code in this crate is the checkpoint writer's
+// byte-level f32 (de)serialization in `coordinator::checkpoint`; the
+// `unsafe-hygiene` lint pass enforces that allowlist.  Unsafe bodies
+// must spell out each unsafe operation.
+#![deny(unsafe_op_in_unsafe_fn)]
+
+pub mod analysis;
 pub mod attention;
 pub mod coordinator;
 pub mod decode;

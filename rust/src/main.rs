@@ -17,6 +17,7 @@
 //! flashmask decode --heads 8 --kv-heads 2 # GQA: group-shared KV pages
 //! flashmask serve --rate 200              # streaming router, Poisson load
 //! flashmask metrics                       # telemetry snapshot (JSON)
+//! flashmask lint --json                   # project-native static analysis
 //! ```
 
 use anyhow::{anyhow, Result};
@@ -76,6 +77,7 @@ fn main() -> Result<()> {
         "decode" => cmd_decode(&args)?,
         "serve" => cmd_serve(&args)?,
         "metrics" => cmd_metrics(&args)?,
+        "lint" => cmd_lint(&args)?,
         "help" | _ => {
             println!("{}", HELP);
             return Ok(());
@@ -135,6 +137,14 @@ subcommands:
                    --prefix-cache enables content-addressed KV prefix
                    sharing: admission fit checks and wave reservations
                    count only pages that are new after prefix reuse
+  lint             project-native static analysis over the source tree
+                   (lint [paths…] [--json]; paths default to rust/src,
+                   rust/benches and examples).  Passes: hot-path-panic,
+                   deprecated-shim, direct-print, telemetry-names,
+                   unsafe-hygiene (DESIGN.md §Static analysis).  Exits
+                   nonzero on any non-suppressed diagnostic; suppress a
+                   finding with `// lint: allow(pass[:rule]) — reason`
+                   on or above the line (allow-file(…) for a module)
   metrics          run a small prefill+decode workload and dump the
                    telemetry registry snapshot + span tree as JSON
                    (--n N --d D --requests R --seed S; --no-trace
@@ -147,6 +157,41 @@ subcommands:
                    default 3) so counters can be seen advancing
 common: --artifacts DIR (default ./artifacts)
         --log-level debug|info|warn|error (or FLASHMASK_LOG env var)";
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    let json = args.flag("json");
+    let mut roots: Vec<PathBuf> = args.positionals().iter().map(PathBuf::from).collect();
+    if roots.is_empty() {
+        roots = flashmask::analysis::default_roots();
+        if roots.is_empty() {
+            return Err(anyhow!(
+                "lint: no default roots found — run from the repo or crate root, \
+                 or pass paths explicitly"
+            ));
+        }
+    }
+    let report = flashmask::analysis::lint(&roots).map_err(|e| anyhow!(e))?;
+    if json {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        for d in &report.diagnostics {
+            println!("{}", d.render());
+        }
+        println!(
+            "flashmask lint: {} file(s), {} pass(es): {} diagnostic(s), {} suppressed{}",
+            report.files,
+            report.passes.len(),
+            report.diagnostics.len(),
+            report.suppressed,
+            if report.clean() { " — clean" } else { "" }
+        );
+    }
+    args.finish().map_err(|e| anyhow!(e))?;
+    if !report.clean() {
+        std::process::exit(1);
+    }
+    Ok(())
+}
 
 fn cmd_info(args: &Args) -> Result<()> {
     let rt = Runtime::open(&artifacts_dir(args))?;

@@ -15,7 +15,7 @@ use crate::attention::api::{
 };
 use crate::decode::{BatcherConfig, BatcherReport, ContinuousBatcher, DecodeRequest};
 use crate::runtime::Executable;
-use crate::telemetry::{log, metrics, trace, Histogram};
+use crate::telemetry::{log, metrics, names, trace, Histogram};
 use anyhow::Result;
 use std::time::Instant;
 
@@ -118,9 +118,9 @@ impl ServeEngine {
 
     fn note_fallback(&mut self, missing: Capability) {
         self.fallbacks += 1;
-        metrics::global().add("serve.fallbacks", 1);
+        metrics::global().add(names::SERVE_FALLBACKS, 1);
         log::warn(
-            "serve",
+            names::TARGET_SERVE,
             format!(
                 "backend '{}' lacks capability '{missing}'; falling back to the CPU path",
                 self.backend.name()
@@ -134,17 +134,17 @@ impl ServeEngine {
         let caps = self.backend.capabilities();
         let reg = metrics::global();
         for req in plan.requests {
-            let sp = trace::span("serve.request");
+            let sp = trace::span(names::SERVE_REQUEST);
             sp.add("tokens", req.n as u64);
             let t0 = Instant::now();
             let o = self.run_prefill(&req, caps)?;
             let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
             drop(sp);
             let queue_ms = now.duration_since(req.arrived).as_secs_f64() * 1e3;
-            reg.add("serve.requests", 1);
-            reg.add("serve.tokens", req.n as u64);
-            reg.observe_ms("serve.compute_ms", compute_ms);
-            reg.observe_ms("serve.queue_ms", queue_ms);
+            reg.add(names::SERVE_REQUESTS, 1);
+            reg.add(names::SERVE_TOKENS, req.n as u64);
+            reg.observe_ms(names::SERVE_COMPUTE_MS, compute_ms);
+            reg.observe_ms(names::SERVE_QUEUE_MS, queue_ms);
             self.tokens += req.n;
             self.completed.push(Response {
                 id: req.id,
@@ -232,7 +232,7 @@ impl ServeEngine {
         if !self.backend.capabilities().decode {
             self.note_fallback(Capability::DecodeStep);
         }
-        let sp = trace::span("serve.decode_batch");
+        let sp = trace::span(names::SERVE_DECODE_BATCH);
         sp.add("sequences", reqs.len() as u64);
         let mut batcher = ContinuousBatcher::new(cfg);
         for r in reqs {
@@ -243,13 +243,13 @@ impl ServeEngine {
         let reg = metrics::global();
         for resp in batcher.take_finished() {
             self.ttft.record_ms(resp.ttft_ms);
-            reg.observe_ms("serve.ttft_ms", resp.ttft_ms);
+            reg.observe_ms(names::SERVE_TTFT_MS, resp.ttft_ms);
             for &gap in &resp.itl_gaps_ms {
                 self.itl.record_ms(gap);
-                reg.observe_ms("serve.itl_ms", gap);
+                reg.observe_ms(names::SERVE_ITL_MS, gap);
             }
-            reg.add("serve.requests", 1);
-            reg.add("serve.tokens", (resp.n - resp.prompt_len) as u64);
+            reg.add(names::SERVE_REQUESTS, 1);
+            reg.add(names::SERVE_TOKENS, (resp.n - resp.prompt_len) as u64);
             self.tokens += resp.n - resp.prompt_len;
             self.completed.push(Response {
                 id: resp.id,

@@ -51,7 +51,7 @@ use crate::decode::{
     BatcherConfig, DecodeRequest, DecodeResponse, DecodeSession, DecodeStats, PagePool,
     PrefixCache, PrefixStats, StepOutcome,
 };
-use crate::telemetry::{log, metrics, trace, Gauge, Histogram};
+use crate::telemetry::{log, metrics, names, trace, Gauge, Histogram};
 use crate::util::rng::Rng;
 use anyhow::{bail, ensure, Result};
 use std::collections::{HashMap, VecDeque};
@@ -235,10 +235,10 @@ impl Router {
             started: Instant::now(),
             ttft: Histogram::new(),
             itl: Histogram::new(),
-            g_ttft: reg.histogram("router.ttft_ms"),
-            g_itl: reg.histogram("router.itl_ms"),
-            g_active: reg.gauge("router.active_peak"),
-            g_waiting: reg.gauge("router.waiting_peak"),
+            g_ttft: reg.histogram(names::ROUTER_TTFT_MS),
+            g_itl: reg.histogram(names::ROUTER_ITL_MS),
+            g_active: reg.gauge(names::ROUTER_ACTIVE_PEAK),
+            g_waiting: reg.gauge(names::ROUTER_WAITING_PEAK),
         }
     }
 
@@ -351,8 +351,8 @@ impl Router {
         self.streams.remove(&id);
         self.streamed.remove(&id);
         self.cancelled += 1;
-        metrics::global().add("router.cancelled", 1);
-        log::info("router", format!("request {id}: stream dropped, cancelled"));
+        metrics::global().add(names::ROUTER_CANCELLED, 1);
+        log::info(names::TARGET_ROUTER, format!("request {id}: stream dropped, cancelled"));
     }
 
     /// Plan and run one admission wave if it clears the pacing gates.
@@ -433,15 +433,15 @@ impl Router {
         }
         let was_forced = forced && wave.len() < ratio_min;
 
-        let sp = trace::span("router.wave");
+        let sp = trace::span(names::ROUTER_WAVE);
         sp.add("requests", wave.len() as u64);
         sp.add("prefill_tokens", prefill_tokens as u64);
         let reg = metrics::global();
         self.waves += 1;
-        reg.add("router.waves", 1);
+        reg.add(names::ROUTER_WAVES, 1);
         if was_forced {
             self.forced_waves += 1;
-            reg.add("router.forced_waves", 1);
+            reg.add(names::ROUTER_FORCED_WAVES, 1);
         }
         for req in wave {
             let id = req.id;
@@ -459,9 +459,9 @@ impl Router {
                 // safe configs, but a failed prefill must still roll
                 // back and re-queue, never silently enter the batch
                 self.prefill_rejects += 1;
-                reg.add("router.prefill_rejects", 1);
+                reg.add(names::ROUTER_PREFILL_REJECTS, 1);
                 log::warn(
-                    "router",
+                    names::TARGET_ROUTER,
                     format!("request {id}: prefill failed inside the wave; re-queued"),
                 );
                 self.waiting.push_front(session.preempt(&mut self.pool));
@@ -534,7 +534,7 @@ impl Router {
                     let s = self.active.remove(victim);
                     let vid = s.req.id;
                     self.preemptions += 1;
-                    metrics::global().add("router.preemptions", 1);
+                    metrics::global().add(names::ROUTER_PREEMPTIONS, 1);
                     self.decoded_tokens -= (s.pos - s.req.prompt_len) as u64;
                     self.streamed.remove(&vid);
                     let req = s.preempt(&mut self.pool);

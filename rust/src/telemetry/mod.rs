@@ -11,8 +11,11 @@
 //!   pack → tile loop / decode step / speculation verify) with
 //!   configurable sampling and a global off switch.
 //! * [`log`] — the leveled logger library code uses instead of
-//!   `eprintln!` (enforced by `scripts/verify.sh`); capturable in
-//!   tests.
+//!   `eprintln!` (enforced by the `direct-print` lint pass run from
+//!   `scripts/verify.sh`); capturable in tests.
+//! * [`names`] — the closed registry of metric/span/log-target name
+//!   consts; the `telemetry-names` lint pass rejects undeclared
+//!   literals at call sites (DESIGN.md §Static analysis).
 //!
 //! Emitters live with their layers: `attention::TileStats::publish`,
 //! `decode::DecodeStats::publish`, `PlanCache` hit/miss/evict
@@ -24,6 +27,7 @@
 
 pub mod log;
 pub mod metrics;
+pub mod names;
 pub mod trace;
 
 pub use metrics::{Counter, Gauge, HistData, Histogram, Registry};

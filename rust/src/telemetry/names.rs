@@ -1,0 +1,192 @@
+//! Central registry of every telemetry name (DESIGN.md §Static
+//! analysis, §Telemetry).
+//!
+//! Metric, span and log-target strings used to be scattered literals —
+//! a typo (`"decode.page_total"`) silently forked a metric series.
+//! Every name now lives here as a `const`, call sites reference the
+//! const, and the `telemetry-names` lint pass
+//! ([`crate::analysis::passes::telemetry_names`]) fails any string
+//! literal passed to `counter`/`gauge`/`histogram`/`observe_ms`/
+//! `span`/registry `add` (or as a `log::` target) that is not declared
+//! below.
+//!
+//! Naming scheme (checked by `names_follow_scheme` and the lint pass):
+//!
+//! * metrics and spans are dotted lowercase `layer.noun[.verb]` —
+//!   layers today: `tile`, `plan`, `prefill`, `decode`, `prefix`,
+//!   `serve`, `router`, `train`;
+//! * latency histograms end in `_ms`;
+//! * log targets are a single lowercase word naming the emitting
+//!   subsystem;
+//! * span *attribute* keys (the `SpanGuard::add` first argument) are
+//!   dotless single words and are deliberately **not** registered —
+//!   they are scoped to their span, not global series.
+
+/// Declare name consts and collect every value into [`ALL`].
+macro_rules! names {
+    ($($(#[$meta:meta])* $ident:ident => $lit:literal,)*) => {
+        $($(#[$meta])* pub const $ident: &str = $lit;)*
+        /// Every declared telemetry name, in declaration order — the
+        /// closed set the `telemetry-names` lint pass checks literals
+        /// against.
+        pub const ALL: &[&str] = &[$($lit),*];
+    };
+}
+
+names! {
+    // -- tile layer: prefill kernel census (attention::TileStats) --
+    TILE_TOTAL => "tile.total",
+    TILE_SKIPPED => "tile.skipped",
+    TILE_PARTIAL => "tile.partial",
+    TILE_UNMASKED => "tile.unmasked",
+    TILE_VISITED => "tile.visited",
+    TILE_MACS => "tile.macs",
+    TILE_MASK_EVALS => "tile.mask_evals",
+    TILE_MASK_CACHE_HITS => "tile.mask_cache_hits",
+
+    // -- plan layer: ExecutionPlan build + PlanCache --
+    /// Span: AttnProblem::plan compile.
+    PLAN_BUILD => "plan.build",
+    /// Span: Eq. 4 tile classification inside the plan build.
+    PLAN_CLASSIFY => "plan.classify",
+    /// Span: backward pass over a built plan.
+    PLAN_BACKWARD => "plan.backward",
+    PLAN_BUILDS => "plan.builds",
+    PLAN_CACHE_HITS => "plan.cache.hits",
+    PLAN_CACHE_MISSES => "plan.cache.misses",
+    PLAN_CACHE_EVICTIONS => "plan.cache.evictions",
+
+    // -- prefill layer: spans inside Backend::prefill --
+    PREFILL_PACK => "prefill.pack",
+    PREFILL_TILES => "prefill.tiles",
+
+    // -- decode layer: DecodeStats::publish + batcher latency --
+    /// Span: one decode_step_group kernel invocation.
+    DECODE_STEP => "decode.step",
+    /// Span: one speculative verify pass.
+    DECODE_VERIFY => "decode.verify",
+    DECODE_STEPS => "decode.steps",
+    DECODE_PAGES_TOTAL => "decode.pages_total",
+    DECODE_PAGES_SKIPPED => "decode.pages_skipped",
+    DECODE_PAGES_PARTIAL => "decode.pages_partial",
+    DECODE_PAGES_UNMASKED => "decode.pages_unmasked",
+    DECODE_MACS => "decode.macs",
+    DECODE_MASK_EVALS => "decode.mask_evals",
+    DECODE_SPEC_PASSES => "decode.spec_passes",
+    DECODE_DRAFTED => "decode.drafted",
+    DECODE_ACCEPTED => "decode.accepted",
+    DECODE_FALLBACK_STEPS => "decode.fallback_steps",
+    DECODE_PLANS_BUILT => "decode.plans_built",
+    DECODE_PREFILL_MACS => "decode.prefill_macs",
+    DECODE_TTFT_MS => "decode.ttft_ms",
+    DECODE_ITL_MS => "decode.itl_ms",
+    DECODE_PEAK_PAGES => "decode.peak_pages",
+
+    // -- prefix layer: content-addressed KV page sharing --
+    PREFIX_COW_COPIES => "prefix.cow_copies",
+    PREFIX_COLLISIONS => "prefix.collisions",
+    PREFIX_HITS => "prefix.hits",
+    PREFIX_MISSES => "prefix.misses",
+    PREFIX_SHARED_PAGES => "prefix.shared_pages",
+
+    // -- serve layer: ServeEngine --
+    /// Span: one prefill request through the engine.
+    SERVE_REQUEST => "serve.request",
+    /// Span: one continuous-batching decode tick.
+    SERVE_DECODE_BATCH => "serve.decode_batch",
+    SERVE_FALLBACKS => "serve.fallbacks",
+    SERVE_REQUESTS => "serve.requests",
+    SERVE_TOKENS => "serve.tokens",
+    SERVE_COMPUTE_MS => "serve.compute_ms",
+    SERVE_QUEUE_MS => "serve.queue_ms",
+    SERVE_TTFT_MS => "serve.ttft_ms",
+    SERVE_ITL_MS => "serve.itl_ms",
+
+    // -- router layer: streaming wave admission --
+    /// Span: one admission wave.
+    ROUTER_WAVE => "router.wave",
+    ROUTER_TTFT_MS => "router.ttft_ms",
+    ROUTER_ITL_MS => "router.itl_ms",
+    ROUTER_ACTIVE_PEAK => "router.active_peak",
+    ROUTER_WAITING_PEAK => "router.waiting_peak",
+    ROUTER_CANCELLED => "router.cancelled",
+    ROUTER_WAVES => "router.waves",
+    ROUTER_FORCED_WAVES => "router.forced_waves",
+    ROUTER_PREFILL_REJECTS => "router.prefill_rejects",
+    ROUTER_PREEMPTIONS => "router.preemptions",
+
+    // -- train layer: Trainer + coordinator::metrics --
+    /// Span: one optimizer step.
+    TRAIN_STEP => "train.step",
+    TRAIN_STEP_MS => "train.step_ms",
+    TRAIN_STEPS => "train.steps",
+    TRAIN_TOKENS => "train.tokens",
+    TRAIN_BACKWARD_MS => "train.backward_ms",
+
+    // -- log targets (telemetry::log `target` argument) --
+    TARGET_ROUTER => "router",
+    TARGET_SERVE => "serve",
+    TARGET_DECODE => "decode",
+    TARGET_TRAIN => "train",
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeSet;
+
+    fn is_scheme_metric(n: &str) -> bool {
+        n.contains('.')
+            && n.split('.').all(|seg| {
+                !seg.is_empty()
+                    && seg.chars().next().is_some_and(|c| c.is_ascii_lowercase())
+                    && seg.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+            })
+    }
+
+    #[test]
+    fn names_follow_scheme() {
+        let layers: BTreeSet<&str> =
+            ["tile", "plan", "prefill", "decode", "prefix", "serve", "router", "train"]
+                .into_iter()
+                .collect();
+        for n in ALL {
+            if n.contains('.') {
+                assert!(is_scheme_metric(n), "metric/span name '{n}' breaks the dotted scheme");
+                let layer = n.split('.').next().unwrap_or_default();
+                assert!(layers.contains(layer), "'{n}' uses undeclared layer '{layer}'");
+            } else {
+                // log target: one lowercase word
+                assert!(
+                    n.chars().all(|c| c.is_ascii_lowercase()),
+                    "log target '{n}' must be a single lowercase word"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn names_are_unique() {
+        let set: BTreeSet<&str> = ALL.iter().copied().collect();
+        assert_eq!(set.len(), ALL.len(), "duplicate telemetry name declared");
+    }
+
+    #[test]
+    fn histograms_end_in_ms() {
+        // every name fed to observe_ms/histogram carries the _ms suffix
+        for n in [
+            DECODE_TTFT_MS,
+            DECODE_ITL_MS,
+            SERVE_COMPUTE_MS,
+            SERVE_QUEUE_MS,
+            SERVE_TTFT_MS,
+            SERVE_ITL_MS,
+            ROUTER_TTFT_MS,
+            ROUTER_ITL_MS,
+            TRAIN_STEP_MS,
+            TRAIN_BACKWARD_MS,
+        ] {
+            assert!(n.ends_with("_ms"), "latency histogram '{n}' missing the _ms suffix");
+        }
+    }
+}

@@ -1,16 +1,21 @@
 //! Tiny CLI argument parser (clap is not vendored in this image).
 //!
-//! Grammar: `prog <subcommand> [--key value]... [--flag]...`
-//! Unrecognised keys are an error at `finish()` so typos fail loudly.
+//! Grammar: `prog <subcommand> [positional]... [--key value]... [--flag]...`
+//! Positionals must precede the first `--` option (a later bare token
+//! binds as the preceding option's value).  Unrecognised keys — and
+//! positionals the subcommand never reads — are an error at `finish()`
+//! so typos fail loudly.
 
 use std::collections::BTreeMap;
 
 #[derive(Debug, Default)]
 pub struct Args {
     pub subcommand: Option<String>,
+    positionals: Vec<String>,
     kv: BTreeMap<String, String>,
     flags: Vec<String>,
     used: std::cell::RefCell<Vec<String>>,
+    positionals_used: std::cell::Cell<bool>,
 }
 
 impl Args {
@@ -24,6 +29,12 @@ impl Args {
         if let Some(first) = it.peek() {
             if !first.starts_with("--") {
                 out.subcommand = it.next();
+                while let Some(p) = it.peek() {
+                    if p.starts_with("--") {
+                        break;
+                    }
+                    out.positionals.extend(it.next());
+                }
             }
         }
         while let Some(a) = it.next() {
@@ -40,6 +51,12 @@ impl Args {
             }
         }
         Ok(out)
+    }
+
+    /// Bare tokens between the subcommand and the first `--` option.
+    pub fn positionals(&self) -> &[String] {
+        self.positionals_used.set(true);
+        &self.positionals
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
@@ -79,6 +96,9 @@ impl Args {
 
     /// Error on any provided-but-never-queried option (typo guard).
     pub fn finish(&self) -> Result<(), String> {
+        if !self.positionals.is_empty() && !self.positionals_used.get() {
+            return Err(format!("unexpected argument(s): {}", self.positionals.join(", ")));
+        }
         let used = self.used.borrow();
         let unknown: Vec<&str> = self
             .kv
@@ -131,6 +151,23 @@ mod tests {
     fn bad_value_type() {
         let a = args("run --steps abc");
         assert!(a.get_usize("steps", 0).is_err());
+    }
+
+    #[test]
+    fn positionals_before_options() {
+        let a = args("lint rust/src rust/benches --json --strict level");
+        assert_eq!(a.subcommand.as_deref(), Some("lint"));
+        assert_eq!(a.positionals(), ["rust/src", "rust/benches"]);
+        assert!(a.flag("json"));
+        assert_eq!(a.get_or("strict", ""), "level");
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unread_positionals_fail_finish() {
+        let a = args("train extra-token --steps 5");
+        let _ = a.get_usize("steps", 0);
+        assert!(a.finish().is_err());
     }
 
     #[test]

@@ -1,0 +1,63 @@
+//! The shipped tree is lint-clean: `flashmask lint` over the default
+//! roots reports zero non-suppressed diagnostics.  This is the same
+//! invariant `scripts/verify.sh` enforces via the CLI — pinned here so
+//! `cargo test` alone catches a regression.
+
+use flashmask::analysis;
+use std::path::PathBuf;
+
+/// The source roots, resolved against either crate layout: the crate
+/// root holding `src/` directly, or a workspace-style root with the
+/// crate under `rust/`.
+fn roots() -> Vec<PathBuf> {
+    let md = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let candidate_sets = [
+        vec![md.join("src"), md.join("benches"), md.join("../examples")],
+        vec![md.join("rust/src"), md.join("rust/benches"), md.join("examples")],
+    ];
+    for set in candidate_sets {
+        let found: Vec<PathBuf> = set.into_iter().filter(|p| p.is_dir()).collect();
+        if !found.is_empty() {
+            return found;
+        }
+    }
+    Vec::new()
+}
+
+#[test]
+fn shipped_tree_is_lint_clean() {
+    let roots = roots();
+    assert!(!roots.is_empty(), "no source roots found under CARGO_MANIFEST_DIR");
+    let report = analysis::lint(&roots).expect("lint run failed");
+    let rendered: Vec<String> = report.diagnostics.iter().map(|d| d.render()).collect();
+    assert!(
+        report.clean(),
+        "the shipped tree must lint clean; diagnostics:\n{}",
+        rendered.join("\n")
+    );
+    // sanity: the run actually covered the tree, and the reasoned
+    // kernel pragmas were exercised rather than silently unmatched
+    assert!(report.files > 30, "only {} files linted — wrong roots?", report.files);
+    assert!(report.suppressed > 0, "expected the kernel pragmas to suppress index findings");
+}
+
+#[test]
+fn lint_report_json_is_schema_stable() {
+    let roots = roots();
+    assert!(!roots.is_empty());
+    let report = analysis::lint(&roots).expect("lint run failed");
+    let j = report.to_json();
+    for key in ["tool", "schema_version", "files", "passes", "diagnostics", "suppressed", "clean"]
+    {
+        assert!(j.get(key).is_some(), "JSON report missing key '{key}'");
+    }
+    assert_eq!(j.get("tool").and_then(|v| v.as_str()), Some("flashmask-lint"));
+    assert_eq!(j.get("schema_version").and_then(|v| v.as_i64()), Some(1));
+    assert_eq!(j.get("clean"), Some(&flashmask::util::json::Json::Bool(report.clean())));
+    let reparsed = flashmask::util::json::parse(&j.to_string_pretty()).expect("round-trip");
+    assert_eq!(
+        reparsed.get("files").and_then(|v| v.as_usize()),
+        Some(report.files),
+        "files count must survive a JSON round-trip"
+    );
+}

@@ -50,7 +50,7 @@ cargo bench --bench bench_serve -- $smoke_arg | tee "$tmp/serve.out"
 echo "== bench_train =="
 # end-to-end training-throughput: packed backward anchor (>= 1.5x the
 # loose-GEMM reference), bitwise parallel backward, grouped GQA
-# backward, and flashmask-vs-dense step-time ratio over SFT/DPO/RM
+# backward, and flashmask-vs-dense step-time ratio over SFT/LoRA/DPO/RM
 # shellcheck disable=SC2086
 cargo bench --bench bench_train -- $smoke_arg | tee "$tmp/train.out"
 
@@ -103,12 +103,22 @@ with open(sys.argv[2], "w") as f:
 print(f"bench.sh: wrote {sys.argv[2]}")
 PY
 
-python3 - "$tmp/kernel.json" "$tmp/decode.json" "$out" <<'PY'
+# static-analysis state of the benched tree: a perf number recorded
+# from a tree that fails `flashmask lint` is flagged in the blob
+lint_clean=true
+if ! cargo run --release --quiet -- lint rust/src rust/benches examples > "$tmp/lint.out" 2>&1; then
+  lint_clean=false
+  echo "bench.sh: WARNING — flashmask lint reports diagnostics (recorded lint_clean: false)"
+  cat "$tmp/lint.out"
+fi
+
+python3 - "$tmp/kernel.json" "$tmp/decode.json" "$out" "$lint_clean" <<'PY'
 import json, sys, time
 kernel = json.load(open(sys.argv[1]))
 decode = json.load(open(sys.argv[2]))
 merged = {
     "generated_unix": int(time.time()),
+    "lint_clean": sys.argv[4] == "true",
     "kernel": kernel,
 }
 # surface the ExecutionPlan amortization headline (plan-cache hit rate

@@ -26,60 +26,16 @@ echo "== docs: rustdoc builds clean (warnings are errors) =="
 # this gate keeps intra-doc links and doc markup from rotting
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
-echo "== api migration: no non-test code calls the deprecated kernel entry points =="
-# The legacy free functions (flashmask_forward*, dense_forward*,
-# decode_step*, verify_rows*, flashmask_backward, forward_single_head)
-# are deprecated shims over attention::api.  Only tests/#[cfg(test)]
-# modules may call them (they double as migration oracles).  Test
-# modules sit at the bottom of every src file, so everything from the
-# `#[cfg(test)]` line on is stripped before scanning; definition lines
-# (`fn name(`) and comments are excluded — what remains are call sites.
-deprecated_calls=0
-while IFS= read -r f; do
-  # `.decode_step(` / `.verify(` are Backend *trait methods* (the new
-  # API) that share the legacy free functions' names — a leading dot
-  # marks them as method calls and exempts them
-  hits=$(awk '/#\[cfg\(test\)\]/{exit} {print}' "$f" \
-    | grep -nE '\b(flashmask_forward|flashmask_forward_grouped|flashmask_forward_grouped_parallel|flashmask_backward|dense_forward|dense_forward_grouped|dense_forward_grouped_parallel|decode_step|decode_step_group|verify_rows|verify_rows_group|forward_single_head)\(' \
-    | grep -v 'fn ' | grep -vE '^\s*[0-9]+:\s*//' \
-    | grep -vE '\.\s*(decode_step|decode_step_group|verify_rows|verify_rows_group)\(' || true)
-  if [ -n "$hits" ]; then
-    echo "deprecated entry point called from non-test code in $f:"
-    echo "$hits"
-    deprecated_calls=1
-  fi
-done < <(find rust/src rust/benches examples -name '*.rs' ! -path 'rust/src/attention/api.rs')
-if [ "$deprecated_calls" -ne 0 ]; then
-  echo "verify.sh: FAIL — migrate these calls to attention::api (DESIGN.md §Public API)"
-  exit 1
-fi
-echo "api migration grep: clean"
-
-echo "== telemetry: library code logs through telemetry::log, not println!/eprintln! =="
-# ad-hoc prints bypass the leveled logger (and its test capture), so
-# non-test library code must not call println!/eprintln! directly.
-# Exempt: the CLI binary and the report/table printers (stdout is their
-# product), and telemetry::log itself (the logger's stderr sink).
-print_calls=0
-while IFS= read -r f; do
-  hits=$(awk '/#\[cfg\(test\)\]/{exit} {print}' "$f" \
-    | grep -nE '\b(println|eprintln)!' \
-    | grep -vE '^\s*[0-9]+:\s*//' || true)
-  if [ -n "$hits" ]; then
-    echo "direct print from library code in $f:"
-    echo "$hits"
-    print_calls=1
-  fi
-done < <(find rust/src -name '*.rs' \
-  ! -path 'rust/src/main.rs' \
-  ! -path 'rust/src/reports.rs' \
-  ! -path 'rust/src/util/table.rs' \
-  ! -path 'rust/src/telemetry/log.rs')
-if [ "$print_calls" -ne 0 ]; then
-  echo "verify.sh: FAIL — route these through telemetry::log (DESIGN.md §Telemetry)"
-  exit 1
-fi
-echo "telemetry print gate: clean"
+echo "== flashmask lint: project-native static analysis =="
+# Replaces the old api-migration awk gate and the telemetry print grep
+# with the in-tree lexer-driven checker (DESIGN.md §Static analysis):
+# hot-path panic-freedom, deprecated-shim ban, direct-print ban,
+# telemetry-names conformance and unsafe hygiene, all comment/string/
+# #[cfg(test)]-aware.  Exits nonzero on any non-suppressed diagnostic;
+# findings are suppressed only by a reasoned
+# `// lint: allow(pass[:rule]) — reason` pragma.
+cargo run --release --quiet -- lint rust/src rust/benches examples
+echo "flashmask lint: clean"
 
 echo "== decode oracle suite (sequential vs speculative vs prefill) =="
 cargo test -q --test decode_oracle
